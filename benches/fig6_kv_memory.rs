@@ -1,0 +1,35 @@
+//! Paper Figure 6 (App. C.2): KV-cache memory vs (batch, context) against
+//! GPU VRAM capacities; color channel = KV bytes / weight bytes.
+
+use quantspec::bench::{fmt_gb, Table};
+use quantspec::costmodel::{memory, Hardware, PaperModel};
+
+fn main() {
+    let m = PaperModel::llama2_7b();
+    println!("Figure 6 — Llama-2-7B KV cache memory (fp16)");
+    println!("weights: {}", fmt_gb(memory::weight_bytes_fp16(&m)));
+    for hw in [Hardware::rtx_4090(), Hardware::a6000(), Hardware::a100_80g()] {
+        println!("  {} VRAM: {}", hw.name, fmt_gb(hw.vram_bytes));
+    }
+
+    let mut t = Table::new(&["B", "S_L", "kv_mem", "kv/weights", "fits_8xA100?"]);
+    let node = 8.0 * Hardware::a100_80g().vram_bytes;
+    for bp in [0usize, 2, 4, 6] {
+        let b = 1 << bp;
+        for sp in [12usize, 14, 16, 18] {
+            let s = 1 << sp;
+            let kv = memory::kv_bytes_fp16(&m, b, s);
+            t.row(&[
+                b.to_string(),
+                s.to_string(),
+                fmt_gb(kv),
+                format!("{:.1}x", memory::kv_to_weight_ratio(&m, b, s)),
+                (kv + memory::weight_bytes_fp16(&m) < node).to_string(),
+            ]);
+        }
+    }
+    t.print("Figure 6 series");
+    t.write_csv("bench_results/fig6.csv").ok();
+    let anchor = memory::kv_to_weight_ratio(&m, 16, 262_144);
+    println!("\npaper anchor (B=16, S=262k): KV = {anchor:.0}x weights (paper: ~160x)");
+}

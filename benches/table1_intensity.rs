@@ -1,0 +1,61 @@
+//! Paper Table 1: asymptotic arithmetic intensity for linear / attention /
+//! aggregate ops under prefill and decode, evaluated numerically for
+//! Llama-2-7B so the asymptotic regimes are visible as measured trends.
+
+use quantspec::bench::Table;
+use quantspec::costmodel::{intensity as it, Hardware, PaperModel};
+
+fn main() {
+    let m = PaperModel::llama2_7b();
+    let hw = Hardware::a6000();
+    println!("Table 1 — arithmetic intensity (FLOPs/byte), Llama-2-7B shape");
+    println!("ridge point ({}) = {:.0} FLOPs/byte", hw.name, hw.ridge_point());
+
+    let mut t = Table::new(&[
+        "phase", "B", "S_L", "linear", "attention", "aggregate", "regime",
+    ]);
+    for &(b, s) in &[
+        (1usize, 256usize),
+        (1, 4096),
+        (1, 131_072),
+        (16, 256),
+        (16, 131_072),
+        (64, 4096),
+    ] {
+        let lin = it::prefill_linear(&m, b, s);
+        let attn = it::prefill_attention(&m, b, s);
+        let agg = it::prefill_aggregate(&m, b, s);
+        t.row(&[
+            "prefill".into(),
+            b.to_string(),
+            s.to_string(),
+            format!("{:.1}", lin.intensity()),
+            format!("{:.1}", attn.intensity()),
+            format!("{:.1}", agg.intensity()),
+            format!("{:?}", hw.classify(&agg)),
+        ]);
+        let lin = it::decode_linear(&m, b, 1);
+        let attn = it::decode_attention(&m, b, s, 1);
+        let agg = it::decode_aggregate(&m, b, s, 1);
+        t.row(&[
+            "decode".into(),
+            b.to_string(),
+            s.to_string(),
+            format!("{:.2}", lin.intensity()),
+            format!("{:.2}", attn.intensity()),
+            format!("{:.2}", agg.intensity()),
+            format!("{:?}", hw.classify(&agg)),
+        ]);
+    }
+    t.print("Table 1 (numeric evaluation of the asymptotic forms)");
+    t.write_csv("bench_results/table1.csv").ok();
+
+    // The asymptotic claims, checked numerically:
+    let d1 = it::decode_aggregate(&m, 1, 1 << 17, 1).intensity();
+    let d2 = it::decode_aggregate(&m, 1, 1 << 19, 1).intensity();
+    println!("\ndecode long-ctx intensity O(1): S 128k->512k changes {:.1}%",
+             100.0 * (d2 / d1 - 1.0).abs());
+    let p1 = it::prefill_aggregate(&m, 1, 1 << 13).intensity();
+    let p2 = it::prefill_aggregate(&m, 1, 1 << 15).intensity();
+    println!("prefill long-ctx intensity O(S): S 8k->32k grows {:.1}x", p2 / p1);
+}

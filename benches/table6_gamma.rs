@@ -1,0 +1,57 @@
+//! Paper Table 6 (App. G): speculation-length hyperparameter search.
+//! Expected shape: sparse baselines peak at γ=1 (acceptance decays fast);
+//! QuantSpec keeps its acceptance high and peaks at γ=4-6.
+
+use quantspec::bench::paper::{paper_context, quick, run_trial, Harness};
+use quantspec::bench::Table;
+use quantspec::config::{Method, QuantMode};
+use quantspec::costmodel::{latency, Hardware, PaperModel};
+use quantspec::workload::Profile;
+
+fn main() {
+    let h = Harness::load().expect("artifacts required: make artifacts");
+    let pm = PaperModel::llama2_7b();
+    let hw = Hardware::a6000();
+    // the paper searches at 8k context; our 8k-equivalent bucket is 256.
+    let bucket = if h.buckets().contains(&256) { 256 } else { h.buckets()[0] };
+    let gammas: &[usize] = if quick() { &[1, 4] } else { &[1, 2, 3, 4, 6] };
+    let max_new = if quick() { 32 } else { 64 };
+
+    let mut t = Table::new(&[
+        "method", "gamma", "accept_%", "cpu_tok/s", "A6000_xAR",
+    ]);
+    let mut best: Vec<(String, usize, f64)> = Vec::new();
+    for method in Method::speculative() {
+        let mut best_g = (0usize, 0.0f64);
+        for &g in gammas {
+            let tr = run_trial(&h, method, QuantMode::Both, bucket,
+                               Profile::Pg19, 5, g, max_new)
+                .expect("trial");
+            let proj = latency::projected_speedup(
+                &pm, &hw, method, QuantMode::Both, 1, bucket * 32, g,
+                tr.acceptance,
+            );
+            if proj > best_g.1 {
+                best_g = (g, proj);
+            }
+            t.row(&[
+                method.name().into(),
+                g.to_string(),
+                format!("{:.2}", tr.acceptance * 100.0),
+                format!("{:.2}", tr.decode_tps),
+                format!("{proj:.2}"),
+            ]);
+        }
+        best.push((method.name().into(), best_g.0, best_g.1));
+    }
+    t.print(&format!(
+        "Table 6 — gamma search at the {} -equivalent bucket ({bucket})",
+        paper_context(bucket)
+    ));
+    t.write_csv("bench_results/table6.csv").ok();
+    println!("\noptimal gamma per method (by projected A6000 speedup):");
+    for (m, g, sp) in &best {
+        println!("  {m}: gamma={g} ({sp:.2}x)");
+    }
+    println!("expected shape: sparse methods peak at small gamma, QuantSpec at 4-6.");
+}

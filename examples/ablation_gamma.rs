@@ -1,0 +1,37 @@
+//! Walkthrough of the gamma / acceptance trade-off (paper Table 6 logic)
+//! on the mock backend — runs in milliseconds, no artifacts needed, and
+//! shows how expected-tokens-per-cycle interacts with draft quality.
+//!
+//!     cargo run --release --example ablation_gamma
+
+use quantspec::config::Method;
+use quantspec::costmodel::latency::expected_tokens_per_cycle;
+use quantspec::model::MockDecoder;
+use quantspec::spec::{Sampler, SpecEngine};
+
+fn main() -> anyhow::Result<()> {
+    println!("gamma ablation on the mock backend (draft error = acceptance knob)\n");
+    println!("{:<10} {:>6} {:>10} {:>14} {:>16}", "draft_err", "gamma",
+             "accept_%", "tok/cycle", "E[tok/cycle] fml");
+    for draft_err in [0.05, 0.2, 0.5] {
+        for gamma in [1usize, 2, 4, 7] {
+            let mut dec = MockDecoder::new(64, 7, draft_err);
+            dec.force_method(Method::QuantSpec);
+            let mut eng = SpecEngine::new(gamma, Sampler::new(0.0, 1));
+            let out = eng.generate(&mut dec, &[1, 2, 3, 4], 300)?;
+            let measured = out.tokens.len() as f64 / out.cycles as f64;
+            let formula = expected_tokens_per_cycle(out.acceptance_rate(), gamma);
+            println!(
+                "{:<10.2} {:>6} {:>10.1} {:>14.2} {:>16.2}",
+                draft_err, gamma,
+                out.acceptance_rate() * 100.0,
+                measured, formula,
+            );
+        }
+        println!();
+    }
+    println!("reading: higher gamma only pays when acceptance stays high —");
+    println!("the paper's Table 6 finding that sparse drafts (low acceptance at");
+    println!("large gamma) peak at gamma=1 while QuantSpec peaks at 4-6.");
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Quickstart: load the artifacts, run one QuantSpec generation, print the
+//! text and the speculation statistics.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use std::sync::Arc;
+
+use quantspec::config::{Method, QuantMode};
+use quantspec::model::xla_session::XlaSession;
+use quantspec::model::Decoder;
+use quantspec::runtime::{Runtime, WeightSet, Weights};
+use quantspec::spec::{Sampler, SpecEngine};
+use quantspec::workload::{self, Profile};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Load the AOT artifacts (HLO text -> PJRT executables, compiled
+    //    lazily) and the two weight sets the paper's method needs: the
+    //    full-precision target weights and the INT4 draft weights.
+    let rt = Runtime::load("artifacts")?;
+    let w_fp = Arc::new(Weights::load(&rt, WeightSet::Fp)?);
+    let w_q4 = Arc::new(Weights::load(&rt, WeightSet::Q4)?);
+
+    // 2. Make a long-context prompt (synthetic book, PG-19 stand-in).
+    let bucket = 512;
+    let prompt = workload::prompt(7, bucket, Profile::Pg19);
+
+    // 3. One QuantSpec session: hierarchical INT4|INT4 KV cache, INT4
+    //    draft weights, double FP buffer.
+    let mut session = XlaSession::new(
+        Arc::clone(&rt),
+        Method::QuantSpec,
+        QuantMode::Both,
+        bucket,
+        w_fp,
+        w_q4,
+    )?;
+
+    // 4. Speculative decode: draft gamma=4 tokens on the INT4 path, verify
+    //    them in one INT8 pass (greedy, so speculation is lossless).
+    let mut engine = SpecEngine::new(4, Sampler::new(0.0, 0));
+    let out = engine.generate(&mut session, &prompt, 64)?;
+
+    let text: String = out
+        .tokens
+        .iter()
+        .map(|&t| char::from(t.clamp(0, 255) as u8))
+        .map(|c| if c.is_ascii_graphic() || c == ' ' || c == '\n' { c } else { '?' })
+        .collect();
+    println!("generated: {text:?}");
+    println!("acceptance rate : {:.1}%", out.acceptance_rate() * 100.0);
+    println!("cycles          : {} (gamma=4)", out.cycles);
+    println!("decode          : {:.2} tok/s", out.decode_tokens_per_sec());
+    let mem = session.memory();
+    println!(
+        "cache memory    : {:.1} MB logical ({:.1} MB host-resident)",
+        mem.cache_logical as f64 / 1e6,
+        mem.cache_host as f64 / 1e6
+    );
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! End-to-end serving driver (the repo's E2E validation; EXPERIMENTS.md §E2E).
+//!
+//! Starts the full coordinator (HTTP server + router + engines) over the
+//! real artifacts, fires a batch of long-context requests through the HTTP
+//! API with Poisson arrivals, and reports latency percentiles + throughput
+//! + acceptance — the serving-paper validation loop.
+//!
+//!     cargo run --release --example serve_longcontext [-- --requests N]
+
+use std::sync::Arc;
+
+use quantspec::config::ServeConfig;
+use quantspec::coordinator::{server, Coordinator};
+use quantspec::util::argparse::Args;
+use quantspec::util::httpd::http_request;
+use quantspec::util::json::Json;
+use quantspec::workload::{self, Profile};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let n_requests = args.get_usize("requests", 8);
+    let bucket = args.get_usize("bucket", 512);
+    let max_new = args.get_usize("max-new-tokens", 48);
+    let rate = args.get_f64("rate", 0.5); // req/s open-loop
+
+    let cfg = ServeConfig {
+        engines: 1, // single-core testbed
+        max_new_tokens: max_new,
+        ..ServeConfig::default()
+    };
+    let rt = quantspec::runtime::Runtime::load(&cfg.artifacts_dir)?;
+    eprintln!("compiling bucket {bucket} artifacts...");
+    rt.warmup(&[bucket])?;
+    let coord = Arc::new(Coordinator::with_runtime(cfg, rt)?);
+    let srv = server::serve(Arc::clone(&coord), "127.0.0.1:0")?;
+    let addr = srv.addr.to_string();
+    println!("coordinator on http://{addr}; firing {n_requests} requests");
+
+    let arrivals = workload::poisson_arrivals(9, n_requests, rate);
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for (i, &at) in arrivals.iter().enumerate() {
+        let addr = addr.clone();
+        let profile = [Profile::Pg19, Profile::LexSum, Profile::InfBench][i % 3];
+        // prompts a bit under the bucket exercise the router's padding
+        let len = bucket - (i % 64);
+        handles.push(std::thread::spawn(move || {
+            let wait = at - t0.elapsed().as_secs_f64();
+            if wait > 0.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(wait));
+            }
+            let prompt_toks = workload::prompt(100 + i as u64, len, profile);
+            let body = Json::obj(vec![
+                ("tokens", Json::arr(prompt_toks.iter().map(|&t| Json::num(t as f64)))),
+                ("max_new_tokens", Json::num(max_new as f64)),
+            ])
+            .to_string();
+            let t = std::time::Instant::now();
+            let (status, resp) =
+                http_request(&addr, "POST", "/generate", body.as_bytes()).unwrap();
+            (status, resp, t.elapsed().as_secs_f64())
+        }));
+    }
+
+    let mut e2e = Vec::new();
+    let mut accepts = Vec::new();
+    let mut tokens = 0usize;
+    for h in handles {
+        let (status, resp, secs) = h.join().unwrap();
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&resp));
+        let j = Json::parse(std::str::from_utf8(&resp)?).unwrap();
+        tokens += j.get("tokens").unwrap().as_arr().unwrap().len();
+        accepts.push(j.get("acceptance_rate").unwrap().as_f64().unwrap());
+        e2e.push(secs);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    e2e.sort_by(f64::total_cmp);
+    let pct = |q: f64| e2e[((e2e.len() as f64 * q) as usize).min(e2e.len() - 1)];
+    println!("\n== serve_longcontext results ==");
+    println!("requests        : {n_requests} (bucket {bucket}, {max_new} new tokens each)");
+    println!("wall time       : {wall:.1}s");
+    println!("throughput      : {:.2} tokens/s aggregate", tokens as f64 / wall);
+    println!("e2e latency     : p50 {:.2}s  p95 {:.2}s  max {:.2}s",
+             pct(0.50), pct(0.95), e2e.last().unwrap());
+    println!("acceptance      : mean {:.1}%",
+             100.0 * accepts.iter().sum::<f64>() / accepts.len() as f64);
+    println!("\ncoordinator stats: {}", coord.metrics.snapshot());
+    Ok(())
+}

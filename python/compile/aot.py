@@ -1,0 +1,347 @@
+"""AOT lowering: JAX entry points -> HLO text artifacts + manifest.
+
+This is the only place Python touches the model after pretraining. Each entry
+point from model.py is jitted, lowered to StableHLO, converted to an
+XlaComputation, and dumped as HLO **text** — the interchange format the Rust
+runtime can parse (`HloModuleProto::from_text_file`). Serialized protos are
+NOT used: jax >= 0.5 emits 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+Outputs (under artifacts/):
+  *.hlo.txt           one per entry point x context bucket
+  manifest.json       model config, bucket list, per-entry input/output
+                      specs (name, dtype, shape) in argument order, and the
+                      weight-blob index
+  weights/fp/*.bin    trained FP weights, raw little-endian f32
+  weights/q4/*.bin    INT4-sim draft weights (group-wise quant-dequant),
+                      stored f32, logical width 4 bit (memory accounting in
+                      Rust uses the logical width)
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--buckets 256,512,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+BUCKETS_DEFAULT = (256, 512, 1024, 2048)
+SCORE_BUCKET = 1024
+WQ_GROUP = 64  # weight-quant group size along the input dimension
+
+
+# --------------------------------------------------------------------------
+# Weight quantization (draft weight set)
+# --------------------------------------------------------------------------
+
+
+def quant_dequant_weight(w: np.ndarray, bits: int = 4, group: int = WQ_GROUP):
+    """Group-wise asymmetric INT-N quant-dequant along the input dim.
+
+    Matrices are [in, out]; groups are `group` consecutive input rows per
+    output column (AWQ-style). 1-D tensors (norms) pass through untouched.
+    """
+    if w.ndim != 2 or w.shape[0] % group != 0:
+        return w.copy()
+    qmax = float(2 ** bits - 1)
+    ng = w.shape[0] // group
+    g = w.reshape(ng, group, w.shape[1])
+    mn = g.min(axis=1, keepdims=True)
+    mx = g.max(axis=1, keepdims=True)
+    scale = np.maximum((mx - mn) / qmax, 1e-8)
+    q = np.clip(np.round((g - mn) / scale), 0, qmax)
+    return (q * scale + mn).reshape(w.shape).astype(np.float32)
+
+
+# --------------------------------------------------------------------------
+# Lowering helpers
+# --------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+_DT = {jnp.float32.dtype: "f32", jnp.int8.dtype: "i8", jnp.int32.dtype: "i32"}
+
+
+def _iospec(name, s):
+    return {"name": name, "dtype": _DT[s.dtype], "shape": list(s.shape)}
+
+
+class EntryBuilder:
+    """Collects (name, fn, input specs, output names) and lowers them."""
+
+    def __init__(self, cfg: model.ModelConfig, out_dir: str):
+        self.cfg = cfg
+        self.out_dir = out_dir
+        self.entries = {}
+
+    def weight_specs(self):
+        shapes = model.param_shapes(self.cfg)
+        return [(n, _spec(shapes[n])) for n in model.param_names(self.cfg)]
+
+    def add(self, name, fn, inputs, output_names):
+        """inputs: list of (name, ShapeDtypeStruct); weights appended last."""
+        wspecs = self.weight_specs()
+        all_inputs = inputs + [(f"w:{n}", s) for n, s in wspecs]
+
+        def wrapped(*args):
+            n_dyn = len(inputs)
+            dyn, wflat = args[:n_dyn], args[n_dyn:]
+            w = model.unflatten_params(self.cfg, list(wflat))
+            return fn(w, *dyn)
+
+        t0 = time.time()
+        lowered = jax.jit(wrapped).lower(*[s for _, s in all_inputs])
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        out_shapes = jax.eval_shape(wrapped, *[s for _, s in all_inputs])
+        if not isinstance(out_shapes, (tuple, list)):
+            out_shapes = (out_shapes,)
+        self.entries[name] = {
+            "file": fname,
+            "inputs": [_iospec(n, s) for n, s in all_inputs],
+            "outputs": [
+                _iospec(o_name, o_s)
+                for o_name, o_s in zip(output_names, out_shapes)
+            ],
+        }
+        print(f"  {name}: {len(text) / 1e6:.2f} MB HLO "
+              f"({time.time() - t0:.1f}s)", flush=True)
+
+    def add_stateless(self, name, fn, inputs, output_names):
+        """Entry with no weight inputs (cache-manipulation only)."""
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*[s for _, s in inputs])
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        out_shapes = jax.eval_shape(fn, *[s for _, s in inputs])
+        if not isinstance(out_shapes, (tuple, list)):
+            out_shapes = (out_shapes,)
+        self.entries[name] = {
+            "file": fname,
+            "inputs": [_iospec(n, s) for n, s in inputs],
+            "outputs": [
+                _iospec(o_name, o_s)
+                for o_name, o_s in zip(output_names, out_shapes)
+            ],
+        }
+        print(f"  {name}: {len(text) / 1e6:.2f} MB HLO "
+              f"({time.time() - t0:.1f}s)", flush=True)
+
+
+def quant_cache_specs(cfg, s):
+    """Input specs for the hierarchical cache arrays of bucket s."""
+    L, H, dh, g = cfg.n_layers, cfg.n_heads, cfg.head_dim, cfg.g
+    sq, nb = cfg.caps(s)
+    return [
+        ("ku", _spec((L, H, sq, dh), jnp.int8)),
+        ("kl", _spec((L, H, sq, dh), jnp.int8)),
+        ("ks", _spec((L, H, nb, dh))),
+        ("kz", _spec((L, H, nb, dh))),
+        ("vu", _spec((L, H, sq, dh), jnp.int8)),
+        ("vl", _spec((L, H, sq, dh), jnp.int8)),
+        ("vs", _spec((L, H, nb, g))),
+        ("vz", _spec((L, H, nb, g))),
+    ]
+
+
+def build_entries(cfg: model.ModelConfig, out_dir: str, buckets):
+    b = EntryBuilder(cfg, out_dir)
+    L, H, dh, g, fb, tmax = (cfg.n_layers, cfg.n_heads, cfg.head_dim, cfg.g,
+                             cfg.fb, cfg.tmax)
+    i32 = jnp.int32
+    fbuf = [("fk", _spec((L, H, fb, dh))), ("fv", _spec((L, H, fb, dh)))]
+    scalars = [("pos", _spec((), i32)), ("n_q", _spec((), i32)),
+               ("n_f", _spec((), i32))]
+
+    for s in buckets:
+        sq, nb = cfg.caps(s)
+        qc = quant_cache_specs(cfg, s)
+        dense = [("kr", _spec((L, H, sq, dh))), ("vr", _spec((L, H, sq, dh)))]
+        sb = max(s // 4, 2 * g)  # sparse draft budget = context/4 (paper §5.1)
+        sparse = [("kr", _spec((L, H, sb, dh))), ("vr", _spec((L, H, sb, dh)))]
+
+        # ---- prefill ----
+        b.add(
+            f"prefill_{s}",
+            lambda w, toks, s=s: model.prefill(cfg, w, toks, s),
+            [("toks", _spec((s,), i32))],
+            ["logits", "ku", "kl", "ks", "kz", "vu", "vl", "vs", "vz",
+             "fk", "fv", "kfull", "vfull", "snap"],
+        )
+
+        # ---- QuantSpec draft (INT4 upper nibble) ----
+        def draft_fn(w, toks, pos, n_q, n_f, *arrs):
+            region, bufs = arrs[:8], arrs[8:]
+            return model.decode_core(cfg, w, toks, pos, n_q, n_f, region,
+                                     *bufs, region_kind="quant", mode="draft")
+        b.add(f"draft_{s}", draft_fn,
+              [("toks", _spec((1,), i32))] + scalars + qc + fbuf,
+              ["logits", "fk", "fv"])
+
+        # ---- QuantSpec verify (INT8 both nibbles, TMAX slots) ----
+        def verify_fn(w, toks, pos, n_q, n_f, *arrs):
+            region, bufs = arrs[:8], arrs[8:]
+            return model.decode_core(cfg, w, toks, pos, n_q, n_f, region,
+                                     *bufs, region_kind="quant",
+                                     mode="target")
+        b.add(f"verify_{s}", verify_fn,
+              [("toks", _spec((tmax,), i32))] + scalars + qc + fbuf,
+              ["logits", "fk", "fv"])
+
+        # ---- dense-region steps (AR baseline + sparse-baseline target) ----
+        def ar_fn(w, toks, pos, n_q, n_f, kr, vr, fk, fv):
+            return model.decode_core(cfg, w, toks, pos, n_q, n_f, (kr, vr),
+                                     fk, fv, region_kind="dense", mode="fp")
+        b.add(f"ar_step_{s}", ar_fn,
+              [("toks", _spec((1,), i32))] + scalars + dense + fbuf,
+              ["logits", "fk", "fv"])
+        b.add(f"ar_verify_{s}", ar_fn,
+              [("toks", _spec((tmax,), i32))] + scalars + dense + fbuf,
+              ["logits", "fk", "fv"])
+
+        # ---- sparse draft (StreamingLLM / SnapKV budget region) ----
+        b.add(f"sparse_draft_{s}", ar_fn,
+              [("toks", _spec((1,), i32))] + scalars + sparse + fbuf,
+              ["logits", "fk", "fv"])
+
+        # ---- flushes (no weights) ----
+        b.add_stateless(
+            f"flush_{s}",
+            lambda *a: model.flush(cfg, *a),
+            qc + fbuf + [("n_q", _spec((), i32))],
+            ["ku", "kl", "ks", "kz", "vu", "vl", "vs", "vz", "fk", "fv"],
+        )
+        b.add_stateless(
+            f"ar_flush_{s}",
+            lambda kr, vr, fk, fv, n_q: model.ar_flush(cfg, kr, vr, fk, fv, n_q),
+            dense + fbuf + [("n_q", _spec((), i32))],
+            ["kr", "vr", "fk", "fv"],
+        )
+        b.add_stateless(
+            f"sparse_flush_{s}",
+            lambda kr, vr, fk, fv, n_s, p: model.sparse_flush(
+                cfg, kr, vr, fk, fv, n_s, p),
+            sparse + fbuf + [("n_s", _spec((), i32)), ("p", _spec((), i32))],
+            ["kr", "vr", "fk", "fv"],
+        )
+
+    # ---- perplexity scoring entries (Tables 2 and 5) ----
+    s = SCORE_BUCKET
+    variants = {
+        "score_fp": dict(kv_mode="fp"),
+        "score_int8": dict(kv_mode="int8"),  # QuantSpec target cache
+        "score_int4_kc_vt": dict(kv_mode="int4", k_axis="channel",
+                                 v_axis="token"),  # QuantSpec draft cache
+        "score_int4_kt_vt": dict(kv_mode="int4", k_axis="token",
+                                 v_axis="token"),
+        "score_int4_kc_vc": dict(kv_mode="int4", k_axis="channel",
+                                 v_axis="channel"),
+        "score_int4_kt_vc": dict(kv_mode="int4", k_axis="token",
+                                 v_axis="channel"),
+    }
+    for name, kw in variants.items():
+        b.add(
+            f"{name}_{s}",
+            lambda w, toks, kw=kw: model.score(cfg, w, toks, s, **kw),
+            [("toks", _spec((s,), i32))],
+            ["ll"],
+        )
+    return b.entries
+
+
+# --------------------------------------------------------------------------
+# Main
+# --------------------------------------------------------------------------
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--params", default=None,
+                    help="params.npz (default <out-dir>/params.npz)")
+    ap.add_argument("--buckets",
+                    default=",".join(str(x) for x in BUCKETS_DEFAULT))
+    args = ap.parse_args()
+
+    cfg = model.ModelConfig()
+    out_dir = args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+    buckets = [int(x) for x in args.buckets.split(",") if x]
+
+    # ---- weights ----
+    params_path = args.params or os.path.join(out_dir, "params.npz")
+    if os.path.exists(params_path):
+        raw = np.load(params_path)
+        params = {k: raw[k] for k in raw.files}
+        print(f"loaded trained params from {params_path}")
+    else:
+        print("WARNING: no trained params found, exporting random init "
+              "(run `python -m compile.pretrain` first)")
+        params = {k: np.asarray(v) for k, v in
+                  model.init_params(jax.random.PRNGKey(0), cfg).items()}
+
+    windex = {"fp": {}, "q4": {}}
+    for setname, xform in (("fp", lambda x: x),
+                           ("q4", quant_dequant_weight)):
+        wdir = os.path.join(out_dir, "weights", setname)
+        os.makedirs(wdir, exist_ok=True)
+        for name in model.param_names(cfg):
+            arr = xform(np.asarray(params[name], dtype=np.float32))
+            fn = name.replace(".", "_") + ".bin"
+            arr.tofile(os.path.join(wdir, fn))
+            windex[setname][name] = {
+                "file": f"weights/{setname}/{fn}",
+                "shape": list(arr.shape),
+                "dtype": "f32",
+                "logical_bits": 32 if setname == "fp" else 4,
+            }
+    print("weights exported (fp + q4 sets)")
+
+    # ---- entries ----
+    entries = build_entries(cfg, out_dir, buckets)
+
+    manifest = {
+        "model": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads, "head_dim": cfg.head_dim,
+            "n_layers": cfg.n_layers, "d_ff": cfg.d_ff,
+            "g": cfg.g, "tmax": cfg.tmax, "fb": cfg.fb,
+            "rope_theta": cfg.rope_theta,
+        },
+        "buckets": buckets,
+        "score_bucket": SCORE_BUCKET,
+        "param_order": model.param_names(cfg),
+        "weights": windex,
+        "entries": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(entries)} entries, buckets {buckets}")
+
+
+if __name__ == "__main__":
+    main()

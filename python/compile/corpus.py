@@ -1,0 +1,125 @@
+"""Synthetic long-context corpus generator.
+
+Stands in for the paper's datasets (PG-19 / ∞Bench Sum / Multi-LexSum /
+WikiText-2 / C4), which are not available offline. The generator produces
+byte-level "books" with the structural property those datasets contribute to
+the paper's evaluation: **long-range dependence** — a per-document cast of
+entities (names, places, code words) is drawn once and reused throughout, so
+a model (or a draft cache) that loses early context measurably degrades.
+
+Three profiles mirror the paper's dataset roles (Appendix F):
+  * ``pg19``     — book-like continuous prose (language modeling).
+  * ``lexsum``   — multi-document legal-ish filings with heavy entity reuse
+                   and a trailing summary section (Multi-LexSum-like).
+  * ``infbench`` — a long narrative whose named entities are systematically
+                   substituted (∞Bench-Sum-like core-entity substitution).
+
+The Rust workload generator (`rust/src/workload/textgen.rs`) implements the
+same scheme so serving benchmarks draw from the same distribution the model
+was pretrained on.
+"""
+
+from __future__ import annotations
+
+
+class Pcg32:
+    """PCG-XSH-RR 32, mirrored bit-for-bit in rust/src/util/rng.rs so the
+    Python pretraining corpus and Rust serving workloads share streams."""
+
+    MULT = 6364136223846793005
+    INC = 1442695040888963407
+    MASK = (1 << 64) - 1
+
+    def __init__(self, seed: int):
+        self.state = 0
+        self.next_u32()
+        self.state = (self.state + (seed & self.MASK)) & self.MASK
+        self.next_u32()
+
+    def next_u32(self) -> int:
+        old = self.state
+        self.state = (old * self.MULT + self.INC) & self.MASK
+        xorshifted = ((old >> 18) ^ old) >> 27 & 0xFFFFFFFF
+        rot = old >> 59
+        return ((xorshifted >> rot) | (xorshifted << ((-rot) & 31))) & 0xFFFFFFFF
+
+    def below(self, n: int) -> int:
+        return self.next_u32() % n
+
+    def choice(self, xs):
+        return xs[self.below(len(xs))]
+
+
+_FIRST = ["Aldren", "Bryn", "Cormac", "Delia", "Edmund", "Farrah", "Gideon",
+          "Halia", "Ines", "Jorah", "Kestrel", "Lysandra", "Merek", "Nadia",
+          "Orin", "Petra"]
+_LAST = ["Ashford", "Blackwood", "Carver", "Dunmore", "Eastgate", "Fenwick",
+         "Greystone", "Hollis", "Ironwood", "Kearney", "Larkspur", "Mercer"]
+_PLACE = ["Avonlea", "Briarhollow", "Caldera", "Dunhaven", "Eastmarch",
+          "Fallowfield", "Gildenport", "Harrowgate"]
+_VERB = ["argued", "claimed", "discovered", "reported", "testified",
+         "recalled", "insisted", "admitted", "wrote", "observed"]
+_OBJ = ["the ledger", "the treaty", "the northern road", "the old archive",
+        "the court record", "the shipment", "the boundary stone",
+        "the witness statement"]
+_CONN = ["Meanwhile", "Later that year", "According to the record",
+         "In the third chapter", "As the council noted", "Despite this",
+         "By the following spring", "In a separate filing"]
+
+
+def _cast(rng: Pcg32, n: int):
+    return [f"{rng.choice(_FIRST)} {rng.choice(_LAST)}" for _ in range(n)]
+
+
+def _sentence(rng: Pcg32, cast, places) -> str:
+    s = rng.below(4)
+    a, b = rng.choice(cast), rng.choice(cast)
+    pl, vb, ob = rng.choice(places), rng.choice(_VERB), rng.choice(_OBJ)
+    if s == 0:
+        return f"{a} {vb} that {ob} in {pl} belonged to {b}."
+    if s == 1:
+        return f"{rng.choice(_CONN)}, {a} {vb} about {ob} near {pl}."
+    if s == 2:
+        return f"The case of {a} versus {b} concerned {ob} at {pl}."
+    return f"{a} met {b} in {pl} and {vb} over {ob}."
+
+
+def generate_doc(seed: int, length: int, profile: str = "pg19") -> bytes:
+    """Generate one document of at least `length` bytes (then truncated)."""
+    rng = Pcg32(seed)
+    cast = _cast(rng, 6 if profile == "pg19" else 10)
+    places = [rng.choice(_PLACE) for _ in range(4)]
+    parts = []
+    if profile == "lexsum":
+        parts.append(f"FILING {seed % 9973}: {cast[0]} v. {cast[1]}.\n")
+    elif profile == "infbench":
+        parts.append(f"The Chronicle of {places[0]}. Book {1 + seed % 12}.\n")
+    else:
+        parts.append(f"{places[0]}: A History. Chapter {1 + seed % 20}.\n")
+    size = len(parts[0])
+    while size < length:
+        para = " ".join(_sentence(rng, cast, places)
+                        for _ in range(3 + rng.below(4)))
+        if profile == "lexsum" and rng.below(6) == 0:
+            para = f"EXHIBIT {chr(65 + rng.below(26))}. " + para
+        para += "\n"
+        parts.append(para)
+        size += len(para)
+    doc = "".join(parts)[:length]
+    if profile in ("lexsum", "infbench"):
+        tail = f"\nSUMMARY: the dispute between {cast[0]} and {cast[1]} over "\
+               f"{rng.choice(_OBJ)} in {places[0]}"
+        doc = doc[: length - len(tail)] + tail
+    return doc.encode("ascii", errors="replace")
+
+
+def generate_corpus(seed: int, total_bytes: int, profile: str = "pg19") -> bytes:
+    """Concatenate documents to `total_bytes`."""
+    rng = Pcg32(seed ^ 0x5EED)
+    out = bytearray()
+    i = 0
+    while len(out) < total_bytes:
+        out += generate_doc(seed * 1000 + i, 4096 + rng.below(8192), profile)
+        out += b"\n\n"
+        i += 1
+    return bytes(out[:total_bytes])

@@ -1,0 +1,87 @@
+"""Pallas kernel: hierarchical INT4|INT4 quantization of one KV token-block.
+
+This is the quantizer half of the paper's kernel contribution (§4.2): given a
+block of G tokens of the FP key/value cache, emit the upper-nibble INT4 code,
+the lower-nibble INT4 code (the quantized residual), and the shared INT8
+scale/zero per group. It runs at prefill (bulk, over every block) and at the
+every-G-steps full-precision buffer flush (paper Alg. 1 line 23).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): grid over heads; each grid step
+pulls one [G, dh] tile HBM→VMEM, reduces min/max on the VPU along the group
+axis, and writes two int8 tiles + two f32 scale vectors back. The tile is
+G*dh*4B ≈ 16 KiB for the tiny preset — trivially VMEM-resident, so the kernel
+is bandwidth-bound and fuses into the surrounding prefill HLO.
+
+Lowered with interpret=True: CPU PJRT cannot execute Mosaic custom-calls, so
+interpret mode (which lowers to plain HLO) is the correctness path; real-TPU
+performance is estimated analytically in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-6
+
+
+def _quant_kernel(x_ref, u_ref, l_ref, s_ref, z_ref, *, axis):
+    """Quantize one [G, dh] head tile.
+
+    axis=0 → channel-wise groups (keys): stats over the G tokens per channel.
+    axis=1 → token-wise groups (values): stats over the dh channels per token.
+    """
+    x = x_ref[0, :, :]  # [G, dh]
+    mn = jnp.min(x, axis=axis)
+    mx = jnp.max(x, axis=axis)
+    s8 = jnp.maximum((mx - mn) / 255.0, EPS)
+    z = mn
+    if axis == 0:
+        s8b, zb = s8[None, :], z[None, :]
+    else:
+        s8b, zb = s8[:, None], z[:, None]
+    s4 = 16.0 * s8b
+    u = jnp.clip(jnp.round((x - zb) / s4), 0.0, 15.0)
+    err = x - (u * s4 + zb)
+    low = jnp.clip(jnp.round(err / s8b), -8.0, 7.0)
+    u_ref[0, :, :] = u.astype(jnp.int8)
+    l_ref[0, :, :] = low.astype(jnp.int8)
+    s_ref[0, :] = s8
+    z_ref[0, :] = z
+
+
+def _hier_quant_block(x, *, axis):
+    """pallas_call wrapper: x f32[H, G, dh] → (u, l, s8, z)."""
+    H, G, dh = x.shape
+    stat = dh if axis == 0 else G
+    return pl.pallas_call(
+        functools.partial(_quant_kernel, axis=axis),
+        grid=(H,),
+        in_specs=[pl.BlockSpec((1, G, dh), lambda h: (h, 0, 0))],
+        out_specs=[
+            pl.BlockSpec((1, G, dh), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, G, dh), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, stat), lambda h: (h, 0)),
+            pl.BlockSpec((1, stat), lambda h: (h, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((H, G, dh), jnp.int8),
+            jax.ShapeDtypeStruct((H, G, dh), jnp.int8),
+            jax.ShapeDtypeStruct((H, stat), jnp.float32),
+            jax.ShapeDtypeStruct((H, stat), jnp.float32),
+        ],
+        interpret=True,
+    )(x)
+
+
+def hier_quant_block_k(k):
+    """Key block quantizer: f32[H,G,dh] → (u, l, s8 f32[H,dh], z f32[H,dh])."""
+    return tuple(_hier_quant_block(k, axis=0))
+
+
+def hier_quant_block_v(v):
+    """Value block quantizer: f32[H,G,dh] → (u, l, s8 f32[H,G], z f32[H,G])."""
+    return tuple(_hier_quant_block(v, axis=1))

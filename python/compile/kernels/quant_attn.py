@@ -1,0 +1,153 @@
+"""Pallas kernel: flash-decoding attention over the hierarchical quantized KV.
+
+The paper's kernel contribution (§5.2.1, Appendix E): attention where the
+key/value cache is stored as upper/lower INT4 nibbles and dequantized
+in-kernel, so the draft pass touches half the bytes of the target pass and a
+quarter of an FP16 cache.
+
+Structure (flash-decoding / split-KV):
+  grid = (H, NB/CHUNK) over heads × tiles of CHUNK quantization blocks.
+  Each grid step dequantizes a [CHUNK*G, dh] K/V tile per `mode`
+      draft  : k = u * (16*S8) + Z           (upper nibble only — INT4)
+      target : k = (16*u + l) * S8 + Z       (both nibbles — INT8)
+  computes the tile's scores against the [T, dh] query tile, masks tokens
+  >= n_q in-kernel (the region fill is dynamic; blocks are appended by the
+  every-G-steps buffer flush), and emits the *partial* flash statistics
+  (m = tile max, l = tile sum-of-exp, o = unnormalized p@v). The host-side
+  `merge_chunks` (ref.py) LSE-combines the partials with the full-precision
+  buffer chunk — exactly the paper's Appendix-E FlashDecoding integration
+  where the FP buffer is "an additional chunk".
+
+CHUNK (default 4) is the §Perf block-shape knob: one grid step per
+quantization group made the interpret-lowered while-loop the CPU
+bottleneck (9.3 ms/draft-step at bucket 512); 4 groups per step amortizes
+the loop and feeds larger GEMMs. On TPU the same knob sizes the HBM→VMEM
+DMA per grid step (4 blocks × G×dh × int4 ≈ 8 KiB — well under VMEM while
+long enough to hide DMA latency behind the MXU).
+
+Lowered with interpret=True: CPU PJRT cannot run Mosaic custom-calls;
+real-TPU performance is estimated analytically in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_tile_kernel(
+    nq_ref, q_ref, ku_ref, kl_ref, ks_ref, kz_ref, vu_ref, vl_ref, vs_ref,
+    vz_ref, o_ref, m_ref, l_ref, *, mode, scale, g, chunk,
+):
+    """One tile-of-CHUNK-blocks grid step, all heads batched (§Perf iter 2:
+    folding H into the tile quarters the interpret-loop trip count)."""
+    c = pl.program_id(0)
+    cg = chunk * g
+    q = q_ref[:, :, :]  # [H, T, dh]
+    H, _, dh = q.shape
+    ku = ku_ref[:, :, :].astype(jnp.float32).reshape(H, chunk, g, dh)
+    ks = ks_ref[:, :, :]  # [H, chunk, dh] per-channel INT8 scale
+    kz = kz_ref[:, :, :]
+    vu = vu_ref[:, :, :].astype(jnp.float32).reshape(H, chunk, g, dh)
+    vs = vs_ref[:, :, :]  # [H, chunk, g] per-token INT8 scale
+    vz = vz_ref[:, :, :]
+    if mode == "draft":
+        k = ku * (16.0 * ks)[:, :, None, :] + kz[:, :, None, :]
+        v = vu * (16.0 * vs)[:, :, :, None] + vz[:, :, :, None]
+    else:
+        kl = kl_ref[:, :, :].astype(jnp.float32).reshape(H, chunk, g, dh)
+        vl = vl_ref[:, :, :].astype(jnp.float32).reshape(H, chunk, g, dh)
+        k = (16.0 * ku + kl) * ks[:, :, None, :] + kz[:, :, None, :]
+        v = (16.0 * vu + vl) * vs[:, :, :, None] + vz[:, :, :, None]
+    k = k.reshape(H, cg, dh)
+    v = v.reshape(H, cg, dh)
+    s = jnp.einsum("htd,hsd->hts", q, k) * scale  # [H, T, cg]
+    # dynamic region fill: tokens at absolute index >= n_q are invalid
+    limit = nq_ref[0] - c * cg
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, 1, cg), 2)
+    valid = idx < limit
+    s = jnp.where(valid, s, -jnp.inf)
+    m = jnp.max(s, axis=2)  # [H, T]
+    msafe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.where(valid, jnp.exp(s - msafe[:, :, None]), 0.0)
+    l = jnp.sum(p, axis=2)
+    o = jnp.einsum("hts,hsd->htd", p, v)  # [H, T, dh]
+    o_ref[:, 0, :, :] = o
+    m_ref[:, 0, :] = msafe
+    l_ref[:, 0, :] = l
+
+
+def quant_attn_partials(q, ku, kl, ks, kz, vu, vl, vs, vz, n_q, *, g, mode,
+                        chunk=1):
+    """Per-tile flash partials over the quantized region.
+
+    Args:
+      q:  f32[H, T, dh] queries.
+      ku, kl: int8[H, NB*G, dh] key nibbles; ks, kz: f32[H, NB, dh].
+      vu, vl: int8[H, NB*G, dh] value nibbles; vs, vz: f32[H, NB, G].
+      n_q: i32[1] — region fill in tokens (masked in-kernel).
+      g: group size G; mode: 'draft' | 'target'; chunk: blocks per grid
+         step (NB must be a multiple).
+    Returns:
+      (o f32[H, NC, T, dh], m f32[H, NC, T], l f32[H, NC, T]) partials,
+      NC = NB/chunk, ready for merge_chunks (fully-masked tiles have l=0).
+    """
+    H, T, dh = q.shape
+    nb = ku.shape[1] // g
+    assert nb % chunk == 0, f"NB={nb} not a multiple of chunk={chunk}"
+    nc = nb // chunk
+    cg = chunk * g
+    scale = 1.0 / (dh ** 0.5)
+    kern = functools.partial(
+        _attn_tile_kernel, mode=mode, scale=scale, g=g, chunk=chunk
+    )
+    o, m, l = pl.pallas_call(
+        kern,
+        grid=(nc,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda c: (0,)),                 # n_q
+            pl.BlockSpec((H, T, dh), lambda c: (0, 0, 0)),      # q
+            pl.BlockSpec((H, cg, dh), lambda c: (0, c, 0)),     # ku
+            pl.BlockSpec((H, cg, dh), lambda c: (0, c, 0)),     # kl
+            pl.BlockSpec((H, chunk, dh), lambda c: (0, c, 0)),  # ks
+            pl.BlockSpec((H, chunk, dh), lambda c: (0, c, 0)),  # kz
+            pl.BlockSpec((H, cg, dh), lambda c: (0, c, 0)),     # vu
+            pl.BlockSpec((H, cg, dh), lambda c: (0, c, 0)),     # vl
+            pl.BlockSpec((H, chunk, g), lambda c: (0, c, 0)),   # vs
+            pl.BlockSpec((H, chunk, g), lambda c: (0, c, 0)),   # vz
+        ],
+        out_specs=[
+            pl.BlockSpec((H, 1, T, dh), lambda c: (0, c, 0, 0)),
+            pl.BlockSpec((H, 1, T), lambda c: (0, c, 0)),
+            pl.BlockSpec((H, 1, T), lambda c: (0, c, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((H, nc, T, dh), jnp.float32),
+            jax.ShapeDtypeStruct((H, nc, T), jnp.float32),
+            jax.ShapeDtypeStruct((H, nc, T), jnp.float32),
+        ],
+        interpret=True,
+    )(jnp.reshape(n_q, (1,)).astype(jnp.int32), q, ku, kl, ks, kz, vu, vl,
+      vs, vz)
+    return o, m, l
+
+
+def quant_attn(q, ku, kl, ks, kz, vu, vl, vs, vz, n_q, *, g, mode, chunk=1):
+    """Full quantized-region attention chunk in merge_chunks format:
+    o f32[H,T,dh] unnormalized, m f32[H,T], l f32[H,T]. Tokens >= n_q are
+    masked in-kernel (n_q is always a multiple of G — the region only ever
+    grows by whole-block flushes, paper §4.3.2)."""
+    o_p, m_p, l_p = quant_attn_partials(
+        q, ku, kl, ks, kz, vu, vl, vs, vz, n_q, g=g, mode=mode, chunk=chunk
+    )
+    vmask = l_p > 0.0  # [H, NC, T]
+    m_masked = jnp.where(vmask, m_p, -jnp.inf)
+    m_all = jnp.max(m_masked, axis=1)  # [H, T]
+    m_safe = jnp.where(jnp.isfinite(m_all), m_all, 0.0)
+    w = jnp.where(vmask, jnp.exp(m_p - m_safe[:, None, :]), 0.0)
+    o = jnp.sum(o_p * w[..., None], axis=1)  # [H, T, dh]
+    l = jnp.sum(l_p * w, axis=1)  # [H, T]
+    return o, m_safe, l

@@ -1,0 +1,172 @@
+"""Pure-jnp reference oracles for the QuantSpec L1 kernels.
+
+These are the correctness ground truth that the Pallas kernels
+(`hier_quant.py`, `quant_attn.py`) are tested against (pytest + hypothesis).
+They implement the paper's §4.2 hierarchical quantization exactly:
+
+    C_INT8  = 16 * C_U + C_L            (upper/lower nibble decomposition)
+    x_fp    = C_INT8 * S8 + Z8          (asymmetric per-group INT8)
+    draft   : x ≈ C_U * (16*S8) + Z8    (upper nibble only, INT4)
+    target  : x ≈ (16*C_U + C_L) * S8 + Z8   (INT8 reconstruction)
+
+Grouping (paper §4.3.1, KIVI-style):
+  * Key cache   — channel-wise: one (S8, Z8) per (token-block of G, channel).
+  * Value cache — token-wise:   one (S8, Z8) per (token, channel-block of G).
+With G = head_dim (the default), a value group is exactly one token's head
+vector.
+
+All functions operate on a single token-block of shape [H, G, dh] so that
+the same code path serves both prefill bulk quantization and the every-G-steps
+buffer flush (paper §4.3.2).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Epsilon guarding zero-range groups (constant inputs).
+EPS = 1e-6
+
+
+def _asym_scale(mn, mx):
+    """Asymmetric INT8 scale/zero-point for values in [mn, mx]."""
+    scale = jnp.maximum((mx - mn) / 255.0, EPS)
+    zero = mn
+    return scale, zero
+
+
+def hier_quant_block_k(k):
+    """Hierarchically quantize one key block, channel-wise.
+
+    Args:
+      k: f32[H, G, dh] — one block of G tokens of the key cache.
+    Returns:
+      (u, l, s8, z): u int8[H,G,dh] in [0,15], l int8[H,G,dh] in [-8,7],
+      s8 f32[H,dh], z f32[H,dh] — per-(block, channel) INT8 scale/zero.
+    """
+    mn = jnp.min(k, axis=1)  # [H, dh] over the token axis
+    mx = jnp.max(k, axis=1)
+    s8, z = _asym_scale(mn, mx)
+    return _hier_encode(k, s8[:, None, :], z[:, None, :]) + (s8, z)
+
+
+def hier_quant_block_v(v):
+    """Hierarchically quantize one value block, token-wise.
+
+    Args:
+      v: f32[H, G, dh] — one block of G tokens of the value cache.
+    Returns:
+      (u, l, s8, z): u int8[H,G,dh], l int8[H,G,dh], s8 f32[H,G], z f32[H,G]
+      — per-token INT8 scale/zero (group = the token's dh channels).
+    """
+    mn = jnp.min(v, axis=2)  # [H, G] over the channel axis
+    mx = jnp.max(v, axis=2)
+    s8, z = _asym_scale(mn, mx)
+    return _hier_encode(v, s8[:, :, None], z[:, :, None]) + (s8, z)
+
+
+def _hier_encode(x, s8, z):
+    """Shared upper/lower nibble encoder (paper §4.2).
+
+    The upper nibble is asymmetric round-to-nearest INT4 with
+    S4 = 16*S8, Z4 = Z8; the lower nibble symmetrically quantizes the
+    upper's rounding error with step S8.
+    """
+    s4 = 16.0 * s8
+    u = jnp.clip(jnp.round((x - z) / s4), 0.0, 15.0)
+    err = x - (u * s4 + z)
+    l = jnp.clip(jnp.round(err / s8), -8.0, 7.0)
+    return u.astype(jnp.int8), l.astype(jnp.int8)
+
+
+def dequant_blocks_k(u, l, s8, z, mode):
+    """Dequantize a multi-block key region.
+
+    u, l: int8[H, NB*G, dh]; s8, z: f32[H, NB, dh]; mode: 'draft'|'target'.
+    Returns f32[H, NB*G, dh].
+    """
+    H, S, dh = u.shape
+    nb = s8.shape[1]
+    g = S // nb
+    uu = u.reshape(H, nb, g, dh).astype(jnp.float32)
+    if mode == "draft":
+        out = uu * (16.0 * s8)[:, :, None, :] + z[:, :, None, :]
+    else:
+        ll = l.reshape(H, nb, g, dh).astype(jnp.float32)
+        out = (16.0 * uu + ll) * s8[:, :, None, :] + z[:, :, None, :]
+    return out.reshape(H, S, dh)
+
+
+def dequant_blocks_v(u, l, s8, z, mode):
+    """Dequantize a multi-block value region.
+
+    u, l: int8[H, NB*G, dh]; s8, z: f32[H, NB, G]; mode: 'draft'|'target'.
+    """
+    H, S, dh = u.shape
+    nb, g = s8.shape[1], s8.shape[2]
+    uu = u.reshape(H, nb, g, dh).astype(jnp.float32)
+    if mode == "draft":
+        out = uu * (16.0 * s8)[:, :, :, None] + z[:, :, :, None]
+    else:
+        ll = l.reshape(H, nb, g, dh).astype(jnp.float32)
+        out = (16.0 * uu + ll) * s8[:, :, :, None] + z[:, :, :, None]
+    return out.reshape(H, S, dh)
+
+
+def attn_reference(q, k, v, mask):
+    """Plain masked softmax attention oracle.
+
+    q: f32[H, T, dh]; k, v: f32[H, S, dh]; mask: bool[T, S] (True = attend).
+    Returns f32[H, T, dh].
+    """
+    dh = q.shape[-1]
+    scores = jnp.einsum("htd,hsd->hts", q, k) / jnp.sqrt(jnp.float32(dh))
+    scores = jnp.where(mask[None, :, :], scores, -jnp.inf)
+    p = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("hts,hsd->htd", p, v)
+
+
+def quant_attn_reference(q, ku, kl, ks, kz, vu, vl, vs, vz, n_q, mode):
+    """Oracle for attention over the quantized region only.
+
+    Dequantizes the whole region per `mode` and runs plain attention with a
+    validity mask on the first `n_q` tokens. Mirrors what the Pallas kernel's
+    per-block partials must combine to.
+
+    Returns (o f32[H,T,dh], m f32[H,T], l f32[H,T]) where o is the
+    UNnormalized p@v accumulator and m/l are the flash-style max and
+    sum-of-exp statistics for LSE merging with other chunks (paper App. E).
+    """
+    kq = dequant_blocks_k(ku, kl, ks, kz, mode)
+    vq = dequant_blocks_v(vu, vl, vs, vz, mode)
+    dh = q.shape[-1]
+    S = kq.shape[1]
+    scores = jnp.einsum("htd,hsd->hts", q, kq) / jnp.sqrt(jnp.float32(dh))
+    valid = jnp.arange(S)[None, None, :] < n_q
+    scores = jnp.where(valid, scores, -jnp.inf)
+    m = jnp.max(scores, axis=-1)
+    msafe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.where(valid, jnp.exp(scores - msafe[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("hts,hsd->htd", p, vq)
+    return o, msafe, l
+
+
+def merge_chunks(parts):
+    """LSE-merge flash-decoding chunks (paper Appendix E).
+
+    parts: list of (o, m, l) with o f32[H,T,dh] (UNnormalized p@v), m f32[H,T]
+    (chunk max), l f32[H,T] (chunk sum-of-exp). Chunks with l == 0 (fully
+    masked) are neutral. Returns normalized f32[H,T,dh].
+    """
+    ms = jnp.stack([jnp.where(l > 0.0, m, -jnp.inf) for (_, m, l) in parts])
+    m_all = jnp.max(ms, axis=0)  # [H, T]
+    m_safe = jnp.where(jnp.isfinite(m_all), m_all, 0.0)
+    num = 0.0
+    den = 0.0
+    for (o, m, l) in parts:
+        w = jnp.where(l > 0.0, jnp.exp(m - m_safe), 0.0)
+        num = num + o * w[..., None]
+        den = den + l * w
+    return num / jnp.maximum(den, EPS)[..., None]

@@ -1,0 +1,520 @@
+"""Layer 2: the QuantSpec JAX model — a Llama-architecture transformer whose
+attention runs over the paper's hierarchical quantized KV cache.
+
+Everything here is build-time only. `aot.py` lowers the entry points below to
+HLO text once; the Rust coordinator (L3) owns all state (caches, buffers,
+counters) and calls the compiled artifacts on the request path. Entry points
+are pure functions: caches go in as arguments and come out as results.
+
+Entry points (all per context-bucket S, batch = 1):
+
+  prefill      tokens[S] -> logits, hierarchical quantized caches for the
+               first S-G tokens, FP buffer C_F1 = last G tokens, SnapKV
+               pooled observation scores (used by the SnapKV baseline).
+  draft_step   1 token, INT4 (upper-nibble) KV + FP buffer attention.
+               Weights are inputs, so the same artifact serves the
+               weight-quantization ablation (fed FP vs Q4 weight sets).
+  verify       TMAX token slots, INT8 (both-nibble) KV; writes target-model
+               KV for the drafted tokens into the FP buffer (Alg. 1).
+  ar_step /    dense-FP-region variants: the autoregressive baseline and the
+  ar_verify    sparse baselines' target-side verification.
+  sparse_draft draft over a gathered budget-size dense region
+               (StreamingLLM / SnapKV draft caches).
+  flush        quantize C_F1 (G tokens) into the hierarchical cache, shift
+               C_F2 -> C_F1 (paper §4.3.2 double-buffer flush).
+  ar_flush /   dense-region equivalents (append / ring-evict with a
+  sparse_flush protected prefix).
+  score_*      teacher-forced per-token log-likelihoods with fake-quantized
+               KV (Table 2 / Table 5 perplexity evaluations).
+
+Shape/state conventions (see DESIGN.md §5):
+  G = head_dim (paper §4.3.1); the quantized region only grows by whole
+  G-token blocks, so `n_q` is always a multiple of G. The FP buffer holds
+  FB = 2G + TMAX slots; entry j holds the KV of absolute position n_q + j,
+  and rollback after a rejected speculation is just a decrement of `n_f`
+  (stale slots are masked and later overwritten).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import hier_quant, quant_attn, ref
+
+
+# --------------------------------------------------------------------------
+# Configuration
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyperparameters for the tiny-Llama preset.
+
+    head_dim doubles as the quantization group size G (paper §4.3.1), so a
+    value group is exactly one token's head vector and the FP-buffer flush
+    granularity equals the key channel-group length.
+    """
+
+    vocab: int = 256
+    d_model: int = 256
+    n_heads: int = 4
+    head_dim: int = 64
+    n_layers: int = 4
+    d_ff: int = 512
+    tmax: int = 8  # verify slots: gamma_max = tmax - 1
+    rope_theta: float = 10000.0
+
+    @property
+    def g(self) -> int:
+        return self.head_dim
+
+    @property
+    def fb(self) -> int:
+        """FP buffer capacity: double buffer (2G) + verify-slot slack."""
+        return 2 * self.g + self.tmax
+
+    def caps(self, s: int):
+        """(quantized-region token capacity, block capacity) for bucket s.
+
+        The region starts at s - G tokens after prefill and grows by one
+        G-block per flush; two spare blocks cover the paper's 90-token
+        output budget plus speculation slack.
+        """
+        sq_cap = s + 4 * self.g  # multiple of ATTN_CHUNK blocks
+        return sq_cap, sq_cap // self.g
+
+
+# Quantization blocks per kernel grid step (§Perf block-shape knob); the
+# region block capacity (caps) is kept a multiple of this.
+ATTN_CHUNK = 4
+
+
+# Canonical per-layer weight names, in lowering argument order.
+_LAYER_PARAMS = (
+    "attn_norm", "wq", "wk", "wv", "wo", "mlp_norm", "w_gate", "w_up",
+    "w_down",
+)
+
+
+def param_names(cfg: ModelConfig):
+    """Canonical flat parameter ordering shared with aot.py and the Rust
+    runtime (manifest order == lowering argument order)."""
+    names = ["embed"]
+    for i in range(cfg.n_layers):
+        names.extend(f"layers.{i}.{p}" for p in _LAYER_PARAMS)
+    names.extend(["final_norm", "lm_head"])
+    return names
+
+
+def param_shapes(cfg: ModelConfig):
+    """Shape for every canonical parameter name."""
+    d, hd, f = cfg.d_model, cfg.n_heads * cfg.head_dim, cfg.d_ff
+    shapes = {"embed": (cfg.vocab, d), "final_norm": (d,), "lm_head": (d, cfg.vocab)}
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        shapes[p + "attn_norm"] = (d,)
+        shapes[p + "wq"] = (d, hd)
+        shapes[p + "wk"] = (d, hd)
+        shapes[p + "wv"] = (d, hd)
+        shapes[p + "wo"] = (hd, d)
+        shapes[p + "mlp_norm"] = (d,)
+        shapes[p + "w_gate"] = (d, f)
+        shapes[p + "w_up"] = (d, f)
+        shapes[p + "w_down"] = (f, d)
+    return shapes
+
+
+def init_params(key, cfg: ModelConfig):
+    """Random init (scaled normal), as a flat {name: array} dict."""
+    params = {}
+    for name, shape in param_shapes(cfg).items():
+        key, sub = jax.random.split(key)
+        if name.endswith("norm"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[0] if len(shape) == 2 else cfg.d_model
+            std = 1.0 / math.sqrt(fan_in)
+            params[name] = std * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def flatten_params(cfg: ModelConfig, params: dict):
+    return [params[n] for n in param_names(cfg)]
+
+
+def unflatten_params(cfg: ModelConfig, flat):
+    return dict(zip(param_names(cfg), flat))
+
+
+# --------------------------------------------------------------------------
+# Core ops
+# --------------------------------------------------------------------------
+
+
+def rmsnorm(x, w, eps=1e-5):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope(x, positions, theta):
+    """Rotary embedding. x: [H, T, dh]; positions: i32[T]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # [T, half]
+    cos, sin = jnp.cos(ang)[None], jnp.sin(ang)[None]  # [1, T, half]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def _qkv(cfg, w, prefix, h):
+    """Project hidden states h [T, d] to q/k/v [H, T, dh]."""
+    def proj(name):
+        y = h @ w[prefix + name]  # [T, H*dh]
+        return y.reshape(-1, cfg.n_heads, cfg.head_dim).transpose(1, 0, 2)
+    return proj("wq"), proj("wk"), proj("wv")
+
+
+def _mlp(cfg, w, prefix, x):
+    h = rmsnorm(x, w[prefix + "mlp_norm"])
+    return (jax.nn.silu(h @ w[prefix + "w_gate"]) * (h @ w[prefix + "w_up"])) @ w[prefix + "w_down"]
+
+
+def dense_chunk(q, k, v, n):
+    """Flash-chunk statistics over a dense region, tokens [0, n) valid.
+
+    q: [H,T,dh]; k,v: [H,S,dh]. Returns (o, m, l) in merge_chunks format.
+    """
+    dh = q.shape[-1]
+    S = k.shape[1]
+    scores = jnp.einsum("htd,hsd->hts", q, k) / jnp.sqrt(jnp.float32(dh))
+    valid = jnp.arange(S)[None, None, :] < n
+    scores = jnp.where(valid, scores, -jnp.inf)
+    m = jnp.max(scores, axis=-1)
+    msafe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.where(valid, jnp.exp(scores - msafe[..., None]), 0.0)
+    return jnp.einsum("hts,hsd->htd", p, v), msafe, jnp.sum(p, axis=-1)
+
+
+def self_chunk(q, k, v):
+    """Causal self-attention chunk over the T in-flight tokens."""
+    dh = q.shape[-1]
+    T = q.shape[1]
+    scores = jnp.einsum("htd,hsd->hts", q, k) / jnp.sqrt(jnp.float32(dh))
+    causal = jnp.arange(T)[:, None] >= jnp.arange(T)[None, :]
+    scores = jnp.where(causal[None], scores, -jnp.inf)
+    m = jnp.max(scores, axis=-1)
+    p = jnp.where(causal[None], jnp.exp(scores - m[..., None]), 0.0)
+    return jnp.einsum("hts,hsd->htd", p, v), m, jnp.sum(p, axis=-1)
+
+
+# --------------------------------------------------------------------------
+# Decode core (shared by draft / verify / AR / sparse entries)
+# --------------------------------------------------------------------------
+
+
+def decode_core(cfg, w, toks, pos, n_q, n_f, region, fk, fv, *, region_kind,
+                mode):
+    """One decode step over T = len(toks) in-flight tokens.
+
+    Attention per layer is three flash chunks merged by LSE (paper App. E):
+      1. the region — hierarchical quantized (Pallas kernel, draft/target
+         dequant per `mode`) or a dense FP region (AR & sparse baselines),
+         valid tokens [0, n_q);
+      2. the FP buffer — valid slots [0, n_f);
+      3. the in-flight segment itself — causal.
+
+    Returns (logits f32[T, vocab], fk', fv') where the buffers have the new
+    tokens' KV written at slots [n_f, n_f+T).
+    """
+    T = toks.shape[0]
+    positions = pos + jnp.arange(T, dtype=jnp.int32)
+    x = w["embed"][toks]  # [T, d]
+    k_news, v_news = [], []
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        h = rmsnorm(x, w[p + "attn_norm"])
+        q, k_new, v_new = _qkv(cfg, w, p, h)
+        q = rope(q, positions, cfg.rope_theta)
+        k_new = rope(k_new, positions, cfg.rope_theta)
+        chunks = []
+        if region_kind == "quant":
+            ku, kl, ks, kz, vu, vl, vs, vz = (r[i] for r in region)
+            chunks.append(
+                quant_attn.quant_attn(
+                    q, ku, kl, ks, kz, vu, vl, vs, vz, n_q, g=cfg.g,
+                    mode=mode, chunk=ATTN_CHUNK,
+                )
+            )
+        else:
+            kr, vr = region
+            chunks.append(dense_chunk(q, kr[i], vr[i], n_q))
+        chunks.append(dense_chunk(q, fk[i], fv[i], n_f))
+        chunks.append(self_chunk(q, k_new, v_new))
+        o = ref.merge_chunks(chunks)  # [H, T, dh]
+        o = o.transpose(1, 0, 2).reshape(T, cfg.n_heads * cfg.head_dim)
+        x = x + o @ w[p + "wo"]
+        x = x + _mlp(cfg, w, p, x)
+        k_news.append(k_new)
+        v_news.append(v_new)
+    logits = rmsnorm(x, w["final_norm"]) @ w["lm_head"]  # [T, vocab]
+    k_stack = jnp.stack(k_news)  # [L, H, T, dh]
+    v_stack = jnp.stack(v_news)
+    zero = jnp.int32(0)
+    fk2 = lax.dynamic_update_slice(fk, k_stack, (zero, zero, n_f, zero))
+    fv2 = lax.dynamic_update_slice(fv, v_stack, (zero, zero, n_f, zero))
+    return logits, fk2, fv2
+
+
+# --------------------------------------------------------------------------
+# Prefill
+# --------------------------------------------------------------------------
+
+_PREFILL_CHUNK = 256
+_SNAP_WINDOW = 32  # SnapKV observation window (last queries of the prompt)
+
+
+def _chunked_causal(q, k, v, snap_accum):
+    """Memory-bounded causal attention for prefill. q,k,v: [H,S,dh].
+
+    Returns (out [H,S,dh], snap [S]) where snap accumulates the summed
+    attention probability mass received by each position from the last
+    _SNAP_WINDOW queries (the SnapKV observation-window statistic).
+    """
+    H, S, dh = q.shape
+    c = min(_PREFILL_CHUNK, S)
+    nc = S // c
+    scale = 1.0 / math.sqrt(dh)
+    qs = q.reshape(H, nc, c, dh).transpose(1, 0, 2, 3)  # [nc, H, c, dh]
+
+    def body(ci, qc):
+        c0 = ci * c
+        scores = jnp.einsum("htd,hsd->hts", qc, k) * scale  # [H, c, S]
+        jpos = jnp.arange(S)[None, None, :]
+        ipos = (c0 + jnp.arange(c))[None, :, None]
+        scores = jnp.where(jpos <= ipos, scores, -jnp.inf)
+        mx = jnp.max(scores, axis=-1, keepdims=True)
+        pr = jnp.exp(scores - mx)
+        pr = pr / jnp.sum(pr, axis=-1, keepdims=True)
+        out = jnp.einsum("hts,hsd->htd", pr, v)
+        # SnapKV statistic: probability mass from the final-window queries.
+        in_win = (c0 + jnp.arange(c)) >= (S - _SNAP_WINDOW)
+        snap = jnp.sum(pr * in_win[None, :, None], axis=(0, 1))  # [S]
+        return out, snap
+
+    outs, snaps = lax.map(lambda args: body(*args), (jnp.arange(nc), qs))
+    out = outs.transpose(1, 0, 2, 3).reshape(H, S, dh)
+    return out, snap_accum + jnp.sum(snaps, axis=0)
+
+
+def prefill(cfg: ModelConfig, w, toks, s: int):
+    """Process an S-token prompt; build the hierarchical cache (paper Fig 3a).
+
+    Returns, in manifest order:
+      logits f32[vocab]           — next-token distribution for the prompt
+      ku, kl int8[L,H,SQ,dh]      — key nibbles (first S-G tokens valid)
+      ks, kz f32[L,H,NB,dh]       — key INT8 scale/zero (channel-wise groups)
+      vu, vl int8[L,H,SQ,dh]      — value nibbles
+      vs, vz f32[L,H,NB,G]        — value INT8 scale/zero (token-wise groups)
+      fk, fv f32[L,H,FB,dh]       — FP buffer, C_F1 = last G prompt tokens
+      kfull, vfull f32[L,H,S,dh]  — FP KV (baselines' dense region seed)
+      snap f32[S]                 — SnapKV observation scores
+    """
+    sq_cap, nb_cap = cfg.caps(s)
+    positions = jnp.arange(s, dtype=jnp.int32)
+    x = w["embed"][toks]
+    snap = jnp.zeros((s,), jnp.float32)
+    k_all, v_all = [], []
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        h = rmsnorm(x, w[p + "attn_norm"])
+        q, k, v = _qkv(cfg, w, p, h)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        o, snap = _chunked_causal(q, k, v, snap)
+        o = o.transpose(1, 0, 2).reshape(s, cfg.n_heads * cfg.head_dim)
+        x = x + o @ w[p + "wo"]
+        x = x + _mlp(cfg, w, p, x)
+        k_all.append(k)
+        v_all.append(v)
+    logits = rmsnorm(x[-1], w["final_norm"]) @ w["lm_head"]  # [vocab]
+
+    kfull = jnp.stack(k_all)  # [L, H, S, dh]
+    vfull = jnp.stack(v_all)
+    L, H, g = cfg.n_layers, cfg.n_heads, cfg.g
+    nb = s // g - 1  # quantize all but the trailing G tokens (C_F1)
+
+    def quant_region(x_full, quant_fn):
+        xb = x_full[:, :, : nb * g].reshape(L, H, nb, g, cfg.head_dim)
+        xb = xb.transpose(0, 2, 1, 3, 4).reshape(L * nb, H, g, cfg.head_dim)
+        u, lo, s8, z = lax.map(quant_fn, xb)
+        stat = s8.shape[-1]
+        u = u.reshape(L, nb, H, g, cfg.head_dim).transpose(0, 2, 1, 3, 4)
+        u = u.reshape(L, H, nb * g, cfg.head_dim)
+        lo = lo.reshape(L, nb, H, g, cfg.head_dim).transpose(0, 2, 1, 3, 4)
+        lo = lo.reshape(L, H, nb * g, cfg.head_dim)
+        s8 = s8.reshape(L, nb, H, stat).transpose(0, 2, 1, 3)
+        z = z.reshape(L, nb, H, stat).transpose(0, 2, 1, 3)
+        padt = ((0, 0), (0, 0), (0, sq_cap - nb * g), (0, 0))
+        padb = ((0, 0), (0, 0), (0, nb_cap - nb), (0, 0))
+        return (jnp.pad(u, padt), jnp.pad(lo, padt), jnp.pad(s8, padb),
+                jnp.pad(z, padb))
+
+    ku, kl, ks, kz = quant_region(kfull, hier_quant.hier_quant_block_k)
+    vu, vl, vs, vz = quant_region(vfull, hier_quant.hier_quant_block_v)
+
+    fpad = ((0, 0), (0, 0), (0, cfg.fb - g), (0, 0))
+    fk = jnp.pad(kfull[:, :, s - g:], fpad)
+    fv = jnp.pad(vfull[:, :, s - g:], fpad)
+    return (logits, ku, kl, ks, kz, vu, vl, vs, vz, fk, fv, kfull, vfull,
+            snap)
+
+
+# --------------------------------------------------------------------------
+# Flush entries (paper Alg. 1 lines 22-25)
+# --------------------------------------------------------------------------
+
+
+def flush(cfg: ModelConfig, ku, kl, ks, kz, vu, vl, vs, vz, fk, fv, n_q):
+    """Quantize C_F1 into the hierarchical cache; shift C_F2 -> C_F1."""
+    L, H, g, dh = cfg.n_layers, cfg.n_heads, cfg.g, cfg.head_dim
+    zero = jnp.int32(0)
+    blk = n_q // g
+
+    def quantize(buf, fn):
+        xb = buf[:, :, :g].reshape(L * H, g, dh)
+        u, lo, s8, z = fn(xb)
+        stat = s8.shape[-1]
+        return (u.reshape(L, H, g, dh), lo.reshape(L, H, g, dh),
+                s8.reshape(L, H, 1, stat), z.reshape(L, H, 1, stat))
+
+    u, lo, s8, z = quantize(fk, hier_quant.hier_quant_block_k)
+    ku = lax.dynamic_update_slice(ku, u, (zero, zero, n_q, zero))
+    kl = lax.dynamic_update_slice(kl, lo, (zero, zero, n_q, zero))
+    ks = lax.dynamic_update_slice(ks, s8, (zero, zero, blk, zero))
+    kz = lax.dynamic_update_slice(kz, z, (zero, zero, blk, zero))
+    u, lo, s8, z = quantize(fv, hier_quant.hier_quant_block_v)
+    vu = lax.dynamic_update_slice(vu, u, (zero, zero, n_q, zero))
+    vl = lax.dynamic_update_slice(vl, lo, (zero, zero, n_q, zero))
+    vs = lax.dynamic_update_slice(vs, s8, (zero, zero, blk, zero))
+    vz = lax.dynamic_update_slice(vz, z, (zero, zero, blk, zero))
+
+    fk = _shift_buffer(fk, g)
+    fv = _shift_buffer(fv, g)
+    return ku, kl, ks, kz, vu, vl, vs, vz, fk, fv
+
+
+def _shift_buffer(buf, g):
+    """Drop the first g slots (C_F1) and zero-fill the tail."""
+    pad = ((0, 0), (0, 0), (0, g), (0, 0))
+    return jnp.pad(buf[:, :, g:], pad)
+
+
+def ar_flush(cfg: ModelConfig, kr, vr, fk, fv, n_q):
+    """Dense-region flush: append C_F1 verbatim (FP16 baseline semantics)."""
+    zero = jnp.int32(0)
+    g = cfg.g
+    kr = lax.dynamic_update_slice(kr, fk[:, :, :g], (zero, zero, n_q, zero))
+    vr = lax.dynamic_update_slice(vr, fv[:, :, :g], (zero, zero, n_q, zero))
+    return kr, vr, _shift_buffer(fk, g), _shift_buffer(fv, g)
+
+
+def sparse_flush(cfg: ModelConfig, kr, vr, fk, fv, n_s, p):
+    """Budget-region flush for the sparse-KV draft baselines.
+
+    If the region has room, append C_F1 at n_s. Otherwise ring-evict: keep
+    the protected prefix [0, p) (attention sinks for StreamingLLM; the
+    SnapKV-selected set for SnapKV), shift the rest left by G, and append
+    C_F1 at the end — a sliding recent window over the unprotected suffix.
+    """
+    g = cfg.g
+    sb = kr.shape[2]
+    zero = jnp.int32(0)
+
+    k_app = lax.dynamic_update_slice(kr, fk[:, :, :g], (zero, zero, n_s, zero))
+    v_app = lax.dynamic_update_slice(vr, fv[:, :, :g], (zero, zero, n_s, zero))
+
+    idx = jnp.arange(sb, dtype=jnp.int32)
+    src = jnp.where(idx < p, idx, jnp.minimum(idx + g, sb - 1))
+    k_ev = lax.dynamic_update_slice(
+        jnp.take(kr, src, axis=2), fk[:, :, :g], (zero, zero, jnp.int32(sb - g), zero)
+    )
+    v_ev = lax.dynamic_update_slice(
+        jnp.take(vr, src, axis=2), fv[:, :, :g], (zero, zero, jnp.int32(sb - g), zero)
+    )
+
+    full = n_s + g > sb
+    kr2 = jnp.where(full, k_ev, k_app)
+    vr2 = jnp.where(full, v_ev, v_app)
+    return kr2, vr2, _shift_buffer(fk, g), _shift_buffer(fv, g)
+
+
+# --------------------------------------------------------------------------
+# Perplexity scoring entries (Tables 2 and 5)
+# --------------------------------------------------------------------------
+
+
+def score(cfg: ModelConfig, w, toks, s: int, *, kv_mode: str,
+          k_axis: str = "channel", v_axis: str = "token",
+          residual: int | None = None):
+    """Teacher-forced per-token log-likelihood with a fake-quantized cache.
+
+    kv_mode: 'fp' | 'int8' | 'int4'. k_axis/v_axis choose the quantization
+    grouping axis (Table 5 ablation). All but the trailing `residual`
+    (default 2G, matching the paper's R=256 at G=128) tokens are quantized.
+    Returns ll f32[S-1]: log p(toks[i+1] | toks[:i+1]).
+    """
+    residual = 2 * cfg.g if residual is None else residual
+    positions = jnp.arange(s, dtype=jnp.int32)
+    x = w["embed"][toks]
+    snap = jnp.zeros((s,), jnp.float32)
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        h = rmsnorm(x, w[p + "attn_norm"])
+        q, k, v = _qkv(cfg, w, p, h)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        if kv_mode != "fp":
+            k = fake_quant_seq(k, cfg.g, k_axis, kv_mode, residual)
+            v = fake_quant_seq(v, cfg.g, v_axis, kv_mode, residual)
+        o, snap = _chunked_causal(q, k, v, snap)
+        o = o.transpose(1, 0, 2).reshape(s, cfg.n_heads * cfg.head_dim)
+        x = x + o @ w[p + "wo"]
+        x = x + _mlp(cfg, w, p, x)
+    logits = rmsnorm(x, w["final_norm"]) @ w["lm_head"]  # [S, vocab]
+    logp = jax.nn.log_softmax(logits[:-1], axis=-1)
+    return jnp.take_along_axis(logp, toks[1:, None], axis=-1)[:, 0]
+
+
+def fake_quant_seq(x, g, axis, mode, residual):
+    """Quantize-dequantize a [H,S,dh] KV sequence blockwise, keeping the
+    trailing `residual` tokens full precision (paper Table 2 setup)."""
+    H, S, dh = x.shape
+    cut = ((S - residual) // g) * g
+    if cut <= 0:
+        return x
+    nb = cut // g
+    xb = x[:, :cut].reshape(H, nb, g, dh)
+    if axis == "channel":  # stats over the g tokens, per channel
+        mn = jnp.min(xb, axis=2, keepdims=True)
+        mx = jnp.max(xb, axis=2, keepdims=True)
+    else:  # 'token': stats over the dh channels, per token
+        mn = jnp.min(xb, axis=3, keepdims=True)
+        mx = jnp.max(xb, axis=3, keepdims=True)
+    s8 = jnp.maximum((mx - mn) / 255.0, ref.EPS)
+    z = mn
+    s4 = 16.0 * s8
+    u = jnp.clip(jnp.round((xb - z) / s4), 0.0, 15.0)
+    if mode == "int4":
+        deq = u * s4 + z
+    else:  # int8: hierarchical reconstruction with the lower nibble
+        lo = jnp.clip(jnp.round((xb - (u * s4 + z)) / s8), -8.0, 7.0)
+        deq = (16.0 * u + lo) * s8 + z
+    deq = deq.reshape(H, cut, dh)
+    return jnp.concatenate([deq, x[:, cut:]], axis=1)

@@ -1,0 +1,127 @@
+"""Build-time pretraining of the tiny-Llama target model.
+
+The paper serves Llama-2-7B-32K / LWM-Text-Chat-128k; no pretrained weights
+are available offline, so we train the same architecture family at tiny scale
+on the synthetic long-context corpus (`corpus.py`) for a few hundred Adam
+steps. This gives the served model *peaked, context-dependent* next-token
+distributions — the property that makes speculative-decoding acceptance rates
+meaningful (a random-weight model would accept everything under any draft).
+
+Runs once from `make artifacts`; skipped when `artifacts/params.npz` exists.
+
+Usage: python -m compile.pretrain [--steps N] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus, model
+
+
+def _train_forward(cfg, w, toks):
+    """Dense-causal training forward: toks i32[B,S] -> logits f32[B,S,V]."""
+    def one(seq):
+        positions = jnp.arange(seq.shape[0], dtype=jnp.int32)
+        x = w["embed"][seq]
+        for i in range(cfg.n_layers):
+            p = f"layers.{i}."
+            h = model.rmsnorm(x, w[p + "attn_norm"])
+            q, k, v = model._qkv(cfg, w, p, h)
+            q = model.rope(q, positions, cfg.rope_theta)
+            k = model.rope(k, positions, cfg.rope_theta)
+            S = seq.shape[0]
+            mask = jnp.arange(S)[:, None] >= jnp.arange(S)[None, :]
+            o = model.ref.attn_reference(q, k, v, mask)
+            o = o.transpose(1, 0, 2).reshape(S, cfg.n_heads * cfg.head_dim)
+            x = x + o @ w[p + "wo"]
+            x = x + model._mlp(cfg, w, p, x)
+        return model.rmsnorm(x, w["final_norm"]) @ w["lm_head"]
+    return jax.vmap(one)(toks)
+
+
+def loss_fn(cfg, w, batch):
+    logits = _train_forward(cfg, w, batch[:, :-1])
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tgt = batch[:, 1:]
+    ll = jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def adam_step(cfg, w, m, v, batch, step, lr, b1=0.9, b2=0.95, eps=1e-8):
+    loss, grads = jax.value_and_grad(functools.partial(loss_fn, cfg))(w, batch)
+    t = step + 1.0
+    new_w, new_m, new_v = {}, {}, {}
+    for k in w:
+        m_k = b1 * m[k] + (1 - b1) * grads[k]
+        v_k = b2 * v[k] + (1 - b2) * jnp.square(grads[k])
+        mhat = m_k / (1 - b1 ** t)
+        vhat = v_k / (1 - b2 ** t)
+        new_w[k] = w[k] - lr * mhat / (jnp.sqrt(vhat) + eps)
+        new_m[k], new_v[k] = m_k, v_k
+    return new_w, new_m, new_v, loss
+
+
+def pretrain(cfg: model.ModelConfig, steps: int = 300, batch: int = 8,
+             seq: int = 256, lr: float = 1e-3, seed: int = 0,
+             corpus_bytes: int = 1 << 21, log_every: int = 25):
+    """Train and return params plus the (step, loss) trace."""
+    data = np.frombuffer(
+        corpus.generate_corpus(seed, corpus_bytes, "pg19"), dtype=np.uint8
+    ).astype(np.int32)
+    key = jax.random.PRNGKey(seed)
+    params = model.init_params(key, cfg)
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    m, v = zeros, dict(zeros)
+
+    @jax.jit
+    def step_fn(w, m, v, batch_toks, step, cur_lr):
+        return adam_step(cfg, w, m, v, batch_toks, step, cur_lr)
+
+    rng = np.random.default_rng(seed)
+    trace = []
+    t0 = time.time()
+    for i in range(steps):
+        starts = rng.integers(0, len(data) - seq - 1, size=batch)
+        toks = jnp.asarray(np.stack([data[s: s + seq + 1] for s in starts]))
+        # linear warmup then cosine decay
+        warm = min(1.0, (i + 1) / 20)
+        cos = 0.5 * (1 + np.cos(np.pi * i / max(steps, 1)))
+        cur_lr = lr * warm * (0.1 + 0.9 * cos)
+        params, m, v, loss = step_fn(params, m, v, toks, float(i), cur_lr)
+        if i % log_every == 0 or i == steps - 1:
+            loss_v = float(loss)
+            trace.append((i, loss_v))
+            print(f"step {i:4d} loss {loss_v:.4f} "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+    return params, trace
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="../artifacts/params.npz")
+    args = ap.parse_args()
+
+    cfg = model.ModelConfig()
+    params, trace = pretrain(cfg, args.steps, args.batch, args.seq, args.lr,
+                             args.seed)
+    np.savez(args.out, **{k: np.asarray(p) for k, p in params.items()})
+    with open(args.out + ".loss.csv", "w") as f:
+        f.write("step,loss\n")
+        f.writelines(f"{s},{l:.6f}\n" for s, l in trace)
+    print(f"saved {args.out} (final loss {trace[-1][1]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

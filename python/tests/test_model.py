@@ -1,0 +1,206 @@
+"""L2 model semantics: decode paths vs a dense-attention reference.
+
+These tests prove Algorithm 1's cache plumbing: prefill + quantized decode +
+flush must track a plain dense forward pass, with errors bounded by the
+quantization mode (fp exact, INT8 tight, INT4 looser).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+CFG = model.ModelConfig()
+S = 256
+
+
+@pytest.fixture(scope="module")
+def setup():
+    w = model.init_params(jax.random.PRNGKey(0), CFG)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (S,), 0, CFG.vocab)
+    pre = jax.jit(lambda w, t: model.prefill(CFG, w, t, S))(w, toks)
+    return w, toks, pre
+
+
+def dense_logits(w, toks_all):
+    """Oracle: full dense causal forward, logits for every position."""
+    S2 = toks_all.shape[0]
+    positions = jnp.arange(S2, dtype=jnp.int32)
+    x = w["embed"][toks_all]
+    for i in range(CFG.n_layers):
+        p = f"layers.{i}."
+        h = model.rmsnorm(x, w[p + "attn_norm"])
+        q, k, v = model._qkv(CFG, w, p, h)
+        q = model.rope(q, positions, CFG.rope_theta)
+        k = model.rope(k, positions, CFG.rope_theta)
+        mask = jnp.arange(S2)[:, None] >= jnp.arange(S2)[None, :]
+        o = ref.attn_reference(q, k, v, mask)
+        o = o.transpose(1, 0, 2).reshape(S2, -1)
+        x = x + o @ w[p + "wo"]
+        x = x + model._mlp(CFG, w, p, x)
+    return model.rmsnorm(x, w["final_norm"]) @ w["lm_head"]
+
+
+def test_prefill_logits_match_dense(setup):
+    w, toks, pre = setup
+    want = dense_logits(w, toks)[-1]
+    np.testing.assert_allclose(pre[0], want, atol=1e-4, rtol=1e-4)
+
+
+def test_prefill_cache_layout(setup):
+    _, _, pre = setup
+    logits, ku, kl, ks, kz, vu, vl, vs, vz, fk, fv, kfull, vfull, snap = pre
+    sq, nb = CFG.caps(S)
+    assert ku.shape == (CFG.n_layers, CFG.n_heads, sq, CFG.head_dim)
+    assert ks.shape == (CFG.n_layers, CFG.n_heads, nb, CFG.head_dim)
+    assert vs.shape == (CFG.n_layers, CFG.n_heads, nb, CFG.g)
+    # C_F1 = last G prompt tokens, in buffer slots [0, G)
+    np.testing.assert_allclose(fk[:, :, : CFG.g], kfull[:, :, S - CFG.g:],
+                               atol=1e-6)
+    # slots beyond G are zero
+    assert float(jnp.abs(fk[:, :, CFG.g:]).max()) == 0.0
+    # quantized region covers exactly the first S-G tokens
+    assert float(jnp.abs(jnp.asarray(ks[:, :, (S // CFG.g - 1):])).max()) == 0.0
+
+
+@pytest.mark.parametrize("mode,atol", [("target", 0.5), ("draft", 1.5)])
+def test_decode_tracks_dense(setup, mode, atol):
+    w, toks, pre = setup
+    region = pre[1:9]
+    fk, fv = pre[9], pre[11 - 1]
+    n_q, n_f = S - CFG.g, CFG.g
+    new = jnp.array([42], jnp.int32)
+    lg, fk2, fv2 = jax.jit(
+        lambda w, *a: model.decode_core(CFG, w, *a, region_kind="quant", mode=mode)
+    )(w, new, jnp.int32(S), jnp.int32(n_q), jnp.int32(n_f), region, fk, fv)
+    want = dense_logits(w, jnp.concatenate([toks, new]))[-1]
+    err = float(jnp.max(jnp.abs(lg[0] - want)))
+    assert err < atol, f"{mode}: {err}"
+    # new token's KV landed in slot n_f
+    assert float(jnp.abs(fk2[:, :, n_f]).max()) > 0.0
+    assert float(jnp.abs(fk2[:, :, n_f + 1:]).max()) == 0.0
+
+
+def test_draft_coarser_than_target(setup):
+    w, toks, pre = setup
+    region = pre[1:9]
+    fk, fv = pre[9], pre[10]
+    args = (jnp.array([7], jnp.int32), jnp.int32(S), jnp.int32(S - CFG.g),
+            jnp.int32(CFG.g), region, fk, fv)
+    want = dense_logits(w, jnp.concatenate([toks, jnp.array([7])]))[-1]
+    lt = model.decode_core(CFG, w, *args, region_kind="quant", mode="target")[0][0]
+    ld = model.decode_core(CFG, w, *args, region_kind="quant", mode="draft")[0][0]
+    assert float(jnp.max(jnp.abs(lt - want))) < float(jnp.max(jnp.abs(ld - want)))
+
+
+def test_multi_token_verify_matches_dense(setup):
+    """TMAX-slot verify: each row must equal the dense forward at that
+    position (within INT8 error)."""
+    w, toks, pre = setup
+    region = pre[1:9]
+    fk, fv = pre[9], pre[10]
+    seg = jnp.array([10, 20, 30, 40, 0, 0, 0, 0], jnp.int32)
+    lg, _, _ = model.decode_core(
+        CFG, w, seg, jnp.int32(S), jnp.int32(S - CFG.g), jnp.int32(CFG.g),
+        region, fk, fv, region_kind="quant", mode="target")
+    for i in range(4):
+        ctx = jnp.concatenate([toks, seg[: i + 1]])
+        want = dense_logits(w, ctx)[-1]
+        err = float(jnp.max(jnp.abs(lg[i] - want)))
+        assert err < 0.6, f"slot {i}: {err}"
+
+
+def test_flush_preserves_decode(setup):
+    """Flushing C_F1 into the quantized region then decoding ≈ decoding
+    before the flush (difference bounded by INT8 error on G tokens)."""
+    w, toks, pre = setup
+    region = list(pre[1:9])
+    fk, fv = pre[9], pre[10]
+    n_q = S - CFG.g
+    out = jax.jit(lambda *a: model.flush(CFG, *a))(*region, fk, fv, jnp.int32(n_q))
+    region2, fk2, fv2 = out[:8], out[8], out[9]
+    # after flush: n_q' = S, n_f' = 0
+    new = jnp.array([42], jnp.int32)
+    lg_pre, _, _ = model.decode_core(
+        CFG, w, new, jnp.int32(S), jnp.int32(n_q), jnp.int32(CFG.g),
+        tuple(region), fk, fv, region_kind="quant", mode="target")
+    lg_post, _, _ = model.decode_core(
+        CFG, w, new, jnp.int32(S), jnp.int32(S), jnp.int32(0),
+        tuple(region2), fk2, fv2, region_kind="quant", mode="target")
+    err = float(jnp.max(jnp.abs(lg_pre - lg_post)))
+    assert err < 0.5, f"flush perturbation {err}"
+    # buffer shifted: slot 0 must now be empty
+    assert float(jnp.abs(fk2[:, :, 0]).max()) == 0.0
+
+
+def test_ar_dense_region_exact(setup):
+    w, toks, pre = setup
+    kfull, vfull = pre[11], pre[12]
+    sq, _ = CFG.caps(S)
+    pad = ((0, 0), (0, 0), (0, sq - (S - CFG.g)), (0, 0))
+    kr = jnp.pad(kfull[:, :, : S - CFG.g], pad)
+    vr = jnp.pad(vfull[:, :, : S - CFG.g], pad)
+    fk, fv = pre[9], pre[10]
+    new = jnp.array([42], jnp.int32)
+    lg, _, _ = model.decode_core(
+        CFG, w, new, jnp.int32(S), jnp.int32(S - CFG.g), jnp.int32(CFG.g),
+        (kr, vr), fk, fv, region_kind="dense", mode="fp")
+    want = dense_logits(w, jnp.concatenate([toks, new]))[-1]
+    np.testing.assert_allclose(lg[0], want, atol=2e-4, rtol=1e-4)
+
+
+def test_sparse_flush_append_and_evict():
+    L, H, g, dh = CFG.n_layers, CFG.n_heads, CFG.g, CFG.head_dim
+    sb = 2 * g
+    kr = jnp.arange(L * H * sb * dh, dtype=jnp.float32).reshape(L, H, sb, dh)
+    vr = kr + 1
+    fb = CFG.fb
+    fk = jnp.ones((L, H, fb, dh)) * 7.0
+    fv = fk + 1
+    # append path: region half full
+    kr2, vr2, fk2, _ = model.sparse_flush(CFG, kr, vr, fk, fv,
+                                          jnp.int32(g), jnp.int32(16))
+    np.testing.assert_allclose(kr2[:, :, g: 2 * g], fk[:, :, :g])
+    np.testing.assert_allclose(kr2[:, :, :g], kr[:, :, :g])
+    # evict path: full region, protected prefix 16
+    kr3, _, _, _ = model.sparse_flush(CFG, kr, vr, fk, fv,
+                                      jnp.int32(sb), jnp.int32(16))
+    np.testing.assert_allclose(kr3[:, :, :16], kr[:, :, :16])  # protected
+    np.testing.assert_allclose(kr3[:, :, 16: sb - g], kr[:, :, 16 + g: sb])
+    np.testing.assert_allclose(kr3[:, :, sb - g:], fk[:, :, :g])  # appended
+
+
+def test_score_fp_matches_dense(setup):
+    w, toks, _ = setup
+    ll = jax.jit(lambda w, t: model.score(CFG, w, t, S, kv_mode="fp"))(w, toks)
+    logits = dense_logits(w, toks)
+    logp = jax.nn.log_softmax(logits[:-1], axis=-1)
+    want = jnp.take_along_axis(logp, toks[1:, None], axis=-1)[:, 0]
+    np.testing.assert_allclose(ll, want, atol=1e-4, rtol=1e-4)
+
+
+def test_score_quant_ordering(setup):
+    """Table 2/5 sanity: ppl(fp) <= ppl(int8) <= ppl(int4) approximately
+    (quantization can only hurt on average)."""
+    w, toks, _ = setup
+    def nll(**kw):
+        ll = model.score(CFG, w, toks, S, **kw)
+        return -float(jnp.mean(ll))
+    fp = nll(kv_mode="fp")
+    i8 = nll(kv_mode="int8")
+    i4 = nll(kv_mode="int4")
+    assert i8 < fp + 0.05, f"int8 {i8} vs fp {fp}"
+    assert i4 < fp + 0.6, f"int4 {i4} vs fp {fp}"
+    assert abs(i8 - fp) <= abs(i4 - fp) + 1e-6
+
+
+def test_param_flatten_roundtrip():
+    w = model.init_params(jax.random.PRNGKey(3), CFG)
+    flat = model.flatten_params(CFG, w)
+    w2 = model.unflatten_params(CFG, flat)
+    assert set(w2) == set(w)
+    for k in w:
+        np.testing.assert_array_equal(w[k], w2[k])

@@ -1,0 +1,96 @@
+//! Sparse-KV self-speculative baselines (paper §5.1, following MagicDec).
+//!
+//! Both baselines share QuantSpec's engine and verify path; only the draft
+//! cache differs:
+//! * **StreamingLLM** (Xiao et al.): attention-sink prefix + sliding recent
+//!   window.
+//! * **SnapKV** (Li et al.): prompt positions selected at prefill time by
+//!   pooled attention mass from the final observation window.
+//!
+//! The draft KV budget is context/4, matching the byte footprint of
+//! QuantSpec's 4-bit cache (the paper's fair-comparison setup). Selection
+//! here is pure index math; the gather into a dense budget region happens
+//! in `model::xla_session`.
+
+/// StreamingLLM: sink prefix + most recent window, ascending order.
+pub fn streaming_indices(s: usize, budget: usize, sink_tokens: usize) -> Vec<usize> {
+    let sink = sink_tokens.min(budget / 2);
+    let recent = budget - sink;
+    let mut idx: Vec<usize> = (0..sink).collect();
+    idx.extend(s - recent..s);
+    idx
+}
+
+/// SnapKV: top-(budget-g) positions by max-pooled observation score over
+/// the quantizable prefix [0, s-g), ascending, plus the last g prompt
+/// tokens (the observation window itself stays).
+pub fn snapkv_indices(snap: &[f32], s: usize, g: usize, budget: usize) -> Vec<usize> {
+    let keep_sel = budget.saturating_sub(g);
+    let pool = 7usize;
+    let n = s - g;
+    let pooled: Vec<f32> = (0..n)
+        .map(|i| {
+            let lo = i.saturating_sub(pool / 2);
+            let hi = (i + pool / 2 + 1).min(n);
+            snap[lo..hi].iter().copied().fold(f32::MIN, f32::max)
+        })
+        .collect();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| pooled[b].total_cmp(&pooled[a]));
+    let mut sel: Vec<usize> = order.into_iter().take(keep_sel).collect();
+    sel.sort_unstable();
+    sel.extend(s - g..s);
+    sel
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn streaming_shape() {
+        let idx = streaming_indices(1024, 256, 64);
+        assert_eq!(idx.len(), 256);
+        assert_eq!(idx[0], 0);
+        assert_eq!(*idx.last().unwrap(), 1023);
+        assert!(idx.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn streaming_small_budget_halves_sink() {
+        let idx = streaming_indices(512, 64, 64);
+        assert_eq!(idx.len(), 64);
+        assert!(idx.contains(&31)); // sink capped at budget/2
+        assert!(idx.contains(&511));
+    }
+
+    #[test]
+    fn snapkv_picks_high_scores() {
+        let s = 512;
+        let g = 64;
+        let mut snap = vec![0.0f32; s];
+        snap[17] = 9.0;
+        snap[200] = 8.0;
+        let idx = snapkv_indices(&snap, s, g, 128);
+        assert_eq!(idx.len(), 128);
+        assert!(idx.contains(&17));
+        assert!(idx.contains(&200));
+        assert!(idx.windows(2).all(|w| w[0] < w[1]));
+        for t in s - g..s {
+            assert!(idx.contains(&t), "recent token {t} kept");
+        }
+    }
+
+    #[test]
+    fn snapkv_pooling_keeps_neighborhoods() {
+        let s = 256;
+        let g = 64;
+        let mut snap = vec![0.0f32; s];
+        snap[100] = 10.0;
+        let idx = snapkv_indices(&snap, s, g, 96);
+        // pooled window around the spike should be selected
+        for t in 98..=102 {
+            assert!(idx.contains(&t), "neighbor {t}");
+        }
+    }
+}

@@ -1,0 +1,143 @@
+//! Benchmark harness (no criterion offline): warmup + timed iterations +
+//! robust statistics, plus the paper-style table/series printers used by
+//! every `benches/*.rs` regenerator.
+
+use std::time::Instant;
+
+/// Timing statistics over N iterations.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean_secs: f64,
+    pub median_secs: f64,
+    pub min_secs: f64,
+    pub max_secs: f64,
+}
+
+/// Run `f` with warmup, collect per-iteration wall times.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    stats(&times)
+}
+
+pub fn stats(times: &[f64]) -> BenchStats {
+    let mut sorted = times.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    let n = sorted.len().max(1);
+    BenchStats {
+        iters: times.len(),
+        mean_secs: times.iter().sum::<f64>() / n as f64,
+        median_secs: sorted[n / 2],
+        min_secs: *sorted.first().unwrap_or(&0.0),
+        max_secs: *sorted.last().unwrap_or(&0.0),
+    }
+}
+
+/// Plain-text table printer (paper-style rows).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self, title: &str) {
+        println!("\n== {title} ==");
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            s
+        };
+        println!("{}", line(&self.headers));
+        println!(
+            "|{}|",
+            widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("|")
+        );
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+
+    /// CSV dump alongside the pretty print (for plotting).
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        let mut out = self.headers.join(",") + "\n";
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, out)
+    }
+}
+
+pub fn fmt_f(v: f64, prec: usize) -> String {
+    format!("{v:.prec$}")
+}
+
+pub fn fmt_ms(secs: f64) -> String {
+    format!("{:.2} ms", secs * 1e3)
+}
+
+pub fn fmt_gb(bytes: f64) -> String {
+    format!("{:.2} GB", bytes / 1e9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let s = stats(&[3.0, 1.0, 2.0]);
+        assert_eq!(s.min_secs, 1.0);
+        assert_eq!(s.max_secs, 3.0);
+        assert_eq!(s.median_secs, 2.0);
+        assert!((s.mean_secs - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bench_runs_expected_iters() {
+        let mut n = 0;
+        let s = bench(2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(s.iters, 5);
+    }
+
+    #[test]
+    fn table_csv() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "x".into()]);
+        let path = std::env::temp_dir().join("qs_table.csv");
+        t.write_csv(path.to_str().unwrap()).unwrap();
+        let got = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(got, "a,b\n1,x\n");
+    }
+}
+
+pub mod paper;

@@ -1,0 +1,149 @@
+//! Shared helpers for the paper-experiment regenerators in `benches/`.
+//!
+//! Context scale: the paper evaluates 4k-128k on Llama-2-7B-class models;
+//! this testbed's buckets are 256-2048 on the tiny preset — a fixed 32x
+//! scale (DESIGN.md §4). `paper_context` maps a bucket to the paper row it
+//! stands in for. Measured quantities (acceptance rate, CPU wall time) come
+//! from real runs; A6000 latencies/speedups are projected through the cost
+//! model with the measured acceptance (costmodel::latency).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::cache::MemoryReport;
+use crate::config::{Method, QuantMode, Sampling};
+use crate::model::xla_session::XlaSession;
+use crate::model::{Decoder, PhaseTimings};
+use crate::runtime::{Runtime, WeightSet, Weights};
+use crate::spec::{Sampler, SpecEngine};
+use crate::workload::{self, Profile};
+
+/// Paper-equivalent context label for a bucket (32x scale).
+pub fn paper_context(bucket: usize) -> String {
+    let k = bucket * 32 / 1024;
+    format!("{k}k")
+}
+
+/// Quick mode for CI-ish runs: QS_BENCH_QUICK=1 trims buckets and tokens.
+pub fn quick() -> bool {
+    std::env::var("QS_BENCH_QUICK").map_or(false, |v| v != "0")
+}
+
+pub struct Harness {
+    pub rt: Arc<Runtime>,
+    pub w_fp: Arc<Weights>,
+    pub w_q4: Arc<Weights>,
+}
+
+impl Harness {
+    pub fn load() -> Result<Harness> {
+        let rt = Runtime::load("artifacts")?;
+        let w_fp = Arc::new(Weights::load(&rt, WeightSet::Fp)?);
+        let w_q4 = Arc::new(Weights::load(&rt, WeightSet::Q4)?);
+        Ok(Harness { rt, w_fp, w_q4 })
+    }
+
+    pub fn buckets(&self) -> Vec<usize> {
+        let mut b = self.rt.manifest.buckets.clone();
+        b.sort_unstable();
+        if quick() {
+            b.truncate(2);
+        }
+        b
+    }
+
+    pub fn session(
+        &self,
+        method: Method,
+        quant_mode: QuantMode,
+        bucket: usize,
+    ) -> Result<XlaSession> {
+        XlaSession::new(
+            Arc::clone(&self.rt),
+            method,
+            quant_mode,
+            bucket,
+            Arc::clone(&self.w_fp),
+            Arc::clone(&self.w_q4),
+        )
+    }
+}
+
+/// One measured end-to-end decode trial.
+#[derive(Debug, Clone)]
+pub struct Trial {
+    pub method: Method,
+    pub bucket: usize,
+    pub acceptance: f64,
+    pub decode_tps: f64,
+    pub prefill_secs: f64,
+    pub decode_secs: f64,
+    pub tokens: usize,
+    pub memory: MemoryReport,
+    pub timings: PhaseTimings,
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn run_trial(
+    h: &Harness,
+    method: Method,
+    quant_mode: QuantMode,
+    bucket: usize,
+    profile: Profile,
+    seed: u64,
+    gamma: usize,
+    max_new: usize,
+) -> Result<Trial> {
+    // steady-state measurement: compile this bucket's entries up front so
+    // first-use XLA compilation doesn't pollute decode timings.
+    h.rt.warmup(&[bucket])?;
+    let mut sess = h.session(method, quant_mode, bucket)?;
+    let prompt = workload::prompt(seed, bucket, profile);
+    let sampling = Sampling::default(); // greedy: acceptance is deterministic
+    let mut eng = SpecEngine::new(gamma, Sampler::new(sampling.temperature, seed));
+    let res = eng.generate(&mut sess, &prompt, max_new)?;
+    Ok(Trial {
+        method,
+        bucket,
+        acceptance: res.acceptance_rate(),
+        decode_tps: res.decode_tokens_per_sec(),
+        prefill_secs: res.prefill_secs,
+        decode_secs: res.decode_secs,
+        tokens: res.tokens.len(),
+        memory: sess.memory(),
+        timings: sess.timings(),
+    })
+}
+
+/// Average trials over seeds.
+pub fn mean_trials(trials: &[Trial]) -> (f64, f64) {
+    let n = trials.len().max(1) as f64;
+    let acc = trials.iter().map(|t| t.acceptance).sum::<f64>() / n;
+    let tps = trials.iter().map(|t| t.decode_tps).sum::<f64>() / n;
+    (acc, tps)
+}
+
+/// Mean per-byte perplexity from a score_* entry over `n_docs` synthetic
+/// documents (Tables 2 and 5).
+pub fn score_ppl(h: &Harness, variant: &str, profile: Profile, n_docs: usize) -> Result<f64> {
+    let s = h.rt.manifest.score_bucket;
+    let entry = format!("{variant}_{s}");
+    let exe = h.rt.executor(&entry)?;
+    let mut total_nll = 0.0f64;
+    let mut total_tok = 0usize;
+    for seed in 0..n_docs as u64 {
+        let prompt = workload::prompt(seed * 31 + 7, s, profile);
+        let toks = crate::runtime::HostTensor::i32(vec![s], prompt)?;
+        let mut args: Vec<crate::runtime::Arg<'_>> =
+            vec![crate::runtime::Arg::Host(&toks)];
+        for w in &h.w_fp.tensors {
+            args.push(crate::runtime::Arg::Device(w));
+        }
+        let (outs, _) = exe.call(h.rt.client(), &args)?;
+        let ll = outs[0].as_f32()?;
+        total_nll += ll.iter().map(|&x| -(x as f64)).sum::<f64>();
+        total_tok += ll.len();
+    }
+    Ok((total_nll / total_tok as f64).exp())
+}

@@ -1,0 +1,225 @@
+//! KV-cache state management (paper §4.3, Algorithm 1).
+//!
+//! The tensors live on device (or inside the mock); this module owns the
+//! *counters and invariants* of the paper's cache design:
+//!
+//! * quantized region: grows only by whole G-token blocks (`n_q`);
+//! * double full-precision buffer: slots `[0, n_f)` valid, `C_F1` = first G
+//!   slots is always full after prefill (paper invariant 1);
+//! * speculation rollback (`REJECTCACHE`) is O(1): verify rewrites the
+//!   drafted slots in place, so rejecting tokens is just committing a
+//!   smaller count;
+//! * flush every G accepted tokens: quantize `C_F1`, shift `C_F2 -> C_F1`
+//!   (paper invariant 2: quantization work amortizes to 1/G per token).
+
+use anyhow::{bail, Result};
+
+/// Counter state machine for the double FP buffer + quantized region.
+#[derive(Debug, Clone)]
+pub struct CacheTracker {
+    /// Quantized-region fill, tokens (always a multiple of g).
+    pub n_q: usize,
+    /// FP buffer fill, slots.
+    pub n_f: usize,
+    /// Buffer fill at the start of the current speculation cycle.
+    cycle_base: Option<usize>,
+    /// Quantization group size G.
+    pub g: usize,
+    /// Buffer capacity FB (2G + tmax).
+    pub fb: usize,
+    /// Quantized-region token capacity.
+    pub cap: usize,
+}
+
+impl CacheTracker {
+    /// State right after prefill of a full bucket of `s` tokens:
+    /// region = first s-G tokens, C_F1 = last G tokens.
+    pub fn after_prefill(s: usize, g: usize, fb: usize, cap: usize) -> CacheTracker {
+        assert!(s >= 2 * g, "bucket must hold at least 2 groups");
+        CacheTracker { n_q: s - g, n_f: g, cycle_base: None, g, fb, cap }
+    }
+
+    /// Total committed context length (tokens with cache entries).
+    pub fn context_len(&self) -> usize {
+        self.n_q + self.n_f
+    }
+
+    /// Begin a speculation cycle: remember where drafted KV will land.
+    pub fn begin_cycle(&mut self) {
+        self.cycle_base = Some(self.n_f);
+    }
+
+    pub fn cycle_base(&self) -> usize {
+        self.cycle_base.unwrap_or(self.n_f)
+    }
+
+    /// Slot for the i-th draft step of the current cycle.
+    pub fn draft_slot(&self, i: usize) -> Result<usize> {
+        let base = self.cycle_base();
+        let slot = base + i;
+        if slot >= self.fb {
+            bail!("draft slot {slot} exceeds buffer capacity {}", self.fb);
+        }
+        Ok(slot)
+    }
+
+    /// Commit the cycle: verify wrote `t` slots at the base; `accepted + 1`
+    /// of them are now valid (accepted drafts + the token that fed slot 0).
+    /// Returns true if a flush is now required.
+    pub fn commit_cycle(&mut self, accepted: usize, t: usize) -> Result<bool> {
+        let base = self.cycle_base.take().ok_or_else(|| {
+            anyhow::anyhow!("commit_cycle without begin_cycle")
+        })?;
+        if accepted + 1 > t {
+            bail!("accepted {accepted} + feed token exceeds verify slots {t}");
+        }
+        self.n_f = base + accepted + 1;
+        if self.n_f > self.fb {
+            bail!("buffer overflow: n_f {} > fb {}", self.n_f, self.fb);
+        }
+        Ok(self.needs_flush())
+    }
+
+    /// Commit one autoregressive step (the AR baseline path).
+    pub fn commit_ar(&mut self) -> bool {
+        self.n_f += 1;
+        assert!(self.n_f <= self.fb, "AR overflow");
+        self.needs_flush()
+    }
+
+    /// Paper §4.3.2: flush when C_F2 is full, i.e. n_f reaches 2G; keeps at
+    /// least G recent tokens in full precision afterwards.
+    pub fn needs_flush(&self) -> bool {
+        self.n_f >= 2 * self.g
+    }
+
+    /// Apply the flush bookkeeping (the tensor work happens in the session).
+    pub fn flush(&mut self) -> Result<()> {
+        if !self.needs_flush() {
+            bail!("flush without need_flush");
+        }
+        if self.n_q + self.g > self.cap {
+            bail!("quantized region full: {} + {} > {}", self.n_q, self.g, self.cap);
+        }
+        self.n_q += self.g;
+        self.n_f -= self.g;
+        Ok(())
+    }
+
+    /// Paper invariant: C_F1 always full after prefill (≥ G recent FP
+    /// tokens), except transiently inside a flush.
+    pub fn check_invariants(&self) -> Result<()> {
+        if self.n_q % self.g != 0 {
+            bail!("n_q {} not a multiple of g {}", self.n_q, self.g);
+        }
+        if self.n_f < self.g {
+            bail!("C_F1 not full: n_f {} < g {}", self.n_f, self.g);
+        }
+        if self.n_f > self.fb {
+            bail!("buffer overflow");
+        }
+        Ok(())
+    }
+}
+
+/// Logical memory accounting for one session (Table 3 peak-memory rows and
+/// the /stats endpoint). `logical` uses true bit widths (INT4 = 0.5 B);
+/// `host` is what this CPU testbed actually holds (nibbles in int8, fp in
+/// f32) — both are reported, per DESIGN.md §4.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MemoryReport {
+    pub weights_logical: usize,
+    pub weights_host: usize,
+    pub cache_logical: usize,
+    pub cache_host: usize,
+}
+
+impl MemoryReport {
+    pub fn total_logical(&self) -> usize {
+        self.weights_logical + self.cache_logical
+    }
+
+    pub fn total_host(&self) -> usize {
+        self.weights_host + self.cache_host
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tracker() -> CacheTracker {
+        // bucket 512, g 64, fb 136, cap 640
+        CacheTracker::after_prefill(512, 64, 136, 640)
+    }
+
+    #[test]
+    fn prefill_state() {
+        let t = tracker();
+        assert_eq!(t.n_q, 448);
+        assert_eq!(t.n_f, 64);
+        assert_eq!(t.context_len(), 512);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cycle_commit_and_rollback_is_counter_math() {
+        let mut t = tracker();
+        t.begin_cycle();
+        for i in 0..4 {
+            assert_eq!(t.draft_slot(i).unwrap(), 64 + i);
+        }
+        // 2 of 4 drafts accepted; verify used 5 slots.
+        let flush = t.commit_cycle(2, 5).unwrap();
+        assert!(!flush);
+        assert_eq!(t.n_f, 64 + 3); // feed token + 2 accepted
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn flush_fires_at_double_buffer() {
+        let mut t = tracker();
+        let mut flushes = 0;
+        for _ in 0..200 {
+            if t.commit_ar() {
+                t.flush().unwrap();
+                flushes += 1;
+            }
+            t.check_invariants().unwrap();
+        }
+        assert!(flushes >= 2);
+        assert_eq!(t.context_len(), 512 + 200);
+    }
+
+    #[test]
+    fn full_acceptance_cycles() {
+        let mut t = tracker();
+        for _ in 0..20 {
+            t.begin_cycle();
+            if t.commit_cycle(7, 8).unwrap() {
+                t.flush().unwrap();
+            }
+            t.check_invariants().unwrap();
+        }
+        assert_eq!(t.context_len(), 512 + 20 * 8);
+    }
+
+    #[test]
+    fn overflow_guards() {
+        let mut t = tracker();
+        t.n_f = t.fb;
+        t.begin_cycle();
+        assert!(t.draft_slot(0).is_err());
+        let mut t2 = tracker();
+        t2.begin_cycle();
+        assert!(t2.commit_cycle(8, 8).is_err()); // accepted+1 > t
+    }
+
+    #[test]
+    fn region_capacity_guard() {
+        let mut t = tracker();
+        t.n_q = t.cap; // artificially full
+        t.n_f = 2 * t.g;
+        assert!(t.flush().is_err());
+    }
+}

@@ -1,0 +1,261 @@
+//! Serving and model configuration.
+//!
+//! `ServeConfig` is the coordinator's knob set (method, γ, batching,
+//! sampling); `ModelSpec` mirrors the architecture block of the artifact
+//! manifest. Config files are JSON (parsed with util::json); every field has
+//! a production-sane default so `quantspec serve` runs with no file at all.
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+
+/// Which decoding method an engine runs. The paper's Table 3 compares
+/// QuantSpec against autoregressive decoding and the two sparse-KV
+/// self-speculative baselines from MagicDec.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// Plain autoregressive decoding with the FP cache (the "AR" baseline).
+    Autoregressive,
+    /// QuantSpec: INT4-draft / INT8-verify hierarchical quantized cache.
+    QuantSpec,
+    /// Self-speculation with an attention-sink + recent-window draft cache.
+    StreamingLlm,
+    /// Self-speculation with a SnapKV-selected draft cache.
+    SnapKv,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "ar" | "autoregressive" => Method::Autoregressive,
+            "quantspec" | "qs" => Method::QuantSpec,
+            "streamingllm" | "streaming" => Method::StreamingLlm,
+            "snapkv" | "snap" => Method::SnapKv,
+            other => anyhow::bail!("unknown method '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Autoregressive => "AR",
+            Method::QuantSpec => "QuantSpec",
+            Method::StreamingLlm => "StreamingLLM",
+            Method::SnapKv => "SnapKV",
+        }
+    }
+
+    /// All speculative methods (Table 3 rows).
+    pub fn speculative() -> [Method; 3] {
+        [Method::StreamingLlm, Method::SnapKv, Method::QuantSpec]
+    }
+}
+
+/// QuantSpec ablation modes (paper Figure 4): what the draft quantizes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantMode {
+    /// 4-bit KV cache + 4-bit weights (the full method).
+    Both,
+    /// 4-bit KV cache, full-precision weights.
+    KvOnly,
+    /// 4-bit weights, full-precision (dense) KV.
+    WeightOnly,
+}
+
+impl QuantMode {
+    pub fn parse(s: &str) -> Result<QuantMode> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "both" => QuantMode::Both,
+            "kv" | "kv-only" | "kvonly" => QuantMode::KvOnly,
+            "weight" | "weight-only" | "weightonly" => QuantMode::WeightOnly,
+            other => anyhow::bail!("unknown quant mode '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            QuantMode::Both => "both",
+            QuantMode::KvOnly => "kv-only",
+            QuantMode::WeightOnly => "weight-only",
+        }
+    }
+}
+
+/// Sampling configuration shared by draft and target.
+#[derive(Debug, Clone, Copy)]
+pub struct Sampling {
+    /// Temperature 0 = greedy (deterministic; used by correctness tests).
+    pub temperature: f32,
+    pub seed: u64,
+}
+
+impl Default for Sampling {
+    fn default() -> Self {
+        Sampling { temperature: 0.0, seed: 0 }
+    }
+}
+
+/// Coordinator-level configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub artifacts_dir: String,
+    pub method: Method,
+    pub quant_mode: QuantMode,
+    /// Speculation length γ (paper Table 6 searches this per dataset).
+    pub gamma: usize,
+    /// Adapt γ online (AIMD on acceptance) instead of the fixed value.
+    pub adaptive_gamma: bool,
+    pub sampling: Sampling,
+    /// Max generated tokens per request (paper uses 90).
+    pub max_new_tokens: usize,
+    /// Number of decode engines (worker threads with their own state).
+    pub engines: usize,
+    /// Queue capacity before the router sheds load (429).
+    pub queue_capacity: usize,
+    /// HTTP bind address for `serve`.
+    pub bind: String,
+    /// Context buckets to preload (empty = all in manifest).
+    pub buckets: Vec<usize>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            artifacts_dir: "artifacts".into(),
+            method: Method::QuantSpec,
+            quant_mode: QuantMode::Both,
+            gamma: 4,
+            adaptive_gamma: false,
+            sampling: Sampling::default(),
+            max_new_tokens: 90,
+            engines: 1,
+            queue_capacity: 256,
+            bind: "127.0.0.1:8311".into(),
+            buckets: Vec::new(),
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Load from a JSON file, falling back to defaults per missing field.
+    pub fn from_file(path: &str) -> Result<ServeConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<ServeConfig> {
+        let mut c = ServeConfig::default();
+        if let Some(v) = j.get("artifacts_dir").and_then(Json::as_str) {
+            c.artifacts_dir = v.to_string();
+        }
+        if let Some(v) = j.get("method").and_then(Json::as_str) {
+            c.method = Method::parse(v)?;
+        }
+        if let Some(v) = j.get("quant_mode").and_then(Json::as_str) {
+            c.quant_mode = QuantMode::parse(v)?;
+        }
+        if let Some(v) = j.get("gamma").and_then(Json::as_usize) {
+            c.gamma = v;
+        }
+        if let Some(v) = j.get("adaptive_gamma").and_then(Json::as_bool) {
+            c.adaptive_gamma = v;
+        }
+        if let Some(v) = j.get("temperature").and_then(Json::as_f64) {
+            c.sampling.temperature = v as f32;
+        }
+        if let Some(v) = j.get("seed").and_then(Json::as_i64) {
+            c.sampling.seed = v as u64;
+        }
+        if let Some(v) = j.get("max_new_tokens").and_then(Json::as_usize) {
+            c.max_new_tokens = v;
+        }
+        if let Some(v) = j.get("engines").and_then(Json::as_usize) {
+            c.engines = v.max(1);
+        }
+        if let Some(v) = j.get("queue_capacity").and_then(Json::as_usize) {
+            c.queue_capacity = v;
+        }
+        if let Some(v) = j.get("bind").and_then(Json::as_str) {
+            c.bind = v.to_string();
+        }
+        if let Some(arr) = j.get("buckets").and_then(Json::as_arr) {
+            c.buckets = arr.iter().filter_map(Json::as_usize).collect();
+        }
+        Ok(c)
+    }
+}
+
+/// Architecture block of the manifest (must match the lowered model).
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    /// Quantization group size G (== head_dim, paper §4.3.1).
+    pub g: usize,
+    /// Verify slots (γ_max = tmax - 1).
+    pub tmax: usize,
+    /// FP buffer capacity FB = 2G + tmax.
+    pub fb: usize,
+}
+
+impl ModelSpec {
+    pub fn from_json(j: &Json) -> Result<ModelSpec> {
+        let u = |k: &str| -> Result<usize> {
+            j.req(k)?.as_usize().context(format!("model.{k} not usize"))
+        };
+        Ok(ModelSpec {
+            vocab: u("vocab")?,
+            d_model: u("d_model")?,
+            n_heads: u("n_heads")?,
+            head_dim: u("head_dim")?,
+            n_layers: u("n_layers")?,
+            d_ff: u("d_ff")?,
+            g: u("g")?,
+            tmax: u("tmax")?,
+            fb: u("fb")?,
+        })
+    }
+
+    /// γ_max supported by the verify artifact (one slot feeds the last
+    /// committed token).
+    pub fn gamma_max(&self) -> usize {
+        self.tmax - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in [Method::Autoregressive, Method::QuantSpec, Method::StreamingLlm, Method::SnapKv] {
+            assert_eq!(Method::parse(m.name()).unwrap(), m);
+        }
+        assert!(Method::parse("nope").is_err());
+    }
+
+    #[test]
+    fn config_from_json_overrides() {
+        let j = Json::parse(
+            r#"{"method":"snapkv","gamma":6,"temperature":0.8,"buckets":[512,1024]}"#,
+        )
+        .unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.method, Method::SnapKv);
+        assert_eq!(c.gamma, 6);
+        assert!((c.sampling.temperature - 0.8).abs() < 1e-6);
+        assert_eq!(c.buckets, vec![512, 1024]);
+        assert_eq!(c.max_new_tokens, 90); // default preserved
+    }
+
+    #[test]
+    fn model_spec_requires_fields() {
+        let j = Json::parse(r#"{"vocab":256}"#).unwrap();
+        assert!(ModelSpec::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! The serving coordinator: request router, continuous batcher, HTTP API.
+//!
+//! vLLM-router-shaped: an admission queue feeds a pool of decode engines
+//! (worker threads, each owning its own sessions); the router picks the
+//! context bucket, pads the prompt, and sheds load when the queue is full.
+//! Python never runs here — engines call the AOT artifacts via `runtime`.
+
+pub mod batcher;
+pub mod router;
+pub mod server;
+
+pub use router::{Coordinator, RequestSpec, ResponseOut};

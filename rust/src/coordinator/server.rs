@@ -1,0 +1,161 @@
+//! HTTP JSON API over the coordinator.
+//!
+//! Endpoints:
+//!   POST /generate  {"prompt": "text" | "tokens": [..], "max_new_tokens",
+//!                    "method", "gamma"} -> tokens + text + stats
+//!   GET  /stats     metrics snapshot
+//!   GET  /healthz   liveness
+
+use std::sync::Arc;
+
+use crate::config::Method;
+use crate::util::httpd::{Handler, Request, Response, Server};
+use crate::util::json::Json;
+
+use super::router::{Coordinator, RequestSpec};
+
+pub fn make_handler(coord: Arc<Coordinator>) -> Handler {
+    Arc::new(move |req: &Request| handle(&coord, req))
+}
+
+pub fn serve(coord: Arc<Coordinator>, bind: &str) -> std::io::Result<Server> {
+    Server::start(bind, make_handler(coord))
+}
+
+fn handle(coord: &Coordinator, req: &Request) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => Response::json(200, r#"{"ok":true}"#),
+        ("GET", "/stats") => Response::json(200, coord.metrics.snapshot().to_string()),
+        ("POST", "/generate") => generate(coord, &req.body),
+        _ => Response::json(404, r#"{"error":"not found"}"#),
+    }
+}
+
+fn generate(coord: &Coordinator, body: &[u8]) -> Response {
+    let text = match std::str::from_utf8(body) {
+        Ok(t) => t,
+        Err(_) => return Response::json(400, r#"{"error":"body not utf-8"}"#),
+    };
+    let j = match Json::parse(text) {
+        Ok(j) => j,
+        Err(e) => return Response::json(400, format!(r#"{{"error":"bad json: {e}"}}"#)),
+    };
+    // prompt: byte-level tokens from "prompt" text or explicit "tokens".
+    let prompt: Vec<i32> = if let Some(toks) = j.get("tokens").and_then(Json::as_arr) {
+        toks.iter().filter_map(|t| t.as_i64().map(|v| v as i32)).collect()
+    } else if let Some(p) = j.get("prompt").and_then(Json::as_str) {
+        p.bytes().map(|b| b as i32).collect()
+    } else {
+        return Response::json(400, r#"{"error":"need prompt or tokens"}"#);
+    };
+    if prompt.is_empty() {
+        return Response::json(400, r#"{"error":"empty prompt"}"#);
+    }
+    let method = match j.get("method").and_then(Json::as_str) {
+        Some(s) => match Method::parse(s) {
+            Ok(m) => Some(m),
+            Err(e) => return Response::json(400, format!(r#"{{"error":"{e}"}}"#)),
+        },
+        None => None,
+    };
+    let spec = RequestSpec {
+        id: coord.next_id(),
+        prompt,
+        max_new_tokens: j
+            .get("max_new_tokens")
+            .and_then(Json::as_usize)
+            .unwrap_or(coord.cfg.max_new_tokens),
+        method,
+        gamma: j.get("gamma").and_then(Json::as_usize),
+    };
+    let rx = match coord.submit(spec) {
+        Ok(rx) => rx,
+        Err(_) => return Response::json(429, r#"{"error":"queue full"}"#),
+    };
+    match rx.recv() {
+        Ok(Ok(out)) => {
+            let text: String = out
+                .tokens
+                .iter()
+                .map(|&t| {
+                    let b = (t as u32).min(255) as u8;
+                    if b.is_ascii() && !b.is_ascii_control() || b == b'\n' {
+                        b as char
+                    } else {
+                        '\u{fffd}'
+                    }
+                })
+                .collect();
+            Response::json(
+                200,
+                Json::obj(vec![
+                    ("id", Json::num(out.id as f64)),
+                    ("tokens", Json::arr(out.tokens.iter().map(|&t| Json::num(t as f64)))),
+                    ("text", Json::str(text)),
+                    ("bucket", Json::num(out.bucket as f64)),
+                    ("acceptance_rate", Json::num(out.acceptance_rate)),
+                    ("prefill_secs", Json::num(out.prefill_secs)),
+                    ("decode_secs", Json::num(out.decode_secs)),
+                    ("decode_tokens_per_sec", Json::num(out.decode_tokens_per_sec)),
+                    ("queue_secs", Json::num(out.queue_secs)),
+                ])
+                .to_string(),
+            )
+        }
+        Ok(Err(e)) => Response::json(500, Json::obj(vec![("error", Json::str(e))]).to_string()),
+        Err(_) => Response::json(500, r#"{"error":"engine dropped"}"#),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServeConfig;
+    use crate::util::httpd::http_request;
+
+    fn start_mock_server() -> (Server, Arc<Coordinator>) {
+        let cfg = ServeConfig { engines: 2, max_new_tokens: 16, ..ServeConfig::default() };
+        let coord = Arc::new(Coordinator::with_mock(cfg, 0.1).unwrap());
+        let srv = serve(Arc::clone(&coord), "127.0.0.1:0").unwrap();
+        (srv, coord)
+    }
+
+    #[test]
+    fn healthz_and_stats() {
+        let (srv, _c) = start_mock_server();
+        let addr = srv.addr.to_string();
+        let (st, body) = http_request(&addr, "GET", "/healthz", b"").unwrap();
+        assert_eq!(st, 200);
+        assert!(String::from_utf8_lossy(&body).contains("ok"));
+        let (st, _) = http_request(&addr, "GET", "/stats", b"").unwrap();
+        assert_eq!(st, 200);
+    }
+
+    #[test]
+    fn generate_roundtrip() {
+        let (srv, _c) = start_mock_server();
+        let addr = srv.addr.to_string();
+        let (st, body) =
+            http_request(&addr, "POST", "/generate", br#"{"prompt":"hello world"}"#).unwrap();
+        assert_eq!(st, 200, "{}", String::from_utf8_lossy(&body));
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 16);
+    }
+
+    #[test]
+    fn bad_requests_rejected() {
+        let (srv, _c) = start_mock_server();
+        let addr = srv.addr.to_string();
+        for (body, want) in [
+            (&b"not json"[..], 400u16),
+            (br#"{"no_prompt":1}"#, 400),
+            (br#"{"prompt":""}"#, 400),
+            (br#"{"prompt":"x","method":"bogus"}"#, 400),
+        ] {
+            let (st, _) = http_request(&addr, "POST", "/generate", body).unwrap();
+            assert_eq!(st, want);
+        }
+        let (st, _) = http_request(&addr, "GET", "/nope", b"").unwrap();
+        assert_eq!(st, 404);
+    }
+}

@@ -1,0 +1,189 @@
+//! Arithmetic-intensity formulas (paper Table 1, Figures 2 and 5).
+//!
+//! FLOPs and memory operations (bytes moved) for the linear and attention
+//! components of a Transformer under prefill and decode, as functions of
+//! batch B, sequence length S_L, and the model shape. FlashAttention
+//! semantics: the S_L² score matrix is never materialized (its MOPs are
+//! O(B·S_L) per the paper).
+
+use super::PaperModel;
+
+/// FLOPs + MOPs tally for one phase/component.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OpCount {
+    pub flops: f64,
+    pub mops_bytes: f64,
+}
+
+impl OpCount {
+    pub fn intensity(&self) -> f64 {
+        if self.mops_bytes == 0.0 {
+            0.0
+        } else {
+            self.flops / self.mops_bytes
+        }
+    }
+
+    pub fn add(self, other: OpCount) -> OpCount {
+        OpCount {
+            flops: self.flops + other.flops,
+            mops_bytes: self.mops_bytes + other.mops_bytes,
+        }
+    }
+}
+
+/// Bytes per element for weights/activations (paper analyzes 16-bit).
+pub const BYTES_FP16: f64 = 2.0;
+
+/// Linear (weight × activation) ops for prefill over S tokens, batch B.
+pub fn prefill_linear(m: &PaperModel, b: usize, s: usize) -> OpCount {
+    let (b, s) = (b as f64, s as f64);
+    let params = m.params() as f64;
+    OpCount {
+        // 2 FLOPs per weight per token (MAC).
+        flops: 2.0 * b * s * params,
+        // weights loaded once + activations in/out per layer.
+        mops_bytes: BYTES_FP16
+            * (params + b * s * (m.d_model as f64) * 2.0 * (m.n_layers as f64)),
+    }
+}
+
+/// Attention (activation × activation) ops for prefill (FlashAttention).
+pub fn prefill_attention(m: &PaperModel, b: usize, s: usize) -> OpCount {
+    let (bf, sf) = (b as f64, s as f64);
+    let l = m.n_layers as f64;
+    let hd = (m.n_heads * m.head_dim) as f64;
+    OpCount {
+        // q·kᵀ and p·v: 2 × 2 FLOPs × B S² h·dh per layer (causal ≈ ½,
+        // kept whole as in the paper's asymptotics).
+        flops: 2.0 * 2.0 * bf * sf * sf * hd * l,
+        // flash-attn running stats O(B·S) + q/k/v/o activations O(B·S·d).
+        mops_bytes: BYTES_FP16 * l * (bf * sf + 4.0 * bf * sf * hd),
+    }
+}
+
+/// Linear ops for decoding k tokens.
+pub fn decode_linear(m: &PaperModel, b: usize, k: usize) -> OpCount {
+    let (bf, kf) = (b as f64, k as f64);
+    let params = m.params() as f64;
+    OpCount {
+        flops: 2.0 * kf * bf * params,
+        // weights reloaded every step + per-token activations.
+        mops_bytes: BYTES_FP16
+            * (kf * params + kf * bf * (m.d_model as f64) * 2.0 * (m.n_layers as f64)),
+    }
+}
+
+/// Attention ops for decoding k tokens at context S with `kv_bytes` bytes
+/// per cache element (2.0 = FP16, 1.0 = INT8, 0.5 = INT4).
+pub fn decode_attention_kv(
+    m: &PaperModel,
+    b: usize,
+    s: usize,
+    k: usize,
+    kv_bytes: f64,
+) -> OpCount {
+    let (bf, sf, kf) = (b as f64, s as f64, k as f64);
+    let l = m.n_layers as f64;
+    let hd = (m.n_heads * m.head_dim) as f64;
+    OpCount {
+        flops: 2.0 * 2.0 * kf * bf * sf * hd * l,
+        // the KV cache is re-read every decode step: k · B · S · 2(kv) · h·dh
+        mops_bytes: l * (kf * bf * sf + kv_bytes * 2.0 * kf * bf * sf * hd),
+    }
+}
+
+/// FP16-cache decode attention (the paper's Table 1 baseline).
+pub fn decode_attention(m: &PaperModel, b: usize, s: usize, k: usize) -> OpCount {
+    decode_attention_kv(m, b, s, k, BYTES_FP16)
+}
+
+/// Aggregate = linear + attention (paper's "aggregate" column).
+pub fn prefill_aggregate(m: &PaperModel, b: usize, s: usize) -> OpCount {
+    prefill_linear(m, b, s).add(prefill_attention(m, b, s))
+}
+
+pub fn decode_aggregate(m: &PaperModel, b: usize, s: usize, k: usize) -> OpCount {
+    decode_linear(m, b, k).add(decode_attention(m, b, s, k))
+}
+
+/// Attention's share of modeled decode latency on `hw` (colors Fig. 2).
+pub fn decode_attention_fraction(
+    m: &PaperModel,
+    hw: &super::Hardware,
+    b: usize,
+    s: usize,
+) -> f64 {
+    let lin = hw.time_secs(&decode_linear(m, b, 1));
+    let attn = hw.time_secs(&decode_attention(m, b, s, 1));
+    attn / (lin + attn)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::Hardware;
+
+    fn model() -> PaperModel {
+        PaperModel::llama2_7b()
+    }
+
+    #[test]
+    fn prefill_intensity_scales_with_s() {
+        // Table 1: prefill aggregate intensity ~ O(S_L) for long context.
+        let m = model();
+        let a = prefill_aggregate(&m, 1, 4096).intensity();
+        let b = prefill_aggregate(&m, 1, 65536).intensity();
+        assert!(b > 4.0 * a, "prefill intensity should grow with S: {a} {b}");
+    }
+
+    #[test]
+    fn decode_intensity_flat_in_s_long_context() {
+        // Table 1: decode aggregate intensity ~ O(1) for S_L >> d.
+        let m = model();
+        let a = decode_aggregate(&m, 1, 1 << 17, 1).intensity();
+        let b = decode_aggregate(&m, 1, 1 << 19, 1).intensity();
+        assert!((a / b - 1.0).abs() < 0.3, "long-context decode ~flat: {a} {b}");
+    }
+
+    #[test]
+    fn decode_intensity_scales_with_b_short_context() {
+        // Table 1: decode aggregate intensity ~ O(B) for S_L << d.
+        let m = model();
+        let a = decode_aggregate(&m, 1, 128, 1).intensity();
+        let b = decode_aggregate(&m, 16, 128, 1).intensity();
+        assert!(b > 8.0 * a, "short-context decode ~O(B): {a} {b}");
+    }
+
+    #[test]
+    fn prefill_compute_bound_decode_memory_bound() {
+        // Fig 2 vs Fig 5: on the A6000 all decode regimes sit below the
+        // ridge point, prefill (long ctx) above it.
+        let m = model();
+        let hw = Hardware::a6000();
+        assert!(prefill_aggregate(&m, 1, 16384).intensity() > hw.ridge_point());
+        for &(b, s) in &[(1usize, 1024usize), (1, 1 << 17), (64, 1024), (16, 1 << 15)] {
+            let i = decode_aggregate(&m, b, s, 1).intensity();
+            assert!(i < hw.ridge_point(), "decode B={b} S={s} intensity {i}");
+        }
+    }
+
+    #[test]
+    fn quantized_kv_cuts_attention_bytes() {
+        let m = model();
+        let fp = decode_attention_kv(&m, 1, 1 << 16, 1, 2.0).mops_bytes;
+        let i4 = decode_attention_kv(&m, 1, 1 << 16, 1, 0.5).mops_bytes;
+        let ratio = fp / i4;
+        assert!((3.5..4.2).contains(&ratio), "INT4 ~4x fewer bytes: {ratio}");
+    }
+
+    #[test]
+    fn attention_dominates_long_context_decode() {
+        let m = model();
+        let hw = Hardware::a6000();
+        let frac_long = decode_attention_fraction(&m, &hw, 1, 1 << 17);
+        let frac_short = decode_attention_fraction(&m, &hw, 1, 256);
+        assert!(frac_long > 0.8, "{frac_long}");
+        assert!(frac_short < 0.2, "{frac_short}");
+    }
+}

@@ -1,0 +1,150 @@
+//! KV-cache and weight memory accounting (paper Fig. 6, Table 3 peak mem).
+//!
+//! Uses *logical* bit widths (INT4 = 0.5 byte) as on real hardware; the CPU
+//! testbed's host-resident byte counts (int8-held nibbles, f32-held "fp16")
+//! are reported separately by `cache::MemoryReport`.
+
+use super::PaperModel;
+use crate::config::Method;
+
+pub const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+/// FP16 KV-cache bytes at batch B, context S (Fig. 6 surface).
+pub fn kv_bytes_fp16(m: &PaperModel, b: usize, s: usize) -> f64 {
+    (b * s * m.kv_elems_per_token()) as f64 * 2.0
+}
+
+/// FP16 weight bytes.
+pub fn weight_bytes_fp16(m: &PaperModel) -> f64 {
+    m.params() as f64 * 2.0
+}
+
+/// Per-method total memory (weights + caches) for a decode session.
+///
+/// Mirrors the paper's Table 3 "Peak GPU Memory" structure:
+/// * AR: FP16 weights + FP16 KV.
+/// * QuantSpec: INT4 weights + hierarchical INT4+INT4 KV (= INT8 total,
+///   shared between draft and target — the paper's bit-sharing saving) +
+///   scales/zeros + the 2G FP16 residual buffer.
+/// * Sparse baselines: FP16 weights + full FP16 KV (target) + a separate
+///   FP16 draft cache of S/4 (the draft budget).
+pub fn method_bytes(
+    m: &PaperModel,
+    method: Method,
+    b: usize,
+    s: usize,
+    g: usize,
+) -> f64 {
+    let kv_fp = kv_bytes_fp16(m, b, s);
+    let w_fp = weight_bytes_fp16(m);
+    let elems = (b * s * m.kv_elems_per_token()) as f64;
+    match method {
+        Method::Autoregressive => w_fp + kv_fp,
+        Method::QuantSpec => {
+            // fp16 target weights stay resident; the INT4 draft set is extra.
+            let w_q4 = w_fp + m.params() as f64 * 0.5;
+            // upper + lower nibble = 1 byte per element.
+            let kv_q = elems * 1.0;
+            // scale + zero per group of g elements, fp16 each.
+            let meta = elems / g as f64 * 2.0 * 2.0;
+            // double FP buffer: 2G tokens at fp16.
+            let buf = (b * 2 * g * m.kv_elems_per_token()) as f64 * 2.0;
+            w_q4 + kv_q + meta + buf
+        }
+        Method::StreamingLlm | Method::SnapKv => {
+            let draft = kv_bytes_fp16(m, b, s / 4);
+            w_fp + kv_fp + draft
+        }
+    }
+}
+
+/// The Fig. 6 color channel: KV bytes as a multiple of weight bytes.
+pub fn kv_to_weight_ratio(m: &PaperModel, b: usize, s: usize) -> f64 {
+    kv_bytes_fp16(m, b, s) / weight_bytes_fp16(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6_anchor_point() {
+        // Paper Fig. 6: at (B=16, S=262k) the Llama-2-7B KV cache is ~160x
+        // the weight memory.
+        let m = PaperModel::llama2_7b();
+        let r = kv_to_weight_ratio(&m, 16, 262_144);
+        assert!((120.0..200.0).contains(&r), "ratio {r}");
+    }
+
+    #[test]
+    fn quantspec_smaller_than_sparse() {
+        // Table 3: QuantSpec uses ~1.3x less memory than the sparse
+        // baselines at long context.
+        let m = PaperModel::llama2_7b();
+        let qs = method_bytes(&m, Method::QuantSpec, 1, 131_072, 128);
+        let sp = method_bytes(&m, Method::StreamingLlm, 1, 131_072, 128);
+        let ratio = sp / qs;
+        assert!(ratio > 1.25, "sparse/quantspec memory ratio {ratio}");
+    }
+
+    #[test]
+    fn kv_dominates_at_long_context() {
+        let m = PaperModel::llama2_7b();
+        assert!(kv_bytes_fp16(&m, 1, 131_072) > weight_bytes_fp16(&m));
+    }
+
+    #[test]
+    fn a6000_oom_at_128k_for_sparse_two_gpus() {
+        // Table 3's 128k Multi-LexSum rows: baselines OOM on 2 A6000s
+        // (96 GB total), QuantSpec fits.
+        let m = PaperModel::llama2_7b();
+        let vram2 = 2.0 * 48.0 * GIB;
+        let sparse = method_bytes(&m, Method::SnapKv, 1, 131_072, 128);
+        let qs = method_bytes(&m, Method::QuantSpec, 1, 131_072, 128);
+        // LWM-Text-Chat-128k is Llama-7B-shaped; add activation slack ~25%.
+        assert!(sparse * 1.25 > vram2 * 0.55, "sparse near/over budget");
+        assert!(qs < sparse, "quantspec under sparse");
+    }
+}
+
+/// Minimum number of GPUs (each with `vram_bytes`) needed to hold a
+/// method's state plus an activation slack — the paper Table 3 "# GPUs"
+/// column (1 at ≤32k, 2 at 64k/128k, OOM for the sparse baselines at 128k
+/// on 2 GPUs).
+pub fn gpus_needed(
+    m: &PaperModel,
+    method: Method,
+    b: usize,
+    s: usize,
+    g: usize,
+    vram_bytes: f64,
+    max_gpus: usize,
+) -> Option<usize> {
+    let bytes = method_bytes(m, method, b, s, g) * 1.25; // activation slack
+    for n in 1..=max_gpus {
+        if bytes <= n as f64 * vram_bytes {
+            return Some(n);
+        }
+    }
+    None // OOM — the paper's "-" rows
+}
+
+#[cfg(test)]
+mod gpu_tests {
+    use super::*;
+
+    #[test]
+    fn table3_gpu_counts() {
+        // Paper Table 3 structure on A6000s (48 GB): 1 GPU at 32k,
+        // 2 GPUs at 64k, and at 128k the sparse baselines OOM on 2 GPUs
+        // while QuantSpec fits.
+        let m = PaperModel::llama2_7b();
+        let vram = 48e9;
+        let gpus = |method, s| gpus_needed(&m, method, 1, s, 128, vram, 2);
+        assert_eq!(gpus(Method::QuantSpec, 32_768), Some(1));
+        assert_eq!(gpus(Method::SnapKv, 65_536), Some(2));
+        assert_eq!(gpus(Method::SnapKv, 131_072), None, "sparse OOMs at 128k");
+        assert_eq!(gpus(Method::StreamingLlm, 131_072), None);
+        assert_eq!(gpus(Method::QuantSpec, 131_072), Some(2), "QuantSpec fits");
+    }
+}

@@ -1,0 +1,59 @@
+//! Analytical GPU cost model (paper §3): arithmetic intensity, roofline
+//! classification, latency and memory projection.
+//!
+//! The paper's speedups are a memory-bandwidth story — decoding is
+//! memory-bound in every regime (Fig. 2), so step latency ≈ bytes-moved /
+//! bandwidth. We reproduce the paper's own analysis tooling here:
+//!
+//! * `intensity` — the Table 1 FLOPs/MOPs formulas (prefill & decode,
+//!   linear / attention / aggregate) and the Fig. 2 / Fig. 5 surfaces.
+//! * `roofline` — hardware descriptions (A6000 as in the paper) and the
+//!   ridge-point classification.
+//! * `memory`   — KV-cache memory accounting (Fig. 6, Table 3 peak-memory)
+//!   for FP16 / hierarchical-INT4 / sparse-draft layouts.
+//! * `latency`  — per-step byte/FLOP tallies for each method, combined with
+//!   *measured* acceptance rates to project end-to-end speedups on the
+//!   paper's A6000 testbed from runs on this CPU testbed (DESIGN.md §4).
+
+pub mod intensity;
+pub mod latency;
+pub mod memory;
+pub mod roofline;
+
+pub use roofline::{Hardware, Regime};
+
+/// Llama-2-7B-like shape used for the paper-scale analysis figures.
+#[derive(Debug, Clone, Copy)]
+pub struct PaperModel {
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+}
+
+impl PaperModel {
+    pub fn llama2_7b() -> Self {
+        PaperModel {
+            n_layers: 32,
+            d_model: 4096,
+            n_heads: 32,
+            head_dim: 128,
+            d_ff: 11008,
+            vocab: 32000,
+        }
+    }
+
+    /// Total parameter count (weights only).
+    pub fn params(&self) -> usize {
+        let attn = 4 * self.d_model * self.d_model;
+        let mlp = 3 * self.d_model * self.d_ff;
+        self.n_layers * (attn + mlp) + 2 * self.vocab * self.d_model
+    }
+
+    /// KV cache elements per token (both K and V, all layers).
+    pub fn kv_elems_per_token(&self) -> usize {
+        2 * self.n_layers * self.n_heads * self.head_dim
+    }
+}

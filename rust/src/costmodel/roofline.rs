@@ -1,0 +1,99 @@
+//! Roofline hardware model (Williams et al., paper §3.1.2).
+
+use super::intensity::OpCount;
+
+/// Hardware description: peak compute + memory bandwidth.
+#[derive(Debug, Clone, Copy)]
+pub struct Hardware {
+    pub name: &'static str,
+    /// Peak half-precision tensor throughput, FLOP/s.
+    pub peak_flops: f64,
+    /// DRAM bandwidth, bytes/s.
+    pub mem_bw: f64,
+    /// DRAM capacity, bytes (Fig. 6 VRAM lines).
+    pub vram_bytes: f64,
+}
+
+impl Hardware {
+    /// NVIDIA RTX A6000 — the paper's testbed (§5.1).
+    pub fn a6000() -> Hardware {
+        Hardware {
+            name: "A6000",
+            peak_flops: 154.8e12, // FP16 tensor core
+            mem_bw: 768e9,        // GDDR6
+            vram_bytes: 48e9,
+        }
+    }
+
+    pub fn a100_80g() -> Hardware {
+        Hardware { name: "A100-80G", peak_flops: 312e12, mem_bw: 2039e9, vram_bytes: 80e9 }
+    }
+
+    pub fn h100_sxm() -> Hardware {
+        Hardware { name: "H100", peak_flops: 989e12, mem_bw: 3350e9, vram_bytes: 80e9 }
+    }
+
+    pub fn rtx_4090() -> Hardware {
+        Hardware { name: "RTX4090", peak_flops: 330e12, mem_bw: 1008e9, vram_bytes: 24e9 }
+    }
+
+    /// Ridge point (FLOPs/byte): intensity below ⇒ memory-bound.
+    pub fn ridge_point(&self) -> f64 {
+        self.peak_flops / self.mem_bw
+    }
+
+    pub fn classify(&self, ops: &OpCount) -> Regime {
+        if ops.intensity() < self.ridge_point() {
+            Regime::MemoryBound
+        } else {
+            Regime::ComputeBound
+        }
+    }
+
+    /// Roofline execution-time estimate: max of compute and memory time.
+    pub fn time_secs(&self, ops: &OpCount) -> f64 {
+        let t_compute = ops.flops / self.peak_flops;
+        let t_memory = ops.mops_bytes / self.mem_bw;
+        t_compute.max(t_memory)
+    }
+
+    /// Attainable FLOP/s at a given intensity (the roofline curve).
+    pub fn attainable_flops(&self, intensity: f64) -> f64 {
+        (intensity * self.mem_bw).min(self.peak_flops)
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Regime {
+    MemoryBound,
+    ComputeBound,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a6000_ridge_point_plausible() {
+        // 154.8 TFLOP/s ÷ 768 GB/s ≈ 201 FLOPs/byte.
+        let r = Hardware::a6000().ridge_point();
+        assert!((150.0..260.0).contains(&r), "{r}");
+    }
+
+    #[test]
+    fn classify_and_time() {
+        let hw = Hardware::a6000();
+        let mem = OpCount { flops: 1e9, mops_bytes: 1e9 }; // intensity 1
+        assert_eq!(hw.classify(&mem), Regime::MemoryBound);
+        assert!((hw.time_secs(&mem) - 1e9 / 768e9).abs() < 1e-12);
+        let comp = OpCount { flops: 1e12, mops_bytes: 1e6 };
+        assert_eq!(hw.classify(&comp), Regime::ComputeBound);
+    }
+
+    #[test]
+    fn roofline_curve_saturates() {
+        let hw = Hardware::a6000();
+        assert!(hw.attainable_flops(1.0) < hw.peak_flops);
+        assert_eq!(hw.attainable_flops(1e6), hw.peak_flops);
+    }
+}

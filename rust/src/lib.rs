@@ -1,0 +1,32 @@
+//! QuantSpec: self-speculative decoding with a hierarchical quantized KV cache.
+//!
+//! Reproduction of "QuantSpec: Self-Speculative Decoding with Hierarchical
+//! Quantized KV Cache" (ICML 2025). Three-layer architecture:
+//!
+//! * **Layer 1** — Pallas kernels (build-time Python, `python/compile/kernels/`):
+//!   hierarchical INT4/INT8 quantization and quantized-KV attention.
+//! * **Layer 2** — JAX model (build-time Python, `python/compile/model.py`):
+//!   a Llama-style transformer whose attention calls the L1 kernels; lowered
+//!   AOT to HLO text artifacts.
+//! * **Layer 3** — this crate: the serving coordinator. Request router,
+//!   continuous batcher, speculative-decoding engine, hierarchical KV-cache
+//!   manager with the paper's double full-precision buffer, sparse-KV
+//!   baselines (StreamingLLM / SnapKV), and an analytical GPU cost model
+//!   used to project the paper's A6000 numbers from this CPU testbed.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the model
+//! once, and the binary is self-contained afterwards.
+
+pub mod util;
+pub mod config;
+pub mod costmodel;
+pub mod quant;
+pub mod cache;
+pub mod runtime;
+pub mod model;
+pub mod spec;
+pub mod baselines;
+pub mod coordinator;
+pub mod metrics;
+pub mod workload;
+pub mod bench;

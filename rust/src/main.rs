@@ -1,0 +1,211 @@
+//! quantspec — leader binary.
+//!
+//! Subcommands:
+//!   serve    start the HTTP coordinator over the AOT artifacts
+//!   run      one-shot generation from the CLI
+//!   info     print manifest + cost-model summary
+//!   warmup   compile all artifacts for the chosen buckets
+//!
+//! Benchmarks regenerating the paper's tables/figures live in `benches/`
+//! (cargo bench); runnable scenarios in `examples/`.
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+use quantspec::config::{Method, QuantMode, ServeConfig};
+use quantspec::coordinator::{server, Coordinator, RequestSpec};
+use quantspec::costmodel::{self, Hardware, PaperModel};
+use quantspec::runtime::Runtime;
+use quantspec::util::argparse::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn config_from_args(args: &Args) -> Result<ServeConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ServeConfig::from_file(path)?,
+        None => ServeConfig::default(),
+    };
+    if let Some(d) = args.get("artifacts") {
+        cfg.artifacts_dir = d.to_string();
+    }
+    if let Some(m) = args.get("method") {
+        cfg.method = Method::parse(m)?;
+    }
+    if let Some(q) = args.get("quant-mode") {
+        cfg.quant_mode = QuantMode::parse(q)?;
+    }
+    cfg.gamma = args.get_usize("gamma", cfg.gamma);
+    cfg.max_new_tokens = args.get_usize("max-new-tokens", cfg.max_new_tokens);
+    cfg.engines = args.get_usize("engines", cfg.engines);
+    cfg.sampling.temperature = args.get_f64("temperature", cfg.sampling.temperature as f64) as f32;
+    cfg.sampling.seed = args.get_usize("seed", cfg.sampling.seed as usize) as u64;
+    if let Some(b) = args.get("bind") {
+        cfg.bind = b.to_string();
+    }
+    if let Some(bl) = args.get_list("buckets") {
+        cfg.buckets = bl;
+    }
+    Ok(cfg)
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_str() {
+        "serve" => serve_cmd(args),
+        "run" => run_cmd(args),
+        "info" => info_cmd(args),
+        "warmup" => warmup_cmd(args),
+        "" | "help" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            anyhow::bail!("unknown subcommand '{other}'")
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "quantspec — self-speculative decoding with hierarchical quantized KV cache
+
+USAGE: quantspec <serve|run|info|warmup> [options]
+
+OPTIONS (shared):
+  --artifacts DIR      artifact directory (default: artifacts)
+  --method M           ar | quantspec | streamingllm | snapkv
+  --quant-mode Q       both | kv-only | weight-only   (Fig. 4 ablations)
+  --gamma N            speculation length (default 4)
+  --max-new-tokens N   generation budget (default 90, as in the paper)
+  --temperature T      0 = greedy
+  --engines N          decode engines (serve)
+  --bind ADDR          HTTP bind (serve; default 127.0.0.1:8311)
+  --mock               use the mock backend (no artifacts needed)
+
+run-only:
+  --prompt TEXT | --prompt-len N --profile pg19|lexsum|infbench --seed S"
+    );
+}
+
+fn serve_cmd(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    let bind = cfg.bind.clone();
+    let coord = if args.has_flag("mock") {
+        Arc::new(Coordinator::with_mock(cfg, 0.1)?)
+    } else {
+        let rt = Runtime::load(&cfg.artifacts_dir)?;
+        let buckets = if cfg.buckets.is_empty() {
+            rt.manifest.buckets.clone()
+        } else {
+            cfg.buckets.clone()
+        };
+        eprintln!("compiling artifacts for buckets {buckets:?}...");
+        rt.warmup(&buckets)?;
+        Arc::new(Coordinator::with_runtime(cfg, rt)?)
+    };
+    let srv = server::serve(Arc::clone(&coord), &bind)
+        .with_context(|| format!("binding {bind}"))?;
+    println!("quantspec serving on http://{}", srv.addr);
+    println!("  POST /generate   GET /stats   GET /healthz");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn run_cmd(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    let prompt: Vec<i32> = if let Some(text) = args.get("prompt") {
+        text.bytes().map(|b| b as i32).collect()
+    } else {
+        let len = args.get_usize("prompt-len", 512);
+        let profile = match args.get_or("profile", "pg19") {
+            "lexsum" => quantspec::workload::Profile::LexSum,
+            "infbench" => quantspec::workload::Profile::InfBench,
+            _ => quantspec::workload::Profile::Pg19,
+        };
+        quantspec::workload::prompt(cfg.sampling.seed, len, profile)
+    };
+    let coord = if args.has_flag("mock") {
+        Coordinator::with_mock(cfg.clone(), 0.1)?
+    } else {
+        let rt = Runtime::load(&cfg.artifacts_dir)?;
+        Coordinator::with_runtime(cfg.clone(), rt)?
+    };
+    let out = coord.generate(RequestSpec {
+        id: 1,
+        prompt,
+        max_new_tokens: cfg.max_new_tokens,
+        method: None,
+        gamma: None,
+    })?;
+    let text: String = out
+        .tokens
+        .iter()
+        .map(|&t| {
+            let b = (t as u32).min(255) as u8;
+            if b.is_ascii_graphic() || b == b' ' || b == b'\n' {
+                b as char
+            } else {
+                '\u{fffd}'
+            }
+        })
+        .collect();
+    println!("--- generated ({} tokens, bucket {}) ---", out.tokens.len(), out.bucket);
+    println!("{text}");
+    println!("--- stats ---");
+    println!("method            : {}", cfg.method.name());
+    println!("acceptance rate   : {:.2}%", out.acceptance_rate * 100.0);
+    println!("prefill           : {:.3}s", out.prefill_secs);
+    println!("decode            : {:.3}s ({:.2} tok/s)", out.decode_secs, out.decode_tokens_per_sec);
+    Ok(())
+}
+
+fn info_cmd(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    let rt = Runtime::load(&cfg.artifacts_dir)?;
+    let m = &rt.manifest.model;
+    println!("model: vocab={} d={} heads={} head_dim={} layers={} ffn={}",
+             m.vocab, m.d_model, m.n_heads, m.head_dim, m.n_layers, m.d_ff);
+    println!("quant: G={} tmax={} FB={}", m.g, m.tmax, m.fb);
+    println!("buckets: {:?} (score bucket {})", rt.manifest.buckets, rt.manifest.score_bucket);
+    println!("entries: {}", rt.manifest.entries.len());
+    let pm = PaperModel::llama2_7b();
+    let hw = Hardware::a6000();
+    println!("\ncost model (Llama-2-7B on A6000, the paper's testbed):");
+    println!("  ridge point: {:.0} FLOPs/byte", hw.ridge_point());
+    for s in [4096usize, 32768, 131_072] {
+        let sp = costmodel::latency::projected_speedup(
+            &pm, &hw, Method::QuantSpec, QuantMode::Both, 1, s, 4, 0.92,
+        );
+        println!("  projected QuantSpec speedup @S={s}: {sp:.2}x (α=0.92, γ=4)");
+    }
+    Ok(())
+}
+
+fn warmup_cmd(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    let rt = Runtime::load(&cfg.artifacts_dir)?;
+    let buckets = if cfg.buckets.is_empty() {
+        rt.manifest.buckets.clone()
+    } else {
+        cfg.buckets
+    };
+    let t0 = std::time::Instant::now();
+    rt.warmup(&buckets)?;
+    println!(
+        "compiled {} entries for buckets {buckets:?} in {:.1}s",
+        rt.compile_secs.lock().unwrap().len(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}

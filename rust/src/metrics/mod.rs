@@ -1,0 +1,199 @@
+//! Serving metrics: counters, gauges, and streaming latency histograms.
+//!
+//! Log-bucketed histograms (HdrHistogram-style, base-1.25 geometric buckets
+//! from 1µs to ~2000s) give p50/p95/p99 without storing samples. A global
+//! registry snapshot backs the coordinator's `/stats` endpoint.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+
+const BUCKETS: usize = 96;
+const MIN_US: f64 = 1.0;
+const GROWTH: f64 = 1.25;
+
+/// Lock-free latency histogram with geometric buckets.
+pub struct Histogram {
+    counts: Vec<AtomicU64>,
+    sum_us: AtomicU64,
+    n: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            counts: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sum_us: AtomicU64::new(0),
+            n: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket(us: f64) -> usize {
+        if us <= MIN_US {
+            return 0;
+        }
+        let idx = (us / MIN_US).log(GROWTH).floor() as usize;
+        idx.min(BUCKETS - 1)
+    }
+
+    pub fn record_secs(&self, secs: f64) {
+        self.record_us(secs * 1e6);
+    }
+
+    pub fn record_us(&self, us: f64) {
+        let us = us.max(0.0);
+        self.counts[Self::bucket(us)].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us as u64, Ordering::Relaxed);
+        self.n.fetch_add(1, Ordering::Relaxed);
+        self.max_us.fetch_max(us as u64, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    /// Approximate quantile (upper bucket edge), q in [0,1].
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let target = ((n as f64) * q).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c.load(Ordering::Relaxed);
+            if seen >= target {
+                return MIN_US * GROWTH.powi(i as i32 + 1);
+            }
+        }
+        self.max_us.load(Ordering::Relaxed) as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count() as f64)),
+            ("mean_us", Json::num(self.mean_us())),
+            ("p50_us", Json::num(self.quantile_us(0.50))),
+            ("p95_us", Json::num(self.quantile_us(0.95))),
+            ("p99_us", Json::num(self.quantile_us(0.99))),
+            ("max_us", Json::num(self.max_us.load(Ordering::Relaxed) as f64)),
+        ])
+    }
+}
+
+/// Named counters + histograms for one engine / the whole coordinator.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, u64>>,
+    histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn incr(&self, name: &str, by: u64) {
+        *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        *self.counters.lock().unwrap().get(name).unwrap_or(&0)
+    }
+
+    pub fn histogram(&self, name: &str) -> std::sync::Arc<Histogram> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| std::sync::Arc::new(Histogram::new()))
+            .clone()
+    }
+
+    pub fn snapshot(&self) -> Json {
+        let counters = self.counters.lock().unwrap();
+        let hists = self.histograms.lock().unwrap();
+        Json::obj(vec![
+            (
+                "counters",
+                Json::Obj(
+                    counters
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+                        .collect(),
+                ),
+            ),
+            (
+                "latency",
+                Json::Obj(hists.iter().map(|(k, h)| (k.clone(), h.to_json())).collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let h = Histogram::new();
+        for i in 1..=1000 {
+            h.record_us(i as f64);
+        }
+        let p50 = h.quantile_us(0.5);
+        let p95 = h.quantile_us(0.95);
+        let p99 = h.quantile_us(0.99);
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        // Geometric buckets: p50 within a bucket width of 500µs.
+        assert!((300.0..900.0).contains(&p50), "{p50}");
+        assert_eq!(h.count(), 1000);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile_us(0.99), 0.0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn registry_counters() {
+        let r = Registry::new();
+        r.incr("tokens", 5);
+        r.incr("tokens", 3);
+        assert_eq!(r.counter("tokens"), 8);
+        r.histogram("step").record_us(100.0);
+        let snap = r.snapshot().to_string();
+        assert!(snap.contains("tokens"));
+        assert!(snap.contains("step"));
+    }
+
+    #[test]
+    fn extreme_values_clamped() {
+        let h = Histogram::new();
+        h.record_us(0.0);
+        h.record_us(1e12);
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile_us(1.0) > 0.0);
+    }
+}

@@ -1,0 +1,251 @@
+//! Model backends for the speculative engine.
+//!
+//! `Decoder` is the contract between the L3 engine and the model: sessions
+//! own the KV state; the engine owns tokens and sampling. Two backends:
+//! `XlaSession` (the real artifacts, `xla_session.rs`) and `MockDecoder`
+//! (a deterministic toy LM with a controllable draft-error rate) so the
+//! coordinator, engine, and property tests run without artifacts.
+
+pub mod xla_session;
+
+use anyhow::Result;
+
+use crate::cache::MemoryReport;
+use crate::config::Method;
+
+/// Cumulative phase timings for one session (seconds).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PhaseTimings {
+    pub prefill: f64,
+    pub draft: f64,
+    pub verify: f64,
+    pub flush: f64,
+    /// Host<->device transfer share of the above (perf-pass metric).
+    pub transfer: f64,
+    pub draft_steps: u64,
+    pub verify_calls: u64,
+    pub flush_calls: u64,
+}
+
+/// A decoding session bound to one request's KV state.
+pub trait Decoder: Send {
+    fn vocab(&self) -> usize;
+    fn gamma_max(&self) -> usize;
+    fn method(&self) -> Method;
+
+    /// Process the prompt, build caches; returns next-token logits.
+    fn prefill(&mut self, tokens: &[i32]) -> Result<Vec<f32>>;
+
+    /// Mark the start of a speculation cycle (records the buffer base the
+    /// verify step will rewrite — the paper's O(1) rollback point).
+    fn begin_cycle(&mut self);
+
+    /// One draft-model step; appends the fed token's (draft) KV.
+    fn draft_step(&mut self, token: i32) -> Result<Vec<f32>>;
+
+    /// Target pass over `[feed, g_1..g_k]`; returns one logits row per
+    /// token; rewrites those slots with target KV (Alg. 1 TARGET).
+    fn verify(&mut self, tokens: &[i32]) -> Result<Vec<Vec<f32>>>;
+
+    /// Commit `accepted` drafts (+1 for the feed token); `verify_len` =
+    /// tokens passed to verify. Flushes the FP buffer when it fills.
+    fn commit(&mut self, accepted: usize, verify_len: usize) -> Result<()>;
+
+    /// One autoregressive target step (the AR baseline / fallback).
+    fn ar_step(&mut self, token: i32) -> Result<Vec<f32>>;
+
+    fn context_len(&self) -> usize;
+    fn memory(&self) -> MemoryReport;
+    fn timings(&self) -> PhaseTimings;
+}
+
+// ---------------------------------------------------------------------
+// Mock backend
+// ---------------------------------------------------------------------
+
+/// Deterministic toy LM. The "target" distribution is a peaked function of
+/// a rolling hash of the recent context; the "draft" sees the same
+/// distribution except that with probability `draft_err` (hash-derived, so
+/// reproducible) its argmax is swapped — emulating quantization error and
+/// giving a controllable acceptance rate.
+pub struct MockDecoder {
+    vocab: usize,
+    gamma_max: usize,
+    committed: Vec<i32>,
+    draft_tail: Vec<i32>,
+    last_verify: Vec<i32>,
+    pub draft_err: f64,
+    method: Method,
+}
+
+impl MockDecoder {
+    pub fn new(vocab: usize, gamma_max: usize, draft_err: f64) -> MockDecoder {
+        MockDecoder {
+            vocab,
+            gamma_max,
+            committed: Vec::new(),
+            draft_tail: Vec::new(),
+            last_verify: Vec::new(),
+            draft_err,
+            method: Method::QuantSpec,
+        }
+    }
+
+    /// Override the reported method (tests drive AR vs speculative paths).
+    pub fn force_method(&mut self, m: Method) {
+        self.method = m;
+    }
+
+    fn ctx_hash(ctx: &[i32]) -> u64 {
+        // FNV-1a over the last 8 tokens (enough context sensitivity).
+        let mut h: u64 = 0xcbf29ce484222325;
+        for &t in ctx.iter().rev().take(8) {
+            h ^= t as u64 as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h ^= ctx.len() as u64;
+        h.wrapping_mul(0x100000001b3)
+    }
+
+    fn logits_for(&self, ctx: &[i32], draft: bool) -> Vec<f32> {
+        let h = Self::ctx_hash(ctx);
+        let top = (h % self.vocab as u64) as usize;
+        let second = ((h >> 17) % self.vocab as u64) as usize;
+        let mut logits = vec![0.0f32; self.vocab];
+        for (i, l) in logits.iter_mut().enumerate() {
+            // small deterministic texture so temperature sampling works
+            *l = (((h >> (i % 23)) & 0xff) as f32) / 256.0;
+        }
+        logits[top] += 6.0;
+        if second != top {
+            logits[second] += 3.0;
+        }
+        if draft {
+            // hash-coin: flip the argmax with probability draft_err
+            let coin = ((h >> 33) & 0xffff) as f64 / 65536.0;
+            if coin < self.draft_err {
+                logits[top] -= 7.0; // demote; `second` (or texture) wins
+            }
+        }
+        logits
+    }
+
+    fn full_ctx(&self) -> Vec<i32> {
+        let mut c = self.committed.clone();
+        c.extend(&self.draft_tail);
+        c
+    }
+}
+
+impl Decoder for MockDecoder {
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn gamma_max(&self) -> usize {
+        self.gamma_max
+    }
+
+    fn method(&self) -> Method {
+        self.method
+    }
+
+    fn prefill(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        self.committed = tokens.to_vec();
+        self.draft_tail.clear();
+        Ok(self.logits_for(&self.committed, false))
+    }
+
+    fn begin_cycle(&mut self) {
+        self.draft_tail.clear();
+    }
+
+    fn draft_step(&mut self, token: i32) -> Result<Vec<f32>> {
+        self.draft_tail.push(token);
+        let ctx = self.full_ctx();
+        Ok(self.logits_for(&ctx, true))
+    }
+
+    fn verify(&mut self, tokens: &[i32]) -> Result<Vec<Vec<f32>>> {
+        self.last_verify = tokens.to_vec();
+        let mut ctx = self.committed.clone();
+        let mut rows = Vec::with_capacity(tokens.len());
+        for &t in tokens {
+            ctx.push(t);
+            rows.push(self.logits_for(&ctx, false));
+        }
+        Ok(rows)
+    }
+
+    fn commit(&mut self, accepted: usize, verify_len: usize) -> Result<()> {
+        anyhow::ensure!(accepted + 1 <= verify_len, "bad commit");
+        self.committed
+            .extend(self.last_verify.iter().take(accepted + 1));
+        self.draft_tail.clear();
+        Ok(())
+    }
+
+    fn ar_step(&mut self, token: i32) -> Result<Vec<f32>> {
+        self.committed.push(token);
+        Ok(self.logits_for(&self.committed, false))
+    }
+
+    fn context_len(&self) -> usize {
+        self.committed.len()
+    }
+
+    fn memory(&self) -> MemoryReport {
+        MemoryReport::default()
+    }
+
+    fn timings(&self) -> PhaseTimings {
+        PhaseTimings::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_is_deterministic() {
+        let mut a = MockDecoder::new(64, 7, 0.0);
+        let mut b = MockDecoder::new(64, 7, 0.0);
+        let prompt = vec![1, 2, 3];
+        assert_eq!(a.prefill(&prompt).unwrap(), b.prefill(&prompt).unwrap());
+        assert_eq!(a.draft_step(9).unwrap(), b.draft_step(9).unwrap());
+    }
+
+    #[test]
+    fn zero_error_draft_matches_target() {
+        let mut m = MockDecoder::new(64, 7, 0.0);
+        m.prefill(&[5, 6, 7]).unwrap();
+        m.begin_cycle();
+        let d = m.draft_step(8).unwrap();
+        let v = m.verify(&[8]).unwrap();
+        let am = |v: &[f32]| {
+            v.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0
+        };
+        assert_eq!(am(&d), am(&v[0]));
+    }
+
+    #[test]
+    fn high_error_draft_diverges_sometimes() {
+        let mut m = MockDecoder::new(64, 7, 0.9);
+        m.prefill(&[1]).unwrap();
+        let mut diverged = 0;
+        for t in 0..50 {
+            m.begin_cycle();
+            let d = m.draft_step(t).unwrap();
+            let v = m.verify(&[t]).unwrap();
+            let am = |v: &[f32]| {
+                v.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0
+            };
+            if am(&d) != am(&v[0]) {
+                diverged += 1;
+            }
+            m.commit(0, 1).unwrap();
+        }
+        assert!(diverged > 20, "{diverged}");
+    }
+}

@@ -1,0 +1,556 @@
+//! The real model backend: one decoding session over the AOT artifacts.
+//!
+//! Owns the paper's cache state for one request:
+//! * QuantSpec: 8 hierarchical-cache device tensors (upper/lower nibbles +
+//!   INT8 scales/zeros for K and V) + the double FP buffer;
+//! * AR / weight-only ablation: a dense FP region;
+//! * sparse baselines: dense FP region (target side) + a budget-size
+//!   gathered draft region (StreamingLLM sinks+window / SnapKV selection).
+//!
+//! All state mutation happens by calling the lowered entries and swapping
+//! the returned tensors in; rollback is counter math (see cache::CacheTracker).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::{Decoder, PhaseTimings};
+use crate::cache::{CacheTracker, MemoryReport};
+use crate::config::{Method, QuantMode};
+use crate::runtime::{Arg, DeviceTensor, HostTensor, Runtime, Weights};
+
+/// Attention-sink prefix kept by the StreamingLLM draft (tokens). One
+/// quantization block: the paper's baselines use 4 sink tokens + window;
+/// block granularity is what our flush entry supports.
+const SINK_TOKENS: usize = 64;
+
+pub struct XlaSession {
+    rt: Arc<Runtime>,
+    method: Method,
+    quant_mode: QuantMode,
+    w_target: Arc<Weights>,
+    w_draft: Arc<Weights>,
+    bucket: usize,
+    tracker: CacheTracker,
+    /// ku, kl, ks, kz, vu, vl, vs, vz (QuantSpec Both / KvOnly).
+    qcache: Option<Vec<DeviceTensor>>,
+    /// Dense FP region (AR, sparse-baseline target, weight-only ablation).
+    dense: Option<(DeviceTensor, DeviceTensor)>,
+    /// Sparse draft region + fill + protected prefix.
+    sparse: Option<SparseDraft>,
+    fk: HostTensor,
+    fv: HostTensor,
+    timings: PhaseTimings,
+}
+
+struct SparseDraft {
+    kr: DeviceTensor,
+    vr: DeviceTensor,
+    n_s: usize,
+    protected: usize,
+    budget: usize,
+}
+
+impl XlaSession {
+    /// `bucket` must be one of the manifest buckets; the prompt passed to
+    /// `prefill` must be exactly `bucket` tokens (the router pads).
+    pub fn new(
+        rt: Arc<Runtime>,
+        method: Method,
+        quant_mode: QuantMode,
+        bucket: usize,
+        w_target: Arc<Weights>,
+        w_draft: Arc<Weights>,
+    ) -> Result<XlaSession> {
+        let m = &rt.manifest.model;
+        anyhow::ensure!(
+            rt.manifest.buckets.contains(&bucket),
+            "bucket {bucket} not built (have {:?})",
+            rt.manifest.buckets
+        );
+        let (cap, _nb) = caps(bucket, m.g);
+        let tracker = CacheTracker::after_prefill(bucket, m.g, m.fb, cap);
+        let fb_shape = vec![m.n_layers, m.n_heads, m.fb, m.head_dim];
+        Ok(XlaSession {
+            rt,
+            method,
+            quant_mode,
+            w_target,
+            w_draft,
+            bucket,
+            tracker,
+            qcache: None,
+            dense: None,
+            sparse: None,
+            fk: HostTensor::zeros(crate::runtime::DType::F32, fb_shape.clone()),
+            fv: HostTensor::zeros(crate::runtime::DType::F32, fb_shape),
+            timings: PhaseTimings::default(),
+        })
+    }
+
+    fn uses_quant_cache(&self) -> bool {
+        self.method == Method::QuantSpec && self.quant_mode != QuantMode::WeightOnly
+    }
+
+    fn uses_dense_region(&self) -> bool {
+        !self.uses_quant_cache()
+    }
+
+    fn entry(&self, kind: &str) -> String {
+        format!("{kind}_{}", self.bucket)
+    }
+
+    /// Decode-entry scalar args (pos, n_q, n_f) for the current state.
+    fn scalars(&self, n_f: usize, region_n: usize) -> [HostTensor; 3] {
+        [
+            HostTensor::scalar_i32(self.tracker.context_len() as i32),
+            HostTensor::scalar_i32(region_n as i32),
+            HostTensor::scalar_i32(n_f as i32),
+        ]
+    }
+
+    fn take_buffers(&mut self, mut outs: Vec<HostTensor>) -> Vec<HostTensor> {
+        // decode entries return (logits, fk, fv)
+        self.fv = outs.pop().expect("fv");
+        self.fk = outs.pop().expect("fk");
+        outs
+    }
+
+    /// Run the flush entries when the double buffer fills (Alg. 1 22-25).
+    fn flush(&mut self) -> Result<()> {
+        let t0 = Instant::now();
+        let n_q = HostTensor::scalar_i32(self.tracker.n_q as i32);
+        if self.uses_quant_cache() {
+            let exe = self.rt.executor(&self.entry("flush"))?;
+            let qc = self.qcache.as_ref().context("no quant cache")?;
+            let mut args: Vec<Arg<'_>> = qc.iter().map(Arg::Device).collect();
+            args.push(Arg::Host(&self.fk));
+            args.push(Arg::Host(&self.fv));
+            args.push(Arg::Host(&n_q));
+            let (mut outs, _) = exe.call(self.rt.client(), &args)?;
+            let fv = outs.pop().unwrap();
+            let fk = outs.pop().unwrap();
+            let new_cache = outs
+                .into_iter()
+                .map(|t| self.rt.upload(&t))
+                .collect::<Result<Vec<_>>>()?;
+            self.qcache = Some(new_cache);
+            self.fk = fk;
+            self.fv = fv;
+        } else {
+            // dense target region flush
+            let exe = self.rt.executor(&self.entry("ar_flush"))?;
+            let (kr, vr) = self.dense.as_ref().context("no dense region")?;
+            let args = vec![
+                Arg::Device(kr),
+                Arg::Device(vr),
+                Arg::Host(&self.fk),
+                Arg::Host(&self.fv),
+                Arg::Host(&n_q),
+            ];
+            let (mut outs, _) = exe.call(self.rt.client(), &args)?;
+            let fv = outs.pop().unwrap();
+            let fk = outs.pop().unwrap();
+            let vr2 = self.rt.upload(&outs.pop().unwrap())?;
+            let kr2 = self.rt.upload(&outs.pop().unwrap())?;
+            self.dense = Some((kr2, vr2));
+            // sparse draft region keeps its own copy of the flushed block
+            if let Some(sp) = self.sparse.take() {
+                let exe = self.rt.executor(&self.entry("sparse_flush"))?;
+                let n_s = HostTensor::scalar_i32(sp.n_s as i32);
+                let p = HostTensor::scalar_i32(sp.protected as i32);
+                let args = vec![
+                    Arg::Device(&sp.kr),
+                    Arg::Device(&sp.vr),
+                    Arg::Host(&self.fk),
+                    Arg::Host(&self.fv),
+                    Arg::Host(&n_s),
+                    Arg::Host(&p),
+                ];
+                let (mut souts, _) = exe.call(self.rt.client(), &args)?;
+                let _fv = souts.pop();
+                let _fk = souts.pop();
+                let vr2 = self.rt.upload(&souts.pop().unwrap())?;
+                let kr2 = self.rt.upload(&souts.pop().unwrap())?;
+                self.sparse = Some(SparseDraft {
+                    kr: kr2,
+                    vr: vr2,
+                    n_s: (sp.n_s + self.tracker.g).min(sp.budget),
+                    protected: sp.protected,
+                    budget: sp.budget,
+                });
+            }
+            self.fk = fk;
+            self.fv = fv;
+        }
+        self.tracker.flush()?;
+        self.timings.flush += t0.elapsed().as_secs_f64();
+        self.timings.flush_calls += 1;
+        Ok(())
+    }
+
+    /// Gather tokens (by index) from the full prefill KV into a region of
+    /// `budget` capacity. `kfull` is [L,H,S,dh] host.
+    fn gather_region(
+        &self,
+        kfull: &HostTensor,
+        vfull: &HostTensor,
+        idx: &[usize],
+        budget: usize,
+    ) -> Result<(DeviceTensor, DeviceTensor)> {
+        let (l, h, s, dh) = dims4(kfull)?;
+        anyhow::ensure!(idx.len() <= budget, "selection exceeds budget");
+        let gather = |src: &HostTensor| -> Result<DeviceTensor> {
+            let data = src.as_f32()?;
+            let mut out = vec![0.0f32; l * h * budget * dh];
+            for li in 0..l {
+                for hi in 0..h {
+                    let src_base = (li * h + hi) * s * dh;
+                    let dst_base = (li * h + hi) * budget * dh;
+                    for (j, &tok) in idx.iter().enumerate() {
+                        let so = src_base + tok * dh;
+                        let dc = dst_base + j * dh;
+                        out[dc..dc + dh].copy_from_slice(&data[so..so + dh]);
+                    }
+                }
+            }
+            let t = HostTensor::f32(vec![l, h, budget, dh], out)?;
+            self.rt.upload(&t)
+        };
+        Ok((gather(kfull)?, gather(vfull)?))
+    }
+
+    /// Pad the first `keep` prefill tokens into the dense region capacity.
+    fn dense_region_from_full(
+        &self,
+        kfull: &HostTensor,
+        vfull: &HostTensor,
+        keep: usize,
+    ) -> Result<(DeviceTensor, DeviceTensor)> {
+        let (l, h, s, dh) = dims4(kfull)?;
+        let (cap, _) = caps(self.bucket, self.rt.manifest.model.g);
+        let place = |src: &HostTensor| -> Result<DeviceTensor> {
+            let data = src.as_f32()?;
+            let mut out = vec![0.0f32; l * h * cap * dh];
+            for li in 0..l {
+                for hi in 0..h {
+                    let sb = (li * h + hi) * s * dh;
+                    let db = (li * h + hi) * cap * dh;
+                    out[db..db + keep * dh].copy_from_slice(&data[sb..sb + keep * dh]);
+                }
+            }
+            let t = HostTensor::f32(vec![l, h, cap, dh], out)?;
+            self.rt.upload(&t)
+        };
+        Ok((place(kfull)?, place(vfull)?))
+    }
+
+}
+
+fn caps(bucket: usize, g: usize) -> (usize, usize) {
+    let cap = bucket + 4 * g; // multiple of the kernel ATTN_CHUNK tile
+    (cap, cap / g)
+}
+
+fn dims4(t: &HostTensor) -> Result<(usize, usize, usize, usize)> {
+    match t.shape.as_slice() {
+        [a, b, c, d] => Ok((*a, *b, *c, *d)),
+        other => bail!("expected rank-4 tensor, got {other:?}"),
+    }
+}
+
+impl Decoder for XlaSession {
+    fn vocab(&self) -> usize {
+        self.rt.manifest.model.vocab
+    }
+
+    fn gamma_max(&self) -> usize {
+        self.rt.manifest.model.gamma_max()
+    }
+
+    fn method(&self) -> Method {
+        self.method
+    }
+
+    fn prefill(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            tokens.len() == self.bucket,
+            "prompt must be exactly the bucket size {} (router pads), got {}",
+            self.bucket,
+            tokens.len()
+        );
+        let t0 = Instant::now();
+        let exe = self.rt.executor(&self.entry("prefill"))?;
+        let toks = HostTensor::i32(vec![self.bucket], tokens.to_vec())?;
+        let mut args: Vec<Arg<'_>> = vec![Arg::Host(&toks)];
+        for w in &self.w_target.tensors {
+            args.push(Arg::Device(w));
+        }
+        let (outs, _) = exe.call(self.rt.client(), &args)?;
+        // [logits, ku,kl,ks,kz,vu,vl,vs,vz, fk,fv, kfull,vfull, snap]
+        let mut it = outs.into_iter();
+        let logits = it.next().context("logits")?;
+        let qarrs: Vec<HostTensor> = (0..8).map(|_| it.next().unwrap()).collect();
+        let fk = it.next().context("fk")?;
+        let fv = it.next().context("fv")?;
+        let kfull = it.next().context("kfull")?;
+        let vfull = it.next().context("vfull")?;
+        let snap = it.next().context("snap")?;
+
+        self.fk = fk;
+        self.fv = fv;
+        let g = self.rt.manifest.model.g;
+        let s = self.bucket;
+
+        if self.uses_quant_cache() {
+            self.qcache = Some(
+                qarrs
+                    .iter()
+                    .map(|t| self.rt.upload(t))
+                    .collect::<Result<Vec<_>>>()?,
+            );
+        }
+        if self.uses_dense_region() {
+            self.dense = Some(self.dense_region_from_full(&kfull, &vfull, s - g)?);
+        }
+        match self.method {
+            Method::StreamingLlm => {
+                let budget = (s / 4).max(2 * g);
+                let idx = crate::baselines::streaming_indices(s, budget, SINK_TOKENS);
+                let (kr, vr) = self.gather_region(&kfull, &vfull, &idx, budget)?;
+                let sink = SINK_TOKENS.min(budget / 2);
+                self.sparse = Some(SparseDraft {
+                    kr,
+                    vr,
+                    n_s: budget,
+                    protected: sink,
+                    budget,
+                });
+            }
+            Method::SnapKv => {
+                let budget = (s / 4).max(2 * g);
+                let idx = crate::baselines::snapkv_indices(snap.as_f32()?, s, g, budget);
+                let (kr, vr) = self.gather_region(&kfull, &vfull, &idx, budget)?;
+                self.sparse = Some(SparseDraft {
+                    kr,
+                    vr,
+                    n_s: budget,
+                    protected: budget - g, // selected set is protected
+                    budget,
+                });
+            }
+            _ => {}
+        }
+        self.timings.prefill += t0.elapsed().as_secs_f64();
+        logits.as_f32().map(|v| v.to_vec())
+    }
+
+    fn begin_cycle(&mut self) {
+        self.tracker.begin_cycle();
+    }
+
+    fn draft_step(&mut self, token: i32) -> Result<Vec<f32>> {
+        let t0 = Instant::now();
+        let i = self.tracker.n_f - self.tracker.cycle_base();
+        let slot = self.tracker.draft_slot(i)?;
+        let weights = match (self.method, self.quant_mode) {
+            (Method::QuantSpec, QuantMode::KvOnly) => Arc::clone(&self.w_target),
+            (Method::QuantSpec, _) => Arc::clone(&self.w_draft),
+            _ => Arc::clone(&self.w_target), // sparse baselines draft at fp16
+        };
+        let (entry, region_n): (String, usize) = if self.uses_quant_cache() {
+            (self.entry("draft"), self.tracker.n_q)
+        } else if self.method == Method::QuantSpec {
+            // weight-only ablation: dense fp cache, quantized weights
+            (self.entry("ar_step"), self.tracker.n_q)
+        } else {
+            let sp = self.sparse.as_ref().context("sparse region missing")?;
+            (self.entry("sparse_draft"), sp.n_s)
+        };
+        // Build region args without holding &self borrows across the call:
+        // split borrows manually.
+        let outs = {
+            let region_args: Vec<Arg<'_>> = if self.uses_quant_cache() {
+                self.qcache.as_ref().unwrap().iter().map(Arg::Device).collect()
+            } else if self.method == Method::QuantSpec {
+                let (kr, vr) = self.dense.as_ref().unwrap();
+                vec![Arg::Device(kr), Arg::Device(vr)]
+            } else {
+                let sp = self.sparse.as_ref().unwrap();
+                vec![Arg::Device(&sp.kr), Arg::Device(&sp.vr)]
+            };
+            // SAFETY of the borrow dance: decode_call only reads the region
+            // tensors; we re-borrow self mutably afterwards.
+            let exe = self.rt.executor(&entry)?;
+            let toks_t = HostTensor::i32(vec![1], vec![token])?;
+            let scalars = self.scalars(slot, region_n);
+            let mut args: Vec<Arg<'_>> = vec![Arg::Host(&toks_t)];
+            for s in &scalars {
+                args.push(Arg::Host(s));
+            }
+            args.extend(region_args);
+            args.push(Arg::Host(&self.fk));
+            args.push(Arg::Host(&self.fv));
+            for w in &weights.tensors {
+                args.push(Arg::Device(w));
+            }
+            let (outs, t) = exe.call(self.rt.client(), &args)?;
+            self.timings.transfer += t.upload_secs + t.download_secs;
+            outs
+        };
+        let mut rest = self.take_buffers(outs);
+        let logits = rest.pop().context("logits")?;
+        // The draft "context" advances within the cycle: n_f tracks it so
+        // the next draft step's buffer chunk sees this token's KV.
+        self.tracker.n_f = slot + 1;
+        self.timings.draft += t0.elapsed().as_secs_f64();
+        self.timings.draft_steps += 1;
+        // logits shape [1, vocab]
+        logits.as_f32().map(|v| v.to_vec())
+    }
+
+    fn verify(&mut self, tokens: &[i32]) -> Result<Vec<Vec<f32>>> {
+        let t0 = Instant::now();
+        let tmax = self.rt.manifest.model.tmax;
+        anyhow::ensure!(tokens.len() <= tmax, "verify wants <= {tmax} tokens");
+        let base = self.tracker.cycle_base();
+        // position of slot-0 token = n_q + base
+        let mut padded = tokens.to_vec();
+        padded.resize(tmax, 0);
+        let weights = Arc::clone(&self.w_target);
+        let entry = if self.uses_quant_cache() {
+            self.entry("verify")
+        } else {
+            self.entry("ar_verify")
+        };
+        let outs = {
+            let exe = self.rt.executor(&entry)?;
+            let toks_t = HostTensor::i32(vec![tmax], padded)?;
+            let pos = HostTensor::scalar_i32((self.tracker.n_q + base) as i32);
+            let n_q = HostTensor::scalar_i32(self.tracker.n_q as i32);
+            let n_f = HostTensor::scalar_i32(base as i32);
+            let mut args: Vec<Arg<'_>> = vec![
+                Arg::Host(&toks_t),
+                Arg::Host(&pos),
+                Arg::Host(&n_q),
+                Arg::Host(&n_f),
+            ];
+            if self.uses_quant_cache() {
+                args.extend(self.qcache.as_ref().unwrap().iter().map(Arg::Device));
+            } else {
+                let (kr, vr) = self.dense.as_ref().unwrap();
+                args.push(Arg::Device(kr));
+                args.push(Arg::Device(vr));
+            }
+            args.push(Arg::Host(&self.fk));
+            args.push(Arg::Host(&self.fv));
+            for w in &weights.tensors {
+                args.push(Arg::Device(w));
+            }
+            let (outs, t) = exe.call(self.rt.client(), &args)?;
+            self.timings.transfer += t.upload_secs + t.download_secs;
+            outs
+        };
+        let mut rest = self.take_buffers(outs);
+        let logits = rest.pop().context("logits")?;
+        let vocab = self.vocab();
+        let flat = logits.as_f32()?;
+        let rows = tokens
+            .len()
+            .min(tmax);
+        let out = (0..rows)
+            .map(|i| flat[i * vocab..(i + 1) * vocab].to_vec())
+            .collect();
+        self.timings.verify += t0.elapsed().as_secs_f64();
+        self.timings.verify_calls += 1;
+        Ok(out)
+    }
+
+    fn commit(&mut self, accepted: usize, verify_len: usize) -> Result<()> {
+        let flush = self.tracker.commit_cycle(accepted, verify_len)?;
+        if flush {
+            self.flush()?;
+        }
+        self.tracker.check_invariants()
+    }
+
+    fn ar_step(&mut self, token: i32) -> Result<Vec<f32>> {
+        let t0 = Instant::now();
+        let slot = self.tracker.n_f;
+        anyhow::ensure!(slot < self.rt.manifest.model.fb, "buffer full");
+        let weights = Arc::clone(&self.w_target);
+        let entry = self.entry("ar_step");
+        let outs = {
+            let exe = self.rt.executor(&entry)?;
+            let toks_t = HostTensor::i32(vec![1], vec![token])?;
+            let scalars = self.scalars(slot, self.tracker.n_q);
+            let (kr, vr) = self.dense.as_ref().context("AR needs dense region")?;
+            let mut args: Vec<Arg<'_>> = vec![Arg::Host(&toks_t)];
+            for s in &scalars {
+                args.push(Arg::Host(s));
+            }
+            args.push(Arg::Device(kr));
+            args.push(Arg::Device(vr));
+            args.push(Arg::Host(&self.fk));
+            args.push(Arg::Host(&self.fv));
+            for w in &weights.tensors {
+                args.push(Arg::Device(w));
+            }
+            let (outs, t) = exe.call(self.rt.client(), &args)?;
+            self.timings.transfer += t.upload_secs + t.download_secs;
+            outs
+        };
+        let mut rest = self.take_buffers(outs);
+        let logits = rest.pop().context("logits")?;
+        if self.tracker.commit_ar() {
+            self.flush()?;
+        }
+        self.timings.draft += t0.elapsed().as_secs_f64();
+        self.timings.draft_steps += 1;
+        logits.as_f32().map(|v| v.to_vec())
+    }
+
+    fn context_len(&self) -> usize {
+        self.tracker.context_len()
+    }
+
+    fn memory(&self) -> MemoryReport {
+        let mut r = MemoryReport::default();
+        // weights: target always resident; QuantSpec Both/WeightOnly also
+        // holds the INT4 draft set.
+        r.weights_host = self.w_target.tensors.iter().map(|t| t.byte_size()).sum();
+        r.weights_logical = self.w_target.tensors.iter().map(|t| t.byte_size() / 2).sum(); // fp16
+        if self.method == Method::QuantSpec && self.quant_mode != QuantMode::KvOnly {
+            r.weights_host += self.w_draft.tensors.iter().map(|t| t.byte_size()).sum::<usize>();
+            r.weights_logical += self.w_draft.logical_bytes;
+        }
+        let mut cache_host = self.fk.byte_size() + self.fv.byte_size();
+        let mut cache_logical = (self.fk.byte_size() + self.fv.byte_size()) / 2; // fp16
+        if let Some(qc) = &self.qcache {
+            for (i, t) in qc.iter().enumerate() {
+                cache_host += t.byte_size();
+                cache_logical += match i {
+                    0 | 1 | 4 | 5 => t.byte_size() / 2, // nibbles: 4-bit
+                    _ => t.byte_size() / 2,             // scales/zeros: fp16
+                };
+            }
+        }
+        if let Some((kr, vr)) = &self.dense {
+            cache_host += kr.byte_size() + vr.byte_size();
+            cache_logical += (kr.byte_size() + vr.byte_size()) / 2;
+        }
+        if let Some(sp) = &self.sparse {
+            cache_host += sp.kr.byte_size() + sp.vr.byte_size();
+            cache_logical += (sp.kr.byte_size() + sp.vr.byte_size()) / 2;
+        }
+        r.cache_host = cache_host;
+        r.cache_logical = cache_logical;
+        r
+    }
+
+    fn timings(&self) -> PhaseTimings {
+        self.timings
+    }
+}
+

@@ -1,0 +1,128 @@
+//! Host-side mirror of the paper's §4.2 hierarchical quantization.
+//!
+//! The authoritative implementation is the L1 Pallas kernel
+//! (`python/compile/kernels/hier_quant.py`); this mirror exists so Rust
+//! tests can cross-check artifact outputs and so the mock backend can
+//! emulate quantization error without XLA. Semantics are identical:
+//! asymmetric INT8 per group, decomposed as C8 = 16*C_U + C_L.
+
+/// One quantized group: nibble codes plus INT8 scale/zero.
+#[derive(Debug, Clone)]
+pub struct QuantGroup {
+    pub upper: Vec<i8>,
+    pub lower: Vec<i8>,
+    pub scale8: f32,
+    pub zero: f32,
+}
+
+pub const EPS: f32 = 1e-6;
+
+/// Hierarchically quantize one group of values.
+pub fn quant_group(xs: &[f32]) -> QuantGroup {
+    let mn = xs.iter().copied().fold(f32::INFINITY, f32::min);
+    let mx = xs.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let scale8 = ((mx - mn) / 255.0).max(EPS);
+    let zero = mn;
+    let s4 = 16.0 * scale8;
+    let mut upper = Vec::with_capacity(xs.len());
+    let mut lower = Vec::with_capacity(xs.len());
+    for &x in xs {
+        let u = ((x - zero) / s4).round().clamp(0.0, 15.0);
+        let err = x - (u * s4 + zero);
+        let l = (err / scale8).round().clamp(-8.0, 7.0);
+        upper.push(u as i8);
+        lower.push(l as i8);
+    }
+    QuantGroup { upper, lower, scale8, zero }
+}
+
+/// Draft-path dequantization: upper nibble only (INT4).
+pub fn dequant_draft(g: &QuantGroup) -> Vec<f32> {
+    let s4 = 16.0 * g.scale8;
+    g.upper.iter().map(|&u| u as f32 * s4 + g.zero).collect()
+}
+
+/// Target-path dequantization: both nibbles (INT8).
+pub fn dequant_target(g: &QuantGroup) -> Vec<f32> {
+    g.upper
+        .iter()
+        .zip(&g.lower)
+        .map(|(&u, &l)| (16.0 * u as f32 + l as f32) * g.scale8 + g.zero)
+        .collect()
+}
+
+/// Max reconstruction error bounds. The paper's decomposition
+/// C8 = 16·C_U + C_L with C_U ∈ [0,15], C_L ∈ [-8,7] spans [-8, 247], so
+/// codes near the top of the asymmetric range clip: the INT8 path is
+/// ≤ S8/2 for ~97% of the range but up to 8·S8 at the clipped tail; the
+/// INT4 path is ≤ S4/2 = 8·S8 plus the same tail, i.e. ≤ 15.5·S8.
+pub fn error_bounds(g: &QuantGroup) -> (f32, f32) {
+    (8.0 * g.scale8, 15.5 * g.scale8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn random_group(seed: u64, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        let mut rng = Pcg32::new(seed);
+        (0..n).map(|_| lo + (hi - lo) * rng.uniform() as f32).collect()
+    }
+
+    #[test]
+    fn int8_reconstruction_tight() {
+        for seed in 0..20 {
+            let xs = random_group(seed, 64, -3.0, 2.0);
+            let g = quant_group(&xs);
+            let (e8, _) = error_bounds(&g);
+            let errs: Vec<f32> =
+                xs.iter().zip(dequant_target(&g)).map(|(x, y)| (x - y).abs()).collect();
+            for e in &errs {
+                assert!(*e <= e8 * 1.01 + 1e-6, "{e}");
+            }
+            // typical (non-clipped) error is half an INT8 step
+            let mean = errs.iter().sum::<f32>() / errs.len() as f32;
+            assert!(mean <= 0.75 * g.scale8, "mean {mean} vs s8 {}", g.scale8);
+        }
+    }
+
+    #[test]
+    fn int4_reconstruction_bounded() {
+        for seed in 0..20 {
+            let xs = random_group(seed, 64, -1.0, 4.0);
+            let g = quant_group(&xs);
+            let (_, e4) = error_bounds(&g);
+            for (x, y) in xs.iter().zip(dequant_draft(&g)) {
+                assert!((x - y).abs() <= e4 * 1.01 + 1e-6, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn draft_coarser_than_target() {
+        let xs = random_group(7, 128, -2.0, 2.0);
+        let g = quant_group(&xs);
+        let err = |ys: Vec<f32>| -> f32 {
+            xs.iter().zip(ys).map(|(x, y)| (x - y).abs()).sum()
+        };
+        assert!(err(dequant_target(&g)) < err(dequant_draft(&g)));
+    }
+
+    #[test]
+    fn nibble_ranges() {
+        let xs = random_group(9, 256, -10.0, 10.0);
+        let g = quant_group(&xs);
+        assert!(g.upper.iter().all(|&u| (0..=15).contains(&u)));
+        assert!(g.lower.iter().all(|&l| (-8..=7).contains(&l)));
+    }
+
+    #[test]
+    fn constant_group_safe() {
+        let xs = vec![1.5f32; 32];
+        let g = quant_group(&xs);
+        for y in dequant_target(&g) {
+            assert!((y - 1.5).abs() < 1e-3);
+        }
+    }
+}

@@ -1,0 +1,228 @@
+//! PJRT runtime: compile HLO-text artifacts once, execute them with
+//! device-resident state on the request path.
+//!
+//! Threading: PJRT's CPU client and compiled executables are internally
+//! thread-safe; device buffers are immutable once created. The `xla` crate's
+//! wrappers hold raw pointers and are not marked Send/Sync, so we wrap them
+//! in newtypes with explicit unsafe impls (documented invariant: buffers are
+//! only read after creation; executables are stateless).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{EntrySpec, Manifest};
+use super::tensor::{DType, HostTensor};
+
+/// Device-resident tensor. Safe to share across threads: PJRT CPU buffers
+/// are immutable after creation and the runtime never mutates them.
+pub struct DeviceTensor {
+    buf: xla::PjRtBuffer,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+unsafe impl Send for DeviceTensor {}
+unsafe impl Sync for DeviceTensor {}
+
+impl DeviceTensor {
+    pub fn buffer(&self) -> &xla::PjRtBuffer {
+        &self.buf
+    }
+
+    pub fn byte_size(&self) -> usize {
+        self.shape.iter().product::<usize>() * self.dtype.size_bytes()
+    }
+
+    /// Download back to host (used by tests and cache snapshots).
+    pub fn to_host(&self) -> Result<HostTensor> {
+        let lit = self.buf.to_literal_sync()?;
+        HostTensor::from_literal(&lit)
+    }
+}
+
+/// One compiled entry point.
+pub struct Executor {
+    pub spec: EntrySpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+unsafe impl Send for Executor {}
+unsafe impl Sync for Executor {}
+
+/// Timing breakdown of one execute call (feeds the §Perf iteration log).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CallTiming {
+    pub upload_secs: f64,
+    pub execute_secs: f64,
+    pub download_secs: f64,
+}
+
+pub enum Arg<'a> {
+    Device(&'a DeviceTensor),
+    Host(&'a HostTensor),
+}
+
+impl Executor {
+    /// Execute with mixed device/host args (host args are uploaded first).
+    /// Returns host tensors for every output in manifest order.
+    pub fn call(
+        &self,
+        client: &xla::PjRtClient,
+        args: &[Arg<'_>],
+    ) -> Result<(Vec<HostTensor>, CallTiming)> {
+        let mut timing = CallTiming::default();
+        if args.len() != self.spec.inputs.len() {
+            bail!(
+                "entry '{}' wants {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                args.len()
+            );
+        }
+        let t0 = Instant::now();
+        // Upload host args; keep owned buffers alive for the call.
+        let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
+        let mut ptrs: Vec<*const xla::PjRtBuffer> = Vec::with_capacity(args.len());
+        for (i, a) in args.iter().enumerate() {
+            match a {
+                Arg::Device(d) => {
+                    debug_assert_eq!(
+                        d.shape, self.spec.inputs[i].shape,
+                        "input {} ({}) shape mismatch", i, self.spec.inputs[i].name
+                    );
+                    ptrs.push(d.buffer() as *const _);
+                }
+                Arg::Host(h) => {
+                    debug_assert_eq!(
+                        h.shape, self.spec.inputs[i].shape,
+                        "input {} ({}) shape mismatch", i, self.spec.inputs[i].name
+                    );
+                    let buf = h.to_buffer(client)?;
+                    owned.push(buf);
+                    ptrs.push(owned.last().unwrap() as *const _);
+                }
+            }
+        }
+        // Rebuild an ordered borrow list (owned buffers may have reallocated
+        // is avoided by reserving: we pushed into `owned` while collecting
+        // raw positions — re-walk instead to stay safe).
+        let mut ordered: Vec<&xla::PjRtBuffer> = Vec::with_capacity(args.len());
+        let mut oi = 0;
+        for a in args {
+            match a {
+                Arg::Device(d) => ordered.push(d.buffer()),
+                Arg::Host(_) => {
+                    ordered.push(&owned[oi]);
+                    oi += 1;
+                }
+            }
+        }
+        timing.upload_secs = t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let results = self.exe.execute_b(&ordered)?;
+        timing.execute_secs = t1.elapsed().as_secs_f64();
+
+        let t2 = Instant::now();
+        // return_tuple=True lowering: one tuple buffer at [0][0].
+        let lit = results[0][0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "entry '{}' returned {} outputs, manifest says {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        let outs = parts
+            .iter()
+            .map(HostTensor::from_literal)
+            .collect::<Result<Vec<_>>>()?;
+        timing.download_secs = t2.elapsed().as_secs_f64();
+        Ok((outs, timing))
+    }
+}
+
+/// The runtime: a PJRT CPU client plus lazily compiled executables and
+/// uploaded weight sets, shared across engines.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    executors: Mutex<HashMap<String, Arc<Executor>>>,
+    pub compile_secs: Mutex<HashMap<String, f64>>,
+}
+
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Arc<Runtime>> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Arc::new(Runtime {
+            client,
+            manifest,
+            executors: Mutex::new(HashMap::new()),
+            compile_secs: Mutex::new(HashMap::new()),
+        }))
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Get (compiling on first use) the executor for an entry.
+    pub fn executor(&self, name: &str) -> Result<Arc<Executor>> {
+        if let Some(e) = self.executors.lock().unwrap().get(name) {
+            return Ok(Arc::clone(e));
+        }
+        let spec = self.manifest.entry(name)?.clone();
+        let path = self.manifest.dir.join(&spec.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path")?,
+        )
+        .with_context(|| format!("parsing {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let secs = t0.elapsed().as_secs_f64();
+        log::info!("compiled {name} in {secs:.2}s");
+        self.compile_secs.lock().unwrap().insert(name.to_string(), secs);
+        let executor = Arc::new(Executor { spec, exe });
+        self.executors
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), Arc::clone(&executor));
+        Ok(executor)
+    }
+
+    pub fn upload(&self, t: &HostTensor) -> Result<DeviceTensor> {
+        Ok(DeviceTensor {
+            buf: t.to_buffer(&self.client)?,
+            shape: t.shape.clone(),
+            dtype: t.dtype(),
+        })
+    }
+
+    /// Preload every entry for the given buckets (avoids first-request
+    /// compile latency in serving mode).
+    pub fn warmup(&self, buckets: &[usize]) -> Result<()> {
+        for &b in buckets {
+            for kind in [
+                "prefill", "draft", "verify", "ar_step", "ar_verify",
+                "sparse_draft", "flush", "ar_flush", "sparse_flush",
+            ] {
+                self.executor(&format!("{kind}_{b}"))?;
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,199 @@
+//! Artifact manifest: what `python -m compile.aot` produced.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::tensor::DType;
+use crate::config::ModelSpec;
+use crate::util::json::Json;
+
+/// One input or output of an entry, in argument order.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl IoSpec {
+    fn from_json(j: &Json) -> Result<IoSpec> {
+        Ok(IoSpec {
+            name: j.req("name")?.as_str().context("io name")?.to_string(),
+            dtype: DType::parse(j.req("dtype")?.as_str().context("io dtype")?)?,
+            shape: j
+                .req("shape")?
+                .as_arr()
+                .context("io shape")?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect(),
+        })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One lowered entry point (an .hlo.txt file plus its signature).
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// A weight blob on disk.
+#[derive(Debug, Clone)]
+pub struct WeightMeta {
+    pub file: String,
+    pub shape: Vec<usize>,
+    /// Logical bit width (4 for the quant-dequant draft set) — memory
+    /// accounting uses this, not the on-disk f32 width.
+    pub logical_bits: usize,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelSpec,
+    pub buckets: Vec<usize>,
+    pub score_bucket: usize,
+    pub param_order: Vec<String>,
+    /// weight set name ("fp" / "q4") -> param name -> meta
+    pub weights: BTreeMap<String, BTreeMap<String, WeightMeta>>,
+    pub entries: BTreeMap<String, EntrySpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+
+        let model = ModelSpec::from_json(j.req("model")?)?;
+        let buckets = j
+            .req("buckets")?
+            .as_arr()
+            .context("buckets")?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        let score_bucket = j.req("score_bucket")?.as_usize().context("score_bucket")?;
+        let param_order = j
+            .req("param_order")?
+            .as_arr()
+            .context("param_order")?
+            .iter()
+            .filter_map(|v| v.as_str().map(String::from))
+            .collect();
+
+        let mut weights = BTreeMap::new();
+        for (set, obj) in j.req("weights")?.as_obj().context("weights")? {
+            let mut params = BTreeMap::new();
+            for (name, meta) in obj.as_obj().context("weight set")? {
+                params.insert(
+                    name.clone(),
+                    WeightMeta {
+                        file: meta.req("file")?.as_str().context("file")?.to_string(),
+                        shape: meta
+                            .req("shape")?
+                            .as_arr()
+                            .context("shape")?
+                            .iter()
+                            .filter_map(Json::as_usize)
+                            .collect(),
+                        logical_bits: meta
+                            .req("logical_bits")?
+                            .as_usize()
+                            .context("logical_bits")?,
+                    },
+                );
+            }
+            weights.insert(set.clone(), params);
+        }
+
+        let mut entries = BTreeMap::new();
+        for (name, e) in j.req("entries")?.as_obj().context("entries")? {
+            let parse_io = |key: &str| -> Result<Vec<IoSpec>> {
+                e.req(key)?
+                    .as_arr()
+                    .context("io list")?
+                    .iter()
+                    .map(IoSpec::from_json)
+                    .collect()
+            };
+            entries.insert(
+                name.clone(),
+                EntrySpec {
+                    name: name.clone(),
+                    file: e.req("file")?.as_str().context("file")?.to_string(),
+                    inputs: parse_io("inputs")?,
+                    outputs: parse_io("outputs")?,
+                },
+            );
+        }
+
+        Ok(Manifest { dir, model, buckets, score_bucket, param_order, weights, entries })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entries
+            .get(name)
+            .with_context(|| format!("entry '{name}' not in manifest (buckets: {:?})", self.buckets))
+    }
+
+    /// Pick the smallest bucket that fits a prompt of `len` tokens.
+    pub fn bucket_for(&self, len: usize) -> Option<usize> {
+        self.buckets.iter().copied().filter(|&b| b >= len).min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(dir).unwrap();
+        assert!(!m.buckets.is_empty());
+        assert_eq!(m.model.g, m.model.head_dim);
+        assert_eq!(m.model.fb, 2 * m.model.g + m.model.tmax);
+        // every bucket has its full entry family
+        for b in &m.buckets {
+            for kind in ["prefill", "draft", "verify", "ar_step", "ar_verify",
+                         "sparse_draft", "flush", "ar_flush", "sparse_flush"] {
+                assert!(m.entries.contains_key(&format!("{kind}_{b}")), "{kind}_{b}");
+            }
+        }
+        // weight sets cover the param order
+        for set in ["fp", "q4"] {
+            let ws = &m.weights[set];
+            for p in &m.param_order {
+                assert!(ws.contains_key(p), "{set}/{p}");
+            }
+        }
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let Some(dir) = artifacts_dir() else { return };
+        let m = Manifest::load(dir).unwrap();
+        assert_eq!(m.bucket_for(100), Some(*m.buckets.iter().min().unwrap()));
+        assert_eq!(m.bucket_for(10_000_000), None);
+    }
+}

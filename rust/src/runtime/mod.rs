@@ -1,0 +1,16 @@
+//! Layer-3 runtime: load AOT artifacts (HLO text), compile once on the PJRT
+//! CPU client, execute from the request path with device-resident state.
+//!
+//! Adapted from /opt/xla-example/load_hlo: HLO *text* is the interchange
+//! format (jax >= 0.5 serialized protos are rejected by xla_extension
+//! 0.5.1); `HloModuleProto::from_text_file` reassigns instruction ids.
+
+pub mod client;
+pub mod manifest;
+pub mod tensor;
+pub mod weights;
+
+pub use client::{Arg, CallTiming, DeviceTensor, Executor, Runtime};
+pub use manifest::{EntrySpec, IoSpec, Manifest};
+pub use tensor::{DType, HostTensor, Storage};
+pub use weights::{WeightSet, Weights};

@@ -1,0 +1,198 @@
+//! Host tensors: typed shape-carrying arrays bridging Rust state and XLA
+//! literals/buffers.
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I8,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i8" => DType::I8,
+            "i32" => DType::I32,
+            other => bail!("unknown dtype '{other}'"),
+        })
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I8 => 1,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Storage {
+    F32(Vec<f32>),
+    I8(Vec<i8>),
+    I32(Vec<i32>),
+}
+
+/// A host-resident tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Storage,
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Result<HostTensor> {
+        Self::check(&shape, data.len())?;
+        Ok(HostTensor { shape, data: Storage::F32(data) })
+    }
+
+    pub fn i8(shape: Vec<usize>, data: Vec<i8>) -> Result<HostTensor> {
+        Self::check(&shape, data.len())?;
+        Ok(HostTensor { shape, data: Storage::I8(data) })
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Result<HostTensor> {
+        Self::check(&shape, data.len())?;
+        Ok(HostTensor { shape, data: Storage::I32(data) })
+    }
+
+    pub fn scalar_i32(v: i32) -> HostTensor {
+        HostTensor { shape: vec![], data: Storage::I32(vec![v]) }
+    }
+
+    pub fn zeros(dtype: DType, shape: Vec<usize>) -> HostTensor {
+        let n: usize = shape.iter().product();
+        let data = match dtype {
+            DType::F32 => Storage::F32(vec![0.0; n]),
+            DType::I8 => Storage::I8(vec![0; n]),
+            DType::I32 => Storage::I32(vec![0; n]),
+        };
+        HostTensor { shape, data }
+    }
+
+    fn check(shape: &[usize], len: usize) -> Result<()> {
+        let n: usize = shape.iter().product();
+        if n != len {
+            bail!("shape {shape:?} wants {n} elements, got {len}");
+        }
+        Ok(())
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            Storage::F32(_) => DType::F32,
+            Storage::I8(_) => DType::I8,
+            Storage::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_size(&self) -> usize {
+        self.numel() * self.dtype().size_bytes()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            Storage::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i8(&self) -> Result<&[i8]> {
+        match &self.data {
+            Storage::I8(v) => Ok(v),
+            _ => bail!("tensor is not i8"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            Storage::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// Convert an XLA literal (non-tuple) to a host tensor.
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape().context("literal shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        use xla::ElementType as ET;
+        let data = match shape.ty() {
+            ET::F32 => Storage::F32(lit.to_vec::<f32>()?),
+            ET::S8 => Storage::I8(lit.to_vec::<i8>()?),
+            ET::S32 => Storage::I32(lit.to_vec::<i32>()?),
+            other => bail!("unsupported literal element type {other:?}"),
+        };
+        Ok(HostTensor { shape: dims, data })
+    }
+
+    /// Upload to a device buffer.
+    pub fn to_buffer(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
+        let buf = match &self.data {
+            Storage::F32(v) => client.buffer_from_host_buffer(v, &self.shape, None),
+            Storage::I8(v) => client.buffer_from_host_buffer(v, &self.shape, None),
+            Storage::I32(v) => client.buffer_from_host_buffer(v, &self.shape, None),
+        }?;
+        Ok(buf)
+    }
+
+    /// Read a raw little-endian f32 blob (weight export format).
+    pub fn from_f32_file(path: &std::path::Path, shape: Vec<usize>) -> Result<HostTensor> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        let n: usize = shape.iter().product();
+        if bytes.len() != n * 4 {
+            bail!("{path:?}: expected {} bytes for {shape:?}, got {}", n * 4, bytes.len());
+        }
+        let mut data = Vec::with_capacity(n);
+        for chunk in bytes.chunks_exact(4) {
+            data.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+        }
+        HostTensor::f32(shape, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_check() {
+        assert!(HostTensor::f32(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostTensor::f32(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn zeros_and_sizes() {
+        let t = HostTensor::zeros(DType::I8, vec![4, 8]);
+        assert_eq!(t.numel(), 32);
+        assert_eq!(t.byte_size(), 32);
+        assert_eq!(t.dtype(), DType::I8);
+        let t = HostTensor::zeros(DType::F32, vec![4, 8]);
+        assert_eq!(t.byte_size(), 128);
+    }
+
+    #[test]
+    fn scalar() {
+        let s = HostTensor::scalar_i32(7);
+        assert_eq!(s.numel(), 1);
+        assert_eq!(s.as_i32().unwrap(), &[7]);
+    }
+
+    #[test]
+    fn f32_file_roundtrip() {
+        let dir = std::env::temp_dir().join("qs_tensor_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        let vals: Vec<f32> = (0..12).map(|i| i as f32 * 0.5).collect();
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&path, bytes).unwrap();
+        let t = HostTensor::from_f32_file(&path, vec![3, 4]).unwrap();
+        assert_eq!(t.as_f32().unwrap(), vals.as_slice());
+        assert!(HostTensor::from_f32_file(&path, vec![5, 4]).is_err());
+    }
+}

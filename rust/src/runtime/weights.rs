@@ -1,0 +1,64 @@
+//! Weight-set loading: raw f32 blobs -> device-resident tensors, uploaded
+//! once per process and shared by every engine (Python never runs at
+//! serving time; these files were exported by `compile/aot.py`).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::client::{DeviceTensor, Runtime};
+use super::tensor::HostTensor;
+
+/// Which exported weight set to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WeightSet {
+    /// Trained full-precision weights (target model; fp16 on real HW).
+    Fp,
+    /// INT4-sim quant-dequant weights (QuantSpec draft model).
+    Q4,
+}
+
+impl WeightSet {
+    pub fn key(&self) -> &'static str {
+        match self {
+            WeightSet::Fp => "fp",
+            WeightSet::Q4 => "q4",
+        }
+    }
+}
+
+/// A full parameter set on device, in manifest `param_order`.
+pub struct Weights {
+    pub set: WeightSet,
+    pub tensors: Vec<Arc<DeviceTensor>>,
+    pub by_name: BTreeMap<String, Arc<DeviceTensor>>,
+    /// Logical bytes (uses the manifest's logical_bits — 4-bit draft
+    /// weights count at half a byte per element).
+    pub logical_bytes: usize,
+}
+
+impl Weights {
+    pub fn load(rt: &Runtime, set: WeightSet) -> Result<Weights> {
+        let metas = rt
+            .manifest
+            .weights
+            .get(set.key())
+            .with_context(|| format!("weight set '{}' missing", set.key()))?;
+        let mut tensors = Vec::with_capacity(rt.manifest.param_order.len());
+        let mut by_name = BTreeMap::new();
+        let mut logical_bytes = 0usize;
+        for name in &rt.manifest.param_order {
+            let meta = metas
+                .get(name)
+                .with_context(|| format!("weight '{name}' missing from set"))?;
+            let path = rt.manifest.dir.join(&meta.file);
+            let host = HostTensor::from_f32_file(&path, meta.shape.clone())?;
+            logical_bytes += host.numel() * meta.logical_bits / 8;
+            let dev = Arc::new(rt.upload(&host)?);
+            tensors.push(Arc::clone(&dev));
+            by_name.insert(name.clone(), dev);
+        }
+        Ok(Weights { set, tensors, by_name, logical_bytes })
+    }
+}

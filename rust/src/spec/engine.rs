@@ -1,0 +1,197 @@
+//! The speculative decode loop (paper Algorithm 1).
+//!
+//! One `SpecEngine` drives one `Decoder` session: draft γ tokens with the
+//! INT4 path, verify them in a single INT8 target pass, commit the accepted
+//! prefix plus the corrected/bonus token, flush the FP buffer as it fills.
+//! With `Method::Autoregressive` it degenerates to the plain AR loop.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::sampler::Sampler;
+use crate::config::Method;
+use crate::model::Decoder;
+
+/// Outcome of one generation call.
+#[derive(Debug, Clone, Default)]
+pub struct GenResult {
+    pub tokens: Vec<i32>,
+    /// Drafted token count (speculative methods).
+    pub drafted: u64,
+    /// Accepted drafted tokens.
+    pub accepted: u64,
+    /// Speculation cycles run.
+    pub cycles: u64,
+    /// Wall-clock seconds: prompt processing / decode loop.
+    pub prefill_secs: f64,
+    pub decode_secs: f64,
+}
+
+impl GenResult {
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.drafted as f64
+        }
+    }
+
+    pub fn decode_tokens_per_sec(&self) -> f64 {
+        if self.decode_secs == 0.0 {
+            0.0
+        } else {
+            self.tokens.len() as f64 / self.decode_secs
+        }
+    }
+}
+
+pub struct SpecEngine {
+    pub gamma: usize,
+    pub sampler: Sampler,
+}
+
+impl SpecEngine {
+    pub fn new(gamma: usize, sampler: Sampler) -> SpecEngine {
+        SpecEngine { gamma, sampler }
+    }
+
+    /// Generate up to `max_new` tokens after `prompt`.
+    pub fn generate(
+        &mut self,
+        dec: &mut dyn Decoder,
+        prompt: &[i32],
+        max_new: usize,
+    ) -> Result<GenResult> {
+        let mut res = GenResult::default();
+        let t0 = Instant::now();
+        let logits = dec.prefill(prompt)?;
+        res.prefill_secs = t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let mut last = self.sampler.sample(&logits);
+        res.tokens.push(last);
+
+        if dec.method() == Method::Autoregressive {
+            while res.tokens.len() < max_new {
+                let logits = dec.ar_step(last)?;
+                last = self.sampler.sample(&logits);
+                res.tokens.push(last);
+            }
+            res.decode_secs = t1.elapsed().as_secs_f64();
+            return Ok(res);
+        }
+
+        let gamma = self.gamma.min(dec.gamma_max());
+        while res.tokens.len() < max_new {
+            // ---- draft phase (Alg. 1 lines 6-9) ----
+            dec.begin_cycle();
+            let mut feed = last;
+            let mut drafted = Vec::with_capacity(gamma);
+            let mut draft_logits = Vec::with_capacity(gamma);
+            for _ in 0..gamma {
+                let q = dec.draft_step(feed)?;
+                let g = self.sampler.sample(&q);
+                drafted.push(g);
+                draft_logits.push(q);
+                feed = g;
+            }
+            // ---- verify phase (Alg. 1 lines 10-20) ----
+            // feed slots: [last, g_1 .. g_gamma] — row i is the target
+            // distribution after token i, so rows 0..gamma-1 judge the
+            // drafts and row gamma is the bonus distribution.
+            let mut vtokens = vec![last];
+            vtokens.extend(&drafted);
+            let target_logits = dec.verify(&vtokens)?;
+            let out = self.sampler.verify(&drafted, &draft_logits, &target_logits);
+            res.drafted += gamma as u64;
+            res.accepted += out.accepted as u64;
+            res.cycles += 1;
+
+            // commit accepted prefix + the corrected/bonus token
+            dec.commit(out.accepted, vtokens.len())?;
+            for &g in drafted.iter().take(out.accepted) {
+                res.tokens.push(g);
+            }
+            res.tokens.push(out.next_token);
+            last = out.next_token;
+        }
+        res.tokens.truncate(max_new);
+        res.decode_secs = t1.elapsed().as_secs_f64();
+        Ok(res)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Method;
+    use crate::model::MockDecoder;
+
+    fn greedy_engine(gamma: usize) -> SpecEngine {
+        SpecEngine::new(gamma, Sampler::new(0.0, 0))
+    }
+
+    /// With a perfect draft (draft ≡ target), greedy speculative decoding
+    /// must produce exactly the greedy autoregressive output.
+    #[test]
+    fn spec_equals_ar_when_draft_is_exact() {
+        let prompt = vec![10, 20, 30];
+        let mut ar = MockDecoder::new(64, 7, 0.0);
+        ar.set_method(Method::Autoregressive);
+        let mut ar_out = greedy_engine(1).generate(&mut ar, &prompt, 40).unwrap();
+
+        for gamma in [1, 2, 4, 7] {
+            let mut spec = MockDecoder::new(64, 7, 0.0);
+            let out = greedy_engine(gamma).generate(&mut spec, &prompt, 40).unwrap();
+            assert_eq!(out.tokens, ar_out.tokens, "gamma={gamma}");
+            assert_eq!(out.acceptance_rate(), 1.0, "gamma={gamma}");
+        }
+        ar_out.tokens.truncate(40);
+    }
+
+    /// A noisy draft still yields the AR output under greedy verification
+    /// (speculation is lossless), just with a lower acceptance rate.
+    #[test]
+    fn spec_lossless_with_noisy_draft() {
+        let prompt = vec![1, 2, 3, 4];
+        let mut ar = MockDecoder::new(64, 7, 0.0);
+        ar.set_method(Method::Autoregressive);
+        let ar_out = greedy_engine(1).generate(&mut ar, &prompt, 32).unwrap();
+
+        let mut spec = MockDecoder::new(64, 7, 0.35);
+        let out = greedy_engine(4).generate(&mut spec, &prompt, 32).unwrap();
+        assert_eq!(out.tokens, ar_out.tokens);
+        assert!(out.acceptance_rate() < 1.0);
+        assert!(out.acceptance_rate() > 0.2);
+    }
+
+    #[test]
+    fn acceptance_rate_decreases_with_draft_error() {
+        let prompt = vec![7, 7, 7];
+        let rate = |err: f64| {
+            let mut d = MockDecoder::new(64, 7, err);
+            greedy_engine(4)
+                .generate(&mut d, &prompt, 60)
+                .unwrap()
+                .acceptance_rate()
+        };
+        let r0 = rate(0.0);
+        let r3 = rate(0.3);
+        let r8 = rate(0.8);
+        assert!(r0 > r3 && r3 > r8, "{r0} {r3} {r8}");
+    }
+
+    #[test]
+    fn respects_max_new() {
+        let mut d = MockDecoder::new(64, 7, 0.1);
+        let out = greedy_engine(5).generate(&mut d, &[1, 2], 17).unwrap();
+        assert_eq!(out.tokens.len(), 17);
+    }
+
+    impl MockDecoder {
+        fn set_method(&mut self, m: Method) {
+            self.force_method(m);
+        }
+    }
+}

@@ -1,0 +1,165 @@
+//! Adaptive speculation-length control.
+//!
+//! The paper selects γ per dataset by offline search (Table 6 / App. G).
+//! In a serving system the optimal γ drifts with the workload, so the
+//! coordinator can instead adapt it online: γ should grow while acceptance
+//! is high (more tokens per verify) and shrink when drafts get rejected
+//! (wasted draft steps). Two controllers:
+//!
+//! * `FixedGamma` — the paper's setting (searched offline).
+//! * `AimdGamma` — additive-increase / multiplicative-decrease on the
+//!   per-cycle acceptance, bounded by the artifact's γ_max. AIMD converges
+//!   to the largest γ the current acceptance supports, which by the
+//!   expected-tokens formula E=(1-α^{γ+1})/(1-α) is where the marginal
+//!   draft step stops paying for itself.
+
+/// Per-cycle feedback: how many of `gamma` drafts were accepted.
+#[derive(Debug, Clone, Copy)]
+pub struct CycleFeedback {
+    pub gamma: usize,
+    pub accepted: usize,
+}
+
+pub trait GammaController: Send {
+    /// γ for the next speculation cycle.
+    fn next_gamma(&mut self) -> usize;
+    /// Feed back the outcome of the last cycle.
+    fn observe(&mut self, fb: CycleFeedback);
+    fn name(&self) -> &'static str;
+}
+
+/// The paper's fixed, offline-searched γ.
+pub struct FixedGamma(pub usize);
+
+impl GammaController for FixedGamma {
+    fn next_gamma(&mut self) -> usize {
+        self.0
+    }
+
+    fn observe(&mut self, _fb: CycleFeedback) {}
+
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+}
+
+/// AIMD controller over a smoothed acceptance estimate.
+pub struct AimdGamma {
+    gamma: f64,
+    min: usize,
+    max: usize,
+    /// EWMA of per-cycle acceptance fraction.
+    accept_ewma: f64,
+    alpha: f64,
+    /// grow while smoothed acceptance above this...
+    grow_above: f64,
+    /// ...shrink multiplicatively below this.
+    shrink_below: f64,
+}
+
+impl AimdGamma {
+    pub fn new(initial: usize, min: usize, max: usize) -> AimdGamma {
+        AimdGamma {
+            gamma: initial as f64,
+            min: min.max(1),
+            max,
+            accept_ewma: 0.9,
+            alpha: 0.25,
+            grow_above: 0.85,
+            shrink_below: 0.6,
+        }
+    }
+
+    pub fn acceptance(&self) -> f64 {
+        self.accept_ewma
+    }
+}
+
+impl GammaController for AimdGamma {
+    fn next_gamma(&mut self) -> usize {
+        (self.gamma.round() as usize).clamp(self.min, self.max)
+    }
+
+    fn observe(&mut self, fb: CycleFeedback) {
+        if fb.gamma == 0 {
+            return;
+        }
+        let rate = fb.accepted as f64 / fb.gamma as f64;
+        self.accept_ewma = (1.0 - self.alpha) * self.accept_ewma + self.alpha * rate;
+        if self.accept_ewma > self.grow_above {
+            self.gamma += 0.5; // additive increase (half-steps smooth it)
+        } else if self.accept_ewma < self.shrink_below {
+            self.gamma *= 0.5; // multiplicative decrease
+        }
+        self.gamma = self.gamma.clamp(self.min as f64, self.max as f64);
+    }
+
+    fn name(&self) -> &'static str {
+        "aimd"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_never_moves() {
+        let mut c = FixedGamma(4);
+        for _ in 0..10 {
+            c.observe(CycleFeedback { gamma: 4, accepted: 0 });
+        }
+        assert_eq!(c.next_gamma(), 4);
+    }
+
+    #[test]
+    fn aimd_grows_under_perfect_acceptance() {
+        let mut c = AimdGamma::new(2, 1, 7);
+        for _ in 0..40 {
+            let g = c.next_gamma();
+            c.observe(CycleFeedback { gamma: g, accepted: g });
+        }
+        assert_eq!(c.next_gamma(), 7, "should saturate at gamma_max");
+    }
+
+    #[test]
+    fn aimd_shrinks_under_rejection() {
+        let mut c = AimdGamma::new(7, 1, 7);
+        for _ in 0..40 {
+            let g = c.next_gamma();
+            c.observe(CycleFeedback { gamma: g, accepted: 0 });
+        }
+        assert_eq!(c.next_gamma(), 1, "should collapse to gamma_min");
+    }
+
+    #[test]
+    fn aimd_finds_middle_ground() {
+        // acceptance ~70%: between the thresholds, gamma should neither
+        // collapse nor saturate.
+        let mut c = AimdGamma::new(4, 1, 7);
+        let mut rng = crate::util::rng::Pcg32::new(5);
+        for _ in 0..200 {
+            let g = c.next_gamma();
+            let accepted = (0..g).take_while(|_| rng.uniform() < 0.72).count();
+            c.observe(CycleFeedback { gamma: g, accepted });
+        }
+        let g = c.next_gamma();
+        assert!((1..=7).contains(&g));
+        assert!((0.4..0.95).contains(&c.acceptance()), "{}", c.acceptance());
+    }
+
+    #[test]
+    fn aimd_recovers_after_regime_change() {
+        let mut c = AimdGamma::new(4, 1, 7);
+        for _ in 0..30 {
+            let g = c.next_gamma();
+            c.observe(CycleFeedback { gamma: g, accepted: 0 });
+        }
+        assert_eq!(c.next_gamma(), 1);
+        for _ in 0..60 {
+            let g = c.next_gamma();
+            c.observe(CycleFeedback { gamma: g, accepted: g });
+        }
+        assert!(c.next_gamma() >= 6, "should climb back: {}", c.next_gamma());
+    }
+}

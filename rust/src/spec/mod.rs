@@ -1,0 +1,8 @@
+//! The speculative-decoding engine (paper Algorithm 1).
+
+pub mod engine;
+pub mod gamma;
+pub mod sampler;
+
+pub use engine::{GenResult, SpecEngine};
+pub use sampler::{greedy_argmax, softmax, Sampler, VerifyOutcome};

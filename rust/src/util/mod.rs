@@ -1,0 +1,21 @@
+//! Hand-rolled substrates.
+//!
+//! The offline vendor set has no serde/clap/tokio/rand/criterion, so the
+//! pieces a serving framework normally pulls from crates are built here:
+//! JSON, CLI parsing, RNG, a worker pool, an HTTP server, and a small
+//! property-testing framework used for coordinator invariants.
+
+pub mod argparse;
+pub mod httpd;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod threadpool;
+
+/// Monotonic seconds since process start (coarse wall clock for metrics).
+pub fn now_secs() -> f64 {
+    use once_cell::sync::Lazy;
+    use std::time::Instant;
+    static START: Lazy<Instant> = Lazy::new(Instant::now);
+    START.elapsed().as_secs_f64()
+}

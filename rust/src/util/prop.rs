@@ -1,0 +1,191 @@
+//! Mini property-testing framework (no proptest offline).
+//!
+//! `check` runs a property over N seeded random cases; on failure it
+//! performs greedy input shrinking via the case's `Shrink` implementation
+//! and reports the minimal failing case. Used for coordinator invariants
+//! (routing, batching, cache state machine) and substrate round-trips.
+
+use super::rng::Pcg32;
+
+/// Types that can be generated from an RNG with a size hint.
+pub trait Gen: Sized {
+    fn gen(rng: &mut Pcg32, size: usize) -> Self;
+}
+
+/// Types that can propose strictly "smaller" variants of themselves.
+pub trait Shrink: Sized {
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Gen for usize {
+    fn gen(rng: &mut Pcg32, size: usize) -> Self {
+        rng.below(size.max(1))
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out
+    }
+}
+
+impl Gen for u64 {
+    fn gen(rng: &mut Pcg32, _size: usize) -> Self {
+        rng.next_u64()
+    }
+}
+
+impl Shrink for u64 {}
+
+impl Gen for f64 {
+    fn gen(rng: &mut Pcg32, _size: usize) -> Self {
+        rng.uniform()
+    }
+}
+
+impl Shrink for f64 {}
+
+impl<T: Gen> Gen for Vec<T> {
+    fn gen(rng: &mut Pcg32, size: usize) -> Self {
+        let len = rng.below(size.max(1));
+        (0..len).map(|_| T::gen(rng, size)).collect()
+    }
+}
+
+impl<T: Shrink + Clone> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if !self.is_empty() {
+            out.push(self[..self.len() / 2].to_vec());
+            out.push(self[1..].to_vec());
+            // shrink one element
+            for (i, item) in self.iter().enumerate().take(4) {
+                for smaller in item.shrink() {
+                    let mut v = self.clone();
+                    v[i] = smaller;
+                    out.push(v);
+                }
+            }
+        }
+        out
+    }
+}
+
+impl<A: Gen, B: Gen> Gen for (A, B) {
+    fn gen(rng: &mut Pcg32, size: usize) -> Self {
+        (A::gen(rng, size), B::gen(rng, size))
+    }
+}
+
+impl<A: Shrink + Clone, B: Shrink + Clone> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Configuration for a property run.
+pub struct Config {
+    pub cases: usize,
+    pub size: usize,
+    pub seed: u64,
+    pub max_shrinks: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 200, size: 64, seed: 0xDEC0DE, max_shrinks: 400 }
+    }
+}
+
+/// Run `prop` over random cases; panic with the minimal failing case.
+pub fn check<T, F>(cfg: Config, prop: F)
+where
+    T: Gen + Shrink + Clone + std::fmt::Debug,
+    F: Fn(&T) -> bool,
+{
+    let mut rng = Pcg32::new(cfg.seed);
+    for case_idx in 0..cfg.cases {
+        let input = T::gen(&mut rng, cfg.size);
+        if !prop(&input) {
+            let minimal = shrink_loop(input, &prop, cfg.max_shrinks);
+            panic!(
+                "property failed (case {case_idx}/{}), minimal input: {:?}",
+                cfg.cases, minimal
+            );
+        }
+    }
+}
+
+/// Convenience: default config.
+pub fn check_default<T, F>(prop: F)
+where
+    T: Gen + Shrink + Clone + std::fmt::Debug,
+    F: Fn(&T) -> bool,
+{
+    check(Config::default(), prop)
+}
+
+fn shrink_loop<T, F>(mut failing: T, prop: &F, budget: usize) -> T
+where
+    T: Shrink + Clone,
+    F: Fn(&T) -> bool,
+{
+    let mut spent = 0;
+    loop {
+        let mut advanced = false;
+        for cand in failing.shrink() {
+            spent += 1;
+            if spent > budget {
+                return failing;
+            }
+            if !prop(&cand) {
+                failing = cand;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            return failing;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check_default::<Vec<usize>, _>(|v| v.len() < 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check_default::<usize, _>(|&n| n < 10);
+    }
+
+    #[test]
+    fn shrink_finds_small_counterexample() {
+        // Property "sum < 50" fails; the shrunk witness should be small.
+        let result = std::panic::catch_unwind(|| {
+            check_default::<Vec<usize>, _>(|v| v.iter().sum::<usize>() < 50)
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("minimal input"), "{msg}");
+    }
+}

@@ -1,0 +1,82 @@
+//! Serving workloads: synthetic long-context prompts + arrival traces.
+//!
+//! `textgen` mirrors python/compile/corpus.py (same PCG32, same templates)
+//! so benchmark prompts come from the distribution the model was pretrained
+//! on — the offline stand-in for PG-19 / ∞Bench Sum / Multi-LexSum
+//! (DESIGN.md §4). `traces` builds open-loop Poisson arrival schedules for
+//! the serving example.
+
+pub mod textgen;
+
+use crate::util::rng::Pcg32;
+
+/// Dataset profiles mirroring the paper's evaluation sets (Appendix F).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Profile {
+    /// Book-like continuous prose (PG-19 stand-in).
+    Pg19,
+    /// Legal multi-doc summarization-ish (Multi-LexSum stand-in).
+    LexSum,
+    /// Entity-substituted narrative (∞Bench Sum stand-in).
+    InfBench,
+}
+
+impl Profile {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Profile::Pg19 => "PG19",
+            Profile::LexSum => "Multi-LexSum",
+            Profile::InfBench => "InfBench-Sum",
+        }
+    }
+
+    pub fn all() -> [Profile; 3] {
+        [Profile::Pg19, Profile::LexSum, Profile::InfBench]
+    }
+}
+
+/// Generate a prompt of exactly `len` byte-tokens.
+pub fn prompt(seed: u64, len: usize, profile: Profile) -> Vec<i32> {
+    let doc = textgen::generate_doc(seed, len, profile);
+    doc.into_iter().map(|b| b as i32).collect()
+}
+
+/// Poisson arrival offsets (seconds) for `n` requests at `rate` req/s.
+pub fn poisson_arrivals(seed: u64, n: usize, rate: f64) -> Vec<f64> {
+    let mut rng = Pcg32::new(seed);
+    let mut t = 0.0;
+    (0..n)
+        .map(|_| {
+            t += rng.exponential(rate);
+            t
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prompt_exact_length_and_ascii() {
+        for profile in Profile::all() {
+            let p = prompt(7, 777, profile);
+            assert_eq!(p.len(), 777);
+            assert!(p.iter().all(|&t| (0..256).contains(&t)), "{profile:?}");
+        }
+    }
+
+    #[test]
+    fn prompts_differ_by_seed_and_profile() {
+        assert_ne!(prompt(1, 256, Profile::Pg19), prompt(2, 256, Profile::Pg19));
+        assert_ne!(prompt(1, 256, Profile::Pg19), prompt(1, 256, Profile::LexSum));
+    }
+
+    #[test]
+    fn arrivals_monotone_with_mean_near_rate() {
+        let a = poisson_arrivals(3, 2000, 10.0);
+        assert!(a.windows(2).all(|w| w[0] < w[1]));
+        let mean_gap = a.last().unwrap() / 2000.0;
+        assert!((0.08..0.12).contains(&mean_gap), "{mean_gap}");
+    }
+}

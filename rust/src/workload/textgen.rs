@@ -1,0 +1,147 @@
+//! Synthetic "book" generator — Rust mirror of python/compile/corpus.py.
+//!
+//! Same PCG32 stream, same template tables: serving prompts are drawn from
+//! the distribution the tiny model was pretrained on, which is what makes
+//! acceptance rates in the benchmarks meaningful. The long-range property
+//! (a per-document entity cast reused throughout) is what the paper's
+//! summarization datasets contribute: sparse draft caches that drop early
+//! context lose measurable agreement with the target.
+
+use super::Profile;
+use crate::util::rng::Pcg32;
+
+const FIRST: [&str; 16] = [
+    "Aldren", "Bryn", "Cormac", "Delia", "Edmund", "Farrah", "Gideon", "Halia",
+    "Ines", "Jorah", "Kestrel", "Lysandra", "Merek", "Nadia", "Orin", "Petra",
+];
+const LAST: [&str; 12] = [
+    "Ashford", "Blackwood", "Carver", "Dunmore", "Eastgate", "Fenwick",
+    "Greystone", "Hollis", "Ironwood", "Kearney", "Larkspur", "Mercer",
+];
+const PLACE: [&str; 8] = [
+    "Avonlea", "Briarhollow", "Caldera", "Dunhaven", "Eastmarch",
+    "Fallowfield", "Gildenport", "Harrowgate",
+];
+const VERB: [&str; 10] = [
+    "argued", "claimed", "discovered", "reported", "testified", "recalled",
+    "insisted", "admitted", "wrote", "observed",
+];
+const OBJ: [&str; 8] = [
+    "the ledger", "the treaty", "the northern road", "the old archive",
+    "the court record", "the shipment", "the boundary stone",
+    "the witness statement",
+];
+const CONN: [&str; 8] = [
+    "Meanwhile", "Later that year", "According to the record",
+    "In the third chapter", "As the council noted", "Despite this",
+    "By the following spring", "In a separate filing",
+];
+
+fn cast(rng: &mut Pcg32, n: usize) -> Vec<String> {
+    (0..n)
+        .map(|_| format!("{} {}", rng.choice(&FIRST), rng.choice(&LAST)))
+        .collect()
+}
+
+fn sentence(rng: &mut Pcg32, cast: &[String], places: &[&str]) -> String {
+    let s = rng.below(4);
+    let a = rng.choice(cast).clone();
+    let b = rng.choice(cast).clone();
+    let pl = *rng.choice(places);
+    let vb = *rng.choice(&VERB);
+    let ob = *rng.choice(&OBJ);
+    match s {
+        0 => format!("{a} {vb} that {ob} in {pl} belonged to {b}."),
+        1 => format!("{}, {a} {vb} about {ob} near {pl}.", rng.choice(&CONN)),
+        2 => format!("The case of {a} versus {b} concerned {ob} at {pl}."),
+        _ => format!("{a} met {b} in {pl} and {vb} over {ob}."),
+    }
+}
+
+/// Generate one document of exactly `length` bytes.
+pub fn generate_doc(seed: u64, length: usize, profile: Profile) -> Vec<u8> {
+    let mut rng = Pcg32::new(seed);
+    let n_cast = if profile == Profile::Pg19 { 6 } else { 10 };
+    let cast = cast(&mut rng, n_cast);
+    let places: Vec<&str> = (0..4).map(|_| *rng.choice(&PLACE)).collect();
+    let mut doc = match profile {
+        Profile::LexSum => format!("FILING {}: {} v. {}.\n", seed % 9973, cast[0], cast[1]),
+        Profile::InfBench => {
+            format!("The Chronicle of {}. Book {}.\n", places[0], 1 + seed % 12)
+        }
+        Profile::Pg19 => format!("{}: A History. Chapter {}.\n", places[0], 1 + seed % 20),
+    };
+    while doc.len() < length {
+        let n_sent = 3 + rng.below(4);
+        let mut para: Vec<String> = Vec::with_capacity(n_sent);
+        for _ in 0..n_sent {
+            para.push(sentence(&mut rng, &cast, &places));
+        }
+        let mut para = para.join(" ");
+        if profile == Profile::LexSum && rng.below(6) == 0 {
+            para = format!("EXHIBIT {}. {para}", (b'A' + rng.below(26) as u8) as char);
+        }
+        doc.push_str(&para);
+        doc.push('\n');
+    }
+    doc.truncate(length);
+    if matches!(profile, Profile::LexSum | Profile::InfBench) {
+        let tail = format!(
+            "\nSUMMARY: the dispute between {} and {} over {} in {}",
+            cast[0],
+            cast[1],
+            rng.choice(&OBJ),
+            places[0]
+        );
+        if tail.len() < length {
+            let cut = length - tail.len();
+            doc.truncate(cut);
+            doc.push_str(&tail);
+        }
+    }
+    doc.into_bytes()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(
+            generate_doc(42, 512, Profile::Pg19),
+            generate_doc(42, 512, Profile::Pg19)
+        );
+    }
+
+    #[test]
+    fn entities_recur_across_document() {
+        // long-range structure: at least one cast name appears in both the
+        // first and last quarter of the doc.
+        let doc = String::from_utf8(generate_doc(5, 4096, Profile::Pg19)).unwrap();
+        let (head, tail) = (&doc[..1024], &doc[3072..]);
+        let recur = FIRST
+            .iter()
+            .filter(|n| head.contains(*n) && tail.contains(*n))
+            .count();
+        assert!(recur >= 1, "no recurring entities");
+    }
+
+    #[test]
+    fn profiles_have_markers() {
+        let lex = String::from_utf8(generate_doc(1, 2048, Profile::LexSum)).unwrap();
+        assert!(lex.starts_with("FILING"));
+        assert!(lex.contains("SUMMARY:"));
+        let inf = String::from_utf8(generate_doc(1, 2048, Profile::InfBench)).unwrap();
+        assert!(inf.starts_with("The Chronicle"));
+    }
+
+    #[test]
+    fn exact_length_all_profiles() {
+        for p in Profile::all() {
+            for len in [300usize, 511, 2048] {
+                assert_eq!(generate_doc(9, len, p).len(), len);
+            }
+        }
+    }
+}
