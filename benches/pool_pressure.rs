@@ -1,0 +1,170 @@
+//! Multi-session decode under a constrained paged KV pool: admission
+//! control, LRU eviction of idle prefix caches, and clean rejection of
+//! oversized requests — reported alongside the Figure 6 KV-memory numbers
+//! the pool exists to manage.
+//!
+//!     cargo bench --bench pool_pressure
+
+use std::time::Instant;
+
+use quantspec::bench::{fmt_f, fmt_gb, Table};
+use quantspec::coordinator::batcher::{ActiveSession, StepBatcher};
+use quantspec::config::Method;
+use quantspec::costmodel::{memory, PaperModel};
+use quantspec::model::{mock_fb, MockDecoder, MOCK_GAMMA_MAX, MOCK_VOCAB};
+use quantspec::pool::{self, AdmitOutcome, PagedKvCache, PoolConfig};
+use quantspec::spec::Sampler;
+use quantspec::workload::{self, Profile};
+
+const G: usize = 8;
+const D: usize = 2;
+const PROMPT: usize = 24;
+const MAX_NEW: usize = 32;
+const DECODE_SESSIONS: u64 = 8;
+const IDLE_SESSIONS: u64 = 3;
+
+fn main() {
+    let pool_pages = 48;
+    let fb = mock_fb(G, MOCK_GAMMA_MAX);
+    let mgr = pool::shared(PoolConfig {
+        pages: pool_pages,
+        page_tokens: G,
+        kv_dim: D,
+        high_watermark: 0.9,
+        low_watermark: 0.7,
+    });
+
+    // --- phase 1: idle preemptable prefix caches (eviction fodder) ------
+    for i in 0..IDLE_SESSIONS {
+        let id = 1000 + i;
+        let mut m = mgr.lock().unwrap();
+        assert_eq!(m.admit(id, 8, true).unwrap(), AdmitOutcome::Admitted);
+        drop(m);
+        let mut cache = PagedKvCache::new(mgr.clone(), id, G, D, fb, 5 * G).unwrap();
+        cache
+            .prefill(4 * G, &|p| pool::mock_kv(p, p as i32, D))
+            .unwrap();
+        // dropping the handle leaves the pages resident (the manager owns
+        // reclamation); the cache stays until LRU eviction reclaims it
+    }
+    let idle_pages = mgr.lock().unwrap().pool().pages_in_use();
+    println!("idle prefix caches hold {idle_pages} pages of {pool_pages}");
+
+    // --- phase 2: decode sessions competing for the remainder ------------
+    let pages_per_req = memory::pool_pages_for_request(PROMPT, MAX_NEW, G, fb);
+    let cap_tokens = (pages_per_req - fb.div_ceil(G)) * G;
+    let mut pending: Vec<u64> = (1..=DECODE_SESSIONS).collect();
+    // one request sized past the watermarked pool: must be rejected clean
+    pending.push(99);
+    let too_large_pages = memory::pool_pages_for_request(400, MAX_NEW, G, fb);
+
+    let mut batcher = StepBatcher::new(4);
+    let mut shed = 0u64;
+    let mut admission_retries = 0u64;
+    let mut tokens = 0usize;
+    let mut completed = 0u64;
+    let t0 = Instant::now();
+    while !pending.is_empty() || batcher.active_len() > 0 {
+        let mut i = 0;
+        while batcher.has_capacity() && i < pending.len() {
+            let id = pending[i];
+            let pages = if id == 99 { too_large_pages } else { pages_per_req };
+            match mgr.lock().unwrap().admit(id, pages, false).unwrap() {
+                AdmitOutcome::Admitted => {
+                    pending.remove(i);
+                    let dec = MockDecoder::with_pool(
+                        MOCK_VOCAB,
+                        MOCK_GAMMA_MAX,
+                        0.15,
+                        mgr.clone(),
+                        id,
+                        cap_tokens,
+                    )
+                    .unwrap();
+                    let prompt = workload::prompt(id, PROMPT, Profile::Pg19);
+                    let sess = ActiveSession::admit(
+                        id,
+                        Box::new(dec),
+                        Sampler::new(0.0, id),
+                        4,
+                        &prompt,
+                        MAX_NEW,
+                    )
+                    .unwrap();
+                    batcher.admit(sess);
+                }
+                AdmitOutcome::Saturated => {
+                    admission_retries += 1;
+                    i += 1;
+                }
+                AdmitOutcome::TooLarge => {
+                    pending.remove(i);
+                    shed += 1;
+                }
+            }
+        }
+        if batcher.active_len() == 0 {
+            continue; // admission will succeed next pass (evictions freed pages)
+        }
+        tokens += batcher.round().unwrap();
+        for s in batcher.finished.drain(..) {
+            completed += 1;
+            mgr.lock().unwrap().release(s.id);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let (peak, in_use, evictions) = {
+        let m = mgr.lock().unwrap();
+        m.check_integrity().unwrap();
+        (
+            m.pool().peak_pages_in_use(),
+            m.pool().pages_in_use(),
+            m.evictions(),
+        )
+    };
+    assert!(peak <= pool_pages, "peak {peak} exceeded the pool bound");
+    assert_eq!(completed, DECODE_SESSIONS, "every decode session finished");
+    assert_eq!(shed, 1, "the oversized request was rejected cleanly");
+    assert!(evictions >= 1, "idle caches were evicted under pressure");
+
+    let mut t = Table::new(&[
+        "sessions",
+        "pool_pages",
+        "peak_pages",
+        "evictions",
+        "admission_retries",
+        "shed",
+        "tokens",
+        "tok_per_s",
+    ]);
+    t.row(&[
+        DECODE_SESSIONS.to_string(),
+        pool_pages.to_string(),
+        peak.to_string(),
+        evictions.to_string(),
+        admission_retries.to_string(),
+        shed.to_string(),
+        tokens.to_string(),
+        fmt_f(tokens as f64 / wall.max(1e-9), 0),
+    ]);
+    t.print("pool_pressure — multi-session decode under a bounded KV pool");
+    let _ = t.write_csv("bench_out/pool_pressure.csv");
+    println!("pages still resident (surviving idle caches): {in_use}");
+
+    // --- the Fig. 6 memory wall this pool manages (paper scale) ----------
+    let m = PaperModel::llama2_7b();
+    let mut f6 = Table::new(&["B", "S", "kv_fp16", "quantspec_total", "ratio"]);
+    for (b, s) in [(4usize, 32_768usize), (4, 131_072), (16, 131_072)] {
+        let kv = memory::kv_bytes_fp16(&m, b, s);
+        let qs = memory::method_bytes(&m, Method::QuantSpec, b, s, 128);
+        f6.row(&[
+            b.to_string(),
+            s.to_string(),
+            fmt_gb(kv),
+            fmt_gb(qs),
+            format!("{:.2}x", kv / qs),
+        ]);
+    }
+    f6.print("fig6 context — KV memory the paged pool bounds at paper scale");
+}

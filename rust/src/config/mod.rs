@@ -5,6 +5,7 @@
 //! manifest. Config files are JSON (parsed with util::json); every field has
 //! a production-sane default so `quantspec serve` runs with no file at all.
 
+use crate::pool::PoolConfig;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 
@@ -114,6 +115,10 @@ pub struct ServeConfig {
     pub bind: String,
     /// Context buckets to preload (empty = all in manifest).
     pub buckets: Vec<usize>,
+    /// Paged KV-cache pool (admission control + shared arena).
+    /// `pool.pages == 0` disables pooling: sessions keep private,
+    /// unaccounted cache state as in the original single-session path.
+    pub pool: PoolConfig,
 }
 
 impl Default for ServeConfig {
@@ -130,6 +135,7 @@ impl Default for ServeConfig {
             queue_capacity: 256,
             bind: "127.0.0.1:8311".into(),
             buckets: Vec::new(),
+            pool: PoolConfig { pages: 0, ..PoolConfig::default() },
         }
     }
 }
@@ -180,6 +186,26 @@ impl ServeConfig {
         }
         if let Some(arr) = j.get("buckets").and_then(Json::as_arr) {
             c.buckets = arr.iter().filter_map(Json::as_usize).collect();
+        }
+        if let Some(p) = j.get("pool") {
+            if let Some(v) = p.get("pages").and_then(Json::as_usize) {
+                c.pool.pages = v;
+            }
+            if let Some(v) = p.get("page_tokens").and_then(Json::as_usize) {
+                c.pool.page_tokens = v.max(1);
+            }
+            if let Some(v) = p.get("kv_dim").and_then(Json::as_usize) {
+                c.pool.kv_dim = v.max(1);
+            }
+            if let Some(v) = p.get("high_watermark").and_then(Json::as_f64) {
+                c.pool.high_watermark = v.clamp(0.0, 1.0);
+            }
+            if let Some(v) = p.get("low_watermark").and_then(Json::as_f64) {
+                c.pool.low_watermark = v.clamp(0.0, 1.0);
+            }
+            if c.pool.low_watermark > c.pool.high_watermark {
+                c.pool.low_watermark = c.pool.high_watermark;
+            }
         }
         Ok(c)
     }
@@ -251,6 +277,23 @@ mod tests {
         assert!((c.sampling.temperature - 0.8).abs() < 1e-6);
         assert_eq!(c.buckets, vec![512, 1024]);
         assert_eq!(c.max_new_tokens, 90); // default preserved
+        assert_eq!(c.pool.pages, 0, "pool disabled by default");
+    }
+
+    #[test]
+    fn pool_config_from_json() {
+        let j = Json::parse(
+            r#"{"pool":{"pages":128,"page_tokens":32,"kv_dim":4,
+                "high_watermark":0.8,"low_watermark":0.95}}"#,
+        )
+        .unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.pool.pages, 128);
+        assert_eq!(c.pool.page_tokens, 32);
+        assert_eq!(c.pool.kv_dim, 4);
+        assert!((c.pool.high_watermark - 0.8).abs() < 1e-9);
+        // low watermark is clamped to the high one
+        assert!((c.pool.low_watermark - 0.8).abs() < 1e-9);
     }
 
     #[test]

@@ -1,19 +1,32 @@
 //! Router + continuous batcher.
+//!
+//! When the paged KV pool is enabled (`cfg.pool.pages > 0`) the router runs
+//! admission control against it: every request gets a cost-model page
+//! reservation; a reservation that can never fit is failed cleanly, one
+//! that does not fit *right now* waits in the queue until a release (or an
+//! LRU eviction of a preemptable session) frees pages — the pool never
+//! overcommits, so concurrent long-context sessions cannot OOM each other.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::config::{Method, ServeConfig};
+use crate::costmodel::memory::pool_pages_for_request;
 use crate::metrics::Registry;
-use crate::model::{Decoder, MockDecoder};
+use crate::model::{mock_fb, Decoder, MockDecoder, MOCK_GAMMA_MAX, MOCK_VOCAB};
+use crate::pool::{self, AdmitOutcome, SharedSessionManager};
 use crate::runtime::{Runtime, WeightSet, Weights};
 use crate::spec::{Sampler, SpecEngine};
 use crate::util::now_secs;
+
+/// Marker prefix for admission rejections that are the *client's* size
+/// problem, not a server fault; the HTTP layer maps these to 413.
+pub const TOO_LARGE_PREFIX: &str = "too_large: ";
 
 /// One inbound generation request.
 #[derive(Debug, Clone)]
@@ -66,6 +79,8 @@ pub struct Coordinator {
     pub metrics: Arc<Registry>,
     next_id: AtomicU64,
     backend: Arc<EngineBackend>,
+    /// Shared paged KV pool; None when `cfg.pool.pages == 0`.
+    pool: Option<SharedSessionManager>,
 }
 
 impl Coordinator {
@@ -87,16 +102,34 @@ impl Coordinator {
         });
         let metrics = Arc::new(Registry::new());
         let backend = Arc::new(backend);
+        // The pool currently backs the mock decoder only; the XLA session
+        // manages its own device cache, so booking phantom pages for it
+        // would reject requests against memory it never allocates.
+        let pool = if cfg.pool.pages > 0 {
+            if matches!(&*backend, EngineBackend::Mock { .. }) {
+                Some(pool::shared(cfg.pool.clone()))
+            } else {
+                eprintln!(
+                    "warning: paged KV pool requested (pool.pages = {}) but \
+                     the XLA backend manages its own cache; pooling disabled",
+                    cfg.pool.pages
+                );
+                None
+            }
+        } else {
+            None
+        };
         let mut workers = Vec::new();
         for wid in 0..cfg.engines.max(1) {
             let shared = Arc::clone(&shared);
             let metrics = Arc::clone(&metrics);
             let backend = Arc::clone(&backend);
+            let pool = pool.clone();
             let cfg2 = cfg.clone();
             workers.push(
                 thread::Builder::new()
                     .name(format!("qs-engine-{wid}"))
-                    .spawn(move || engine_loop(wid, cfg2, shared, metrics, backend))?,
+                    .spawn(move || engine_loop(wid, cfg2, shared, metrics, backend, pool))?,
             );
         }
         Ok(Coordinator {
@@ -105,7 +138,8 @@ impl Coordinator {
             workers,
             metrics,
             next_id: AtomicU64::new(1),
-            backend: Arc::new(EngineBackend::Mock { draft_err: 0.0 }),
+            backend,
+            pool,
         })
     }
 
@@ -113,17 +147,30 @@ impl Coordinator {
         self.next_id.fetch_add(1, Ordering::Relaxed)
     }
 
-    /// Enqueue a request; Err when shedding load (queue full).
+    /// Enqueue a request; Err (with the spec and a reason) when shedding
+    /// load: queue full, or — with the paged pool enabled — pool pressure
+    /// already at the high watermark with a backlog (admitting more
+    /// arrivals could only grow the queue).
     pub fn submit(
         &self,
         spec: RequestSpec,
-    ) -> Result<mpsc::Receiver<Result<ResponseOut, String>>, RequestSpec> {
+    ) -> Result<mpsc::Receiver<Result<ResponseOut, String>>, (RequestSpec, &'static str)> {
         let (tx, rx) = mpsc::channel();
         {
             let mut q = self.shared.queue.lock().unwrap();
             if q.len() >= self.cfg.queue_capacity {
                 self.metrics.incr("requests_shed", 1);
-                return Err(spec);
+                return Err((spec, "queue full"));
+            }
+            if let Some(mgr) = &self.pool {
+                let m = mgr.lock().unwrap();
+                let saturated = m.committed_pages() >= m.high_pages();
+                if saturated && !q.is_empty() {
+                    drop(m);
+                    self.metrics.incr("requests_shed", 1);
+                    self.metrics.incr("requests_shed_pool", 1);
+                    return Err((spec, "KV pool saturated"));
+                }
             }
             q.push_back(Queued { spec, enqueued_at: now_secs(), done: tx });
             self.metrics.incr("requests_enqueued", 1);
@@ -136,7 +183,7 @@ impl Coordinator {
     pub fn generate(&self, spec: RequestSpec) -> Result<ResponseOut> {
         let rx = self
             .submit(spec)
-            .map_err(|_| anyhow::anyhow!("queue full (load shed)"))?;
+            .map_err(|(_, why)| anyhow::anyhow!("load shed: {why}"))?;
         rx.recv()
             .map_err(|_| anyhow::anyhow!("engine dropped request"))?
             .map_err(|e| anyhow::anyhow!(e))
@@ -144,6 +191,28 @@ impl Coordinator {
 
     pub fn queue_len(&self) -> usize {
         self.shared.queue.lock().unwrap().len()
+    }
+
+    /// The shared paged KV pool (None when disabled). Exposed so benches
+    /// and examples can seed preemptable sessions or read pool state.
+    pub fn pool(&self) -> Option<&SharedSessionManager> {
+        self.pool.as_ref()
+    }
+
+    /// Refresh the pool gauges in the metrics registry (called before each
+    /// `/stats` snapshot and after request completion).
+    pub fn sync_pool_gauges(&self) {
+        if let Some(mgr) = &self.pool {
+            sync_pool_gauges(mgr, &self.metrics);
+        }
+    }
+
+    /// Pool state for `/stats` (`null` when pooling is disabled).
+    pub fn pool_json(&self) -> crate::util::json::Json {
+        match &self.pool {
+            None => crate::util::json::Json::Null,
+            Some(mgr) => mgr.lock().unwrap().stats_json(),
+        }
     }
 
     pub fn shutdown(&mut self) {
@@ -166,29 +235,119 @@ impl Drop for Coordinator {
     }
 }
 
+fn sync_pool_gauges(mgr: &SharedSessionManager, metrics: &Registry) {
+    let m = mgr.lock().unwrap();
+    metrics.set_gauge("pool_pages_capacity", m.pool().capacity() as f64);
+    metrics.set_gauge("pool_pages_in_use", m.pool().pages_in_use() as f64);
+    metrics.set_gauge("pool_pages_peak", m.pool().peak_pages_in_use() as f64);
+    metrics.set_gauge("pool_pressure", m.pool().pressure());
+    metrics.set_gauge("pool_sessions_active", m.active_sessions() as f64);
+    metrics.set_gauge("pool_evictions", m.evictions() as f64);
+}
+
+/// Pool geometry plan for one mock request. Reservation (admission) and
+/// quantized-region cap (decoder) are derived in ONE place so they can
+/// never disagree: a request admission accepts always has the cache
+/// capacity its decode can reach.
+#[derive(Debug, Clone, Copy)]
+struct PoolPlan {
+    /// Pages booked at admission.
+    pages: usize,
+    /// Quantized-region token cap handed to the paged decoder.
+    cap_tokens: usize,
+}
+
+fn pool_plan(cfg: &ServeConfig, prompt_len: usize, max_new: usize) -> PoolPlan {
+    let g = cfg.pool.page_tokens.max(1);
+    let fb = mock_fb(g, MOCK_GAMMA_MAX);
+    let fp_pages = (fb + g - 1) / g;
+    let pages = pool_pages_for_request(prompt_len, max_new, g, fb);
+    PoolPlan { pages, cap_tokens: pages.saturating_sub(fp_pages) * g }
+}
+
+/// Outcome of head-of-line admission, decided while holding the queue lock.
+enum Admission {
+    Run,
+    Reject(String),
+}
+
 fn engine_loop(
     _wid: usize,
     cfg: ServeConfig,
     shared: Arc<Shared>,
     metrics: Arc<Registry>,
     backend: Arc<EngineBackend>,
+    pool: Option<SharedSessionManager>,
 ) {
     loop {
-        let job = {
+        // Pop the head job, admitting it against the paged pool first.
+        // Admission is strictly FIFO: a large-but-admissible request at
+        // the head waits for releases with every worker parked behind it,
+        // so a stream of small arrivals can never starve it. Peek, admit
+        // and pop happen under the queue lock (queue → pool lock order,
+        // same as submit), so two workers cannot race for one job.
+        let (job, admission) = {
             let mut q = shared.queue.lock().unwrap();
             loop {
                 if shared.stop.load(Ordering::Relaxed) {
                     return;
                 }
-                if let Some(j) = q.pop_front() {
-                    break j;
-                }
-                q = shared.cv.wait(q).unwrap();
+                let head = q
+                    .front()
+                    .map(|j| (j.spec.id, j.spec.prompt.len(), j.spec.max_new_tokens));
+                let Some((id, prompt_len, max_new)) = head else {
+                    q = shared.cv.wait(q).unwrap();
+                    continue;
+                };
+                let decision = match &pool {
+                    None => Admission::Run,
+                    Some(mgr) => {
+                        let plan = pool_plan(&cfg, prompt_len, max_new);
+                        match mgr.lock().unwrap().admit(id, plan.pages, false) {
+                            Ok(AdmitOutcome::Admitted) => Admission::Run,
+                            Ok(AdmitOutcome::TooLarge) => {
+                                metrics.incr("requests_rejected_too_large", 1);
+                                Admission::Reject(format!(
+                                    "{TOO_LARGE_PREFIX}request needs {} KV \
+                                     pages, over the pool's admission ceiling \
+                                     (no OOM: rejected up front)",
+                                    plan.pages
+                                ))
+                            }
+                            Ok(AdmitOutcome::Saturated) => {
+                                // Wait (bounded) for a release to free
+                                // pages; the job stays at the queue head.
+                                // Counter counts 5 ms polls, not jobs.
+                                metrics.incr("pool_admission_wait_polls", 1);
+                                q = shared
+                                    .cv
+                                    .wait_timeout(q, Duration::from_millis(5))
+                                    .unwrap()
+                                    .0;
+                                continue;
+                            }
+                            Err(e) => Admission::Reject(format!("{e:#}")),
+                        }
+                    }
+                };
+                break (q.pop_front().expect("peeked head"), decision);
             }
         };
+        if let Admission::Reject(msg) = admission {
+            metrics.incr("requests_failed", 1);
+            let _ = job.done.send(Err(msg));
+            continue;
+        }
         let queue_secs = now_secs() - job.enqueued_at;
         metrics.histogram("queue_wait").record_secs(queue_secs);
-        let result = run_request(&cfg, &backend, &job.spec, queue_secs, &metrics);
+        let result =
+            run_request(&cfg, &backend, &job.spec, queue_secs, &metrics, pool.as_ref());
+        if let Some(mgr) = &pool {
+            mgr.lock().unwrap().release(job.spec.id);
+            sync_pool_gauges(mgr, &metrics);
+            // Wake workers parked on Saturated admissions.
+            shared.cv.notify_all();
+        }
         match &result {
             Ok(r) => {
                 metrics.incr("requests_completed", 1);
@@ -211,6 +370,7 @@ fn run_request(
     spec: &RequestSpec,
     queue_secs: f64,
     metrics: &Registry,
+    pool: Option<&SharedSessionManager>,
 ) -> Result<ResponseOut> {
     let method = spec.method.unwrap_or(cfg.method);
     let gamma = spec.gamma.unwrap_or(cfg.gamma);
@@ -239,7 +399,22 @@ fn run_request(
             (Box::new(session), bucket)
         }
         EngineBackend::Mock { draft_err } => {
-            let mut m = MockDecoder::new(64, 7, *draft_err);
+            let mut m = match pool {
+                // Session already admitted by the engine loop; the KV cache
+                // lives in the shared arena, capped by the reservation.
+                Some(mgr) => {
+                    let plan = pool_plan(cfg, spec.prompt.len(), spec.max_new_tokens);
+                    MockDecoder::with_pool(
+                        MOCK_VOCAB,
+                        MOCK_GAMMA_MAX,
+                        *draft_err,
+                        mgr.clone(),
+                        spec.id,
+                        plan.cap_tokens,
+                    )?
+                }
+                None => MockDecoder::new(MOCK_VOCAB, MOCK_GAMMA_MAX, *draft_err),
+            };
             m.force_method(method);
             (Box::new(m), spec.prompt.len().max(1))
         }
@@ -414,6 +589,93 @@ mod tests {
         let out = c.generate(req(77, 6)).unwrap();
         assert_eq!(out.tokens.len(), 24); // req() helper's budget
         assert!(out.acceptance_rate > 0.5);
+    }
+
+    fn pool_coordinator(engines: usize, pages: usize) -> Coordinator {
+        let cfg = ServeConfig {
+            engines,
+            queue_capacity: 64,
+            max_new_tokens: 24,
+            pool: crate::pool::PoolConfig {
+                pages,
+                page_tokens: 8,
+                kv_dim: 2,
+                high_watermark: 0.9,
+                low_watermark: 0.7,
+            },
+            ..ServeConfig::default()
+        };
+        Coordinator::with_mock(cfg, 0.2).unwrap()
+    }
+
+    #[test]
+    fn pooled_requests_complete_and_release() {
+        let c = pool_coordinator(2, 64);
+        for i in 0..4 {
+            let r = c.generate(req(i, 6)).unwrap();
+            assert_eq!(r.tokens.len(), 24);
+            assert!(r.acceptance_rate > 0.0);
+        }
+        let mgr = c.pool().expect("pool enabled");
+        let m = mgr.lock().unwrap();
+        assert_eq!(m.pool().pages_in_use(), 0, "all sessions released");
+        assert!(m.pool().peak_pages_in_use() > 0);
+        assert!(m.pool().peak_pages_in_use() <= 64);
+    }
+
+    #[test]
+    fn pooled_output_identical_to_unpooled() {
+        let pooled = pool_coordinator(1, 64);
+        let plain = mock_coordinator(1, 16);
+        let a = pooled.generate(req(3, 8)).unwrap();
+        let b = plain.generate(req(3, 8)).unwrap();
+        assert_eq!(a.tokens, b.tokens, "pool must not change decode output");
+        assert_eq!(a.acceptance_rate, b.acceptance_rate);
+    }
+
+    #[test]
+    fn too_large_request_fails_cleanly() {
+        // 16-page pool (ceiling 14); a 200-token prompt needs ~31 pages.
+        let c = pool_coordinator(1, 16);
+        let err = c.generate(req(1, 200)).unwrap_err().to_string();
+        assert!(err.contains("pool"), "got: {err}");
+        assert_eq!(c.metrics.counter("requests_rejected_too_large"), 1);
+        // the pool is untouched and the next sane request still works
+        assert_eq!(c.generate(req(2, 6)).unwrap().tokens.len(), 24);
+    }
+
+    #[test]
+    fn saturated_pool_queues_until_release() {
+        // Each 6-token request reserves 9 pages; a 20-page pool (ceiling
+        // 18) fits two at a time, so with 4 engines racing, admissions
+        // must serialize (Saturated → head-of-line wait) — and all
+        // complete, none OOM or get lost.
+        let c = Arc::new(pool_coordinator(4, 20));
+        let mut rxs = Vec::new();
+        for i in 0..6 {
+            // submit() may shed under pool pressure depending on worker
+            // timing; retry until accepted so the test is deterministic.
+            let mut spec = req(i, 6);
+            let rx = loop {
+                match c.submit(spec) {
+                    Ok(rx) => break rx,
+                    Err((s, _)) => {
+                        spec = s;
+                        thread::sleep(Duration::from_millis(2));
+                    }
+                }
+            };
+            rxs.push(rx);
+        }
+        for rx in rxs {
+            let out = rx.recv().unwrap().unwrap();
+            assert_eq!(out.tokens.len(), 24);
+        }
+        assert_eq!(c.metrics.counter("requests_completed"), 6);
+        let mgr = c.pool().unwrap();
+        let m = mgr.lock().unwrap();
+        assert!(m.pool().peak_pages_in_use() <= 20, "hard bound held");
+        assert_eq!(m.pool().pages_in_use(), 0);
     }
 
     /// Property: with random request sizes and queue capacities, every

@@ -3,7 +3,9 @@
 //! Endpoints:
 //!   POST /generate  {"prompt": "text" | "tokens": [..], "max_new_tokens",
 //!                    "method", "gamma"} -> tokens + text + stats
-//!   GET  /stats     metrics snapshot
+//!   GET  /stats     metrics snapshot (+ "pool": paged KV pool state —
+//!                   pages in use/peak/committed, pressure, watermarks,
+//!                   evictions, logical vs host cache bytes)
 //!   GET  /healthz   liveness
 
 use std::sync::Arc;
@@ -25,7 +27,14 @@ pub fn serve(coord: Arc<Coordinator>, bind: &str) -> std::io::Result<Server> {
 fn handle(coord: &Coordinator, req: &Request) -> Response {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => Response::json(200, r#"{"ok":true}"#),
-        ("GET", "/stats") => Response::json(200, coord.metrics.snapshot().to_string()),
+        ("GET", "/stats") => {
+            coord.sync_pool_gauges();
+            let mut snap = coord.metrics.snapshot();
+            if let Json::Obj(map) = &mut snap {
+                map.insert("pool".to_string(), coord.pool_json());
+            }
+            Response::json(200, snap.to_string())
+        }
         ("POST", "/generate") => generate(coord, &req.body),
         _ => Response::json(404, r#"{"error":"not found"}"#),
     }
@@ -70,7 +79,12 @@ fn generate(coord: &Coordinator, body: &[u8]) -> Response {
     };
     let rx = match coord.submit(spec) {
         Ok(rx) => rx,
-        Err(_) => return Response::json(429, r#"{"error":"queue full"}"#),
+        Err((_, why)) => {
+            return Response::json(
+                429,
+                Json::obj(vec![("error", Json::str(format!("load shed: {why}")))]).to_string(),
+            )
+        }
     };
     match rx.recv() {
         Ok(Ok(out)) => {
@@ -102,7 +116,12 @@ fn generate(coord: &Coordinator, body: &[u8]) -> Response {
                 .to_string(),
             )
         }
-        Ok(Err(e)) => Response::json(500, Json::obj(vec![("error", Json::str(e))]).to_string()),
+        Ok(Err(e)) => {
+            // A pool-admission size rejection is the client's problem
+            // (shrink the request), not a server fault.
+            let status = if e.starts_with(super::router::TOO_LARGE_PREFIX) { 413 } else { 500 };
+            Response::json(status, Json::obj(vec![("error", Json::str(e))]).to_string())
+        }
         Err(_) => Response::json(500, r#"{"error":"engine dropped"}"#),
     }
 }
@@ -140,6 +159,36 @@ mod tests {
         assert_eq!(st, 200, "{}", String::from_utf8_lossy(&body));
         let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
         assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 16);
+    }
+
+    #[test]
+    fn stats_expose_pool_state() {
+        let cfg = ServeConfig {
+            engines: 1,
+            max_new_tokens: 12,
+            pool: crate::pool::PoolConfig {
+                pages: 32,
+                page_tokens: 8,
+                kv_dim: 2,
+                high_watermark: 0.9,
+                low_watermark: 0.7,
+            },
+            ..ServeConfig::default()
+        };
+        let coord = Arc::new(Coordinator::with_mock(cfg, 0.1).unwrap());
+        let srv = serve(Arc::clone(&coord), "127.0.0.1:0").unwrap();
+        let addr = srv.addr.to_string();
+        let (st, _) =
+            http_request(&addr, "POST", "/generate", br#"{"prompt":"hello"}"#).unwrap();
+        assert_eq!(st, 200);
+        let (st, body) = http_request(&addr, "GET", "/stats", b"").unwrap();
+        assert_eq!(st, 200);
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        let pool = j.get("pool").expect("pool block in /stats");
+        assert_eq!(pool.get("pages_capacity").unwrap().as_usize(), Some(32));
+        assert_eq!(pool.get("pages_in_use").unwrap().as_usize(), Some(0));
+        assert!(pool.get("pages_peak").unwrap().as_usize().unwrap() > 0);
+        assert!(j.get("gauges").is_some(), "metrics gauges in snapshot");
     }
 
     #[test]

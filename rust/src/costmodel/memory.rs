@@ -129,6 +129,64 @@ pub fn gpus_needed(
     None // OOM — the paper's "-" rows
 }
 
+/// Page reservation for one request against the paged KV pool: the cost
+/// model's upper bound on pages the session can ever hold. The prompt is
+/// padded up to a G-bucket (minimum 2G, mirroring the prefill invariant);
+/// the quantized region can grow to cover every generated token *plus the
+/// speculative overshoot* (the engine's last cycle may commit up to
+/// tmax − 2 cache entries past `max_new`, where tmax = FB − 2G); and the
+/// double FP buffer occupies `ceil(FB/G)` pages for the session's
+/// lifetime. Admission control books exactly this many pages, so an
+/// admitted decode can never outgrow its reservation.
+pub fn pool_pages_for_request(
+    prompt_len: usize,
+    max_new: usize,
+    g: usize,
+    fb: usize,
+) -> usize {
+    let g = g.max(1);
+    let padded = padded_bucket(prompt_len, g);
+    let overshoot = fb.saturating_sub(2 * g).saturating_sub(2);
+    let quant_pages = (padded + max_new + overshoot).div_ceil(g);
+    let fp_pages = fb.div_ceil(g);
+    quant_pages + fp_pages
+}
+
+/// Prompt length padded up to a G-bucket, minimum 2G (the prefill
+/// invariant needs one full quant group plus a full C_F1). The single
+/// source of the bucketing rule: the paged decoder's prefill and the
+/// admission reservation above both use it, so admission always covers
+/// the bucket the decoder will actually allocate.
+pub fn padded_bucket(prompt_len: usize, g: usize) -> usize {
+    let g = g.max(1);
+    prompt_len.max(1).div_ceil(g).max(2) * g
+}
+
+#[cfg(test)]
+mod pool_tests {
+    use super::*;
+
+    #[test]
+    fn reservation_covers_generation() {
+        // G=64, FB=136 (tmax=8, overshoot 6): a 512-token prompt
+        // generating 90 tokens can reach 602+6 cache entries; n_q never
+        // exceeds total - G, so ceil((512+90+6)/64) quant pages suffice;
+        // plus ceil(136/64) = 3 FP pages.
+        let pages = pool_pages_for_request(512, 90, 64, 136);
+        assert_eq!(pages, (512 + 90 + 6 + 63) / 64 + 3);
+        // tiny prompts still pad to the 2G prefill bucket
+        let tiny = pool_pages_for_request(5, 10, 64, 136);
+        assert_eq!(tiny, (128 + 10 + 6 + 63) / 64 + 3);
+    }
+
+    #[test]
+    fn reservation_monotonic() {
+        let base = pool_pages_for_request(256, 32, 64, 136);
+        assert!(pool_pages_for_request(512, 32, 64, 136) >= base);
+        assert!(pool_pages_for_request(256, 128, 64, 136) >= base);
+    }
+}
+
 #[cfg(test)]
 mod gpu_tests {
     use super::*;

@@ -8,11 +8,15 @@
 //! * **Layer 2** — JAX model (build-time Python, `python/compile/model.py`):
 //!   a Llama-style transformer whose attention calls the L1 kernels; lowered
 //!   AOT to HLO text artifacts.
-//! * **Layer 3** — this crate: the serving coordinator. Request router,
-//!   continuous batcher, speculative-decoding engine, hierarchical KV-cache
-//!   manager with the paper's double full-precision buffer, sparse-KV
-//!   baselines (StreamingLLM / SnapKV), and an analytical GPU cost model
-//!   used to project the paper's A6000 numbers from this CPU testbed.
+//! * **Layer 3** — this crate: the serving coordinator. Request router with
+//!   pool-pressure admission control, continuous batcher,
+//!   speculative-decoding engine, hierarchical KV-cache manager with the
+//!   paper's double full-precision buffer, a paged KV-cache pool
+//!   (`pool`: fixed-capacity page arena + session manager with
+//!   cost-model reservations, watermarks, and LRU preemption) shared by
+//!   all sessions, sparse-KV baselines (StreamingLLM / SnapKV), and an
+//!   analytical GPU cost model used to project the paper's A6000 numbers
+//!   from this CPU testbed.
 //!
 //! Python never runs on the request path: `make artifacts` lowers the model
 //! once, and the binary is self-contained afterwards.
@@ -22,6 +26,7 @@ pub mod config;
 pub mod costmodel;
 pub mod quant;
 pub mod cache;
+pub mod pool;
 pub mod runtime;
 pub mod model;
 pub mod spec;

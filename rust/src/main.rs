@@ -55,6 +55,8 @@ fn config_from_args(args: &Args) -> Result<ServeConfig> {
     if let Some(bl) = args.get_list("buckets") {
         cfg.buckets = bl;
     }
+    cfg.pool.pages = args.get_usize("pool-pages", cfg.pool.pages);
+    cfg.pool.page_tokens = args.get_usize("pool-page-tokens", cfg.pool.page_tokens).max(1);
     Ok(cfg)
 }
 
@@ -91,6 +93,8 @@ OPTIONS (shared):
   --engines N          decode engines (serve)
   --bind ADDR          HTTP bind (serve; default 127.0.0.1:8311)
   --mock               use the mock backend (no artifacts needed)
+  --pool-pages N       paged KV pool size in pages (0 = pooling off)
+  --pool-page-tokens G tokens per pool page (default 64)
 
 run-only:
   --prompt TEXT | --prompt-len N --profile pg19|lexsum|infbench --seed S"

@@ -100,10 +100,11 @@ impl Histogram {
     }
 }
 
-/// Named counters + histograms for one engine / the whole coordinator.
+/// Named counters + gauges + histograms for one engine / the coordinator.
 #[derive(Default)]
 pub struct Registry {
     counters: Mutex<BTreeMap<String, u64>>,
+    gauges: Mutex<BTreeMap<String, f64>>,
     histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
 }
 
@@ -120,6 +121,15 @@ impl Registry {
         *self.counters.lock().unwrap().get(name).unwrap_or(&0)
     }
 
+    /// Set an instantaneous value (pool pages in use, queue depth, ...).
+    pub fn set_gauge(&self, name: &str, value: f64) {
+        self.gauges.lock().unwrap().insert(name.to_string(), value);
+    }
+
+    pub fn gauge(&self, name: &str) -> f64 {
+        *self.gauges.lock().unwrap().get(name).unwrap_or(&0.0)
+    }
+
     pub fn histogram(&self, name: &str) -> std::sync::Arc<Histogram> {
         self.histograms
             .lock()
@@ -131,6 +141,7 @@ impl Registry {
 
     pub fn snapshot(&self) -> Json {
         let counters = self.counters.lock().unwrap();
+        let gauges = self.gauges.lock().unwrap();
         let hists = self.histograms.lock().unwrap();
         Json::obj(vec![
             (
@@ -139,6 +150,15 @@ impl Registry {
                     counters
                         .iter()
                         .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+                        .collect(),
+                ),
+            ),
+            (
+                "gauges",
+                Json::Obj(
+                    gauges
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::num(*v)))
                         .collect(),
                 ),
             ),
@@ -186,6 +206,16 @@ mod tests {
         let snap = r.snapshot().to_string();
         assert!(snap.contains("tokens"));
         assert!(snap.contains("step"));
+    }
+
+    #[test]
+    fn registry_gauges() {
+        let r = Registry::new();
+        assert_eq!(r.gauge("pool_pages_in_use"), 0.0);
+        r.set_gauge("pool_pages_in_use", 12.0);
+        r.set_gauge("pool_pages_in_use", 9.0); // gauges overwrite
+        assert_eq!(r.gauge("pool_pages_in_use"), 9.0);
+        assert!(r.snapshot().to_string().contains("pool_pages_in_use"));
     }
 
     #[test]

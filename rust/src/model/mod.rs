@@ -8,10 +8,11 @@
 
 pub mod xla_session;
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::cache::MemoryReport;
 use crate::config::Method;
+use crate::pool::{mock_kv, PagedKvCache, SessionId, SharedSessionManager};
 
 /// Cumulative phase timings for one session (seconds).
 #[derive(Debug, Clone, Copy, Default)]
@@ -63,6 +64,18 @@ pub trait Decoder: Send {
 // Mock backend
 // ---------------------------------------------------------------------
 
+/// Mock model constants shared with the router's pool sizing.
+pub const MOCK_VOCAB: usize = 64;
+pub const MOCK_GAMMA_MAX: usize = 7;
+
+/// FP-buffer capacity FB = 2G + tmax (tmax = gamma_max + 1). The single
+/// source of the mock cache geometry: both `MockDecoder::with_pool` and the
+/// router's admission sizing go through this, so a reservation and the
+/// decoder it funds can never disagree on FB.
+pub fn mock_fb(g: usize, gamma_max: usize) -> usize {
+    2 * g + gamma_max + 1
+}
+
 /// Deterministic toy LM. The "target" distribution is a peaked function of
 /// a rolling hash of the recent context; the "draft" sees the same
 /// distribution except that with probability `draft_err` (hash-derived, so
@@ -76,6 +89,49 @@ pub struct MockDecoder {
     last_verify: Vec<i32>,
     pub draft_err: f64,
     method: Method,
+    paged: Option<PagedState>,
+}
+
+/// Pool-backed KV state of a paged mock session. The decoder writes every
+/// token's (deterministic) KV vector through the block table and reads it
+/// back through page handles on the draft/verify paths, validating the
+/// reconstruction against the paper's error bounds — so page-table bugs
+/// surface as decode errors, while logits stay identical to the unpooled
+/// mock (acceptance/throughput match the seed path exactly).
+struct PagedState {
+    cache: PagedKvCache,
+    /// Pad tokens prepended in cache coordinates (bucket alignment).
+    pad: usize,
+    /// Draft writes issued in the current cycle.
+    cycle_writes: usize,
+    d: usize,
+}
+
+impl PagedState {
+    /// Token at cache position `p` (left-padded with newline, like
+    /// `router::pad_prompt`).
+    fn token_at(&self, committed: &[i32], p: usize) -> i32 {
+        if p < self.pad {
+            0x0A
+        } else {
+            committed.get(p - self.pad).copied().unwrap_or(0x0A)
+        }
+    }
+
+    /// Read position 0 back through the quantized page (draft or target
+    /// plane) and check it against the generator within the plane's bound.
+    fn validate_read(&self, committed: &[i32], draft: bool) -> Result<()> {
+        let want = mock_kv(0, self.token_at(committed, 0), self.d);
+        let got = self.cache.read_token(0, draft)?;
+        let bound = self.cache.group_error_bound(0, draft)?;
+        for (w, g) in want.iter().zip(&got) {
+            ensure!(
+                (w - g).abs() <= bound * 1.01 + 1e-6,
+                "paged KV read-back out of bounds: {w} vs {g} (bound {bound})"
+            );
+        }
+        Ok(())
+    }
 }
 
 impl MockDecoder {
@@ -88,7 +144,35 @@ impl MockDecoder {
             last_verify: Vec::new(),
             draft_err,
             method: Method::QuantSpec,
+            paged: None,
         }
+    }
+
+    /// A mock decoder whose KV cache lives in the shared paged pool. The
+    /// session must already be admitted; `cap_tokens` is the reserved
+    /// quantized-region capacity (reservation quant pages × G).
+    pub fn with_pool(
+        vocab: usize,
+        gamma_max: usize,
+        draft_err: f64,
+        mgr: SharedSessionManager,
+        session: SessionId,
+        cap_tokens: usize,
+    ) -> Result<MockDecoder> {
+        let (g, d) = {
+            let m = mgr.lock().unwrap_or_else(|p| p.into_inner());
+            (m.pool().cfg().page_tokens, m.pool().cfg().kv_dim)
+        };
+        let fb = mock_fb(g, gamma_max);
+        let cache = PagedKvCache::new(mgr, session, g, d, fb, cap_tokens)?;
+        let mut dec = MockDecoder::new(vocab, gamma_max, draft_err);
+        dec.paged = Some(PagedState { cache, pad: 0, cycle_writes: 0, d });
+        Ok(dec)
+    }
+
+    /// Pages currently held by this decoder's session (0 when unpooled).
+    pub fn pages(&self) -> usize {
+        self.paged.as_ref().map(|p| p.cache.pages()).unwrap_or(0)
     }
 
     /// Override the reported method (tests drive AR vs speculative paths).
@@ -153,20 +237,64 @@ impl Decoder for MockDecoder {
     fn prefill(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
         self.committed = tokens.to_vec();
         self.draft_tail.clear();
+        if let Some(p) = &mut self.paged {
+            // Pad to a G-bucket (≥ 2G) in cache coordinates; logits below
+            // still see the unpadded context, so outputs are unchanged.
+            let page_tokens = p.cache.page_tokens();
+            let padded =
+                crate::costmodel::memory::padded_bucket(tokens.len(), page_tokens);
+            p.pad = padded - tokens.len();
+            let committed = &self.committed;
+            let pad = p.pad;
+            let d = p.d;
+            p.cache.prefill(padded, &|pos| {
+                let tok = if pos < pad {
+                    0x0A
+                } else {
+                    committed.get(pos - pad).copied().unwrap_or(0x0A)
+                };
+                mock_kv(pos, tok, d)
+            })?;
+        }
         Ok(self.logits_for(&self.committed, false))
     }
 
     fn begin_cycle(&mut self) {
         self.draft_tail.clear();
+        if let Some(p) = &mut self.paged {
+            let _ = p.cache.begin_cycle();
+            p.cycle_writes = 0;
+        }
     }
 
     fn draft_step(&mut self, token: i32) -> Result<Vec<f32>> {
+        if let Some(p) = &mut self.paged {
+            let i = p.cycle_writes;
+            let tr = p.cache.tracker()?;
+            let pos = tr.n_q + tr.draft_slot(i)?;
+            let vals = mock_kv(pos, token, p.d);
+            p.cache.write_cycle_slot(i, &vals)?;
+            p.cycle_writes += 1;
+            // Draft path reads the INT4 plane through the block table.
+            p.validate_read(&self.committed, true)?;
+        }
         self.draft_tail.push(token);
         let ctx = self.full_ctx();
         Ok(self.logits_for(&ctx, true))
     }
 
     fn verify(&mut self, tokens: &[i32]) -> Result<Vec<Vec<f32>>> {
+        if let Some(p) = &mut self.paged {
+            // Target pass rewrites the drafted slots in place (Alg. 1).
+            for (i, &tok) in tokens.iter().enumerate() {
+                let tr = p.cache.tracker()?;
+                let pos = tr.n_q + tr.draft_slot(i)?;
+                let vals = mock_kv(pos, tok, p.d);
+                p.cache.write_cycle_slot(i, &vals)?;
+            }
+            // Verify path reads the INT8 plane through the block table.
+            p.validate_read(&self.committed, false)?;
+        }
         self.last_verify = tokens.to_vec();
         let mut ctx = self.committed.clone();
         let mut rows = Vec::with_capacity(tokens.len());
@@ -179,6 +307,9 @@ impl Decoder for MockDecoder {
 
     fn commit(&mut self, accepted: usize, verify_len: usize) -> Result<()> {
         anyhow::ensure!(accepted + 1 <= verify_len, "bad commit");
+        if let Some(p) = &mut self.paged {
+            p.cache.commit_cycle(accepted, verify_len)?;
+        }
         self.committed
             .extend(self.last_verify.iter().take(accepted + 1));
         self.draft_tail.clear();
@@ -187,6 +318,11 @@ impl Decoder for MockDecoder {
 
     fn ar_step(&mut self, token: i32) -> Result<Vec<f32>> {
         self.committed.push(token);
+        if let Some(p) = &mut self.paged {
+            let pos = p.pad + self.committed.len() - 1;
+            let vals = mock_kv(pos, token, p.d);
+            p.cache.commit_ar(&vals)?;
+        }
         Ok(self.logits_for(&self.committed, false))
     }
 
@@ -195,7 +331,18 @@ impl Decoder for MockDecoder {
     }
 
     fn memory(&self) -> MemoryReport {
-        MemoryReport::default()
+        match &self.paged {
+            None => MemoryReport::default(),
+            Some(p) => {
+                let (logical, host) = p.cache.session_bytes();
+                MemoryReport {
+                    weights_logical: 0,
+                    weights_host: 0,
+                    cache_logical: logical,
+                    cache_host: host,
+                }
+            }
+        }
     }
 
     fn timings(&self) -> PhaseTimings {
@@ -227,6 +374,76 @@ mod tests {
             v.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0
         };
         assert_eq!(am(&d), am(&v[0]));
+    }
+
+    #[test]
+    fn paged_mock_matches_unpooled_and_frees() {
+        use crate::pool::{shared, PoolConfig};
+        use crate::spec::{Sampler, SpecEngine};
+        let mgr = shared(PoolConfig {
+            pages: 64,
+            page_tokens: 8,
+            kv_dim: 2,
+            high_watermark: 1.0,
+            low_watermark: 1.0,
+        });
+        let prompt = [1, 2, 3, 4, 5, 6];
+        let fb = 2 * 8 + 8; // 2G + (gamma_max + 1)
+        let pages =
+            crate::costmodel::memory::pool_pages_for_request(prompt.len(), 40, 8, fb);
+        let cap_tokens = (pages - fb.div_ceil(8)) * 8;
+        {
+            let mut m = mgr.lock().unwrap();
+            assert_eq!(
+                m.admit(1, pages, false).unwrap(),
+                crate::pool::AdmitOutcome::Admitted
+            );
+        }
+        let mut paged =
+            MockDecoder::with_pool(64, 7, 0.2, mgr.clone(), 1, cap_tokens).unwrap();
+        let out_paged = SpecEngine::new(4, Sampler::new(0.0, 7))
+            .generate(&mut paged, &prompt, 40)
+            .unwrap();
+        assert!(paged.pages() > 0);
+        assert!(paged.memory().cache_host > paged.memory().cache_logical);
+
+        let mut plain = MockDecoder::new(64, 7, 0.2);
+        let out_plain = SpecEngine::new(4, Sampler::new(0.0, 7))
+            .generate(&mut plain, &prompt, 40)
+            .unwrap();
+        assert_eq!(out_paged.tokens, out_plain.tokens, "pooling must not change outputs");
+        assert_eq!(out_paged.accepted, out_plain.accepted);
+
+        drop(paged);
+        let mut m = mgr.lock().unwrap();
+        m.release(1);
+        assert_eq!(m.pool().pages_in_use(), 0, "session release reclaims all pages");
+    }
+
+    #[test]
+    fn paged_mock_ar_path() {
+        use crate::pool::{shared, PoolConfig};
+        use crate::spec::{Sampler, SpecEngine};
+        let mgr = shared(PoolConfig {
+            pages: 64,
+            page_tokens: 8,
+            kv_dim: 2,
+            high_watermark: 1.0,
+            low_watermark: 1.0,
+        });
+        mgr.lock().unwrap().admit(9, 12, false).unwrap();
+        let mut dec = MockDecoder::with_pool(64, 7, 0.0, mgr.clone(), 9, 72).unwrap();
+        dec.force_method(Method::Autoregressive);
+        let mut plain = MockDecoder::new(64, 7, 0.0);
+        plain.force_method(Method::Autoregressive);
+        let eng = |d: &mut MockDecoder| {
+            SpecEngine::new(1, Sampler::new(0.0, 3))
+                .generate(d, &[7, 8, 9], 30)
+                .unwrap()
+                .tokens
+        };
+        assert_eq!(eng(&mut dec), eng(&mut plain));
+        mgr.lock().unwrap().release(9);
     }
 
     #[test]

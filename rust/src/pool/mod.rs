@@ -1,0 +1,52 @@
+//! Paged hierarchical KV-cache pool: the shared memory arena under every
+//! session's cache (the serving-scale counterpart of `cache::CacheTracker`).
+//!
+//! The paper treats one request's KV cache as the bottleneck (§4.3); under
+//! multi-sequence serving the binding constraint is the *sum* of caches, so
+//! all cache memory is owned by one fixed-capacity [`page::PagePool`] and
+//! sessions hold only block tables into it.
+//!
+//! # Page layout
+//!
+//! A page holds exactly G tokens of KV for one session, either as a
+//! hierarchically quantized group (nibble-packed INT4 upper/lower planes +
+//! scale/zero — the bit-shared draft/target representation of §4.2) or as
+//! full-precision buffer slots. A session's cache is:
+//!
+//! ```text
+//!   groups[0] groups[1] ... groups[n-1] | fp[0] fp[1] fp[2]
+//!   └── quantized region, n_q tokens ──┘ └─ FB = 2G+tmax slots ─┘
+//! ```
+//!
+//! Flush = quantize C_F1 *into a freshly allocated page* + shift C_F2;
+//! speculation rollback never touches pages (the tracker just commits a
+//! smaller count), so both stay O(1) in page traffic.
+//!
+//! # Sessions, watermarks, admission
+//!
+//! [`session::SessionManager`] brokers the arena: requests are admitted
+//! with a cost-model page reservation
+//! (`costmodel::memory::pool_pages_for_request`) and the manager counts
+//! *committed* pages = Σ max(reserved, allocated). Admission holds
+//! committed pages at or below the **high watermark**; crossing it first
+//! LRU-evicts *preemptable* sessions (idle prefix caches) down to the
+//! **low watermark**, and only then reports `Saturated` (the router then
+//! queues or sheds — never OOM). A reservation larger than the watermarked
+//! pool is rejected outright as `TooLarge`.
+//!
+//! # Accounting convention
+//!
+//! Two byte counts are maintained everywhere, matching `cache::MemoryReport`:
+//! **logical** bytes use true device bit widths (INT4 = 0.5 B, fp16 KV),
+//! **host** bytes are what this CPU testbed actually holds (nibbles in i8,
+//! fp in f32). `/stats` and the benches report both; watermarks and
+//! capacity are denominated in pages, which are identical in either
+//! convention.
+
+pub mod page;
+pub mod paged;
+pub mod session;
+
+pub use page::{PageHandle, PageKind, PagePool, PoolConfig, SessionId};
+pub use paged::{mock_kv, BlockTable, PagedKvCache};
+pub use session::{shared, AdmitOutcome, SessionManager, SharedSessionManager};

@@ -1,0 +1,512 @@
+//! The page arena: fixed-size pages, generation-checked handles, and
+//! logical-vs-host byte accounting.
+//!
+//! A page is the pool's unit of allocation and holds exactly G tokens of KV
+//! state for one session, in one of two layouts:
+//!
+//! * **Quant** — one hierarchically quantized G-token group: nibble-packed
+//!   upper/lower planes (`quant::QuantGroup`, G·d codes each) plus the
+//!   group's scale/zero. Immutable once written; flush writes a fresh page.
+//! * **Fp** — G token slots of full-precision KV (G·d f32 on this host,
+//!   fp16 logically). The double FP buffer of a session spans
+//!   `ceil(FB / G)` such pages and is mutated in place (draft writes,
+//!   verify rewrites, flush shifts).
+//!
+//! Handles carry a per-slot generation that is bumped on free, so stale
+//! handles (double-free, use-after-evict) are detected instead of silently
+//! corrupting another session's cache.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::quant::QuantGroup;
+
+/// Owner tag for pages; the coordinator uses the request id.
+pub type SessionId = u64;
+
+/// Which layout a page holds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PageKind {
+    Quant,
+    Fp,
+}
+
+/// Generation-checked reference to a page in the arena.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PageHandle {
+    id: u32,
+    gen: u32,
+}
+
+impl PageHandle {
+    pub fn id(&self) -> u32 {
+        self.id
+    }
+}
+
+/// Pool geometry and admission watermarks.
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    /// Total pages in the arena (the hard memory bound).
+    pub pages: usize,
+    /// Tokens per page == quantization group size G.
+    pub page_tokens: usize,
+    /// KV feature dim d per token (the mock's kv vectors; real models would
+    /// use n_kv_heads * head_dim).
+    pub kv_dim: usize,
+    /// Admission ceiling: reject new sessions when committed pages would
+    /// exceed this fraction of the arena.
+    pub high_watermark: f64,
+    /// Eviction target: LRU-evict preemptable sessions down to this
+    /// fraction before giving up on an admission.
+    pub low_watermark: f64,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            pages: 256,
+            page_tokens: 64,
+            kv_dim: 8,
+            high_watermark: 0.90,
+            low_watermark: 0.70,
+        }
+    }
+}
+
+impl PoolConfig {
+    fn elems(&self) -> usize {
+        self.page_tokens * self.kv_dim
+    }
+
+    /// Host bytes of one quant page: two i8 nibble planes + f32 scale/zero.
+    pub fn quant_page_host_bytes(&self) -> usize {
+        2 * self.elems() + 8
+    }
+
+    /// Logical bytes of one quant page: 2×INT4 = 1 byte per element plus
+    /// fp16 scale/zero (the paper's bit-shared draft/target cache).
+    pub fn quant_page_logical_bytes(&self) -> usize {
+        self.elems() + 4
+    }
+
+    /// Host bytes of one FP page (f32 on this testbed).
+    pub fn fp_page_host_bytes(&self) -> usize {
+        4 * self.elems()
+    }
+
+    /// Logical bytes of one FP page (fp16 on device).
+    pub fn fp_page_logical_bytes(&self) -> usize {
+        2 * self.elems()
+    }
+}
+
+enum PageData {
+    /// None until the group is written (alloc-then-quantize window).
+    Quant(Option<QuantGroup>),
+    Fp(Vec<f32>),
+}
+
+struct Slot {
+    gen: u32,
+    /// None = free; Some((owner, data)) = in use.
+    state: Option<(SessionId, PageData)>,
+}
+
+/// Fixed-capacity arena of KV pages shared by all sessions.
+pub struct PagePool {
+    cfg: PoolConfig,
+    slots: Vec<Slot>,
+    free: Vec<u32>,
+    in_use: usize,
+    peak_in_use: usize,
+    n_quant: usize,
+    n_fp: usize,
+    allocs: u64,
+    frees: u64,
+}
+
+impl PagePool {
+    pub fn new(cfg: PoolConfig) -> PagePool {
+        let pages = cfg.pages;
+        PagePool {
+            cfg,
+            slots: (0..pages).map(|_| Slot { gen: 0, state: None }).collect(),
+            // Reversed so pages allocate in ascending id order.
+            free: (0..pages as u32).rev().collect(),
+            in_use: 0,
+            peak_in_use: 0,
+            n_quant: 0,
+            n_fp: 0,
+            allocs: 0,
+            frees: 0,
+        }
+    }
+
+    pub fn cfg(&self) -> &PoolConfig {
+        &self.cfg
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn pages_in_use(&self) -> usize {
+        self.in_use
+    }
+
+    pub fn peak_pages_in_use(&self) -> usize {
+        self.peak_in_use
+    }
+
+    /// Fill fraction in [0, 1].
+    pub fn pressure(&self) -> f64 {
+        if self.slots.is_empty() {
+            return 1.0;
+        }
+        self.in_use as f64 / self.slots.len() as f64
+    }
+
+    pub fn allocs(&self) -> u64 {
+        self.allocs
+    }
+
+    pub fn frees(&self) -> u64 {
+        self.frees
+    }
+
+    /// Host-resident bytes of all live pages (what this testbed holds).
+    pub fn host_bytes(&self) -> usize {
+        self.n_quant * self.cfg.quant_page_host_bytes()
+            + self.n_fp * self.cfg.fp_page_host_bytes()
+    }
+
+    /// Logical bytes of all live pages (true device bit widths).
+    pub fn logical_bytes(&self) -> usize {
+        self.n_quant * self.cfg.quant_page_logical_bytes()
+            + self.n_fp * self.cfg.fp_page_logical_bytes()
+    }
+
+    pub fn alloc(&mut self, kind: PageKind, owner: SessionId) -> Result<PageHandle> {
+        let Some(id) = self.free.pop() else {
+            bail!(
+                "pool exhausted: {} / {} pages in use",
+                self.in_use,
+                self.slots.len()
+            );
+        };
+        let slot = &mut self.slots[id as usize];
+        debug_assert!(slot.state.is_none(), "free-list slot in use");
+        let data = match kind {
+            PageKind::Quant => {
+                self.n_quant += 1;
+                PageData::Quant(None)
+            }
+            PageKind::Fp => {
+                self.n_fp += 1;
+                PageData::Fp(vec![0.0; self.cfg.page_tokens * self.cfg.kv_dim])
+            }
+        };
+        slot.state = Some((owner, data));
+        self.in_use += 1;
+        self.peak_in_use = self.peak_in_use.max(self.in_use);
+        self.allocs += 1;
+        Ok(PageHandle { id, gen: slot.gen })
+    }
+
+    fn check(&self, h: PageHandle, owner: SessionId) -> Result<()> {
+        let slot = self
+            .slots
+            .get(h.id as usize)
+            .ok_or_else(|| anyhow::anyhow!("page id {} out of range", h.id))?;
+        ensure!(
+            slot.gen == h.gen,
+            "stale page handle {} (gen {} != slot gen {}): double free or use after evict",
+            h.id,
+            h.gen,
+            slot.gen
+        );
+        match &slot.state {
+            None => bail!("page {} is free", h.id),
+            Some((o, _)) => ensure!(
+                *o == owner,
+                "page {} owned by session {o}, not {owner}",
+                h.id
+            ),
+        }
+        Ok(())
+    }
+
+    pub fn free(&mut self, h: PageHandle, owner: SessionId) -> Result<PageKind> {
+        self.check(h, owner)?;
+        let slot = &mut self.slots[h.id as usize];
+        let kind = match slot.state.take() {
+            Some((_, PageData::Quant(_))) => {
+                self.n_quant -= 1;
+                PageKind::Quant
+            }
+            Some((_, PageData::Fp(_))) => {
+                self.n_fp -= 1;
+                PageKind::Fp
+            }
+            None => unreachable!("check() verified the slot is in use"),
+        };
+        slot.gen = slot.gen.wrapping_add(1);
+        self.free.push(h.id);
+        self.in_use -= 1;
+        self.frees += 1;
+        Ok(kind)
+    }
+
+    /// Free every page owned by `owner` (session release / eviction).
+    /// Returns the number of pages reclaimed.
+    pub fn free_all(&mut self, owner: SessionId) -> usize {
+        let mut freed = 0;
+        for id in 0..self.slots.len() as u32 {
+            let is_owned = matches!(&self.slots[id as usize].state, Some((o, _)) if *o == owner);
+            if is_owned {
+                let gen = self.slots[id as usize].gen;
+                self.free(PageHandle { id, gen }, owner)
+                    .expect("owned page must free");
+                freed += 1;
+            }
+        }
+        freed
+    }
+
+    pub fn pages_owned(&self, owner: SessionId) -> usize {
+        self.slots
+            .iter()
+            .filter(|s| matches!(&s.state, Some((o, _)) if *o == owner))
+            .count()
+    }
+
+    pub fn write_quant(
+        &mut self,
+        h: PageHandle,
+        owner: SessionId,
+        group: QuantGroup,
+    ) -> Result<()> {
+        self.check(h, owner)?;
+        let elems = self.cfg.page_tokens * self.cfg.kv_dim;
+        ensure!(
+            group.upper.len() == elems && group.lower.len() == elems,
+            "quant group has {} codes, page holds {elems}",
+            group.upper.len()
+        );
+        match &mut self.slots[h.id as usize].state {
+            Some((_, PageData::Quant(g))) => {
+                *g = Some(group);
+                Ok(())
+            }
+            _ => bail!("page {} is not a quant page", h.id),
+        }
+    }
+
+    pub fn read_quant(&self, h: PageHandle, owner: SessionId) -> Result<&QuantGroup> {
+        self.check(h, owner)?;
+        match &self.slots[h.id as usize].state {
+            Some((_, PageData::Quant(Some(g)))) => Ok(g),
+            Some((_, PageData::Quant(None))) => {
+                bail!("quant page {} allocated but never written", h.id)
+            }
+            _ => bail!("page {} is not a quant page", h.id),
+        }
+    }
+
+    pub fn fp(&self, h: PageHandle, owner: SessionId) -> Result<&[f32]> {
+        self.check(h, owner)?;
+        match &self.slots[h.id as usize].state {
+            Some((_, PageData::Fp(v))) => Ok(v),
+            _ => bail!("page {} is not an fp page", h.id),
+        }
+    }
+
+    pub fn fp_mut(&mut self, h: PageHandle, owner: SessionId) -> Result<&mut [f32]> {
+        self.check(h, owner)?;
+        match &mut self.slots[h.id as usize].state {
+            Some((_, PageData::Fp(v))) => Ok(v),
+            _ => bail!("page {} is not an fp page", h.id),
+        }
+    }
+
+    /// Structural invariants; used by tests and the session manager's
+    /// consistency checks.
+    pub fn check_integrity(&self) -> Result<()> {
+        ensure!(
+            self.in_use + self.free.len() == self.slots.len(),
+            "page accounting broken: {} in use + {} free != {} slots",
+            self.in_use,
+            self.free.len(),
+            self.slots.len()
+        );
+        ensure!(
+            self.n_quant + self.n_fp == self.in_use,
+            "kind counts {} + {} != in_use {}",
+            self.n_quant,
+            self.n_fp,
+            self.in_use
+        );
+        let mut seen = vec![false; self.slots.len()];
+        for &id in &self.free {
+            let slot = &self.slots[id as usize];
+            ensure!(slot.state.is_none(), "free-list page {id} is in use");
+            ensure!(!seen[id as usize], "page {id} on free list twice");
+            seen[id as usize] = true;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::quant_group;
+
+    fn pool(pages: usize) -> PagePool {
+        PagePool::new(PoolConfig {
+            pages,
+            page_tokens: 4,
+            kv_dim: 2,
+            ..PoolConfig::default()
+        })
+    }
+
+    fn group(pool: &PagePool, seed: f32) -> QuantGroup {
+        let n = pool.cfg().page_tokens * pool.cfg().kv_dim;
+        let xs: Vec<f32> = (0..n).map(|i| seed + i as f32 * 0.25).collect();
+        quant_group(&xs)
+    }
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut p = pool(4);
+        let h = p.alloc(PageKind::Fp, 1).unwrap();
+        assert_eq!(p.pages_in_use(), 1);
+        p.fp_mut(h, 1).unwrap()[0] = 3.5;
+        assert_eq!(p.fp(h, 1).unwrap()[0], 3.5);
+        p.free(h, 1).unwrap();
+        assert_eq!(p.pages_in_use(), 0);
+        p.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn exhaustion_and_reuse() {
+        let mut p = pool(2);
+        let a = p.alloc(PageKind::Fp, 1).unwrap();
+        let _b = p.alloc(PageKind::Quant, 1).unwrap();
+        assert!(p.alloc(PageKind::Fp, 1).is_err(), "pool must be exhausted");
+        p.free(a, 1).unwrap();
+        let c = p.alloc(PageKind::Quant, 2).unwrap();
+        assert_eq!(c.id(), a.id(), "freed page is reused");
+        p.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn stale_handle_rejected() {
+        let mut p = pool(2);
+        let h = p.alloc(PageKind::Fp, 1).unwrap();
+        p.free(h, 1).unwrap();
+        assert!(p.free(h, 1).is_err(), "double free must be rejected");
+        let h2 = p.alloc(PageKind::Fp, 1).unwrap();
+        assert_eq!(h2.id(), h.id());
+        assert!(p.fp(h, 1).is_err(), "stale handle must not read new page");
+    }
+
+    #[test]
+    fn owner_enforced() {
+        let mut p = pool(2);
+        let h = p.alloc(PageKind::Fp, 1).unwrap();
+        assert!(p.fp(h, 2).is_err());
+        assert!(p.free(h, 2).is_err());
+        p.free(h, 1).unwrap();
+    }
+
+    #[test]
+    fn free_all_reclaims_only_owner() {
+        let mut p = pool(8);
+        for _ in 0..3 {
+            p.alloc(PageKind::Quant, 7).unwrap();
+        }
+        let other = p.alloc(PageKind::Fp, 9).unwrap();
+        assert_eq!(p.free_all(7), 3);
+        assert_eq!(p.pages_in_use(), 1);
+        assert!(p.fp(other, 9).is_ok());
+        p.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn quant_write_read() {
+        let mut p = pool(2);
+        let h = p.alloc(PageKind::Quant, 1).unwrap();
+        assert!(p.read_quant(h, 1).is_err(), "unwritten page unreadable");
+        let g = group(&p, -1.0);
+        p.write_quant(h, 1, g.clone()).unwrap();
+        assert_eq!(p.read_quant(h, 1).unwrap().upper, g.upper);
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let mut p = pool(4);
+        let elems = 8; // 4 tokens * 2 dims
+        p.alloc(PageKind::Quant, 1).unwrap();
+        p.alloc(PageKind::Fp, 1).unwrap();
+        assert_eq!(p.host_bytes(), (2 * elems + 8) + 4 * elems);
+        assert_eq!(p.logical_bytes(), (elems + 4) + 2 * elems);
+        assert!(p.logical_bytes() < p.host_bytes());
+    }
+
+    /// Property: random alloc/free sequences never corrupt the arena —
+    /// counts stay consistent, nothing double-frees, nothing leaks.
+    #[test]
+    fn prop_alloc_free_invariants() {
+        use crate::util::prop::{check, Config};
+        check::<Vec<usize>, _>(
+            Config { cases: 60, size: 48, ..Config::default() },
+            |ops| {
+                let mut p = pool(6);
+                let mut live: Vec<(PageHandle, SessionId)> = Vec::new();
+                for &op in ops {
+                    match op % 3 {
+                        0 | 1 => {
+                            let owner = (op % 4) as SessionId;
+                            let kind =
+                                if op % 2 == 0 { PageKind::Quant } else { PageKind::Fp };
+                            match p.alloc(kind, owner) {
+                                Ok(h) => live.push((h, owner)),
+                                Err(_) => {
+                                    if p.pages_in_use() != p.capacity() {
+                                        return false; // alloc may only fail when full
+                                    }
+                                }
+                            }
+                        }
+                        _ => {
+                            if !live.is_empty() {
+                                let (h, owner) = live.remove(op % live.len());
+                                if p.free(h, owner).is_err() {
+                                    return false;
+                                }
+                                // a second free of the same handle must fail
+                                if p.free(h, owner).is_ok() {
+                                    return false;
+                                }
+                            }
+                        }
+                    }
+                    if p.check_integrity().is_err() {
+                        return false;
+                    }
+                    if p.pages_in_use() != live.len() {
+                        return false;
+                    }
+                }
+                for (h, owner) in live {
+                    if p.free(h, owner).is_err() {
+                        return false;
+                    }
+                }
+                p.pages_in_use() == 0 && p.check_integrity().is_ok()
+            },
+        );
+    }
+}

@@ -1,0 +1,513 @@
+//! Per-session paged view of the hierarchical cache: a block table over the
+//! shared arena driven by the paper's `CacheTracker` state machine.
+//!
+//! Layout per session:
+//!
+//! * `groups[i]` — quant page holding committed tokens `[i·G, (i+1)·G)`;
+//!   grows by exactly one page per flush (the paper's amortized 1/G
+//!   quantization cost becomes one page allocation per G tokens).
+//! * `fp[j]` — FP page holding buffer slots `[j·G, (j+1)·G)`; the double FP
+//!   buffer (FB = 2G + tmax slots) is `ceil(FB/G)` pages allocated up
+//!   front and mutated in place.
+//!
+//! Speculation rollback stays O(1): verify rewrites the drafted FP slots in
+//! place, so rejecting tokens is only the tracker committing a smaller
+//! count — no page traffic. A flush quantizes C_F1 *into a freshly
+//! allocated page* and shifts C_F2 down, so a mid-flush failure (pool
+//! exhausted, nothing evictable) surfaces as a clean error before any
+//! state is lost.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::cache::CacheTracker;
+use crate::quant::{dequant_draft, dequant_target, quant_group};
+use crate::util::rng::Pcg32;
+
+use super::page::{PageHandle, PageKind, SessionId};
+use super::session::SharedSessionManager;
+
+/// Map from a session's logical cache to arena pages.
+#[derive(Debug, Default, Clone)]
+pub struct BlockTable {
+    /// Quantized region, one page per committed G-token group.
+    pub groups: Vec<PageHandle>,
+    /// Double FP buffer pages (fixed once allocated).
+    pub fp: Vec<PageHandle>,
+}
+
+/// One session's KV cache living entirely in the shared pool.
+pub struct PagedKvCache {
+    mgr: SharedSessionManager,
+    pub session: SessionId,
+    table: BlockTable,
+    tracker: Option<CacheTracker>,
+    g: usize,
+    d: usize,
+    fb: usize,
+    /// Quantized-region token capacity (the reservation, rounded to G).
+    cap_tokens: usize,
+}
+
+impl PagedKvCache {
+    /// Allocate the FP buffer pages; the quantized region grows at prefill
+    /// and flush time. The session must already be admitted.
+    pub fn new(
+        mgr: SharedSessionManager,
+        session: SessionId,
+        g: usize,
+        d: usize,
+        fb: usize,
+        cap_tokens: usize,
+    ) -> Result<PagedKvCache> {
+        ensure!(g > 0 && d > 0 && fb >= 2 * g, "bad cache geometry");
+        ensure!(cap_tokens % g == 0, "cap_tokens must be a multiple of G");
+        let fp_pages = (fb + g - 1) / g;
+        let mut table = BlockTable::default();
+        {
+            let mut m = lock(&mgr);
+            ensure!(
+                m.pool().cfg().page_tokens == g && m.pool().cfg().kv_dim == d,
+                "cache geometry (G={g}, d={d}) does not match pool ({}, {})",
+                m.pool().cfg().page_tokens,
+                m.pool().cfg().kv_dim
+            );
+            for _ in 0..fp_pages {
+                table.fp.push(m.alloc(session, PageKind::Fp)?);
+            }
+        }
+        Ok(PagedKvCache {
+            mgr,
+            session,
+            table,
+            tracker: None,
+            g,
+            d,
+            fb,
+            cap_tokens,
+        })
+    }
+
+    pub fn tracker(&self) -> Result<&CacheTracker> {
+        self.tracker.as_ref().context("cache not prefilled")
+    }
+
+    fn tracker_mut(&mut self) -> Result<&mut CacheTracker> {
+        self.tracker.as_mut().context("cache not prefilled")
+    }
+
+    pub fn table(&self) -> &BlockTable {
+        &self.table
+    }
+
+    /// Tokens per page (the quantization group size G).
+    pub fn page_tokens(&self) -> usize {
+        self.g
+    }
+
+    /// Pages this session currently holds.
+    pub fn pages(&self) -> usize {
+        self.table.groups.len() + self.table.fp.len()
+    }
+
+    /// (logical, host) bytes of this session's cache.
+    pub fn session_bytes(&self) -> (usize, usize) {
+        let m = lock(&self.mgr);
+        let cfg = m.pool().cfg();
+        let logical = self.table.groups.len() * cfg.quant_page_logical_bytes()
+            + self.table.fp.len() * cfg.fp_page_logical_bytes();
+        let host = self.table.groups.len() * cfg.quant_page_host_bytes()
+            + self.table.fp.len() * cfg.fp_page_host_bytes();
+        (logical, host)
+    }
+
+    // ---- FP buffer slots -------------------------------------------------
+
+    fn write_fp_slot(&mut self, slot: usize, vals: &[f32]) -> Result<()> {
+        ensure!(vals.len() == self.d, "kv vector dim {} != {}", vals.len(), self.d);
+        ensure!(slot < self.fb, "fp slot {slot} out of buffer (FB={})", self.fb);
+        let off = (slot % self.g) * self.d;
+        let page = self.table.fp[slot / self.g];
+        let mut m = lock(&self.mgr);
+        m.fp_mut(self.session, page)?[off..off + self.d].copy_from_slice(vals);
+        Ok(())
+    }
+
+    fn read_fp_slot(&self, slot: usize) -> Result<Vec<f32>> {
+        ensure!(slot < self.fb, "fp slot {slot} out of buffer (FB={})", self.fb);
+        let off = (slot % self.g) * self.d;
+        let page = self.table.fp[slot / self.g];
+        let m = lock(&self.mgr);
+        Ok(m.fp(self.session, page)?[off..off + self.d].to_vec())
+    }
+
+    // ---- lifecycle -------------------------------------------------------
+
+    /// Prefill a padded bucket of `padded_len` tokens (multiple of G,
+    /// ≥ 2G): quantize the leading `padded_len − G` tokens into fresh quant
+    /// pages, keep the trailing G tokens full-precision in C_F1. `kv(p)`
+    /// yields the d-dim KV vector of position `p`.
+    pub fn prefill(
+        &mut self,
+        padded_len: usize,
+        kv: &dyn Fn(usize) -> Vec<f32>,
+    ) -> Result<()> {
+        ensure!(self.tracker.is_none(), "cache already prefilled");
+        ensure!(
+            padded_len % self.g == 0 && padded_len >= 2 * self.g,
+            "padded prefill of {padded_len} tokens is not a bucket of G={}",
+            self.g
+        );
+        ensure!(
+            padded_len - self.g <= self.cap_tokens,
+            "prefill of {padded_len} exceeds reserved quant capacity {}",
+            self.cap_tokens
+        );
+        let n_groups = (padded_len - self.g) / self.g;
+        for gi in 0..n_groups {
+            let mut flat = Vec::with_capacity(self.g * self.d);
+            for t in 0..self.g {
+                let v = kv(gi * self.g + t);
+                ensure!(v.len() == self.d, "kv vector dim {} != {}", v.len(), self.d);
+                flat.extend_from_slice(&v);
+            }
+            let group = quant_group(&flat);
+            let mut m = lock(&self.mgr);
+            let page = m.alloc(self.session, PageKind::Quant)?;
+            m.write_quant(self.session, page, group)?;
+            drop(m);
+            self.table.groups.push(page);
+        }
+        for t in 0..self.g {
+            let v = kv(padded_len - self.g + t);
+            self.write_fp_slot(t, &v)?;
+        }
+        self.tracker = Some(CacheTracker::after_prefill(
+            padded_len,
+            self.g,
+            self.fb,
+            self.cap_tokens,
+        ));
+        Ok(())
+    }
+
+    /// Begin a speculation cycle (records the O(1) rollback point).
+    pub fn begin_cycle(&mut self) -> Result<()> {
+        self.tracker_mut()?.begin_cycle();
+        Ok(())
+    }
+
+    /// Write the i-th cycle slot (draft KV on the way out, target KV on the
+    /// verify rewrite — both land on the same page slot).
+    pub fn write_cycle_slot(&mut self, i: usize, vals: &[f32]) -> Result<usize> {
+        let slot = self.tracker()?.draft_slot(i)?;
+        self.write_fp_slot(slot, vals)?;
+        Ok(slot)
+    }
+
+    /// Commit a cycle; flush C_F1 into a fresh quant page if the double
+    /// buffer filled.
+    pub fn commit_cycle(&mut self, accepted: usize, verify_len: usize) -> Result<()> {
+        let flush = self.tracker_mut()?.commit_cycle(accepted, verify_len)?;
+        if flush {
+            self.flush()?;
+        }
+        self.tracker()?.check_invariants()
+    }
+
+    /// One autoregressive commit: KV for the fed token lands at the buffer
+    /// tail.
+    pub fn commit_ar(&mut self, vals: &[f32]) -> Result<()> {
+        let slot = self.tracker()?.n_f;
+        self.write_fp_slot(slot, vals)?;
+        let flush = self.tracker_mut()?.commit_ar();
+        if flush {
+            self.flush()?;
+        }
+        self.tracker()?.check_invariants()
+    }
+
+    /// Quantize C_F1 into a newly allocated page and shift C_F2 → C_F1.
+    fn flush(&mut self) -> Result<()> {
+        let n_f = self.tracker()?.n_f;
+        ensure!(n_f >= 2 * self.g, "flush without a full C_F2");
+        ensure!(
+            (self.table.groups.len() + 1) * self.g <= self.cap_tokens,
+            "quant region would exceed reserved capacity {} tokens",
+            self.cap_tokens
+        );
+        let mut flat = Vec::with_capacity(self.g * self.d);
+        for t in 0..self.g {
+            flat.extend_from_slice(&self.read_fp_slot(t)?);
+        }
+        let group = quant_group(&flat);
+        let page = {
+            let mut m = lock(&self.mgr);
+            let page = m.alloc(self.session, PageKind::Quant)?;
+            m.write_quant(self.session, page, group)?;
+            page
+        };
+        self.table.groups.push(page);
+        // Shift the surviving buffer tail down by G slots.
+        let mut tail = Vec::with_capacity((n_f - self.g) * self.d);
+        for t in self.g..n_f {
+            tail.extend_from_slice(&self.read_fp_slot(t)?);
+        }
+        for (i, chunk) in tail.chunks_exact(self.d).enumerate() {
+            self.write_fp_slot(i, chunk)?;
+        }
+        self.tracker_mut()?.flush()
+    }
+
+    // ---- reads (through page handles) ------------------------------------
+
+    /// KV vector of committed position `pos`, read through the block
+    /// table: quantized region pages are dequantized via the draft (INT4)
+    /// or target (INT8) plane; buffer slots come back full-precision.
+    pub fn read_token(&self, pos: usize, draft: bool) -> Result<Vec<f32>> {
+        let tr = self.tracker()?;
+        if pos < tr.n_q {
+            let gi = pos / self.g;
+            let off = (pos % self.g) * self.d;
+            let m = lock(&self.mgr);
+            let group = m.read_quant(self.session, self.table.groups[gi])?;
+            let vals = if draft { dequant_draft(group) } else { dequant_target(group) };
+            Ok(vals[off..off + self.d].to_vec())
+        } else {
+            let slot = pos - tr.n_q;
+            ensure!(slot < tr.n_f, "position {pos} beyond context");
+            self.read_fp_slot(slot)
+        }
+    }
+
+    /// Reconstruction-error bound of group `gi` for the chosen plane
+    /// (paper §4.2): used by the mock decoder's read-back validation.
+    pub fn group_error_bound(&self, gi: usize, draft: bool) -> Result<f32> {
+        ensure!(gi < self.table.groups.len(), "group {gi} out of range");
+        let m = lock(&self.mgr);
+        let group = m.read_quant(self.session, self.table.groups[gi])?;
+        let (e8, e4) = crate::quant::error_bounds(group);
+        Ok(if draft { e4 } else { e8 })
+    }
+
+    /// Move group `gi` to a freshly allocated page (defragmentation /
+    /// tiering primitive). The quantized codes move verbatim, so dequant
+    /// output is bit-identical afterwards.
+    pub fn relocate_group(&mut self, gi: usize) -> Result<()> {
+        ensure!(gi < self.table.groups.len(), "group {gi} out of range");
+        let old = self.table.groups[gi];
+        let mut m = lock(&self.mgr);
+        let data = m.read_quant(self.session, old)?.clone();
+        let new = m.alloc(self.session, PageKind::Quant)?;
+        m.write_quant(self.session, new, data)?;
+        m.free(self.session, old)?;
+        drop(m);
+        self.table.groups[gi] = new;
+        Ok(())
+    }
+
+    /// Return every page to the pool and forget the session.
+    pub fn release(&mut self) {
+        lock(&self.mgr).release(self.session);
+        self.table = BlockTable::default();
+        self.tracker = None;
+    }
+}
+
+fn lock(mgr: &SharedSessionManager) -> std::sync::MutexGuard<'_, super::session::SessionManager> {
+    mgr.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Deterministic d-dim KV vector for (position, token) — the mock model's
+/// "KV projection", shared by decoder and tests so read-back validation can
+/// recompute expected values.
+pub fn mock_kv(pos: usize, token: i32, d: usize) -> Vec<f32> {
+    let seed = ((pos as u64) << 32) ^ (token as u32 as u64) ^ 0x9E37_79B9_7F4A_7C15;
+    let mut rng = Pcg32::new(seed);
+    (0..d).map(|_| rng.uniform() as f32 * 4.0 - 2.0).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::page::PoolConfig;
+    use super::super::session::shared;
+    use super::*;
+
+    const G: usize = 8;
+    const D: usize = 2;
+    const TMAX: usize = 4;
+    const FB: usize = 2 * G + TMAX;
+
+    fn pool_mgr(pages: usize) -> SharedSessionManager {
+        shared(PoolConfig {
+            pages,
+            page_tokens: G,
+            kv_dim: D,
+            high_watermark: 1.0,
+            low_watermark: 1.0,
+        })
+    }
+
+    fn cache(mgr: &SharedSessionManager, session: SessionId, cap_groups: usize) -> PagedKvCache {
+        lock(mgr)
+            .admit(session, cap_groups + (FB + G - 1) / G, false)
+            .unwrap();
+        PagedKvCache::new(mgr.clone(), session, G, D, FB, cap_groups * G).unwrap()
+    }
+
+    fn prefilled(mgr: &SharedSessionManager, session: SessionId, buckets: usize) -> PagedKvCache {
+        let mut c = cache(mgr, session, buckets + 4);
+        c.prefill(buckets * G, &|p| mock_kv(p, p as i32, D)).unwrap();
+        c
+    }
+
+    #[test]
+    fn prefill_layout_and_reads() {
+        let mgr = pool_mgr(32);
+        let c = prefilled(&mgr, 1, 3); // 24 tokens: 2 quant groups + full C_F1
+        let tr = c.tracker().unwrap();
+        assert_eq!(tr.n_q, 2 * G);
+        assert_eq!(tr.n_f, G);
+        assert_eq!(c.table().groups.len(), 2);
+        assert_eq!(c.table().fp.len(), (FB + G - 1) / G);
+        // FP region reads back exactly
+        for pos in 2 * G..3 * G {
+            assert_eq!(c.read_token(pos, false).unwrap(), mock_kv(pos, pos as i32, D));
+        }
+        // quantized region reads back within the paper's error bounds
+        for pos in 0..2 * G {
+            let want = mock_kv(pos, pos as i32, D);
+            for (draft, _) in [(false, "int8"), (true, "int4")] {
+                let got = c.read_token(pos, draft).unwrap();
+                let bound = c.group_error_bound(pos / G, draft).unwrap();
+                for (w, g) in want.iter().zip(&got) {
+                    assert!((w - g).abs() <= bound * 1.01 + 1e-6, "{w} vs {g}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spec_cycles_flush_and_rollback() {
+        let mgr = pool_mgr(32);
+        let mut c = prefilled(&mgr, 1, 2);
+        let mut pos = 2 * G; // next cache position to write
+        for cycle in 0..10 {
+            c.begin_cycle().unwrap();
+            let t = 1 + (cycle % TMAX); // verify length this cycle
+            for i in 0..t {
+                c.write_cycle_slot(i, &mock_kv(pos + i, (pos + i) as i32, D)).unwrap();
+            }
+            let accepted = t - 1; // one rejected unless t == 1
+            c.commit_cycle(accepted, t).unwrap();
+            pos += accepted + 1;
+            let tr = c.tracker().unwrap();
+            assert_eq!(tr.context_len(), pos);
+        }
+        // everything still readable through the (grown) block table
+        for p in 0..pos {
+            assert_eq!(c.read_token(p, false).unwrap().len(), D);
+        }
+        assert!(c.table().groups.len() >= 2, "flushes grew the quant region");
+        c.release();
+        assert_eq!(lock(&mgr).pool().pages_in_use(), 0);
+    }
+
+    #[test]
+    fn ar_commits_flush() {
+        let mgr = pool_mgr(32);
+        let mut c = prefilled(&mgr, 2, 2);
+        let before = c.table().groups.len();
+        for i in 0..3 * G {
+            let pos = 2 * G + i;
+            c.commit_ar(&mock_kv(pos, pos as i32, D)).unwrap();
+        }
+        assert!(c.table().groups.len() > before);
+        let tr = c.tracker().unwrap();
+        assert_eq!(tr.context_len(), 2 * G + 3 * G);
+        c.release();
+    }
+
+    #[test]
+    fn relocation_is_bit_identical() {
+        let mgr = pool_mgr(32);
+        let mut c = prefilled(&mgr, 1, 3);
+        let before: Vec<Vec<f32>> =
+            (0..G).map(|p| c.read_token(p, false).unwrap()).collect();
+        let before_draft: Vec<Vec<f32>> =
+            (0..G).map(|p| c.read_token(p, true).unwrap()).collect();
+        let old_page = c.table().groups[0];
+        c.relocate_group(0).unwrap();
+        assert_ne!(c.table().groups[0], old_page, "group moved pages");
+        for p in 0..G {
+            assert_eq!(c.read_token(p, false).unwrap(), before[p], "int8 plane");
+            assert_eq!(c.read_token(p, true).unwrap(), before_draft[p], "int4 plane");
+        }
+        lock(&mgr).check_integrity().unwrap();
+        c.release();
+    }
+
+    #[test]
+    fn pool_exhaustion_is_clean_error() {
+        // 3 FP pages + 1 quant page fit; the first flush needs a second
+        // quant page and must fail with an error, not corrupt state.
+        let mgr = pool_mgr(4);
+        lock(&mgr).admit(1, 4, false).unwrap();
+        let mut c = PagedKvCache::new(mgr.clone(), 1, G, D, FB, 8 * G).unwrap();
+        c.prefill(2 * G, &|p| mock_kv(p, p as i32, D)).unwrap();
+        let mut failed = false;
+        for i in 0..2 * G {
+            let pos = 2 * G + i;
+            if c.commit_ar(&mock_kv(pos, pos as i32, D)).is_err() {
+                failed = true;
+                break;
+            }
+        }
+        assert!(failed, "flush past the pool must error");
+        lock(&mgr).check_integrity().unwrap();
+        c.release();
+        assert_eq!(lock(&mgr).pool().pages_in_use(), 0);
+    }
+
+    /// Property: random accept/reject traffic preserves tracker invariants,
+    /// keeps every position readable, and releases with zero leaked pages.
+    #[test]
+    fn prop_random_cycles_no_leak() {
+        use crate::util::prop::{check, Config};
+        check::<Vec<usize>, _>(
+            Config { cases: 30, size: 40, ..Config::default() },
+            |ops| {
+                let mgr = pool_mgr(64);
+                lock(&mgr).admit(1, 43, false).unwrap();
+                let mut c = PagedKvCache::new(mgr.clone(), 1, G, D, FB, 40 * G).unwrap();
+                c.prefill(12 * G, &|p| mock_kv(p, p as i32, D)).unwrap();
+                let mut pos = 12 * G;
+                for &op in ops {
+                    if c.begin_cycle().is_err() {
+                        return false;
+                    }
+                    let t = 1 + op % TMAX;
+                    for i in 0..t {
+                        if c.write_cycle_slot(i, &mock_kv(pos + i, op as i32, D)).is_err() {
+                            return false;
+                        }
+                    }
+                    let accepted = op % t;
+                    if c.commit_cycle(accepted, t).is_err() {
+                        return false;
+                    }
+                    pos += accepted + 1;
+                    let ok = {
+                        let tr = c.tracker().unwrap();
+                        tr.check_invariants().is_ok() && tr.context_len() == pos
+                    };
+                    if !ok || c.read_token(pos - 1, true).is_err() {
+                        return false;
+                    }
+                }
+                c.release();
+                lock(&mgr).pool().pages_in_use() == 0
+            },
+        );
+    }
+}
+

@@ -1,0 +1,453 @@
+//! Session lifecycle over the page arena: admission reservations,
+//! LRU eviction of preemptable sessions, and pool-pressure accounting.
+//!
+//! Admission works on *committed* pages: for every live session the manager
+//! counts `max(reserved, allocated)` so a freshly admitted request holds its
+//! cost-model reservation before it touches a page, and a session that
+//! outgrew its estimate is counted at its real footprint. A new reservation
+//! is admitted only if committed pages stay at or below the high watermark;
+//! when they would not, preemptable sessions (idle prefix caches, paused
+//! generations) are LRU-evicted down toward the low watermark first.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, ensure, Result};
+
+use crate::cache::MemoryReport;
+use crate::util::json::Json;
+
+use super::page::{PageHandle, PageKind, PagePool, PoolConfig, SessionId};
+
+/// Outcome of an admission attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitOutcome {
+    /// Reservation booked; the session may allocate.
+    Admitted,
+    /// Over the watermark right now and nothing evictable — retry after a
+    /// release, or shed.
+    Saturated,
+    /// The reservation alone exceeds the watermarked pool; it can never be
+    /// admitted. Fail the request cleanly (never OOM).
+    TooLarge,
+}
+
+#[derive(Debug, Clone)]
+struct SessionEntry {
+    reserved: usize,
+    allocated: usize,
+    preemptable: bool,
+    evicted: bool,
+    last_touch: u64,
+}
+
+/// Allocate/free/preempt broker between sessions and the shared arena.
+pub struct SessionManager {
+    pool: PagePool,
+    sessions: BTreeMap<SessionId, SessionEntry>,
+    clock: u64,
+    evictions: u64,
+}
+
+/// The coordinator and paged caches share the manager behind one mutex.
+pub type SharedSessionManager = Arc<Mutex<SessionManager>>;
+
+pub fn shared(cfg: PoolConfig) -> SharedSessionManager {
+    Arc::new(Mutex::new(SessionManager::new(cfg)))
+}
+
+impl SessionManager {
+    pub fn new(cfg: PoolConfig) -> SessionManager {
+        SessionManager {
+            pool: PagePool::new(cfg),
+            sessions: BTreeMap::new(),
+            clock: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn pool(&self) -> &PagePool {
+        &self.pool
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    pub fn active_sessions(&self) -> usize {
+        self.sessions.values().filter(|s| !s.evicted).count()
+    }
+
+    /// Pages the pool is on the hook for: live pages plus unfilled
+    /// reservations.
+    pub fn committed_pages(&self) -> usize {
+        self.sessions
+            .values()
+            .filter(|s| !s.evicted)
+            .map(|s| s.reserved.max(s.allocated))
+            .sum()
+    }
+
+    fn watermark_pages(&self, frac: f64) -> usize {
+        ((self.pool.capacity() as f64) * frac).floor() as usize
+    }
+
+    pub fn high_pages(&self) -> usize {
+        self.watermark_pages(self.pool.cfg().high_watermark)
+    }
+
+    /// Admission control: book `pages` for a new session, evicting idle
+    /// preemptable sessions if that is what it takes.
+    pub fn admit(
+        &mut self,
+        id: SessionId,
+        pages: usize,
+        preemptable: bool,
+    ) -> Result<AdmitOutcome> {
+        ensure!(
+            !self.sessions.contains_key(&id),
+            "session {id} already admitted"
+        );
+        let high = self.high_pages();
+        if pages > high {
+            return Ok(AdmitOutcome::TooLarge);
+        }
+        // Over the ceiling: evict LRU preemptable sessions down toward the
+        // low watermark (hysteresis) to make room.
+        if self.committed_pages() + pages > high {
+            let low = self.watermark_pages(self.pool.cfg().low_watermark);
+            while self.committed_pages() + pages > low {
+                if self.evict_lru(None).is_none() {
+                    break;
+                }
+            }
+        }
+        if self.committed_pages() + pages > high {
+            return Ok(AdmitOutcome::Saturated);
+        }
+        self.clock += 1;
+        self.sessions.insert(
+            id,
+            SessionEntry {
+                reserved: pages,
+                allocated: 0,
+                preemptable,
+                evicted: false,
+                last_touch: self.clock,
+            },
+        );
+        Ok(AdmitOutcome::Admitted)
+    }
+
+    /// Free every page a session owns and forget it. Idempotent: releasing
+    /// an unknown session is a no-op (returns 0).
+    pub fn release(&mut self, id: SessionId) -> usize {
+        let freed = self.pool.free_all(id);
+        self.sessions.remove(&id);
+        freed
+    }
+
+    /// LRU-touch: marks the session recently used (eviction order).
+    pub fn touch(&mut self, id: SessionId) {
+        self.clock += 1;
+        let clock = self.clock;
+        if let Some(s) = self.sessions.get_mut(&id) {
+            s.last_touch = clock;
+        }
+    }
+
+    pub fn set_preemptable(&mut self, id: SessionId, preemptable: bool) {
+        if let Some(s) = self.sessions.get_mut(&id) {
+            s.preemptable = preemptable;
+        }
+    }
+
+    pub fn is_evicted(&self, id: SessionId) -> bool {
+        self.sessions.get(&id).map(|s| s.evicted).unwrap_or(false)
+    }
+
+    /// Evict the least-recently-touched preemptable session (drop its
+    /// pages; the session must re-prefill if resumed). Returns the victim.
+    pub fn evict_lru(&mut self, exclude: Option<SessionId>) -> Option<SessionId> {
+        let victim = self
+            .sessions
+            .iter()
+            .filter(|(id, s)| {
+                s.preemptable && !s.evicted && s.allocated > 0 && Some(**id) != exclude
+            })
+            .min_by_key(|(_, s)| s.last_touch)
+            .map(|(id, _)| *id)?;
+        self.pool.free_all(victim);
+        let entry = self.sessions.get_mut(&victim).expect("victim exists");
+        entry.allocated = 0;
+        entry.reserved = 0;
+        entry.evicted = true;
+        self.evictions += 1;
+        Some(victim)
+    }
+
+    /// Allocate one page for a session, evicting preemptable sessions if
+    /// the arena itself is full.
+    pub fn alloc(&mut self, id: SessionId, kind: PageKind) -> Result<PageHandle> {
+        match self.sessions.get(&id) {
+            None => bail!("session {id} not admitted"),
+            Some(s) if s.evicted => bail!("session {id} was evicted"),
+            Some(_) => {}
+        }
+        while self.pool.pages_in_use() >= self.pool.capacity() {
+            if self.evict_lru(Some(id)).is_none() {
+                bail!(
+                    "pool exhausted and nothing preemptable \
+                     ({} pages, session {id})",
+                    self.pool.capacity()
+                );
+            }
+        }
+        let h = self.pool.alloc(kind, id)?;
+        self.sessions.get_mut(&id).expect("checked above").allocated += 1;
+        Ok(h)
+    }
+
+    pub fn free(&mut self, id: SessionId, h: PageHandle) -> Result<()> {
+        self.pool.free(h, id)?;
+        let entry = self.sessions.get_mut(&id);
+        if let Some(e) = entry {
+            e.allocated = e.allocated.saturating_sub(1);
+        }
+        Ok(())
+    }
+
+    // ---- data-plane passthroughs (owner-checked by the arena) ----------
+
+    pub fn write_quant(
+        &mut self,
+        id: SessionId,
+        h: PageHandle,
+        group: crate::quant::QuantGroup,
+    ) -> Result<()> {
+        self.pool.write_quant(h, id, group)
+    }
+
+    pub fn read_quant(&self, id: SessionId, h: PageHandle) -> Result<&crate::quant::QuantGroup> {
+        self.pool.read_quant(h, id)
+    }
+
+    pub fn fp(&self, id: SessionId, h: PageHandle) -> Result<&[f32]> {
+        self.pool.fp(h, id)
+    }
+
+    pub fn fp_mut(&mut self, id: SessionId, h: PageHandle) -> Result<&mut [f32]> {
+        self.pool.fp_mut(h, id)
+    }
+
+    // ---- reporting ------------------------------------------------------
+
+    /// Pool-wide cache memory in both conventions (weights are not pooled).
+    pub fn memory_report(&self) -> MemoryReport {
+        MemoryReport {
+            weights_logical: 0,
+            weights_host: 0,
+            cache_logical: self.pool.logical_bytes(),
+            cache_host: self.pool.host_bytes(),
+        }
+    }
+
+    /// Snapshot for `/stats` and the benches.
+    pub fn stats_json(&self) -> Json {
+        Json::obj(vec![
+            ("pages_capacity", Json::num(self.pool.capacity() as f64)),
+            ("pages_in_use", Json::num(self.pool.pages_in_use() as f64)),
+            ("pages_peak", Json::num(self.pool.peak_pages_in_use() as f64)),
+            ("pages_committed", Json::num(self.committed_pages() as f64)),
+            ("pressure", Json::num(self.pool.pressure())),
+            ("high_watermark", Json::num(self.pool.cfg().high_watermark)),
+            ("low_watermark", Json::num(self.pool.cfg().low_watermark)),
+            ("sessions_active", Json::num(self.active_sessions() as f64)),
+            ("evictions", Json::num(self.evictions as f64)),
+            ("cache_bytes_host", Json::num(self.pool.host_bytes() as f64)),
+            (
+                "cache_bytes_logical",
+                Json::num(self.pool.logical_bytes() as f64),
+            ),
+        ])
+    }
+
+    /// Cross-check session accounting against the arena.
+    pub fn check_integrity(&self) -> Result<()> {
+        self.pool.check_integrity()?;
+        let total: usize = self.sessions.values().map(|s| s.allocated).sum();
+        ensure!(
+            total == self.pool.pages_in_use(),
+            "session accounting {} != pool in-use {}",
+            total,
+            self.pool.pages_in_use()
+        );
+        for (id, s) in &self.sessions {
+            ensure!(
+                self.pool.pages_owned(*id) == s.allocated,
+                "session {id} claims {} pages, arena holds {}",
+                s.allocated,
+                self.pool.pages_owned(*id)
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mgr(pages: usize) -> SessionManager {
+        SessionManager::new(PoolConfig {
+            pages,
+            page_tokens: 4,
+            kv_dim: 2,
+            high_watermark: 0.9,
+            low_watermark: 0.6,
+        })
+    }
+
+    #[test]
+    fn admission_watermark() {
+        let mut m = mgr(10); // high watermark: 9 pages
+        assert_eq!(m.admit(1, 5, false).unwrap(), AdmitOutcome::Admitted);
+        assert_eq!(m.admit(2, 4, false).unwrap(), AdmitOutcome::Admitted);
+        // 9 committed; one more page would cross the ceiling
+        assert_eq!(m.admit(3, 1, false).unwrap(), AdmitOutcome::Saturated);
+        assert_eq!(m.admit(4, 10, false).unwrap(), AdmitOutcome::TooLarge);
+        m.release(1);
+        assert_eq!(m.admit(3, 1, false).unwrap(), AdmitOutcome::Admitted);
+    }
+
+    #[test]
+    fn admission_evicts_lru_preemptable() {
+        // capacity 10, high 9, low 8: two 4-page idle sessions; a 2-page
+        // request crosses the ceiling and must evict exactly the LRU one.
+        let mut m = SessionManager::new(PoolConfig {
+            pages: 10,
+            page_tokens: 4,
+            kv_dim: 2,
+            high_watermark: 0.9,
+            low_watermark: 0.8,
+        });
+        m.admit(1, 4, true).unwrap();
+        for _ in 0..4 {
+            m.alloc(1, PageKind::Quant).unwrap();
+        }
+        m.admit(2, 4, true).unwrap();
+        for _ in 0..4 {
+            m.alloc(2, PageKind::Quant).unwrap();
+        }
+        m.touch(1); // session 2 becomes LRU
+        assert_eq!(m.admit(3, 2, false).unwrap(), AdmitOutcome::Admitted);
+        assert!(m.is_evicted(2), "LRU preemptable session evicted");
+        assert!(!m.is_evicted(1));
+        assert_eq!(m.evictions(), 1);
+        m.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn alloc_requires_admission_and_detects_eviction() {
+        let mut m = mgr(8);
+        assert!(m.alloc(9, PageKind::Fp).is_err());
+        m.admit(9, 2, true).unwrap();
+        m.alloc(9, PageKind::Fp).unwrap();
+        m.evict_lru(None).unwrap();
+        assert!(m.alloc(9, PageKind::Fp).is_err(), "evicted session rejected");
+    }
+
+    #[test]
+    fn full_pool_alloc_evicts() {
+        // Watermarks at 1.0 so admission lets the arena actually fill: a
+        // session that outgrows its reservation trips the alloc-path
+        // eviction when the arena is full.
+        let mut m = SessionManager::new(PoolConfig {
+            pages: 4,
+            page_tokens: 4,
+            kv_dim: 2,
+            high_watermark: 1.0,
+            low_watermark: 1.0,
+        });
+        m.admit(1, 3, true).unwrap();
+        for _ in 0..3 {
+            m.alloc(1, PageKind::Quant).unwrap();
+        }
+        m.admit(2, 1, false).unwrap();
+        m.alloc(2, PageKind::Fp).unwrap();
+        // arena now full; session 2's over-reservation alloc evicts 1
+        m.alloc(2, PageKind::Fp).unwrap();
+        assert!(m.is_evicted(1));
+        m.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn release_is_idempotent() {
+        let mut m = mgr(4);
+        m.admit(5, 2, false).unwrap();
+        m.alloc(5, PageKind::Fp).unwrap();
+        assert_eq!(m.release(5), 1);
+        assert_eq!(m.release(5), 0);
+        assert_eq!(m.pool().pages_in_use(), 0);
+    }
+
+    /// Property: random admit/alloc/free/touch/evict/release traffic keeps
+    /// session accounting and the arena consistent, and never exceeds
+    /// capacity.
+    #[test]
+    fn prop_manager_invariants() {
+        use crate::util::prop::{check, Config};
+        check::<Vec<usize>, _>(
+            Config { cases: 40, size: 64, ..Config::default() },
+            |ops| {
+                let mut m = mgr(8);
+                let mut next_id: SessionId = 0;
+                let mut live: Vec<SessionId> = Vec::new();
+                for &op in ops {
+                    match op % 6 {
+                        0 => {
+                            next_id += 1;
+                            if let Ok(AdmitOutcome::Admitted) =
+                                m.admit(next_id, op % 4 + 1, op % 2 == 0)
+                            {
+                                live.push(next_id);
+                            }
+                        }
+                        1 | 2 => {
+                            if let Some(&id) = live.get(op % live.len().max(1)) {
+                                let _ = m.alloc(
+                                    id,
+                                    if op % 2 == 0 { PageKind::Quant } else { PageKind::Fp },
+                                );
+                            }
+                        }
+                        3 => {
+                            if !live.is_empty() {
+                                let id = live.remove(op % live.len());
+                                m.release(id);
+                            }
+                        }
+                        4 => {
+                            if let Some(&id) = live.get(op % live.len().max(1)) {
+                                m.touch(id);
+                            }
+                        }
+                        _ => {
+                            m.evict_lru(None);
+                        }
+                    }
+                    if m.pool().pages_in_use() > m.pool().capacity() {
+                        return false;
+                    }
+                    if m.check_integrity().is_err() {
+                        return false;
+                    }
+                }
+                for id in live {
+                    m.release(id);
+                }
+                m.pool().pages_in_use() == 0 && m.check_integrity().is_ok()
+            },
+        );
+    }
+}

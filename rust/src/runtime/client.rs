@@ -194,7 +194,9 @@ impl Runtime {
             .compile(&comp)
             .with_context(|| format!("compiling {name}"))?;
         let secs = t0.elapsed().as_secs_f64();
-        log::info!("compiled {name} in {secs:.2}s");
+        if std::env::var_os("QUANTSPEC_LOG").is_some() {
+            eprintln!("compiled {name} in {secs:.2}s");
+        }
         self.compile_secs.lock().unwrap().insert(name.to_string(), secs);
         let executor = Arc::new(Executor { spec, exe });
         self.executors

@@ -14,8 +14,8 @@ pub mod threadpool;
 
 /// Monotonic seconds since process start (coarse wall clock for metrics).
 pub fn now_secs() -> f64 {
-    use once_cell::sync::Lazy;
+    use std::sync::OnceLock;
     use std::time::Instant;
-    static START: Lazy<Instant> = Lazy::new(Instant::now);
-    START.elapsed().as_secs_f64()
+    static START: OnceLock<Instant> = OnceLock::new();
+    START.get_or_init(Instant::now).elapsed().as_secs_f64()
 }
