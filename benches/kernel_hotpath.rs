@@ -1,0 +1,217 @@
+//! Host KV-kernel hot-path economics (paper §4.2 / Table 4 cost model,
+//! measured on this CPU testbed):
+//!
+//! 1. packed (two 4-bit codes per byte, dequant into a scratch buffer)
+//!    vs the pre-PR unpacked byte-per-nibble representation with an
+//!    allocating whole-group dequant — the representation change;
+//! 2. fused per-token reads (`dequant_token_into`) vs whole-group
+//!    dequantization — the read-granularity change; the per-token path
+//!    must win by at least G/4 on G=64 groups (asserted);
+//! 3. serial vs parallel bulk quantization through
+//!    `quant_groups_parallel` (the prefill path; a decode-time flush is a
+//!    single group of this same work).
+//!
+//!     cargo bench --bench kernel_hotpath
+//!
+//! Results land in `bench_results/kernel_hotpath.csv` and
+//! `BENCH_kernel_hotpath.json` so the perf trajectory is recorded.
+
+use std::hint::black_box;
+
+use quantspec::bench::{bench, Table};
+use quantspec::costmodel::memory::{packed_group_host_bytes, unpacked_group_host_bytes};
+use quantspec::quant::{quant_group, quant_groups_parallel, EPS};
+use quantspec::util::json::Json;
+use quantspec::util::rng::Pcg32;
+
+const G: usize = 64;
+const D: usize = 8;
+const ELEMS: usize = G * D;
+
+/// The pre-PR representation: one full i8 per 4-bit code, whole-group
+/// dequantization returning a fresh allocation. Kept here (not in the
+/// library) purely as the measured baseline.
+struct UnpackedGroup {
+    upper: Vec<i8>,
+    lower: Vec<i8>,
+    scale8: f32,
+    zero: f32,
+}
+
+fn unpacked_quant(xs: &[f32]) -> UnpackedGroup {
+    let mn = xs.iter().copied().fold(f32::INFINITY, f32::min);
+    let mx = xs.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let scale8 = ((mx - mn) / 255.0).max(EPS);
+    let zero = mn;
+    let s4 = 16.0 * scale8;
+    let mut upper = Vec::with_capacity(xs.len());
+    let mut lower = Vec::with_capacity(xs.len());
+    for &x in xs {
+        let u = ((x - zero) / s4).round().clamp(0.0, 15.0);
+        let err = x - (u * s4 + zero);
+        let l = (err / scale8).round().clamp(-8.0, 7.0);
+        upper.push(u as i8);
+        lower.push(l as i8);
+    }
+    UnpackedGroup { upper, lower, scale8, zero }
+}
+
+fn unpacked_dequant_target(g: &UnpackedGroup) -> Vec<f32> {
+    g.upper
+        .iter()
+        .zip(&g.lower)
+        .map(|(&u, &l)| (16.0 * u as f32 + l as f32) * g.scale8 + g.zero)
+        .collect()
+}
+
+fn random_values(seed: u64, n: usize) -> Vec<f32> {
+    let mut rng = Pcg32::new(seed);
+    (0..n).map(|_| rng.uniform() as f32 * 4.0 - 2.0).collect()
+}
+
+fn main() {
+    let quick = quantspec::bench::paper::quick();
+    let iters = if quick { 5 } else { 11 };
+
+    let xs = random_values(42, ELEMS);
+    let packed = quant_group(&xs).unwrap();
+    let unpacked = unpacked_quant(&xs);
+    let mut scratch = vec![0.0f32; ELEMS];
+    let mut tok = vec![0.0f32; D];
+
+    // ---- 1. packed vs unpacked whole-group dequant --------------------
+    let reps_group = if quick { 1_000 } else { 4_000 };
+    let t_unpacked = bench(2, iters, || {
+        for _ in 0..reps_group {
+            black_box(unpacked_dequant_target(black_box(&unpacked)));
+        }
+    })
+    .median_secs
+        / reps_group as f64;
+    let t_packed_group = bench(2, iters, || {
+        for _ in 0..reps_group {
+            black_box(&packed).dequant_target_into(&mut scratch);
+            black_box(&scratch);
+        }
+    })
+    .median_secs
+        / reps_group as f64;
+
+    // ---- 2. per-token fused read vs whole-group dequant ---------------
+    let reps_tok = if quick { 50_000 } else { 200_000 };
+    let t_per_token = bench(2, iters, || {
+        for i in 0..reps_tok {
+            black_box(&packed).dequant_token_into(i % G, false, &mut tok);
+            black_box(&tok);
+        }
+    })
+    .median_secs
+        / reps_tok as f64;
+    let t_per_token_draft = bench(2, iters, || {
+        for i in 0..reps_tok {
+            black_box(&packed).dequant_token_into(i % G, true, &mut tok);
+            black_box(&tok);
+        }
+    })
+    .median_secs
+        / reps_tok as f64;
+
+    // ---- 3. serial vs parallel bulk (prefill/flush) quantization ------
+    let n_groups = if quick { 8 } else { 32 };
+    let bulk: Vec<Vec<f32>> =
+        (0..n_groups as u64).map(|s| random_values(s, 64 * 64)).collect();
+    // the API takes groups by value (the prefill path moves its buffers
+    // in); both arms pay the same clone, so the ratio is unaffected
+    let t_serial = bench(1, iters, || {
+        black_box(quant_groups_parallel(black_box(bulk.clone()), 1).unwrap());
+    })
+    .median_secs;
+    let t_parallel = bench(1, iters, || {
+        black_box(quant_groups_parallel(black_box(bulk.clone()), 4).unwrap());
+    })
+    .median_secs;
+
+    let ns = |s: f64| format!("{:.1} ns", s * 1e9);
+    let us = |s: f64| format!("{:.1} us", s * 1e6);
+    let mut t = Table::new(&["kernel", "unit", "median", "vs baseline"]);
+    t.row(&[
+        "whole-group dequant, unpacked+alloc (pre-PR)".into(),
+        format!("{ELEMS} elems"),
+        ns(t_unpacked),
+        "1.00x".into(),
+    ]);
+    t.row(&[
+        "whole-group dequant, packed into scratch".into(),
+        format!("{ELEMS} elems"),
+        ns(t_packed_group),
+        format!("{:.2}x", t_unpacked / t_packed_group),
+    ]);
+    t.row(&[
+        "per-token fused read (target)".into(),
+        format!("{D} elems"),
+        ns(t_per_token),
+        format!("{:.2}x", t_unpacked / t_per_token),
+    ]);
+    t.row(&[
+        "per-token fused read (draft)".into(),
+        format!("{D} elems"),
+        ns(t_per_token_draft),
+        format!("{:.2}x", t_unpacked / t_per_token_draft),
+    ]);
+    t.row(&[
+        format!("bulk quantize {n_groups} groups, serial"),
+        "4096 elems/group".into(),
+        us(t_serial),
+        "1.00x".into(),
+    ]);
+    t.row(&[
+        format!("bulk quantize {n_groups} groups, 4 workers"),
+        "4096 elems/group".into(),
+        us(t_parallel),
+        format!("{:.2}x", t_serial / t_parallel),
+    ]);
+    t.print("kernel_hotpath — packed nibble KV kernels (G=64, d=8 host mirror)");
+    let _ = t.write_csv("bench_results/kernel_hotpath.csv");
+
+    println!(
+        "\nhost bytes per group: packed {} B vs unpacked {} B ({:.2}x)",
+        packed_group_host_bytes(ELEMS),
+        unpacked_group_host_bytes(ELEMS),
+        unpacked_group_host_bytes(ELEMS) as f64 / packed_group_host_bytes(ELEMS) as f64
+    );
+
+    // Acceptance gate: reading one token must beat dequantizing the whole
+    // G-token group by at least G/4 (ideal is ~Gx; the slack absorbs call
+    // overhead and timer noise).
+    let ratio = t_packed_group / t_per_token;
+    println!("per-token vs whole-group speedup: {ratio:.1}x (gate: >= {})", G / 4);
+    assert!(
+        ratio >= (G / 4) as f64,
+        "per-token read only {ratio:.1}x faster than whole-group (need >= {})",
+        G / 4
+    );
+
+    let json = Json::obj(vec![
+        ("g", Json::num(G as f64)),
+        ("d", Json::num(D as f64)),
+        ("whole_group_unpacked_alloc_secs", Json::num(t_unpacked)),
+        ("whole_group_packed_secs", Json::num(t_packed_group)),
+        ("per_token_target_secs", Json::num(t_per_token)),
+        ("per_token_draft_secs", Json::num(t_per_token_draft)),
+        ("per_token_vs_whole_group_speedup", Json::num(ratio)),
+        ("bulk_groups", Json::num(n_groups as f64)),
+        ("bulk_quant_serial_secs", Json::num(t_serial)),
+        ("bulk_quant_parallel4_secs", Json::num(t_parallel)),
+        (
+            "packed_group_host_bytes",
+            Json::num(packed_group_host_bytes(ELEMS) as f64),
+        ),
+        (
+            "unpacked_group_host_bytes",
+            Json::num(unpacked_group_host_bytes(ELEMS) as f64),
+        ),
+    ]);
+    std::fs::write("BENCH_kernel_hotpath.json", json.to_string())
+        .expect("write BENCH_kernel_hotpath.json");
+    println!("wrote BENCH_kernel_hotpath.json");
+}

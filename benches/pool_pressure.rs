@@ -32,6 +32,7 @@ fn main() {
         kv_dim: D,
         high_watermark: 0.9,
         low_watermark: 0.7,
+        ..PoolConfig::default()
     });
 
     // --- phase 1: idle preemptable prefix caches (eviction fodder) ------

@@ -1,10 +1,17 @@
 //! Paper Table 4: attention-kernel latency, FP16 FlashAttention vs the
 //! hierarchical INT8 / INT4 kernels.
 //!
-//! Measured: CPU wall time of the draft (INT4), verify (INT8), and AR
-//! (FP16) decode steps at the largest built bucket — the byte-ratio story
-//! on this testbed. Modeled: A6000 kernel times at the paper's 64k/256k
-//! from the roofline (paper: 2.88x INT4, ~1.5x INT8).
+//! Three sections, in decreasing availability:
+//! * **host kernels** — the packed-nibble host mirror's dequant readers
+//!   (always runs; this is the decode inner loop of every pooled session);
+//! * **modeled** — A6000 kernel times at the paper's 64k/256k from the
+//!   roofline (paper: 2.88x INT4, ~1.5x INT8; always runs);
+//! * **measured** — CPU wall time of the draft (INT4) and AR (FP16) decode
+//!   steps at the largest built bucket (needs `make artifacts`; skipped
+//!   with a note otherwise).
+//!
+//! Host-kernel medians are written to `BENCH_table4_kernels.json` (one
+//! snapshot per run, overwritten) so each PR's perf point is recorded.
 
 use std::sync::Arc;
 
@@ -13,12 +20,69 @@ use quantspec::bench::{bench, fmt_ms, Table};
 use quantspec::config::{Method, QuantMode};
 use quantspec::costmodel::{latency, Hardware, PaperModel};
 use quantspec::model::Decoder;
+use quantspec::quant::quant_group;
+use quantspec::util::json::Json;
+use quantspec::util::rng::Pcg32;
 use quantspec::workload::{self, Profile};
 
 fn main() {
-    let h = Harness::load().expect("artifacts required: make artifacts");
     let pm = PaperModel::llama2_7b();
     let hw = Hardware::a6000();
+
+    // ---- host kernels: the packed-nibble mirror's read paths ----------
+    let (g_tokens, d) = (64usize, 8usize);
+    let elems = g_tokens * d;
+    let mut rng = Pcg32::new(4);
+    let xs: Vec<f32> = (0..elems).map(|_| rng.uniform() as f32 * 4.0 - 2.0).collect();
+    let group = quant_group(&xs).unwrap();
+    let mut scratch = vec![0.0f32; elems];
+    let mut tok = vec![0.0f32; d];
+    let reps = if quick_n() { 20_000 } else { 100_000 };
+    let per_op = |median: f64| median / reps as f64;
+    let t_tok_draft = per_op(
+        bench(2, 7, || {
+            for i in 0..reps {
+                group.dequant_token_into(i % g_tokens, true, &mut tok);
+                std::hint::black_box(&tok);
+            }
+        })
+        .median_secs,
+    );
+    let t_tok_target = per_op(
+        bench(2, 7, || {
+            for i in 0..reps {
+                group.dequant_token_into(i % g_tokens, false, &mut tok);
+                std::hint::black_box(&tok);
+            }
+        })
+        .median_secs,
+    );
+    let reps_g = reps / 50;
+    let t_group = bench(2, 7, || {
+        for _ in 0..reps_g {
+            group.dequant_target_into(&mut scratch);
+            std::hint::black_box(&scratch);
+        }
+    })
+    .median_secs
+        / reps_g as f64;
+    let mut ht = Table::new(&["host kernel", "elems", "median"]);
+    let ns = |s: f64| format!("{:.1} ns", s * 1e9);
+    ht.row(&["per-token dequant, INT4 draft plane".into(), d.to_string(), ns(t_tok_draft)]);
+    ht.row(&["per-token dequant, INT8 both planes".into(), d.to_string(), ns(t_tok_target)]);
+    ht.row(&["whole-group dequant, INT8".into(), elems.to_string(), ns(t_group)]);
+    ht.print("Table 4 (host kernels — packed-nibble mirror, G=64, d=8)");
+    ht.write_csv("bench_results/table4_host_kernels.csv").ok();
+    let json = Json::obj(vec![
+        ("host_per_token_draft_secs", Json::num(t_tok_draft)),
+        ("host_per_token_target_secs", Json::num(t_tok_target)),
+        ("host_whole_group_target_secs", Json::num(t_group)),
+        ("g", Json::num(g_tokens as f64)),
+        ("d", Json::num(d as f64)),
+    ]);
+    std::fs::write("BENCH_table4_kernels.json", json.to_string())
+        .expect("write BENCH_table4_kernels.json");
+    println!("wrote BENCH_table4_kernels.json");
 
     // ---- modeled A6000 kernel latencies (the paper's setting) ----
     // Table 4 benchmarks ONE layer's attention kernel (the paper's 6.16 ms
@@ -45,7 +109,14 @@ fn main() {
     t.print("Table 4 (modeled, A6000 @ Llama-2-7B — the paper's setting)");
     t.write_csv("bench_results/table4_modeled.csv").ok();
 
-    // ---- measured CPU decode-step latencies ----
+    // ---- measured CPU decode-step latencies (artifacts required) ----
+    let h = match Harness::load() {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("skipping measured XLA rows (no artifacts: {e:#}); run `make artifacts`");
+            return;
+        }
+    };
     let bucket = *h.buckets().last().unwrap();
     let prompt = workload::prompt(3, bucket, Profile::Pg19);
     let mut mt = Table::new(&["step kind", "bucket", "median", "vs FP16"]);

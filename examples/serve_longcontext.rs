@@ -142,6 +142,7 @@ fn mock_main(args: &Args) -> anyhow::Result<()> {
         kv_dim: 2,
         high_watermark: 0.9,
         low_watermark: 0.7,
+        ..PoolConfig::default()
     };
     let pooled_cfg = ServeConfig {
         engines,

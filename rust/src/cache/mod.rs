@@ -124,8 +124,11 @@ impl CacheTracker {
 
 /// Logical memory accounting for one session (Table 3 peak-memory rows and
 /// the /stats endpoint). `logical` uses true bit widths (INT4 = 0.5 B);
-/// `host` is what this CPU testbed actually holds (nibbles in int8, fp in
-/// f32) — both are reported, per DESIGN.md §4.
+/// `host` is what this CPU testbed actually holds — quantized groups are
+/// bit-packed at two 4-bit codes per byte (`quant::PackedGroup`), so the
+/// quantized region's host bytes now track its logical bytes to within
+/// scale/zero overhead (f32 here vs fp16 logically); FP buffer slots stay
+/// f32-held "fp16". Both conventions are reported, per DESIGN.md §4.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct MemoryReport {
     pub weights_logical: usize,

@@ -203,6 +203,9 @@ impl ServeConfig {
             if let Some(v) = p.get("low_watermark").and_then(Json::as_f64) {
                 c.pool.low_watermark = v.clamp(0.0, 1.0);
             }
+            if let Some(v) = p.get("quant_workers").and_then(Json::as_usize) {
+                c.pool.quant_workers = v.max(1);
+            }
             if c.pool.low_watermark > c.pool.high_watermark {
                 c.pool.low_watermark = c.pool.high_watermark;
             }
@@ -284,7 +287,7 @@ mod tests {
     fn pool_config_from_json() {
         let j = Json::parse(
             r#"{"pool":{"pages":128,"page_tokens":32,"kv_dim":4,
-                "high_watermark":0.8,"low_watermark":0.95}}"#,
+                "high_watermark":0.8,"low_watermark":0.95,"quant_workers":6}}"#,
         )
         .unwrap();
         let c = ServeConfig::from_json(&j).unwrap();
@@ -294,6 +297,9 @@ mod tests {
         assert!((c.pool.high_watermark - 0.8).abs() < 1e-9);
         // low watermark is clamped to the high one
         assert!((c.pool.low_watermark - 0.8).abs() < 1e-9);
+        assert_eq!(c.pool.quant_workers, 6);
+        // default is serial quantization
+        assert_eq!(ServeConfig::default().pool.quant_workers, 1);
     }
 
     #[test]

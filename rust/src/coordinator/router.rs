@@ -236,6 +236,7 @@ impl Drop for Coordinator {
 }
 
 fn sync_pool_gauges(mgr: &SharedSessionManager, metrics: &Registry) {
+    use crate::metrics::names;
     let m = mgr.lock().unwrap();
     metrics.set_gauge("pool_pages_capacity", m.pool().capacity() as f64);
     metrics.set_gauge("pool_pages_in_use", m.pool().pages_in_use() as f64);
@@ -243,6 +244,12 @@ fn sync_pool_gauges(mgr: &SharedSessionManager, metrics: &Registry) {
     metrics.set_gauge("pool_pressure", m.pool().pressure());
     metrics.set_gauge("pool_sessions_active", m.active_sessions() as f64);
     metrics.set_gauge("pool_evictions", m.evictions() as f64);
+    // quantized-cache read traffic, split draft (INT4) vs target (INT8)
+    let t = m.traffic();
+    metrics.set_gauge(names::DEQUANT_CALLS_DRAFT, t.dequant_calls_draft as f64);
+    metrics.set_gauge(names::DEQUANT_CALLS_TARGET, t.dequant_calls_target as f64);
+    metrics.set_gauge(names::QUANT_BYTES_READ_DRAFT, t.bytes_read_draft as f64);
+    metrics.set_gauge(names::QUANT_BYTES_READ_TARGET, t.bytes_read_target as f64);
 }
 
 /// Pool geometry plan for one mock request. Reservation (admission) and
@@ -602,6 +609,7 @@ mod tests {
                 kv_dim: 2,
                 high_watermark: 0.9,
                 low_watermark: 0.7,
+                ..crate::pool::PoolConfig::default()
             },
             ..ServeConfig::default()
         };

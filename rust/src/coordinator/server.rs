@@ -172,6 +172,7 @@ mod tests {
                 kv_dim: 2,
                 high_watermark: 0.9,
                 low_watermark: 0.7,
+                ..crate::pool::PoolConfig::default()
             },
             ..ServeConfig::default()
         };
@@ -189,6 +190,17 @@ mod tests {
         assert_eq!(pool.get("pages_in_use").unwrap().as_usize(), Some(0));
         assert!(pool.get("pages_peak").unwrap().as_usize().unwrap() > 0);
         assert!(j.get("gauges").is_some(), "metrics gauges in snapshot");
+        // cache-traffic counters: a speculative decode read the draft and
+        // target planes, so both call counters are live in /stats
+        use crate::metrics::names;
+        let calls = |name: &str| pool.get(name).unwrap().as_usize().unwrap();
+        assert!(calls(names::DEQUANT_CALLS_DRAFT) > 0, "draft dequants counted");
+        assert!(calls(names::DEQUANT_CALLS_TARGET) > 0, "target dequants counted");
+        assert!(calls(names::QUANT_BYTES_READ_DRAFT) > 0);
+        assert!(
+            j.get("gauges").unwrap().get(names::DEQUANT_CALLS_DRAFT).is_some(),
+            "traffic mirrored into metrics gauges"
+        );
     }
 
     #[test]

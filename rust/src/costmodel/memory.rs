@@ -1,8 +1,10 @@
 //! KV-cache and weight memory accounting (paper Fig. 6, Table 3 peak mem).
 //!
 //! Uses *logical* bit widths (INT4 = 0.5 byte) as on real hardware; the CPU
-//! testbed's host-resident byte counts (int8-held nibbles, f32-held "fp16")
-//! are reported separately by `cache::MemoryReport`.
+//! testbed's host-resident byte counts (bit-packed nibbles at two codes per
+//! byte, f32-held "fp16") are reported separately by `cache::MemoryReport`.
+//! The packed-group helpers below are the single source of the host-byte
+//! formula shared by `pool::PoolConfig` and the kernel benches.
 
 use super::PaperModel;
 use crate::config::Method;
@@ -150,6 +152,44 @@ pub fn pool_pages_for_request(
     let quant_pages = (padded + max_new + overshoot).div_ceil(g);
     let fp_pages = fb.div_ceil(g);
     quant_pages + fp_pages
+}
+
+/// Host bytes of one packed quantized group of `elems` codes: two
+/// bit-packed nibble planes (two 4-bit codes per byte) plus f32
+/// scale/zero. The pre-packing representation held a full byte per nibble
+/// ([`unpacked_group_host_bytes`]); packing halves the code bytes, closing
+/// the gap between `MemoryReport::cache_host` and `cache_logical` to the
+/// scale/zero overhead (f32 here vs fp16 logically).
+pub fn packed_group_host_bytes(elems: usize) -> usize {
+    2 * elems.div_ceil(2) + 8
+}
+
+/// Host bytes the unpacked byte-per-nibble representation used. Kept as
+/// the comparison baseline for the packing win asserted in tests and
+/// measured by `benches/kernel_hotpath.rs`.
+pub fn unpacked_group_host_bytes(elems: usize) -> usize {
+    2 * elems + 8
+}
+
+#[cfg(test)]
+mod packing_tests {
+    use super::*;
+
+    #[test]
+    fn packed_host_bytes_at_most_55pct_of_unpacked() {
+        // The default pool geometry (G=64, d=8 -> 512 codes) and the
+        // paper-ish G=128, d=128 both halve within the 0.55x budget.
+        for elems in [512usize, 128 * 128, 64 * 64] {
+            let packed = packed_group_host_bytes(elems);
+            let unpacked = unpacked_group_host_bytes(elems);
+            assert!(
+                (packed as f64) <= 0.55 * unpacked as f64,
+                "elems {elems}: {packed} vs {unpacked}"
+            );
+        }
+        // odd lengths round the planes up to whole bytes
+        assert_eq!(packed_group_host_bytes(7), 2 * 4 + 8);
+    }
 }
 
 /// Prompt length padded up to a G-bucket, minimum 2G (the prefill

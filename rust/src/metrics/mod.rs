@@ -10,6 +10,22 @@ use std::sync::Mutex;
 
 use crate::util::json::Json;
 
+/// Canonical metric names shared by the pool's cache-traffic accounting,
+/// the router's gauge sync, and `/stats` consumers. Draft vs target is the
+/// paper's §4.2 split: the INT4 plane serves draft steps, both planes
+/// serve verify — correlating these with acceptance rate tells whether a
+/// regression is a cache-traffic problem or a model problem.
+pub mod names {
+    /// Per-token dequantizations served from the INT4 (draft) plane.
+    pub const DEQUANT_CALLS_DRAFT: &str = "dequant_calls_draft";
+    /// Per-token dequantizations served from both planes (target/verify).
+    pub const DEQUANT_CALLS_TARGET: &str = "dequant_calls_target";
+    /// Packed quantized-cache bytes read on the draft path.
+    pub const QUANT_BYTES_READ_DRAFT: &str = "quant_bytes_read_draft";
+    /// Packed quantized-cache bytes read on the target path.
+    pub const QUANT_BYTES_READ_TARGET: &str = "quant_bytes_read_target";
+}
+
 const BUCKETS: usize = 96;
 const MIN_US: f64 = 1.0;
 const GROWTH: f64 = 1.25;
@@ -216,6 +232,17 @@ mod tests {
         r.set_gauge("pool_pages_in_use", 9.0); // gauges overwrite
         assert_eq!(r.gauge("pool_pages_in_use"), 9.0);
         assert!(r.snapshot().to_string().contains("pool_pages_in_use"));
+    }
+
+    #[test]
+    fn cache_traffic_names_surface_in_snapshot() {
+        let r = Registry::new();
+        r.set_gauge(names::DEQUANT_CALLS_DRAFT, 7.0);
+        r.set_gauge(names::QUANT_BYTES_READ_TARGET, 1024.0);
+        let snap = r.snapshot().to_string();
+        assert!(snap.contains(names::DEQUANT_CALLS_DRAFT));
+        assert!(snap.contains(names::QUANT_BYTES_READ_TARGET));
+        assert_eq!(r.gauge(names::DEQUANT_CALLS_DRAFT), 7.0);
     }
 
     #[test]

@@ -12,7 +12,7 @@ use anyhow::{ensure, Result};
 
 use crate::cache::MemoryReport;
 use crate::config::Method;
-use crate::pool::{mock_kv, PagedKvCache, SessionId, SharedSessionManager};
+use crate::pool::{mock_kv, mock_kv_into, PagedKvCache, SessionId, SharedSessionManager};
 
 /// Cumulative phase timings for one session (seconds).
 #[derive(Debug, Clone, Copy, Default)]
@@ -98,6 +98,12 @@ pub struct MockDecoder {
 /// reconstruction against the paper's error bounds — so page-table bugs
 /// surface as decode errors, while logits stay identical to the unpooled
 /// mock (acceptance/throughput match the seed path exactly).
+///
+/// The scratch buffers make the steady-state draft/verify/AR KV path
+/// allocation-free: KV projection (`mock_kv_into`), cache writes, and the
+/// fused per-token read-back (`read_token_into`) all reuse them. The only
+/// allocation left in a draft step is the logits vector the `Decoder`
+/// trait returns by value (asserted by `rust/tests/alloc_hotpath.rs`).
 struct PagedState {
     cache: PagedKvCache,
     /// Pad tokens prepended in cache coordinates (bucket alignment).
@@ -105,6 +111,11 @@ struct PagedState {
     /// Draft writes issued in the current cycle.
     cycle_writes: usize,
     d: usize,
+    /// Reusable d-dim buffer for KV vectors on the write path.
+    kv_scratch: Vec<f32>,
+    /// Reusable d-dim buffers for read-back validation.
+    want_scratch: Vec<f32>,
+    read_scratch: Vec<f32>,
 }
 
 impl PagedState {
@@ -120,11 +131,13 @@ impl PagedState {
 
     /// Read position 0 back through the quantized page (draft or target
     /// plane) and check it against the generator within the plane's bound.
-    fn validate_read(&self, committed: &[i32], draft: bool) -> Result<()> {
-        let want = mock_kv(0, self.token_at(committed, 0), self.d);
-        let got = self.cache.read_token(0, draft)?;
+    /// Runs entirely on scratch buffers: no heap allocation.
+    fn validate_read(&mut self, committed: &[i32], draft: bool) -> Result<()> {
+        let tok = self.token_at(committed, 0);
+        mock_kv_into(0, tok, &mut self.want_scratch);
+        self.cache.read_token_into(0, draft, &mut self.read_scratch)?;
         let bound = self.cache.group_error_bound(0, draft)?;
-        for (w, g) in want.iter().zip(&got) {
+        for (w, g) in self.want_scratch.iter().zip(&self.read_scratch) {
             ensure!(
                 (w - g).abs() <= bound * 1.01 + 1e-6,
                 "paged KV read-back out of bounds: {w} vs {g} (bound {bound})"
@@ -140,7 +153,8 @@ impl MockDecoder {
             vocab,
             gamma_max,
             committed: Vec::new(),
-            draft_tail: Vec::new(),
+            // pre-sized so steady-state draft pushes never reallocate
+            draft_tail: Vec::with_capacity(gamma_max + 1),
             last_verify: Vec::new(),
             draft_err,
             method: Method::QuantSpec,
@@ -166,7 +180,15 @@ impl MockDecoder {
         let fb = mock_fb(g, gamma_max);
         let cache = PagedKvCache::new(mgr, session, g, d, fb, cap_tokens)?;
         let mut dec = MockDecoder::new(vocab, gamma_max, draft_err);
-        dec.paged = Some(PagedState { cache, pad: 0, cycle_writes: 0, d });
+        dec.paged = Some(PagedState {
+            cache,
+            pad: 0,
+            cycle_writes: 0,
+            d,
+            kv_scratch: vec![0.0; d],
+            want_scratch: vec![0.0; d],
+            read_scratch: vec![0.0; d],
+        });
         Ok(dec)
     }
 
@@ -180,19 +202,25 @@ impl MockDecoder {
         self.method = m;
     }
 
-    fn ctx_hash(ctx: &[i32]) -> u64 {
-        // FNV-1a over the last 8 tokens (enough context sensitivity).
+    /// FNV-1a over the last 8 tokens of the logical context `head ++ tail`
+    /// (enough context sensitivity). Taking the context in two parts lets
+    /// the draft/verify paths hash `committed ++ draft_tail` without
+    /// materializing the concatenation — no per-step clone.
+    fn ctx_hash_parts(head: &[i32], tail: &[i32]) -> u64 {
         let mut h: u64 = 0xcbf29ce484222325;
-        for &t in ctx.iter().rev().take(8) {
-            h ^= t as u64 as u64;
+        for &t in tail.iter().rev().chain(head.iter().rev()).take(8) {
+            h ^= t as u64;
             h = h.wrapping_mul(0x100000001b3);
         }
-        h ^= ctx.len() as u64;
+        h ^= (head.len() + tail.len()) as u64;
         h.wrapping_mul(0x100000001b3)
     }
 
-    fn logits_for(&self, ctx: &[i32], draft: bool) -> Vec<f32> {
-        let h = Self::ctx_hash(ctx);
+    /// Logits for the context `head ++ tail`. The returned vector is the
+    /// only heap allocation on the steady-state draft path (the `Decoder`
+    /// trait returns logits by value).
+    fn logits_for_parts(&self, head: &[i32], tail: &[i32], draft: bool) -> Vec<f32> {
+        let h = Self::ctx_hash_parts(head, tail);
         let top = (h % self.vocab as u64) as usize;
         let second = ((h >> 17) % self.vocab as u64) as usize;
         let mut logits = vec![0.0f32; self.vocab];
@@ -214,10 +242,8 @@ impl MockDecoder {
         logits
     }
 
-    fn full_ctx(&self) -> Vec<i32> {
-        let mut c = self.committed.clone();
-        c.extend(&self.draft_tail);
-        c
+    fn logits_for(&self, ctx: &[i32], draft: bool) -> Vec<f32> {
+        self.logits_for_parts(ctx, &[], draft)
     }
 }
 
@@ -272,15 +298,15 @@ impl Decoder for MockDecoder {
             let i = p.cycle_writes;
             let tr = p.cache.tracker()?;
             let pos = tr.n_q + tr.draft_slot(i)?;
-            let vals = mock_kv(pos, token, p.d);
-            p.cache.write_cycle_slot(i, &vals)?;
+            mock_kv_into(pos, token, &mut p.kv_scratch);
+            p.cache.write_cycle_slot(i, &p.kv_scratch)?;
             p.cycle_writes += 1;
-            // Draft path reads the INT4 plane through the block table.
+            // Draft path reads the INT4 plane through the block table
+            // (fused per-token read into the session's scratch buffer).
             p.validate_read(&self.committed, true)?;
         }
         self.draft_tail.push(token);
-        let ctx = self.full_ctx();
-        Ok(self.logits_for(&ctx, true))
+        Ok(self.logits_for_parts(&self.committed, &self.draft_tail, true))
     }
 
     fn verify(&mut self, tokens: &[i32]) -> Result<Vec<Vec<f32>>> {
@@ -289,18 +315,16 @@ impl Decoder for MockDecoder {
             for (i, &tok) in tokens.iter().enumerate() {
                 let tr = p.cache.tracker()?;
                 let pos = tr.n_q + tr.draft_slot(i)?;
-                let vals = mock_kv(pos, tok, p.d);
-                p.cache.write_cycle_slot(i, &vals)?;
+                mock_kv_into(pos, tok, &mut p.kv_scratch);
+                p.cache.write_cycle_slot(i, &p.kv_scratch)?;
             }
             // Verify path reads the INT8 plane through the block table.
             p.validate_read(&self.committed, false)?;
         }
         self.last_verify = tokens.to_vec();
-        let mut ctx = self.committed.clone();
         let mut rows = Vec::with_capacity(tokens.len());
-        for &t in tokens {
-            ctx.push(t);
-            rows.push(self.logits_for(&ctx, false));
+        for i in 0..tokens.len() {
+            rows.push(self.logits_for_parts(&self.committed, &tokens[..=i], false));
         }
         Ok(rows)
     }
@@ -320,8 +344,8 @@ impl Decoder for MockDecoder {
         self.committed.push(token);
         if let Some(p) = &mut self.paged {
             let pos = p.pad + self.committed.len() - 1;
-            let vals = mock_kv(pos, token, p.d);
-            p.cache.commit_ar(&vals)?;
+            mock_kv_into(pos, token, &mut p.kv_scratch);
+            p.cache.commit_ar(&p.kv_scratch)?;
         }
         Ok(self.logits_for(&self.committed, false))
     }
@@ -386,6 +410,7 @@ mod tests {
             kv_dim: 2,
             high_watermark: 1.0,
             low_watermark: 1.0,
+            ..PoolConfig::default()
         });
         let prompt = [1, 2, 3, 4, 5, 6];
         let fb = 2 * 8 + 8; // 2G + (gamma_max + 1)
@@ -430,6 +455,7 @@ mod tests {
             kv_dim: 2,
             high_watermark: 1.0,
             low_watermark: 1.0,
+            ..PoolConfig::default()
         });
         mgr.lock().unwrap().admit(9, 12, false).unwrap();
         let mut dec = MockDecoder::with_pool(64, 7, 0.0, mgr.clone(), 9, 72).unwrap();
@@ -444,6 +470,48 @@ mod tests {
         };
         assert_eq!(eng(&mut dec), eng(&mut plain));
         mgr.lock().unwrap().release(9);
+    }
+
+    /// Acceptance criterion for the packed representation: on a pooled
+    /// mock session with the default geometry (G=64, d=8), the quantized
+    /// region's host bytes are at most 0.55x the pre-packing value
+    /// (byte-per-nibble), and `MemoryReport::cache_host` is exactly the
+    /// packed page formula.
+    #[test]
+    fn packed_quant_region_host_bytes_halved() {
+        use crate::pool::{shared, PoolConfig};
+        let cfg = PoolConfig {
+            pages: 16,
+            high_watermark: 1.0,
+            low_watermark: 1.0,
+            ..PoolConfig::default()
+        };
+        let (g, d) = (cfg.page_tokens, cfg.kv_dim);
+        let elems = g * d;
+        let quant_host = cfg.quant_page_host_bytes();
+        let fp_host = cfg.fp_page_host_bytes();
+        let mgr = shared(cfg);
+        let fb = mock_fb(g, MOCK_GAMMA_MAX);
+        let fp_pages = fb.div_ceil(g);
+        mgr.lock().unwrap().admit(1, 16, false).unwrap();
+        let mut dec =
+            MockDecoder::with_pool(64, MOCK_GAMMA_MAX, 0.0, mgr.clone(), 1, 4 * g).unwrap();
+        let prompt: Vec<i32> = (0..40).collect();
+        dec.prefill(&prompt).unwrap();
+        // 40 tokens pad to the 2G bucket: exactly 1 quant group + full C_F1
+        let quant_pages = dec.pages() - fp_pages;
+        assert_eq!(quant_pages, 1);
+        let mem = dec.memory();
+        assert_eq!(mem.cache_host, quant_pages * quant_host + fp_pages * fp_host);
+        let unpacked = crate::costmodel::memory::unpacked_group_host_bytes(elems);
+        assert!(
+            (quant_host as f64) <= 0.55 * unpacked as f64,
+            "packed quant page {quant_host} B vs pre-PR {unpacked} B"
+        );
+        // host now tracks logical for the quant region to within the
+        // f32-vs-fp16 scale/zero overhead
+        assert_eq!(quant_host, elems + 8);
+        mgr.lock().unwrap().release(1);
     }
 
     #[test]

@@ -9,9 +9,12 @@
 //! # Page layout
 //!
 //! A page holds exactly G tokens of KV for one session, either as a
-//! hierarchically quantized group (nibble-packed INT4 upper/lower planes +
-//! scale/zero — the bit-shared draft/target representation of §4.2) or as
-//! full-precision buffer slots. A session's cache is:
+//! hierarchically quantized group (bit-packed INT4 upper/lower planes at
+//! two 4-bit codes per byte + scale/zero — the bit-shared draft/target
+//! representation of §4.2) or as full-precision buffer slots. Steady-state
+//! reads are fused per token ([`paged::PagedKvCache::read_token_into`]):
+//! zero heap allocation, touching only the requested token's codes.
+//! A session's cache is:
 //!
 //! ```text
 //!   groups[0] groups[1] ... groups[n-1] | fp[0] fp[1] fp[2]
@@ -48,5 +51,7 @@ pub mod paged;
 pub mod session;
 
 pub use page::{PageHandle, PageKind, PagePool, PoolConfig, SessionId};
-pub use paged::{mock_kv, BlockTable, PagedKvCache};
-pub use session::{shared, AdmitOutcome, SessionManager, SharedSessionManager};
+pub use paged::{mock_kv, mock_kv_into, BlockTable, PagedKvCache};
+pub use session::{
+    shared, AdmitOutcome, CacheTraffic, SessionManager, SharedSessionManager,
+};

@@ -4,9 +4,12 @@
 //! A page is the pool's unit of allocation and holds exactly G tokens of KV
 //! state for one session, in one of two layouts:
 //!
-//! * **Quant** — one hierarchically quantized G-token group: nibble-packed
-//!   upper/lower planes (`quant::QuantGroup`, G·d codes each) plus the
-//!   group's scale/zero. Immutable once written; flush writes a fresh page.
+//! * **Quant** — one hierarchically quantized G-token group
+//!   (`quant::PackedGroup`): two bit-packed nibble planes holding **two
+//!   4-bit codes per byte** (G·d codes ≈ G·d/2 bytes per plane) plus the
+//!   group's scale/zero, so a quant page costs ~G·d host bytes — within
+//!   scale/zero overhead of its logical INT4+INT4 size. Immutable once
+//!   written; flush writes a fresh page.
 //! * **Fp** — G token slots of full-precision KV (G·d f32 on this host,
 //!   fp16 logically). The double FP buffer of a session spans
 //!   `ceil(FB / G)` such pages and is mutated in place (draft writes,
@@ -18,7 +21,7 @@
 
 use anyhow::{bail, ensure, Result};
 
-use crate::quant::QuantGroup;
+use crate::quant::PackedGroup;
 
 /// Owner tag for pages; the coordinator uses the request id.
 pub type SessionId = u64;
@@ -59,6 +62,9 @@ pub struct PoolConfig {
     /// Eviction target: LRU-evict preemptable sessions down to this
     /// fraction before giving up on an admission.
     pub low_watermark: f64,
+    /// Worker threads for bulk (prefill / flush) quantization; <= 1 runs
+    /// serially. Output bits are identical either way.
+    pub quant_workers: usize,
 }
 
 impl Default for PoolConfig {
@@ -69,6 +75,7 @@ impl Default for PoolConfig {
             kv_dim: 8,
             high_watermark: 0.90,
             low_watermark: 0.70,
+            quant_workers: 1,
         }
     }
 }
@@ -78,9 +85,10 @@ impl PoolConfig {
         self.page_tokens * self.kv_dim
     }
 
-    /// Host bytes of one quant page: two i8 nibble planes + f32 scale/zero.
+    /// Host bytes of one quant page: two bit-packed nibble planes (two
+    /// codes per byte) + f32 scale/zero.
     pub fn quant_page_host_bytes(&self) -> usize {
-        2 * self.elems() + 8
+        crate::costmodel::memory::packed_group_host_bytes(self.elems())
     }
 
     /// Logical bytes of one quant page: 2×INT4 = 1 byte per element plus
@@ -102,7 +110,7 @@ impl PoolConfig {
 
 enum PageData {
     /// None until the group is written (alloc-then-quantize window).
-    Quant(Option<QuantGroup>),
+    Quant(Option<PackedGroup>),
     Fp(Vec<f32>),
 }
 
@@ -284,14 +292,14 @@ impl PagePool {
         &mut self,
         h: PageHandle,
         owner: SessionId,
-        group: QuantGroup,
+        group: PackedGroup,
     ) -> Result<()> {
         self.check(h, owner)?;
         let elems = self.cfg.page_tokens * self.cfg.kv_dim;
         ensure!(
-            group.upper.len() == elems && group.lower.len() == elems,
+            group.len() == elems,
             "quant group has {} codes, page holds {elems}",
-            group.upper.len()
+            group.len()
         );
         match &mut self.slots[h.id as usize].state {
             Some((_, PageData::Quant(g))) => {
@@ -302,7 +310,7 @@ impl PagePool {
         }
     }
 
-    pub fn read_quant(&self, h: PageHandle, owner: SessionId) -> Result<&QuantGroup> {
+    pub fn read_quant(&self, h: PageHandle, owner: SessionId) -> Result<&PackedGroup> {
         self.check(h, owner)?;
         match &self.slots[h.id as usize].state {
             Some((_, PageData::Quant(Some(g)))) => Ok(g),
@@ -371,10 +379,10 @@ mod tests {
         })
     }
 
-    fn group(pool: &PagePool, seed: f32) -> QuantGroup {
+    fn group(pool: &PagePool, seed: f32) -> PackedGroup {
         let n = pool.cfg().page_tokens * pool.cfg().kv_dim;
         let xs: Vec<f32> = (0..n).map(|i| seed + i as f32 * 0.25).collect();
-        quant_group(&xs)
+        quant_group(&xs).unwrap()
     }
 
     #[test]
@@ -441,7 +449,7 @@ mod tests {
         assert!(p.read_quant(h, 1).is_err(), "unwritten page unreadable");
         let g = group(&p, -1.0);
         p.write_quant(h, 1, g.clone()).unwrap();
-        assert_eq!(p.read_quant(h, 1).unwrap().upper, g.upper);
+        assert_eq!(*p.read_quant(h, 1).unwrap(), g);
     }
 
     #[test]
@@ -450,7 +458,8 @@ mod tests {
         let elems = 8; // 4 tokens * 2 dims
         p.alloc(PageKind::Quant, 1).unwrap();
         p.alloc(PageKind::Fp, 1).unwrap();
-        assert_eq!(p.host_bytes(), (2 * elems + 8) + 4 * elems);
+        // packed quant page: two nibbles per byte + f32 scale/zero
+        assert_eq!(p.host_bytes(), (elems + 8) + 4 * elems);
         assert_eq!(p.logical_bytes(), (elems + 4) + 2 * elems);
         assert!(p.logical_bytes() < p.host_bytes());
     }

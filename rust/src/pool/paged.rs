@@ -16,11 +16,17 @@
 //! allocated page* and shifts C_F2 down, so a mid-flush failure (pool
 //! exhausted, nothing evictable) surfaces as a clean error before any
 //! state is lost.
+//!
+//! Steady-state reads go through [`PagedKvCache::read_token_into`]: one
+//! token's d packed codes are dequantized straight into a caller scratch
+//! buffer (no whole-group dequantization, no heap allocation — the cost
+//! model the paper's Table 4 kernels assume). Bulk quantization (prefill)
+//! fans out over `PoolConfig::quant_workers` threads.
 
 use anyhow::{ensure, Context, Result};
 
 use crate::cache::CacheTracker;
-use crate::quant::{dequant_draft, dequant_target, quant_group};
+use crate::quant::{quant_group, quant_groups_parallel};
 use crate::util::rng::Pcg32;
 
 use super::page::{PageHandle, PageKind, SessionId};
@@ -46,6 +52,8 @@ pub struct PagedKvCache {
     fb: usize,
     /// Quantized-region token capacity (the reservation, rounded to G).
     cap_tokens: usize,
+    /// Bulk-quantization worker count (from `PoolConfig::quant_workers`).
+    quant_workers: usize,
 }
 
 impl PagedKvCache {
@@ -63,6 +71,7 @@ impl PagedKvCache {
         ensure!(cap_tokens % g == 0, "cap_tokens must be a multiple of G");
         let fp_pages = (fb + g - 1) / g;
         let mut table = BlockTable::default();
+        let quant_workers;
         {
             let mut m = lock(&mgr);
             ensure!(
@@ -71,6 +80,7 @@ impl PagedKvCache {
                 m.pool().cfg().page_tokens,
                 m.pool().cfg().kv_dim
             );
+            quant_workers = m.pool().cfg().quant_workers;
             for _ in 0..fp_pages {
                 table.fp.push(m.alloc(session, PageKind::Fp)?);
             }
@@ -84,6 +94,7 @@ impl PagedKvCache {
             d,
             fb,
             cap_tokens,
+            quant_workers,
         })
     }
 
@@ -132,12 +143,21 @@ impl PagedKvCache {
         Ok(())
     }
 
-    fn read_fp_slot(&self, slot: usize) -> Result<Vec<f32>> {
+    /// Zero-allocation FP read; the single home of the slot → (page,
+    /// offset) mapping shared with `write_fp_slot`.
+    fn read_fp_slot_into(&self, slot: usize, out: &mut [f32]) -> Result<()> {
         ensure!(slot < self.fb, "fp slot {slot} out of buffer (FB={})", self.fb);
         let off = (slot % self.g) * self.d;
         let page = self.table.fp[slot / self.g];
         let m = lock(&self.mgr);
-        Ok(m.fp(self.session, page)?[off..off + self.d].to_vec())
+        out.copy_from_slice(&m.fp(self.session, page)?[off..off + self.d]);
+        Ok(())
+    }
+
+    fn read_fp_slot(&self, slot: usize) -> Result<Vec<f32>> {
+        let mut out = vec![0.0f32; self.d];
+        self.read_fp_slot_into(slot, &mut out)?;
+        Ok(out)
     }
 
     // ---- lifecycle -------------------------------------------------------
@@ -145,7 +165,8 @@ impl PagedKvCache {
     /// Prefill a padded bucket of `padded_len` tokens (multiple of G,
     /// ≥ 2G): quantize the leading `padded_len − G` tokens into fresh quant
     /// pages, keep the trailing G tokens full-precision in C_F1. `kv(p)`
-    /// yields the d-dim KV vector of position `p`.
+    /// yields the d-dim KV vector of position `p`. Quantization fans out
+    /// over `PoolConfig::quant_workers` threads (bit-identical to serial).
     pub fn prefill(
         &mut self,
         padded_len: usize,
@@ -163,19 +184,34 @@ impl PagedKvCache {
             self.cap_tokens
         );
         let n_groups = (padded_len - self.g) / self.g;
-        for gi in 0..n_groups {
-            let mut flat = Vec::with_capacity(self.g * self.d);
-            for t in 0..self.g {
-                let v = kv(gi * self.g + t);
-                ensure!(v.len() == self.d, "kv vector dim {} != {}", v.len(), self.d);
-                flat.extend_from_slice(&v);
+        // Quantize in bounded batches: the fan-out sees several groups at
+        // once, but transient f32 staging stays O(batch · G · d) instead of
+        // the whole region — serial (workers <= 1) keeps the old
+        // one-group-at-a-time peak exactly.
+        let batch = if self.quant_workers <= 1 { 1 } else { 4 * self.quant_workers };
+        let mut gi = 0;
+        while gi < n_groups {
+            let end = (gi + batch).min(n_groups);
+            let mut flats = Vec::with_capacity(end - gi);
+            for b in gi..end {
+                let mut flat = Vec::with_capacity(self.g * self.d);
+                for t in 0..self.g {
+                    let v = kv(b * self.g + t);
+                    ensure!(v.len() == self.d, "kv vector dim {} != {}", v.len(), self.d);
+                    flat.extend_from_slice(&v);
+                }
+                flats.push(flat);
             }
-            let group = quant_group(&flat);
-            let mut m = lock(&self.mgr);
-            let page = m.alloc(self.session, PageKind::Quant)?;
-            m.write_quant(self.session, page, group)?;
-            drop(m);
-            self.table.groups.push(page);
+            let groups = quant_groups_parallel(flats, self.quant_workers)
+                .context("prefill quantization")?;
+            for group in groups {
+                let mut m = lock(&self.mgr);
+                let page = m.alloc(self.session, PageKind::Quant)?;
+                m.write_quant(self.session, page, group)?;
+                drop(m);
+                self.table.groups.push(page);
+            }
+            gi = end;
         }
         for t in 0..self.g {
             let v = kv(padded_len - self.g + t);
@@ -239,7 +275,7 @@ impl PagedKvCache {
         for t in 0..self.g {
             flat.extend_from_slice(&self.read_fp_slot(t)?);
         }
-        let group = quant_group(&flat);
+        let group = quant_group(&flat).context("flush quantization")?;
         let page = {
             let mut m = lock(&self.mgr);
             let page = m.alloc(self.session, PageKind::Quant)?;
@@ -263,19 +299,37 @@ impl PagedKvCache {
     /// KV vector of committed position `pos`, read through the block
     /// table: quantized region pages are dequantized via the draft (INT4)
     /// or target (INT8) plane; buffer slots come back full-precision.
+    /// Allocating wrapper over [`PagedKvCache::read_token_into`].
     pub fn read_token(&self, pos: usize, draft: bool) -> Result<Vec<f32>> {
+        let mut out = vec![0.0f32; self.d];
+        self.read_token_into(pos, draft, &mut out)?;
+        Ok(out)
+    }
+
+    /// Zero-allocation read of committed position `pos` into `out` (len d).
+    /// Quantized-region reads are fused per token: only the requested
+    /// token's d packed codes are touched, never the whole G·d group, and
+    /// nothing is heap-allocated — this is the draft/verify steady-state
+    /// hot path. Dequant calls and packed bytes touched are recorded in
+    /// the session manager's [`super::session::CacheTraffic`].
+    pub fn read_token_into(&self, pos: usize, draft: bool, out: &mut [f32]) -> Result<()> {
+        ensure!(out.len() == self.d, "out buffer dim {} != {}", out.len(), self.d);
         let tr = self.tracker()?;
         if pos < tr.n_q {
             let gi = pos / self.g;
-            let off = (pos % self.g) * self.d;
-            let m = lock(&self.mgr);
-            let group = m.read_quant(self.session, self.table.groups[gi])?;
-            let vals = if draft { dequant_draft(group) } else { dequant_target(group) };
-            Ok(vals[off..off + self.d].to_vec())
+            let mut m = lock(&self.mgr);
+            {
+                let group = m.read_quant(self.session, self.table.groups[gi])?;
+                group.dequant_token_into(pos % self.g, draft, out);
+            }
+            // draft touches the upper plane only; target reads both
+            let plane = self.d.div_ceil(2);
+            m.note_dequant(draft, if draft { plane } else { 2 * plane });
+            Ok(())
         } else {
             let slot = pos - tr.n_q;
             ensure!(slot < tr.n_f, "position {pos} beyond context");
-            self.read_fp_slot(slot)
+            self.read_fp_slot_into(slot, out)
         }
     }
 
@@ -319,11 +373,22 @@ fn lock(mgr: &SharedSessionManager) -> std::sync::MutexGuard<'_, super::session:
 
 /// Deterministic d-dim KV vector for (position, token) — the mock model's
 /// "KV projection", shared by decoder and tests so read-back validation can
-/// recompute expected values.
+/// recompute expected values. Allocating wrapper over [`mock_kv_into`].
 pub fn mock_kv(pos: usize, token: i32, d: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; d];
+    mock_kv_into(pos, token, &mut out);
+    out
+}
+
+/// Zero-allocation variant of [`mock_kv`]: fills `out` (len d) in place so
+/// the decoder's steady-state draft/verify/AR paths can reuse one scratch
+/// buffer instead of allocating a vector per step.
+pub fn mock_kv_into(pos: usize, token: i32, out: &mut [f32]) {
     let seed = ((pos as u64) << 32) ^ (token as u32 as u64) ^ 0x9E37_79B9_7F4A_7C15;
     let mut rng = Pcg32::new(seed);
-    (0..d).map(|_| rng.uniform() as f32 * 4.0 - 2.0).collect()
+    for o in out.iter_mut() {
+        *o = rng.uniform() as f32 * 4.0 - 2.0;
+    }
 }
 
 #[cfg(test)]
@@ -338,12 +403,17 @@ mod tests {
     const FB: usize = 2 * G + TMAX;
 
     fn pool_mgr(pages: usize) -> SharedSessionManager {
+        pool_mgr_workers(pages, 1)
+    }
+
+    fn pool_mgr_workers(pages: usize, quant_workers: usize) -> SharedSessionManager {
         shared(PoolConfig {
             pages,
             page_tokens: G,
             kv_dim: D,
             high_watermark: 1.0,
             low_watermark: 1.0,
+            quant_workers,
         })
     }
 
@@ -466,6 +536,89 @@ mod tests {
         lock(&mgr).check_integrity().unwrap();
         c.release();
         assert_eq!(lock(&mgr).pool().pages_in_use(), 0);
+    }
+
+    /// Property (packed-read parity): for random prefills and planes, the
+    /// fused zero-allocation `read_token_into` returns exactly what the
+    /// allocating `read_token` does at every position — quantized region
+    /// (draft and target plane) and FP buffer alike.
+    #[test]
+    fn prop_read_token_into_matches_read_token() {
+        use crate::util::prop::{check, Config};
+        check::<Vec<u64>, _>(
+            Config { cases: 20, size: 8, ..Config::default() },
+            |seeds| {
+                for &seed in seeds {
+                    let buckets = 2 + (seed % 4) as usize;
+                    let mgr = pool_mgr(64);
+                    let c = {
+                        let mut c = cache(&mgr, 1, buckets + 4);
+                        c.prefill(buckets * G, &|p| {
+                            mock_kv(p, (p as i32) ^ (seed as i32), D)
+                        })
+                        .unwrap();
+                        c
+                    };
+                    let mut out = vec![0.0f32; D];
+                    for pos in 0..buckets * G {
+                        for draft in [true, false] {
+                            let want = c.read_token(pos, draft).unwrap();
+                            c.read_token_into(pos, draft, &mut out).unwrap();
+                            if out != want {
+                                return false;
+                            }
+                        }
+                    }
+                    // wrong-size scratch is rejected, positions past the
+                    // context are rejected
+                    if c.read_token_into(0, true, &mut [0.0; D + 1]).is_ok() {
+                        return false;
+                    }
+                    if c.read_token_into(buckets * G, false, &mut out).is_ok() {
+                        return false;
+                    }
+                }
+                true
+            },
+        );
+    }
+
+    #[test]
+    fn parallel_prefill_is_bit_identical_to_serial() {
+        let serial_mgr = pool_mgr_workers(64, 1);
+        let parallel_mgr = pool_mgr_workers(64, 4);
+        let mut caches = Vec::new();
+        for mgr in [&serial_mgr, &parallel_mgr] {
+            caches.push(prefilled(mgr, 1, 6)); // 5 quant groups each
+        }
+        for pos in 0..6 * G {
+            for draft in [true, false] {
+                assert_eq!(
+                    caches[0].read_token(pos, draft).unwrap(),
+                    caches[1].read_token(pos, draft).unwrap(),
+                    "pos {pos} draft {draft}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn traffic_counters_split_draft_and_target() {
+        let mgr = pool_mgr(32);
+        let c = prefilled(&mgr, 1, 3);
+        let mut out = vec![0.0f32; D];
+        for pos in 0..3 {
+            c.read_token_into(pos, true, &mut out).unwrap();
+        }
+        c.read_token_into(0, false, &mut out).unwrap();
+        // FP-region reads are full precision: no dequant counted
+        c.read_token_into(2 * G + 1, true, &mut out).unwrap();
+        let t = lock(&mgr).traffic();
+        assert_eq!(t.dequant_calls_draft, 3);
+        assert_eq!(t.dequant_calls_target, 1);
+        let plane = D.div_ceil(2) as u64;
+        assert_eq!(t.bytes_read_draft, 3 * plane);
+        assert_eq!(t.bytes_read_target, 2 * plane);
     }
 
     /// Property: random accept/reject traffic preserves tracker invariants,

@@ -19,6 +19,22 @@ use crate::util::json::Json;
 
 use super::page::{PageHandle, PageKind, PagePool, PoolConfig, SessionId};
 
+/// Quantized-cache read traffic, split by decode path (paper §4.2: the
+/// draft reads the INT4 plane, verify reads both planes). `bytes_read_*`
+/// count host bytes of packed codes actually touched, so acceptance-rate
+/// regressions can be correlated with cache traffic in `/stats`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheTraffic {
+    /// Per-token dequantizations served from the INT4 (draft) plane.
+    pub dequant_calls_draft: u64,
+    /// Per-token dequantizations served from both planes (target/verify).
+    pub dequant_calls_target: u64,
+    /// Packed code bytes read on the draft path.
+    pub bytes_read_draft: u64,
+    /// Packed code bytes read on the target path.
+    pub bytes_read_target: u64,
+}
+
 /// Outcome of an admission attempt.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AdmitOutcome {
@@ -47,6 +63,7 @@ pub struct SessionManager {
     sessions: BTreeMap<SessionId, SessionEntry>,
     clock: u64,
     evictions: u64,
+    traffic: CacheTraffic,
 }
 
 /// The coordinator and paged caches share the manager behind one mutex.
@@ -63,6 +80,7 @@ impl SessionManager {
             sessions: BTreeMap::new(),
             clock: 0,
             evictions: 0,
+            traffic: CacheTraffic::default(),
         }
     }
 
@@ -72,6 +90,24 @@ impl SessionManager {
 
     pub fn evictions(&self) -> u64 {
         self.evictions
+    }
+
+    /// Cumulative quantized-cache read traffic (draft vs target path).
+    pub fn traffic(&self) -> CacheTraffic {
+        self.traffic
+    }
+
+    /// Record one per-token dequantization touching `bytes` packed code
+    /// bytes. Called on the zero-allocation read path, so it is two plain
+    /// integer adds.
+    pub(crate) fn note_dequant(&mut self, draft: bool, bytes: usize) {
+        if draft {
+            self.traffic.dequant_calls_draft += 1;
+            self.traffic.bytes_read_draft += bytes as u64;
+        } else {
+            self.traffic.dequant_calls_target += 1;
+            self.traffic.bytes_read_target += bytes as u64;
+        }
     }
 
     pub fn active_sessions(&self) -> usize {
@@ -223,12 +259,12 @@ impl SessionManager {
         &mut self,
         id: SessionId,
         h: PageHandle,
-        group: crate::quant::QuantGroup,
+        group: crate::quant::PackedGroup,
     ) -> Result<()> {
         self.pool.write_quant(h, id, group)
     }
 
-    pub fn read_quant(&self, id: SessionId, h: PageHandle) -> Result<&crate::quant::QuantGroup> {
+    pub fn read_quant(&self, id: SessionId, h: PageHandle) -> Result<&crate::quant::PackedGroup> {
         self.pool.read_quant(h, id)
     }
 
@@ -269,6 +305,22 @@ impl SessionManager {
                 "cache_bytes_logical",
                 Json::num(self.pool.logical_bytes() as f64),
             ),
+            (
+                crate::metrics::names::DEQUANT_CALLS_DRAFT,
+                Json::num(self.traffic.dequant_calls_draft as f64),
+            ),
+            (
+                crate::metrics::names::DEQUANT_CALLS_TARGET,
+                Json::num(self.traffic.dequant_calls_target as f64),
+            ),
+            (
+                crate::metrics::names::QUANT_BYTES_READ_DRAFT,
+                Json::num(self.traffic.bytes_read_draft as f64),
+            ),
+            (
+                crate::metrics::names::QUANT_BYTES_READ_TARGET,
+                Json::num(self.traffic.bytes_read_target as f64),
+            ),
         ])
     }
 
@@ -305,6 +357,7 @@ mod tests {
             kv_dim: 2,
             high_watermark: 0.9,
             low_watermark: 0.6,
+            ..PoolConfig::default()
         })
     }
 
@@ -330,6 +383,7 @@ mod tests {
             kv_dim: 2,
             high_watermark: 0.9,
             low_watermark: 0.8,
+            ..PoolConfig::default()
         });
         m.admit(1, 4, true).unwrap();
         for _ in 0..4 {
@@ -368,6 +422,7 @@ mod tests {
             kv_dim: 2,
             high_watermark: 1.0,
             low_watermark: 1.0,
+            ..PoolConfig::default()
         });
         m.admit(1, 3, true).unwrap();
         for _ in 0..3 {

@@ -5,50 +5,234 @@
 //! tests can cross-check artifact outputs and so the mock backend can
 //! emulate quantization error without XLA. Semantics are identical:
 //! asymmetric INT8 per group, decomposed as C8 = 16*C_U + C_L.
+//!
+//! # Packed representation
+//!
+//! Codes are stored **bit-packed, two 4-bit codes per byte**, in two planes
+//! (the paper's bit-shared layout): the upper plane holds the INT4 draft
+//! codes C_U ∈ [0, 15], the lower plane the refinement codes C_L ∈ [-8, 7]
+//! (stored biased by +8 so both planes are plain nibbles). Element `i`
+//! lives in byte `i / 2`; even elements occupy the low nibble, odd elements
+//! the high nibble. A group of `n` values therefore costs
+//! `2 * ceil(n/2)` host bytes of codes — half of the previous
+//! byte-per-nibble representation — plus one f32 scale and zero.
+//!
+//! # Readers
+//!
+//! The decode hot path never allocates: [`PackedGroup::dequant_token_into`]
+//! reconstructs one token's `d` values straight into a caller scratch
+//! buffer, and the whole-group [`PackedGroup::dequant_draft_into`] /
+//! [`PackedGroup::dequant_target_into`] variants exist for bulk readers and
+//! benches. The allocating `dequant_draft` / `dequant_target` wrappers
+//! remain for tests and one-shot callers.
 
-/// One quantized group: nibble codes plus INT8 scale/zero.
-#[derive(Debug, Clone)]
-pub struct QuantGroup {
-    pub upper: Vec<i8>,
-    pub lower: Vec<i8>,
+use anyhow::{ensure, Result};
+
+use crate::util::threadpool::ThreadPool;
+
+/// One quantized group: two nibble-packed code planes plus scale/zero.
+///
+/// Immutable once built; construct with [`quant_group`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedGroup {
+    /// Upper (INT4 draft) codes, two per byte, low nibble = even element.
+    upper: Vec<u8>,
+    /// Lower (refinement) codes biased by +8, same packing as `upper`.
+    lower: Vec<u8>,
+    /// Number of quantized values (nibbles) per plane.
+    len: usize,
     pub scale8: f32,
     pub zero: f32,
 }
 
 pub const EPS: f32 = 1e-6;
 
+/// Bias applied to lower-plane codes so C_L ∈ [-8, 7] stores as a nibble.
+const LOWER_BIAS: i8 = 8;
+
+#[inline]
+fn nibble(plane: &[u8], i: usize) -> u8 {
+    (plane[i >> 1] >> ((i & 1) * 4)) & 0x0F
+}
+
+#[inline]
+fn set_nibble(plane: &mut [u8], i: usize, v: u8) {
+    debug_assert!(v <= 0x0F);
+    plane[i >> 1] |= v << ((i & 1) * 4);
+}
+
+impl PackedGroup {
+    /// Number of quantized values in the group.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Host bytes of the packed planes (excludes scale/zero).
+    pub fn code_bytes(&self) -> usize {
+        self.upper.len() + self.lower.len()
+    }
+
+    /// Upper (draft) code of element `i`, in [0, 15].
+    #[inline]
+    pub fn upper_code(&self, i: usize) -> u8 {
+        nibble(&self.upper, i)
+    }
+
+    /// Lower (refinement) code of element `i`, in [-8, 7].
+    #[inline]
+    pub fn lower_code(&self, i: usize) -> i8 {
+        nibble(&self.lower, i) as i8 - LOWER_BIAS
+    }
+
+    /// Dequantize one element through the draft (INT4) plane.
+    #[inline]
+    pub fn draft_value(&self, i: usize) -> f32 {
+        self.upper_code(i) as f32 * (16.0 * self.scale8) + self.zero
+    }
+
+    /// Dequantize one element through the target (INT8) planes.
+    #[inline]
+    pub fn target_value(&self, i: usize) -> f32 {
+        (16.0 * self.upper_code(i) as f32 + self.lower_code(i) as f32) * self.scale8
+            + self.zero
+    }
+
+    /// Fused, zero-allocation read of one token's values: element range
+    /// `[pos * out.len(), (pos + 1) * out.len())` is dequantized through the
+    /// draft or target plane straight into `out`. The group length must be
+    /// a multiple of `out.len()` tokens. Panics on out-of-range `pos`
+    /// (caller-side invariant; the paged cache bounds-checks positions).
+    #[inline]
+    pub fn dequant_token_into(&self, pos: usize, draft: bool, out: &mut [f32]) {
+        let d = out.len();
+        let start = pos * d;
+        assert!(
+            start + d <= self.len,
+            "token {pos} x dim {d} out of group ({} codes)",
+            self.len
+        );
+        if draft {
+            let s4 = 16.0 * self.scale8;
+            for (j, o) in out.iter_mut().enumerate() {
+                *o = self.upper_code(start + j) as f32 * s4 + self.zero;
+            }
+        } else {
+            for (j, o) in out.iter_mut().enumerate() {
+                *o = self.target_value(start + j);
+            }
+        }
+    }
+
+    /// Whole-group draft dequantization into a caller buffer (no alloc).
+    pub fn dequant_draft_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.len, "scratch buffer length");
+        let s4 = 16.0 * self.scale8;
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = self.upper_code(i) as f32 * s4 + self.zero;
+        }
+    }
+
+    /// Whole-group target dequantization into a caller buffer (no alloc).
+    pub fn dequant_target_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.len, "scratch buffer length");
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = self.target_value(i);
+        }
+    }
+}
+
 /// Hierarchically quantize one group of values.
-pub fn quant_group(xs: &[f32]) -> QuantGroup {
-    let mn = xs.iter().copied().fold(f32::INFINITY, f32::min);
-    let mx = xs.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+///
+/// The min/max scan is a single fused pass that rejects non-finite inputs:
+/// a NaN or ±∞ anywhere in the group would silently poison the scale (NaN
+/// propagates through `(mx - mn) / 255`) and corrupt every code, so it is
+/// an error here rather than a garbage cache entry downstream.
+pub fn quant_group(xs: &[f32]) -> Result<PackedGroup> {
+    ensure!(!xs.is_empty(), "cannot quantize an empty group");
+    let mut mn = f32::INFINITY;
+    let mut mx = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        ensure!(
+            x.is_finite(),
+            "non-finite value {x} at index {i}: refusing to quantize"
+        );
+        mn = mn.min(x);
+        mx = mx.max(x);
+    }
     let scale8 = ((mx - mn) / 255.0).max(EPS);
     let zero = mn;
     let s4 = 16.0 * scale8;
-    let mut upper = Vec::with_capacity(xs.len());
-    let mut lower = Vec::with_capacity(xs.len());
-    for &x in xs {
+    let bytes = xs.len().div_ceil(2);
+    let mut upper = vec![0u8; bytes];
+    let mut lower = vec![0u8; bytes];
+    for (i, &x) in xs.iter().enumerate() {
         let u = ((x - zero) / s4).round().clamp(0.0, 15.0);
         let err = x - (u * s4 + zero);
         let l = (err / scale8).round().clamp(-8.0, 7.0);
-        upper.push(u as i8);
-        lower.push(l as i8);
+        set_nibble(&mut upper, i, u as u8);
+        set_nibble(&mut lower, i, (l as i8 + LOWER_BIAS) as u8);
     }
-    QuantGroup { upper, lower, scale8, zero }
+    Ok(PackedGroup { upper, lower, len: xs.len(), scale8, zero })
 }
 
-/// Draft-path dequantization: upper nibble only (INT4).
-pub fn dequant_draft(g: &QuantGroup) -> Vec<f32> {
-    let s4 = 16.0 * g.scale8;
-    g.upper.iter().map(|&u| u as f32 * s4 + g.zero).collect()
+/// Quantize many groups, fanned out over `workers` threads from
+/// `util::threadpool` (bulk prefill quantization; a decode-time flush has
+/// one group and stays serial). Takes the groups by value: the parallel
+/// path moves them into an `Arc` to satisfy the pool's `'static` job
+/// bound, so no input data is copied. `workers <= 1` or a single group
+/// runs serially. Output order and bits are identical to the serial path.
+pub fn quant_groups_parallel(
+    inputs: Vec<Vec<f32>>,
+    workers: usize,
+) -> Result<Vec<PackedGroup>> {
+    if workers <= 1 || inputs.len() <= 1 {
+        return inputs.iter().map(|xs| quant_group(xs)).collect();
+    }
+    use std::sync::{Arc, Mutex};
+    let n = inputs.len();
+    let shared: Arc<Vec<Vec<f32>>> = Arc::new(inputs);
+    let slots: Arc<Mutex<Vec<Option<Result<PackedGroup>>>>> =
+        Arc::new(Mutex::new(std::iter::repeat_with(|| None).take(n).collect()));
+    let pool = ThreadPool::new(workers.min(n));
+    for i in 0..n {
+        let shared = Arc::clone(&shared);
+        let slots = Arc::clone(&slots);
+        pool.submit(move || {
+            let r = quant_group(&shared[i]);
+            slots.lock().unwrap()[i] = Some(r);
+        });
+    }
+    pool.join();
+    let mut guard = slots.lock().unwrap();
+    let mut out = Vec::with_capacity(n);
+    for (i, slot) in guard.iter_mut().enumerate() {
+        match slot.take() {
+            Some(Ok(g)) => out.push(g),
+            Some(Err(e)) => return Err(e),
+            None => anyhow::bail!("quantization worker dropped group {i}"),
+        }
+    }
+    Ok(out)
 }
 
-/// Target-path dequantization: both nibbles (INT8).
-pub fn dequant_target(g: &QuantGroup) -> Vec<f32> {
-    g.upper
-        .iter()
-        .zip(&g.lower)
-        .map(|(&u, &l)| (16.0 * u as f32 + l as f32) * g.scale8 + g.zero)
-        .collect()
+/// Draft-path dequantization: upper nibble only (INT4). Allocating
+/// convenience wrapper over [`PackedGroup::dequant_draft_into`].
+pub fn dequant_draft(g: &PackedGroup) -> Vec<f32> {
+    let mut out = vec![0.0f32; g.len()];
+    g.dequant_draft_into(&mut out);
+    out
+}
+
+/// Target-path dequantization: both nibbles (INT8). Allocating convenience
+/// wrapper over [`PackedGroup::dequant_target_into`].
+pub fn dequant_target(g: &PackedGroup) -> Vec<f32> {
+    let mut out = vec![0.0f32; g.len()];
+    g.dequant_target_into(&mut out);
+    out
 }
 
 /// Max reconstruction error bounds. The paper's decomposition
@@ -56,7 +240,7 @@ pub fn dequant_target(g: &QuantGroup) -> Vec<f32> {
 /// codes near the top of the asymmetric range clip: the INT8 path is
 /// ≤ S8/2 for ~97% of the range but up to 8·S8 at the clipped tail; the
 /// INT4 path is ≤ S4/2 = 8·S8 plus the same tail, i.e. ≤ 15.5·S8.
-pub fn error_bounds(g: &QuantGroup) -> (f32, f32) {
+pub fn error_bounds(g: &PackedGroup) -> (f32, f32) {
     (8.0 * g.scale8, 15.5 * g.scale8)
 }
 
@@ -70,11 +254,31 @@ mod tests {
         (0..n).map(|_| lo + (hi - lo) * rng.uniform() as f32).collect()
     }
 
+    /// The pre-packing reference: one i8 code per plane element, exactly
+    /// the algorithm the byte-per-nibble representation used.
+    fn reference_codes(xs: &[f32]) -> (Vec<i8>, Vec<i8>, f32, f32) {
+        let mn = xs.iter().copied().fold(f32::INFINITY, f32::min);
+        let mx = xs.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let scale8 = ((mx - mn) / 255.0).max(EPS);
+        let zero = mn;
+        let s4 = 16.0 * scale8;
+        let mut upper = Vec::with_capacity(xs.len());
+        let mut lower = Vec::with_capacity(xs.len());
+        for &x in xs {
+            let u = ((x - zero) / s4).round().clamp(0.0, 15.0);
+            let err = x - (u * s4 + zero);
+            let l = (err / scale8).round().clamp(-8.0, 7.0);
+            upper.push(u as i8);
+            lower.push(l as i8);
+        }
+        (upper, lower, scale8, zero)
+    }
+
     #[test]
     fn int8_reconstruction_tight() {
         for seed in 0..20 {
             let xs = random_group(seed, 64, -3.0, 2.0);
-            let g = quant_group(&xs);
+            let g = quant_group(&xs).unwrap();
             let (e8, _) = error_bounds(&g);
             let errs: Vec<f32> =
                 xs.iter().zip(dequant_target(&g)).map(|(x, y)| (x - y).abs()).collect();
@@ -91,7 +295,7 @@ mod tests {
     fn int4_reconstruction_bounded() {
         for seed in 0..20 {
             let xs = random_group(seed, 64, -1.0, 4.0);
-            let g = quant_group(&xs);
+            let g = quant_group(&xs).unwrap();
             let (_, e4) = error_bounds(&g);
             for (x, y) in xs.iter().zip(dequant_draft(&g)) {
                 assert!((x - y).abs() <= e4 * 1.01 + 1e-6, "{x} vs {y}");
@@ -102,7 +306,7 @@ mod tests {
     #[test]
     fn draft_coarser_than_target() {
         let xs = random_group(7, 128, -2.0, 2.0);
-        let g = quant_group(&xs);
+        let g = quant_group(&xs).unwrap();
         let err = |ys: Vec<f32>| -> f32 {
             xs.iter().zip(ys).map(|(x, y)| (x - y).abs()).sum()
         };
@@ -112,17 +316,94 @@ mod tests {
     #[test]
     fn nibble_ranges() {
         let xs = random_group(9, 256, -10.0, 10.0);
-        let g = quant_group(&xs);
-        assert!(g.upper.iter().all(|&u| (0..=15).contains(&u)));
-        assert!(g.lower.iter().all(|&l| (-8..=7).contains(&l)));
+        let g = quant_group(&xs).unwrap();
+        for i in 0..g.len() {
+            assert!(g.upper_code(i) <= 15);
+            assert!((-8..=7).contains(&g.lower_code(i)));
+        }
     }
 
     #[test]
     fn constant_group_safe() {
         let xs = vec![1.5f32; 32];
-        let g = quant_group(&xs);
+        let g = quant_group(&xs).unwrap();
         for y in dequant_target(&g) {
             assert!((y - 1.5).abs() < 1e-3);
         }
+    }
+
+    #[test]
+    fn non_finite_inputs_rejected() {
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let mut xs = vec![0.5f32; 16];
+            xs[7] = bad;
+            let err = quant_group(&xs).unwrap_err().to_string();
+            assert!(err.contains("non-finite"), "{bad}: {err}");
+        }
+        assert!(quant_group(&[]).is_err(), "empty group rejected");
+        // all-finite still fine, including subnormals and zero range
+        assert!(quant_group(&[0.0, f32::MIN_POSITIVE, -0.0]).is_ok());
+    }
+
+    /// Property: the packed planes round-trip bit-identically to the
+    /// reference byte-per-nibble codes for random groups of random (odd and
+    /// even) lengths, and the token reader matches the whole-group reader.
+    #[test]
+    fn prop_packed_roundtrips_reference() {
+        use crate::util::prop::{check, Config};
+        check::<Vec<u64>, _>(
+            Config { cases: 60, size: 24, ..Config::default() },
+            |seeds| {
+                for &seed in seeds {
+                    let n = 1 + (seed % 129) as usize; // exercise odd lengths
+                    let xs = random_group(seed, n, -4.0, 3.0);
+                    let (ru, rl, rs, rz) = reference_codes(&xs);
+                    let g = quant_group(&xs).unwrap();
+                    if g.len() != n
+                        || g.scale8.to_bits() != rs.to_bits()
+                        || g.zero.to_bits() != rz.to_bits()
+                    {
+                        return false;
+                    }
+                    for i in 0..n {
+                        if g.upper_code(i) as i8 != ru[i] || g.lower_code(i) != rl[i] {
+                            return false;
+                        }
+                    }
+                    // packed codes cost half the bytes of the reference
+                    if g.code_bytes() != 2 * n.div_ceil(2) {
+                        return false;
+                    }
+                }
+                true
+            },
+        );
+    }
+
+    #[test]
+    fn token_reader_matches_whole_group() {
+        let (g_tokens, d) = (16usize, 5usize);
+        let xs = random_group(11, g_tokens * d, -2.0, 2.0);
+        let g = quant_group(&xs).unwrap();
+        let mut tok = vec![0.0f32; d];
+        for (draft, whole) in [(true, dequant_draft(&g)), (false, dequant_target(&g))] {
+            for pos in 0..g_tokens {
+                g.dequant_token_into(pos, draft, &mut tok);
+                assert_eq!(tok, whole[pos * d..(pos + 1) * d], "pos {pos} draft {draft}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_quantization_is_bit_identical() {
+        let inputs: Vec<Vec<f32>> =
+            (0..9).map(|s| random_group(s, 96 + s as usize, -3.0, 3.0)).collect();
+        let serial = quant_groups_parallel(inputs.clone(), 1).unwrap();
+        let parallel = quant_groups_parallel(inputs.clone(), 4).unwrap();
+        assert_eq!(serial, parallel);
+        // a poisoned group surfaces as an error, not a hang or panic
+        let mut bad = inputs;
+        bad[4][0] = f32::NAN;
+        assert!(quant_groups_parallel(bad, 4).is_err());
     }
 }

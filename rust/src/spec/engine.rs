@@ -139,15 +139,19 @@ mod tests {
         let prompt = vec![10, 20, 30];
         let mut ar = MockDecoder::new(64, 7, 0.0);
         ar.set_method(Method::Autoregressive);
-        let mut ar_out = greedy_engine(1).generate(&mut ar, &prompt, 40).unwrap();
+        let ar_out = greedy_engine(1).generate(&mut ar, &prompt, 40).unwrap();
+        // truncate to the budget BEFORE comparing (a trailing truncate
+        // after the loop asserted nothing); the AR path stops exactly at
+        // the budget, so this also pins that contract.
+        let ar_tokens: Vec<i32> = ar_out.tokens.into_iter().take(40).collect();
+        assert_eq!(ar_tokens.len(), 40);
 
         for gamma in [1, 2, 4, 7] {
             let mut spec = MockDecoder::new(64, 7, 0.0);
             let out = greedy_engine(gamma).generate(&mut spec, &prompt, 40).unwrap();
-            assert_eq!(out.tokens, ar_out.tokens, "gamma={gamma}");
+            assert_eq!(out.tokens, ar_tokens, "gamma={gamma}");
             assert_eq!(out.acceptance_rate(), 1.0, "gamma={gamma}");
         }
-        ar_out.tokens.truncate(40);
     }
 
     /// A noisy draft still yields the AR output under greedy verification

@@ -1,0 +1,119 @@
+//! Zero-allocation guarantee of the decode hot path, verified with a
+//! counting global allocator.
+//!
+//! This lives in its own test binary on purpose: a `#[global_allocator]`
+//! is process-wide, and a single `#[test]` keeps the measurement window
+//! free of other tests' (parallel) allocations.
+//!
+//! Contract under test (ISSUE 2 acceptance criteria):
+//! * steady-state `PagedKvCache::read_token_into` performs ZERO heap
+//!   allocations, for quantized-region (draft and target plane) and FP
+//!   buffer positions alike;
+//! * a steady-state `MockDecoder::draft_step` performs exactly ONE
+//!   allocation — the logits vector the `Decoder` trait returns by value;
+//!   the whole KV write/read-back path (mock_kv_into, write_cycle_slot,
+//!   fused per-token read, error-bound validation) allocates nothing.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, n: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, n)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+}
+
+#[global_allocator]
+static A: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+use quantspec::model::{Decoder, MockDecoder, MOCK_GAMMA_MAX, MOCK_VOCAB};
+use quantspec::pool::{mock_kv, shared, PagedKvCache, PoolConfig};
+
+const G: usize = 8;
+const D: usize = 2;
+const FB: usize = 2 * G + MOCK_GAMMA_MAX + 1;
+
+fn pool_mgr() -> quantspec::pool::SharedSessionManager {
+    shared(PoolConfig {
+        pages: 64,
+        page_tokens: G,
+        kv_dim: D,
+        high_watermark: 1.0,
+        low_watermark: 1.0,
+        quant_workers: 1,
+    })
+}
+
+#[test]
+fn steady_state_hot_path_does_not_allocate() {
+    // ---- read_token_into: strictly zero allocations -------------------
+    let mgr = pool_mgr();
+    mgr.lock().unwrap().admit(2, 16, false).unwrap();
+    let mut cache = PagedKvCache::new(mgr.clone(), 2, G, D, FB, 10 * G).unwrap();
+    cache.prefill(4 * G, &|p| mock_kv(p, p as i32, D)).unwrap();
+    let mut out = vec![0.0f32; D];
+    // warm every position once (first-touch paths, page checks)
+    for pos in 0..4 * G {
+        for draft in [true, false] {
+            cache.read_token_into(pos, draft, &mut out).unwrap();
+        }
+    }
+    let before = allocs();
+    for rep in 0..250 {
+        for pos in 0..4 * G {
+            // quantized region (both planes) and FP-buffer slots
+            cache.read_token_into(pos, rep % 2 == 0, &mut out).unwrap();
+            std::hint::black_box(&out);
+        }
+    }
+    let read_delta = allocs() - before;
+    assert_eq!(
+        read_delta, 0,
+        "read_token_into allocated {read_delta} times over 8000 steady-state reads"
+    );
+
+    // ---- draft_step: exactly the one returned logits vector ------------
+    mgr.lock().unwrap().admit(1, 16, false).unwrap();
+    let mut dec =
+        MockDecoder::with_pool(MOCK_VOCAB, MOCK_GAMMA_MAX, 0.0, mgr.clone(), 1, 10 * G)
+            .unwrap();
+    dec.prefill(&[5, 6, 7, 8]).unwrap();
+    // warm: one full-length cycle sizes every buffer involved
+    dec.begin_cycle();
+    for t in 0..MOCK_GAMMA_MAX {
+        let _ = dec.draft_step(10 + t as i32).unwrap();
+    }
+    let n = 200u64;
+    let before = allocs();
+    for _ in 0..n {
+        dec.begin_cycle();
+        let logits = dec.draft_step(65).unwrap();
+        std::hint::black_box(&logits);
+    }
+    let draft_delta = allocs() - before;
+    assert_eq!(
+        draft_delta, n,
+        "draft_step must allocate only its returned logits vector \
+         ({n} steps, {draft_delta} allocations)"
+    );
+}
