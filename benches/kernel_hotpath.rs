@@ -4,17 +4,25 @@
 //! 1. packed (two 4-bit codes per byte, dequant into a scratch buffer)
 //!    vs the pre-PR unpacked byte-per-nibble representation with an
 //!    allocating whole-group dequant — the representation change;
-//! 2. fused per-token reads (`dequant_token_into`) vs whole-group
+//! 2. lane-wise unpack (whole packed bytes, 16-byte inner chunks) vs the
+//!    scalar per-nibble accessors — the lane path must be no slower
+//!    (asserted; it is typically a multiple faster);
+//! 3. fused per-token reads (`dequant_token_into`) vs whole-group
 //!    dequantization — the read-granularity change; the per-token path
-//!    must win by at least G/4 on G=64 groups (asserted);
-//! 3. serial vs parallel bulk quantization through
+//!    must win by a clear multiple (>= 4x asserted; the G/4 gate of PR 2
+//!    became noise-bound once the whole-group baseline went lane-wise);
+//! 4. batched verify-window reads (`read_tokens_into`, γ=8, one lock +
+//!    one group lookup per crossed group) vs 8 per-token
+//!    `read_token_into` calls — must win by ≥ 1.5x (asserted);
+//! 5. serial vs shared-pool bulk quantization through
 //!    `quant_groups_parallel` (the prefill path; a decode-time flush is a
 //!    single group of this same work).
 //!
 //!     cargo bench --bench kernel_hotpath
 //!
 //! Results land in `bench_results/kernel_hotpath.csv` and
-//! `BENCH_kernel_hotpath.json` so the perf trajectory is recorded.
+//! `BENCH_kernel_hotpath.json` so the perf trajectory is recorded (CI's
+//! `bench-smoke` job runs this and uploads the JSON).
 
 use std::hint::black_box;
 
@@ -23,10 +31,13 @@ use quantspec::costmodel::memory::{packed_group_host_bytes, unpacked_group_host_
 use quantspec::quant::{quant_group, quant_groups_parallel, EPS};
 use quantspec::util::json::Json;
 use quantspec::util::rng::Pcg32;
+use quantspec::util::threadpool::ThreadPool;
 
 const G: usize = 64;
 const D: usize = 8;
 const ELEMS: usize = G * D;
+/// Verify-window length for the batched-read rows (a γ=8 cycle).
+const GAMMA_W: usize = 8;
 
 /// The pre-PR representation: one full i8 per 4-bit code, whole-group
 /// dequantization returning a fresh allocation. Kept here (not in the
@@ -97,7 +108,22 @@ fn main() {
     .median_secs
         / reps_group as f64;
 
-    // ---- 2. per-token fused read vs whole-group dequant ---------------
+    // ---- 2. lane-wise unpack vs scalar per-nibble accessors -----------
+    // The scalar arm is the pre-lane read path: one `target_value` call
+    // (two nibble extracts + fused dequant) per element.
+    let t_scalar_group = bench(2, iters, || {
+        for _ in 0..reps_group {
+            let g = black_box(&packed);
+            for (i, o) in scratch.iter_mut().enumerate() {
+                *o = g.target_value(i);
+            }
+            black_box(&scratch);
+        }
+    })
+    .median_secs
+        / reps_group as f64;
+
+    // ---- 3. per-token fused read vs whole-group dequant ---------------
     let reps_tok = if quick { 50_000 } else { 200_000 };
     let t_per_token = bench(2, iters, || {
         for i in 0..reps_tok {
@@ -116,18 +142,53 @@ fn main() {
     .median_secs
         / reps_tok as f64;
 
-    // ---- 3. serial vs parallel bulk (prefill/flush) quantization ------
+    // ---- 4. batched verify-window read vs per-token reads -------------
+    // The shared pooled-cache setup (same geometry as table4_kernels);
+    // the window starts G - γ/2 so it crosses a group boundary (2 lookups
+    // batched vs 8 per-token lock+lookup round-trips).
+    let (_mgr, cache) = quantspec::bench::verify_window_cache(G, D, GAMMA_W);
+    let start = G - GAMMA_W / 2;
+    let mut win = vec![0.0f32; GAMMA_W * D];
+    let reps_win = if quick { 20_000 } else { 50_000 };
+    let t_window_batched = bench(2, iters, || {
+        for _ in 0..reps_win {
+            cache
+                .read_tokens_into(start..start + GAMMA_W, false, &mut win)
+                .unwrap();
+            black_box(&win);
+        }
+    })
+    .median_secs
+        / reps_win as f64;
+    let t_window_per_token = bench(2, iters, || {
+        for _ in 0..reps_win {
+            for pos in start..start + GAMMA_W {
+                cache.read_token_into(pos, false, &mut tok).unwrap();
+                black_box(&tok);
+            }
+        }
+    })
+    .median_secs
+        / reps_win as f64;
+
+    // ---- 5. serial vs shared-pool bulk (prefill) quantization ---------
     let n_groups = if quick { 8 } else { 32 };
     let bulk: Vec<Vec<f32>> =
         (0..n_groups as u64).map(|s| random_values(s, 64 * 64)).collect();
+    // one shared pool per arm, created once outside the timed region —
+    // exactly the coordinator-startup lifecycle
+    let serial_pool = ThreadPool::new(1);
+    let shared_pool = ThreadPool::new(4);
+    let h_serial = serial_pool.handle();
+    let h_shared = shared_pool.handle();
     // the API takes groups by value (the prefill path moves its buffers
     // in); both arms pay the same clone, so the ratio is unaffected
     let t_serial = bench(1, iters, || {
-        black_box(quant_groups_parallel(black_box(bulk.clone()), 1).unwrap());
+        black_box(quant_groups_parallel(black_box(bulk.clone()), &h_serial).unwrap());
     })
     .median_secs;
     let t_parallel = bench(1, iters, || {
-        black_box(quant_groups_parallel(black_box(bulk.clone()), 4).unwrap());
+        black_box(quant_groups_parallel(black_box(bulk.clone()), &h_shared).unwrap());
     })
     .median_secs;
 
@@ -141,7 +202,13 @@ fn main() {
         "1.00x".into(),
     ]);
     t.row(&[
-        "whole-group dequant, packed into scratch".into(),
+        "whole-group dequant, scalar per-nibble".into(),
+        format!("{ELEMS} elems"),
+        ns(t_scalar_group),
+        format!("{:.2}x", t_unpacked / t_scalar_group),
+    ]);
+    t.row(&[
+        "whole-group dequant, lane-wise into scratch".into(),
         format!("{ELEMS} elems"),
         ns(t_packed_group),
         format!("{:.2}x", t_unpacked / t_packed_group),
@@ -159,13 +226,25 @@ fn main() {
         format!("{:.2}x", t_unpacked / t_per_token_draft),
     ]);
     t.row(&[
+        format!("verify window x{GAMMA_W}, per-token reads"),
+        format!("{} elems", GAMMA_W * D),
+        ns(t_window_per_token),
+        "1.00x".into(),
+    ]);
+    t.row(&[
+        format!("verify window x{GAMMA_W}, batched read_tokens_into"),
+        format!("{} elems", GAMMA_W * D),
+        ns(t_window_batched),
+        format!("{:.2}x", t_window_per_token / t_window_batched),
+    ]);
+    t.row(&[
         format!("bulk quantize {n_groups} groups, serial"),
         "4096 elems/group".into(),
         us(t_serial),
         "1.00x".into(),
     ]);
     t.row(&[
-        format!("bulk quantize {n_groups} groups, 4 workers"),
+        format!("bulk quantize {n_groups} groups, shared pool x4"),
         "4096 elems/group".into(),
         us(t_parallel),
         format!("{:.2}x", t_serial / t_parallel),
@@ -180,25 +259,55 @@ fn main() {
         unpacked_group_host_bytes(ELEMS) as f64 / packed_group_host_bytes(ELEMS) as f64
     );
 
-    // Acceptance gate: reading one token must beat dequantizing the whole
-    // G-token group by at least G/4 (ideal is ~Gx; the slack absorbs call
-    // overhead and timer noise).
-    let ratio = t_packed_group / t_per_token;
-    println!("per-token vs whole-group speedup: {ratio:.1}x (gate: >= {})", G / 4);
+    // Acceptance gate: the lane-wise unpack must be no slower than the
+    // scalar per-nibble path (10% timer-noise slack; it is typically a
+    // clean multiple faster).
+    let lane_ratio = t_scalar_group / t_packed_group;
+    println!("lane-wise vs scalar whole-group dequant: {lane_ratio:.2}x (gate: >= 0.91)");
     assert!(
-        ratio >= (G / 4) as f64,
-        "per-token read only {ratio:.1}x faster than whole-group (need >= {})",
-        G / 4
+        t_packed_group <= t_scalar_group * 1.10,
+        "lane-wise dequant slower than scalar: {:.1} ns vs {:.1} ns",
+        t_packed_group * 1e9,
+        t_scalar_group * 1e9
+    );
+
+    // Acceptance gate: reading one token must beat dequantizing the whole
+    // G-token group by a clear multiple — proving reads are sub-group
+    // granular. The gate is deliberately loose (4x, not the ideal ~Gx):
+    // the whole-group baseline is itself lane-wise-accelerated now, so a
+    // G-proportional threshold would gate on autovectorization quality
+    // and runner noise rather than on the granularity claim.
+    let ratio = t_packed_group / t_per_token;
+    println!("per-token vs whole-group speedup: {ratio:.1}x (gate: >= 4)");
+    assert!(
+        ratio >= 4.0,
+        "per-token read only {ratio:.1}x faster than whole-group (need >= 4)"
+    );
+
+    // Acceptance gate (ISSUE 3): a batched γ=8 window read must beat 8
+    // per-token reads by >= 1.5x (one lock + one lookup per crossed group
+    // vs 8 lock+lookup round-trips).
+    let batched_ratio = t_window_per_token / t_window_batched;
+    println!("batched verify-window vs per-token reads: {batched_ratio:.2}x (gate: >= 1.5)");
+    assert!(
+        batched_ratio >= 1.5,
+        "batched window read only {batched_ratio:.2}x faster than per-token (need >= 1.5)"
     );
 
     let json = Json::obj(vec![
         ("g", Json::num(G as f64)),
         ("d", Json::num(D as f64)),
+        ("gamma_window", Json::num(GAMMA_W as f64)),
         ("whole_group_unpacked_alloc_secs", Json::num(t_unpacked)),
+        ("whole_group_scalar_secs", Json::num(t_scalar_group)),
         ("whole_group_packed_secs", Json::num(t_packed_group)),
+        ("lane_vs_scalar_speedup", Json::num(lane_ratio)),
         ("per_token_target_secs", Json::num(t_per_token)),
         ("per_token_draft_secs", Json::num(t_per_token_draft)),
         ("per_token_vs_whole_group_speedup", Json::num(ratio)),
+        ("verify_window_per_token_secs", Json::num(t_window_per_token)),
+        ("verify_window_batched_secs", Json::num(t_window_batched)),
+        ("batched_verify_speedup", Json::num(batched_ratio)),
         ("bulk_groups", Json::num(n_groups as f64)),
         ("bulk_quant_serial_secs", Json::num(t_serial)),
         ("bulk_quant_parallel4_secs", Json::num(t_parallel)),

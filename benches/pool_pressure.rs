@@ -33,7 +33,8 @@ fn main() {
         high_watermark: 0.9,
         low_watermark: 0.7,
         ..PoolConfig::default()
-    });
+    })
+    .expect("pool config valid");
 
     // --- phase 1: idle preemptable prefix caches (eviction fodder) ------
     for i in 0..IDLE_SESSIONS {

@@ -66,17 +66,60 @@ fn main() {
     })
     .median_secs
         / reps_g as f64;
+
+    // batched verify-window read (γ=8) through a pooled cache: one lock +
+    // one group lookup per crossed group vs 8 per-token round-trips
+    // (shared setup with benches/kernel_hotpath.rs)
+    let gamma_w = 8usize;
+    let (_mgr, cache) = quantspec::bench::verify_window_cache(g_tokens, d, gamma_w);
+    let w_start = g_tokens - gamma_w / 2;
+    let mut win = vec![0.0f32; gamma_w * d];
+    let reps_w = reps / 4;
+    let t_win_batched = bench(2, 7, || {
+        for _ in 0..reps_w {
+            cache
+                .read_tokens_into(w_start..w_start + gamma_w, false, &mut win)
+                .unwrap();
+            std::hint::black_box(&win);
+        }
+    })
+    .median_secs
+        / reps_w as f64;
+    let t_win_per_token = bench(2, 7, || {
+        for _ in 0..reps_w {
+            for pos in w_start..w_start + gamma_w {
+                cache.read_token_into(pos, false, &mut tok).unwrap();
+                std::hint::black_box(&tok);
+            }
+        }
+    })
+    .median_secs
+        / reps_w as f64;
+
     let mut ht = Table::new(&["host kernel", "elems", "median"]);
     let ns = |s: f64| format!("{:.1} ns", s * 1e9);
     ht.row(&["per-token dequant, INT4 draft plane".into(), d.to_string(), ns(t_tok_draft)]);
     ht.row(&["per-token dequant, INT8 both planes".into(), d.to_string(), ns(t_tok_target)]);
-    ht.row(&["whole-group dequant, INT8".into(), elems.to_string(), ns(t_group)]);
+    ht.row(&["whole-group dequant, INT8 (lane-wise)".into(), elems.to_string(), ns(t_group)]);
+    ht.row(&[
+        format!("verify window x{gamma_w}, per-token reads"),
+        (gamma_w * d).to_string(),
+        ns(t_win_per_token),
+    ]);
+    ht.row(&[
+        format!("verify window x{gamma_w}, batched read"),
+        (gamma_w * d).to_string(),
+        ns(t_win_batched),
+    ]);
     ht.print("Table 4 (host kernels — packed-nibble mirror, G=64, d=8)");
     ht.write_csv("bench_results/table4_host_kernels.csv").ok();
     let json = Json::obj(vec![
         ("host_per_token_draft_secs", Json::num(t_tok_draft)),
         ("host_per_token_target_secs", Json::num(t_tok_target)),
         ("host_whole_group_target_secs", Json::num(t_group)),
+        ("host_verify_window_per_token_secs", Json::num(t_win_per_token)),
+        ("host_verify_window_batched_secs", Json::num(t_win_batched)),
+        ("gamma_window", Json::num(gamma_w as f64)),
         ("g", Json::num(g_tokens as f64)),
         ("d", Json::num(d as f64)),
     ]);

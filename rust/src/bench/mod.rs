@@ -96,6 +96,34 @@ impl Table {
     }
 }
 
+/// A pooled single-session cache prefilled for the verify-window kernel
+/// rows shared by `benches/kernel_hotpath.rs` and
+/// `benches/table4_kernels.rs`: geometry (G, d), FB = 2G + γ, 3 quant
+/// groups + a full C_F1, watermarks disabled, serial quantization. The
+/// single home of that setup so both benches measure the same thing.
+/// Returns the manager (keep it alive) alongside the cache.
+pub fn verify_window_cache(
+    g: usize,
+    d: usize,
+    gamma_w: usize,
+) -> (crate::pool::SharedSessionManager, crate::pool::PagedKvCache) {
+    use crate::pool::{mock_kv, shared, PagedKvCache, PoolConfig};
+    let mgr = shared(PoolConfig {
+        pages: 64,
+        page_tokens: g,
+        kv_dim: d,
+        high_watermark: 1.0,
+        low_watermark: 1.0,
+        quant_workers: 1,
+    })
+    .expect("pool config valid");
+    mgr.lock().unwrap().admit(1, 16, false).unwrap();
+    let fb = 2 * g + gamma_w;
+    let mut cache = PagedKvCache::new(mgr.clone(), 1, g, d, fb, 8 * g).unwrap();
+    cache.prefill(4 * g, &|p| mock_kv(p, p as i32, d)).unwrap();
+    (mgr, cache)
+}
+
 pub fn fmt_f(v: f64, prec: usize) -> String {
     format!("{v:.prec$}")
 }

@@ -204,7 +204,12 @@ impl ServeConfig {
                 c.pool.low_watermark = v.clamp(0.0, 1.0);
             }
             if let Some(v) = p.get("quant_workers").and_then(Json::as_usize) {
-                c.pool.quant_workers = v.max(1);
+                // `quant_workers` sizes the ONE process-wide quantization
+                // pool created at coordinator startup and shared by every
+                // session's prefill (1 = serial). Deliberately NOT clamped:
+                // 0 must surface as a startup error from the session
+                // manager, not be silently bumped.
+                c.pool.quant_workers = v;
             }
             if c.pool.low_watermark > c.pool.high_watermark {
                 c.pool.low_watermark = c.pool.high_watermark;
@@ -300,6 +305,16 @@ mod tests {
         assert_eq!(c.pool.quant_workers, 6);
         // default is serial quantization
         assert_eq!(ServeConfig::default().pool.quant_workers, 1);
+    }
+
+    #[test]
+    fn zero_quant_workers_propagates_for_startup_rejection() {
+        // No silent clamp: 0 flows through so the coordinator's session
+        // manager can reject it with a clear error at startup.
+        let j = Json::parse(r#"{"pool":{"pages":8,"quant_workers":0}}"#).unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.pool.quant_workers, 0);
+        assert!(crate::pool::SessionManager::new(c.pool).is_err());
     }
 
     #[test]

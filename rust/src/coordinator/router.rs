@@ -105,9 +105,12 @@ impl Coordinator {
         // The pool currently backs the mock decoder only; the XLA session
         // manages its own device cache, so booking phantom pages for it
         // would reject requests against memory it never allocates.
+        // Creating the manager also spins up the ONE process-wide
+        // quantization pool (sized by `pool.quant_workers`; 0 is a
+        // startup error, not a silent clamp).
         let pool = if cfg.pool.pages > 0 {
             if matches!(&*backend, EngineBackend::Mock { .. }) {
-                Some(pool::shared(cfg.pool.clone()))
+                Some(pool::shared(cfg.pool.clone())?)
             } else {
                 eprintln!(
                     "warning: paged KV pool requested (pool.pages = {}) but \
@@ -250,6 +253,11 @@ fn sync_pool_gauges(mgr: &SharedSessionManager, metrics: &Registry) {
     metrics.set_gauge(names::DEQUANT_CALLS_TARGET, t.dequant_calls_target as f64);
     metrics.set_gauge(names::QUANT_BYTES_READ_DRAFT, t.bytes_read_draft as f64);
     metrics.set_gauge(names::QUANT_BYTES_READ_TARGET, t.bytes_read_target as f64);
+    // the process-wide shared quantization pool (one per coordinator)
+    let (q_workers, q_jobs, q_depth) = m.quant_pool_stats();
+    metrics.set_gauge(names::QUANT_POOL_WORKERS, q_workers as f64);
+    metrics.set_gauge(names::QUANT_POOL_JOBS, q_jobs as f64);
+    metrics.set_gauge(names::QUANT_POOL_QUEUE_DEPTH, q_depth as f64);
 }
 
 /// Pool geometry plan for one mock request. Reservation (admission) and
@@ -684,6 +692,44 @@ mod tests {
         let m = mgr.lock().unwrap();
         assert!(m.pool().peak_pages_in_use() <= 20, "hard bound held");
         assert_eq!(m.pool().pages_in_use(), 0);
+    }
+
+    /// Acceptance: exactly one quantization pool exists per coordinator.
+    /// Concurrent pooled requests with multi-worker quantization all fan
+    /// out over the same shared pool: `quant_pool_jobs` sums every
+    /// request's prefill groups (4 groups per 40-token prompt) and the
+    /// worker gauge stays at `pool.quant_workers`.
+    #[test]
+    fn one_quant_pool_serves_all_requests() {
+        use crate::metrics::names;
+        let cfg = ServeConfig {
+            engines: 2,
+            queue_capacity: 64,
+            max_new_tokens: 24,
+            pool: crate::pool::PoolConfig {
+                pages: 128,
+                page_tokens: 8,
+                kv_dim: 2,
+                high_watermark: 1.0,
+                low_watermark: 1.0,
+                quant_workers: 2,
+            },
+            ..ServeConfig::default()
+        };
+        let c = Coordinator::with_mock(cfg, 0.1).unwrap();
+        let rxs: Vec<_> = (0..4).map(|i| c.submit(req(i, 40)).unwrap()).collect();
+        for rx in rxs {
+            let out = rx.recv().unwrap().unwrap();
+            assert_eq!(out.tokens.len(), 24);
+        }
+        c.sync_pool_gauges();
+        assert_eq!(c.metrics.gauge(names::QUANT_POOL_WORKERS), 2.0);
+        assert_eq!(
+            c.metrics.gauge(names::QUANT_POOL_JOBS),
+            16.0,
+            "4 requests x 4 prefill groups, all through the one shared pool"
+        );
+        assert_eq!(c.metrics.gauge(names::QUANT_POOL_QUEUE_DEPTH), 0.0);
     }
 
     /// Property: with random request sizes and queue capacities, every

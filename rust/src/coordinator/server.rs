@@ -201,6 +201,15 @@ mod tests {
             j.get("gauges").unwrap().get(names::DEQUANT_CALLS_DRAFT).is_some(),
             "traffic mirrored into metrics gauges"
         );
+        // the shared quantization pool surfaces in the pool block and the
+        // gauges (default config: one worker, so the pool ran no jobs)
+        assert_eq!(calls(names::QUANT_POOL_WORKERS), 1);
+        assert_eq!(calls(names::QUANT_POOL_JOBS), 0);
+        assert_eq!(calls(names::QUANT_POOL_QUEUE_DEPTH), 0);
+        assert!(
+            j.get("gauges").unwrap().get(names::QUANT_POOL_JOBS).is_some(),
+            "quant pool gauges mirrored into metrics"
+        );
     }
 
     #[test]

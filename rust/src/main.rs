@@ -57,7 +57,8 @@ fn config_from_args(args: &Args) -> Result<ServeConfig> {
     }
     cfg.pool.pages = args.get_usize("pool-pages", cfg.pool.pages);
     cfg.pool.page_tokens = args.get_usize("pool-page-tokens", cfg.pool.page_tokens).max(1);
-    cfg.pool.quant_workers = args.get_usize("quant-workers", cfg.pool.quant_workers).max(1);
+    // not clamped: 0 is rejected with a clear error at coordinator startup
+    cfg.pool.quant_workers = args.get_usize("quant-workers", cfg.pool.quant_workers);
     Ok(cfg)
 }
 
@@ -96,7 +97,8 @@ OPTIONS (shared):
   --mock               use the mock backend (no artifacts needed)
   --pool-pages N       paged KV pool size in pages (0 = pooling off)
   --pool-page-tokens G tokens per pool page (default 64)
-  --quant-workers N    prefill/flush quantization threads (default 1 = serial)
+  --quant-workers N    size of the ONE process-wide quantization pool shared
+                       by all sessions' prefills (default 1 = serial; 0 errors)
 
 run-only:
   --prompt TEXT | --prompt-len N --profile pg19|lexsum|infbench --seed S"

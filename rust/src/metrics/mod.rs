@@ -24,6 +24,12 @@ pub mod names {
     pub const QUANT_BYTES_READ_DRAFT: &str = "quant_bytes_read_draft";
     /// Packed quantized-cache bytes read on the target path.
     pub const QUANT_BYTES_READ_TARGET: &str = "quant_bytes_read_target";
+    /// Worker threads in the process-wide shared quantization pool.
+    pub const QUANT_POOL_WORKERS: &str = "quant_pool_workers";
+    /// Quantization jobs executed by the shared pool (all sessions).
+    pub const QUANT_POOL_JOBS: &str = "quant_pool_jobs";
+    /// Quantization jobs queued but not yet picked up (instantaneous).
+    pub const QUANT_POOL_QUEUE_DEPTH: &str = "quant_pool_queue_depth";
 }
 
 const BUCKETS: usize = 96;

@@ -116,6 +116,12 @@ struct PagedState {
     /// Reusable d-dim buffers for read-back validation.
     want_scratch: Vec<f32>,
     read_scratch: Vec<f32>,
+    /// Reusable (γ_max+1)·d buffers for the batched verify window: the
+    /// target rewrite is ONE `write_cycle_slots` call and the read-back is
+    /// ONE `read_tokens_into` call (one pool lock each) instead of one
+    /// lock per token.
+    win_scratch: Vec<f32>,
+    win_read: Vec<f32>,
 }
 
 impl PagedState {
@@ -142,6 +148,32 @@ impl PagedState {
                 (w - g).abs() <= bound * 1.01 + 1e-6,
                 "paged KV read-back out of bounds: {w} vs {g} (bound {bound})"
             );
+        }
+        Ok(())
+    }
+
+    /// Read the first `w` committed positions back through the INT8 plane
+    /// in ONE batched `read_tokens_into` call (one lock, one group lookup)
+    /// and check every token against the generator within the plane's
+    /// bound — the verify-path counterpart of the per-token
+    /// [`PagedState::validate_read`]. `w` must stay inside group 0 (the
+    /// caller clamps to G). Runs entirely on scratch buffers.
+    fn validate_window(&mut self, committed: &[i32], w: usize) -> Result<()> {
+        let d = self.d;
+        let bound = self.cache.group_error_bound(0, false)?;
+        self.cache.read_tokens_into(0..w, false, &mut self.win_read[..w * d])?;
+        for p in 0..w {
+            let tok = self.token_at(committed, p);
+            mock_kv_into(p, tok, &mut self.want_scratch);
+            for (want, got) in
+                self.want_scratch.iter().zip(&self.win_read[p * d..(p + 1) * d])
+            {
+                ensure!(
+                    (want - got).abs() <= bound * 1.01 + 1e-6,
+                    "batched KV read-back out of bounds at {p}: {want} vs {got} \
+                     (bound {bound})"
+                );
+            }
         }
         Ok(())
     }
@@ -188,6 +220,8 @@ impl MockDecoder {
             kv_scratch: vec![0.0; d],
             want_scratch: vec![0.0; d],
             read_scratch: vec![0.0; d],
+            win_scratch: vec![0.0; (gamma_max + 1) * d],
+            win_read: vec![0.0; (gamma_max + 1) * d],
         });
         Ok(dec)
     }
@@ -311,15 +345,38 @@ impl Decoder for MockDecoder {
 
     fn verify(&mut self, tokens: &[i32]) -> Result<Vec<Vec<f32>>> {
         if let Some(p) = &mut self.paged {
-            // Target pass rewrites the drafted slots in place (Alg. 1).
-            for (i, &tok) in tokens.iter().enumerate() {
-                let tr = p.cache.tracker()?;
-                let pos = tr.n_q + tr.draft_slot(i)?;
-                mock_kv_into(pos, tok, &mut p.kv_scratch);
-                p.cache.write_cycle_slot(i, &p.kv_scratch)?;
+            if !tokens.is_empty() {
+                let t = tokens.len();
+                let d = p.d;
+                ensure!(
+                    t * d <= p.win_scratch.len(),
+                    "verify window of {t} tokens exceeds gamma_max capacity"
+                );
+                // Target pass rewrites the whole drafted window in place
+                // (Alg. 1) with ONE batched write — one pool lock for the
+                // γ-window instead of one per token.
+                let base_pos = {
+                    let tr = p.cache.tracker()?;
+                    tr.n_q + tr.draft_slot(0)?
+                };
+                for (i, &tok) in tokens.iter().enumerate() {
+                    mock_kv_into(base_pos + i, tok, &mut p.win_scratch[i * d..(i + 1) * d]);
+                }
+                p.cache.write_cycle_slots(0, &p.win_scratch[..t * d])?;
+                // Read the drafted (uncommitted) window back in ONE
+                // batched read; it lives in the FP buffer, so the
+                // read-back must be bit-exact.
+                p.cache.read_cycle_slots_into(0, &mut p.win_read[..t * d])?;
+                ensure!(
+                    p.win_read[..t * d] == p.win_scratch[..t * d],
+                    "verify window read-back mismatch"
+                );
+                // Committed-window spot check through the batched
+                // `read_tokens_into` path: verify reads the INT8 plane,
+                // one lock + one group lookup for the whole window.
+                let w = t.min(p.cache.page_tokens());
+                p.validate_window(&self.committed, w)?;
             }
-            // Verify path reads the INT8 plane through the block table.
-            p.validate_read(&self.committed, false)?;
         }
         self.last_verify = tokens.to_vec();
         let mut rows = Vec::with_capacity(tokens.len());
@@ -411,7 +468,8 @@ mod tests {
             high_watermark: 1.0,
             low_watermark: 1.0,
             ..PoolConfig::default()
-        });
+        })
+        .unwrap();
         let prompt = [1, 2, 3, 4, 5, 6];
         let fb = 2 * 8 + 8; // 2G + (gamma_max + 1)
         let pages =
@@ -456,7 +514,8 @@ mod tests {
             high_watermark: 1.0,
             low_watermark: 1.0,
             ..PoolConfig::default()
-        });
+        })
+        .unwrap();
         mgr.lock().unwrap().admit(9, 12, false).unwrap();
         let mut dec = MockDecoder::with_pool(64, 7, 0.0, mgr.clone(), 9, 72).unwrap();
         dec.force_method(Method::Autoregressive);
@@ -490,7 +549,7 @@ mod tests {
         let elems = g * d;
         let quant_host = cfg.quant_page_host_bytes();
         let fp_host = cfg.fp_page_host_bytes();
-        let mgr = shared(cfg);
+        let mgr = shared(cfg).unwrap();
         let fb = mock_fb(g, MOCK_GAMMA_MAX);
         let fp_pages = fb.div_ceil(g);
         mgr.lock().unwrap().admit(1, 16, false).unwrap();

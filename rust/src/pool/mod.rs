@@ -12,9 +12,11 @@
 //! hierarchically quantized group (bit-packed INT4 upper/lower planes at
 //! two 4-bit codes per byte + scale/zero — the bit-shared draft/target
 //! representation of §4.2) or as full-precision buffer slots. Steady-state
-//! reads are fused per token ([`paged::PagedKvCache::read_token_into`]):
-//! zero heap allocation, touching only the requested token's codes.
-//! A session's cache is:
+//! reads are fused and lane-wise: per token for the draft path
+//! ([`paged::PagedKvCache::read_token_into`]) and batched per verify
+//! window ([`paged::PagedKvCache::read_tokens_into`] — one lock, one
+//! group lookup per crossed group); both are zero-allocation and touch
+//! only the requested tokens' codes. A session's cache is:
 //!
 //! ```text
 //!   groups[0] groups[1] ... groups[n-1] | fp[0] fp[1] fp[2]

@@ -62,8 +62,13 @@ pub struct PoolConfig {
     /// Eviction target: LRU-evict preemptable sessions down to this
     /// fraction before giving up on an admission.
     pub low_watermark: f64,
-    /// Worker threads for bulk (prefill / flush) quantization; <= 1 runs
-    /// serially. Output bits are identical either way.
+    /// Size of the ONE process-wide quantization thread pool, created at
+    /// coordinator startup by the session manager and shared by every
+    /// session: bulk prefill quantization fans out over these workers
+    /// through a cloned handle (no per-prefill thread spawning; a
+    /// decode-time flush has one group and stays serial). 1 runs
+    /// serially; 0 is rejected with an error at startup — never silently
+    /// clamped. Output bits are identical at any worker count.
     pub quant_workers: usize,
 }
 

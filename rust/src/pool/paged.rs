@@ -17,17 +17,22 @@
 //! exhausted, nothing evictable) surfaces as a clean error before any
 //! state is lost.
 //!
-//! Steady-state reads go through [`PagedKvCache::read_token_into`]: one
-//! token's d packed codes are dequantized straight into a caller scratch
-//! buffer (no whole-group dequantization, no heap allocation — the cost
-//! model the paper's Table 4 kernels assume). Bulk quantization (prefill)
-//! fans out over `PoolConfig::quant_workers` threads.
+//! Steady-state reads go through [`PagedKvCache::read_token_into`] (one
+//! token) and [`PagedKvCache::read_tokens_into`] (a verify window of t
+//! contiguous slots): packed codes are dequantized lane-wise straight into
+//! a caller scratch buffer — no whole-group dequantization, no heap
+//! allocation (the cost model the paper's Table 4 kernels assume). The
+//! windowed read takes the pool mutex ONCE and does one group lookup per
+//! crossed group, so a γ-cycle's verify pays O(groups-crossed) lookups
+//! instead of O(γ). Bulk quantization (prefill) fans out over the
+//! process-wide shared pool sized by `PoolConfig::quant_workers`.
 
 use anyhow::{ensure, Context, Result};
 
 use crate::cache::CacheTracker;
 use crate::quant::{quant_group, quant_groups_parallel};
 use crate::util::rng::Pcg32;
+use crate::util::threadpool::PoolHandle;
 
 use super::page::{PageHandle, PageKind, SessionId};
 use super::session::SharedSessionManager;
@@ -52,8 +57,10 @@ pub struct PagedKvCache {
     fb: usize,
     /// Quantized-region token capacity (the reservation, rounded to G).
     cap_tokens: usize,
-    /// Bulk-quantization worker count (from `PoolConfig::quant_workers`).
-    quant_workers: usize,
+    /// Handle onto the process-wide shared quantization pool (cloned out
+    /// of the session manager at construction; submits happen without the
+    /// manager mutex).
+    quant: PoolHandle,
 }
 
 impl PagedKvCache {
@@ -71,7 +78,7 @@ impl PagedKvCache {
         ensure!(cap_tokens % g == 0, "cap_tokens must be a multiple of G");
         let fp_pages = (fb + g - 1) / g;
         let mut table = BlockTable::default();
-        let quant_workers;
+        let quant;
         {
             let mut m = lock(&mgr);
             ensure!(
@@ -80,7 +87,7 @@ impl PagedKvCache {
                 m.pool().cfg().page_tokens,
                 m.pool().cfg().kv_dim
             );
-            quant_workers = m.pool().cfg().quant_workers;
+            quant = m.quant_handle();
             for _ in 0..fp_pages {
                 table.fp.push(m.alloc(session, PageKind::Fp)?);
             }
@@ -94,7 +101,7 @@ impl PagedKvCache {
             d,
             fb,
             cap_tokens,
-            quant_workers,
+            quant,
         })
     }
 
@@ -166,7 +173,7 @@ impl PagedKvCache {
     /// ≥ 2G): quantize the leading `padded_len − G` tokens into fresh quant
     /// pages, keep the trailing G tokens full-precision in C_F1. `kv(p)`
     /// yields the d-dim KV vector of position `p`. Quantization fans out
-    /// over `PoolConfig::quant_workers` threads (bit-identical to serial).
+    /// over the process-wide shared pool (bit-identical to serial).
     pub fn prefill(
         &mut self,
         padded_len: usize,
@@ -188,7 +195,7 @@ impl PagedKvCache {
         // once, but transient f32 staging stays O(batch · G · d) instead of
         // the whole region — serial (workers <= 1) keeps the old
         // one-group-at-a-time peak exactly.
-        let batch = if self.quant_workers <= 1 { 1 } else { 4 * self.quant_workers };
+        let batch = if self.quant.size() <= 1 { 1 } else { 4 * self.quant.size() };
         let mut gi = 0;
         while gi < n_groups {
             let end = (gi + batch).min(n_groups);
@@ -202,7 +209,7 @@ impl PagedKvCache {
                 }
                 flats.push(flat);
             }
-            let groups = quant_groups_parallel(flats, self.quant_workers)
+            let groups = quant_groups_parallel(flats, &self.quant)
                 .context("prefill quantization")?;
             for group in groups {
                 let mut m = lock(&self.mgr);
@@ -238,6 +245,30 @@ impl PagedKvCache {
         let slot = self.tracker()?.draft_slot(i)?;
         self.write_fp_slot(slot, vals)?;
         Ok(slot)
+    }
+
+    /// Write `vals.len() / d` contiguous cycle slots starting at cycle slot
+    /// `first` under ONE pool lock (the verify rewrite of a whole γ-window;
+    /// the per-token [`PagedKvCache::write_cycle_slot`] pays one lock per
+    /// slot). One contiguous copy per crossed FP page.
+    pub fn write_cycle_slots(&mut self, first: usize, vals: &[f32]) -> Result<()> {
+        ensure!(
+            !vals.is_empty() && vals.len() % self.d == 0,
+            "cycle window of {} floats is not a whole number of d={} vectors",
+            vals.len(),
+            self.d
+        );
+        let t = vals.len() / self.d;
+        let tr = self.tracker()?;
+        let s0 = tr.draft_slot(first)?;
+        // the last slot's check bounds the whole window (slots are base+i)
+        tr.draft_slot(first + t - 1)?;
+        let mut m = lock(&self.mgr);
+        for (pi, po, off, len) in fp_spans(self.g, self.d, s0, t) {
+            m.fp_mut(self.session, self.table.fp[pi])?[po..po + len]
+                .copy_from_slice(&vals[off..off + len]);
+        }
+        Ok(())
     }
 
     /// Commit a cycle; flush C_F1 into a fresh quant page if the double
@@ -307,30 +338,107 @@ impl PagedKvCache {
     }
 
     /// Zero-allocation read of committed position `pos` into `out` (len d).
-    /// Quantized-region reads are fused per token: only the requested
-    /// token's d packed codes are touched, never the whole G·d group, and
-    /// nothing is heap-allocated — this is the draft/verify steady-state
-    /// hot path. Dequant calls and packed bytes touched are recorded in
-    /// the session manager's [`super::session::CacheTraffic`].
+    /// Single-token wrapper over [`PagedKvCache::read_tokens_into`] — this
+    /// is the draft steady-state hot path; only the requested token's d
+    /// packed codes are touched, never the whole G·d group, and nothing is
+    /// heap-allocated.
     pub fn read_token_into(&self, pos: usize, draft: bool, out: &mut [f32]) -> Result<()> {
-        ensure!(out.len() == self.d, "out buffer dim {} != {}", out.len(), self.d);
+        self.read_tokens_into(pos..pos + 1, draft, out)
+    }
+
+    /// Zero-allocation batched read of the committed window `range` into
+    /// `out` (len `range.len() * d`) — the verify hot path. The pool mutex
+    /// is taken ONCE for the whole window and the quantized region costs
+    /// one block-table/arena lookup per *crossed group* (lane-wise span
+    /// dequant), so a γ-token verify window pays O(groups-crossed) lookups
+    /// instead of O(γ) lock/lookup round-trips. FP-buffer slots are copied
+    /// one contiguous span per crossed page. Dequant calls and packed
+    /// bytes touched are recorded in the session manager's
+    /// [`super::session::CacheTraffic`] exactly as per-token reads would.
+    pub fn read_tokens_into(
+        &self,
+        range: std::ops::Range<usize>,
+        draft: bool,
+        out: &mut [f32],
+    ) -> Result<()> {
+        ensure!(
+            out.len() == range.len() * self.d,
+            "out buffer holds {} floats, window {:?} x dim {} needs {}",
+            out.len(),
+            range,
+            self.d,
+            range.len() * self.d
+        );
+        if range.is_empty() {
+            return Ok(());
+        }
         let tr = self.tracker()?;
-        if pos < tr.n_q {
+        ensure!(
+            range.end <= tr.n_q + tr.n_f,
+            "window {range:?} beyond context ({} tokens)",
+            tr.n_q + tr.n_f
+        );
+        let mut m = lock(&self.mgr);
+        let mut pos = range.start;
+        let mut off = 0usize;
+        // quantized region: one group lookup + one lane-wise span per group
+        while pos < range.end.min(tr.n_q) {
             let gi = pos / self.g;
-            let mut m = lock(&self.mgr);
+            let end = ((gi + 1) * self.g).min(range.end).min(tr.n_q);
+            let k = end - pos;
             {
                 let group = m.read_quant(self.session, self.table.groups[gi])?;
-                group.dequant_token_into(pos % self.g, draft, out);
+                group.dequant_span_into(
+                    (pos % self.g) * self.d,
+                    draft,
+                    &mut out[off..off + k * self.d],
+                );
             }
             // draft touches the upper plane only; target reads both
-            let plane = self.d.div_ceil(2);
-            m.note_dequant(draft, if draft { plane } else { 2 * plane });
-            Ok(())
-        } else {
-            let slot = pos - tr.n_q;
-            ensure!(slot < tr.n_f, "position {pos} beyond context");
-            self.read_fp_slot_into(slot, out)
+            let plane = self.d.div_ceil(2) as u64;
+            let bytes = k as u64 * if draft { plane } else { 2 * plane };
+            m.note_dequant_many(draft, k as u64, bytes);
+            pos = end;
+            off += k * self.d;
         }
+        // FP buffer tail: one contiguous copy per crossed page
+        if pos < range.end {
+            let first = pos - tr.n_q;
+            let n = range.end - pos;
+            let base = off;
+            for (pi, po, span_off, len) in fp_spans(self.g, self.d, first, n) {
+                out[base + span_off..base + span_off + len].copy_from_slice(
+                    &m.fp(self.session, self.table.fp[pi])?[po..po + len],
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Zero-allocation batched read of `out.len() / d` cycle slots starting
+    /// at cycle slot `first` — the drafted, NOT-yet-committed window the
+    /// verify pass just rewrote. Committed positions go through
+    /// [`PagedKvCache::read_tokens_into`]; cycle slots live past `n_f`, so
+    /// they are addressed in draft-slot space. One pool lock, one
+    /// contiguous copy per crossed FP page.
+    pub fn read_cycle_slots_into(&self, first: usize, out: &mut [f32]) -> Result<()> {
+        ensure!(
+            !out.is_empty() && out.len() % self.d == 0,
+            "cycle window of {} floats is not a whole number of d={} vectors",
+            out.len(),
+            self.d
+        );
+        let t = out.len() / self.d;
+        let tr = self.tracker()?;
+        let s0 = tr.draft_slot(first)?;
+        // the last slot's check bounds the whole window (slots are base+i)
+        tr.draft_slot(first + t - 1)?;
+        let m = lock(&self.mgr);
+        for (pi, po, off, len) in fp_spans(self.g, self.d, s0, t) {
+            out[off..off + len]
+                .copy_from_slice(&m.fp(self.session, self.table.fp[pi])?[po..po + len]);
+        }
+        Ok(())
     }
 
     /// Reconstruction-error bound of group `gi` for the chosen plane
@@ -369,6 +477,33 @@ impl PagedKvCache {
 
 fn lock(mgr: &SharedSessionManager) -> std::sync::MutexGuard<'_, super::session::SessionManager> {
     mgr.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Contiguous FP-page spans covering `n` buffer slots starting at slot
+/// `first`: yields `(page_idx, page_offset, out_offset, len)` in f32
+/// elements, one item per crossed page. The single home of the
+/// slot → (page, offset) span arithmetic shared by the batched cycle
+/// writer/reader and `read_tokens_into`'s FP tail.
+fn fp_spans(
+    g: usize,
+    d: usize,
+    first: usize,
+    n: usize,
+) -> impl Iterator<Item = (usize, usize, usize, usize)> {
+    let mut slot = first;
+    let mut off = 0usize;
+    std::iter::from_fn(move || {
+        if slot >= first + n {
+            return None;
+        }
+        let page_idx = slot / g;
+        let end = ((page_idx + 1) * g).min(first + n);
+        let k = end - slot;
+        let item = (page_idx, (slot % g) * d, off, k * d);
+        slot = end;
+        off += k * d;
+        Some(item)
+    })
 }
 
 /// Deterministic d-dim KV vector for (position, token) — the mock model's
@@ -415,6 +550,7 @@ mod tests {
             low_watermark: 1.0,
             quant_workers,
         })
+        .unwrap()
     }
 
     fn cache(mgr: &SharedSessionManager, session: SessionId, cap_groups: usize) -> PagedKvCache {
@@ -581,6 +717,162 @@ mod tests {
                 true
             },
         );
+    }
+
+    /// Property (batched window parity): over EVERY `(start, len)` window
+    /// of a prefilled-then-decoded cache — including windows spanning
+    /// group boundaries and the quantized-region → FP-buffer seam — the
+    /// one-lock `read_tokens_into` returns bit-for-bit what `len`
+    /// independent `read_token_into` calls return, for both planes.
+    #[test]
+    fn prop_read_tokens_into_matches_per_token_reads() {
+        use crate::util::prop::{check, Config};
+        check::<Vec<u64>, _>(
+            Config { cases: 6, size: 3, ..Config::default() },
+            |seeds| {
+                for &seed in seeds {
+                    let buckets = 2 + (seed % 3) as usize;
+                    let mgr = pool_mgr(64);
+                    let mut c = cache(&mgr, 1, buckets + 4);
+                    c.prefill(buckets * G, &|p| {
+                        mock_kv(p, (p as i32) ^ (seed as i32), D)
+                    })
+                    .unwrap();
+                    // extend the FP buffer past C_F1 so windows can end in
+                    // the buffer tail (not just at the prefill seam)
+                    for i in 0..(seed % (G as u64 - 1)) as usize + 1 {
+                        let pos = buckets * G + i;
+                        c.commit_ar(&mock_kv(pos, pos as i32, D)).unwrap();
+                    }
+                    let ctx = {
+                        let tr = c.tracker().unwrap();
+                        tr.n_q + tr.n_f
+                    };
+                    let mut tok = vec![0.0f32; D];
+                    let mut win = vec![0.0f32; ctx * D];
+                    for start in 0..ctx {
+                        for len in 0..=(ctx - start) {
+                            for draft in [true, false] {
+                                c.read_tokens_into(
+                                    start..start + len,
+                                    draft,
+                                    &mut win[..len * D],
+                                )
+                                .unwrap();
+                                for (j, pos) in (start..start + len).enumerate() {
+                                    c.read_token_into(pos, draft, &mut tok).unwrap();
+                                    if win[j * D..(j + 1) * D] != tok[..] {
+                                        return false;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    // wrong-size scratch and out-of-context windows reject
+                    if c.read_tokens_into(0..2, true, &mut win[..D]).is_ok() {
+                        return false;
+                    }
+                    if c
+                        .read_tokens_into(ctx - 1..ctx + 1, false, &mut win[..2 * D])
+                        .is_ok()
+                    {
+                        return false;
+                    }
+                }
+                true
+            },
+        );
+    }
+
+    /// Batched cycle-slot writes land bit-identically to per-slot writes,
+    /// including windows crossing an FP page boundary.
+    #[test]
+    fn write_cycle_slots_matches_per_slot_writes() {
+        let mgr = pool_mgr(32);
+        let mut a = prefilled(&mgr, 1, 2);
+        let mut b = prefilled(&mgr, 2, 2);
+        // advance the buffer so the cycle window straddles an FP page
+        // boundary (slots 14..18 with G = 8 cross from fp[1] into fp[2])
+        for i in 0..6 {
+            let pos = 2 * G + i;
+            a.commit_ar(&mock_kv(pos, pos as i32, D)).unwrap();
+            b.commit_ar(&mock_kv(pos, pos as i32, D)).unwrap();
+        }
+        let t = TMAX;
+        let mut flat = Vec::with_capacity(t * D);
+        for i in 0..t {
+            flat.extend_from_slice(&mock_kv(1000 + i, i as i32, D));
+        }
+        a.begin_cycle().unwrap();
+        b.begin_cycle().unwrap();
+        for (i, chunk) in flat.chunks_exact(D).enumerate() {
+            a.write_cycle_slot(i, chunk).unwrap();
+        }
+        b.write_cycle_slots(0, &flat).unwrap();
+        // the drafted (uncommitted) window reads back bit-exactly through
+        // the batched cycle-slot reader, on both caches
+        let mut back = vec![0.0f32; t * D];
+        for c in [&a, &b] {
+            c.read_cycle_slots_into(0, &mut back).unwrap();
+            assert_eq!(back, flat);
+        }
+        a.commit_cycle(t - 1, t).unwrap();
+        b.commit_cycle(t - 1, t).unwrap();
+        let ctx = a.tracker().unwrap().context_len();
+        for pos in 0..ctx {
+            assert_eq!(
+                a.read_token(pos, false).unwrap(),
+                b.read_token(pos, false).unwrap(),
+                "pos {pos}"
+            );
+        }
+        // a window past the FP buffer is rejected up front
+        let mut c = prefilled(&mgr, 3, 2);
+        c.begin_cycle().unwrap();
+        let giant = vec![0.0f32; (FB + 1) * D];
+        assert!(c.write_cycle_slots(0, &giant).is_err());
+    }
+
+    /// Acceptance: ONE quantization pool serves every session. Two
+    /// sessions prefill concurrently through the same manager; the shared
+    /// pool's `jobs_executed` counter accumulates both fan-outs, its size
+    /// stays `pool.quant_workers`, and outputs are bit-identical to a
+    /// serially-quantized manager.
+    #[test]
+    fn quant_pool_is_shared_across_sessions() {
+        use std::thread;
+        let mgr = pool_mgr_workers(128, 3);
+        let buckets = 6; // 5 quant groups per prefill -> parallel path
+        let readers: Vec<_> = (1..=2u64)
+            .map(|sid| {
+                let mgr = mgr.clone();
+                thread::spawn(move || {
+                    let c = prefilled(&mgr, sid, buckets);
+                    (0..buckets * G)
+                        .map(|p| c.read_token(p, false).unwrap())
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        let outputs: Vec<_> = readers.into_iter().map(|h| h.join().unwrap()).collect();
+        let (size, jobs, depth) = lock(&mgr).quant_pool_stats();
+        assert_eq!(size, 3, "pool sized by quant_workers, created once");
+        assert_eq!(
+            jobs,
+            2 * (buckets as u64 - 1),
+            "both sessions' groups went through the one shared pool"
+        );
+        assert_eq!(depth, 0, "queue drained");
+        let serial_mgr = pool_mgr_workers(128, 1);
+        for (sid, out) in outputs.iter().enumerate() {
+            let sid = sid as u64 + 10;
+            let c = prefilled(&serial_mgr, sid, buckets);
+            for (p, want) in out.iter().enumerate() {
+                assert_eq!(&c.read_token(p, false).unwrap(), want, "pos {p}");
+            }
+        }
+        let (_, serial_jobs, _) = lock(&serial_mgr).quant_pool_stats();
+        assert_eq!(serial_jobs, 0, "single-worker pool quantizes inline");
     }
 
     #[test]

@@ -16,6 +16,7 @@ use anyhow::{bail, ensure, Result};
 
 use crate::cache::MemoryReport;
 use crate::util::json::Json;
+use crate::util::threadpool::{PoolHandle, ThreadPool};
 
 use super::page::{PageHandle, PageKind, PagePool, PoolConfig, SessionId};
 
@@ -58,8 +59,15 @@ struct SessionEntry {
 }
 
 /// Allocate/free/preempt broker between sessions and the shared arena.
+/// Also owns the ONE process-wide quantization thread pool (sized by
+/// `PoolConfig::quant_workers`): sessions clone a [`PoolHandle`] out at
+/// cache construction and fan bulk prefill quantization over the shared
+/// workers — no per-prefill thread spawning, and submits never hold the
+/// manager mutex.
 pub struct SessionManager {
     pool: PagePool,
+    /// The shared quantization pool; handles are cloned out per session.
+    quant: ThreadPool,
     sessions: BTreeMap<SessionId, SessionEntry>,
     clock: u64,
     evictions: u64,
@@ -69,23 +77,45 @@ pub struct SessionManager {
 /// The coordinator and paged caches share the manager behind one mutex.
 pub type SharedSessionManager = Arc<Mutex<SessionManager>>;
 
-pub fn shared(cfg: PoolConfig) -> SharedSessionManager {
-    Arc::new(Mutex::new(SessionManager::new(cfg)))
+pub fn shared(cfg: PoolConfig) -> Result<SharedSessionManager> {
+    Ok(Arc::new(Mutex::new(SessionManager::new(cfg)?)))
 }
 
 impl SessionManager {
-    pub fn new(cfg: PoolConfig) -> SessionManager {
-        SessionManager {
+    pub fn new(cfg: PoolConfig) -> Result<SessionManager> {
+        ensure!(
+            cfg.quant_workers >= 1,
+            "pool.quant_workers must be >= 1 (the shared quantization pool \
+             needs at least one worker; use 1 for serial quantization)"
+        );
+        let quant = ThreadPool::new(cfg.quant_workers);
+        Ok(SessionManager {
             pool: PagePool::new(cfg),
+            quant,
             sessions: BTreeMap::new(),
             clock: 0,
             evictions: 0,
             traffic: CacheTraffic::default(),
-        }
+        })
     }
 
     pub fn pool(&self) -> &PagePool {
         &self.pool
+    }
+
+    /// A `Sync`, cloneable handle onto the process-wide quantization pool.
+    pub fn quant_handle(&self) -> PoolHandle {
+        self.quant.handle()
+    }
+
+    /// (workers, jobs executed, queue depth) of the shared quantization
+    /// pool — the `/stats` gauges proving one pool serves every session.
+    pub fn quant_pool_stats(&self) -> (usize, u64, usize) {
+        (
+            self.quant.size(),
+            self.quant.jobs_executed() as u64,
+            self.quant.queue_depth(),
+        )
     }
 
     pub fn evictions(&self) -> u64 {
@@ -97,16 +127,18 @@ impl SessionManager {
         self.traffic
     }
 
-    /// Record one per-token dequantization touching `bytes` packed code
-    /// bytes. Called on the zero-allocation read path, so it is two plain
-    /// integer adds.
-    pub(crate) fn note_dequant(&mut self, draft: bool, bytes: usize) {
+    /// Record `calls` per-token dequantizations touching `bytes` packed
+    /// code bytes in total. The batched window reader accounts one crossed
+    /// group at a time (calls = tokens served from that group), so a
+    /// γ-window read costs O(groups-crossed) counter updates, not O(γ).
+    /// Called on the zero-allocation read path: two plain integer adds.
+    pub(crate) fn note_dequant_many(&mut self, draft: bool, calls: u64, bytes: u64) {
         if draft {
-            self.traffic.dequant_calls_draft += 1;
-            self.traffic.bytes_read_draft += bytes as u64;
+            self.traffic.dequant_calls_draft += calls;
+            self.traffic.bytes_read_draft += bytes;
         } else {
-            self.traffic.dequant_calls_target += 1;
-            self.traffic.bytes_read_target += bytes as u64;
+            self.traffic.dequant_calls_target += calls;
+            self.traffic.bytes_read_target += bytes;
         }
     }
 
@@ -290,6 +322,7 @@ impl SessionManager {
 
     /// Snapshot for `/stats` and the benches.
     pub fn stats_json(&self) -> Json {
+        let (q_workers, q_jobs, q_depth) = self.quant_pool_stats();
         Json::obj(vec![
             ("pages_capacity", Json::num(self.pool.capacity() as f64)),
             ("pages_in_use", Json::num(self.pool.pages_in_use() as f64)),
@@ -320,6 +353,15 @@ impl SessionManager {
             (
                 crate::metrics::names::QUANT_BYTES_READ_TARGET,
                 Json::num(self.traffic.bytes_read_target as f64),
+            ),
+            (
+                crate::metrics::names::QUANT_POOL_WORKERS,
+                Json::num(q_workers as f64),
+            ),
+            (crate::metrics::names::QUANT_POOL_JOBS, Json::num(q_jobs as f64)),
+            (
+                crate::metrics::names::QUANT_POOL_QUEUE_DEPTH,
+                Json::num(q_depth as f64),
             ),
         ])
     }
@@ -359,6 +401,18 @@ mod tests {
             low_watermark: 0.6,
             ..PoolConfig::default()
         })
+        .unwrap()
+    }
+
+    #[test]
+    fn zero_quant_workers_is_an_error_not_a_clamp() {
+        let err = SessionManager::new(PoolConfig {
+            quant_workers: 0,
+            ..PoolConfig::default()
+        })
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("quant_workers"), "got: {err}");
     }
 
     #[test]
@@ -384,7 +438,8 @@ mod tests {
             high_watermark: 0.9,
             low_watermark: 0.8,
             ..PoolConfig::default()
-        });
+        })
+        .unwrap();
         m.admit(1, 4, true).unwrap();
         for _ in 0..4 {
             m.alloc(1, PageKind::Quant).unwrap();
@@ -423,7 +478,8 @@ mod tests {
             high_watermark: 1.0,
             low_watermark: 1.0,
             ..PoolConfig::default()
-        });
+        })
+        .unwrap();
         m.admit(1, 3, true).unwrap();
         for _ in 0..3 {
             m.alloc(1, PageKind::Quant).unwrap();

@@ -21,14 +21,20 @@
 //!
 //! The decode hot path never allocates: [`PackedGroup::dequant_token_into`]
 //! reconstructs one token's `d` values straight into a caller scratch
-//! buffer, and the whole-group [`PackedGroup::dequant_draft_into`] /
+//! buffer, [`PackedGroup::dequant_span_into`] handles any contiguous
+//! element span (the paged cache's batched verify-window reads), and the
+//! whole-group [`PackedGroup::dequant_draft_into`] /
 //! [`PackedGroup::dequant_target_into`] variants exist for bulk readers and
-//! benches. The allocating `dequant_draft` / `dequant_target` wrappers
-//! remain for tests and one-shot callers.
+//! benches. All of them unpack **lane-wise**: whole packed bytes are
+//! processed two codes at a time, with a 16-byte inner chunk written so
+//! LLVM can autovectorize — bit-identical to the scalar per-nibble
+//! accessors (`draft_value` / `target_value`), which remain the property-
+//! tested reference. The allocating `dequant_draft` / `dequant_target`
+//! wrappers remain for tests and one-shot callers.
 
 use anyhow::{ensure, Result};
 
-use crate::util::threadpool::ThreadPool;
+use crate::util::threadpool::{PoolHandle, WaitGroup};
 
 /// One quantized group: two nibble-packed code planes plus scale/zero.
 ///
@@ -115,35 +121,146 @@ impl PackedGroup {
             "token {pos} x dim {d} out of group ({} codes)",
             self.len
         );
+        self.dequant_span_into(start, draft, out);
+    }
+
+    /// Lane-wise dequantization of the contiguous element span
+    /// `[start, start + out.len())` through the chosen plane into `out` —
+    /// the batched verify-window read primitive. Zero allocation;
+    /// bit-identical to calling `draft_value` / `target_value` per element.
+    /// Panics when the span exceeds the group (caller-side invariant).
+    #[inline]
+    pub fn dequant_span_into(&self, start: usize, draft: bool, out: &mut [f32]) {
+        assert!(
+            start + out.len() <= self.len,
+            "span {start}+{} out of group ({} codes)",
+            out.len(),
+            self.len
+        );
         if draft {
-            let s4 = 16.0 * self.scale8;
-            for (j, o) in out.iter_mut().enumerate() {
-                *o = self.upper_code(start + j) as f32 * s4 + self.zero;
-            }
+            self.unpack_draft_span(start, out);
         } else {
-            for (j, o) in out.iter_mut().enumerate() {
-                *o = self.target_value(start + j);
-            }
+            self.unpack_target_span(start, out);
         }
     }
 
     /// Whole-group draft dequantization into a caller buffer (no alloc).
     pub fn dequant_draft_into(&self, out: &mut [f32]) {
         assert_eq!(out.len(), self.len, "scratch buffer length");
-        let s4 = 16.0 * self.scale8;
-        for (i, o) in out.iter_mut().enumerate() {
-            *o = self.upper_code(i) as f32 * s4 + self.zero;
-        }
+        self.unpack_draft_span(0, out);
     }
 
     /// Whole-group target dequantization into a caller buffer (no alloc).
     pub fn dequant_target_into(&self, out: &mut [f32]) {
         assert_eq!(out.len(), self.len, "scratch buffer length");
-        for (i, o) in out.iter_mut().enumerate() {
-            *o = self.target_value(i);
+        self.unpack_target_span(0, out);
+    }
+
+    /// Lane-wise draft (upper-plane) unpack: consume whole packed bytes —
+    /// two codes per step — in [`LANE_BYTES`]-byte inner chunks the
+    /// compiler can autovectorize. Per-element arithmetic is exactly the
+    /// scalar `draft_value` expression, so output bits are identical.
+    fn unpack_draft_span(&self, start: usize, out: &mut [f32]) {
+        let n = out.len();
+        if n == 0 {
+            return;
+        }
+        let s4 = 16.0 * self.scale8;
+        let zero = self.zero;
+        let mut i = start;
+        let mut o = 0usize;
+        // unaligned head: an odd start element lives in a high nibble
+        if i & 1 == 1 {
+            out[0] = (self.upper[i >> 1] >> 4) as f32 * s4 + zero;
+            i += 1;
+            o += 1;
+        }
+        let pairs = (n - o) / 2;
+        let bytes = &self.upper[i >> 1..(i >> 1) + pairs];
+        let vals = &mut out[o..o + 2 * pairs];
+        let mut bi = bytes.chunks_exact(LANE_BYTES);
+        let mut vi = vals.chunks_exact_mut(2 * LANE_BYTES);
+        for (bc, vc) in (&mut bi).zip(&mut vi) {
+            for k in 0..LANE_BYTES {
+                vc[2 * k] = (bc[k] & 0x0F) as f32 * s4 + zero;
+                vc[2 * k + 1] = (bc[k] >> 4) as f32 * s4 + zero;
+            }
+        }
+        for (&b, v) in bi.remainder().iter().zip(vi.into_remainder().chunks_exact_mut(2)) {
+            v[0] = (b & 0x0F) as f32 * s4 + zero;
+            v[1] = (b >> 4) as f32 * s4 + zero;
+        }
+        o += 2 * pairs;
+        i += 2 * pairs;
+        // tail: a final even element occupies a low nibble
+        if o < n {
+            out[o] = (self.upper[i >> 1] & 0x0F) as f32 * s4 + zero;
+        }
+    }
+
+    /// Lane-wise target (both-planes) unpack; same structure as
+    /// [`PackedGroup::unpack_draft_span`], arithmetic exactly the scalar
+    /// `target_value` expression.
+    fn unpack_target_span(&self, start: usize, out: &mut [f32]) {
+        let n = out.len();
+        if n == 0 {
+            return;
+        }
+        let s8 = self.scale8;
+        let zero = self.zero;
+        let mut i = start;
+        let mut o = 0usize;
+        if i & 1 == 1 {
+            let u = (self.upper[i >> 1] >> 4) as f32;
+            let l = ((self.lower[i >> 1] >> 4) as i8 - LOWER_BIAS) as f32;
+            out[0] = (16.0 * u + l) * s8 + zero;
+            i += 1;
+            o += 1;
+        }
+        let pairs = (n - o) / 2;
+        let ub = &self.upper[i >> 1..(i >> 1) + pairs];
+        let lb = &self.lower[i >> 1..(i >> 1) + pairs];
+        let vals = &mut out[o..o + 2 * pairs];
+        let mut ui = ub.chunks_exact(LANE_BYTES);
+        let mut li = lb.chunks_exact(LANE_BYTES);
+        let mut vi = vals.chunks_exact_mut(2 * LANE_BYTES);
+        for ((uc, lc), vc) in (&mut ui).zip(&mut li).zip(&mut vi) {
+            for k in 0..LANE_BYTES {
+                let u0 = (uc[k] & 0x0F) as f32;
+                let l0 = ((lc[k] & 0x0F) as i8 - LOWER_BIAS) as f32;
+                vc[2 * k] = (16.0 * u0 + l0) * s8 + zero;
+                let u1 = (uc[k] >> 4) as f32;
+                let l1 = ((lc[k] >> 4) as i8 - LOWER_BIAS) as f32;
+                vc[2 * k + 1] = (16.0 * u1 + l1) * s8 + zero;
+            }
+        }
+        let tail_v = vi.into_remainder();
+        for ((&u, &l), v) in ui
+            .remainder()
+            .iter()
+            .zip(li.remainder())
+            .zip(tail_v.chunks_exact_mut(2))
+        {
+            let u0 = (u & 0x0F) as f32;
+            let l0 = ((l & 0x0F) as i8 - LOWER_BIAS) as f32;
+            v[0] = (16.0 * u0 + l0) * s8 + zero;
+            let u1 = (u >> 4) as f32;
+            let l1 = ((l >> 4) as i8 - LOWER_BIAS) as f32;
+            v[1] = (16.0 * u1 + l1) * s8 + zero;
+        }
+        o += 2 * pairs;
+        i += 2 * pairs;
+        if o < n {
+            let u = (self.upper[i >> 1] & 0x0F) as f32;
+            let l = ((self.lower[i >> 1] & 0x0F) as i8 - LOWER_BIAS) as f32;
+            out[o] = (16.0 * u + l) * s8 + zero;
         }
     }
 }
+
+/// Inner-chunk width of the lane-wise unpackers: 16 packed bytes = 32
+/// codes per iteration, sized for 128/256-bit SIMD autovectorization.
+const LANE_BYTES: usize = 16;
 
 /// Hierarchically quantize one group of values.
 ///
@@ -179,17 +296,22 @@ pub fn quant_group(xs: &[f32]) -> Result<PackedGroup> {
     Ok(PackedGroup { upper, lower, len: xs.len(), scale8, zero })
 }
 
-/// Quantize many groups, fanned out over `workers` threads from
-/// `util::threadpool` (bulk prefill quantization; a decode-time flush has
-/// one group and stays serial). Takes the groups by value: the parallel
-/// path moves them into an `Arc` to satisfy the pool's `'static` job
-/// bound, so no input data is copied. `workers <= 1` or a single group
-/// runs serially. Output order and bits are identical to the serial path.
+/// Quantize many groups, fanned out over the process-wide shared
+/// quantization pool (bulk prefill quantization; a decode-time flush has
+/// one group and stays serial). The pool is created ONCE at coordinator
+/// startup — sized by `pool.quant_workers` — and every session submits
+/// through a cloned [`PoolHandle`], so concurrent prefills share one
+/// worker set instead of spawning threads per call. Takes the groups by
+/// value: the parallel path moves them into an `Arc` to satisfy the
+/// pool's `'static` job bound, so no input data is copied. A single-worker
+/// pool or a single group runs serially inline. Output order and bits are
+/// identical to the serial path; completion is caller-scoped (a
+/// [`WaitGroup`]), so one session's prefill never waits on another's jobs.
 pub fn quant_groups_parallel(
     inputs: Vec<Vec<f32>>,
-    workers: usize,
+    pool: &PoolHandle,
 ) -> Result<Vec<PackedGroup>> {
-    if workers <= 1 || inputs.len() <= 1 {
+    if pool.size() <= 1 || inputs.len() <= 1 {
         return inputs.iter().map(|xs| quant_group(xs)).collect();
     }
     use std::sync::{Arc, Mutex};
@@ -197,16 +319,16 @@ pub fn quant_groups_parallel(
     let shared: Arc<Vec<Vec<f32>>> = Arc::new(inputs);
     let slots: Arc<Mutex<Vec<Option<Result<PackedGroup>>>>> =
         Arc::new(Mutex::new(std::iter::repeat_with(|| None).take(n).collect()));
-    let pool = ThreadPool::new(workers.min(n));
+    let wg = WaitGroup::new();
     for i in 0..n {
         let shared = Arc::clone(&shared);
         let slots = Arc::clone(&slots);
-        pool.submit(move || {
+        pool.scoped_submit(&wg, move || {
             let r = quant_group(&shared[i]);
             slots.lock().unwrap()[i] = Some(r);
         });
     }
-    pool.join();
+    wg.wait();
     let mut guard = slots.lock().unwrap();
     let mut out = Vec::with_capacity(n);
     for (i, slot) in guard.iter_mut().enumerate() {
@@ -396,14 +518,64 @@ mod tests {
 
     #[test]
     fn parallel_quantization_is_bit_identical() {
+        use crate::util::threadpool::ThreadPool;
         let inputs: Vec<Vec<f32>> =
             (0..9).map(|s| random_group(s, 96 + s as usize, -3.0, 3.0)).collect();
-        let serial = quant_groups_parallel(inputs.clone(), 1).unwrap();
-        let parallel = quant_groups_parallel(inputs.clone(), 4).unwrap();
+        let serial_pool = ThreadPool::new(1);
+        let shared_pool = ThreadPool::new(4);
+        let serial = quant_groups_parallel(inputs.clone(), &serial_pool.handle()).unwrap();
+        let parallel = quant_groups_parallel(inputs.clone(), &shared_pool.handle()).unwrap();
         assert_eq!(serial, parallel);
+        // the serial fallback never touched the shared workers; the
+        // parallel fan-out pushed every group through the one pool
+        assert_eq!(serial_pool.jobs_executed(), 0);
+        assert_eq!(shared_pool.jobs_executed(), inputs.len());
         // a poisoned group surfaces as an error, not a hang or panic
         let mut bad = inputs;
         bad[4][0] = f32::NAN;
-        assert!(quant_groups_parallel(bad, 4).is_err());
+        assert!(quant_groups_parallel(bad, &shared_pool.handle()).is_err());
+    }
+
+    /// Property (lane-wise unpack parity): for random group lengths (odd
+    /// and even) and every span shape — unaligned heads, 16-byte body
+    /// chunks, sub-chunk remainders, dangling tails — the lane-wise span
+    /// readers return bit-for-bit what the scalar per-nibble accessors
+    /// (`draft_value` / `target_value`) compute.
+    #[test]
+    fn prop_lane_unpack_matches_scalar() {
+        use crate::util::prop::{check, Config};
+        check::<Vec<u64>, _>(
+            Config { cases: 30, size: 8, ..Config::default() },
+            |seeds| {
+                for &seed in seeds {
+                    let n = 1 + (seed % 131) as usize;
+                    let xs = random_group(seed, n, -3.0, 2.5);
+                    let g = quant_group(&xs).unwrap();
+                    let step = (n / 17).max(1);
+                    for start in (0..n).step_by(step) {
+                        for len in [0, 1, 2, 3, 5, 34, n - start] {
+                            if start + len > n {
+                                continue;
+                            }
+                            let mut out = vec![0.0f32; len];
+                            for draft in [true, false] {
+                                g.dequant_span_into(start, draft, &mut out);
+                                for (j, &got) in out.iter().enumerate() {
+                                    let want = if draft {
+                                        g.draft_value(start + j)
+                                    } else {
+                                        g.target_value(start + j)
+                                    };
+                                    if got.to_bits() != want.to_bits() {
+                                        return false;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                true
+            },
+        );
     }
 }

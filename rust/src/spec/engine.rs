@@ -83,12 +83,20 @@ impl SpecEngine {
         }
 
         let gamma = self.gamma.min(dec.gamma_max());
+        // Cycle-persistent buffers: the outer token/logit vectors are
+        // hoisted out of the loop (the per-step logits the decoder
+        // returns by value are still fresh allocations — that is the
+        // Decoder trait's contract); the γ-window's cache traffic is
+        // batched inside the decoder (see `PagedKvCache::read_tokens_into`).
+        let mut drafted: Vec<i32> = Vec::with_capacity(gamma);
+        let mut draft_logits: Vec<Vec<f32>> = Vec::with_capacity(gamma);
+        let mut vtokens: Vec<i32> = Vec::with_capacity(gamma + 1);
         while res.tokens.len() < max_new {
             // ---- draft phase (Alg. 1 lines 6-9) ----
             dec.begin_cycle();
             let mut feed = last;
-            let mut drafted = Vec::with_capacity(gamma);
-            let mut draft_logits = Vec::with_capacity(gamma);
+            drafted.clear();
+            draft_logits.clear();
             for _ in 0..gamma {
                 let q = dec.draft_step(feed)?;
                 let g = self.sampler.sample(&q);
@@ -99,9 +107,12 @@ impl SpecEngine {
             // ---- verify phase (Alg. 1 lines 10-20) ----
             // feed slots: [last, g_1 .. g_gamma] — row i is the target
             // distribution after token i, so rows 0..gamma-1 judge the
-            // drafts and row gamma is the bonus distribution.
-            let mut vtokens = vec![last];
-            vtokens.extend(&drafted);
+            // drafts and row gamma is the bonus distribution. One verify
+            // call covers the whole window, so the cache-side cost is one
+            // lock and O(groups-crossed) lookups per cycle, not O(γ).
+            vtokens.clear();
+            vtokens.push(last);
+            vtokens.extend_from_slice(&drafted);
             let target_logits = dec.verify(&vtokens)?;
             let out = self.sampler.verify(&drafted, &draft_logits, &target_logits);
             res.drafted += gamma as u64;

@@ -1,93 +1,223 @@
-//! Fixed-size worker pool over std threads + channels (no tokio offline).
+//! Fixed-size worker pool over std threads (no tokio offline).
 //!
-//! The coordinator's continuous batcher runs decode engines on this pool;
-//! jobs are boxed closures. `join` blocks until all submitted jobs drain —
-//! used at shutdown and by batch-scoped scopes in benches.
+//! The queue is a plain `Mutex<VecDeque>` + condvar (not `mpsc`) so the
+//! pool can hand out [`PoolHandle`] — a `Sync`, cloneable submission handle
+//! that lets ONE process-wide pool serve many concurrent producers. The
+//! coordinator creates a single quantization pool at startup (sized by
+//! `pool.quant_workers`); every session clones a handle out of the session
+//! manager and fans its prefill quantization over the shared workers
+//! instead of spawning a fresh pool per prefill.
+//!
+//! Two completion scopes:
+//! * [`ThreadPool::join`] — global: blocks until *every* submitted job has
+//!   drained (shutdown, single-tenant benches);
+//! * [`WaitGroup`] + [`PoolHandle::scoped_submit`] — caller-scoped: each
+//!   producer waits for exactly the jobs it submitted, so concurrent
+//!   sessions never block on each other's work.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-pub struct ThreadPool {
-    tx: Option<mpsc::Sender<Job>>,
-    workers: Vec<thread::JoinHandle<()>>,
-    pending: Arc<(Mutex<usize>, Condvar)>,
-    executed: Arc<AtomicUsize>,
+struct QueueState {
+    jobs: VecDeque<Job>,
+    /// Jobs submitted but not yet finished (queued + running).
+    pending: usize,
+    closed: bool,
 }
 
-impl ThreadPool {
-    pub fn new(threads: usize) -> Self {
-        let threads = threads.max(1);
-        let (tx, rx) = mpsc::channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
-        let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
-        let executed = Arc::new(AtomicUsize::new(0));
-        let workers = (0..threads)
-            .map(|i| {
-                let rx = Arc::clone(&rx);
-                let pending = Arc::clone(&pending);
-                let executed = Arc::clone(&executed);
-                thread::Builder::new()
-                    .name(format!("qs-worker-{i}"))
-                    .spawn(move || loop {
-                        let job = {
-                            let guard = rx.lock().unwrap();
-                            guard.recv()
-                        };
-                        match job {
-                            Ok(job) => {
-                                job();
-                                executed.fetch_add(1, Ordering::Relaxed);
-                                let (lock, cv) = &*pending;
-                                let mut n = lock.lock().unwrap();
-                                *n -= 1;
-                                if *n == 0 {
-                                    cv.notify_all();
-                                }
-                            }
-                            Err(_) => break,
-                        }
-                    })
-                    .expect("spawn worker")
-            })
-            .collect();
-        ThreadPool { tx: Some(tx), workers, pending, executed }
+struct Inner {
+    state: Mutex<QueueState>,
+    /// Workers park here waiting for jobs.
+    work_cv: Condvar,
+    /// `join` callers park here waiting for `pending` to reach zero.
+    done_cv: Condvar,
+    executed: AtomicUsize,
+    size: usize,
+}
+
+impl Inner {
+    fn submit(&self, job: Job) {
+        {
+            let mut s = self.state.lock().unwrap();
+            assert!(!s.closed, "pool shut down");
+            s.pending += 1;
+            s.jobs.push_back(job);
+        }
+        self.work_cv.notify_one();
     }
 
+    fn queue_depth(&self) -> usize {
+        self.state.lock().unwrap().jobs.len()
+    }
+}
+
+/// A `Sync`, cloneable submission handle onto a [`ThreadPool`]'s queue.
+///
+/// Handles are cheap (`Arc` clone) and do not keep the workers alive: the
+/// owning [`ThreadPool`] must outlive every submit (submitting after the
+/// pool dropped panics). A job that panics kills its worker thread; jobs
+/// here return errors through their own channels instead of panicking.
+#[derive(Clone)]
+pub struct PoolHandle {
+    inner: Arc<Inner>,
+}
+
+impl PoolHandle {
     pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
-        let (lock, _) = &*self.pending;
-        *lock.lock().unwrap() += 1;
-        self.tx
-            .as_ref()
-            .expect("pool shut down")
-            .send(Box::new(f))
-            .expect("worker channel closed");
+        self.inner.submit(Box::new(f));
     }
 
-    /// Block until every submitted job has completed.
-    pub fn join(&self) {
-        let (lock, cv) = &*self.pending;
+    /// Submit a job tracked by `wg`: `wg.wait()` returns once every job
+    /// submitted through that group has finished. Unlike
+    /// [`ThreadPool::join`] this is caller-scoped — it does not wait on
+    /// jobs other producers pushed onto the same shared pool.
+    pub fn scoped_submit<F: FnOnce() + Send + 'static>(&self, wg: &WaitGroup, f: F) {
+        *wg.inner.0.lock().unwrap() += 1;
+        let wg = Arc::clone(&wg.inner);
+        self.inner.submit(Box::new(move || {
+            f();
+            let (lock, cv) = &*wg;
+            let mut n = lock.lock().unwrap();
+            *n -= 1;
+            if *n == 0 {
+                cv.notify_all();
+            }
+        }));
+    }
+
+    /// Worker threads behind this handle.
+    pub fn size(&self) -> usize {
+        self.inner.size
+    }
+
+    /// Jobs completed over the pool's lifetime (all producers).
+    pub fn jobs_executed(&self) -> usize {
+        self.inner.executed.load(Ordering::Relaxed)
+    }
+
+    /// Jobs queued but not yet picked up (instantaneous gauge).
+    pub fn queue_depth(&self) -> usize {
+        self.inner.queue_depth()
+    }
+}
+
+/// Caller-scoped completion tracker for [`PoolHandle::scoped_submit`].
+#[derive(Clone, Default)]
+pub struct WaitGroup {
+    inner: Arc<(Mutex<usize>, Condvar)>,
+}
+
+impl WaitGroup {
+    pub fn new() -> WaitGroup {
+        WaitGroup::default()
+    }
+
+    /// Block until every job submitted through this group has completed.
+    pub fn wait(&self) {
+        let (lock, cv) = &*self.inner;
         let mut n = lock.lock().unwrap();
         while *n > 0 {
             n = cv.wait(n).unwrap();
         }
     }
+}
+
+pub struct ThreadPool {
+    inner: Arc<Inner>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let inner = Arc::new(Inner {
+            state: Mutex::new(QueueState {
+                jobs: VecDeque::new(),
+                pending: 0,
+                closed: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            executed: AtomicUsize::new(0),
+            size: threads,
+        });
+        let workers = (0..threads)
+            .map(|i| {
+                let inner = Arc::clone(&inner);
+                thread::Builder::new()
+                    .name(format!("qs-worker-{i}"))
+                    .spawn(move || worker_loop(&inner))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { inner, workers }
+    }
+
+    /// A `Sync`, cloneable submission handle shared by all producers.
+    pub fn handle(&self) -> PoolHandle {
+        PoolHandle { inner: Arc::clone(&self.inner) }
+    }
+
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.inner.submit(Box::new(f));
+    }
+
+    /// Block until every submitted job (from every producer) has completed.
+    pub fn join(&self) {
+        let mut s = self.inner.state.lock().unwrap();
+        while s.pending > 0 {
+            s = self.inner.done_cv.wait(s).unwrap();
+        }
+    }
 
     pub fn jobs_executed(&self) -> usize {
-        self.executed.load(Ordering::Relaxed)
+        self.inner.executed.load(Ordering::Relaxed)
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.inner.queue_depth()
     }
 
     pub fn size(&self) -> usize {
-        self.workers.len()
+        self.inner.size
+    }
+}
+
+fn worker_loop(inner: &Inner) {
+    loop {
+        let job = {
+            let mut s = inner.state.lock().unwrap();
+            loop {
+                // Drain queued work before honoring shutdown so drop keeps
+                // the old "waits for all submitted jobs" semantics.
+                if let Some(j) = s.jobs.pop_front() {
+                    break Some(j);
+                }
+                if s.closed {
+                    break None;
+                }
+                s = inner.work_cv.wait(s).unwrap();
+            }
+        };
+        let Some(job) = job else { break };
+        job();
+        inner.executed.fetch_add(1, Ordering::Relaxed);
+        let mut s = inner.state.lock().unwrap();
+        s.pending -= 1;
+        if s.pending == 0 {
+            inner.done_cv.notify_all();
+        }
     }
 }
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        self.tx.take(); // close the channel; workers exit on recv error
+        self.inner.state.lock().unwrap().closed = true;
+        self.inner.work_cv.notify_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -112,6 +242,7 @@ mod tests {
         pool.join();
         assert_eq!(counter.load(Ordering::SeqCst), 100);
         assert_eq!(pool.jobs_executed(), 100);
+        assert_eq!(pool.queue_depth(), 0);
     }
 
     #[test]
@@ -135,5 +266,82 @@ mod tests {
             pool.join();
         }
         assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn handle_is_send_sync_clone() {
+        fn assert_traits<T: Send + Sync + Clone>() {}
+        assert_traits::<PoolHandle>();
+        assert_traits::<WaitGroup>();
+    }
+
+    /// A wait group waits for exactly its own jobs: the fast group drains
+    /// while a gated job from another group is still parked on a worker.
+    #[test]
+    fn scoped_wait_groups_track_only_their_jobs() {
+        let pool = ThreadPool::new(2);
+        let h = pool.handle();
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let wg_slow = WaitGroup::new();
+        {
+            let gate = Arc::clone(&gate);
+            h.scoped_submit(&wg_slow, move || {
+                let (lock, cv) = &*gate;
+                let mut open = lock.lock().unwrap();
+                while !*open {
+                    open = cv.wait(open).unwrap();
+                }
+            });
+        }
+        let wg_fast = WaitGroup::new();
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..8 {
+            let c = Arc::clone(&counter);
+            h.scoped_submit(&wg_fast, move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        // must return even though the gated job never finished
+        wg_fast.wait();
+        assert_eq!(counter.load(Ordering::SeqCst), 8);
+        {
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        wg_slow.wait();
+        pool.join();
+        assert_eq!(pool.jobs_executed(), 9);
+    }
+
+    /// Many producer threads share ONE pool through cloned handles; every
+    /// job lands on the same worker set and the shared counters add up.
+    #[test]
+    fn concurrent_handles_share_one_pool() {
+        let pool = ThreadPool::new(3);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let producers: Vec<_> = (0..4)
+            .map(|_| {
+                let h = pool.handle();
+                let counter = Arc::clone(&counter);
+                thread::spawn(move || {
+                    let wg = WaitGroup::new();
+                    for _ in 0..25 {
+                        let c = Arc::clone(&counter);
+                        h.scoped_submit(&wg, move || {
+                            c.fetch_add(1, Ordering::SeqCst);
+                        });
+                    }
+                    wg.wait();
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+        assert_eq!(pool.jobs_executed(), 100, "one shared executed counter");
+        assert_eq!(pool.size(), 3, "no extra pools spawned");
+        assert_eq!(pool.queue_depth(), 0);
     }
 }

@@ -5,10 +5,13 @@
 //! is process-wide, and a single `#[test]` keeps the measurement window
 //! free of other tests' (parallel) allocations.
 //!
-//! Contract under test (ISSUE 2 acceptance criteria):
+//! Contract under test (ISSUE 2 + ISSUE 3 acceptance criteria):
 //! * steady-state `PagedKvCache::read_token_into` performs ZERO heap
 //!   allocations, for quantized-region (draft and target plane) and FP
 //!   buffer positions alike;
+//! * batched verify-window reads (`PagedKvCache::read_tokens_into`) are
+//!   equally allocation-free across every window shape: quant-only,
+//!   group-boundary-spanning, quant→FP-seam-spanning, and FP-tail;
 //! * a steady-state `MockDecoder::draft_step` performs exactly ONE
 //!   allocation — the logits vector the `Decoder` trait returns by value;
 //!   the whole KV write/read-back path (mock_kv_into, write_cycle_slot,
@@ -62,6 +65,7 @@ fn pool_mgr() -> quantspec::pool::SharedSessionManager {
         low_watermark: 1.0,
         quant_workers: 1,
     })
+    .expect("pool config valid")
 }
 
 #[test]
@@ -90,6 +94,27 @@ fn steady_state_hot_path_does_not_allocate() {
     assert_eq!(
         read_delta, 0,
         "read_token_into allocated {read_delta} times over 8000 steady-state reads"
+    );
+
+    // ---- read_tokens_into: batched verify windows, zero allocations ----
+    let mut win = vec![0.0f32; 8 * D];
+    // warm every window shape once (quant-only, seam-spanning, FP tail)
+    for start in [0usize, G - 4, 3 * G - 4, 3 * G] {
+        cache.read_tokens_into(start..start + 8, false, &mut win).unwrap();
+    }
+    let before = allocs();
+    for rep in 0..250 {
+        for &start in &[0usize, G - 4, 3 * G - 4, 3 * G] {
+            cache
+                .read_tokens_into(start..start + 8, rep % 2 == 0, &mut win)
+                .unwrap();
+            std::hint::black_box(&win);
+        }
+    }
+    let window_delta = allocs() - before;
+    assert_eq!(
+        window_delta, 0,
+        "read_tokens_into allocated {window_delta} times over 1000 window reads"
     );
 
     // ---- draft_step: exactly the one returned logits vector ------------
