@@ -1,19 +1,23 @@
 //! Multi-session decode under a constrained paged KV pool: admission
-//! control, LRU eviction of idle prefix caches, and clean rejection of
-//! oversized requests — reported alongside the Figure 6 KV-memory numbers
-//! the pool exists to manage.
+//! control, LRU eviction of idle prefix caches, clean rejection of
+//! oversized requests, and chunked-prefill interleaving (one huge prompt
+//! admitted alongside N decoders: every batcher round's prefill work is
+//! bounded by the chunk size, never the prompt size) — reported alongside
+//! the Figure 6 KV-memory numbers the pool exists to manage. Emits
+//! `BENCH_pool_pressure.json` (checked by CI's `bench-smoke` jq gate).
 //!
 //!     cargo bench --bench pool_pressure
 
 use std::time::Instant;
 
 use quantspec::bench::{fmt_f, fmt_gb, Table};
-use quantspec::coordinator::batcher::{ActiveSession, StepBatcher};
+use quantspec::coordinator::batcher::{ActiveSession, QuantBackpressure, StepBatcher};
 use quantspec::config::Method;
 use quantspec::costmodel::{memory, PaperModel};
 use quantspec::model::{mock_fb, MockDecoder, MOCK_GAMMA_MAX, MOCK_VOCAB};
 use quantspec::pool::{self, AdmitOutcome, PagedKvCache, PoolConfig};
 use quantspec::spec::Sampler;
+use quantspec::util::json::Json;
 use quantspec::workload::{self, Profile};
 
 const G: usize = 8;
@@ -93,7 +97,7 @@ fn main() {
                         MAX_NEW,
                     )
                     .unwrap();
-                    batcher.admit(sess);
+                    batcher.admit(sess).expect("capacity checked above");
                 }
                 AdmitOutcome::Saturated => {
                     admission_retries += 1;
@@ -153,6 +157,182 @@ fn main() {
     t.print("pool_pressure — multi-session decode under a bounded KV pool");
     let _ = t.write_csv("bench_out/pool_pressure.csv");
     println!("pages still resident (surviving idle caches): {in_use}");
+
+    // --- phase 3: chunked prefill interleaved with decode ----------------
+    // One huge prompt admitted in `Prefilling` state alongside N decode
+    // sessions. Gates: (a) no round feeds more than CHUNK prefill tokens
+    // (round cost bounded by chunk size, not prompt size — structural,
+    // noise-free); (b) the median interleaved round is cheaper than one
+    // monolithic prefill of the same prompt (wall clock, lenient); (c) the
+    // short decoders all finish while the huge prefill is still running
+    // (no head-of-line blocking).
+    const HUGE_PROMPT: usize = 4096;
+    const CHUNK: usize = 128;
+    const SHORT_DECODERS: u64 = 3;
+    let mgr2 = pool::shared(PoolConfig {
+        pages: 1200,
+        page_tokens: G,
+        kv_dim: D,
+        high_watermark: 1.0,
+        low_watermark: 1.0,
+        ..PoolConfig::default()
+    })
+    .expect("pool config valid");
+    let huge_pages = memory::pool_pages_for_request(HUGE_PROMPT, 8, G, fb);
+    let huge_cap = (huge_pages - fb.div_ceil(G)) * G;
+    let long_prompt = workload::prompt(7, HUGE_PROMPT, Profile::Pg19);
+
+    // monolithic baseline: one-shot prefill of the same prompt
+    mgr2.lock().unwrap().admit(500, huge_pages, false).unwrap();
+    let mono_secs = {
+        let mut dec =
+            MockDecoder::with_pool(MOCK_VOCAB, MOCK_GAMMA_MAX, 0.15, mgr2.clone(), 500, huge_cap)
+                .unwrap();
+        let t = Instant::now();
+        quantspec::model::Decoder::prefill(&mut dec, &long_prompt).unwrap();
+        t.elapsed().as_secs_f64()
+    };
+    mgr2.lock().unwrap().release(500);
+
+    // interleaved run: huge chunked session + short decode sessions
+    mgr2.lock().unwrap().admit(501, huge_pages, false).unwrap();
+    let huge_dec =
+        MockDecoder::with_pool(MOCK_VOCAB, MOCK_GAMMA_MAX, 0.15, mgr2.clone(), 501, huge_cap)
+            .unwrap();
+    // soft limit from the config knob's default (single source of truth)
+    let soft_limit = quantspec::config::ServeConfig::default().quant_queue_soft_limit;
+    let mut b = StepBatcher::new(1 + SHORT_DECODERS as usize)
+        .with_backpressure(QuantBackpressure::for_pool(mgr2.clone(), soft_limit));
+    b.admit(ActiveSession::admit_chunked(
+        501,
+        Box::new(huge_dec),
+        Sampler::new(0.0, 501),
+        4,
+        &long_prompt,
+        8,
+        CHUNK,
+    ))
+    .unwrap();
+    for id in 502..502 + SHORT_DECODERS {
+        mgr2.lock().unwrap().admit(id, pages_per_req, false).unwrap();
+        let dec = MockDecoder::with_pool(
+            MOCK_VOCAB,
+            MOCK_GAMMA_MAX,
+            0.15,
+            mgr2.clone(),
+            id,
+            cap_tokens,
+        )
+        .unwrap();
+        let prompt = workload::prompt(id, PROMPT, Profile::Pg19);
+        let sampler = Sampler::new(0.0, id);
+        let sess = ActiveSession::admit(id, Box::new(dec), sampler, 4, &prompt, MAX_NEW).unwrap();
+        b.admit(sess).unwrap();
+    }
+    let mut round_secs: Vec<f64> = Vec::new();
+    let mut max_round_prefill = 0usize;
+    let mut last_fed = 0usize;
+    let mut shorts_done_round = 0u64;
+    let mut prefill_done_round = 0u64;
+    while b.active_len() > 0 {
+        let t = Instant::now();
+        b.round().unwrap();
+        round_secs.push(t.elapsed().as_secs_f64());
+        // prefill tokens the huge session fed this round (once it flips to
+        // decoding — or retires — the prompt is fully fed)
+        let fed = b
+            .active_sessions()
+            .find(|s| s.id == 501)
+            .and_then(|s| s.prefill_progress())
+            .map(|(f, _)| f)
+            .unwrap_or(HUGE_PROMPT);
+        max_round_prefill = max_round_prefill.max(fed - last_fed);
+        last_fed = fed;
+        if prefill_done_round == 0 && fed >= HUGE_PROMPT {
+            prefill_done_round = b.rounds();
+        }
+        let shorts_finished =
+            b.finished.iter().filter(|s| s.id >= 502).count() as u64;
+        if shorts_done_round == 0 && shorts_finished == SHORT_DECODERS {
+            shorts_done_round = b.rounds();
+        }
+    }
+    for id in std::iter::once(501u64).chain(502..502 + SHORT_DECODERS) {
+        mgr2.lock().unwrap().release(id);
+    }
+    round_secs.sort_by(f64::total_cmp);
+    let median_round = round_secs[round_secs.len() / 2];
+    let max_round = *round_secs.last().unwrap();
+    assert!(
+        max_round_prefill <= CHUNK,
+        "a round fed {max_round_prefill} prefill tokens, over the {CHUNK}-token chunk"
+    );
+    assert!(
+        shorts_done_round > 0 && shorts_done_round < prefill_done_round,
+        "short decoders (done at round {shorts_done_round}) were blocked behind \
+         the huge prefill (done at round {prefill_done_round})"
+    );
+    assert!(
+        median_round < mono_secs,
+        "median interleaved round {median_round}s not under the monolithic \
+         {HUGE_PROMPT}-token prefill {mono_secs}s — round cost must be bounded \
+         by the chunk, not the prompt"
+    );
+    let deferrals = b.prefill_deferrals();
+    let mut tc = Table::new(&[
+        "prompt_tokens",
+        "chunk_tokens",
+        "max_round_prefill",
+        "median_round_ms",
+        "max_round_ms",
+        "mono_prefill_ms",
+        "shorts_done_round",
+        "prefill_done_round",
+        "deferrals",
+    ]);
+    tc.row(&[
+        HUGE_PROMPT.to_string(),
+        CHUNK.to_string(),
+        max_round_prefill.to_string(),
+        fmt_f(median_round * 1e3, 3),
+        fmt_f(max_round * 1e3, 3),
+        fmt_f(mono_secs * 1e3, 3),
+        shorts_done_round.to_string(),
+        prefill_done_round.to_string(),
+        deferrals.to_string(),
+    ]);
+    tc.print("chunked prefill — one huge prompt interleaved with decode");
+    let _ = tc.write_csv("bench_out/pool_pressure_chunked.csv");
+
+    let json = Json::obj(vec![
+        (
+            "pool",
+            Json::obj(vec![
+                ("pool_pages", Json::num(pool_pages as f64)),
+                ("peak_pages", Json::num(peak as f64)),
+                ("evictions", Json::num(evictions as f64)),
+                ("tokens", Json::num(tokens as f64)),
+                ("tok_per_s", Json::num(tokens as f64 / wall.max(1e-9))),
+            ]),
+        ),
+        (
+            "chunked_prefill",
+            Json::obj(vec![
+                ("prompt_tokens", Json::num(HUGE_PROMPT as f64)),
+                ("chunk_tokens", Json::num(CHUNK as f64)),
+                ("max_round_prefill_tokens", Json::num(max_round_prefill as f64)),
+                ("median_round_secs", Json::num(median_round)),
+                ("max_round_secs", Json::num(max_round)),
+                ("monolithic_prefill_secs", Json::num(mono_secs)),
+                ("shorts_done_round", Json::num(shorts_done_round as f64)),
+                ("prefill_done_round", Json::num(prefill_done_round as f64)),
+                ("prefill_deferrals", Json::num(deferrals as f64)),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_pool_pressure.json", json.to_string())
+        .expect("write BENCH_pool_pressure.json");
+    println!("wrote BENCH_pool_pressure.json");
 
     // --- the Fig. 6 memory wall this pool manages (paper scale) ----------
     let m = PaperModel::llama2_7b();

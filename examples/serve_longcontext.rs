@@ -192,16 +192,22 @@ fn mock_main(args: &Args) -> anyhow::Result<()> {
     let in_use = pool_stats.get("pages_in_use").unwrap().as_usize().unwrap();
     assert!(peak <= pool_pages, "peak {peak} exceeded pool size {pool_pages}");
     assert_eq!(in_use, 0, "all sessions released");
-    // Each live session holds ≥14 pages from prefill on; a peak of 2x that
-    // proves sessions genuinely decoded concurrently out of the one arena.
-    // On a single-core host the mock decodes too fast to guarantee overlap,
-    // so only report there instead of asserting.
+    // Each live session holds ≥12 pages from prefill on (the ~81-96-token
+    // prompts quantize ≥9 groups + 3 FP pages; non-G-multiple prompts no
+    // longer pad up to a bucket); a peak of 2x that proves sessions
+    // genuinely decoded concurrently out of the one arena. On a
+    // single-core host the mock decodes too fast to guarantee overlap, so
+    // only report there instead of asserting.
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     if cores >= 2 {
-        assert!(peak >= 28, "expected concurrent sessions, peak was only {peak}");
+        assert!(peak >= 24, "expected concurrent sessions, peak was only {peak}");
     } else {
         println!("single-core host: skipping concurrency assertion (peak {peak})");
     }
+    assert!(
+        pool_stats.get("prefill_deferrals").is_some(),
+        "/stats pool block surfaces the backpressure counter"
+    );
     println!("\npool state      : {pool_stats}");
     println!(
         "pages           : peak {peak} / {pool_pages} (bound held), in use now {in_use}"
@@ -224,6 +230,88 @@ fn mock_main(args: &Args) -> anyhow::Result<()> {
         assert!((a - b).abs() < 1e-9, "acceptance diverged: {a} vs {b}");
     }
     println!("\npooled outputs identical to unpooled path ✓");
+
+    // --- chunked prefill: a huge prompt never blocks decode --------------
+    // A standalone batcher over its own pool: one 2048-token prompt
+    // admitted in `Prefilling` state (128-token chunks, quant-pool
+    // backpressure wired) alongside two live decode sessions. The short
+    // sessions must retire while the huge prefill is still feeding chunks,
+    // and no round may feed more than one chunk of prefill work.
+    {
+        use quantspec::coordinator::batcher::{
+            ActiveSession, QuantBackpressure, StepBatcher,
+        };
+        use quantspec::costmodel::memory::pool_pages_for_request;
+        use quantspec::model::{mock_fb, MockDecoder, MOCK_GAMMA_MAX, MOCK_VOCAB};
+        use quantspec::spec::Sampler;
+        let (g, d, chunk, huge) = (8usize, 2usize, 128usize, 2048usize);
+        let fb = mock_fb(g, MOCK_GAMMA_MAX);
+        let mgr = quantspec::pool::shared(PoolConfig {
+            pages: 600,
+            page_tokens: g,
+            kv_dim: d,
+            high_watermark: 1.0,
+            low_watermark: 1.0,
+            ..PoolConfig::default()
+        })?;
+        // the config knob is the single source of the soft limit (the
+        // pooled coordinator's policy reads the same field)
+        let soft_limit = pooled.cfg.quant_queue_soft_limit;
+        let mut b = StepBatcher::new(3)
+            .with_backpressure(QuantBackpressure::for_pool(mgr.clone(), soft_limit));
+        let mut admit = |id: u64, len: usize, new: usize, chunked: bool| {
+            let pages = pool_pages_for_request(len, new, g, fb);
+            let cap = (pages - fb.div_ceil(g)) * g;
+            mgr.lock().unwrap().admit(id, pages, false).unwrap();
+            let dec = Box::new(
+                MockDecoder::with_pool(MOCK_VOCAB, MOCK_GAMMA_MAX, 0.1, mgr.clone(), id, cap)
+                    .unwrap(),
+            );
+            let prompt = workload::prompt(id, len, Profile::Pg19);
+            let s = if chunked {
+                ActiveSession::admit_chunked(id, dec, Sampler::new(0.0, id), 4, &prompt, new, chunk)
+            } else {
+                ActiveSession::admit(id, dec, Sampler::new(0.0, id), 4, &prompt, new).unwrap()
+            };
+            b.admit(s).unwrap();
+        };
+        admit(1, huge, 8, true);
+        admit(2, 24, 24, false);
+        admit(3, 24, 24, false);
+        let mut last_fed = 0usize;
+        let mut shorts_done_at_fed = None;
+        while b.active_len() > 0 {
+            b.round()?;
+            let fed = b
+                .active_sessions()
+                .find(|s| s.id == 1)
+                .and_then(|s| s.prefill_progress())
+                .map(|(f, _)| f)
+                .unwrap_or(huge);
+            assert!(fed - last_fed <= chunk, "round fed {} tokens", fed - last_fed);
+            last_fed = fed;
+            if shorts_done_at_fed.is_none()
+                && b.finished.iter().filter(|s| s.id > 1).count() == 2
+            {
+                shorts_done_at_fed = Some(fed);
+            }
+        }
+        let shorts_done_at_fed = shorts_done_at_fed.expect("short sessions finished");
+        assert!(
+            shorts_done_at_fed < huge,
+            "short sessions only finished after the whole {huge}-token prefill"
+        );
+        assert_eq!(b.finished.len(), 3);
+        for id in 1..=3 {
+            mgr.lock().unwrap().release(id);
+        }
+        println!(
+            "chunked prefill : {huge}-token prompt fed in {chunk}-token rounds; \
+             short sessions retired at {shorts_done_at_fed} tokens fed \
+             ({} deferrals) ✓",
+            b.prefill_deferrals()
+        );
+    }
     Ok(())
 }
 

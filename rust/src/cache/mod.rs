@@ -32,11 +32,17 @@ pub struct CacheTracker {
 }
 
 impl CacheTracker {
-    /// State right after prefill of a full bucket of `s` tokens:
-    /// region = first s-G tokens, C_F1 = last G tokens.
+    /// State right after prefill of `s` tokens (any `s >= 2G`, not just
+    /// G-multiples): the quantized region takes the largest whole-group
+    /// prefix that still leaves a full C_F1, so `n_q = floor((s-G)/G)·G`
+    /// and the FP buffer starts with `n_f = s − n_q ∈ [G, 2G)` slots. For
+    /// a G-multiple bucket this is the classic split (region = first s−G
+    /// tokens, C_F1 = last G); arbitrary lengths exist so chunked prefill
+    /// can finalize without re-bucketing the tail.
     pub fn after_prefill(s: usize, g: usize, fb: usize, cap: usize) -> CacheTracker {
-        assert!(s >= 2 * g, "bucket must hold at least 2 groups");
-        CacheTracker { n_q: s - g, n_f: g, cycle_base: None, g, fb, cap }
+        assert!(s >= 2 * g, "prefill must hold at least 2 groups");
+        let n_q = (s - g) / g * g;
+        CacheTracker { n_q, n_f: s - n_q, cycle_base: None, g, fb, cap }
     }
 
     /// Total committed context length (tokens with cache entries).
@@ -163,6 +169,19 @@ mod tests {
         assert_eq!(t.n_f, 64);
         assert_eq!(t.context_len(), 512);
         t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prefill_state_non_bucket_lengths() {
+        // Chunked prefill finalizes at arbitrary lengths >= 2G: the region
+        // keeps whole groups, the FP buffer absorbs the [G, 2G) tail.
+        for s in [128usize, 129, 190, 191, 192, 300] {
+            let t = CacheTracker::after_prefill(s, 64, 136, 640);
+            assert_eq!(t.n_q % 64, 0, "s={s}");
+            assert!(t.n_f >= 64 && t.n_f < 128, "s={s}: n_f {}", t.n_f);
+            assert_eq!(t.context_len(), s);
+            t.check_invariants().unwrap();
+        }
     }
 
     #[test]

@@ -115,6 +115,16 @@ pub struct ServeConfig {
     pub bind: String,
     /// Context buckets to preload (empty = all in manifest).
     pub buckets: Vec<usize>,
+    /// Prefill chunk size in tokens for schedulable prompt processing:
+    /// sessions admitted to a step batcher advance one chunk per round
+    /// (interleaved with decode cycles), so admission costs each round
+    /// O(chunk) instead of O(prompt). 0 = monolithic one-shot prefill.
+    pub prefill_chunk_tokens: usize,
+    /// Quant-pool backpressure threshold: when the shared quantization
+    /// pool's queue depth exceeds this, the batcher defers further prefill
+    /// chunks (decode cycles keep running) and counts a
+    /// `prefill_deferrals` metric.
+    pub quant_queue_soft_limit: usize,
     /// Paged KV-cache pool (admission control + shared arena).
     /// `pool.pages == 0` disables pooling: sessions keep private,
     /// unaccounted cache state as in the original single-session path.
@@ -135,6 +145,8 @@ impl Default for ServeConfig {
             queue_capacity: 256,
             bind: "127.0.0.1:8311".into(),
             buckets: Vec::new(),
+            prefill_chunk_tokens: 0,
+            quant_queue_soft_limit: 32,
             pool: PoolConfig { pages: 0, ..PoolConfig::default() },
         }
     }
@@ -186,6 +198,12 @@ impl ServeConfig {
         }
         if let Some(arr) = j.get("buckets").and_then(Json::as_arr) {
             c.buckets = arr.iter().filter_map(Json::as_usize).collect();
+        }
+        if let Some(v) = j.get("prefill_chunk_tokens").and_then(Json::as_usize) {
+            c.prefill_chunk_tokens = v;
+        }
+        if let Some(v) = j.get("quant_queue_soft_limit").and_then(Json::as_usize) {
+            c.quant_queue_soft_limit = v;
         }
         if let Some(p) = j.get("pool") {
             if let Some(v) = p.get("pages").and_then(Json::as_usize) {
@@ -286,6 +304,19 @@ mod tests {
         assert_eq!(c.buckets, vec![512, 1024]);
         assert_eq!(c.max_new_tokens, 90); // default preserved
         assert_eq!(c.pool.pages, 0, "pool disabled by default");
+        assert_eq!(c.prefill_chunk_tokens, 0, "monolithic prefill by default");
+        assert_eq!(c.quant_queue_soft_limit, 32);
+    }
+
+    #[test]
+    fn chunked_prefill_knobs_from_json() {
+        let j = Json::parse(
+            r#"{"prefill_chunk_tokens":256,"quant_queue_soft_limit":4}"#,
+        )
+        .unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.prefill_chunk_tokens, 256);
+        assert_eq!(c.quant_queue_soft_limit, 4);
     }
 
     #[test]

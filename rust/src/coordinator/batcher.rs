@@ -3,23 +3,56 @@
 //! The router's engine pool runs whole requests; this batcher is the
 //! vLLM-style alternative: one engine multiplexes many *active sessions*,
 //! interleaving one speculation cycle per session per scheduling round
-//! (round-robin). New sessions join between rounds (prefill is admitted
-//! when a slot frees), finished sessions retire immediately — so a long
-//! request no longer blocks a short one behind it (head-of-line blocking
-//! drops from O(request) to O(cycle)).
+//! (round-robin). New sessions join between rounds, finished sessions
+//! retire immediately — so a long request no longer blocks a short one
+//! behind it (head-of-line blocking drops from O(request) to O(cycle)).
+//!
+//! # Chunked prefill
+//!
+//! Admission comes in two shapes. [`ActiveSession::admit`] runs the whole
+//! prefill up front (the classic path — fine for short prompts, but it
+//! holds a round for O(prompt)). [`ActiveSession::admit_chunked`] instead
+//! enters the session in a `Prefilling` state carrying the prompt and a
+//! cursor; each scheduling round advances exactly ONE
+//! `prefill_chunk_tokens` slice through [`crate::model::Decoder::prefill_chunk`],
+//! interleaved with other sessions' decode cycles, so admitting a
+//! 100k-token prompt costs each round O(chunk), not O(prompt). The final
+//! chunk completes the prefill, samples the first token, and flips the
+//! session to decoding — chunking is bit-invisible in the output.
+//!
+//! # Quant-pool backpressure
+//!
+//! Prefill chunks are the quantization-heavy step (each flushes full
+//! G-groups through the process-wide quant pool). When the pool's queue
+//! depth exceeds [`QuantBackpressure`]'s soft limit, the batcher defers
+//! further prefill chunks for the round — decode cycles keep running —
+//! and counts the deferral (locally and, when wired to a
+//! [`SharedSessionManager`], into the `/stats` `prefill_deferrals`
+//! counter). Deferral never stalls the batcher: it only applies while
+//! some session has decode work to run.
 //!
 //! Works over any `Decoder`, so it is fully tested against the mock; the
-//! serving path can opt in via `ServeConfig::engines == 0` semantics or by
-//! embedding `StepBatcher` directly (see `examples/serve_longcontext`).
+//! serving path can opt in by embedding `StepBatcher` directly (see
+//! `examples/serve_longcontext`).
 
 use std::collections::VecDeque;
 
-use anyhow::Result;
+use anyhow::{ensure, Context, Result};
 
 use crate::config::Method;
 use crate::model::Decoder;
+use crate::pool::SharedSessionManager;
 use crate::spec::gamma::{CycleFeedback, FixedGamma, GammaController};
 use crate::spec::{Sampler, VerifyOutcome};
+
+/// Where a session is in its lifecycle.
+enum Phase {
+    /// Prompt processing in flight: `cursor` of `prompt.len()` tokens have
+    /// been fed; each batcher round advances one `chunk`-token slice.
+    Prefilling { prompt: Vec<i32>, cursor: usize, chunk: usize },
+    /// Prefill complete; each round runs one speculation cycle.
+    Decoding,
+}
 
 /// One multiplexed generation in flight.
 pub struct ActiveSession {
@@ -32,10 +65,21 @@ pub struct ActiveSession {
     pub max_new: usize,
     pub drafted: u64,
     pub accepted: u64,
+    phase: Phase,
+    // Cycle-persistent buffers (mirroring `SpecEngine::generate`): the
+    // drafted-token/logit/verify-window vectors are reused across cycles,
+    // so a steady-state step's only allocations are the logits vectors
+    // the `Decoder` trait returns by value (pinned by
+    // `rust/tests/alloc_hotpath.rs`).
+    drafted_buf: Vec<i32>,
+    draft_logits_buf: Vec<Vec<f32>>,
+    vtokens_buf: Vec<i32>,
 }
 
 impl ActiveSession {
-    /// Admit a request: runs the prefill and samples the first token.
+    /// Admit a request the classic way: runs the whole prefill immediately
+    /// and samples the first token. Holds the caller for O(prompt) — use
+    /// [`ActiveSession::admit_chunked`] under a batcher.
     pub fn admit(
         id: u64,
         mut decoder: Box<dyn Decoder>,
@@ -45,18 +89,66 @@ impl ActiveSession {
         max_new: usize,
     ) -> Result<ActiveSession> {
         let logits = decoder.prefill(prompt)?;
-        let first = sampler.sample(&logits);
-        Ok(ActiveSession {
+        // a zero budget reports zero tokens: never sample the first token
+        let first = (max_new > 0).then(|| sampler.sample(&logits));
+        let mut s = Self::new_session(id, decoder, sampler, gamma, max_new, Phase::Decoding);
+        if let Some(first) = first {
+            s.tokens.push(first);
+            s.last = first;
+        }
+        Ok(s)
+    }
+
+    /// Admit a request with NO prefill work done yet: the session enters
+    /// `Prefilling` and each [`ActiveSession::step`] (one batcher round)
+    /// feeds one `chunk_tokens` slice of the prompt. `chunk_tokens == 0`,
+    /// or a decoder without chunk support, falls back to a single chunk
+    /// (the whole prompt on the first round — the one-shot path, just
+    /// scheduled instead of run at admission).
+    pub fn admit_chunked(
+        id: u64,
+        decoder: Box<dyn Decoder>,
+        sampler: Sampler,
+        gamma: usize,
+        prompt: &[i32],
+        max_new: usize,
+        chunk_tokens: usize,
+    ) -> ActiveSession {
+        let chunk = if chunk_tokens == 0 || !decoder.supports_chunked_prefill() {
+            prompt.len().max(1)
+        } else {
+            chunk_tokens
+        };
+        let phase = Phase::Prefilling { prompt: prompt.to_vec(), cursor: 0, chunk };
+        Self::new_session(id, decoder, sampler, gamma, max_new, phase)
+    }
+
+    fn new_session(
+        id: u64,
+        decoder: Box<dyn Decoder>,
+        sampler: Sampler,
+        gamma: usize,
+        max_new: usize,
+        phase: Phase,
+    ) -> ActiveSession {
+        let gcap = gamma.min(decoder.gamma_max()).max(1);
+        ActiveSession {
             id,
             decoder,
             sampler,
             gamma_ctl: Box::new(FixedGamma(gamma)),
-            tokens: vec![first],
-            last: first,
+            // pre-sized: the budget is exact (γ-clamped), so steady-state
+            // pushes never reallocate
+            tokens: Vec::with_capacity(max_new + 1),
+            last: 0,
             max_new,
             drafted: 0,
             accepted: 0,
-        })
+            phase,
+            drafted_buf: Vec::with_capacity(gcap),
+            draft_logits_buf: Vec::with_capacity(gcap),
+            vtokens_buf: Vec::with_capacity(gcap + 1),
+        }
     }
 
     pub fn with_controller(mut self, ctl: Box<dyn GammaController>) -> Self {
@@ -64,12 +156,40 @@ impl ActiveSession {
         self
     }
 
-    pub fn done(&self) -> bool {
-        self.tokens.len() >= self.max_new
+    /// True while prompt chunks remain to be fed.
+    pub fn is_prefilling(&self) -> bool {
+        matches!(self.phase, Phase::Prefilling { .. })
     }
 
-    /// Run ONE speculation cycle (or one AR step); returns tokens added.
+    /// (tokens fed, prompt length) while prefilling; None once decoding.
+    pub fn prefill_progress(&self) -> Option<(usize, usize)> {
+        match &self.phase {
+            Phase::Prefilling { prompt, cursor, .. } => Some((*cursor, prompt.len())),
+            Phase::Decoding => None,
+        }
+    }
+
+    /// Prefill chunks still to run (0 once decoding; ≥ 1 while
+    /// prefilling — the final, possibly empty, chunk always remains).
+    pub fn prefill_chunks_remaining(&self) -> usize {
+        match &self.phase {
+            Phase::Prefilling { prompt, cursor, chunk } => {
+                prompt.len().saturating_sub(*cursor).div_ceil(*chunk).max(1)
+            }
+            Phase::Decoding => 0,
+        }
+    }
+
+    pub fn done(&self) -> bool {
+        !self.is_prefilling() && self.tokens.len() >= self.max_new
+    }
+
+    /// Run ONE unit of work: a prefill chunk while `Prefilling`, else one
+    /// speculation cycle (or one AR step); returns tokens added.
     pub fn step(&mut self) -> Result<usize> {
+        if self.is_prefilling() {
+            return self.step_prefill();
+        }
         if self.done() {
             return Ok(0);
         }
@@ -79,39 +199,130 @@ impl ActiveSession {
             self.last = self.sampler.sample(&logits);
             self.tokens.push(self.last);
         } else {
+            // Clamp γ to the remaining budget (see `SpecEngine::generate`):
+            // a cycle reports at most γ + 1 tokens, so γ = remaining − 1
+            // can never overshoot — the decoder never commits KV for a
+            // token that is not reported. The final cycle runs with γ = 0
+            // (verify the feed token alone: an AR step through the verify
+            // path, valid on every backend).
+            let remaining = self.max_new - self.tokens.len();
             let gamma = self
                 .gamma_ctl
                 .next_gamma()
                 .min(self.decoder.gamma_max())
-                .max(1);
+                .max(1)
+                .min(remaining - 1);
             self.decoder.begin_cycle();
             let mut feed = self.last;
-            let mut drafted = Vec::with_capacity(gamma);
-            let mut draft_logits = Vec::with_capacity(gamma);
+            self.drafted_buf.clear();
+            self.draft_logits_buf.clear();
             for _ in 0..gamma {
                 let q = self.decoder.draft_step(feed)?;
                 let g = self.sampler.sample(&q);
-                drafted.push(g);
-                draft_logits.push(q);
+                self.drafted_buf.push(g);
+                self.draft_logits_buf.push(q);
                 feed = g;
             }
-            let mut vtokens = vec![self.last];
-            vtokens.extend(&drafted);
-            let target = self.decoder.verify(&vtokens)?;
+            self.vtokens_buf.clear();
+            self.vtokens_buf.push(self.last);
+            self.vtokens_buf.extend_from_slice(&self.drafted_buf);
+            let target = self.decoder.verify(&self.vtokens_buf)?;
             let VerifyOutcome { accepted, next_token } =
-                self.sampler.verify(&drafted, &draft_logits, &target);
-            self.decoder.commit(accepted, vtokens.len())?;
-            for &g in drafted.iter().take(accepted) {
+                self.sampler
+                    .verify(&self.drafted_buf, &self.draft_logits_buf, &target);
+            self.decoder.commit(accepted, self.vtokens_buf.len())?;
+            for &g in self.drafted_buf.iter().take(accepted) {
                 self.tokens.push(g);
             }
             self.tokens.push(next_token);
             self.last = next_token;
             self.drafted += gamma as u64;
             self.accepted += accepted as u64;
-            self.gamma_ctl.observe(CycleFeedback { gamma, accepted });
+            if gamma > 0 {
+                self.gamma_ctl.observe(CycleFeedback { gamma, accepted });
+            }
         }
-        self.tokens.truncate(self.max_new);
+        // No truncate: γ-clamping lands exactly on the budget, so reported
+        // tokens and committed KV stay in lockstep
+        // (`context_len() + 1 == prompt + reported` at exit).
+        debug_assert!(self.tokens.len() <= self.max_new);
         Ok(self.tokens.len() - before)
+    }
+
+    /// Feed the next prompt chunk; on the final chunk, complete the
+    /// prefill and sample the first token (1 token added).
+    fn step_prefill(&mut self) -> Result<usize> {
+        let (logits, finished) = {
+            let Phase::Prefilling { prompt, cursor, chunk } = &mut self.phase else {
+                unreachable!("step_prefill outside Prefilling");
+            };
+            let end = (*cursor + *chunk).min(prompt.len());
+            let is_last = end >= prompt.len();
+            let logits = self.decoder.prefill_chunk(&prompt[*cursor..end], is_last)?;
+            *cursor = end;
+            (logits, is_last)
+        };
+        if !finished {
+            return Ok(0);
+        }
+        self.phase = Phase::Decoding;
+        if self.max_new == 0 {
+            // zero budget: prefill ran, nothing is sampled or reported
+            return Ok(0);
+        }
+        let logits = logits.context("final prefill chunk must return logits")?;
+        let first = self.sampler.sample(&logits);
+        self.tokens.push(first);
+        self.last = first;
+        Ok(1)
+    }
+}
+
+/// Quant-pool backpressure policy: defer prefill chunks for a round when
+/// the shared quantization pool's queue depth exceeds `soft_limit`.
+pub struct QuantBackpressure {
+    probe: Box<dyn Fn() -> usize + Send>,
+    pub soft_limit: usize,
+    /// When present, deferrals are also recorded in the session manager so
+    /// the router's `/stats` surfaces a `prefill_deferrals` counter.
+    sink: Option<SharedSessionManager>,
+}
+
+impl QuantBackpressure {
+    /// Probe the shared quantization pool of `mgr` and record deferrals
+    /// into it (→ `/stats` `prefill_deferrals`). The probe holds a cloned
+    /// [`crate::util::threadpool::PoolHandle`], so the per-round depth
+    /// read never touches the manager mutex (the KV hot path's lock);
+    /// only an actual deferral locks it.
+    pub fn for_pool(mgr: SharedSessionManager, soft_limit: usize) -> QuantBackpressure {
+        let handle = mgr.lock().unwrap_or_else(|p| p.into_inner()).quant_handle();
+        QuantBackpressure {
+            probe: Box::new(move || handle.queue_depth()),
+            soft_limit,
+            sink: Some(mgr),
+        }
+    }
+
+    /// Custom depth probe (tests; pool-less embeddings). No `/stats` sink.
+    pub fn with_probe(
+        probe: Box<dyn Fn() -> usize + Send>,
+        soft_limit: usize,
+    ) -> QuantBackpressure {
+        QuantBackpressure { probe, soft_limit, sink: None }
+    }
+
+    fn over_limit(&self) -> bool {
+        (self.probe)() > self.soft_limit
+    }
+
+    /// Record `n` deferred chunks in one manager-lock acquisition (called
+    /// at most once per round — never per deferred session).
+    fn note_deferrals(&self, n: u64) {
+        if let Some(mgr) = &self.sink {
+            mgr.lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .note_prefill_deferrals(n);
+        }
     }
 }
 
@@ -121,6 +332,8 @@ pub struct StepBatcher {
     active: VecDeque<ActiveSession>,
     pub finished: Vec<ActiveSession>,
     rounds: u64,
+    backpressure: Option<QuantBackpressure>,
+    prefill_deferrals: u64,
 }
 
 impl StepBatcher {
@@ -130,7 +343,15 @@ impl StepBatcher {
             active: VecDeque::new(),
             finished: Vec::new(),
             rounds: 0,
+            backpressure: None,
+            prefill_deferrals: 0,
         }
+    }
+
+    /// Enable quant-pool backpressure (see [`QuantBackpressure`]).
+    pub fn with_backpressure(mut self, bp: QuantBackpressure) -> StepBatcher {
+        self.backpressure = Some(bp);
+        self
     }
 
     pub fn has_capacity(&self) -> bool {
@@ -141,23 +362,64 @@ impl StepBatcher {
         self.active.len()
     }
 
-    pub fn admit(&mut self, s: ActiveSession) {
-        assert!(self.has_capacity(), "admission over capacity");
-        self.active.push_back(s);
+    /// The currently active sessions, in round-robin order (benches and
+    /// embedders read prefill progress / ids through this).
+    pub fn active_sessions(&self) -> impl Iterator<Item = &ActiveSession> {
+        self.active.iter()
     }
 
-    /// One scheduling round: each active session advances one cycle;
-    /// finished sessions retire. Returns tokens produced this round.
+    /// Prefill chunks deferred by backpressure so far.
+    pub fn prefill_deferrals(&self) -> u64 {
+        self.prefill_deferrals
+    }
+
+    /// Admit a session into the round-robin. Errors (instead of aborting
+    /// the process) on over-capacity admission: the batcher is embedded in
+    /// router/server contexts where a caller bug must surface as a clean
+    /// failure, not a panic that takes every in-flight request with it.
+    pub fn admit(&mut self, s: ActiveSession) -> Result<()> {
+        ensure!(
+            self.has_capacity(),
+            "admission over capacity: {} sessions active of max {}",
+            self.active.len(),
+            self.max_active
+        );
+        self.active.push_back(s);
+        Ok(())
+    }
+
+    /// One scheduling round: each active session advances one unit of work
+    /// (a prefill chunk or a speculation cycle); finished sessions retire.
+    /// Under quant-pool backpressure, prefill chunks are deferred for the
+    /// round while decode work exists. Returns tokens produced this round.
     pub fn round(&mut self) -> Result<usize> {
         self.rounds += 1;
+        // Probe once per round. Deferral only applies while some session
+        // has decode work — if every active session is prefilling, chunks
+        // proceed regardless, so the batcher always makes progress.
+        let has_decode = self.active.iter().any(|s| !s.is_prefilling());
+        let defer_prefill =
+            has_decode && self.backpressure.as_ref().is_some_and(|bp| bp.over_limit());
         let mut produced = 0;
+        let mut deferred = 0u64;
         for _ in 0..self.active.len() {
             let mut s = self.active.pop_front().expect("non-empty");
+            if defer_prefill && s.is_prefilling() {
+                deferred += 1;
+                self.active.push_back(s);
+                continue;
+            }
             produced += s.step()?;
             if s.done() {
                 self.finished.push(s);
             } else {
                 self.active.push_back(s);
+            }
+        }
+        if deferred > 0 {
+            self.prefill_deferrals += deferred;
+            if let Some(bp) = &self.backpressure {
+                bp.note_deferrals(deferred);
             }
         }
         Ok(produced)
@@ -195,11 +457,23 @@ mod tests {
         .unwrap()
     }
 
+    fn chunked_session(
+        id: u64,
+        prompt: &[i32],
+        max_new: usize,
+        gamma: usize,
+        chunk: usize,
+    ) -> ActiveSession {
+        let dec = Box::new(MockDecoder::new(64, 7, 0.1));
+        let sampler = Sampler::new(0.0, id);
+        ActiveSession::admit_chunked(id, dec, sampler, gamma, prompt, max_new, chunk)
+    }
+
     #[test]
     fn single_session_matches_engine_output() {
         // The step batcher must produce exactly what SpecEngine produces.
         let mut b = StepBatcher::new(4);
-        b.admit(mock_session(7, 30, 0.2, 4));
+        b.admit(mock_session(7, 30, 0.2, 4)).unwrap();
         b.drain().unwrap();
         let batched = b.finished.pop().unwrap().tokens;
 
@@ -209,13 +483,194 @@ mod tests {
         assert_eq!(batched, direct);
     }
 
+    /// Chunked admission is output-invisible: any chunk size produces
+    /// exactly the monolithic-admission tokens.
+    #[test]
+    fn chunked_admission_matches_monolithic() {
+        let prompt: Vec<i32> = (0..37).map(|t| (t * 3) % 64).collect();
+        let mut b = StepBatcher::new(1);
+        let dec = Box::new(MockDecoder::new(64, 7, 0.1));
+        let s = ActiveSession::admit(9, dec, Sampler::new(0.0, 9), 4, &prompt, 25).unwrap();
+        b.admit(s).unwrap();
+        b.drain().unwrap();
+        let want = b.finished.pop().unwrap().tokens;
+        for chunk in [1usize, 5, 8, 9, 16, 37, 0 /* = one-shot */] {
+            let mut b = StepBatcher::new(1);
+            b.admit(chunked_session(9, &prompt, 25, 4, chunk)).unwrap();
+            b.drain().unwrap();
+            let s = b.finished.pop().unwrap();
+            assert_eq!(s.tokens, want, "chunk {chunk}");
+            assert!(!s.is_prefilling());
+        }
+    }
+
+    /// Tentpole acceptance: a 4k-token prompt admitted alongside active
+    /// decode sessions advances at most `chunk` prefill tokens per round
+    /// (no round does O(prompt) prefill work), and a short decode request
+    /// admitted at the same time finishes in ~its own number of rounds —
+    /// no head-of-line blocking behind the huge prefill.
+    #[test]
+    fn huge_prefill_interleaves_without_hol_blocking() {
+        let chunk = 64usize;
+        let long_prompt: Vec<i32> = (0..4096).map(|t| t % 64).collect();
+        let mut b = StepBatcher::new(4);
+        b.admit(chunked_session(1, &long_prompt, 8, 4, chunk)).unwrap();
+        b.admit(mock_session(2, 10, 0.0, 4)).unwrap();
+        let mut rounds_to_short = 0;
+        let mut last_fed = 0usize;
+        while !b.finished.iter().any(|s| s.id == 2) {
+            b.round().unwrap();
+            rounds_to_short += 1;
+            // prefill work this round is bounded by the chunk size
+            if let Some(s) = b.active.iter().find(|s| s.id == 1) {
+                let (fed, total) = s.prefill_progress().unwrap_or((4096, 4096));
+                assert!(fed - last_fed <= chunk, "round fed {} tokens", fed - last_fed);
+                assert_eq!(total, 4096);
+                last_fed = fed;
+            }
+            assert!(rounds_to_short < 20, "short request starved by 4k prefill");
+        }
+        // the long session is still mid-prefill when the short one retires
+        let long = b.active.iter().find(|s| s.id == 1).unwrap();
+        let (fed, _) = long.prefill_progress().unwrap();
+        assert!(fed < 4096, "prefill monopolized rounds: {fed} tokens already fed");
+        assert!(long.prefill_chunks_remaining() > 0);
+        b.drain().unwrap();
+        assert_eq!(b.finished.len(), 2);
+        let long = b.finished.iter().find(|s| s.id == 1).unwrap();
+        assert_eq!(long.tokens.len(), 8);
+    }
+
+    /// Backpressure: with the quant queue over the soft limit, prefill
+    /// chunks are deferred (and counted) while decode cycles keep running;
+    /// once pressure clears, prefill resumes. A batcher whose sessions are
+    /// ALL prefilling ignores the limit (progress guarantee).
+    #[test]
+    fn backpressure_defers_prefill_but_not_decode() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        let depth = Arc::new(AtomicUsize::new(100));
+        let probe_depth = Arc::clone(&depth);
+        let mut b = StepBatcher::new(4).with_backpressure(QuantBackpressure::with_probe(
+            Box::new(move || probe_depth.load(Ordering::Relaxed)),
+            8,
+        ));
+        let prompt: Vec<i32> = (0..64).collect();
+        b.admit(chunked_session(1, &prompt, 6, 2, 16)).unwrap();
+        b.admit(mock_session(2, 40, 0.0, 4)).unwrap();
+        let decoded_before = {
+            let mut produced = 0;
+            for _ in 0..3 {
+                produced += b.round().unwrap();
+            }
+            produced
+        };
+        assert!(decoded_before > 0, "decode cycles kept running");
+        assert_eq!(b.prefill_deferrals(), 3, "each round deferred the one prefill");
+        let s = b.active.iter().find(|s| s.id == 1).unwrap();
+        assert_eq!(s.prefill_progress(), Some((0, 64)), "no prefill ran under pressure");
+        // pressure clears -> prefill advances exactly one chunk per round
+        depth.store(0, Ordering::Relaxed);
+        b.round().unwrap();
+        let s = b.active.iter().find(|s| s.id == 1).unwrap();
+        assert_eq!(s.prefill_progress(), Some((16, 64)));
+        assert_eq!(b.prefill_deferrals(), 3);
+        b.drain().unwrap();
+        assert_eq!(b.finished.len(), 2);
+
+        // all-prefilling batcher: the soft limit cannot stall it
+        let depth = Arc::new(AtomicUsize::new(100));
+        let probe_depth = Arc::clone(&depth);
+        let mut b = StepBatcher::new(2).with_backpressure(QuantBackpressure::with_probe(
+            Box::new(move || probe_depth.load(Ordering::Relaxed)),
+            0,
+        ));
+        b.admit(chunked_session(3, &prompt, 4, 2, 16)).unwrap();
+        b.drain().unwrap();
+        assert_eq!(b.finished.len(), 1);
+        assert_eq!(b.prefill_deferrals(), 0, "no decode work -> no deferral");
+    }
+
+    /// `for_pool` wiring: deferrals recorded through the session manager
+    /// surface in the pool's `/stats` JSON (and its gauge mirror).
+    #[test]
+    fn for_pool_backpressure_records_deferrals_in_stats() {
+        use crate::pool::{shared, PoolConfig};
+        let mgr = shared(PoolConfig { pages: 8, ..PoolConfig::default() }).unwrap();
+        let bp = QuantBackpressure::for_pool(mgr.clone(), 3);
+        assert!(!bp.over_limit(), "idle quant pool is under any limit");
+        bp.note_deferrals(2);
+        let m = mgr.lock().unwrap();
+        assert_eq!(m.prefill_deferrals(), 2);
+        let js = m.stats_json().to_string();
+        assert!(js.contains("\"prefill_deferrals\""), "{js}");
+    }
+
+    /// Regression (satellite): over-capacity admission is a clean error,
+    /// not a process-aborting panic, and the batcher keeps serving.
+    #[test]
+    fn admit_over_capacity_is_error_not_panic() {
+        let mut b = StepBatcher::new(2);
+        b.admit(mock_session(1, 8, 0.0, 2)).unwrap();
+        b.admit(mock_session(2, 8, 0.0, 2)).unwrap();
+        let err = b.admit(mock_session(3, 8, 0.0, 2)).unwrap_err().to_string();
+        assert!(err.contains("over capacity"), "got: {err}");
+        // existing sessions are unaffected
+        b.drain().unwrap();
+        assert_eq!(b.finished.len(), 2);
+        b.admit(mock_session(3, 8, 0.0, 2)).unwrap();
+        b.drain().unwrap();
+        assert_eq!(b.finished.len(), 3);
+    }
+
+    /// Regression (budget over-commit, batcher loop): committed KV tracks
+    /// reported tokens exactly — γ is clamped to the remaining budget, so
+    /// at exit `context_len() + 1 == prompt + reported` (the trailing
+    /// reported token is the next feed, never yet fed back) and the
+    /// report is never truncated after the decoder committed tokens.
+    #[test]
+    fn committed_context_matches_reported_tokens() {
+        for max_new in [1usize, 2, 5, 12, 30] {
+            for gamma in [1usize, 3, 7] {
+                let prompt = [4, 5, 6];
+                let dec = Box::new(MockDecoder::new(64, 7, 0.25));
+                let sampler = Sampler::new(0.0, 11);
+                let mut s =
+                    ActiveSession::admit(11, dec, sampler, gamma, &prompt, max_new).unwrap();
+                while !s.done() {
+                    s.step().unwrap();
+                }
+                assert_eq!(s.tokens.len(), max_new);
+                assert_eq!(
+                    s.decoder.context_len() + 1,
+                    prompt.len() + s.tokens.len(),
+                    "gamma={gamma} max_new={max_new}"
+                );
+            }
+        }
+    }
+
+    /// A zero budget reports zero tokens on both admission paths (the
+    /// prefill still runs; the first token is never sampled).
+    #[test]
+    fn zero_budget_session_reports_zero_tokens() {
+        let mut b = StepBatcher::new(2);
+        b.admit(mock_session(1, 0, 0.0, 2)).unwrap();
+        b.admit(chunked_session(2, &[1, 2, 3, 4, 5], 0, 2, 2)).unwrap();
+        b.drain().unwrap();
+        assert_eq!(b.finished.len(), 2);
+        for s in &b.finished {
+            assert!(s.tokens.is_empty(), "id {}", s.id);
+        }
+    }
+
     #[test]
     fn interleaves_without_hol_blocking() {
         // A short request admitted alongside a long one must finish in
         // ~its own number of rounds, not after the long one.
         let mut b = StepBatcher::new(4);
-        b.admit(mock_session(1, 200, 0.0, 4)); // long
-        b.admit(mock_session(2, 10, 0.0, 4)); // short
+        b.admit(mock_session(1, 200, 0.0, 4)).unwrap(); // long
+        b.admit(mock_session(2, 10, 0.0, 4)).unwrap(); // short
         let mut rounds_to_short = 0;
         while !b.finished.iter().any(|s| s.id == 2) {
             b.round().unwrap();
@@ -231,7 +686,7 @@ mod tests {
     fn all_sessions_complete_exactly() {
         let mut b = StepBatcher::new(8);
         for i in 0..8 {
-            b.admit(mock_session(i, 12 + i as usize, 0.3, 3));
+            b.admit(mock_session(i, 12 + i as usize, 0.3, 3)).unwrap();
         }
         b.drain().unwrap();
         assert_eq!(b.finished.len(), 8);
@@ -247,7 +702,7 @@ mod tests {
             .unwrap()
             .with_controller(Box::new(AimdGamma::new(2, 1, 7)));
         let mut b = StepBatcher::new(1);
-        b.admit(s);
+        b.admit(s).unwrap();
         b.drain().unwrap();
         let s = b.finished.pop().unwrap();
         assert_eq!(s.tokens.len(), 60);
@@ -255,7 +710,8 @@ mod tests {
     }
 
     /// Property: any admission pattern within capacity completes all
-    /// sessions with their exact token budgets.
+    /// sessions with their exact token budgets, and admissions are either
+    /// accepted or rejected cleanly — never lost, never panicking.
     #[test]
     fn prop_batcher_conserves_requests() {
         use crate::util::prop::{check, Config};
@@ -266,12 +722,37 @@ mod tests {
                 let mut pending: VecDeque<ActiveSession> = sizes
                     .iter()
                     .enumerate()
-                    .map(|(i, &m)| mock_session(i as u64, m % 24 + 1, 0.25, 3))
+                    .map(|(i, &m)| {
+                        // mix monolithic and chunked admissions
+                        if i % 2 == 0 {
+                            mock_session(i as u64, m % 24 + 1, 0.25, 3)
+                        } else {
+                            chunked_session(
+                                i as u64,
+                                &[1, 2, 3, i as i32],
+                                m % 24 + 1,
+                                3,
+                                m % 3 + 1,
+                            )
+                        }
+                    })
                     .collect();
                 let total = pending.len();
+                let mut tried_over_capacity = false;
                 while !pending.is_empty() || b.active_len() > 0 {
                     while b.has_capacity() && !pending.is_empty() {
-                        b.admit(pending.pop_front().unwrap());
+                        if b.admit(pending.pop_front().unwrap()).is_err() {
+                            return false;
+                        }
+                    }
+                    // over-capacity admission must reject cleanly, not
+                    // panic (the rejected probe session is intentionally
+                    // discarded — it is not part of `total`)
+                    if !tried_over_capacity && !b.has_capacity() {
+                        tried_over_capacity = true;
+                        if b.admit(mock_session(999, 1, 0.0, 1)).is_ok() {
+                            return false;
+                        }
                     }
                     if b.round().is_err() {
                         return false;

@@ -202,6 +202,20 @@ impl Coordinator {
         self.pool.as_ref()
     }
 
+    /// Backpressure policy for an embedded `StepBatcher`, built from this
+    /// coordinator's pool and its `quant_queue_soft_limit` knob (None when
+    /// pooling is disabled). The engine-pool serving path does not embed a
+    /// batcher yet (ROADMAP follow-up); examples and benches wire this
+    /// into theirs so the config knob is the single source of the limit.
+    pub fn quant_backpressure(
+        &self,
+    ) -> Option<crate::coordinator::batcher::QuantBackpressure> {
+        use crate::coordinator::batcher::QuantBackpressure;
+        self.pool
+            .as_ref()
+            .map(|mgr| QuantBackpressure::for_pool(mgr.clone(), self.cfg.quant_queue_soft_limit))
+    }
+
     /// Refresh the pool gauges in the metrics registry (called before each
     /// `/stats` snapshot and after request completion).
     pub fn sync_pool_gauges(&self) {
@@ -258,6 +272,8 @@ fn sync_pool_gauges(mgr: &SharedSessionManager, metrics: &Registry) {
     metrics.set_gauge(names::QUANT_POOL_WORKERS, q_workers as f64);
     metrics.set_gauge(names::QUANT_POOL_JOBS, q_jobs as f64);
     metrics.set_gauge(names::QUANT_POOL_QUEUE_DEPTH, q_depth as f64);
+    // prefill chunks deferred under quant-pool backpressure
+    metrics.set_gauge(names::PREFILL_DEFERRALS, m.prefill_deferrals() as f64);
 }
 
 /// Pool geometry plan for one mock request. Reservation (admission) and
@@ -441,15 +457,35 @@ fn run_request(
 
     let sampler = Sampler::new(cfg.sampling.temperature, cfg.sampling.seed ^ spec.id);
     if cfg.adaptive_gamma && method != Method::Autoregressive {
-        // AIMD-controlled γ via the step batcher's session machinery.
+        // AIMD-controlled γ via the step batcher's session machinery. With
+        // `prefill_chunk_tokens` set, the prompt is fed in chunks through
+        // the chunked-prefill path (bit-identical output; keeps each step
+        // O(chunk) so an embedding batcher could interleave it).
         use crate::coordinator::batcher::ActiveSession;
         use crate::spec::gamma::AimdGamma;
         let t0 = Instant::now();
         let gmax = decoder.gamma_max();
-        let mut sess = ActiveSession::admit(
-            spec.id, decoder, sampler, gamma, &prompt, spec.max_new_tokens,
-        )?
-        .with_controller(Box::new(AimdGamma::new(gamma.min(gmax), 1, gmax)));
+        let sess = if cfg.prefill_chunk_tokens > 0 {
+            let mut s = ActiveSession::admit_chunked(
+                spec.id,
+                decoder,
+                sampler,
+                gamma,
+                &prompt,
+                spec.max_new_tokens,
+                cfg.prefill_chunk_tokens,
+            );
+            while s.is_prefilling() {
+                s.step()?;
+            }
+            s
+        } else {
+            ActiveSession::admit(
+                spec.id, decoder, sampler, gamma, &prompt, spec.max_new_tokens,
+            )?
+        };
+        let mut sess =
+            sess.with_controller(Box::new(AimdGamma::new(gamma.min(gmax), 1, gmax)));
         let prefill_secs = t0.elapsed().as_secs_f64();
         let t1 = Instant::now();
         while !sess.done() {
@@ -464,11 +500,14 @@ fn run_request(
             sess.accepted as f64 / sess.drafted as f64
         };
         let _ = t_all;
+        // decode-phase tokens only: the first reported token is sampled
+        // from the prefill logits (see `GenResult::decode_tokens`)
+        let decode_tokens = sess.tokens.len().saturating_sub(1);
         return Ok(ResponseOut {
             id: spec.id,
             bucket,
             acceptance_rate,
-            decode_tokens_per_sec: sess.tokens.len() as f64 / decode_secs.max(1e-9),
+            decode_tokens_per_sec: decode_tokens as f64 / decode_secs.max(1e-9),
             prefill_secs,
             decode_secs,
             queue_secs,
@@ -606,6 +645,27 @@ mod tests {
         assert!(out.acceptance_rate > 0.5);
     }
 
+    /// `prefill_chunk_tokens` routes the adaptive-gamma path through
+    /// chunked prefill; outputs must match the monolithic path exactly.
+    #[test]
+    fn chunked_prefill_serving_matches_monolithic() {
+        let mk = |chunk: usize| ServeConfig {
+            engines: 1,
+            max_new_tokens: 24,
+            adaptive_gamma: true,
+            prefill_chunk_tokens: chunk,
+            ..ServeConfig::default()
+        };
+        let mono = Coordinator::with_mock(mk(0), 0.1).unwrap();
+        let want = mono.generate(req(5, 21)).unwrap();
+        for chunk in [1usize, 7, 8, 64] {
+            let c = Coordinator::with_mock(mk(chunk), 0.1).unwrap();
+            let out = c.generate(req(5, 21)).unwrap();
+            assert_eq!(out.tokens, want.tokens, "chunk {chunk}");
+            assert_eq!(out.acceptance_rate, want.acceptance_rate, "chunk {chunk}");
+        }
+    }
+
     fn pool_coordinator(engines: usize, pages: usize) -> Coordinator {
         let cfg = ServeConfig {
             engines,
@@ -622,6 +682,24 @@ mod tests {
             ..ServeConfig::default()
         };
         Coordinator::with_mock(cfg, 0.2).unwrap()
+    }
+
+    /// The `quant_queue_soft_limit` knob is consumed: a pooled coordinator
+    /// hands embedders a backpressure policy carrying the configured
+    /// limit; an unpooled one hands back None.
+    #[test]
+    fn quant_backpressure_carries_configured_soft_limit() {
+        let cfg = ServeConfig {
+            engines: 1,
+            quant_queue_soft_limit: 5,
+            pool: crate::pool::PoolConfig { pages: 16, ..crate::pool::PoolConfig::default() },
+            ..ServeConfig::default()
+        };
+        let c = Coordinator::with_mock(cfg, 0.1).unwrap();
+        let bp = c.quant_backpressure().expect("pooled coordinator");
+        assert_eq!(bp.soft_limit, 5);
+        let plain = mock_coordinator(1, 4);
+        assert!(plain.quant_backpressure().is_none(), "no pool, no policy");
     }
 
     #[test]

@@ -210,6 +210,13 @@ mod tests {
             j.get("gauges").unwrap().get(names::QUANT_POOL_JOBS).is_some(),
             "quant pool gauges mirrored into metrics"
         );
+        // backpressure counter: present in the pool block and the gauges
+        // (zero here — nothing deferred a prefill in this run)
+        assert_eq!(calls(names::PREFILL_DEFERRALS), 0);
+        assert!(
+            j.get("gauges").unwrap().get(names::PREFILL_DEFERRALS).is_some(),
+            "prefill_deferrals surfaced as a gauge"
+        );
     }
 
     #[test]

@@ -59,6 +59,10 @@ fn config_from_args(args: &Args) -> Result<ServeConfig> {
     cfg.pool.page_tokens = args.get_usize("pool-page-tokens", cfg.pool.page_tokens).max(1);
     // not clamped: 0 is rejected with a clear error at coordinator startup
     cfg.pool.quant_workers = args.get_usize("quant-workers", cfg.pool.quant_workers);
+    cfg.prefill_chunk_tokens =
+        args.get_usize("prefill-chunk-tokens", cfg.prefill_chunk_tokens);
+    cfg.quant_queue_soft_limit =
+        args.get_usize("quant-queue-soft-limit", cfg.quant_queue_soft_limit);
     Ok(cfg)
 }
 
@@ -99,6 +103,14 @@ OPTIONS (shared):
   --pool-page-tokens G tokens per pool page (default 64)
   --quant-workers N    size of the ONE process-wide quantization pool shared
                        by all sessions' prefills (default 1 = serial; 0 errors)
+  --prefill-chunk-tokens N
+                       schedulable prefill: feed prompts in N-token chunks so
+                       a batcher round costs O(chunk), not O(prompt)
+                       (default 0 = monolithic one-shot prefill)
+  --quant-queue-soft-limit N
+                       defer prefill chunks while the shared quant pool's
+                       queue depth exceeds N (decode keeps running;
+                       surfaces as the prefill_deferrals counter; default 32)
 
 run-only:
   --prompt TEXT | --prompt-len N --profile pg19|lexsum|infbench --seed S"

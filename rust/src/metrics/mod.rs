@@ -30,6 +30,10 @@ pub mod names {
     pub const QUANT_POOL_JOBS: &str = "quant_pool_jobs";
     /// Quantization jobs queued but not yet picked up (instantaneous).
     pub const QUANT_POOL_QUEUE_DEPTH: &str = "quant_pool_queue_depth";
+    /// Prefill chunks deferred because the quant-pool queue depth was over
+    /// `quant_queue_soft_limit` (the batcher's backpressure policy; decode
+    /// cycles keep running while prefill waits).
+    pub const PREFILL_DEFERRALS: &str = "prefill_deferrals";
 }
 
 const BUCKETS: usize = 96;

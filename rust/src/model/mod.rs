@@ -5,6 +5,21 @@
 //! `XlaSession` (the real artifacts, `xla_session.rs`) and `MockDecoder`
 //! (a deterministic toy LM with a controllable draft-error rate) so the
 //! coordinator, engine, and property tests run without artifacts.
+//!
+//! # Chunked prefill
+//!
+//! Prompt processing has two entry points. `prefill` is the one-shot path.
+//! `prefill_chunk(tokens, is_last)` feeds the prompt in slices so a
+//! scheduler (`coordinator::batcher::StepBatcher`) can interleave O(chunk)
+//! prefill work with decode cycles instead of stalling a round for
+//! O(prompt); non-final chunks return `None`, the final chunk returns the
+//! next-token logits exactly as `prefill` would. The contract is strict
+//! bit-parity: any chunking of the same prompt must leave the decoder in
+//! the same state (logits, context, KV pages, byte accounting) as the
+//! one-shot call. Backends that cannot quantize incrementally keep the
+//! default implementation, which accepts only the whole prompt as a single
+//! final chunk and delegates to `prefill` (callers consult
+//! `supports_chunked_prefill` and fall back to one chunk).
 
 pub mod xla_session;
 
@@ -36,6 +51,29 @@ pub trait Decoder: Send {
 
     /// Process the prompt, build caches; returns next-token logits.
     fn prefill(&mut self, tokens: &[i32]) -> Result<Vec<f32>>;
+
+    /// Whether this decoder can take its prompt in arbitrary slices via
+    /// [`Decoder::prefill_chunk`]. When false, schedulers must pass the
+    /// whole prompt as one final chunk (the default implementation's
+    /// one-shot fallback).
+    fn supports_chunked_prefill(&self) -> bool {
+        false
+    }
+
+    /// Feed one prompt slice. Non-final chunks return `Ok(None)`; the
+    /// final chunk (`is_last`) completes the prefill and returns the
+    /// next-token logits. Chunking must be invisible in the result: state
+    /// after the last chunk is bit-identical to `prefill` over the
+    /// concatenated tokens. Default: one-shot fallback — only a single
+    /// final chunk is accepted and delegated to [`Decoder::prefill`].
+    fn prefill_chunk(&mut self, tokens: &[i32], is_last: bool) -> Result<Option<Vec<f32>>> {
+        ensure!(
+            is_last,
+            "this decoder does not support chunked prefill; \
+             pass the whole prompt as one final chunk"
+        );
+        self.prefill(tokens).map(Some)
+    }
 
     /// Mark the start of a speculation cycle (records the buffer base the
     /// verify step will rewrite — the paper's O(1) rollback point).
@@ -90,6 +128,10 @@ pub struct MockDecoder {
     pub draft_err: f64,
     method: Method,
     paged: Option<PagedState>,
+    /// True between the first `prefill_chunk` and the final one: the
+    /// accumulated prompt lives in `committed`, and the paged cache has
+    /// absorbed every G-group that is already safe to quantize.
+    mid_prefill: bool,
 }
 
 /// Pool-backed KV state of a paged mock session. The decoder writes every
@@ -191,6 +233,7 @@ impl MockDecoder {
             draft_err,
             method: Method::QuantSpec,
             paged: None,
+            mid_prefill: false,
         }
     }
 
@@ -295,28 +338,71 @@ impl Decoder for MockDecoder {
     }
 
     fn prefill(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
-        self.committed = tokens.to_vec();
-        self.draft_tail.clear();
-        if let Some(p) = &mut self.paged {
-            // Pad to a G-bucket (≥ 2G) in cache coordinates; logits below
-            // still see the unpadded context, so outputs are unchanged.
-            let page_tokens = p.cache.page_tokens();
-            let padded =
-                crate::costmodel::memory::padded_bucket(tokens.len(), page_tokens);
-            p.pad = padded - tokens.len();
-            let committed = &self.committed;
-            let pad = p.pad;
-            let d = p.d;
-            p.cache.prefill(padded, &|pos| {
-                let tok = if pos < pad {
-                    0x0A
-                } else {
-                    committed.get(pos - pad).copied().unwrap_or(0x0A)
-                };
-                mock_kv(pos, tok, d)
-            })?;
+        // One-shot = one final chunk; `prefill_chunk` holds the single
+        // implementation so the two paths cannot drift.
+        self.mid_prefill = false;
+        let logits = self.prefill_chunk(tokens, true)?;
+        Ok(logits.expect("final prefill chunk returns logits"))
+    }
+
+    fn supports_chunked_prefill(&self) -> bool {
+        true
+    }
+
+    fn prefill_chunk(&mut self, tokens: &[i32], is_last: bool) -> Result<Option<Vec<f32>>> {
+        if !self.mid_prefill {
+            if let Some(p) = &self.paged {
+                // Starting a NEW prefill while un-finalized quant groups
+                // exist would resume group-writing after them and serve
+                // the abandoned prompt's KV — reject instead. (A finished
+                // pooled prefill is rejected downstream by
+                // `prefill_finish`, as before.)
+                ensure!(
+                    p.cache.tracker().is_ok() || p.cache.table().groups.is_empty(),
+                    "abandoned partial chunked prefill: pooled KV groups hold \
+                     stale data; release the session instead of re-prefilling"
+                );
+            }
+            self.committed.clear();
+            self.draft_tail.clear();
+            self.mid_prefill = true;
         }
-        Ok(self.logits_for(&self.committed, false))
+        self.committed.extend_from_slice(tokens);
+        let n = self.committed.len();
+        if let Some(p) = &mut self.paged {
+            let committed = &self.committed;
+            let d = p.d;
+            if !is_last {
+                // Quantize every G-group that is already safe. Groups only
+                // become safe once n ≥ 2G, which also pins the final left
+                // pad to 0 (padding only happens for prompts under 2G), so
+                // cache positions are prompt positions here.
+                p.cache.prefill_extend(n, &|pos| {
+                    mock_kv(pos, committed.get(pos).copied().unwrap_or(0x0A), d)
+                })?;
+            } else {
+                // Left-pad short prompts (with newline, like
+                // `router::pad_prompt`) up to the 2G prefill minimum;
+                // logits below still see the unpadded context, so outputs
+                // are unchanged.
+                let total = n.max(2 * p.cache.page_tokens());
+                p.pad = total - n;
+                let pad = p.pad;
+                p.cache.prefill_finish(total, &|pos| {
+                    let tok = if pos < pad {
+                        0x0A
+                    } else {
+                        committed.get(pos - pad).copied().unwrap_or(0x0A)
+                    };
+                    mock_kv(pos, tok, d)
+                })?;
+            }
+        }
+        if !is_last {
+            return Ok(None);
+        }
+        self.mid_prefill = false;
+        Ok(Some(self.logits_for(&self.committed, false)))
     }
 
     fn begin_cycle(&mut self) {
@@ -571,6 +657,172 @@ mod tests {
         // f32-vs-fp16 scale/zero overhead
         assert_eq!(quant_host, elems + 8);
         mgr.lock().unwrap().release(1);
+    }
+
+    /// Tentpole acceptance: chunked prefill is bit-identical to monolithic
+    /// prefill — final logits, KV page counts, logical/host byte
+    /// accounting, and every subsequent draft/verify logit row — across
+    /// prompt lengths sweeping group boundaries (±1 around multiples of
+    /// G=8) and chunk sizes sweeping chunk boundaries, on pooled sessions.
+    #[test]
+    fn prop_chunked_prefill_parity_with_monolithic() {
+        use crate::costmodel::memory::pool_pages_for_request;
+        use crate::pool::{shared, PoolConfig};
+        let g = 8;
+        let fb = mock_fb(g, MOCK_GAMMA_MAX);
+        for len in [3usize, 8, 15, 16, 17, 24, 31, 32, 33, 40, 53] {
+            for chunk in [1usize, 5, g - 1, g, g + 1, 2 * g + 3, len] {
+                let mgr = shared(PoolConfig {
+                    pages: 128,
+                    page_tokens: g,
+                    kv_dim: 2,
+                    high_watermark: 1.0,
+                    low_watermark: 1.0,
+                    ..PoolConfig::default()
+                })
+                .unwrap();
+                let prompt: Vec<i32> = (0..len as i32).map(|t| (t * 7 + 3) % 64).collect();
+                let pages = pool_pages_for_request(len, 30, g, fb);
+                let cap = (pages - fb.div_ceil(g)) * g;
+                let mut decs = Vec::new();
+                for sid in [1u64, 2] {
+                    mgr.lock().unwrap().admit(sid, pages, false).unwrap();
+                    decs.push(
+                        MockDecoder::with_pool(64, MOCK_GAMMA_MAX, 0.2, mgr.clone(), sid, cap)
+                            .unwrap(),
+                    );
+                }
+                let mut chunked = decs.pop().unwrap();
+                let mut mono = decs.pop().unwrap();
+                let want = mono.prefill(&prompt).unwrap();
+                let n_chunks = len.div_ceil(chunk).max(1);
+                let mut got = None;
+                for (i, slice) in prompt.chunks(chunk).enumerate() {
+                    let out = chunked.prefill_chunk(slice, i + 1 == n_chunks).unwrap();
+                    assert_eq!(out.is_some(), i + 1 == n_chunks, "len {len} chunk {chunk}");
+                    got = out.or(got);
+                }
+                assert_eq!(got.as_deref(), Some(&want[..]), "len {len} chunk {chunk}");
+                assert_eq!(mono.pages(), chunked.pages(), "len {len} chunk {chunk}");
+                let (ma, mb) = (mono.memory(), chunked.memory());
+                assert_eq!(ma.cache_logical, mb.cache_logical, "len {len} chunk {chunk}");
+                assert_eq!(ma.cache_host, mb.cache_host, "len {len} chunk {chunk}");
+                // the decode state machine continues identically
+                for cycle in 0..4 {
+                    mono.begin_cycle();
+                    chunked.begin_cycle();
+                    let t = 1 + cycle % 3;
+                    for i in 0..t {
+                        let tok = (cycle * 11 + i * 5) as i32 % 64;
+                        assert_eq!(
+                            mono.draft_step(tok).unwrap(),
+                            chunked.draft_step(tok).unwrap(),
+                            "len {len} chunk {chunk} cycle {cycle}"
+                        );
+                    }
+                    let vtokens: Vec<i32> =
+                        (0..=t).map(|i| (cycle * 13 + i * 3) as i32 % 64).collect();
+                    assert_eq!(
+                        mono.verify(&vtokens).unwrap(),
+                        chunked.verify(&vtokens).unwrap(),
+                        "len {len} chunk {chunk} cycle {cycle}"
+                    );
+                    mono.commit(t - 1, t + 1).unwrap();
+                    chunked.commit(t - 1, t + 1).unwrap();
+                }
+                assert_eq!(mono.pages(), chunked.pages());
+                for sid in [1u64, 2] {
+                    mgr.lock().unwrap().release(sid);
+                }
+            }
+        }
+    }
+
+    /// An abandoned partial chunked prefill on a POOLED session must not
+    /// be silently restarted: quant groups already flushed hold the old
+    /// prompt's KV, so a fresh prefill is rejected with a clear error
+    /// (release the session instead). Unpooled decoders restart freely.
+    #[test]
+    fn abandoned_partial_chunked_prefill_is_rejected() {
+        use crate::pool::{shared, PoolConfig};
+        let g = 8;
+        let mgr = shared(PoolConfig {
+            pages: 32,
+            page_tokens: g,
+            kv_dim: 2,
+            high_watermark: 1.0,
+            low_watermark: 1.0,
+            ..PoolConfig::default()
+        })
+        .unwrap();
+        mgr.lock().unwrap().admit(1, 16, false).unwrap();
+        let mut dec =
+            MockDecoder::with_pool(64, MOCK_GAMMA_MAX, 0.0, mgr.clone(), 1, 8 * g).unwrap();
+        let prompt_a: Vec<i32> = (0..2 * g as i32).collect();
+        // first chunk quantizes group 0 of prompt A, then is abandoned
+        assert!(dec.prefill_chunk(&prompt_a, false).unwrap().is_none());
+        let err = dec.prefill(&[9, 9, 9]).unwrap_err().to_string();
+        assert!(err.contains("stale"), "got: {err}");
+
+        // unpooled: restarting mid-prefill is fine (state fully in memory)
+        let mut plain = MockDecoder::new(64, 7, 0.0);
+        assert!(plain.prefill_chunk(&prompt_a, false).unwrap().is_none());
+        let logits = plain.prefill(&[9, 9, 9]).unwrap();
+        let mut fresh = MockDecoder::new(64, 7, 0.0);
+        assert_eq!(logits, fresh.prefill(&[9, 9, 9]).unwrap());
+        mgr.lock().unwrap().release(1);
+    }
+
+    /// The default-trait fallback: a decoder without chunk support still
+    /// serves the whole prompt as one final chunk, and rejects partial
+    /// chunks instead of corrupting state.
+    #[test]
+    fn default_prefill_chunk_is_one_shot_fallback() {
+        struct OneShot(MockDecoder);
+        impl Decoder for OneShot {
+            fn vocab(&self) -> usize {
+                self.0.vocab()
+            }
+            fn gamma_max(&self) -> usize {
+                self.0.gamma_max()
+            }
+            fn method(&self) -> Method {
+                self.0.method()
+            }
+            fn prefill(&mut self, t: &[i32]) -> Result<Vec<f32>> {
+                self.0.prefill(t)
+            }
+            fn begin_cycle(&mut self) {
+                self.0.begin_cycle()
+            }
+            fn draft_step(&mut self, t: i32) -> Result<Vec<f32>> {
+                self.0.draft_step(t)
+            }
+            fn verify(&mut self, t: &[i32]) -> Result<Vec<Vec<f32>>> {
+                self.0.verify(t)
+            }
+            fn commit(&mut self, a: usize, v: usize) -> Result<()> {
+                self.0.commit(a, v)
+            }
+            fn ar_step(&mut self, t: i32) -> Result<Vec<f32>> {
+                self.0.ar_step(t)
+            }
+            fn context_len(&self) -> usize {
+                self.0.context_len()
+            }
+            fn memory(&self) -> MemoryReport {
+                self.0.memory()
+            }
+            fn timings(&self) -> PhaseTimings {
+                self.0.timings()
+            }
+        }
+        let mut d = OneShot(MockDecoder::new(64, 7, 0.0));
+        assert!(!d.supports_chunked_prefill());
+        assert!(d.prefill_chunk(&[1, 2], false).is_err(), "partial chunk rejected");
+        let via_chunk = d.prefill_chunk(&[1, 2, 3], true).unwrap().unwrap();
+        let mut plain = MockDecoder::new(64, 7, 0.0);
+        assert_eq!(via_chunk, plain.prefill(&[1, 2, 3]).unwrap());
     }
 
     #[test]

@@ -26,6 +26,13 @@
 //! crossed group, so a γ-cycle's verify pays O(groups-crossed) lookups
 //! instead of O(γ). Bulk quantization (prefill) fans out over the
 //! process-wide shared pool sized by `PoolConfig::quant_workers`.
+//!
+//! Prefill comes in two shapes: one-shot ([`PagedKvCache::prefill`], a
+//! G-multiple bucket) and chunked ([`PagedKvCache::prefill_extend`] per
+//! chunk + [`PagedKvCache::prefill_finish`]), which quantizes full
+//! G-groups incrementally as tokens arrive so a scheduler can spread an
+//! O(prompt) prefill over O(chunk) slices. Both produce bit-identical
+//! caches (pages, codes, byte accounting) for the same token stream.
 
 use anyhow::{ensure, Context, Result};
 
@@ -172,33 +179,96 @@ impl PagedKvCache {
     /// Prefill a padded bucket of `padded_len` tokens (multiple of G,
     /// ≥ 2G): quantize the leading `padded_len − G` tokens into fresh quant
     /// pages, keep the trailing G tokens full-precision in C_F1. `kv(p)`
-    /// yields the d-dim KV vector of position `p`. Quantization fans out
-    /// over the process-wide shared pool (bit-identical to serial).
+    /// yields the d-dim KV vector of position `p`. One-shot wrapper over
+    /// [`PagedKvCache::prefill_finish`] (which accepts arbitrary lengths;
+    /// this entry point keeps the classic bucket contract).
     pub fn prefill(
         &mut self,
         padded_len: usize,
         kv: &dyn Fn(usize) -> Vec<f32>,
     ) -> Result<()> {
-        ensure!(self.tracker.is_none(), "cache already prefilled");
         ensure!(
             padded_len % self.g == 0 && padded_len >= 2 * self.g,
             "padded prefill of {padded_len} tokens is not a bucket of G={}",
             self.g
         );
+        self.prefill_finish(padded_len, kv)
+    }
+
+    /// Incremental (chunked) prefill: with `n_seen` prompt tokens available
+    /// so far, quantize and flush every full G-group that is certain to
+    /// land in the quantized region *regardless of the final prompt
+    /// length* — group k is safe once `n_seen ≥ (k+2)·G`, because the
+    /// finalized FP tail always keeps at least G trailing tokens. Already
+    /// written groups are skipped, so driving this once per chunk costs
+    /// O(chunk) per call, and the final cache state is bit-identical to a
+    /// one-shot [`PagedKvCache::prefill`] of the same tokens. Quantization
+    /// fans out over the process-wide shared pool.
+    pub fn prefill_extend(
+        &mut self,
+        n_seen: usize,
+        kv: &dyn Fn(usize) -> Vec<f32>,
+    ) -> Result<()> {
+        ensure!(self.tracker.is_none(), "cache already prefilled");
+        let safe_groups = n_seen.saturating_sub(self.g) / self.g;
+        self.quantize_prefill_groups(safe_groups, kv)
+    }
+
+    /// Final prefill step for a context of `total` tokens (any length
+    /// ≥ 2G): quantizes the remaining leading groups not yet written by
+    /// [`PagedKvCache::prefill_extend`], fills the FP buffer with the
+    /// trailing `total − n_q ∈ [G, 2G)` tokens, and installs the tracker.
+    pub fn prefill_finish(
+        &mut self,
+        total: usize,
+        kv: &dyn Fn(usize) -> Vec<f32>,
+    ) -> Result<()> {
+        ensure!(self.tracker.is_none(), "cache already prefilled");
         ensure!(
-            padded_len - self.g <= self.cap_tokens,
-            "prefill of {padded_len} exceeds reserved quant capacity {}",
+            total >= 2 * self.g,
+            "prefill of {total} tokens is under the 2G={} minimum",
+            2 * self.g
+        );
+        let n_q = (total - self.g) / self.g * self.g;
+        ensure!(
+            self.table.groups.len() * self.g <= n_q,
+            "prefill_extend wrote {} groups past the final region ({n_q} tokens)",
+            self.table.groups.len()
+        );
+        self.quantize_prefill_groups(n_q / self.g, kv)?;
+        for (slot, pos) in (n_q..total).enumerate() {
+            let v = kv(pos);
+            self.write_fp_slot(slot, &v)?;
+        }
+        self.tracker = Some(CacheTracker::after_prefill(
+            total,
+            self.g,
+            self.fb,
+            self.cap_tokens,
+        ));
+        Ok(())
+    }
+
+    /// Quantize prefill groups `[groups_written, target_groups)` into fresh
+    /// quant pages. Quantize in bounded batches: the fan-out sees several
+    /// groups at once, but transient f32 staging stays O(batch · G · d)
+    /// instead of the whole region — serial (workers <= 1) keeps the old
+    /// one-group-at-a-time peak exactly.
+    fn quantize_prefill_groups(
+        &mut self,
+        target_groups: usize,
+        kv: &dyn Fn(usize) -> Vec<f32>,
+    ) -> Result<()> {
+        ensure!(
+            target_groups * self.g <= self.cap_tokens,
+            "prefill of {} groups exceeds reserved quant capacity {} tokens",
+            target_groups,
             self.cap_tokens
         );
-        let n_groups = (padded_len - self.g) / self.g;
-        // Quantize in bounded batches: the fan-out sees several groups at
-        // once, but transient f32 staging stays O(batch · G · d) instead of
-        // the whole region — serial (workers <= 1) keeps the old
-        // one-group-at-a-time peak exactly.
         let batch = if self.quant.size() <= 1 { 1 } else { 4 * self.quant.size() };
-        let mut gi = 0;
-        while gi < n_groups {
-            let end = (gi + batch).min(n_groups);
+        let mut gi = self.table.groups.len();
+        while gi < target_groups {
+            let end = (gi + batch).min(target_groups);
             let mut flats = Vec::with_capacity(end - gi);
             for b in gi..end {
                 let mut flat = Vec::with_capacity(self.g * self.d);
@@ -220,16 +290,6 @@ impl PagedKvCache {
             }
             gi = end;
         }
-        for t in 0..self.g {
-            let v = kv(padded_len - self.g + t);
-            self.write_fp_slot(t, &v)?;
-        }
-        self.tracker = Some(CacheTracker::after_prefill(
-            padded_len,
-            self.g,
-            self.fb,
-            self.cap_tokens,
-        ));
         Ok(())
     }
 
@@ -781,6 +841,69 @@ mod tests {
                 }
                 true
             },
+        );
+    }
+
+    /// Property (chunked-prefill parity): for prompt lengths sweeping
+    /// group boundaries (±1 around G multiples) and chunk sizes sweeping
+    /// the chunk-boundary cases, driving `prefill_extend` once per chunk
+    /// and then `prefill_finish` yields a cache bit-identical to a
+    /// one-shot prefill of the same length — same page count, same
+    /// logical/host bytes, same tracker split, and identical dequant
+    /// output at every position on both planes.
+    #[test]
+    fn prop_chunked_prefill_matches_one_shot() {
+        for len in [2 * G, 2 * G + 1, 3 * G - 1, 3 * G, 3 * G + 1, 5 * G - 1, 5 * G + 3] {
+            for chunk in [1usize, 3, G - 1, G, G + 1, 2 * G + 3, len] {
+                let mgr = pool_mgr(64);
+                let kv = |p: usize| mock_kv(p, (p as i32) ^ 77, D);
+                let mut a = cache(&mgr, 1, len / G + 4);
+                a.prefill_finish(len, &kv).unwrap();
+                let mut b = cache(&mgr, 2, len / G + 4);
+                let mut seen = 0usize;
+                while seen < len {
+                    seen = (seen + chunk).min(len);
+                    b.prefill_extend(seen, &kv).unwrap();
+                }
+                b.prefill_finish(len, &kv).unwrap();
+                assert_eq!(
+                    a.table().groups.len(),
+                    b.table().groups.len(),
+                    "len {len} chunk {chunk}: page counts diverge"
+                );
+                assert_eq!(a.session_bytes(), b.session_bytes(), "len {len} chunk {chunk}");
+                let (ta, tb) = (a.tracker().unwrap(), b.tracker().unwrap());
+                assert_eq!((ta.n_q, ta.n_f), (tb.n_q, tb.n_f), "len {len} chunk {chunk}");
+                for pos in 0..len {
+                    for draft in [true, false] {
+                        assert_eq!(
+                            a.read_token(pos, draft).unwrap(),
+                            b.read_token(pos, draft).unwrap(),
+                            "len {len} chunk {chunk} pos {pos} draft {draft}"
+                        );
+                    }
+                }
+                // double-finish and post-finish extend are rejected
+                assert!(b.prefill_finish(len, &kv).is_err());
+                assert!(b.prefill_extend(len, &kv).is_err());
+                a.release();
+                b.release();
+            }
+        }
+    }
+
+    /// `prefill_finish` rejects totals under 2G, and an extend that
+    /// outran the final length surfaces as a clean error.
+    #[test]
+    fn chunked_prefill_guards() {
+        let mgr = pool_mgr(64);
+        let kv = |p: usize| mock_kv(p, p as i32, D);
+        let mut c = cache(&mgr, 1, 8);
+        assert!(c.prefill_finish(2 * G - 1, &kv).is_err());
+        c.prefill_extend(4 * G, &kv).unwrap(); // 3 groups now written
+        assert!(
+            c.prefill_finish(3 * G, &kv).is_err(),
+            "finish shorter than the extended region must fail"
         );
     }
 

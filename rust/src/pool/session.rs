@@ -72,6 +72,9 @@ pub struct SessionManager {
     clock: u64,
     evictions: u64,
     traffic: CacheTraffic,
+    /// Prefill chunks deferred by quant-pool backpressure (recorded by
+    /// `coordinator::batcher::QuantBackpressure`, surfaced in `/stats`).
+    prefill_deferrals: u64,
 }
 
 /// The coordinator and paged caches share the manager behind one mutex.
@@ -96,6 +99,7 @@ impl SessionManager {
             clock: 0,
             evictions: 0,
             traffic: CacheTraffic::default(),
+            prefill_deferrals: 0,
         })
     }
 
@@ -120,6 +124,17 @@ impl SessionManager {
 
     pub fn evictions(&self) -> u64 {
         self.evictions
+    }
+
+    /// Record `n` prefill chunks deferred under quant-pool backpressure
+    /// (the batcher batches a whole round's deferrals into one call).
+    pub fn note_prefill_deferrals(&mut self, n: u64) {
+        self.prefill_deferrals += n;
+    }
+
+    /// Prefill chunks deferred by quant-pool backpressure so far.
+    pub fn prefill_deferrals(&self) -> u64 {
+        self.prefill_deferrals
     }
 
     /// Cumulative quantized-cache read traffic (draft vs target path).
@@ -362,6 +377,10 @@ impl SessionManager {
             (
                 crate::metrics::names::QUANT_POOL_QUEUE_DEPTH,
                 Json::num(q_depth as f64),
+            ),
+            (
+                crate::metrics::names::PREFILL_DEFERRALS,
+                Json::num(self.prefill_deferrals as f64),
             ),
         ])
     }

@@ -37,11 +37,17 @@ impl GenResult {
         }
     }
 
+    /// Decode-phase tokens generated (the first reported token is sampled
+    /// from the *prefill* logits and is prefill work, not decode work).
+    pub fn decode_tokens(&self) -> usize {
+        self.tokens.len().saturating_sub(1)
+    }
+
     pub fn decode_tokens_per_sec(&self) -> f64 {
         if self.decode_secs == 0.0 {
             0.0
         } else {
-            self.tokens.len() as f64 / self.decode_secs
+            self.decode_tokens() as f64 / self.decode_secs
         }
     }
 }
@@ -69,6 +75,13 @@ impl SpecEngine {
         res.prefill_secs = t0.elapsed().as_secs_f64();
 
         let t1 = Instant::now();
+        if max_new == 0 {
+            // A zero budget reports zero tokens: the prefill ran, but the
+            // first token is never sampled and nothing is committed (the
+            // pre-fix code sampled it and truncated it away afterwards).
+            res.decode_secs = t1.elapsed().as_secs_f64();
+            return Ok(res);
+        }
         let mut last = self.sampler.sample(&logits);
         res.tokens.push(last);
 
@@ -82,16 +95,25 @@ impl SpecEngine {
             return Ok(res);
         }
 
-        let gamma = self.gamma.min(dec.gamma_max());
+        let gamma_cfg = self.gamma.min(dec.gamma_max()).max(1);
         // Cycle-persistent buffers: the outer token/logit vectors are
         // hoisted out of the loop (the per-step logits the decoder
         // returns by value are still fresh allocations — that is the
         // Decoder trait's contract); the γ-window's cache traffic is
         // batched inside the decoder (see `PagedKvCache::read_tokens_into`).
-        let mut drafted: Vec<i32> = Vec::with_capacity(gamma);
-        let mut draft_logits: Vec<Vec<f32>> = Vec::with_capacity(gamma);
-        let mut vtokens: Vec<i32> = Vec::with_capacity(gamma + 1);
+        let mut drafted: Vec<i32> = Vec::with_capacity(gamma_cfg);
+        let mut draft_logits: Vec<Vec<f32>> = Vec::with_capacity(gamma_cfg);
+        let mut vtokens: Vec<i32> = Vec::with_capacity(gamma_cfg + 1);
         while res.tokens.len() < max_new {
+            // Clamp γ to the remaining budget: a cycle reports at most
+            // γ accepted drafts + the bonus/corrected token, so γ =
+            // remaining − 1 makes overshooting the budget impossible and
+            // every drafted-then-committed token is reported — the
+            // decoder's KV can never silently hold tokens the caller
+            // never saw. When exactly one token remains the cycle runs
+            // with γ = 0: no drafts, verify([last]) alone — an AR step
+            // through the verify path, valid on every backend.
+            let gamma = gamma_cfg.min(max_new - res.tokens.len() - 1);
             // ---- draft phase (Alg. 1 lines 6-9) ----
             dec.begin_cycle();
             let mut feed = last;
@@ -127,7 +149,9 @@ impl SpecEngine {
             res.tokens.push(out.next_token);
             last = out.next_token;
         }
-        res.tokens.truncate(max_new);
+        // No trailing truncate: γ-clamping makes the loop land exactly on
+        // the budget, so every token the decoder committed is reported.
+        debug_assert_eq!(res.tokens.len(), max_new);
         res.decode_secs = t1.elapsed().as_secs_f64();
         Ok(res)
     }
@@ -202,6 +226,86 @@ mod tests {
         let mut d = MockDecoder::new(64, 7, 0.1);
         let out = greedy_engine(5).generate(&mut d, &[1, 2], 17).unwrap();
         assert_eq!(out.tokens.len(), 17);
+    }
+
+    /// Regression (budget over-commit): the decoder's committed context
+    /// must never diverge from the reported tokens. γ is clamped to the
+    /// remaining budget, so at exit every committed token was reported
+    /// and exactly one reported token (the trailing feed, never yet fed
+    /// back) is uncommitted: `context_len() + 1 == prompt + reported`.
+    /// Before the fix, the last cycle could draft past the budget, commit
+    /// the overshoot into the KV cache, and then truncate it out of the
+    /// report — a resumed or inspected session would see phantom tokens.
+    #[test]
+    fn committed_context_matches_reported_tokens() {
+        for max_new in [1usize, 2, 3, 7, 8, 17, 40] {
+            for gamma in [1usize, 2, 4, 7] {
+                for err in [0.0, 0.35] {
+                    let prompt = vec![9, 8, 7];
+                    let mut d = MockDecoder::new(64, 7, err);
+                    let out = greedy_engine(gamma).generate(&mut d, &prompt, max_new).unwrap();
+                    assert_eq!(out.tokens.len(), max_new.max(1), "gamma={gamma}");
+                    assert_eq!(
+                        d.context_len() + 1,
+                        prompt.len() + out.tokens.len(),
+                        "gamma={gamma} max_new={max_new} err={err}: \
+                         committed KV diverged from reported tokens"
+                    );
+                }
+            }
+        }
+        // the AR loop holds the same contract
+        let prompt = vec![1, 2, 3];
+        let mut ar = MockDecoder::new(64, 7, 0.0);
+        ar.set_method(Method::Autoregressive);
+        let out = greedy_engine(1).generate(&mut ar, &prompt, 23).unwrap();
+        assert_eq!(out.tokens.len(), 23);
+        assert_eq!(ar.context_len() + 1, prompt.len() + out.tokens.len());
+    }
+
+    /// A zero budget reports zero tokens and commits nothing — the
+    /// pre-existing contract (formerly enforced by the trailing truncate)
+    /// now held without sampling a token the caller asked not to get.
+    #[test]
+    fn zero_budget_reports_zero_tokens() {
+        let prompt = vec![1, 2, 3];
+        for gamma in [1, 4] {
+            let mut d = MockDecoder::new(64, 7, 0.0);
+            let out = greedy_engine(gamma).generate(&mut d, &prompt, 0).unwrap();
+            assert!(out.tokens.is_empty(), "gamma={gamma}");
+            assert_eq!(d.context_len(), prompt.len(), "nothing committed");
+            assert_eq!(out.decode_tokens_per_sec(), 0.0);
+        }
+        let mut ar = MockDecoder::new(64, 7, 0.0);
+        ar.set_method(Method::Autoregressive);
+        let out = greedy_engine(1).generate(&mut ar, &prompt, 0).unwrap();
+        assert!(out.tokens.is_empty());
+    }
+
+    /// Regression: `decode_tokens_per_sec` counts decode-phase tokens
+    /// only — the first reported token is sampled from prefill logits and
+    /// must not inflate decode throughput.
+    #[test]
+    fn decode_tps_excludes_prefill_sampled_token() {
+        let r = GenResult {
+            tokens: vec![1, 2, 3, 4, 5],
+            decode_secs: 2.0,
+            ..GenResult::default()
+        };
+        assert_eq!(r.decode_tokens(), 4);
+        assert_eq!(r.decode_tokens_per_sec(), 2.0);
+        // boundary: only the prefill-sampled token exists -> zero decode
+        // work, not 1/decode_secs
+        let one = GenResult {
+            tokens: vec![1],
+            decode_secs: 0.5,
+            ..GenResult::default()
+        };
+        assert_eq!(one.decode_tokens(), 0);
+        assert_eq!(one.decode_tokens_per_sec(), 0.0);
+        // no division by zero
+        let none = GenResult::default();
+        assert_eq!(none.decode_tokens_per_sec(), 0.0);
     }
 
     impl MockDecoder {

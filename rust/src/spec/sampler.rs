@@ -76,6 +76,9 @@ impl Sampler {
         let gamma = drafted.len();
         assert_eq!(draft_logits.len(), gamma);
         assert!(target_logits.len() >= gamma, "need a target row per draft");
+        // γ = 0 is a valid cycle (the engines' final-token step: verify the
+        // feed token alone); it needs the one target row to sample from.
+        assert!(!target_logits.is_empty(), "verify needs at least one target row");
         if self.greedy() {
             for i in 0..gamma {
                 let t = greedy_argmax(&target_logits[i]) as i32;
@@ -83,9 +86,11 @@ impl Sampler {
                     return VerifyOutcome { accepted: i, next_token: t };
                 }
             }
-            // all accepted: bonus from the row after the last draft if
-            // available, else re-derive from the final row.
-            let bonus_row = target_logits.get(gamma).unwrap_or(&target_logits[gamma - 1]);
+            // All accepted: bonus from the row after the last draft if
+            // available, else re-derive from the final row. MUST be lazy:
+            // `unwrap_or` would evaluate `gamma - 1` even when the bonus
+            // row exists, underflowing on a γ = 0 cycle.
+            let bonus_row = target_logits.get(gamma).unwrap_or_else(|| &target_logits[gamma - 1]);
             VerifyOutcome {
                 accepted: gamma,
                 next_token: greedy_argmax(bonus_row) as i32,
@@ -104,7 +109,8 @@ impl Sampler {
                     return VerifyOutcome { accepted: i, next_token: next };
                 }
             }
-            let bonus_row = target_logits.get(gamma).unwrap_or(&target_logits[gamma - 1]);
+            // lazy fallback for the same γ = 0 reason as the greedy path
+            let bonus_row = target_logits.get(gamma).unwrap_or_else(|| &target_logits[gamma - 1]);
             let next = self.sample(bonus_row);
             VerifyOutcome { accepted: gamma, next_token: next }
         }
@@ -130,6 +136,22 @@ mod tests {
         let out = s.verify(&drafted, &dl, &tl);
         assert_eq!(out.accepted, 3);
         assert_eq!(out.next_token, 9); // bonus
+    }
+
+    /// Regression: a γ = 0 cycle (the engines' budget-exact final step —
+    /// no drafts, one target row) must sample from row 0, not underflow
+    /// indexing a "previous" row that does not exist.
+    #[test]
+    fn gamma_zero_cycle_samples_from_row_zero() {
+        let mut s = Sampler::new(0.0, 0);
+        let out = s.verify(&[], &[], &[peaked(10, 4)]);
+        assert_eq!(out.accepted, 0);
+        assert_eq!(out.next_token, 4);
+        // stochastic path takes the same bonus-row branch
+        let mut st = Sampler::new(0.8, 1);
+        let out = st.verify(&[], &[], &[peaked(10, 4)]);
+        assert_eq!(out.accepted, 0);
+        assert!((0..10).contains(&out.next_token));
     }
 
     #[test]

@@ -15,7 +15,12 @@
 //! * a steady-state `MockDecoder::draft_step` performs exactly ONE
 //!   allocation — the logits vector the `Decoder` trait returns by value;
 //!   the whole KV write/read-back path (mock_kv_into, write_cycle_slot,
-//!   fused per-token read, error-bound validation) allocates nothing.
+//!   fused per-token read, error-bound validation) allocates nothing;
+//! * the batcher path (`ActiveSession::step`, ISSUE 4): the per-cycle
+//!   drafted/draft-logit/verify-window vectors are cycle-persistent
+//!   fields, so a steady-state step allocates only what the `Decoder`
+//!   trait returns by value (γ draft-logit vectors + the γ+1 verify rows
+//!   + the mock's verify bookkeeping) — 2γ+3 per cycle, not 2γ+6.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -140,5 +145,44 @@ fn steady_state_hot_path_does_not_allocate() {
         draft_delta, n,
         "draft_step must allocate only its returned logits vector \
          ({n} steps, {draft_delta} allocations)"
+    );
+
+    // ---- batcher path: ActiveSession::step reuses its cycle buffers ----
+    // With the drafted/draft-logit/verify-window vectors hoisted into
+    // cycle-persistent fields, a steady-state speculation cycle allocates
+    // exactly the decoder-returned vectors: γ draft-logit vecs, the
+    // verify rows (outer vec + γ+1 rows), and the mock's `last_verify`
+    // clone — 2γ+3 per cycle. The un-hoisted loop allocated 3 more per
+    // cycle (fresh drafted/draft_logits/vtokens), which this bound
+    // rejects. Small slack: the mock's committed-context Vec doubles
+    // capacity a bounded number of times across the window.
+    use quantspec::coordinator::batcher::ActiveSession;
+    use quantspec::spec::Sampler;
+    let gamma = 4usize;
+    let mut sess = ActiveSession::admit(
+        1,
+        Box::new(MockDecoder::new(MOCK_VOCAB, MOCK_GAMMA_MAX, 0.0)),
+        Sampler::new(0.0, 1),
+        gamma,
+        &[3, 1, 4, 1, 5],
+        2000,
+    )
+    .unwrap();
+    for _ in 0..60 {
+        sess.step().unwrap(); // warmup: sizes every buffer involved
+    }
+    let cycles = 50u64;
+    let per_cycle = 2 * gamma as u64 + 3;
+    let before = allocs();
+    for _ in 0..cycles {
+        sess.step().unwrap();
+    }
+    let step_delta = allocs() - before;
+    assert!(
+        step_delta <= cycles * per_cycle + 4,
+        "ActiveSession::step allocated {step_delta} over {cycles} cycles \
+         (expected <= {} = {cycles} x (2 gamma + 3) + slack: cycle buffers \
+         must be cycle-persistent)",
+        cycles * per_cycle + 4
     );
 }
