@@ -1,10 +1,13 @@
 //! Multi-session decode under a constrained paged KV pool: admission
 //! control, LRU eviction of idle prefix caches, clean rejection of
-//! oversized requests, and chunked-prefill interleaving (one huge prompt
+//! oversized requests, chunked-prefill interleaving (one huge prompt
 //! admitted alongside N decoders: every batcher round's prefill work is
-//! bounded by the chunk size, never the prompt size) — reported alongside
-//! the Figure 6 KV-memory numbers the pool exists to manage. Emits
-//! `BENCH_pool_pressure.json` (checked by CI's `bench-smoke` jq gate).
+//! bounded by the chunk size, never the prompt size), and PARALLEL decode
+//! rounds over the sharded pool (4 sessions stepped on 2+ workers must
+//! beat serial rounds ≥ 1.5x, bit-identically; 1 worker must not regress
+//! serial) — reported alongside the Figure 6 KV-memory numbers the pool
+//! exists to manage. Emits `BENCH_pool_pressure.json` (checked by CI's
+//! `bench-smoke` jq gate).
 //!
 //!     cargo bench --bench pool_pressure
 
@@ -304,6 +307,144 @@ fn main() {
     tc.print("chunked prefill — one huge prompt interleaved with decode");
     let _ = tc.write_csv("bench_out/pool_pressure_chunked.csv");
 
+    // --- phase 4: parallel decode rounds over the sharded pool -----------
+    // 4 pooled sessions with a heavier mock geometry (G=32, d=256: real
+    // per-step dequant/quantize work) drain under serial rounds, under the
+    // parallel machinery pinned to ONE worker (parity: must not regress
+    // serial), and under 2+ workers (the tentpole speedup). Token streams
+    // must be bit-identical across all three. Prefill runs at admission,
+    // outside the timed drains.
+    const PG: usize = 32;
+    const PD: usize = 256;
+    let quick = std::env::var("QS_BENCH_QUICK").is_ok();
+    let par_sessions: u64 = 4;
+    let par_prompt = 8 * PG;
+    let par_new = if quick { 32 } else { 96 };
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let par_workers = cores.clamp(1, 4).max(1);
+    let gate_enforced = cores >= 2;
+    let fbp = mock_fb(PG, MOCK_GAMMA_MAX);
+    // `workers = None` constructs the batcher WITHOUT touching the
+    // parallel-round machinery at all (the true serial baseline);
+    // `Some(1)` goes through `with_step_workers(1)`, which must remain
+    // that same serial path — the one_worker_ratio gate fires if dispatch
+    // overhead ever leaks into it.
+    let run_parallel_phase = |workers: Option<usize>| -> (f64, Vec<(u64, Vec<i32>)>) {
+        let mgr = pool::shared(PoolConfig {
+            pages: 512,
+            page_tokens: PG,
+            kv_dim: PD,
+            high_watermark: 1.0,
+            low_watermark: 1.0,
+            ..PoolConfig::default()
+        })
+        .expect("pool config valid");
+        let pages = memory::pool_pages_for_request(par_prompt, par_new, PG, fbp);
+        let cap = (pages - fbp.div_ceil(PG)) * PG;
+        let mut b = StepBatcher::new(par_sessions as usize);
+        if let Some(w) = workers {
+            b = b.with_step_workers(w);
+        }
+        for id in 1..=par_sessions {
+            assert_eq!(
+                mgr.lock().unwrap().admit(id, pages, false).unwrap(),
+                AdmitOutcome::Admitted
+            );
+            let dec = MockDecoder::with_pool(
+                MOCK_VOCAB,
+                MOCK_GAMMA_MAX,
+                0.15,
+                mgr.clone(),
+                id,
+                cap,
+            )
+            .unwrap();
+            let prompt = workload::prompt(id, par_prompt, Profile::Pg19);
+            let sess = ActiveSession::admit(
+                id,
+                Box::new(dec),
+                Sampler::new(0.0, id),
+                4,
+                &prompt,
+                par_new,
+            )
+            .unwrap();
+            b.admit(sess).unwrap();
+        }
+        let t = Instant::now();
+        b.drain().unwrap();
+        let secs = t.elapsed().as_secs_f64();
+        assert!(b.failed.is_empty(), "no step may fail in the bench");
+        let mut toks: Vec<(u64, Vec<i32>)> =
+            b.finished.iter().map(|s| (s.id, s.tokens.clone())).collect();
+        toks.sort_by_key(|(id, _)| *id);
+        for id in 1..=par_sessions {
+            mgr.lock().unwrap().release(id);
+        }
+        (secs, toks)
+    };
+    // best-of-3 per configuration to shave scheduler noise off the gates
+    let reps = 3;
+    let best = |workers: Option<usize>| -> (f64, Vec<(u64, Vec<i32>)>) {
+        let mut best_secs = f64::INFINITY;
+        let mut toks = Vec::new();
+        for _ in 0..reps {
+            let (secs, t) = run_parallel_phase(workers);
+            if toks.is_empty() {
+                toks = t;
+            } else {
+                assert_eq!(toks, t, "token streams diverged across repetitions");
+            }
+            best_secs = best_secs.min(secs);
+        }
+        (best_secs, toks)
+    };
+    let (serial_secs, serial_toks) = best(None);
+    let (one_secs, one_toks) = best(Some(1));
+    let (par_secs, par_toks) = best(Some(par_workers));
+    assert_eq!(serial_toks, one_toks, "one-worker rounds changed outputs");
+    assert_eq!(serial_toks, par_toks, "parallel rounds changed outputs");
+    let parallel_round_speedup = serial_secs / par_secs.max(1e-9);
+    let one_worker_ratio = serial_secs / one_secs.max(1e-9);
+    assert!(
+        one_worker_ratio >= 0.7,
+        "step_workers=1 regressed serial rounds: ratio {one_worker_ratio:.2}"
+    );
+    if gate_enforced {
+        assert!(
+            parallel_round_speedup >= 1.5,
+            "parallel rounds only {parallel_round_speedup:.2}x over serial at \
+             {par_sessions} sessions / {par_workers} workers (gate: 1.5x)"
+        );
+    } else {
+        println!(
+            "single-core host: parallel-round speedup gate skipped \
+             (measured {parallel_round_speedup:.2}x)"
+        );
+    }
+    let mut tp = Table::new(&[
+        "sessions",
+        "step_workers",
+        "serial_ms",
+        "one_worker_ms",
+        "parallel_ms",
+        "speedup",
+        "one_worker_ratio",
+        "gate",
+    ]);
+    tp.row(&[
+        par_sessions.to_string(),
+        par_workers.to_string(),
+        fmt_f(serial_secs * 1e3, 3),
+        fmt_f(one_secs * 1e3, 3),
+        fmt_f(par_secs * 1e3, 3),
+        format!("{parallel_round_speedup:.2}x"),
+        fmt_f(one_worker_ratio, 2),
+        if gate_enforced { ">=1.5x".into() } else { "skipped (1 core)".to_string() },
+    ]);
+    tp.print("parallel rounds — N sessions stepped concurrently over the sharded pool");
+    let _ = tp.write_csv("bench_out/pool_pressure_parallel.csv");
+
     let json = Json::obj(vec![
         (
             "pool",
@@ -313,6 +454,19 @@ fn main() {
                 ("evictions", Json::num(evictions as f64)),
                 ("tokens", Json::num(tokens as f64)),
                 ("tok_per_s", Json::num(tokens as f64 / wall.max(1e-9))),
+            ]),
+        ),
+        (
+            "parallel_round",
+            Json::obj(vec![
+                ("sessions", Json::num(par_sessions as f64)),
+                ("step_workers", Json::num(par_workers as f64)),
+                ("serial_secs", Json::num(serial_secs)),
+                ("one_worker_secs", Json::num(one_secs)),
+                ("parallel_secs", Json::num(par_secs)),
+                ("parallel_round_speedup", Json::num(parallel_round_speedup)),
+                ("one_worker_ratio", Json::num(one_worker_ratio)),
+                ("gate_enforced", Json::Bool(gate_enforced)),
             ]),
         ),
         (

@@ -135,6 +135,11 @@ fn mock_main(args: &Args) -> anyhow::Result<()> {
     // each request reserves ~22 pages; 112 pages (ceiling 100) admit four
     // concurrent sessions and make the fifth wait at the queue head
     let pool_pages = args.get_usize("pool-pages", 112);
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    // parallel rounds on the pooled path (serial on a single-core host);
+    // the unpooled comparison coordinator stays serial on purpose — its
+    // outputs must still match bit-for-bit
+    let step_workers = args.get_usize("step-workers", if cores >= 2 { 2 } else { 1 });
 
     let pool = PoolConfig {
         pages: pool_pages,
@@ -148,6 +153,7 @@ fn mock_main(args: &Args) -> anyhow::Result<()> {
         engines,
         max_new_tokens: max_new,
         pool: pool.clone(),
+        step_workers,
         ..ServeConfig::default()
     };
     let unpooled_cfg = ServeConfig {
@@ -198,7 +204,6 @@ fn mock_main(args: &Args) -> anyhow::Result<()> {
     // genuinely decoded concurrently out of the one arena. On a
     // single-core host the mock decodes too fast to guarantee overlap, so
     // only report there instead of asserting.
-    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     if cores >= 2 {
         assert!(peak >= 24, "expected concurrent sessions, peak was only {peak}");
     } else {
@@ -207,6 +212,34 @@ fn mock_main(args: &Args) -> anyhow::Result<()> {
     assert!(
         pool_stats.get("prefill_deferrals").is_some(),
         "/stats pool block surfaces the backpressure counter"
+    );
+    // round-parallelism telemetry on the SERVING path: the engines'
+    // embedded batchers report their rounds through the session manager,
+    // and the gauges mirror the keys (plus a per-engine depth gauge)
+    for key in ["step_workers", "round_span_us", "step_workers_busy", "batcher_rounds"] {
+        assert!(
+            pool_stats.get(key).is_some(),
+            "/stats pool block missing round-parallelism key {key}"
+        );
+    }
+    assert_eq!(
+        pool_stats.get("step_workers").unwrap().as_usize(),
+        Some(step_workers),
+        "configured step_workers surfaced"
+    );
+    let rounds = pool_stats.get("batcher_rounds").unwrap().as_usize().unwrap();
+    assert!(rounds > 0, "serving ran through batcher rounds");
+    let gauges = stats.get("gauges").expect("gauges block");
+    assert!(gauges.get("step_workers").is_some(), "step_workers gauge");
+    assert!(gauges.get("round_span_us").is_some(), "round_span_us gauge");
+    assert!(
+        gauges.get("batcher_depth_engine_0").is_some(),
+        "per-engine batcher depth gauge"
+    );
+    println!(
+        "round telemetry : {rounds} rounds, step_workers {step_workers}, \
+         last span {:.1}us",
+        pool_stats.get("round_span_us").unwrap().as_f64().unwrap_or(0.0)
     );
     println!("\npool state      : {pool_stats}");
     println!(

@@ -125,6 +125,16 @@ pub struct ServeConfig {
     /// chunks (decode cycles keep running) and counts a
     /// `prefill_deferrals` metric.
     pub quant_queue_soft_limit: usize,
+    /// Step workers per engine batcher: each engine's `StepBatcher` round
+    /// steps its sessions concurrently on this many workers (bit-identical
+    /// to serial rounds per session). 1 = serial rounds; 0 is rejected at
+    /// coordinator startup with an error — never silently clamped
+    /// (mirrors `pool.quant_workers`).
+    pub step_workers: usize,
+    /// Sessions one engine's step batcher multiplexes at once (its
+    /// round-robin capacity). More slots = more interleaving per engine;
+    /// admission control still bounds total KV pages.
+    pub batcher_slots: usize,
     /// Paged KV-cache pool (admission control + shared arena).
     /// `pool.pages == 0` disables pooling: sessions keep private,
     /// unaccounted cache state as in the original single-session path.
@@ -147,6 +157,8 @@ impl Default for ServeConfig {
             buckets: Vec::new(),
             prefill_chunk_tokens: 0,
             quant_queue_soft_limit: 32,
+            step_workers: 1,
+            batcher_slots: 4,
             pool: PoolConfig { pages: 0, ..PoolConfig::default() },
         }
     }
@@ -204,6 +216,14 @@ impl ServeConfig {
         }
         if let Some(v) = j.get("quant_queue_soft_limit").and_then(Json::as_usize) {
             c.quant_queue_soft_limit = v;
+        }
+        if let Some(v) = j.get("step_workers").and_then(Json::as_usize) {
+            // Deliberately NOT clamped: 0 must surface as a startup error
+            // from the coordinator, not be silently bumped to serial.
+            c.step_workers = v;
+        }
+        if let Some(v) = j.get("batcher_slots").and_then(Json::as_usize) {
+            c.batcher_slots = v.max(1);
         }
         if let Some(p) = j.get("pool") {
             if let Some(v) = p.get("pages").and_then(Json::as_usize) {
@@ -317,6 +337,21 @@ mod tests {
         let c = ServeConfig::from_json(&j).unwrap();
         assert_eq!(c.prefill_chunk_tokens, 256);
         assert_eq!(c.quant_queue_soft_limit, 4);
+    }
+
+    #[test]
+    fn parallel_round_knobs_from_json() {
+        let j = Json::parse(r#"{"step_workers":3,"batcher_slots":8}"#).unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.step_workers, 3);
+        assert_eq!(c.batcher_slots, 8);
+        // defaults: serial rounds, 4 slots per engine
+        let d = ServeConfig::default();
+        assert_eq!(d.step_workers, 1);
+        assert_eq!(d.batcher_slots, 4);
+        // 0 step workers propagates so the coordinator rejects it loudly
+        let j = Json::parse(r#"{"step_workers":0}"#).unwrap();
+        assert_eq!(ServeConfig::from_json(&j).unwrap().step_workers, 0);
     }
 
     #[test]

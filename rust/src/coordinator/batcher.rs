@@ -1,11 +1,38 @@
-//! Step-level continuous batcher.
+//! Step-level continuous batcher with parallel rounds.
 //!
-//! The router's engine pool runs whole requests; this batcher is the
+//! The router's engine pool used to run whole requests; this batcher is the
 //! vLLM-style alternative: one engine multiplexes many *active sessions*,
 //! interleaving one speculation cycle per session per scheduling round
 //! (round-robin). New sessions join between rounds, finished sessions
 //! retire immediately — so a long request no longer blocks a short one
 //! behind it (head-of-line blocking drops from O(request) to O(cycle)).
+//! The router embeds one `StepBatcher` per engine, so chunked admission,
+//! quant-pool backpressure, and parallel stepping all apply to real HTTP
+//! requests, not just the examples.
+//!
+//! # Parallel rounds
+//!
+//! With [`StepBatcher::with_step_workers`] ≥ 2, a round dispatches each
+//! session's step onto a dedicated `util::threadpool` pool
+//! (`scoped_submit` + [`WaitGroup`], caller-scoped — concurrent batchers
+//! never wait on each other's work) and reassembles results in round-robin
+//! order. This is safe AND bit-identical to serial rounds because
+//! sessions share no mutable state on the step path: each session's KV
+//! pages live in its own pool shard (`pool::SessionShard`, its own lock),
+//! the global page budget and traffic counters are atomics, and the
+//! session-manager mutex is only touched by control-plane edges (admit /
+//! release / evict / once-per-round telemetry). The parity is
+//! property-tested across randomized prefilling+decoding session mixes.
+//!
+//! A step that returns an error no longer poisons the round: the session
+//! is parked in [`StepBatcher::failed`] with its error and every other
+//! session keeps being served. (A step that *panics* is caught, reported
+//! as a failure, and the worker survives; the session itself is lost.)
+//!
+//! Round telemetry — `round_span_us` (wall span of the last round) and
+//! `step_workers_busy` (sessions actually stepped concurrently) — flows
+//! through [`StepBatcher::with_stats_sink`] into the session manager and
+//! from there to `/stats`, one manager-lock acquisition per round.
 //!
 //! # Chunked prefill
 //!
@@ -31,11 +58,11 @@
 //! counter). Deferral never stalls the batcher: it only applies while
 //! some session has decode work to run.
 //!
-//! Works over any `Decoder`, so it is fully tested against the mock; the
-//! serving path can opt in by embedding `StepBatcher` directly (see
-//! `examples/serve_longcontext`).
+//! Works over any `Decoder`, so it is fully tested against the mock.
 
 use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use anyhow::{ensure, Context, Result};
 
@@ -44,6 +71,7 @@ use crate::model::Decoder;
 use crate::pool::SharedSessionManager;
 use crate::spec::gamma::{CycleFeedback, FixedGamma, GammaController};
 use crate::spec::{Sampler, VerifyOutcome};
+use crate::util::threadpool::{PoolHandle, ThreadPool, WaitGroup};
 
 /// Where a session is in its lifecycle.
 enum Phase {
@@ -184,6 +212,11 @@ impl ActiveSession {
         !self.is_prefilling() && self.tokens.len() >= self.max_new
     }
 
+    /// The session's decoder (read-only: context length, memory report).
+    pub fn decoder(&self) -> &dyn Decoder {
+        self.decoder.as_ref()
+    }
+
     /// Run ONE unit of work: a prefill chunk while `Prefilling`, else one
     /// speculation cycle (or one AR step); returns tokens added.
     pub fn step(&mut self) -> Result<usize> {
@@ -292,7 +325,7 @@ impl QuantBackpressure {
     /// Probe the shared quantization pool of `mgr` and record deferrals
     /// into it (→ `/stats` `prefill_deferrals`). The probe holds a cloned
     /// [`crate::util::threadpool::PoolHandle`], so the per-round depth
-    /// read never touches the manager mutex (the KV hot path's lock);
+    /// read never touches the manager mutex (the control-plane lock);
     /// only an actual deferral locks it.
     pub fn for_pool(mgr: SharedSessionManager, soft_limit: usize) -> QuantBackpressure {
         let handle = mgr.lock().unwrap_or_else(|p| p.into_inner()).quant_handle();
@@ -326,14 +359,93 @@ impl QuantBackpressure {
     }
 }
 
+/// A session parked after its step failed: the batcher keeps serving
+/// everyone else; the embedder (router) reports the error to the caller
+/// and releases the session's resources.
+pub struct FailedSession {
+    pub id: u64,
+    pub error: anyhow::Error,
+    /// The parked session. `None` only when the step *panicked* — the
+    /// session state is gone, but the error is still reported and the
+    /// step worker survived.
+    pub session: Option<ActiveSession>,
+}
+
+/// Result of one dispatched step, reassembled in round-robin order.
+struct StepOutcome {
+    id: u64,
+    session: Option<ActiveSession>,
+    result: Result<usize>,
+}
+
+fn step_one(mut s: ActiveSession) -> StepOutcome {
+    let id = s.id;
+    let result = s.step();
+    StepOutcome { id, session: Some(s), result }
+}
+
+/// Per-session result slots for one parallel round (indexed by round-robin
+/// position).
+type StepSlots = Arc<Vec<Mutex<Option<StepOutcome>>>>;
+
+/// Fan the round's steps over the step pool; results land in fixed
+/// per-session slots so reassembly order is the round-robin order, not
+/// completion order — a precondition for serial-parity determinism (and
+/// for tests that compare `active` queues across configurations).
+fn step_parallel(pool: &PoolHandle, sessions: Vec<ActiveSession>) -> Vec<StepOutcome> {
+    let slots: StepSlots = Arc::new(sessions.iter().map(|_| Mutex::new(None)).collect());
+    let wg = WaitGroup::new();
+    for (i, s) in sessions.into_iter().enumerate() {
+        let slots = Arc::clone(&slots);
+        let id = s.id;
+        pool.scoped_submit(&wg, move || {
+            // A panicking step must not kill the worker thread or hang the
+            // wait group; the session is lost but the round completes.
+            let outcome =
+                match std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+                    step_one(s)
+                })) {
+                    Ok(o) => o,
+                    Err(_) => StepOutcome {
+                        id,
+                        session: None,
+                        result: Err(anyhow::anyhow!(
+                            "session {id}: step panicked; session state dropped"
+                        )),
+                    },
+                };
+            *slots[i].lock().unwrap_or_else(|p| p.into_inner()) = Some(outcome);
+        });
+    }
+    wg.wait();
+    Arc::try_unwrap(slots)
+        .unwrap_or_else(|_| unreachable!("wait group drained every step job"))
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .unwrap_or_else(|p| p.into_inner())
+                .expect("every step job fills its slot")
+        })
+        .collect()
+}
+
 /// Round-robin scheduler over active sessions with an admission bound.
 pub struct StepBatcher {
     pub max_active: usize,
     active: VecDeque<ActiveSession>,
     pub finished: Vec<ActiveSession>,
+    /// Sessions whose step errored (or panicked), parked with the error.
+    pub failed: Vec<FailedSession>,
     rounds: u64,
     backpressure: Option<QuantBackpressure>,
     prefill_deferrals: u64,
+    /// Step pool for parallel rounds; None = serial (`step_workers == 1`).
+    step_pool: Option<ThreadPool>,
+    step_workers: usize,
+    /// Once-per-round telemetry sink (→ `/stats` via the session manager).
+    stats_sink: Option<SharedSessionManager>,
+    last_round_span_us: f64,
+    last_busy: usize,
 }
 
 impl StepBatcher {
@@ -342,15 +454,41 @@ impl StepBatcher {
             max_active: max_active.max(1),
             active: VecDeque::new(),
             finished: Vec::new(),
+            failed: Vec::new(),
             rounds: 0,
             backpressure: None,
             prefill_deferrals: 0,
+            step_pool: None,
+            step_workers: 1,
+            stats_sink: None,
+            last_round_span_us: 0.0,
+            last_busy: 0,
         }
     }
 
     /// Enable quant-pool backpressure (see [`QuantBackpressure`]).
     pub fn with_backpressure(mut self, bp: QuantBackpressure) -> StepBatcher {
         self.backpressure = Some(bp);
+        self
+    }
+
+    /// Run rounds on `workers` step workers (a dedicated
+    /// `util::threadpool` pool named `qs-step-*`). 1 = serial rounds (no
+    /// pool is spawned); ≥ 2 dispatches sessions concurrently,
+    /// bit-identical to serial per session. 0 is rejected at the
+    /// coordinator boundary, never silently clamped — this builder
+    /// asserts, mirroring `pool.quant_workers`.
+    pub fn with_step_workers(mut self, workers: usize) -> StepBatcher {
+        assert!(workers >= 1, "step_workers must be >= 1 (1 = serial rounds)");
+        self.step_workers = workers;
+        self.step_pool = (workers >= 2).then(|| ThreadPool::named(workers, "qs-step"));
+        self
+    }
+
+    /// Report once-per-round telemetry (`round_span_us`,
+    /// `step_workers_busy`) into the session manager → `/stats`.
+    pub fn with_stats_sink(mut self, mgr: SharedSessionManager) -> StepBatcher {
+        self.stats_sink = Some(mgr);
         self
     }
 
@@ -373,6 +511,22 @@ impl StepBatcher {
         self.prefill_deferrals
     }
 
+    /// Configured step workers (1 = serial rounds).
+    pub fn step_workers(&self) -> usize {
+        self.step_workers
+    }
+
+    /// Wall-clock span of the last round, microseconds.
+    pub fn last_round_span_us(&self) -> f64 {
+        self.last_round_span_us
+    }
+
+    /// Sessions stepped concurrently in the last round
+    /// (min(step_workers, sessions stepped)).
+    pub fn last_step_workers_busy(&self) -> usize {
+        self.last_busy
+    }
+
     /// Admit a session into the round-robin. Errors (instead of aborting
     /// the process) on over-capacity admission: the batcher is embedded in
     /// router/server contexts where a caller bug must surface as a clean
@@ -389,9 +543,12 @@ impl StepBatcher {
     }
 
     /// One scheduling round: each active session advances one unit of work
-    /// (a prefill chunk or a speculation cycle); finished sessions retire.
-    /// Under quant-pool backpressure, prefill chunks are deferred for the
-    /// round while decode work exists. Returns tokens produced this round.
+    /// (a prefill chunk or a speculation cycle); finished sessions retire;
+    /// sessions whose step errors are parked in [`StepBatcher::failed`]
+    /// (the rest keep being served). With step workers ≥ 2, sessions step
+    /// concurrently — bit-identical per session to a serial round. Under
+    /// quant-pool backpressure, prefill chunks are deferred for the round
+    /// while decode work exists. Returns tokens produced this round.
     pub fn round(&mut self) -> Result<usize> {
         self.rounds += 1;
         // Probe once per round. Deferral only applies while some session
@@ -400,32 +557,58 @@ impl StepBatcher {
         let has_decode = self.active.iter().any(|s| !s.is_prefilling());
         let defer_prefill =
             has_decode && self.backpressure.as_ref().is_some_and(|bp| bp.over_limit());
-        let mut produced = 0;
         let mut deferred = 0u64;
+        let mut to_step: Vec<ActiveSession> = Vec::with_capacity(self.active.len());
         for _ in 0..self.active.len() {
-            let mut s = self.active.pop_front().expect("non-empty");
+            let s = self.active.pop_front().expect("non-empty");
             if defer_prefill && s.is_prefilling() {
                 deferred += 1;
                 self.active.push_back(s);
                 continue;
             }
-            produced += s.step()?;
-            if s.done() {
-                self.finished.push(s);
-            } else {
-                self.active.push_back(s);
+            to_step.push(s);
+        }
+        let stepped = to_step.len();
+        let t0 = Instant::now();
+        let outcomes = match &self.step_pool {
+            Some(pool) if stepped >= 2 => step_parallel(&pool.handle(), to_step),
+            _ => to_step.into_iter().map(step_one).collect(),
+        };
+        let span_us = t0.elapsed().as_secs_f64() * 1e6;
+        let mut produced = 0usize;
+        for o in outcomes {
+            match (o.session, o.result) {
+                (Some(s), Ok(n)) => {
+                    produced += n;
+                    if s.done() {
+                        self.finished.push(s);
+                    } else {
+                        self.active.push_back(s);
+                    }
+                }
+                (session, Err(error)) => {
+                    self.failed.push(FailedSession { id: o.id, error, session });
+                }
+                (None, Ok(_)) => unreachable!("a panicked step reports an error"),
             }
         }
+        self.last_round_span_us = span_us;
+        self.last_busy = stepped.min(self.step_workers);
         if deferred > 0 {
             self.prefill_deferrals += deferred;
             if let Some(bp) = &self.backpressure {
                 bp.note_deferrals(deferred);
             }
         }
+        if let Some(mgr) = &self.stats_sink {
+            mgr.lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .note_round(span_us, self.last_busy, self.step_workers);
+        }
         Ok(produced)
     }
 
-    /// Drive until everything currently admitted finishes.
+    /// Drive until everything currently admitted finishes (or fails).
     pub fn drain(&mut self) -> Result<()> {
         while !self.active.is_empty() {
             self.round()?;
@@ -470,6 +653,12 @@ mod tests {
     }
 
     #[test]
+    fn active_session_is_send() {
+        fn assert_send<T: Send>() {}
+        assert_send::<ActiveSession>();
+    }
+
+    #[test]
     fn single_session_matches_engine_output() {
         // The step batcher must produce exactly what SpecEngine produces.
         let mut b = StepBatcher::new(4);
@@ -504,11 +693,11 @@ mod tests {
         }
     }
 
-    /// Tentpole acceptance: a 4k-token prompt admitted alongside active
-    /// decode sessions advances at most `chunk` prefill tokens per round
-    /// (no round does O(prompt) prefill work), and a short decode request
-    /// admitted at the same time finishes in ~its own number of rounds —
-    /// no head-of-line blocking behind the huge prefill.
+    /// A 4k-token prompt admitted alongside active decode sessions
+    /// advances at most `chunk` prefill tokens per round (no round does
+    /// O(prompt) prefill work), and a short decode request admitted at the
+    /// same time finishes in ~its own number of rounds — no head-of-line
+    /// blocking behind the huge prefill.
     #[test]
     fn huge_prefill_interleaves_without_hol_blocking() {
         let chunk = 64usize;
@@ -606,6 +795,114 @@ mod tests {
         assert!(js.contains("\"prefill_deferrals\""), "{js}");
     }
 
+    /// Round telemetry flows through the stats sink: one `note_round` per
+    /// round, carrying the configured workers and last-round busy count.
+    #[test]
+    fn round_telemetry_reaches_stats_sink() {
+        use crate::pool::{shared, PoolConfig};
+        let mgr = shared(PoolConfig { pages: 8, ..PoolConfig::default() }).unwrap();
+        let mut b = StepBatcher::new(4)
+            .with_step_workers(2)
+            .with_stats_sink(mgr.clone());
+        b.admit(mock_session(1, 6, 0.0, 2)).unwrap();
+        b.admit(mock_session(2, 6, 0.0, 2)).unwrap();
+        b.round().unwrap();
+        assert_eq!(b.last_step_workers_busy(), 2);
+        assert!(b.last_round_span_us() > 0.0);
+        let m = mgr.lock().unwrap();
+        let (workers, busy, span, rounds) = m.round_stats();
+        assert_eq!((workers, busy, rounds), (2, 2, 1));
+        assert!(span > 0.0);
+        let js = m.stats_json().to_string();
+        assert!(js.contains("\"round_span_us\""), "{js}");
+        assert!(js.contains("\"step_workers\""), "{js}");
+    }
+
+    /// Satellite regression: a session whose step errors mid-round is
+    /// parked in `failed` WITH its error — not silently dropped — and the
+    /// other sessions keep being served to completion. Before the fix the
+    /// popped session vanished: neither re-queued nor recorded.
+    #[test]
+    fn failing_session_is_parked_not_dropped() {
+        /// Errors on the N-th draft step.
+        struct FailAfter {
+            inner: MockDecoder,
+            steps_left: usize,
+        }
+        impl Decoder for FailAfter {
+            fn vocab(&self) -> usize {
+                self.inner.vocab()
+            }
+            fn gamma_max(&self) -> usize {
+                self.inner.gamma_max()
+            }
+            fn method(&self) -> Method {
+                self.inner.method()
+            }
+            fn prefill(&mut self, t: &[i32]) -> Result<Vec<f32>> {
+                self.inner.prefill(t)
+            }
+            fn begin_cycle(&mut self) {
+                self.inner.begin_cycle()
+            }
+            fn draft_step(&mut self, t: i32) -> Result<Vec<f32>> {
+                if self.steps_left == 0 {
+                    anyhow::bail!("injected device fault");
+                }
+                self.steps_left -= 1;
+                self.inner.draft_step(t)
+            }
+            fn verify(&mut self, t: &[i32]) -> Result<Vec<Vec<f32>>> {
+                self.inner.verify(t)
+            }
+            fn commit(&mut self, a: usize, v: usize) -> Result<()> {
+                self.inner.commit(a, v)
+            }
+            fn ar_step(&mut self, t: i32) -> Result<Vec<f32>> {
+                self.inner.ar_step(t)
+            }
+            fn context_len(&self) -> usize {
+                self.inner.context_len()
+            }
+            fn memory(&self) -> crate::cache::MemoryReport {
+                self.inner.memory()
+            }
+            fn timings(&self) -> crate::model::PhaseTimings {
+                self.inner.timings()
+            }
+        }
+        for workers in [1usize, 2] {
+            let mut b = StepBatcher::new(4).with_step_workers(workers);
+            let flaky = ActiveSession::admit(
+                1,
+                Box::new(FailAfter {
+                    inner: MockDecoder::new(64, 7, 0.0),
+                    steps_left: 5,
+                }),
+                Sampler::new(0.0, 1),
+                3,
+                &[1, 2, 3],
+                40,
+            )
+            .unwrap();
+            b.admit(flaky).unwrap();
+            b.admit(mock_session(2, 12, 0.1, 3)).unwrap();
+            b.admit(mock_session(3, 9, 0.1, 3)).unwrap();
+            b.drain().unwrap();
+            assert_eq!(b.failed.len(), 1, "workers={workers}");
+            let f = &b.failed[0];
+            assert_eq!(f.id, 1);
+            assert!(f.error.to_string().contains("injected device fault"));
+            let parked = f.session.as_ref().expect("session parked, not lost");
+            assert!(!parked.tokens.is_empty(), "partial progress preserved");
+            // the healthy sessions were unaffected
+            assert_eq!(b.finished.len(), 2, "workers={workers}");
+            for s in &b.finished {
+                assert_eq!(s.tokens.len(), s.max_new);
+            }
+        }
+    }
+
     /// Regression (satellite): over-capacity admission is a clean error,
     /// not a process-aborting panic, and the batcher keeps serving.
     #[test]
@@ -642,7 +939,7 @@ mod tests {
                 }
                 assert_eq!(s.tokens.len(), max_new);
                 assert_eq!(
-                    s.decoder.context_len() + 1,
+                    s.decoder().context_len() + 1,
                     prompt.len() + s.tokens.len(),
                     "gamma={gamma} max_new={max_new}"
                 );
@@ -695,6 +992,21 @@ mod tests {
         }
     }
 
+    /// Parallel rounds retire every session with its exact budget, same
+    /// as serial (the cheap smoke version of the parity property below).
+    #[test]
+    fn parallel_rounds_complete_all_sessions() {
+        let mut b = StepBatcher::new(8).with_step_workers(4);
+        for i in 0..8 {
+            b.admit(mock_session(i, 12 + i as usize, 0.3, 3)).unwrap();
+        }
+        b.drain().unwrap();
+        assert_eq!(b.finished.len(), 8);
+        for s in &b.finished {
+            assert_eq!(s.tokens.len(), s.max_new);
+        }
+    }
+
     #[test]
     fn adaptive_gamma_session_runs() {
         let dec = Box::new(MockDecoder::new(64, 7, 0.15));
@@ -707,6 +1019,150 @@ mod tests {
         let s = b.finished.pop().unwrap();
         assert_eq!(s.tokens.len(), 60);
         assert!(s.drafted > 0 && s.accepted > 0);
+    }
+
+    /// Tentpole acceptance (bit-parity): for randomized session mixes —
+    /// prefilling (chunked) and decoding sessions over POOLED decoders,
+    /// with a deterministic backpressure schedule forcing deferrals — a
+    /// parallel batcher (2–4 step workers) produces exactly what the
+    /// serial batcher produces: identical per-session token streams,
+    /// drafted/accepted counts, page counts, `cache_host`/`cache_logical`
+    /// accounting, quant-job totals, and deferral counts.
+    #[test]
+    fn prop_parallel_rounds_bit_identical_to_serial() {
+        use crate::costmodel::memory::pool_pages_for_request;
+        use crate::model::{mock_fb, MOCK_GAMMA_MAX, MOCK_VOCAB};
+        use crate::pool::{shared, PoolConfig, SharedSessionManager};
+        use crate::util::prop::{check, Config};
+        use std::sync::atomic::{AtomicUsize, Ordering};
+
+        const G: usize = 8;
+        const D: usize = 2;
+
+        struct RunResult {
+            tokens: Vec<(u64, Vec<i32>)>,
+            counts: Vec<(u64, u64, u64)>,
+            pages_in_use: usize,
+            cache_host: usize,
+            cache_logical: usize,
+            quant_jobs: u64,
+            deferrals: u64,
+        }
+
+        fn run(seeds: &[u64], workers: usize) -> RunResult {
+            let mgr: SharedSessionManager = shared(PoolConfig {
+                pages: 512,
+                page_tokens: G,
+                kv_dim: D,
+                high_watermark: 1.0,
+                low_watermark: 1.0,
+                quant_workers: 2,
+            })
+            .unwrap();
+            // deterministic backpressure: pressure on 2 of every 5 probes,
+            // independent of wall clock or thread timing
+            let calls = AtomicUsize::new(0);
+            let bp = QuantBackpressure::with_probe(
+                Box::new(move || {
+                    if calls.fetch_add(1, Ordering::Relaxed) % 5 < 2 {
+                        100
+                    } else {
+                        0
+                    }
+                }),
+                8,
+            );
+            let mut b = StepBatcher::new(seeds.len().max(1))
+                .with_step_workers(workers)
+                .with_backpressure(bp);
+            let fb = mock_fb(G, MOCK_GAMMA_MAX);
+            for (i, &seed) in seeds.iter().enumerate() {
+                let id = i as u64 + 1;
+                let prompt_len = 17 + (seed % 40) as usize;
+                let max_new = 5 + (seed % 25) as usize;
+                let gamma = 1 + (seed % 4) as usize;
+                let prompt: Vec<i32> =
+                    (0..prompt_len).map(|t| ((t as u64 * 7 + seed) % 64) as i32).collect();
+                let pages = pool_pages_for_request(prompt_len, max_new, G, fb);
+                let cap = (pages - fb.div_ceil(G)) * G;
+                assert_eq!(
+                    mgr.lock().unwrap().admit(id, pages, false).unwrap(),
+                    crate::pool::AdmitOutcome::Admitted
+                );
+                let dec = Box::new(
+                    MockDecoder::with_pool(
+                        MOCK_VOCAB,
+                        MOCK_GAMMA_MAX,
+                        0.2,
+                        mgr.clone(),
+                        id,
+                        cap,
+                    )
+                    .unwrap(),
+                );
+                let sampler = Sampler::new(0.0, id);
+                // mix: half the sessions prefill chunked (still Prefilling
+                // at round 1 -> exercises deferrals), half monolithic
+                let s = if seed % 2 == 0 {
+                    ActiveSession::admit_chunked(
+                        id,
+                        dec,
+                        sampler,
+                        gamma,
+                        &prompt,
+                        max_new,
+                        3 + (seed % 5) as usize,
+                    )
+                } else {
+                    ActiveSession::admit(id, dec, sampler, gamma, &prompt, max_new).unwrap()
+                };
+                b.admit(s).unwrap();
+            }
+            b.drain().unwrap();
+            assert!(b.failed.is_empty());
+            let mut tokens: Vec<(u64, Vec<i32>)> =
+                b.finished.iter().map(|s| (s.id, s.tokens.clone())).collect();
+            tokens.sort_by_key(|(id, _)| *id);
+            let mut counts: Vec<(u64, u64, u64)> =
+                b.finished.iter().map(|s| (s.id, s.drafted, s.accepted)).collect();
+            counts.sort_by_key(|(id, _, _)| *id);
+            let m = mgr.lock().unwrap();
+            let rep = m.memory_report();
+            let (_, jobs, _) = m.quant_pool_stats();
+            RunResult {
+                tokens,
+                counts,
+                pages_in_use: m.pool().pages_in_use(),
+                cache_host: rep.cache_host,
+                cache_logical: rep.cache_logical,
+                quant_jobs: jobs,
+                deferrals: b.prefill_deferrals(),
+            }
+        }
+
+        check::<Vec<u64>, _>(
+            Config { cases: 6, size: 6, ..Config::default() },
+            |seeds| {
+                if seeds.is_empty() {
+                    return true;
+                }
+                let serial = run(seeds, 1);
+                for workers in [2usize, 4] {
+                    let par = run(seeds, workers);
+                    if par.tokens != serial.tokens
+                        || par.counts != serial.counts
+                        || par.pages_in_use != serial.pages_in_use
+                        || par.cache_host != serial.cache_host
+                        || par.cache_logical != serial.cache_logical
+                        || par.quant_jobs != serial.quant_jobs
+                        || par.deferrals != serial.deferrals
+                    {
+                        return false;
+                    }
+                }
+                true
+            },
+        );
     }
 
     /// Property: any admission pattern within capacity completes all

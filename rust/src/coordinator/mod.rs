@@ -1,9 +1,12 @@
 //! The serving coordinator: request router, continuous batcher, HTTP API.
 //!
-//! vLLM-router-shaped: an admission queue feeds a pool of decode engines
-//! (worker threads, each owning its own sessions); the router picks the
-//! context bucket, pads the prompt, and sheds load when the queue is full.
-//! Python never runs here — engines call the AOT artifacts via `runtime`.
+//! vLLM-router-shaped: an admission queue feeds a pool of decode engines;
+//! each engine worker embeds a [`batcher::StepBatcher`] multiplexing up to
+//! `batcher_slots` sessions (chunked prefill admission, quant-pool
+//! backpressure, and `step_workers`-way parallel rounds over the sharded
+//! KV pool). The router picks the context bucket, pads the prompt, and
+//! sheds load when the queue is full. Python never runs here — engines
+//! call the AOT artifacts via `runtime`.
 
 pub mod batcher;
 pub mod router;

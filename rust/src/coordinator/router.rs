@@ -1,5 +1,16 @@
 //! Router + continuous batcher.
 //!
+//! Each engine worker embeds a [`StepBatcher`]: instead of running whole
+//! requests back to back, an engine multiplexes up to `batcher_slots`
+//! sessions, advancing each one unit of work per scheduling round —
+//! chunked prefill admission (`prefill_chunk_tokens`), quant-pool
+//! backpressure, and parallel stepping (`step_workers`) therefore all
+//! apply to real HTTP requests, not just the examples. Outputs are
+//! bit-identical to the old run-to-completion path: an `ActiveSession`
+//! with a fixed γ produces exactly what `SpecEngine` produces, chunked
+//! prefill is output-invisible, and parallel rounds are property-tested
+//! equal to serial rounds.
+//!
 //! When the paged KV pool is enabled (`cfg.pool.pages > 0`) the router runs
 //! admission control against it: every request gets a cost-model page
 //! reservation; a reservation that can never fit is failed cleanly, one
@@ -7,21 +18,23 @@
 //! LRU eviction of a preemptable session) frees pages — the pool never
 //! overcommits, so concurrent long-context sessions cannot OOM each other.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::config::{Method, ServeConfig};
+use crate::coordinator::batcher::{ActiveSession, QuantBackpressure, StepBatcher};
 use crate::costmodel::memory::pool_pages_for_request;
-use crate::metrics::Registry;
+use crate::metrics::{names, Registry};
 use crate::model::{mock_fb, Decoder, MockDecoder, MOCK_GAMMA_MAX, MOCK_VOCAB};
 use crate::pool::{self, AdmitOutcome, SharedSessionManager};
 use crate::runtime::{Runtime, WeightSet, Weights};
-use crate::spec::{Sampler, SpecEngine};
+use crate::spec::gamma::AimdGamma;
+use crate::spec::Sampler;
 use crate::util::now_secs;
 
 /// Marker prefix for admission rejections that are the *client's* size
@@ -40,6 +53,16 @@ pub struct RequestSpec {
 }
 
 /// Completed generation.
+///
+/// Timing semantics under continuous batching: `prefill_secs` /
+/// `decode_secs` are WALL time across the engine's shared scheduling
+/// rounds (admission → prefill completion → finish), so a request that
+/// decodes alongside other sessions in the same batcher reports elapsed
+/// time, not exclusive compute time — `decode_tokens_per_sec` is
+/// per-request *delivered* throughput (it shrinks as an engine multiplexes
+/// more sessions even though aggregate throughput grows). The pre-batcher
+/// router measured exclusive per-request time; compare histograms across
+/// that change accordingly.
 #[derive(Debug, Clone)]
 pub struct ResponseOut {
     pub id: u64,
@@ -95,6 +118,10 @@ impl Coordinator {
     }
 
     fn start(cfg: ServeConfig, backend: EngineBackend) -> Result<Coordinator> {
+        ensure!(
+            cfg.step_workers >= 1,
+            "step_workers must be >= 1 (use 1 for serial batcher rounds)"
+        );
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
             cv: Condvar::new(),
@@ -204,13 +231,10 @@ impl Coordinator {
 
     /// Backpressure policy for an embedded `StepBatcher`, built from this
     /// coordinator's pool and its `quant_queue_soft_limit` knob (None when
-    /// pooling is disabled). The engine-pool serving path does not embed a
-    /// batcher yet (ROADMAP follow-up); examples and benches wire this
-    /// into theirs so the config knob is the single source of the limit.
-    pub fn quant_backpressure(
-        &self,
-    ) -> Option<crate::coordinator::batcher::QuantBackpressure> {
-        use crate::coordinator::batcher::QuantBackpressure;
+    /// pooling is disabled). The engine workers build the same policy for
+    /// their own batchers; examples and benches wire this into theirs so
+    /// the config knob is the single source of the limit.
+    pub fn quant_backpressure(&self) -> Option<QuantBackpressure> {
         self.pool
             .as_ref()
             .map(|mgr| QuantBackpressure::for_pool(mgr.clone(), self.cfg.quant_queue_soft_limit))
@@ -253,7 +277,6 @@ impl Drop for Coordinator {
 }
 
 fn sync_pool_gauges(mgr: &SharedSessionManager, metrics: &Registry) {
-    use crate::metrics::names;
     let m = mgr.lock().unwrap();
     metrics.set_gauge("pool_pages_capacity", m.pool().capacity() as f64);
     metrics.set_gauge("pool_pages_in_use", m.pool().pages_in_use() as f64);
@@ -274,6 +297,12 @@ fn sync_pool_gauges(mgr: &SharedSessionManager, metrics: &Registry) {
     metrics.set_gauge(names::QUANT_POOL_QUEUE_DEPTH, q_depth as f64);
     // prefill chunks deferred under quant-pool backpressure
     metrics.set_gauge(names::PREFILL_DEFERRALS, m.prefill_deferrals() as f64);
+    // round-parallelism telemetry recorded by the engines' batchers
+    let (workers, busy, span_us, rounds) = m.round_stats();
+    metrics.set_gauge(names::STEP_WORKERS, workers as f64);
+    metrics.set_gauge(names::STEP_WORKERS_BUSY, busy as f64);
+    metrics.set_gauge(names::ROUND_SPAN_US, span_us);
+    metrics.set_gauge(names::BATCHER_ROUNDS, rounds as f64);
 }
 
 /// Pool geometry plan for one mock request. Reservation (admission) and
@@ -302,33 +331,67 @@ enum Admission {
     Reject(String),
 }
 
+/// Per-session serving metadata while the session lives in a batcher.
+struct Inflight {
+    done: mpsc::Sender<Result<ResponseOut, String>>,
+    queue_secs: f64,
+    admitted_at: Instant,
+    /// Set the first time the session is observed past its prefill phase.
+    prefill_done_at: Option<Instant>,
+    bucket: usize,
+}
+
+/// One engine worker: a step batcher multiplexing up to
+/// `cfg.batcher_slots` sessions, admitting from the shared queue between
+/// rounds. Admission is strictly FIFO: a large-but-admissible request at
+/// the head waits for releases while already-admitted sessions keep
+/// decoding, so a stream of small arrivals can never starve it. Peek,
+/// pool-admit and pop happen under the queue lock (queue → pool lock
+/// order, same as submit), so two workers cannot race for one job.
 fn engine_loop(
-    _wid: usize,
+    wid: usize,
     cfg: ServeConfig,
     shared: Arc<Shared>,
     metrics: Arc<Registry>,
     backend: Arc<EngineBackend>,
     pool: Option<SharedSessionManager>,
 ) {
+    let mut batcher =
+        StepBatcher::new(cfg.batcher_slots.max(1)).with_step_workers(cfg.step_workers);
+    if let Some(mgr) = &pool {
+        batcher = batcher
+            .with_backpressure(QuantBackpressure::for_pool(
+                mgr.clone(),
+                cfg.quant_queue_soft_limit,
+            ))
+            .with_stats_sink(mgr.clone());
+    }
+    let mut inflight: HashMap<u64, Inflight> = HashMap::new();
+    let depth_gauge = names::engine_batcher_depth(wid);
     loop {
-        // Pop the head job, admitting it against the paged pool first.
-        // Admission is strictly FIFO: a large-but-admissible request at
-        // the head waits for releases with every worker parked behind it,
-        // so a stream of small arrivals can never starve it. Peek, admit
-        // and pop happen under the queue lock (queue → pool lock order,
-        // same as submit), so two workers cannot race for one job.
-        let (job, admission) = {
+        let stopping = shared.stop.load(Ordering::Relaxed);
+        // ---- admission: pull admissible head jobs into free slots -------
+        let mut popped: Vec<Queued> = Vec::new();
+        let mut rejected: Vec<(Queued, String)> = Vec::new();
+        if !stopping {
             let mut q = shared.queue.lock().unwrap();
             loop {
                 if shared.stop.load(Ordering::Relaxed) {
-                    return;
+                    break;
+                }
+                if batcher.active_len() + popped.len() >= batcher.max_active {
+                    break;
                 }
                 let head = q
                     .front()
                     .map(|j| (j.spec.id, j.spec.prompt.len(), j.spec.max_new_tokens));
                 let Some((id, prompt_len, max_new)) = head else {
-                    q = shared.cv.wait(q).unwrap();
-                    continue;
+                    if batcher.active_len() + popped.len() == 0 {
+                        // fully idle: park until work (or stop) arrives
+                        q = shared.cv.wait(q).unwrap();
+                        continue;
+                    }
+                    break; // keep stepping the sessions we already have
                 };
                 let decision = match &pool {
                     None => Admission::Run,
@@ -346,68 +409,179 @@ fn engine_loop(
                                 ))
                             }
                             Ok(AdmitOutcome::Saturated) => {
-                                // Wait (bounded) for a release to free
-                                // pages; the job stays at the queue head.
-                                // Counter counts 5 ms polls, not jobs.
-                                metrics.incr("pool_admission_wait_polls", 1);
-                                q = shared
-                                    .cv
-                                    .wait_timeout(q, Duration::from_millis(5))
-                                    .unwrap()
-                                    .0;
-                                continue;
+                                if batcher.active_len() + popped.len() == 0 {
+                                    // Nothing to step: wait (bounded) for a
+                                    // release. Counter counts 5 ms polls.
+                                    metrics.incr("pool_admission_wait_polls", 1);
+                                    q = shared
+                                        .cv
+                                        .wait_timeout(q, Duration::from_millis(5))
+                                        .unwrap()
+                                        .0;
+                                    continue;
+                                }
+                                // Active sessions exist: keep decoding;
+                                // their releases will free pages.
+                                break;
                             }
                             Err(e) => Admission::Reject(format!("{e:#}")),
                         }
                     }
                 };
-                break (q.pop_front().expect("peeked head"), decision);
+                let job = q.pop_front().expect("peeked head");
+                match decision {
+                    Admission::Run => popped.push(job),
+                    Admission::Reject(msg) => rejected.push((job, msg)),
+                }
             }
-        };
-        if let Admission::Reject(msg) = admission {
+        }
+        if stopping && batcher.active_len() == 0 {
+            return; // in-flight work drained; still-queued jobs fail at drop
+        }
+        for (job, msg) in rejected {
             metrics.incr("requests_failed", 1);
             let _ = job.done.send(Err(msg));
+        }
+        // ---- build sessions (outside the queue lock) --------------------
+        for job in popped {
+            let queue_secs = now_secs() - job.enqueued_at;
+            metrics.histogram("queue_wait").record_secs(queue_secs);
+            match build_session(&cfg, &backend, &job.spec, pool.as_ref()) {
+                Ok((sess, bucket)) => {
+                    let id = sess.id;
+                    batcher.admit(sess).expect("slot was counted during admission");
+                    inflight.insert(
+                        id,
+                        Inflight {
+                            done: job.done,
+                            queue_secs,
+                            admitted_at: Instant::now(),
+                            prefill_done_at: None,
+                            bucket,
+                        },
+                    );
+                }
+                Err(e) => {
+                    release_pool_session(pool.as_ref(), &shared, &metrics, job.spec.id);
+                    metrics.incr("requests_failed", 1);
+                    let _ = job.done.send(Err(format!("{e:#}")));
+                }
+            }
+        }
+        // ---- one scheduling round ---------------------------------------
+        if batcher.active_len() == 0 {
             continue;
         }
-        let queue_secs = now_secs() - job.enqueued_at;
-        metrics.histogram("queue_wait").record_secs(queue_secs);
-        let result =
-            run_request(&cfg, &backend, &job.spec, queue_secs, &metrics, pool.as_ref());
-        if let Some(mgr) = &pool {
-            mgr.lock().unwrap().release(job.spec.id);
-            sync_pool_gauges(mgr, &metrics);
-            // Wake workers parked on Saturated admissions.
-            shared.cv.notify_all();
-        }
-        match &result {
-            Ok(r) => {
-                metrics.incr("requests_completed", 1);
-                metrics.incr("tokens_generated", r.tokens.len() as u64);
-                metrics.histogram("prefill").record_secs(r.prefill_secs);
-                metrics.histogram("decode").record_secs(r.decode_secs);
-                metrics
-                    .histogram("e2e")
-                    .record_secs(r.prefill_secs + r.decode_secs + r.queue_secs);
+        batcher.round().expect("round parks failures; it does not error");
+        let now = Instant::now();
+        for s in batcher.active_sessions() {
+            if !s.is_prefilling() {
+                if let Some(inf) = inflight.get_mut(&s.id) {
+                    inf.prefill_done_at.get_or_insert(now);
+                }
             }
-            Err(_) => metrics.incr("requests_failed", 1),
         }
-        let _ = job.done.send(result.map_err(|e| format!("{e:#}")));
+        // Round telemetry: with a pool, the manager snapshot (note_round →
+        // sync_pool_gauges) is the ONE writer of the step/round gauges;
+        // only unpooled coordinators write them directly here. The
+        // per-engine depth gauge has no manager mirror, so it is always
+        // written directly.
+        if pool.is_none() {
+            metrics.set_gauge(names::STEP_WORKERS, batcher.step_workers() as f64);
+            metrics.set_gauge(
+                names::STEP_WORKERS_BUSY,
+                batcher.last_step_workers_busy() as f64,
+            );
+            metrics.set_gauge(names::ROUND_SPAN_US, batcher.last_round_span_us());
+        }
+        metrics.set_gauge(&depth_gauge, batcher.active_len() as f64);
+        // ---- retire ------------------------------------------------------
+        for s in batcher.finished.drain(..) {
+            let Some(inf) = inflight.remove(&s.id) else { continue };
+            respond_finished(s, inf, &metrics, pool.as_ref(), &shared);
+        }
+        for f in batcher.failed.drain(..) {
+            let Some(inf) = inflight.remove(&f.id) else { continue };
+            drop(f.session); // decoder resources go before the pool release
+            release_pool_session(pool.as_ref(), &shared, &metrics, f.id);
+            metrics.incr("requests_failed", 1);
+            let _ = inf.done.send(Err(format!("{:#}", f.error)));
+        }
     }
 }
 
-fn run_request(
+/// Release one request's pool reservation (no-op when pooling is off),
+/// refresh the gauges, and wake workers parked on Saturated admissions —
+/// the ONE release sequence shared by the finished, failed, and
+/// build-error paths.
+fn release_pool_session(
+    pool: Option<&SharedSessionManager>,
+    shared: &Shared,
+    metrics: &Registry,
+    id: u64,
+) {
+    if let Some(mgr) = pool {
+        mgr.lock().unwrap().release(id);
+        sync_pool_gauges(mgr, metrics);
+        shared.cv.notify_all();
+    }
+}
+
+/// Build the response for a finished session and release its resources.
+fn respond_finished(
+    mut s: ActiveSession,
+    inf: Inflight,
+    metrics: &Registry,
+    pool: Option<&SharedSessionManager>,
+    shared: &Shared,
+) {
+    let now = Instant::now();
+    let prefill_done = inf.prefill_done_at.unwrap_or(now);
+    let prefill_secs = prefill_done.duration_since(inf.admitted_at).as_secs_f64();
+    let decode_secs = now.duration_since(prefill_done).as_secs_f64();
+    let acceptance_rate = if s.drafted == 0 {
+        0.0
+    } else {
+        s.accepted as f64 / s.drafted as f64
+    };
+    metrics.incr("drafted", s.drafted);
+    metrics.incr("accepted", s.accepted);
+    metrics.incr("requests_completed", 1);
+    metrics.incr("tokens_generated", s.tokens.len() as u64);
+    metrics.histogram("prefill").record_secs(prefill_secs);
+    metrics.histogram("decode").record_secs(decode_secs);
+    metrics
+        .histogram("e2e")
+        .record_secs(prefill_secs + decode_secs + inf.queue_secs);
+    let id = s.id;
+    let tokens = std::mem::take(&mut s.tokens);
+    // decode-phase tokens only: the first reported token is sampled from
+    // the prefill logits (see `GenResult::decode_tokens`)
+    let decode_tokens = tokens.len().saturating_sub(1);
+    drop(s); // decoder resources go before the pool release
+    release_pool_session(pool, shared, metrics, id);
+    let _ = inf.done.send(Ok(ResponseOut {
+        id,
+        tokens,
+        bucket: inf.bucket,
+        acceptance_rate,
+        prefill_secs,
+        decode_secs,
+        decode_tokens_per_sec: decode_tokens as f64 / decode_secs.max(1e-9),
+        queue_secs: inf.queue_secs,
+    }));
+}
+
+/// Construct the request's decoder (XLA session or pooled/plain mock) and
+/// pick its context bucket. Shared by every engine worker.
+fn build_decoder(
     cfg: &ServeConfig,
     backend: &EngineBackend,
     spec: &RequestSpec,
-    queue_secs: f64,
-    metrics: &Registry,
     pool: Option<&SharedSessionManager>,
-) -> Result<ResponseOut> {
-    let method = spec.method.unwrap_or(cfg.method);
-    let gamma = spec.gamma.unwrap_or(cfg.gamma);
-    let t_all = Instant::now();
-
-    let (mut decoder, bucket): (Box<dyn Decoder>, usize) = match backend {
+    method: Method,
+) -> Result<(Box<dyn Decoder>, usize)> {
+    match backend {
         EngineBackend::Xla { rt, w_fp, w_q4 } => {
             let bucket = rt
                 .manifest
@@ -427,7 +601,7 @@ fn run_request(
                 Arc::clone(w_fp),
                 Arc::clone(w_q4),
             )?;
-            (Box::new(session), bucket)
+            Ok((Box::new(session), bucket))
         }
         EngineBackend::Mock { draft_err } => {
             let mut m = match pool {
@@ -447,88 +621,43 @@ fn run_request(
                 None => MockDecoder::new(MOCK_VOCAB, MOCK_GAMMA_MAX, *draft_err),
             };
             m.force_method(method);
-            (Box::new(m), spec.prompt.len().max(1))
+            Ok((Box::new(m), spec.prompt.len().max(1)))
         }
-    };
+    }
+}
 
+/// Build the batcher session for one request: decoder + padded prompt +
+/// seeded sampler, admitted in `Prefilling` state (chunked when
+/// `prefill_chunk_tokens` is set, otherwise the whole prompt as one
+/// first-round chunk) so prefill work runs inside scheduling rounds.
+/// With `adaptive_gamma`, γ is AIMD-controlled as before.
+fn build_session(
+    cfg: &ServeConfig,
+    backend: &EngineBackend,
+    spec: &RequestSpec,
+    pool: Option<&SharedSessionManager>,
+) -> Result<(ActiveSession, usize)> {
+    let method = spec.method.unwrap_or(cfg.method);
+    let gamma = spec.gamma.unwrap_or(cfg.gamma);
+    let (decoder, bucket) = build_decoder(cfg, backend, spec, pool, method)?;
+    let gmax = decoder.gamma_max();
     // Pad / truncate the prompt to the bucket (left-pad with newline 0x0A;
     // long prompts keep their tail — the recent context matters most).
     let prompt = pad_prompt(&spec.prompt, bucket, matches!(backend, EngineBackend::Xla { .. }));
-
     let sampler = Sampler::new(cfg.sampling.temperature, cfg.sampling.seed ^ spec.id);
+    let mut sess = ActiveSession::admit_chunked(
+        spec.id,
+        decoder,
+        sampler,
+        gamma,
+        &prompt,
+        spec.max_new_tokens,
+        cfg.prefill_chunk_tokens,
+    );
     if cfg.adaptive_gamma && method != Method::Autoregressive {
-        // AIMD-controlled γ via the step batcher's session machinery. With
-        // `prefill_chunk_tokens` set, the prompt is fed in chunks through
-        // the chunked-prefill path (bit-identical output; keeps each step
-        // O(chunk) so an embedding batcher could interleave it).
-        use crate::coordinator::batcher::ActiveSession;
-        use crate::spec::gamma::AimdGamma;
-        let t0 = Instant::now();
-        let gmax = decoder.gamma_max();
-        let sess = if cfg.prefill_chunk_tokens > 0 {
-            let mut s = ActiveSession::admit_chunked(
-                spec.id,
-                decoder,
-                sampler,
-                gamma,
-                &prompt,
-                spec.max_new_tokens,
-                cfg.prefill_chunk_tokens,
-            );
-            while s.is_prefilling() {
-                s.step()?;
-            }
-            s
-        } else {
-            ActiveSession::admit(
-                spec.id, decoder, sampler, gamma, &prompt, spec.max_new_tokens,
-            )?
-        };
-        let mut sess =
-            sess.with_controller(Box::new(AimdGamma::new(gamma.min(gmax), 1, gmax)));
-        let prefill_secs = t0.elapsed().as_secs_f64();
-        let t1 = Instant::now();
-        while !sess.done() {
-            sess.step()?;
-        }
-        let decode_secs = t1.elapsed().as_secs_f64();
-        metrics.incr("drafted", sess.drafted);
-        metrics.incr("accepted", sess.accepted);
-        let acceptance_rate = if sess.drafted == 0 {
-            0.0
-        } else {
-            sess.accepted as f64 / sess.drafted as f64
-        };
-        let _ = t_all;
-        // decode-phase tokens only: the first reported token is sampled
-        // from the prefill logits (see `GenResult::decode_tokens`)
-        let decode_tokens = sess.tokens.len().saturating_sub(1);
-        return Ok(ResponseOut {
-            id: spec.id,
-            bucket,
-            acceptance_rate,
-            decode_tokens_per_sec: decode_tokens as f64 / decode_secs.max(1e-9),
-            prefill_secs,
-            decode_secs,
-            queue_secs,
-            tokens: sess.tokens,
-        });
+        sess = sess.with_controller(Box::new(AimdGamma::new(gamma.min(gmax), 1, gmax)));
     }
-    let mut engine = SpecEngine::new(gamma, sampler);
-    let res = engine.generate(decoder.as_mut(), &prompt, spec.max_new_tokens)?;
-    metrics.incr("drafted", res.drafted);
-    metrics.incr("accepted", res.accepted);
-    let _ = t_all;
-    Ok(ResponseOut {
-        id: spec.id,
-        bucket,
-        acceptance_rate: res.acceptance_rate(),
-        decode_tokens_per_sec: res.decode_tokens_per_sec(),
-        prefill_secs: res.prefill_secs,
-        decode_secs: res.decode_secs,
-        queue_secs,
-        tokens: res.tokens,
-    })
+    Ok((sess, bucket))
 }
 
 /// Left-pad (with 0x0A) or head-truncate a prompt to exactly `bucket`
@@ -580,6 +709,13 @@ mod tests {
     }
 
     #[test]
+    fn zero_step_workers_is_a_startup_error() {
+        let cfg = ServeConfig { step_workers: 0, ..ServeConfig::default() };
+        let err = Coordinator::with_mock(cfg, 0.1).unwrap_err().to_string();
+        assert!(err.contains("step_workers"), "got: {err}");
+    }
+
+    #[test]
     fn concurrent_requests_all_complete() {
         let c = Arc::new(mock_coordinator(4, 64));
         let mut rxs = Vec::new();
@@ -591,6 +727,39 @@ mod tests {
             assert_eq!(out.tokens.len(), 24);
         }
         assert_eq!(c.metrics.counter("requests_completed"), 32);
+    }
+
+    /// Parallel stepping on the serving path: outputs are identical to the
+    /// serial-round coordinator, request for request.
+    #[test]
+    fn parallel_engine_output_identical_to_serial_engine() {
+        let mk = |workers: usize| ServeConfig {
+            engines: 1,
+            queue_capacity: 64,
+            max_new_tokens: 24,
+            step_workers: workers,
+            batcher_slots: 4,
+            ..ServeConfig::default()
+        };
+        let serial = Coordinator::with_mock(mk(1), 0.2).unwrap();
+        let parallel = Coordinator::with_mock(mk(3), 0.2).unwrap();
+        for i in 0..6u64 {
+            let a = serial.generate(req(i, 4 + (i as usize % 5))).unwrap();
+            let b = parallel.generate(req(i, 4 + (i as usize % 5))).unwrap();
+            assert_eq!(a.tokens, b.tokens, "request {i}");
+            assert_eq!(a.acceptance_rate, b.acceptance_rate, "request {i}");
+        }
+        // the serving path surfaced its round telemetry
+        assert_eq!(parallel.metrics.gauge(names::STEP_WORKERS), 3.0);
+        assert!(parallel.metrics.gauge(names::ROUND_SPAN_US) > 0.0);
+        assert!(
+            parallel
+                .metrics
+                .snapshot()
+                .to_string()
+                .contains(&names::engine_batcher_depth(0)),
+            "per-engine batcher depth gauge exported"
+        );
     }
 
     #[test]
@@ -645,8 +814,8 @@ mod tests {
         assert!(out.acceptance_rate > 0.5);
     }
 
-    /// `prefill_chunk_tokens` routes the adaptive-gamma path through
-    /// chunked prefill; outputs must match the monolithic path exactly.
+    /// `prefill_chunk_tokens` routes the serving path through chunked
+    /// prefill; outputs must match the monolithic path exactly.
     #[test]
     fn chunked_prefill_serving_matches_monolithic() {
         let mk = |chunk: usize| ServeConfig {
@@ -715,6 +884,8 @@ mod tests {
         assert_eq!(m.pool().pages_in_use(), 0, "all sessions released");
         assert!(m.pool().peak_pages_in_use() > 0);
         assert!(m.pool().peak_pages_in_use() <= 64);
+        // embedded batchers reported rounds through the manager
+        assert!(m.rounds() > 0, "serving rounds recorded");
     }
 
     #[test]
@@ -779,7 +950,6 @@ mod tests {
     /// worker gauge stays at `pool.quant_workers`.
     #[test]
     fn one_quant_pool_serves_all_requests() {
-        use crate::metrics::names;
         let cfg = ServeConfig {
             engines: 2,
             queue_capacity: 64,

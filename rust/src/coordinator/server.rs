@@ -217,6 +217,24 @@ mod tests {
             j.get("gauges").unwrap().get(names::PREFILL_DEFERRALS).is_some(),
             "prefill_deferrals surfaced as a gauge"
         );
+        // round-parallelism telemetry (serving path): the pool block and
+        // the gauges both carry the step-worker and round-span keys, and
+        // the per-engine batcher depth gauge exists for engine 0
+        assert_eq!(calls(names::STEP_WORKERS), 1, "default = serial rounds");
+        assert!(pool.get(names::ROUND_SPAN_US).is_some());
+        assert!(pool.get(names::STEP_WORKERS_BUSY).is_some());
+        assert!(
+            pool.get(names::BATCHER_ROUNDS).unwrap().as_usize().unwrap() > 0,
+            "the embedded batcher recorded its rounds"
+        );
+        let gauges = j.get("gauges").unwrap();
+        for key in [names::STEP_WORKERS, names::ROUND_SPAN_US, names::STEP_WORKERS_BUSY] {
+            assert!(gauges.get(key).is_some(), "gauge {key} missing");
+        }
+        assert!(
+            gauges.get(&names::engine_batcher_depth(0)).is_some(),
+            "per-engine batcher depth gauge missing"
+        );
     }
 
     #[test]

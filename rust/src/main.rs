@@ -63,6 +63,9 @@ fn config_from_args(args: &Args) -> Result<ServeConfig> {
         args.get_usize("prefill-chunk-tokens", cfg.prefill_chunk_tokens);
     cfg.quant_queue_soft_limit =
         args.get_usize("quant-queue-soft-limit", cfg.quant_queue_soft_limit);
+    // not clamped: 0 is rejected with a clear error at coordinator startup
+    cfg.step_workers = args.get_usize("step-workers", cfg.step_workers);
+    cfg.batcher_slots = args.get_usize("batcher-slots", cfg.batcher_slots).max(1);
     Ok(cfg)
 }
 
@@ -111,6 +114,12 @@ OPTIONS (shared):
                        defer prefill chunks while the shared quant pool's
                        queue depth exceeds N (decode keeps running;
                        surfaces as the prefill_deferrals counter; default 32)
+  --step-workers N     step workers per engine batcher: a scheduling round
+                       steps its sessions concurrently on N workers,
+                       bit-identical to serial rounds (default 1 = serial;
+                       0 errors at startup)
+  --batcher-slots N    sessions one engine batcher multiplexes at once
+                       (round-robin capacity; default 4)
 
 run-only:
   --prompt TEXT | --prompt-len N --profile pg19|lexsum|infbench --seed S"

@@ -34,6 +34,24 @@ pub mod names {
     /// `quant_queue_soft_limit` (the batcher's backpressure policy; decode
     /// cycles keep running while prefill waits).
     pub const PREFILL_DEFERRALS: &str = "prefill_deferrals";
+    /// Step workers configured per embedded batcher (`step_workers` knob;
+    /// 1 = serial rounds).
+    pub const STEP_WORKERS: &str = "step_workers";
+    /// Sessions stepped concurrently in the last batcher round
+    /// (= min(step_workers, sessions stepped); 1 under serial rounds).
+    pub const STEP_WORKERS_BUSY: &str = "step_workers_busy";
+    /// Wall-clock span of the last batcher round in microseconds — the
+    /// round-parallelism gauge (at fixed work, more busy workers ⇒ a
+    /// smaller span).
+    pub const ROUND_SPAN_US: &str = "round_span_us";
+    /// Batcher rounds recorded through the session manager.
+    pub const BATCHER_ROUNDS: &str = "batcher_rounds";
+
+    /// Gauge name for one engine's batcher depth on the serving path
+    /// (active sessions multiplexed by that engine's step batcher).
+    pub fn engine_batcher_depth(wid: usize) -> String {
+        format!("batcher_depth_engine_{wid}")
+    }
 }
 
 const BUCKETS: usize = 96;

@@ -23,7 +23,7 @@
 
 pub mod xla_session;
 
-use anyhow::{ensure, Result};
+use anyhow::{ensure, Context, Result};
 
 use crate::cache::MemoryReport;
 use crate::config::Method;
@@ -96,6 +96,53 @@ pub trait Decoder: Send {
     fn context_len(&self) -> usize;
     fn memory(&self) -> MemoryReport;
     fn timings(&self) -> PhaseTimings;
+
+    // ---- KV read-back window (validation / introspection) ---------------
+
+    /// Floats per committed position served by the KV read-back API
+    /// (0 = this backend does not expose KV read-back; the window calls
+    /// then error). The mock serves its pooled cache's d; the XLA session
+    /// serves its FP verify buffer (2·L·H·head_dim: K plane then V plane).
+    fn kv_read_dim(&self) -> usize {
+        0
+    }
+
+    /// Read the KV vector of committed position `pos` (draft = INT4 plane,
+    /// target = INT8/FP) into `out` (len = [`Decoder::kv_read_dim`]).
+    /// Per-token primitive under the batched window default.
+    fn read_kv_token_into(&self, pos: usize, draft: bool, out: &mut [f32]) -> Result<()> {
+        let _ = (pos, draft, out);
+        anyhow::bail!("this decoder does not expose KV read-back")
+    }
+
+    /// Batched read of the committed window `range` into `out`
+    /// (len = `range.len() * kv_read_dim()`). The DEFAULT loops the
+    /// per-token primitive — correct everywhere, one full lookup per
+    /// token. Backends with a batched path override it with a one-shot
+    /// window read (`PagedKvCache::read_tokens_into` on the mock: one
+    /// shard lock, one group lookup per crossed group; the XLA session's
+    /// FP verify buffer: one pass over the host mirrors). Overrides must
+    /// be bit-identical to this default — pinned by a mock-parity test.
+    fn read_kv_window_into(
+        &self,
+        range: std::ops::Range<usize>,
+        draft: bool,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let d = self.kv_read_dim();
+        ensure!(d > 0, "this decoder does not expose KV read-back");
+        ensure!(
+            out.len() == range.len() * d,
+            "out buffer holds {} floats, window {:?} x dim {d} needs {}",
+            out.len(),
+            range,
+            range.len() * d
+        );
+        for (i, pos) in range.enumerate() {
+            self.read_kv_token_into(pos, draft, &mut out[i * d..(i + 1) * d])?;
+        }
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -497,6 +544,43 @@ impl Decoder for MockDecoder {
         self.committed.len()
     }
 
+    fn kv_read_dim(&self) -> usize {
+        self.paged.as_ref().map(|p| p.d).unwrap_or(0)
+    }
+
+    fn read_kv_token_into(&self, pos: usize, draft: bool, out: &mut [f32]) -> Result<()> {
+        let p = self.paged.as_ref().context("unpooled mock has no KV pages")?;
+        // `pos` is a COMMITTED position (the trait contract); the cache
+        // left-pads short prompts, so shift by the pad and bound against
+        // the committed context — a pad token must never be served as
+        // committed KV.
+        ensure!(
+            pos < self.committed.len(),
+            "position {pos} beyond committed context {}",
+            self.committed.len()
+        );
+        p.cache.read_token_into(p.pad + pos, draft, out)
+    }
+
+    /// Batched override: ONE `read_tokens_into` window (one shard lock,
+    /// one group lookup per crossed group) instead of a per-token loop.
+    /// Same pad shift / committed bound as the per-token primitive.
+    fn read_kv_window_into(
+        &self,
+        range: std::ops::Range<usize>,
+        draft: bool,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let p = self.paged.as_ref().context("unpooled mock has no KV pages")?;
+        ensure!(
+            range.end <= self.committed.len(),
+            "window {range:?} beyond committed context {}",
+            self.committed.len()
+        );
+        p.cache
+            .read_tokens_into(p.pad + range.start..p.pad + range.end, draft, out)
+    }
+
     fn memory(&self) -> MemoryReport {
         match &self.paged {
             None => MemoryReport::default(),
@@ -823,6 +907,149 @@ mod tests {
         let via_chunk = d.prefill_chunk(&[1, 2, 3], true).unwrap().unwrap();
         let mut plain = MockDecoder::new(64, 7, 0.0);
         assert_eq!(via_chunk, plain.prefill(&[1, 2, 3]).unwrap());
+    }
+
+    /// Satellite acceptance (batched KV window API): a wrapper that keeps
+    /// the TRAIT-DEFAULT `read_kv_window_into` (per-token loop) but
+    /// delegates the per-token primitive must return bit-for-bit what the
+    /// mock's batched override returns, over every window shape — quant
+    /// region (both planes), group boundaries, the quant→FP seam, and the
+    /// FP tail. This pins the contract the XLA device-path override obeys.
+    #[test]
+    fn kv_window_trait_default_matches_batched_override() {
+        use crate::pool::{shared, PoolConfig};
+        /// Delegates everything EXCEPT `read_kv_window_into`, which stays
+        /// the trait default (per-token loop over the delegated primitive).
+        struct PerTokenOnly(MockDecoder);
+        impl Decoder for PerTokenOnly {
+            fn vocab(&self) -> usize {
+                self.0.vocab()
+            }
+            fn gamma_max(&self) -> usize {
+                self.0.gamma_max()
+            }
+            fn method(&self) -> Method {
+                self.0.method()
+            }
+            fn prefill(&mut self, t: &[i32]) -> Result<Vec<f32>> {
+                self.0.prefill(t)
+            }
+            fn begin_cycle(&mut self) {
+                self.0.begin_cycle()
+            }
+            fn draft_step(&mut self, t: i32) -> Result<Vec<f32>> {
+                self.0.draft_step(t)
+            }
+            fn verify(&mut self, t: &[i32]) -> Result<Vec<Vec<f32>>> {
+                self.0.verify(t)
+            }
+            fn commit(&mut self, a: usize, v: usize) -> Result<()> {
+                self.0.commit(a, v)
+            }
+            fn ar_step(&mut self, t: i32) -> Result<Vec<f32>> {
+                self.0.ar_step(t)
+            }
+            fn context_len(&self) -> usize {
+                self.0.context_len()
+            }
+            fn memory(&self) -> MemoryReport {
+                self.0.memory()
+            }
+            fn timings(&self) -> PhaseTimings {
+                self.0.timings()
+            }
+            fn kv_read_dim(&self) -> usize {
+                self.0.kv_read_dim()
+            }
+            fn read_kv_token_into(&self, p: usize, d: bool, o: &mut [f32]) -> Result<()> {
+                self.0.read_kv_token_into(p, d, o)
+            }
+            // read_kv_window_into: trait default (per-token loop)
+        }
+        let g = 8;
+        let mgr = shared(PoolConfig {
+            pages: 64,
+            page_tokens: g,
+            kv_dim: 2,
+            high_watermark: 1.0,
+            low_watermark: 1.0,
+            ..PoolConfig::default()
+        })
+        .unwrap();
+        mgr.lock().unwrap().admit(1, 16, false).unwrap();
+        let mut dec =
+            MockDecoder::with_pool(64, MOCK_GAMMA_MAX, 0.1, mgr.clone(), 1, 8 * g).unwrap();
+        let prompt: Vec<i32> = (0..4 * g as i32).map(|t| (t * 5 + 1) % 64).collect();
+        dec.prefill(&prompt).unwrap();
+        let d = dec.kv_read_dim();
+        assert_eq!(d, 2);
+        let ctx = 4 * g; // n_q + n_f after a 4G prefill
+        let via_default = PerTokenOnly(dec);
+        let mut batched = vec![0.0f32; ctx * d];
+        let mut looped = vec![0.0f32; ctx * d];
+        for start in [0usize, 1, g - 1, g, 3 * g - 1, 3 * g, ctx - 1] {
+            for len in [1usize, 2, g, ctx - start] {
+                if start + len > ctx {
+                    continue;
+                }
+                for draft in [true, false] {
+                    // inner mock: batched override
+                    via_default
+                        .0
+                        .read_kv_window_into(start..start + len, draft, &mut batched[..len * d])
+                        .unwrap();
+                    // wrapper: trait default looping the per-token primitive
+                    via_default
+                        .read_kv_window_into(start..start + len, draft, &mut looped[..len * d])
+                        .unwrap();
+                    assert_eq!(
+                        batched[..len * d],
+                        looped[..len * d],
+                        "start {start} len {len} draft {draft}"
+                    );
+                }
+            }
+        }
+        // wrong-size scratch and past-context windows reject on both paths
+        assert!(via_default.read_kv_window_into(0..2, true, &mut looped[..d]).is_err());
+        assert!(via_default
+            .0
+            .read_kv_window_into(ctx - 1..ctx + 1, false, &mut batched[..2 * d])
+            .is_err());
+        // an unpooled mock exposes no KV read-back
+        let plain = MockDecoder::new(64, 7, 0.0);
+        assert_eq!(plain.kv_read_dim(), 0);
+        assert!(plain.read_kv_token_into(0, true, &mut [0.0; 2]).is_err());
+        mgr.lock().unwrap().release(1);
+
+        // Padded short prompt (regression): prompts under 2G left-pad the
+        // cache, and positions are COMMITTED coordinates — position 0 must
+        // read the first prompt token's KV (cache slot `pad`), never a
+        // 0x0A pad token, and reads past the committed context must error
+        // even though padded cache slots exist there.
+        mgr.lock().unwrap().admit(2, 16, false).unwrap();
+        let mut short =
+            MockDecoder::with_pool(64, MOCK_GAMMA_MAX, 0.1, mgr.clone(), 2, 8 * g).unwrap();
+        let prompt = [9, 5, 7, 3, 11];
+        short.prefill(&prompt).unwrap();
+        let pad = 2 * g - prompt.len(); // cache padded to the 2G minimum
+        let mut got = vec![0.0f32; d];
+        for (i, &tok) in prompt.iter().enumerate() {
+            // committed positions land in the FP region here: exact values
+            short.read_kv_token_into(i, false, &mut got).unwrap();
+            assert_eq!(got, crate::pool::mock_kv(pad + i, tok, d), "pos {i}");
+        }
+        let mut win = vec![0.0f32; prompt.len() * d];
+        short.read_kv_window_into(0..prompt.len(), false, &mut win).unwrap();
+        for i in 0..prompt.len() {
+            short.read_kv_token_into(i, false, &mut got).unwrap();
+            assert_eq!(win[i * d..(i + 1) * d], got[..], "window pos {i}");
+        }
+        assert!(
+            short.read_kv_token_into(prompt.len(), false, &mut got).is_err(),
+            "pad region must not be readable as committed KV"
+        );
+        mgr.lock().unwrap().release(2);
     }
 
     #[test]

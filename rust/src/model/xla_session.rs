@@ -191,7 +191,11 @@ impl XlaSession {
     }
 
     /// Gather tokens (by index) from the full prefill KV into a region of
-    /// `budget` capacity. `kfull` is [L,H,S,dh] host.
+    /// `budget` capacity. `kfull` is [L,H,S,dh] host. Consecutive indices
+    /// are coalesced into contiguous span copies (`read_tokens_into`-style
+    /// windows): StreamingLLM's sinks+window and SnapKV's sorted
+    /// selections are mostly runs, so the gather performs O(runs) memcpys
+    /// per (layer, head) instead of one copy per token.
     fn gather_region(
         &self,
         kfull: &HostTensor,
@@ -201,6 +205,17 @@ impl XlaSession {
     ) -> Result<(DeviceTensor, DeviceTensor)> {
         let (l, h, s, dh) = dims4(kfull)?;
         anyhow::ensure!(idx.len() <= budget, "selection exceeds budget");
+        // (dst slot, src token, run length) per maximal consecutive run
+        let mut runs: Vec<(usize, usize, usize)> = Vec::new();
+        let mut j = 0;
+        while j < idx.len() {
+            let mut len = 1;
+            while j + len < idx.len() && idx[j + len] == idx[j] + len {
+                len += 1;
+            }
+            runs.push((j, idx[j], len));
+            j += len;
+        }
         let gather = |src: &HostTensor| -> Result<DeviceTensor> {
             let data = src.as_f32()?;
             let mut out = vec![0.0f32; l * h * budget * dh];
@@ -208,10 +223,10 @@ impl XlaSession {
                 for hi in 0..h {
                     let src_base = (li * h + hi) * s * dh;
                     let dst_base = (li * h + hi) * budget * dh;
-                    for (j, &tok) in idx.iter().enumerate() {
+                    for &(dst_j, tok, len) in &runs {
                         let so = src_base + tok * dh;
-                        let dc = dst_base + j * dh;
-                        out[dc..dc + dh].copy_from_slice(&data[so..so + dh]);
+                        let dc = dst_base + dst_j * dh;
+                        out[dc..dc + len * dh].copy_from_slice(&data[so..so + len * dh]);
                     }
                 }
             }
@@ -513,6 +528,81 @@ impl Decoder for XlaSession {
 
     fn context_len(&self) -> usize {
         self.tracker.context_len()
+    }
+
+    fn kv_read_dim(&self) -> usize {
+        let m = &self.rt.manifest.model;
+        2 * m.n_layers * m.n_heads * m.head_dim
+    }
+
+    fn read_kv_token_into(&self, pos: usize, draft: bool, out: &mut [f32]) -> Result<()> {
+        self.read_kv_window_into(pos..pos + 1, draft, out)
+    }
+
+    /// Device-path batched verify-window read (ROADMAP PR-3 follow-up):
+    /// the FP verify buffer is mirrored host-side in `fk`/`fv`, so a
+    /// whole window is served in ONE pass over each mirror — per (layer,
+    /// head) the source span covering every requested token is contiguous
+    /// — instead of re-borrowing and re-walking both tensors once per
+    /// token as the trait default does. Layout per token:
+    /// `[L·H·dh K values | L·H·dh V values]`. The quantized region lives
+    /// in device nibble planes with no lowered dequant entry, so windows
+    /// must lie inside the FP buffer `[n_q, n_q + n_f)` — anything else
+    /// is a clean error, never a silent wrong answer.
+    fn read_kv_window_into(
+        &self,
+        range: std::ops::Range<usize>,
+        draft: bool,
+        out: &mut [f32],
+    ) -> Result<()> {
+        // the FP buffer holds full-precision KV: both planes read the same
+        let _ = draft;
+        let d = self.kv_read_dim();
+        anyhow::ensure!(
+            out.len() == range.len() * d,
+            "out buffer holds {} floats, window {:?} x dim {d} needs {}",
+            out.len(),
+            range,
+            range.len() * d
+        );
+        if range.is_empty() {
+            return Ok(());
+        }
+        // COMMITTED positions only: mid-cycle `n_f` already counts drafted
+        // (unverified) slots, so the committed FP boundary is
+        // `cycle_base()` — n_f during a cycle is past it. Matches the
+        // mock, which bounds by its committed context.
+        let n_q = self.tracker.n_q;
+        let committed_f = self.tracker.cycle_base();
+        anyhow::ensure!(
+            range.start >= n_q && range.end <= n_q + committed_f,
+            "device KV window {range:?} outside the committed FP verify \
+             buffer [{n_q}, {}) — drafted slots are not committed KV, and \
+             the quantized region needs a lowered dequant entry on device",
+            n_q + committed_f
+        );
+        let (l, h, fb, dh) = dims4(&self.fk)?;
+        let s0 = range.start - n_q;
+        let t = range.len();
+        anyhow::ensure!(s0 + t <= fb, "window past the FP buffer capacity {fb}");
+        let fk = self.fk.as_f32()?;
+        let fv = self.fv.as_f32()?;
+        let half = l * h * dh;
+        for li in 0..l {
+            for hi in 0..h {
+                let base = (li * h + hi) * fb * dh;
+                let kspan = &fk[base + s0 * dh..base + (s0 + t) * dh];
+                let vspan = &fv[base + s0 * dh..base + (s0 + t) * dh];
+                let dst = (li * h + hi) * dh;
+                for i in 0..t {
+                    out[i * d + dst..i * d + dst + dh]
+                        .copy_from_slice(&kspan[i * dh..(i + 1) * dh]);
+                    out[i * d + half + dst..i * d + half + dst + dh]
+                        .copy_from_slice(&vspan[i * dh..(i + 1) * dh]);
+                }
+            }
+        }
+        Ok(())
     }
 
     fn memory(&self) -> MemoryReport {

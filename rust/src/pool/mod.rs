@@ -27,6 +27,23 @@
 //! speculation rollback never touches pages (the tracker just commits a
 //! smaller count), so both stay O(1) in page traffic.
 //!
+//! # Sharding (the parallel-rounds contract)
+//!
+//! Pool state is split so N sessions can decode on N cores without
+//! serializing on one mutex:
+//!
+//! * [`page::PagePool`] — GLOBAL accounting only (page budget, per-kind
+//!   counts, byte totals, cache-traffic counters), all atomics; the hard
+//!   capacity bound is a CAS.
+//! * [`page::SessionShard`] — one per session, owning that session's page
+//!   DATA behind its own mutex; `PagedKvCache` clones the `Arc` out at
+//!   construction and runs its whole data plane on it.
+//! * [`session::SessionManager`] — the control-plane mutex: admission,
+//!   release, LRU eviction, and once-per-round batcher telemetry. Lock
+//!   order is manager → shard; steady-state draft/verify steps take only
+//!   their shard lock (pinned by a test that holds the manager mutex
+//!   across a full decode).
+//!
 //! # Sessions, watermarks, admission
 //!
 //! [`session::SessionManager`] brokers the arena: requests are admitted
@@ -52,8 +69,8 @@ pub mod page;
 pub mod paged;
 pub mod session;
 
-pub use page::{PageHandle, PageKind, PagePool, PoolConfig, SessionId};
-pub use paged::{mock_kv, mock_kv_into, BlockTable, PagedKvCache};
-pub use session::{
-    shared, AdmitOutcome, CacheTraffic, SessionManager, SharedSessionManager,
+pub use page::{
+    CacheTraffic, PageHandle, PageKind, PagePool, PoolConfig, SessionId, SessionShard,
 };
+pub use paged::{mock_kv, mock_kv_into, BlockTable, PagedKvCache};
+pub use session::{shared, AdmitOutcome, SessionManager, SharedSessionManager};

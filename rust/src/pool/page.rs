@@ -1,5 +1,5 @@
-//! The page arena: fixed-size pages, generation-checked handles, and
-//! logical-vs-host byte accounting.
+//! The sharded page arena: global accounting in atomics, page *data* in
+//! per-session shards.
 //!
 //! A page is the pool's unit of allocation and holds exactly G tokens of KV
 //! state for one session, in one of two layouts:
@@ -15,9 +15,37 @@
 //!   `ceil(FB / G)` such pages and is mutated in place (draft writes,
 //!   verify rewrites, flush shifts).
 //!
+//! # Sharded locking (the parallel-rounds contract)
+//!
+//! The arena used to be one big `Vec<Slot>` behind the session-manager
+//! mutex, which serialized every session's draft/verify reads against each
+//! other. It is now split in two:
+//!
+//! * [`PagePool`] — the **global accounting arena**: capacity, pages in
+//!   use / peak, per-kind counts, alloc/free totals, and the cache-traffic
+//!   counters. All atomics; the capacity bound is enforced by a CAS in
+//!   [`PagePool::try_reserve`], so concurrent sessions can allocate without
+//!   any lock and still never exceed `pages` in total.
+//! * [`SessionShard`] — one per session, owning that session's page
+//!   *data* (quant groups + FP buffers) behind its **own** mutex. A
+//!   steady-state draft/verify step locks only its shard — uncontended
+//!   when the step batcher runs sessions on different workers — and never
+//!   touches the session-manager mutex.
+//!
+//! Lock order: the session-manager mutex may be held while taking a shard
+//! lock (admission, eviction, release); a shard lock must NEVER be held
+//! while taking the manager mutex. Data-plane code in
+//! [`super::paged::PagedKvCache`] only ever takes the shard lock.
+//!
 //! Handles carry a per-slot generation that is bumped on free, so stale
 //! handles (double-free, use-after-evict) are detected instead of silently
-//! corrupting another session's cache.
+//! corrupting another session's cache. Handles are shard-local: page ids
+//! are deterministic per session regardless of how other sessions
+//! interleave, which is what makes parallel batcher rounds bit-identical
+//! to serial ones.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use anyhow::{bail, ensure, Result};
 
@@ -33,7 +61,7 @@ pub enum PageKind {
     Fp,
 }
 
-/// Generation-checked reference to a page in the arena.
+/// Generation-checked reference to a page in its session's shard.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PageHandle {
     id: u32,
@@ -113,45 +141,56 @@ impl PoolConfig {
     }
 }
 
-enum PageData {
-    /// None until the group is written (alloc-then-quantize window).
-    Quant(Option<PackedGroup>),
-    Fp(Vec<f32>),
+/// Quantized-cache read traffic, split by decode path (paper §4.2: the
+/// draft reads the INT4 plane, verify reads both planes). `bytes_read_*`
+/// count host bytes of packed codes actually touched, so acceptance-rate
+/// regressions can be correlated with cache traffic in `/stats`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheTraffic {
+    /// Per-token dequantizations served from the INT4 (draft) plane.
+    pub dequant_calls_draft: u64,
+    /// Per-token dequantizations served from both planes (target/verify).
+    pub dequant_calls_target: u64,
+    /// Packed code bytes read on the draft path.
+    pub bytes_read_draft: u64,
+    /// Packed code bytes read on the target path.
+    pub bytes_read_target: u64,
 }
 
-struct Slot {
-    gen: u32,
-    /// None = free; Some((owner, data)) = in use.
-    state: Option<(SessionId, PageData)>,
-}
-
-/// Fixed-capacity arena of KV pages shared by all sessions.
+/// Global accounting arena shared by every session shard: page budget,
+/// per-kind counts, and cache-traffic counters — all atomics, so the
+/// steady-state data plane never takes a global lock. The capacity bound
+/// is a CAS in [`PagePool::try_reserve`]: concurrent allocations can
+/// interleave freely and the total can still never exceed `pages`.
 pub struct PagePool {
     cfg: PoolConfig,
-    slots: Vec<Slot>,
-    free: Vec<u32>,
-    in_use: usize,
-    peak_in_use: usize,
-    n_quant: usize,
-    n_fp: usize,
-    allocs: u64,
-    frees: u64,
+    in_use: AtomicUsize,
+    peak_in_use: AtomicUsize,
+    n_quant: AtomicUsize,
+    n_fp: AtomicUsize,
+    allocs: AtomicU64,
+    frees: AtomicU64,
+    // cache-traffic counters (two relaxed adds on the zero-alloc read path)
+    dequant_calls_draft: AtomicU64,
+    dequant_calls_target: AtomicU64,
+    bytes_read_draft: AtomicU64,
+    bytes_read_target: AtomicU64,
 }
 
 impl PagePool {
     pub fn new(cfg: PoolConfig) -> PagePool {
-        let pages = cfg.pages;
         PagePool {
             cfg,
-            slots: (0..pages).map(|_| Slot { gen: 0, state: None }).collect(),
-            // Reversed so pages allocate in ascending id order.
-            free: (0..pages as u32).rev().collect(),
-            in_use: 0,
-            peak_in_use: 0,
-            n_quant: 0,
-            n_fp: 0,
-            allocs: 0,
-            frees: 0,
+            in_use: AtomicUsize::new(0),
+            peak_in_use: AtomicUsize::new(0),
+            n_quant: AtomicUsize::new(0),
+            n_fp: AtomicUsize::new(0),
+            allocs: AtomicU64::new(0),
+            frees: AtomicU64::new(0),
+            dequant_calls_draft: AtomicU64::new(0),
+            dequant_calls_target: AtomicU64::new(0),
+            bytes_read_draft: AtomicU64::new(0),
+            bytes_read_target: AtomicU64::new(0),
         }
     }
 
@@ -160,73 +199,135 @@ impl PagePool {
     }
 
     pub fn capacity(&self) -> usize {
-        self.slots.len()
+        self.cfg.pages
     }
 
     pub fn pages_in_use(&self) -> usize {
-        self.in_use
+        self.in_use.load(Ordering::Acquire)
     }
 
     pub fn peak_pages_in_use(&self) -> usize {
-        self.peak_in_use
+        self.peak_in_use.load(Ordering::Relaxed)
     }
 
     /// Fill fraction in [0, 1].
     pub fn pressure(&self) -> f64 {
-        if self.slots.is_empty() {
+        if self.cfg.pages == 0 {
             return 1.0;
         }
-        self.in_use as f64 / self.slots.len() as f64
+        self.pages_in_use() as f64 / self.cfg.pages as f64
     }
 
     pub fn allocs(&self) -> u64 {
-        self.allocs
+        self.allocs.load(Ordering::Relaxed)
     }
 
     pub fn frees(&self) -> u64 {
-        self.frees
+        self.frees.load(Ordering::Relaxed)
     }
 
     /// Host-resident bytes of all live pages (what this testbed holds).
     pub fn host_bytes(&self) -> usize {
-        self.n_quant * self.cfg.quant_page_host_bytes()
-            + self.n_fp * self.cfg.fp_page_host_bytes()
+        self.n_quant.load(Ordering::Relaxed) * self.cfg.quant_page_host_bytes()
+            + self.n_fp.load(Ordering::Relaxed) * self.cfg.fp_page_host_bytes()
     }
 
     /// Logical bytes of all live pages (true device bit widths).
     pub fn logical_bytes(&self) -> usize {
-        self.n_quant * self.cfg.quant_page_logical_bytes()
-            + self.n_fp * self.cfg.fp_page_logical_bytes()
+        self.n_quant.load(Ordering::Relaxed) * self.cfg.quant_page_logical_bytes()
+            + self.n_fp.load(Ordering::Relaxed) * self.cfg.fp_page_logical_bytes()
     }
 
-    pub fn alloc(&mut self, kind: PageKind, owner: SessionId) -> Result<PageHandle> {
-        let Some(id) = self.free.pop() else {
-            bail!(
-                "pool exhausted: {} / {} pages in use",
-                self.in_use,
-                self.slots.len()
-            );
-        };
-        let slot = &mut self.slots[id as usize];
-        debug_assert!(slot.state.is_none(), "free-list slot in use");
-        let data = match kind {
-            PageKind::Quant => {
-                self.n_quant += 1;
-                PageData::Quant(None)
+    /// Reserve one page of the global budget (lock-free). Returns false
+    /// when the arena is full — the caller either fails cleanly or falls
+    /// back to the session manager for LRU eviction. The CAS loop is the
+    /// hard capacity bound: under any interleaving of concurrent
+    /// reservations, `pages_in_use` never exceeds `capacity`.
+    pub(crate) fn try_reserve(&self, kind: PageKind) -> bool {
+        let mut cur = self.in_use.load(Ordering::Acquire);
+        loop {
+            if cur >= self.cfg.pages {
+                return false;
             }
-            PageKind::Fp => {
-                self.n_fp += 1;
-                PageData::Fp(vec![0.0; self.cfg.page_tokens * self.cfg.kv_dim])
+            match self.in_use.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
             }
+        }
+        self.peak_in_use.fetch_max(cur + 1, Ordering::Relaxed);
+        match kind {
+            PageKind::Quant => self.n_quant.fetch_add(1, Ordering::Relaxed),
+            PageKind::Fp => self.n_fp.fetch_add(1, Ordering::Relaxed),
         };
-        slot.state = Some((owner, data));
-        self.in_use += 1;
-        self.peak_in_use = self.peak_in_use.max(self.in_use);
-        self.allocs += 1;
-        Ok(PageHandle { id, gen: slot.gen })
+        self.allocs.fetch_add(1, Ordering::Relaxed);
+        true
     }
 
-    fn check(&self, h: PageHandle, owner: SessionId) -> Result<()> {
+    /// Return one page of the given kind to the global budget.
+    pub(crate) fn release_page(&self, kind: PageKind) {
+        match kind {
+            PageKind::Quant => self.n_quant.fetch_sub(1, Ordering::Relaxed),
+            PageKind::Fp => self.n_fp.fetch_sub(1, Ordering::Relaxed),
+        };
+        self.frees.fetch_add(1, Ordering::Relaxed);
+        self.in_use.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    /// Record `calls` per-token dequantizations touching `bytes` packed
+    /// code bytes in total. The batched window reader accounts one crossed
+    /// group at a time (calls = tokens served from that group), so a
+    /// γ-window read costs O(groups-crossed) counter updates, not O(γ).
+    /// Two relaxed atomic adds — no lock on the zero-allocation read path.
+    pub(crate) fn note_dequant_many(&self, draft: bool, calls: u64, bytes: u64) {
+        if draft {
+            self.dequant_calls_draft.fetch_add(calls, Ordering::Relaxed);
+            self.bytes_read_draft.fetch_add(bytes, Ordering::Relaxed);
+        } else {
+            self.dequant_calls_target.fetch_add(calls, Ordering::Relaxed);
+            self.bytes_read_target.fetch_add(bytes, Ordering::Relaxed);
+        }
+    }
+
+    /// Cumulative quantized-cache read traffic (draft vs target path).
+    pub fn traffic(&self) -> CacheTraffic {
+        CacheTraffic {
+            dequant_calls_draft: self.dequant_calls_draft.load(Ordering::Relaxed),
+            dequant_calls_target: self.dequant_calls_target.load(Ordering::Relaxed),
+            bytes_read_draft: self.bytes_read_draft.load(Ordering::Relaxed),
+            bytes_read_target: self.bytes_read_target.load(Ordering::Relaxed),
+        }
+    }
+}
+
+enum PageData {
+    /// None until the group is written (alloc-then-quantize window).
+    Quant(Option<PackedGroup>),
+    Fp(Vec<f32>),
+}
+
+struct Slot {
+    gen: u32,
+    /// None = free; Some = in use (ownership is the shard itself).
+    state: Option<PageData>,
+}
+
+/// Page storage of ONE session: slots, free list, and the geometry checks.
+/// All methods run under the shard's mutex (see [`SessionShard::lock`]).
+pub struct ShardData {
+    /// page_tokens × kv_dim, denormalized from the arena config (the one
+    /// geometry fact the write path checks against).
+    elems: usize,
+    slots: Vec<Slot>,
+    free: Vec<u32>,
+}
+
+impl ShardData {
+    fn check(&self, h: PageHandle) -> Result<()> {
         let slot = self
             .slots
             .get(h.id as usize)
@@ -238,76 +339,20 @@ impl PagePool {
             h.gen,
             slot.gen
         );
-        match &slot.state {
-            None => bail!("page {} is free", h.id),
-            Some((o, _)) => ensure!(
-                *o == owner,
-                "page {} owned by session {o}, not {owner}",
-                h.id
-            ),
-        }
+        ensure!(slot.state.is_some(), "page {} is free", h.id);
         Ok(())
     }
 
-    pub fn free(&mut self, h: PageHandle, owner: SessionId) -> Result<PageKind> {
-        self.check(h, owner)?;
-        let slot = &mut self.slots[h.id as usize];
-        let kind = match slot.state.take() {
-            Some((_, PageData::Quant(_))) => {
-                self.n_quant -= 1;
-                PageKind::Quant
-            }
-            Some((_, PageData::Fp(_))) => {
-                self.n_fp -= 1;
-                PageKind::Fp
-            }
-            None => unreachable!("check() verified the slot is in use"),
-        };
-        slot.gen = slot.gen.wrapping_add(1);
-        self.free.push(h.id);
-        self.in_use -= 1;
-        self.frees += 1;
-        Ok(kind)
-    }
-
-    /// Free every page owned by `owner` (session release / eviction).
-    /// Returns the number of pages reclaimed.
-    pub fn free_all(&mut self, owner: SessionId) -> usize {
-        let mut freed = 0;
-        for id in 0..self.slots.len() as u32 {
-            let is_owned = matches!(&self.slots[id as usize].state, Some((o, _)) if *o == owner);
-            if is_owned {
-                let gen = self.slots[id as usize].gen;
-                self.free(PageHandle { id, gen }, owner)
-                    .expect("owned page must free");
-                freed += 1;
-            }
-        }
-        freed
-    }
-
-    pub fn pages_owned(&self, owner: SessionId) -> usize {
-        self.slots
-            .iter()
-            .filter(|s| matches!(&s.state, Some((o, _)) if *o == owner))
-            .count()
-    }
-
-    pub fn write_quant(
-        &mut self,
-        h: PageHandle,
-        owner: SessionId,
-        group: PackedGroup,
-    ) -> Result<()> {
-        self.check(h, owner)?;
-        let elems = self.cfg.page_tokens * self.cfg.kv_dim;
+    pub fn write_quant(&mut self, h: PageHandle, group: PackedGroup) -> Result<()> {
+        self.check(h)?;
         ensure!(
-            group.len() == elems,
-            "quant group has {} codes, page holds {elems}",
-            group.len()
+            group.len() == self.elems,
+            "quant group has {} codes, page holds {}",
+            group.len(),
+            self.elems
         );
         match &mut self.slots[h.id as usize].state {
-            Some((_, PageData::Quant(g))) => {
+            Some(PageData::Quant(g)) => {
                 *g = Some(group);
                 Ok(())
             }
@@ -315,49 +360,44 @@ impl PagePool {
         }
     }
 
-    pub fn read_quant(&self, h: PageHandle, owner: SessionId) -> Result<&PackedGroup> {
-        self.check(h, owner)?;
+    pub fn read_quant(&self, h: PageHandle) -> Result<&PackedGroup> {
+        self.check(h)?;
         match &self.slots[h.id as usize].state {
-            Some((_, PageData::Quant(Some(g)))) => Ok(g),
-            Some((_, PageData::Quant(None))) => {
+            Some(PageData::Quant(Some(g))) => Ok(g),
+            Some(PageData::Quant(None)) => {
                 bail!("quant page {} allocated but never written", h.id)
             }
             _ => bail!("page {} is not a quant page", h.id),
         }
     }
 
-    pub fn fp(&self, h: PageHandle, owner: SessionId) -> Result<&[f32]> {
-        self.check(h, owner)?;
+    pub fn fp(&self, h: PageHandle) -> Result<&[f32]> {
+        self.check(h)?;
         match &self.slots[h.id as usize].state {
-            Some((_, PageData::Fp(v))) => Ok(v),
+            Some(PageData::Fp(v)) => Ok(v),
             _ => bail!("page {} is not an fp page", h.id),
         }
     }
 
-    pub fn fp_mut(&mut self, h: PageHandle, owner: SessionId) -> Result<&mut [f32]> {
-        self.check(h, owner)?;
+    pub fn fp_mut(&mut self, h: PageHandle) -> Result<&mut [f32]> {
+        self.check(h)?;
         match &mut self.slots[h.id as usize].state {
-            Some((_, PageData::Fp(v))) => Ok(v),
+            Some(PageData::Fp(v)) => Ok(v),
             _ => bail!("page {} is not an fp page", h.id),
         }
     }
 
-    /// Structural invariants; used by tests and the session manager's
-    /// consistency checks.
-    pub fn check_integrity(&self) -> Result<()> {
+    fn live_slots(&self) -> usize {
+        self.slots.iter().filter(|s| s.state.is_some()).count()
+    }
+
+    fn check_integrity_inner(&self) -> Result<()> {
         ensure!(
-            self.in_use + self.free.len() == self.slots.len(),
-            "page accounting broken: {} in use + {} free != {} slots",
-            self.in_use,
+            self.live_slots() + self.free.len() == self.slots.len(),
+            "shard accounting broken: {} live + {} free != {} slots",
+            self.live_slots(),
             self.free.len(),
             self.slots.len()
-        );
-        ensure!(
-            self.n_quant + self.n_fp == self.in_use,
-            "kind counts {} + {} != in_use {}",
-            self.n_quant,
-            self.n_fp,
-            self.in_use
         );
         let mut seen = vec![false; self.slots.len()];
         for &id in &self.free {
@@ -370,156 +410,404 @@ impl PagePool {
     }
 }
 
+/// One session's slice of the pool: page data behind its OWN mutex plus a
+/// handle onto the global accounting arena. Cloned (`Arc`) into the
+/// session's `PagedKvCache`, so the steady-state data plane runs entirely
+/// on session-local state — the manager mutex is only for admission,
+/// release, eviction, and over-reservation growth.
+pub struct SessionShard {
+    id: SessionId,
+    arena: Arc<PagePool>,
+    /// Set by eviction/release: further allocations are rejected (reads
+    /// fail on the generation bump that `free_all` performs).
+    evicted: AtomicBool,
+    /// Pages currently held; mirrored out of the data lock so admission
+    /// accounting (`committed_pages`) can read it without taking every
+    /// shard's mutex.
+    live: AtomicUsize,
+    /// Admission reservation: the lock-free allocation fast path is
+    /// limited to this many pages (see [`SessionShard::try_alloc`]).
+    reserved: AtomicUsize,
+    data: Mutex<ShardData>,
+}
+
+impl SessionShard {
+    pub fn new(id: SessionId, arena: Arc<PagePool>, reserved: usize) -> SessionShard {
+        let elems = arena.cfg().elems();
+        SessionShard {
+            id,
+            arena,
+            evicted: AtomicBool::new(false),
+            live: AtomicUsize::new(0),
+            reserved: AtomicUsize::new(reserved),
+            data: Mutex::new(ShardData {
+                elems,
+                slots: Vec::new(),
+                free: Vec::new(),
+            }),
+        }
+    }
+
+    pub fn id(&self) -> SessionId {
+        self.id
+    }
+
+    /// The global accounting arena (config, byte totals, traffic counters).
+    pub fn arena(&self) -> &PagePool {
+        &self.arena
+    }
+
+    pub fn is_evicted(&self) -> bool {
+        self.evicted.load(Ordering::Acquire)
+    }
+
+    /// Pages this shard currently holds (lock-free).
+    pub fn live_pages(&self) -> usize {
+        self.live.load(Ordering::Acquire)
+    }
+
+    /// The admission reservation bounding the lock-free allocation path.
+    pub fn reserved_pages(&self) -> usize {
+        self.reserved.load(Ordering::Acquire)
+    }
+
+    /// Lock this session's page data for a batch of reads/writes — the
+    /// ONE lock a steady-state draft/verify step takes.
+    pub fn lock(&self) -> MutexGuard<'_, ShardData> {
+        self.data.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Allocate one page against the global budget without any lock beyond
+    /// this shard's own — but ONLY within the admission reservation:
+    /// committed-page accounting is `max(reserved, live)`, so lock-free
+    /// allocations under `reserved` can never erode the watermark
+    /// headroom a concurrent admit is computing under the manager mutex.
+    /// `Ok(None)` means the arena is full or the session would outgrow
+    /// its reservation — the caller falls back to the manager-locked
+    /// slow path ([`SessionShard::alloc_locked`]), which can LRU-evict
+    /// and keeps the accounting consistent while `live` crosses
+    /// `reserved`. (A session's data plane is single-threaded, so the
+    /// reservation check is not racing same-shard allocations.)
+    pub fn try_alloc(&self, kind: PageKind) -> Result<Option<PageHandle>> {
+        if self.live_pages() >= self.reserved_pages() {
+            return Ok(None);
+        }
+        self.alloc_impl(kind)
+    }
+
+    /// Manager-locked allocation (over-reservation growth, eviction
+    /// retry): the caller holds the session-manager mutex.
+    pub(crate) fn alloc_locked(&self, kind: PageKind) -> Result<Option<PageHandle>> {
+        self.alloc_impl(kind)
+    }
+
+    fn alloc_impl(&self, kind: PageKind) -> Result<Option<PageHandle>> {
+        ensure!(!self.is_evicted(), "session {} was evicted", self.id);
+        if !self.arena.try_reserve(kind) {
+            return Ok(None);
+        }
+        let mut d = self.lock();
+        // Re-check under the shard lock: `retire` sets the flag BEFORE
+        // taking this lock, so either we observe it here and hand the
+        // budget back, or retire's `free_all` is still waiting on the
+        // lock and will reclaim the page we are about to insert. Without
+        // this, a page allocated between the flag store and `free_all`
+        // would survive on an "evicted" shard — leaked from the global
+        // budget once the session entry is gone.
+        if self.is_evicted() {
+            drop(d);
+            self.arena.release_page(kind);
+            bail!("session {} was evicted", self.id);
+        }
+        let data = match kind {
+            PageKind::Quant => PageData::Quant(None),
+            PageKind::Fp => PageData::Fp(vec![0.0; d.elems]),
+        };
+        let id = match d.free.pop() {
+            Some(id) => {
+                d.slots[id as usize].state = Some(data);
+                id
+            }
+            None => {
+                let id = d.slots.len() as u32;
+                d.slots.push(Slot { gen: 0, state: Some(data) });
+                id
+            }
+        };
+        let gen = d.slots[id as usize].gen;
+        self.live.fetch_add(1, Ordering::AcqRel);
+        Ok(Some(PageHandle { id, gen }))
+    }
+
+    pub fn free(&self, h: PageHandle) -> Result<PageKind> {
+        let mut d = self.lock();
+        d.check(h)?;
+        let slot = &mut d.slots[h.id as usize];
+        let kind = match slot.state.take() {
+            Some(PageData::Quant(_)) => PageKind::Quant,
+            Some(PageData::Fp(_)) => PageKind::Fp,
+            None => unreachable!("check() verified the slot is in use"),
+        };
+        slot.gen = slot.gen.wrapping_add(1);
+        d.free.push(h.id);
+        drop(d);
+        self.live.fetch_sub(1, Ordering::AcqRel);
+        self.arena.release_page(kind);
+        Ok(kind)
+    }
+
+    /// Free every live page (session release / eviction). Generation bumps
+    /// make any handle a stale `PagedKvCache` still holds error cleanly.
+    pub fn free_all(&self) -> usize {
+        let mut guard = self.lock();
+        let d = &mut *guard; // split-borrow slots and the free list
+        let mut freed_quant = 0usize;
+        let mut freed_fp = 0usize;
+        for (id, slot) in d.slots.iter_mut().enumerate() {
+            match slot.state.take() {
+                Some(PageData::Quant(_)) => freed_quant += 1,
+                Some(PageData::Fp(_)) => freed_fp += 1,
+                None => continue,
+            }
+            slot.gen = slot.gen.wrapping_add(1);
+            d.free.push(id as u32);
+        }
+        drop(guard);
+        let freed = freed_quant + freed_fp;
+        if freed > 0 {
+            self.live.fetch_sub(freed, Ordering::AcqRel);
+        }
+        for _ in 0..freed_quant {
+            self.arena.release_page(PageKind::Quant);
+        }
+        for _ in 0..freed_fp {
+            self.arena.release_page(PageKind::Fp);
+        }
+        freed
+    }
+
+    /// Evict: reject future allocations and reclaim every page. Called by
+    /// the session manager (LRU eviction and release) — the session's own
+    /// data plane never calls this. The flag is stored before `free_all`
+    /// takes the data lock (see the re-check in `alloc_impl`).
+    pub fn retire(&self) -> usize {
+        self.evicted.store(true, Ordering::Release);
+        self.free_all()
+    }
+
+    /// Structural invariants of this shard (free-list consistency and the
+    /// lock-free `live` mirror matching the slot states).
+    pub fn check_integrity(&self) -> Result<()> {
+        let d = self.lock();
+        d.check_integrity_inner()?;
+        ensure!(
+            d.live_slots() == self.live_pages(),
+            "shard {}: live mirror {} != {} in-use slots",
+            self.id,
+            self.live_pages(),
+            d.live_slots()
+        );
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::quant::quant_group;
 
-    fn pool(pages: usize) -> PagePool {
-        PagePool::new(PoolConfig {
+    fn arena(pages: usize) -> Arc<PagePool> {
+        Arc::new(PagePool::new(PoolConfig {
             pages,
             page_tokens: 4,
             kv_dim: 2,
             ..PoolConfig::default()
-        })
+        }))
     }
 
-    fn group(pool: &PagePool, seed: f32) -> PackedGroup {
-        let n = pool.cfg().page_tokens * pool.cfg().kv_dim;
+    fn group(p: &PagePool, seed: f32) -> PackedGroup {
+        let n = p.cfg().page_tokens * p.cfg().kv_dim;
         let xs: Vec<f32> = (0..n).map(|i| seed + i as f32 * 0.25).collect();
         quant_group(&xs).unwrap()
     }
 
+    fn alloc(s: &SessionShard, kind: PageKind) -> Result<PageHandle> {
+        match s.try_alloc(kind)? {
+            Some(h) => Ok(h),
+            None => bail!("arena full"),
+        }
+    }
+
     #[test]
     fn alloc_free_roundtrip() {
-        let mut p = pool(4);
-        let h = p.alloc(PageKind::Fp, 1).unwrap();
-        assert_eq!(p.pages_in_use(), 1);
-        p.fp_mut(h, 1).unwrap()[0] = 3.5;
-        assert_eq!(p.fp(h, 1).unwrap()[0], 3.5);
-        p.free(h, 1).unwrap();
-        assert_eq!(p.pages_in_use(), 0);
-        p.check_integrity().unwrap();
+        let a = arena(4);
+        let s = SessionShard::new(1, a.clone(), 16);
+        let h = alloc(&s, PageKind::Fp).unwrap();
+        assert_eq!(a.pages_in_use(), 1);
+        assert_eq!(s.live_pages(), 1);
+        s.lock().fp_mut(h).unwrap()[0] = 3.5;
+        assert_eq!(s.lock().fp(h).unwrap()[0], 3.5);
+        s.free(h).unwrap();
+        assert_eq!(a.pages_in_use(), 0);
+        s.check_integrity().unwrap();
     }
 
     #[test]
     fn exhaustion_and_reuse() {
-        let mut p = pool(2);
-        let a = p.alloc(PageKind::Fp, 1).unwrap();
-        let _b = p.alloc(PageKind::Quant, 1).unwrap();
-        assert!(p.alloc(PageKind::Fp, 1).is_err(), "pool must be exhausted");
-        p.free(a, 1).unwrap();
-        let c = p.alloc(PageKind::Quant, 2).unwrap();
-        assert_eq!(c.id(), a.id(), "freed page is reused");
-        p.check_integrity().unwrap();
+        let a = arena(2);
+        let s = SessionShard::new(1, a.clone(), 16);
+        let first = alloc(&s, PageKind::Fp).unwrap();
+        let _b = alloc(&s, PageKind::Quant).unwrap();
+        assert!(
+            s.try_alloc(PageKind::Fp).unwrap().is_none(),
+            "arena must report full, not error"
+        );
+        s.free(first).unwrap();
+        let c = alloc(&s, PageKind::Quant).unwrap();
+        assert_eq!(c.id(), first.id(), "freed slot is reused");
+        s.check_integrity().unwrap();
     }
 
     #[test]
     fn stale_handle_rejected() {
-        let mut p = pool(2);
-        let h = p.alloc(PageKind::Fp, 1).unwrap();
-        p.free(h, 1).unwrap();
-        assert!(p.free(h, 1).is_err(), "double free must be rejected");
-        let h2 = p.alloc(PageKind::Fp, 1).unwrap();
+        let a = arena(2);
+        let s = SessionShard::new(1, a, 16);
+        let h = alloc(&s, PageKind::Fp).unwrap();
+        s.free(h).unwrap();
+        assert!(s.free(h).is_err(), "double free must be rejected");
+        let h2 = alloc(&s, PageKind::Fp).unwrap();
         assert_eq!(h2.id(), h.id());
-        assert!(p.fp(h, 1).is_err(), "stale handle must not read new page");
+        assert!(s.lock().fp(h).is_err(), "stale handle must not read new page");
     }
 
     #[test]
-    fn owner_enforced() {
-        let mut p = pool(2);
-        let h = p.alloc(PageKind::Fp, 1).unwrap();
-        assert!(p.fp(h, 2).is_err());
-        assert!(p.free(h, 2).is_err());
-        p.free(h, 1).unwrap();
+    fn shards_isolate_sessions_under_one_budget() {
+        // Two shards on one 3-page arena: handles are shard-local, the
+        // budget is global, and freeing one shard leaves the other intact.
+        let a = arena(3);
+        let s1 = SessionShard::new(7, a.clone(), 16);
+        let s2 = SessionShard::new(9, a.clone(), 16);
+        let h1 = alloc(&s1, PageKind::Fp).unwrap();
+        let h2 = alloc(&s2, PageKind::Fp).unwrap();
+        // shard-local ids both start at 0; the data does not alias
+        assert_eq!(h1.id(), 0);
+        assert_eq!(h2.id(), 0);
+        s1.lock().fp_mut(h1).unwrap()[0] = 1.0;
+        s2.lock().fp_mut(h2).unwrap()[0] = 2.0;
+        assert_eq!(s1.lock().fp(h1).unwrap()[0], 1.0);
+        assert_eq!(s2.lock().fp(h2).unwrap()[0], 2.0);
+        let _h3 = alloc(&s2, PageKind::Quant).unwrap();
+        assert!(s1.try_alloc(PageKind::Fp).unwrap().is_none(), "global budget");
+        assert_eq!(s1.free_all(), 1);
+        assert_eq!(a.pages_in_use(), 2);
+        assert_eq!(s2.lock().fp(h2).unwrap()[0], 2.0, "other shard untouched");
+        s1.check_integrity().unwrap();
+        s2.check_integrity().unwrap();
     }
 
     #[test]
-    fn free_all_reclaims_only_owner() {
-        let mut p = pool(8);
-        for _ in 0..3 {
-            p.alloc(PageKind::Quant, 7).unwrap();
-        }
-        let other = p.alloc(PageKind::Fp, 9).unwrap();
-        assert_eq!(p.free_all(7), 3);
-        assert_eq!(p.pages_in_use(), 1);
-        assert!(p.fp(other, 9).is_ok());
-        p.check_integrity().unwrap();
+    fn retired_shard_rejects_alloc_and_reads() {
+        let a = arena(4);
+        let s = SessionShard::new(3, a.clone(), 16);
+        let h = alloc(&s, PageKind::Fp).unwrap();
+        assert_eq!(s.retire(), 1);
+        assert_eq!(a.pages_in_use(), 0);
+        let err = s.try_alloc(PageKind::Fp).unwrap_err().to_string();
+        assert!(err.contains("evicted"), "got: {err}");
+        assert_eq!(a.pages_in_use(), 0, "rejected alloc returned its budget");
+        assert!(s.lock().fp(h).is_err(), "gen bump invalidates old handles");
     }
 
     #[test]
     fn quant_write_read() {
-        let mut p = pool(2);
-        let h = p.alloc(PageKind::Quant, 1).unwrap();
-        assert!(p.read_quant(h, 1).is_err(), "unwritten page unreadable");
-        let g = group(&p, -1.0);
-        p.write_quant(h, 1, g.clone()).unwrap();
-        assert_eq!(*p.read_quant(h, 1).unwrap(), g);
+        let a = arena(2);
+        let s = SessionShard::new(1, a.clone(), 16);
+        let h = alloc(&s, PageKind::Quant).unwrap();
+        assert!(s.lock().read_quant(h).is_err(), "unwritten page unreadable");
+        let g = group(&a, -1.0);
+        s.lock().write_quant(h, g.clone()).unwrap();
+        assert_eq!(*s.lock().read_quant(h).unwrap(), g);
     }
 
     #[test]
     fn byte_accounting() {
-        let mut p = pool(4);
+        let a = arena(4);
+        let s = SessionShard::new(1, a.clone(), 16);
         let elems = 8; // 4 tokens * 2 dims
-        p.alloc(PageKind::Quant, 1).unwrap();
-        p.alloc(PageKind::Fp, 1).unwrap();
+        alloc(&s, PageKind::Quant).unwrap();
+        alloc(&s, PageKind::Fp).unwrap();
         // packed quant page: two nibbles per byte + f32 scale/zero
-        assert_eq!(p.host_bytes(), (elems + 8) + 4 * elems);
-        assert_eq!(p.logical_bytes(), (elems + 4) + 2 * elems);
-        assert!(p.logical_bytes() < p.host_bytes());
+        assert_eq!(a.host_bytes(), (elems + 8) + 4 * elems);
+        assert_eq!(a.logical_bytes(), (elems + 4) + 2 * elems);
+        assert!(a.logical_bytes() < a.host_bytes());
     }
 
-    /// Property: random alloc/free sequences never corrupt the arena —
-    /// counts stay consistent, nothing double-frees, nothing leaks.
+    #[test]
+    fn traffic_counters_are_lock_free_adds() {
+        let a = arena(2);
+        a.note_dequant_many(true, 3, 12);
+        a.note_dequant_many(false, 1, 8);
+        let t = a.traffic();
+        assert_eq!(t.dequant_calls_draft, 3);
+        assert_eq!(t.bytes_read_draft, 12);
+        assert_eq!(t.dequant_calls_target, 1);
+        assert_eq!(t.bytes_read_target, 8);
+    }
+
+    /// Property: random alloc/free sequences across several shards never
+    /// corrupt the arena — counts stay consistent, nothing double-frees,
+    /// nothing leaks, and the global budget holds.
     #[test]
     fn prop_alloc_free_invariants() {
         use crate::util::prop::{check, Config};
         check::<Vec<usize>, _>(
             Config { cases: 60, size: 48, ..Config::default() },
             |ops| {
-                let mut p = pool(6);
-                let mut live: Vec<(PageHandle, SessionId)> = Vec::new();
+                let a = arena(6);
+                let shards: Vec<SessionShard> =
+                    (0..4u64).map(|i| SessionShard::new(i, a.clone(), a.capacity())).collect();
+                let mut live: Vec<(usize, PageHandle)> = Vec::new();
                 for &op in ops {
                     match op % 3 {
                         0 | 1 => {
-                            let owner = (op % 4) as SessionId;
+                            let owner = op % 4;
                             let kind =
                                 if op % 2 == 0 { PageKind::Quant } else { PageKind::Fp };
-                            match p.alloc(kind, owner) {
-                                Ok(h) => live.push((h, owner)),
-                                Err(_) => {
-                                    if p.pages_in_use() != p.capacity() {
-                                        return false; // alloc may only fail when full
+                            match shards[owner].try_alloc(kind).unwrap() {
+                                Some(h) => live.push((owner, h)),
+                                None => {
+                                    if a.pages_in_use() != a.capacity() {
+                                        return false; // only fails when full
                                     }
                                 }
                             }
                         }
                         _ => {
                             if !live.is_empty() {
-                                let (h, owner) = live.remove(op % live.len());
-                                if p.free(h, owner).is_err() {
+                                let (owner, h) = live.remove(op % live.len());
+                                if shards[owner].free(h).is_err() {
                                     return false;
                                 }
                                 // a second free of the same handle must fail
-                                if p.free(h, owner).is_ok() {
+                                if shards[owner].free(h).is_ok() {
                                     return false;
                                 }
                             }
                         }
                     }
-                    if p.check_integrity().is_err() {
+                    if a.pages_in_use() != live.len() {
                         return false;
                     }
-                    if p.pages_in_use() != live.len() {
-                        return false;
-                    }
-                }
-                for (h, owner) in live {
-                    if p.free(h, owner).is_err() {
+                    if shards.iter().any(|s| s.check_integrity().is_err()) {
                         return false;
                     }
                 }
-                p.pages_in_use() == 0 && p.check_integrity().is_ok()
+                for (owner, h) in live {
+                    if shards[owner].free(h).is_err() {
+                        return false;
+                    }
+                }
+                a.pages_in_use() == 0
             },
         );
     }

@@ -17,12 +17,26 @@
 //! exhausted, nothing evictable) surfaces as a clean error before any
 //! state is lost.
 //!
+//! # Locking (the parallel-rounds contract)
+//!
+//! All page data lives in this session's [`SessionShard`]; every method
+//! here locks ONLY that shard (uncontended when each session steps on its
+//! own batcher worker) plus atomic adds on the global arena for byte and
+//! traffic accounting. The session-manager mutex is touched exactly
+//! twice in a session's life: once at construction (geometry check, shard
+//! fetch, FP-page allocation) and once at [`PagedKvCache::release`] — and
+//! on the slow allocation path when the arena is FULL (LRU eviction might
+//! free pages) or the session outgrows its admission reservation.
+//! Steady-state draft/verify/commit cycles, including flush-time page
+//! allocation (a lock-free CAS on the arena budget, bounded by the
+//! reservation), never acquire it.
+//!
 //! Steady-state reads go through [`PagedKvCache::read_token_into`] (one
 //! token) and [`PagedKvCache::read_tokens_into`] (a verify window of t
 //! contiguous slots): packed codes are dequantized lane-wise straight into
 //! a caller scratch buffer — no whole-group dequantization, no heap
 //! allocation (the cost model the paper's Table 4 kernels assume). The
-//! windowed read takes the pool mutex ONCE and does one group lookup per
+//! windowed read takes the shard mutex ONCE and does one group lookup per
 //! crossed group, so a γ-cycle's verify pays O(groups-crossed) lookups
 //! instead of O(γ). Bulk quantization (prefill) fans out over the
 //! process-wide shared pool sized by `PoolConfig::quant_workers`.
@@ -34,6 +48,8 @@
 //! O(prompt) prefill over O(chunk) slices. Both produce bit-identical
 //! caches (pages, codes, byte accounting) for the same token stream.
 
+use std::sync::Arc;
+
 use anyhow::{ensure, Context, Result};
 
 use crate::cache::CacheTracker;
@@ -41,7 +57,7 @@ use crate::quant::{quant_group, quant_groups_parallel};
 use crate::util::rng::Pcg32;
 use crate::util::threadpool::PoolHandle;
 
-use super::page::{PageHandle, PageKind, SessionId};
+use super::page::{PageHandle, PageKind, SessionId, SessionShard};
 use super::session::SharedSessionManager;
 
 /// Map from a session's logical cache to arena pages.
@@ -53,9 +69,11 @@ pub struct BlockTable {
     pub fp: Vec<PageHandle>,
 }
 
-/// One session's KV cache living entirely in the shared pool.
+/// One session's KV cache living entirely in its pool shard.
 pub struct PagedKvCache {
     mgr: SharedSessionManager,
+    /// This session's slice of the arena: the data plane runs on its lock.
+    shard: Arc<SessionShard>,
     pub session: SessionId,
     table: BlockTable,
     tracker: Option<CacheTracker>,
@@ -85,8 +103,7 @@ impl PagedKvCache {
         ensure!(cap_tokens % g == 0, "cap_tokens must be a multiple of G");
         let fp_pages = (fb + g - 1) / g;
         let mut table = BlockTable::default();
-        let quant;
-        {
+        let (quant, shard) = {
             let mut m = lock(&mgr);
             ensure!(
                 m.pool().cfg().page_tokens == g && m.pool().cfg().kv_dim == d,
@@ -94,13 +111,18 @@ impl PagedKvCache {
                 m.pool().cfg().page_tokens,
                 m.pool().cfg().kv_dim
             );
-            quant = m.quant_handle();
+            let quant = m.quant_handle();
+            let shard = m.shard(session)?;
+            // manager-locked allocation at construction: the slow path can
+            // LRU-evict if the arena is already tight at admission time
             for _ in 0..fp_pages {
                 table.fp.push(m.alloc(session, PageKind::Fp)?);
             }
-        }
+            (quant, shard)
+        };
         Ok(PagedKvCache {
             mgr,
+            shard,
             session,
             table,
             tracker: None,
@@ -134,15 +156,28 @@ impl PagedKvCache {
         self.table.groups.len() + self.table.fp.len()
     }
 
-    /// (logical, host) bytes of this session's cache.
+    /// (logical, host) bytes of this session's cache. Pure arithmetic over
+    /// the block table and the arena config — no lock.
     pub fn session_bytes(&self) -> (usize, usize) {
-        let m = lock(&self.mgr);
-        let cfg = m.pool().cfg();
+        let cfg = self.shard.arena().cfg();
         let logical = self.table.groups.len() * cfg.quant_page_logical_bytes()
             + self.table.fp.len() * cfg.fp_page_logical_bytes();
         let host = self.table.groups.len() * cfg.quant_page_host_bytes()
             + self.table.fp.len() * cfg.fp_page_host_bytes();
         (logical, host)
+    }
+
+    /// Allocate one page: the lock-free shard/arena fast path (bounded by
+    /// the admission reservation), falling back to the manager-locked
+    /// slow path (LRU eviction, over-reservation growth) when the arena
+    /// is full or the reservation is exhausted. A reservation covers the
+    /// whole decode (`pool_pages_for_request` sizes prompt + budget), so
+    /// steady-state flushes take no global lock.
+    fn alloc_page(&self, kind: PageKind) -> Result<PageHandle> {
+        if let Some(h) = self.shard.try_alloc(kind)? {
+            return Ok(h);
+        }
+        lock(&self.mgr).alloc(self.session, kind)
     }
 
     // ---- FP buffer slots -------------------------------------------------
@@ -152,8 +187,8 @@ impl PagedKvCache {
         ensure!(slot < self.fb, "fp slot {slot} out of buffer (FB={})", self.fb);
         let off = (slot % self.g) * self.d;
         let page = self.table.fp[slot / self.g];
-        let mut m = lock(&self.mgr);
-        m.fp_mut(self.session, page)?[off..off + self.d].copy_from_slice(vals);
+        let mut s = self.shard.lock();
+        s.fp_mut(page)?[off..off + self.d].copy_from_slice(vals);
         Ok(())
     }
 
@@ -163,8 +198,8 @@ impl PagedKvCache {
         ensure!(slot < self.fb, "fp slot {slot} out of buffer (FB={})", self.fb);
         let off = (slot % self.g) * self.d;
         let page = self.table.fp[slot / self.g];
-        let m = lock(&self.mgr);
-        out.copy_from_slice(&m.fp(self.session, page)?[off..off + self.d]);
+        let s = self.shard.lock();
+        out.copy_from_slice(&s.fp(page)?[off..off + self.d]);
         Ok(())
     }
 
@@ -282,10 +317,8 @@ impl PagedKvCache {
             let groups = quant_groups_parallel(flats, &self.quant)
                 .context("prefill quantization")?;
             for group in groups {
-                let mut m = lock(&self.mgr);
-                let page = m.alloc(self.session, PageKind::Quant)?;
-                m.write_quant(self.session, page, group)?;
-                drop(m);
+                let page = self.alloc_page(PageKind::Quant)?;
+                self.shard.lock().write_quant(page, group)?;
                 self.table.groups.push(page);
             }
             gi = end;
@@ -308,9 +341,9 @@ impl PagedKvCache {
     }
 
     /// Write `vals.len() / d` contiguous cycle slots starting at cycle slot
-    /// `first` under ONE pool lock (the verify rewrite of a whole γ-window;
-    /// the per-token [`PagedKvCache::write_cycle_slot`] pays one lock per
-    /// slot). One contiguous copy per crossed FP page.
+    /// `first` under ONE shard lock (the verify rewrite of a whole
+    /// γ-window; the per-token [`PagedKvCache::write_cycle_slot`] pays one
+    /// lock per slot). One contiguous copy per crossed FP page.
     pub fn write_cycle_slots(&mut self, first: usize, vals: &[f32]) -> Result<()> {
         ensure!(
             !vals.is_empty() && vals.len() % self.d == 0,
@@ -323,9 +356,9 @@ impl PagedKvCache {
         let s0 = tr.draft_slot(first)?;
         // the last slot's check bounds the whole window (slots are base+i)
         tr.draft_slot(first + t - 1)?;
-        let mut m = lock(&self.mgr);
+        let mut s = self.shard.lock();
         for (pi, po, off, len) in fp_spans(self.g, self.d, s0, t) {
-            m.fp_mut(self.session, self.table.fp[pi])?[po..po + len]
+            s.fp_mut(self.table.fp[pi])?[po..po + len]
                 .copy_from_slice(&vals[off..off + len]);
         }
         Ok(())
@@ -367,12 +400,8 @@ impl PagedKvCache {
             flat.extend_from_slice(&self.read_fp_slot(t)?);
         }
         let group = quant_group(&flat).context("flush quantization")?;
-        let page = {
-            let mut m = lock(&self.mgr);
-            let page = m.alloc(self.session, PageKind::Quant)?;
-            m.write_quant(self.session, page, group)?;
-            page
-        };
+        let page = self.alloc_page(PageKind::Quant)?;
+        self.shard.lock().write_quant(page, group)?;
         self.table.groups.push(page);
         // Shift the surviving buffer tail down by G slots.
         let mut tail = Vec::with_capacity((n_f - self.g) * self.d);
@@ -407,14 +436,15 @@ impl PagedKvCache {
     }
 
     /// Zero-allocation batched read of the committed window `range` into
-    /// `out` (len `range.len() * d`) — the verify hot path. The pool mutex
-    /// is taken ONCE for the whole window and the quantized region costs
-    /// one block-table/arena lookup per *crossed group* (lane-wise span
-    /// dequant), so a γ-token verify window pays O(groups-crossed) lookups
-    /// instead of O(γ) lock/lookup round-trips. FP-buffer slots are copied
-    /// one contiguous span per crossed page. Dequant calls and packed
-    /// bytes touched are recorded in the session manager's
-    /// [`super::session::CacheTraffic`] exactly as per-token reads would.
+    /// `out` (len `range.len() * d`) — the verify hot path. The SHARD
+    /// mutex is taken ONCE for the whole window and the quantized region
+    /// costs one block-table/shard lookup per *crossed group* (lane-wise
+    /// span dequant), so a γ-token verify window pays O(groups-crossed)
+    /// lookups instead of O(γ) lock/lookup round-trips. FP-buffer slots
+    /// are copied one contiguous span per crossed page. Dequant calls and
+    /// packed bytes touched are recorded on the arena's atomic
+    /// [`super::session::CacheTraffic`] counters exactly as per-token
+    /// reads would — no global lock anywhere on this path.
     pub fn read_tokens_into(
         &self,
         range: std::ops::Range<usize>,
@@ -438,7 +468,7 @@ impl PagedKvCache {
             "window {range:?} beyond context ({} tokens)",
             tr.n_q + tr.n_f
         );
-        let mut m = lock(&self.mgr);
+        let s = self.shard.lock();
         let mut pos = range.start;
         let mut off = 0usize;
         // quantized region: one group lookup + one lane-wise span per group
@@ -447,7 +477,7 @@ impl PagedKvCache {
             let end = ((gi + 1) * self.g).min(range.end).min(tr.n_q);
             let k = end - pos;
             {
-                let group = m.read_quant(self.session, self.table.groups[gi])?;
+                let group = s.read_quant(self.table.groups[gi])?;
                 group.dequant_span_into(
                     (pos % self.g) * self.d,
                     draft,
@@ -457,7 +487,7 @@ impl PagedKvCache {
             // draft touches the upper plane only; target reads both
             let plane = self.d.div_ceil(2) as u64;
             let bytes = k as u64 * if draft { plane } else { 2 * plane };
-            m.note_dequant_many(draft, k as u64, bytes);
+            self.shard.arena().note_dequant_many(draft, k as u64, bytes);
             pos = end;
             off += k * self.d;
         }
@@ -467,9 +497,8 @@ impl PagedKvCache {
             let n = range.end - pos;
             let base = off;
             for (pi, po, span_off, len) in fp_spans(self.g, self.d, first, n) {
-                out[base + span_off..base + span_off + len].copy_from_slice(
-                    &m.fp(self.session, self.table.fp[pi])?[po..po + len],
-                );
+                out[base + span_off..base + span_off + len]
+                    .copy_from_slice(&s.fp(self.table.fp[pi])?[po..po + len]);
             }
         }
         Ok(())
@@ -479,7 +508,7 @@ impl PagedKvCache {
     /// at cycle slot `first` — the drafted, NOT-yet-committed window the
     /// verify pass just rewrote. Committed positions go through
     /// [`PagedKvCache::read_tokens_into`]; cycle slots live past `n_f`, so
-    /// they are addressed in draft-slot space. One pool lock, one
+    /// they are addressed in draft-slot space. One shard lock, one
     /// contiguous copy per crossed FP page.
     pub fn read_cycle_slots_into(&self, first: usize, out: &mut [f32]) -> Result<()> {
         ensure!(
@@ -493,10 +522,10 @@ impl PagedKvCache {
         let s0 = tr.draft_slot(first)?;
         // the last slot's check bounds the whole window (slots are base+i)
         tr.draft_slot(first + t - 1)?;
-        let m = lock(&self.mgr);
+        let s = self.shard.lock();
         for (pi, po, off, len) in fp_spans(self.g, self.d, s0, t) {
             out[off..off + len]
-                .copy_from_slice(&m.fp(self.session, self.table.fp[pi])?[po..po + len]);
+                .copy_from_slice(&s.fp(self.table.fp[pi])?[po..po + len]);
         }
         Ok(())
     }
@@ -505,8 +534,8 @@ impl PagedKvCache {
     /// (paper §4.2): used by the mock decoder's read-back validation.
     pub fn group_error_bound(&self, gi: usize, draft: bool) -> Result<f32> {
         ensure!(gi < self.table.groups.len(), "group {gi} out of range");
-        let m = lock(&self.mgr);
-        let group = m.read_quant(self.session, self.table.groups[gi])?;
+        let s = self.shard.lock();
+        let group = s.read_quant(self.table.groups[gi])?;
         let (e8, e4) = crate::quant::error_bounds(group);
         Ok(if draft { e4 } else { e8 })
     }
@@ -517,17 +546,16 @@ impl PagedKvCache {
     pub fn relocate_group(&mut self, gi: usize) -> Result<()> {
         ensure!(gi < self.table.groups.len(), "group {gi} out of range");
         let old = self.table.groups[gi];
-        let mut m = lock(&self.mgr);
-        let data = m.read_quant(self.session, old)?.clone();
-        let new = m.alloc(self.session, PageKind::Quant)?;
-        m.write_quant(self.session, new, data)?;
-        m.free(self.session, old)?;
-        drop(m);
+        let data = self.shard.lock().read_quant(old)?.clone();
+        let new = self.alloc_page(PageKind::Quant)?;
+        self.shard.lock().write_quant(new, data)?;
+        self.shard.free(old)?;
         self.table.groups[gi] = new;
         Ok(())
     }
 
-    /// Return every page to the pool and forget the session.
+    /// Return every page to the pool and forget the session (one manager
+    /// lock — the session leaves the admission books here).
     pub fn release(&mut self) {
         lock(&self.mgr).release(self.session);
         self.table = BlockTable::default();
@@ -535,7 +563,9 @@ impl PagedKvCache {
     }
 }
 
-fn lock(mgr: &SharedSessionManager) -> std::sync::MutexGuard<'_, super::session::SessionManager> {
+pub(crate) fn lock(
+    mgr: &SharedSessionManager,
+) -> std::sync::MutexGuard<'_, super::session::SessionManager> {
     mgr.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 
@@ -730,6 +760,49 @@ mod tests {
         }
         assert!(failed, "flush past the pool must error");
         lock(&mgr).check_integrity().unwrap();
+        c.release();
+        assert_eq!(lock(&mgr).pool().pages_in_use(), 0);
+    }
+
+    /// Tentpole acceptance (no global lock on the hot path): a thread
+    /// holding the session-manager mutex the ENTIRE time must not block a
+    /// steady-state decode — pref-filled cache, draft writes, batched
+    /// verify reads/rewrites, commits, and the flushes they trigger all
+    /// run on the shard lock + arena atomics alone. Before the sharding
+    /// refactor this deadlocked on the first read.
+    #[test]
+    fn steady_state_steps_never_take_the_manager_lock() {
+        use std::sync::mpsc;
+        use std::thread;
+        let mgr = pool_mgr(64);
+        let mut c = cache(&mgr, 1, 24);
+        c.prefill(3 * G, &|p| mock_kv(p, p as i32, D)).unwrap();
+        let guard = lock(&mgr); // manager mutex held for the whole decode
+        let (tx, rx) = mpsc::channel();
+        let worker = thread::spawn(move || {
+            let mut pos = 3 * G;
+            let mut win = vec![0.0f32; TMAX * D];
+            let mut committed = vec![0.0f32; G * D];
+            for cycle in 0..6 * G {
+                c.begin_cycle().unwrap();
+                let t = 1 + (cycle % TMAX);
+                for i in 0..t {
+                    c.write_cycle_slot(i, &mock_kv(pos + i, (pos + i) as i32, D))
+                        .unwrap();
+                }
+                c.read_cycle_slots_into(0, &mut win[..t * D]).unwrap();
+                c.read_tokens_into(0..G, cycle % 2 == 0, &mut committed).unwrap();
+                c.commit_cycle(t - 1, t).unwrap();
+                pos += t;
+            }
+            tx.send(c).unwrap();
+        });
+        let mut c = rx
+            .recv_timeout(std::time::Duration::from_secs(30))
+            .expect("steady-state decode blocked on the manager mutex");
+        drop(guard);
+        worker.join().unwrap();
+        assert!(c.table().groups.len() > 2, "flushes ran lock-free");
         c.release();
         assert_eq!(lock(&mgr).pool().pages_in_use(), 0);
     }
@@ -1078,4 +1151,3 @@ mod tests {
         );
     }
 }
-

@@ -1,12 +1,38 @@
-//! Session lifecycle over the page arena: admission reservations,
+//! Session lifecycle over the sharded page arena: admission reservations,
 //! LRU eviction of preemptable sessions, and pool-pressure accounting.
+//!
+//! # The sharded-locking contract
+//!
+//! The manager mutex (`SharedSessionManager`) is a **control-plane** lock.
+//! It is taken at:
+//!
+//! * **admit** — watermark admission + creating the session's
+//!   [`SessionShard`];
+//! * **release / evict** — retiring a shard and reclaiming its pages;
+//! * **alloc fallback** — when the arena is full (LRU eviction might
+//!   free pages) or a session outgrows its admission reservation (the
+//!   common-case allocation — within the reservation, arena not full —
+//!   is a lock-free CAS on the arena plus the session's own shard lock);
+//! * once-per-round bookkeeping from an embedded step batcher
+//!   (`note_prefill_deferrals`, `note_round`) and `/stats` snapshots.
+//!
+//! Steady-state draft/verify/commit cycles NEVER take this lock: page data
+//! lives in per-session [`SessionShard`]s (their own mutexes), the global
+//! page budget and cache-traffic counters are atomics on
+//! [`PagePool`], and flush-time page allocation goes through the arena's
+//! CAS. That is what lets `StepBatcher` rounds step N sessions on N
+//! workers at N-core throughput (`rust/src/coordinator/batcher.rs`).
+//!
+//! Lock order: manager mutex → shard mutex (admission/eviction/release may
+//! hold both); a shard mutex is never held while taking the manager mutex.
 //!
 //! Admission works on *committed* pages: for every live session the manager
 //! counts `max(reserved, allocated)` so a freshly admitted request holds its
 //! cost-model reservation before it touches a page, and a session that
-//! outgrew its estimate is counted at its real footprint. A new reservation
-//! is admitted only if committed pages stay at or below the high watermark;
-//! when they would not, preemptable sessions (idle prefix caches, paused
+//! outgrew its estimate is counted at its real footprint (`allocated` is
+//! the shard's lock-free live-page mirror). A new reservation is admitted
+//! only if committed pages stay at or below the high watermark; when they
+//! would not, preemptable sessions (idle prefix caches, paused
 //! generations) are LRU-evicted down toward the low watermark first.
 
 use std::collections::BTreeMap;
@@ -18,23 +44,9 @@ use crate::cache::MemoryReport;
 use crate::util::json::Json;
 use crate::util::threadpool::{PoolHandle, ThreadPool};
 
-use super::page::{PageHandle, PageKind, PagePool, PoolConfig, SessionId};
+use super::page::{PageHandle, PageKind, PagePool, PoolConfig, SessionId, SessionShard};
 
-/// Quantized-cache read traffic, split by decode path (paper §4.2: the
-/// draft reads the INT4 plane, verify reads both planes). `bytes_read_*`
-/// count host bytes of packed codes actually touched, so acceptance-rate
-/// regressions can be correlated with cache traffic in `/stats`.
-#[derive(Debug, Clone, Copy, Default)]
-pub struct CacheTraffic {
-    /// Per-token dequantizations served from the INT4 (draft) plane.
-    pub dequant_calls_draft: u64,
-    /// Per-token dequantizations served from both planes (target/verify).
-    pub dequant_calls_target: u64,
-    /// Packed code bytes read on the draft path.
-    pub bytes_read_draft: u64,
-    /// Packed code bytes read on the target path.
-    pub bytes_read_target: u64,
-}
+pub use super::page::CacheTraffic;
 
 /// Outcome of an admission attempt.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -49,32 +61,35 @@ pub enum AdmitOutcome {
     TooLarge,
 }
 
-#[derive(Debug, Clone)]
 struct SessionEntry {
     reserved: usize,
-    allocated: usize,
     preemptable: bool,
     evicted: bool,
     last_touch: u64,
+    shard: Arc<SessionShard>,
 }
 
-/// Allocate/free/preempt broker between sessions and the shared arena.
+/// Admission/eviction broker between sessions and the shared arena.
 /// Also owns the ONE process-wide quantization thread pool (sized by
 /// `PoolConfig::quant_workers`): sessions clone a [`PoolHandle`] out at
 /// cache construction and fan bulk prefill quantization over the shared
 /// workers — no per-prefill thread spawning, and submits never hold the
 /// manager mutex.
 pub struct SessionManager {
-    pool: PagePool,
+    arena: Arc<PagePool>,
     /// The shared quantization pool; handles are cloned out per session.
     quant: ThreadPool,
     sessions: BTreeMap<SessionId, SessionEntry>,
     clock: u64,
     evictions: u64,
-    traffic: CacheTraffic,
     /// Prefill chunks deferred by quant-pool backpressure (recorded by
     /// `coordinator::batcher::QuantBackpressure`, surfaced in `/stats`).
     prefill_deferrals: u64,
+    // ---- round-parallelism telemetry (embedded step batchers) ----------
+    rounds: u64,
+    round_span_us: f64,
+    step_workers: usize,
+    step_workers_busy: usize,
 }
 
 /// The coordinator and paged caches share the manager behind one mutex.
@@ -91,20 +106,23 @@ impl SessionManager {
             "pool.quant_workers must be >= 1 (the shared quantization pool \
              needs at least one worker; use 1 for serial quantization)"
         );
-        let quant = ThreadPool::new(cfg.quant_workers);
+        let quant = ThreadPool::named(cfg.quant_workers, "qs-quant");
         Ok(SessionManager {
-            pool: PagePool::new(cfg),
+            arena: Arc::new(PagePool::new(cfg)),
             quant,
             sessions: BTreeMap::new(),
             clock: 0,
             evictions: 0,
-            traffic: CacheTraffic::default(),
             prefill_deferrals: 0,
+            rounds: 0,
+            round_span_us: 0.0,
+            step_workers: 0,
+            step_workers_busy: 0,
         })
     }
 
     pub fn pool(&self) -> &PagePool {
-        &self.pool
+        &self.arena
     }
 
     /// A `Sync`, cloneable handle onto the process-wide quantization pool.
@@ -137,24 +155,26 @@ impl SessionManager {
         self.prefill_deferrals
     }
 
-    /// Cumulative quantized-cache read traffic (draft vs target path).
-    pub fn traffic(&self) -> CacheTraffic {
-        self.traffic
+    /// Once-per-round telemetry from an embedded [`crate::coordinator::
+    /// batcher::StepBatcher`]: the round's wall span, how many step
+    /// workers ran sessions concurrently, and the configured worker count.
+    /// One manager-lock acquisition per ROUND (control plane) — the steps
+    /// themselves never touch this lock.
+    pub fn note_round(&mut self, span_us: f64, busy: usize, workers: usize) {
+        self.rounds += 1;
+        self.round_span_us = span_us;
+        self.step_workers_busy = busy;
+        self.step_workers = workers;
     }
 
-    /// Record `calls` per-token dequantizations touching `bytes` packed
-    /// code bytes in total. The batched window reader accounts one crossed
-    /// group at a time (calls = tokens served from that group), so a
-    /// γ-window read costs O(groups-crossed) counter updates, not O(γ).
-    /// Called on the zero-allocation read path: two plain integer adds.
-    pub(crate) fn note_dequant_many(&mut self, draft: bool, calls: u64, bytes: u64) {
-        if draft {
-            self.traffic.dequant_calls_draft += calls;
-            self.traffic.bytes_read_draft += bytes;
-        } else {
-            self.traffic.dequant_calls_target += calls;
-            self.traffic.bytes_read_target += bytes;
-        }
+    /// Batcher rounds recorded via [`SessionManager::note_round`].
+    pub fn rounds(&self) -> u64 {
+        self.rounds
+    }
+
+    /// Cumulative quantized-cache read traffic (draft vs target path).
+    pub fn traffic(&self) -> CacheTraffic {
+        self.arena.traffic()
     }
 
     pub fn active_sessions(&self) -> usize {
@@ -162,21 +182,21 @@ impl SessionManager {
     }
 
     /// Pages the pool is on the hook for: live pages plus unfilled
-    /// reservations.
+    /// reservations (shard live counts are lock-free mirrors).
     pub fn committed_pages(&self) -> usize {
         self.sessions
             .values()
             .filter(|s| !s.evicted)
-            .map(|s| s.reserved.max(s.allocated))
+            .map(|s| s.reserved.max(s.shard.live_pages()))
             .sum()
     }
 
     fn watermark_pages(&self, frac: f64) -> usize {
-        ((self.pool.capacity() as f64) * frac).floor() as usize
+        ((self.arena.capacity() as f64) * frac).floor() as usize
     }
 
     pub fn high_pages(&self) -> usize {
-        self.watermark_pages(self.pool.cfg().high_watermark)
+        self.watermark_pages(self.arena.cfg().high_watermark)
     }
 
     /// Admission control: book `pages` for a new session, evicting idle
@@ -198,7 +218,7 @@ impl SessionManager {
         // Over the ceiling: evict LRU preemptable sessions down toward the
         // low watermark (hysteresis) to make room.
         if self.committed_pages() + pages > high {
-            let low = self.watermark_pages(self.pool.cfg().low_watermark);
+            let low = self.watermark_pages(self.arena.cfg().low_watermark);
             while self.committed_pages() + pages > low {
                 if self.evict_lru(None).is_none() {
                     break;
@@ -209,25 +229,38 @@ impl SessionManager {
             return Ok(AdmitOutcome::Saturated);
         }
         self.clock += 1;
+        let shard = Arc::new(SessionShard::new(id, Arc::clone(&self.arena), pages));
         self.sessions.insert(
             id,
             SessionEntry {
                 reserved: pages,
-                allocated: 0,
                 preemptable,
                 evicted: false,
                 last_touch: self.clock,
+                shard,
             },
         );
         Ok(AdmitOutcome::Admitted)
     }
 
+    /// The admitted session's shard — the handle a `PagedKvCache` runs its
+    /// whole data plane through (one clone at construction, no manager
+    /// lock afterwards).
+    pub fn shard(&self, id: SessionId) -> Result<Arc<SessionShard>> {
+        match self.sessions.get(&id) {
+            None => bail!("session {id} not admitted"),
+            Some(s) if s.evicted => bail!("session {id} was evicted"),
+            Some(s) => Ok(Arc::clone(&s.shard)),
+        }
+    }
+
     /// Free every page a session owns and forget it. Idempotent: releasing
     /// an unknown session is a no-op (returns 0).
     pub fn release(&mut self, id: SessionId) -> usize {
-        let freed = self.pool.free_all(id);
-        self.sessions.remove(&id);
-        freed
+        match self.sessions.remove(&id) {
+            Some(e) => e.shard.retire(),
+            None => 0,
+        }
     }
 
     /// LRU-touch: marks the session recently used (eviction order).
@@ -256,13 +289,15 @@ impl SessionManager {
             .sessions
             .iter()
             .filter(|(id, s)| {
-                s.preemptable && !s.evicted && s.allocated > 0 && Some(**id) != exclude
+                s.preemptable
+                    && !s.evicted
+                    && s.shard.live_pages() > 0
+                    && Some(**id) != exclude
             })
             .min_by_key(|(_, s)| s.last_touch)
             .map(|(id, _)| *id)?;
-        self.pool.free_all(victim);
         let entry = self.sessions.get_mut(&victim).expect("victim exists");
-        entry.allocated = 0;
+        entry.shard.retire();
         entry.reserved = 0;
         entry.evicted = true;
         self.evictions += 1;
@@ -270,57 +305,37 @@ impl SessionManager {
     }
 
     /// Allocate one page for a session, evicting preemptable sessions if
-    /// the arena itself is full.
+    /// the arena itself is full. This is the manager-locked SLOW path; the
+    /// data plane first tries `SessionShard::try_alloc` (lock-free budget
+    /// CAS, bounded by the admission reservation) and only lands here when
+    /// the arena is full or the session outgrows its reservation — holding
+    /// the manager mutex here is what keeps `committed_pages` consistent
+    /// with concurrent watermark admissions while `live` crosses
+    /// `reserved`.
     pub fn alloc(&mut self, id: SessionId, kind: PageKind) -> Result<PageHandle> {
-        match self.sessions.get(&id) {
+        let shard = match self.sessions.get(&id) {
             None => bail!("session {id} not admitted"),
             Some(s) if s.evicted => bail!("session {id} was evicted"),
-            Some(_) => {}
-        }
-        while self.pool.pages_in_use() >= self.pool.capacity() {
+            Some(s) => Arc::clone(&s.shard),
+        };
+        loop {
+            if let Some(h) = shard.alloc_locked(kind)? {
+                return Ok(h);
+            }
             if self.evict_lru(Some(id)).is_none() {
                 bail!(
                     "pool exhausted and nothing preemptable \
                      ({} pages, session {id})",
-                    self.pool.capacity()
+                    self.arena.capacity()
                 );
             }
         }
-        let h = self.pool.alloc(kind, id)?;
-        self.sessions.get_mut(&id).expect("checked above").allocated += 1;
-        Ok(h)
     }
 
     pub fn free(&mut self, id: SessionId, h: PageHandle) -> Result<()> {
-        self.pool.free(h, id)?;
-        let entry = self.sessions.get_mut(&id);
-        if let Some(e) = entry {
-            e.allocated = e.allocated.saturating_sub(1);
-        }
+        let shard = self.shard(id)?;
+        shard.free(h)?;
         Ok(())
-    }
-
-    // ---- data-plane passthroughs (owner-checked by the arena) ----------
-
-    pub fn write_quant(
-        &mut self,
-        id: SessionId,
-        h: PageHandle,
-        group: crate::quant::PackedGroup,
-    ) -> Result<()> {
-        self.pool.write_quant(h, id, group)
-    }
-
-    pub fn read_quant(&self, id: SessionId, h: PageHandle) -> Result<&crate::quant::PackedGroup> {
-        self.pool.read_quant(h, id)
-    }
-
-    pub fn fp(&self, id: SessionId, h: PageHandle) -> Result<&[f32]> {
-        self.pool.fp(h, id)
-    }
-
-    pub fn fp_mut(&mut self, id: SessionId, h: PageHandle) -> Result<&mut [f32]> {
-        self.pool.fp_mut(h, id)
     }
 
     // ---- reporting ------------------------------------------------------
@@ -330,44 +345,45 @@ impl SessionManager {
         MemoryReport {
             weights_logical: 0,
             weights_host: 0,
-            cache_logical: self.pool.logical_bytes(),
-            cache_host: self.pool.host_bytes(),
+            cache_logical: self.arena.logical_bytes(),
+            cache_host: self.arena.host_bytes(),
         }
     }
 
     /// Snapshot for `/stats` and the benches.
     pub fn stats_json(&self) -> Json {
         let (q_workers, q_jobs, q_depth) = self.quant_pool_stats();
+        let traffic = self.traffic();
         Json::obj(vec![
-            ("pages_capacity", Json::num(self.pool.capacity() as f64)),
-            ("pages_in_use", Json::num(self.pool.pages_in_use() as f64)),
-            ("pages_peak", Json::num(self.pool.peak_pages_in_use() as f64)),
+            ("pages_capacity", Json::num(self.arena.capacity() as f64)),
+            ("pages_in_use", Json::num(self.arena.pages_in_use() as f64)),
+            ("pages_peak", Json::num(self.arena.peak_pages_in_use() as f64)),
             ("pages_committed", Json::num(self.committed_pages() as f64)),
-            ("pressure", Json::num(self.pool.pressure())),
-            ("high_watermark", Json::num(self.pool.cfg().high_watermark)),
-            ("low_watermark", Json::num(self.pool.cfg().low_watermark)),
+            ("pressure", Json::num(self.arena.pressure())),
+            ("high_watermark", Json::num(self.arena.cfg().high_watermark)),
+            ("low_watermark", Json::num(self.arena.cfg().low_watermark)),
             ("sessions_active", Json::num(self.active_sessions() as f64)),
             ("evictions", Json::num(self.evictions as f64)),
-            ("cache_bytes_host", Json::num(self.pool.host_bytes() as f64)),
+            ("cache_bytes_host", Json::num(self.arena.host_bytes() as f64)),
             (
                 "cache_bytes_logical",
-                Json::num(self.pool.logical_bytes() as f64),
+                Json::num(self.arena.logical_bytes() as f64),
             ),
             (
                 crate::metrics::names::DEQUANT_CALLS_DRAFT,
-                Json::num(self.traffic.dequant_calls_draft as f64),
+                Json::num(traffic.dequant_calls_draft as f64),
             ),
             (
                 crate::metrics::names::DEQUANT_CALLS_TARGET,
-                Json::num(self.traffic.dequant_calls_target as f64),
+                Json::num(traffic.dequant_calls_target as f64),
             ),
             (
                 crate::metrics::names::QUANT_BYTES_READ_DRAFT,
-                Json::num(self.traffic.bytes_read_draft as f64),
+                Json::num(traffic.bytes_read_draft as f64),
             ),
             (
                 crate::metrics::names::QUANT_BYTES_READ_TARGET,
-                Json::num(self.traffic.bytes_read_target as f64),
+                Json::num(traffic.bytes_read_target as f64),
             ),
             (
                 crate::metrics::names::QUANT_POOL_WORKERS,
@@ -382,26 +398,47 @@ impl SessionManager {
                 crate::metrics::names::PREFILL_DEFERRALS,
                 Json::num(self.prefill_deferrals as f64),
             ),
+            (
+                crate::metrics::names::STEP_WORKERS,
+                Json::num(self.step_workers as f64),
+            ),
+            (
+                crate::metrics::names::STEP_WORKERS_BUSY,
+                Json::num(self.step_workers_busy as f64),
+            ),
+            (
+                crate::metrics::names::ROUND_SPAN_US,
+                Json::num(self.round_span_us),
+            ),
+            (
+                crate::metrics::names::BATCHER_ROUNDS,
+                Json::num(self.rounds as f64),
+            ),
         ])
+    }
+
+    /// Round-parallelism snapshot for the gauge sync:
+    /// (step_workers, step_workers_busy, round_span_us, rounds).
+    pub fn round_stats(&self) -> (usize, usize, f64, u64) {
+        (
+            self.step_workers,
+            self.step_workers_busy,
+            self.round_span_us,
+            self.rounds,
+        )
     }
 
     /// Cross-check session accounting against the arena.
     pub fn check_integrity(&self) -> Result<()> {
-        self.pool.check_integrity()?;
-        let total: usize = self.sessions.values().map(|s| s.allocated).sum();
+        let total: usize = self.sessions.values().map(|s| s.shard.live_pages()).sum();
         ensure!(
-            total == self.pool.pages_in_use(),
+            total == self.arena.pages_in_use(),
             "session accounting {} != pool in-use {}",
             total,
-            self.pool.pages_in_use()
+            self.arena.pages_in_use()
         );
-        for (id, s) in &self.sessions {
-            ensure!(
-                self.pool.pages_owned(*id) == s.allocated,
-                "session {id} claims {} pages, arena holds {}",
-                s.allocated,
-                self.pool.pages_owned(*id)
-            );
+        for s in self.sessions.values() {
+            s.shard.check_integrity()?;
         }
         Ok(())
     }
@@ -483,6 +520,9 @@ mod tests {
         m.alloc(9, PageKind::Fp).unwrap();
         m.evict_lru(None).unwrap();
         assert!(m.alloc(9, PageKind::Fp).is_err(), "evicted session rejected");
+        // the shard-level fast path rejects the evicted session too
+        let shard = m.sessions.get(&9).unwrap().shard.clone();
+        assert!(shard.try_alloc(PageKind::Fp).is_err());
     }
 
     #[test]
@@ -519,6 +559,21 @@ mod tests {
         assert_eq!(m.release(5), 1);
         assert_eq!(m.release(5), 0);
         assert_eq!(m.pool().pages_in_use(), 0);
+    }
+
+    #[test]
+    fn round_telemetry_surfaces_in_stats() {
+        let mut m = mgr(8);
+        m.note_round(123.5, 2, 4);
+        m.note_round(80.0, 3, 4);
+        assert_eq!(m.rounds(), 2);
+        let (workers, busy, span, rounds) = m.round_stats();
+        assert_eq!((workers, busy, rounds), (4, 3, 2));
+        assert!((span - 80.0).abs() < 1e-9);
+        let js = m.stats_json().to_string();
+        for key in ["step_workers", "step_workers_busy", "round_span_us", "batcher_rounds"] {
+            assert!(js.contains(key), "missing {key} in {js}");
+        }
     }
 
     /// Property: random admit/alloc/free/touch/evict/release traffic keeps
@@ -579,5 +634,109 @@ mod tests {
                 m.pool().pages_in_use() == 0 && m.check_integrity().is_ok()
             },
         );
+    }
+
+    /// Stress (sharded accounting): concurrent sessions allocating and
+    /// freeing through their own shards while a chaos thread admits,
+    /// evicts, and releases through the manager lock. Under every
+    /// interleaving the arena's CAS budget must hold (`peak <= capacity`),
+    /// every successful admission must leave committed pages at or under
+    /// the high watermark, and the final accounting must balance.
+    #[test]
+    fn stress_concurrent_shard_allocs_never_overcommit() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::thread;
+        let cfg = PoolConfig {
+            pages: 24,
+            page_tokens: 4,
+            kv_dim: 2,
+            high_watermark: 0.9, // ceiling: 21 pages
+            low_watermark: 0.7,
+            ..PoolConfig::default()
+        };
+        let high = 21usize;
+        let m = shared(cfg).unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut workers = Vec::new();
+        for t in 0..4u64 {
+            let m = Arc::clone(&m);
+            let stop = Arc::clone(&stop);
+            workers.push(thread::spawn(move || {
+                let mut iter = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    iter += 1;
+                    let id = t * 1_000_000 + iter;
+                    let reserved = 3 + (iter % 3) as usize;
+                    let admitted = {
+                        let mut mm = m.lock().unwrap();
+                        match mm.admit(id, reserved, iter % 4 == 0) {
+                            Ok(AdmitOutcome::Admitted) => {
+                                // the watermark decision we just took must
+                                // hold under the same lock
+                                assert!(
+                                    mm.committed_pages() <= high,
+                                    "admission over-committed: {} > {high}",
+                                    mm.committed_pages()
+                                );
+                                true
+                            }
+                            Ok(_) => false,
+                            Err(e) => panic!("admit: {e}"),
+                        }
+                    };
+                    if !admitted {
+                        continue;
+                    }
+                    let shard = m.lock().unwrap().shard(id).unwrap();
+                    // lock-free data-plane allocs within the reservation
+                    let mut held = Vec::new();
+                    for k in 0..reserved {
+                        let kind =
+                            if k % 2 == 0 { PageKind::Quant } else { PageKind::Fp };
+                        match shard.try_alloc(kind) {
+                            Ok(Some(h)) => held.push(h),
+                            Ok(None) => break, // arena full: fine, move on
+                            Err(_) => break,   // evicted under us: fine
+                        }
+                    }
+                    for h in held {
+                        // the shard may have been evicted mid-loop; a
+                        // stale-handle error is the designed outcome
+                        let _ = shard.free(h);
+                    }
+                    m.lock().unwrap().release(id);
+                }
+            }));
+        }
+        // chaos: LRU evictions racing the data plane
+        {
+            let m = Arc::clone(&m);
+            let stop = Arc::clone(&stop);
+            workers.push(thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    m.lock().unwrap().evict_lru(None);
+                    thread::yield_now();
+                }
+            }));
+        }
+        thread::sleep(std::time::Duration::from_millis(200));
+        stop.store(true, Ordering::Relaxed);
+        for w in workers {
+            w.join().unwrap();
+        }
+        let mut mm = m.lock().unwrap();
+        assert!(
+            mm.pool().peak_pages_in_use() <= mm.pool().capacity(),
+            "CAS budget breached: peak {} > capacity {}",
+            mm.pool().peak_pages_in_use(),
+            mm.pool().capacity()
+        );
+        // drain any sessions a worker left behind at stop time
+        let leftover: Vec<SessionId> = mm.sessions.keys().copied().collect();
+        for id in leftover {
+            mm.release(id);
+        }
+        assert_eq!(mm.pool().pages_in_use(), 0, "pages leaked under stress");
+        mm.check_integrity().unwrap();
     }
 }

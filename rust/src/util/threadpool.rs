@@ -133,6 +133,14 @@ pub struct ThreadPool {
 
 impl ThreadPool {
     pub fn new(threads: usize) -> Self {
+        Self::named(threads, "qs-worker")
+    }
+
+    /// A pool whose worker threads are named `{name}-{i}` — the process
+    /// now runs several kinds of pool (the shared quantization pool, a
+    /// step pool per embedded batcher), and thread names are what keeps a
+    /// stack dump readable.
+    pub fn named(threads: usize, name: &str) -> Self {
         let threads = threads.max(1);
         let inner = Arc::new(Inner {
             state: Mutex::new(QueueState {
@@ -149,7 +157,7 @@ impl ThreadPool {
             .map(|i| {
                 let inner = Arc::clone(&inner);
                 thread::Builder::new()
-                    .name(format!("qs-worker-{i}"))
+                    .name(format!("{name}-{i}"))
                     .spawn(move || worker_loop(&inner))
                     .expect("spawn worker")
             })

@@ -20,7 +20,11 @@
 //!   drafted/draft-logit/verify-window vectors are cycle-persistent
 //!   fields, so a steady-state step allocates only what the `Decoder`
 //!   trait returns by value (γ draft-logit vectors + the γ+1 verify rows
-//!   + the mock's verify bookkeeping) — 2γ+3 per cycle, not 2γ+6.
+//!   + the mock's verify bookkeeping) — 2γ+3 per cycle, not 2γ+6;
+//! * parallel rounds (ISSUE 5): dispatching a `StepBatcher` round over
+//!   step workers leaves per-STEP allocations unchanged — the measured
+//!   overhead vs serial rounds is bounded by the per-round dispatch
+//!   scaffolding (result slots, wait group, job boxes).
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -184,5 +188,55 @@ fn steady_state_hot_path_does_not_allocate() {
          (expected <= {} = {cycles} x (2 gamma + 3) + slack: cycle buffers \
          must be cycle-persistent)",
         cycles * per_cycle + 4
+    );
+
+    // ---- parallel rounds: per-step allocs unchanged vs serial ----------
+    // Dispatching a round over step workers must not change what a STEP
+    // allocates — the only new allocations are the per-round dispatch
+    // scaffolding (result slots, wait group, job boxes), bounded by a
+    // small constant per session per round. Measured against a serial
+    // batcher running the identical session set for the identical rounds.
+    use quantspec::coordinator::batcher::StepBatcher;
+    use quantspec::spec::Sampler as BSampler;
+    let n_sessions = 4usize;
+    let sgamma = 4usize;
+    let make_batcher = |workers: usize| {
+        // the step pool spawns its threads HERE, before any measurement
+        let mut b = StepBatcher::new(n_sessions).with_step_workers(workers);
+        for i in 0..n_sessions as u64 {
+            let s = quantspec::coordinator::batcher::ActiveSession::admit(
+                i,
+                Box::new(MockDecoder::new(MOCK_VOCAB, MOCK_GAMMA_MAX, 0.0)),
+                BSampler::new(0.0, i),
+                sgamma,
+                &[3, 1, 4, 1, i as i32],
+                4000,
+            )
+            .unwrap();
+            b.admit(s).unwrap();
+        }
+        b
+    };
+    let rounds = 30u64;
+    let mut measured = [0u64; 2];
+    for (slot, workers) in [(0usize, 1usize), (1, 2)] {
+        let mut b = make_batcher(workers);
+        for _ in 0..20 {
+            b.round().unwrap(); // warmup: buffers sized, worker TLS touched
+        }
+        let before = allocs();
+        for _ in 0..rounds {
+            b.round().unwrap();
+        }
+        measured[slot] = allocs() - before;
+        assert_eq!(b.active_len(), n_sessions, "no session finished mid-measure");
+    }
+    let [serial_rounds_allocs, parallel_rounds_allocs] = measured;
+    let dispatch_slack = rounds * (4 * n_sessions as u64 + 24);
+    assert!(
+        parallel_rounds_allocs <= serial_rounds_allocs + dispatch_slack,
+        "parallel rounds allocated {parallel_rounds_allocs} vs serial \
+         {serial_rounds_allocs} (+{dispatch_slack} dispatch slack) over \
+         {rounds} rounds — per-step allocations must be unchanged"
     );
 }
