@@ -5,9 +5,10 @@
 //! bounded by the chunk size, never the prompt size), and PARALLEL decode
 //! rounds over the sharded pool (4 sessions stepped on 2+ workers must
 //! beat serial rounds ≥ 1.5x, bit-identically; 1 worker must not regress
-//! serial) — reported alongside the Figure 6 KV-memory numbers the pool
-//! exists to manage. Emits `BENCH_pool_pressure.json` (checked by CI's
-//! `bench-smoke` jq gate).
+//! serial), plus the request-tracing overhead gate (a traced drain must
+//! stay within 1.05x of untraced, bit-identically) — reported alongside
+//! the Figure 6 KV-memory numbers the pool exists to manage. Emits
+//! `BENCH_pool_pressure.json` (checked by CI's `bench-smoke` jq gate).
 //!
 //!     cargo bench --bench pool_pressure
 
@@ -445,6 +446,116 @@ fn main() {
     tp.print("parallel rounds — N sessions stepped concurrently over the sharded pool");
     let _ = tp.write_csv("bench_out/pool_pressure_parallel.csv");
 
+    // --- phase 5: tracing overhead on the decode path --------------------
+    // The same heavy-geometry drain as phase 4 (G=32, d=256; serial
+    // rounds), with and without a request-scoped trace buffer attached to
+    // every session. Tracing is preallocated slots + relaxed atomic
+    // stores, so the traced drain must stay within 5% of untraced
+    // (best-of-N to shave scheduler noise) and token streams must be
+    // bit-identical.
+    use quantspec::trace::TraceBuf;
+    let run_traced_phase = |traced: bool| -> (f64, Vec<(u64, Vec<i32>)>) {
+        let mgr = pool::shared(PoolConfig {
+            pages: 512,
+            page_tokens: PG,
+            kv_dim: PD,
+            high_watermark: 1.0,
+            low_watermark: 1.0,
+            ..PoolConfig::default()
+        })
+        .expect("pool config valid");
+        let pages = memory::pool_pages_for_request(par_prompt, par_new, PG, fbp);
+        let cap = (pages - fbp.div_ceil(PG)) * PG;
+        let mut b = StepBatcher::new(par_sessions as usize);
+        let mut bufs = Vec::new();
+        for id in 1..=par_sessions {
+            assert_eq!(
+                mgr.lock().unwrap().admit(id, pages, false).unwrap(),
+                AdmitOutcome::Admitted
+            );
+            let dec = MockDecoder::with_pool(
+                MOCK_VOCAB,
+                MOCK_GAMMA_MAX,
+                0.15,
+                mgr.clone(),
+                id,
+                cap,
+            )
+            .unwrap();
+            let prompt = workload::prompt(id, par_prompt, Profile::Pg19);
+            let mut sess = ActiveSession::admit(
+                id,
+                Box::new(dec),
+                Sampler::new(0.0, id),
+                4,
+                &prompt,
+                par_new,
+            )
+            .unwrap();
+            if traced {
+                let buf = TraceBuf::new(4096);
+                sess = sess.with_trace(std::sync::Arc::clone(&buf));
+                bufs.push(buf);
+            }
+            b.admit(sess).unwrap();
+        }
+        let t = Instant::now();
+        b.drain().unwrap();
+        let secs = t.elapsed().as_secs_f64();
+        assert!(b.failed.is_empty(), "no step may fail in the bench");
+        for buf in &bufs {
+            assert_eq!(buf.dropped(), 0, "trace buffer sized for the drain");
+            assert!(buf.recorded() > 0, "traced sessions emitted events");
+        }
+        let mut toks: Vec<(u64, Vec<i32>)> =
+            b.finished.iter().map(|s| (s.id, s.tokens.clone())).collect();
+        toks.sort_by_key(|(id, _)| *id);
+        for id in 1..=par_sessions {
+            mgr.lock().unwrap().release(id);
+        }
+        (secs, toks)
+    };
+    let trace_reps = 5;
+    let best_traced = |traced: bool| -> (f64, Vec<(u64, Vec<i32>)>) {
+        let mut best_secs = f64::INFINITY;
+        let mut toks = Vec::new();
+        for _ in 0..trace_reps {
+            let (secs, t) = run_traced_phase(traced);
+            if toks.is_empty() {
+                toks = t;
+            } else {
+                assert_eq!(toks, t, "token streams diverged across repetitions");
+            }
+            best_secs = best_secs.min(secs);
+        }
+        (best_secs, toks)
+    };
+    let (untraced_secs, untraced_toks) = best_traced(false);
+    let (traced_secs, traced_toks) = best_traced(true);
+    assert_eq!(untraced_toks, traced_toks, "tracing changed decode outputs");
+    let trace_round_ratio = traced_secs / untraced_secs.max(1e-9);
+    assert!(
+        trace_round_ratio <= 1.05,
+        "traced drain {trace_round_ratio:.3}x over untraced (gate: 1.05x) — \
+         span recording leaked onto the hot path"
+    );
+    let mut tt = Table::new(&[
+        "sessions",
+        "untraced_ms",
+        "traced_ms",
+        "ratio",
+        "gate",
+    ]);
+    tt.row(&[
+        par_sessions.to_string(),
+        fmt_f(untraced_secs * 1e3, 3),
+        fmt_f(traced_secs * 1e3, 3),
+        format!("{trace_round_ratio:.3}x"),
+        "<=1.05x".to_string(),
+    ]);
+    tt.print("tracing overhead — traced vs untraced decode drain");
+    let _ = tt.write_csv("bench_out/pool_pressure_trace.csv");
+
     let json = Json::obj(vec![
         (
             "pool",
@@ -467,6 +578,15 @@ fn main() {
                 ("parallel_round_speedup", Json::num(parallel_round_speedup)),
                 ("one_worker_ratio", Json::num(one_worker_ratio)),
                 ("gate_enforced", Json::Bool(gate_enforced)),
+            ]),
+        ),
+        (
+            "trace_overhead",
+            Json::obj(vec![
+                ("sessions", Json::num(par_sessions as f64)),
+                ("untraced_secs", Json::num(untraced_secs)),
+                ("traced_secs", Json::num(traced_secs)),
+                ("trace_round_ratio", Json::num(trace_round_ratio)),
             ]),
         ),
         (

@@ -12,7 +12,10 @@
 //!   concurrently out of ONE bounded paged KV pool. The run validates the
 //!   pool contract: pages-in-use never exceeds the configured pool size,
 //!   an over-capacity request is rejected cleanly (never OOM), and
-//!   acceptance/output match the unpooled path exactly.
+//!   acceptance/output match the unpooled path exactly. It also scrapes
+//!   the observability surface: `GET /metrics` (Prometheus exposition,
+//!   written to `bench_out/metrics.prom` for CI to format-check) and
+//!   `GET /debug/requests` (the flight recorder's request timelines).
 //!
 //!     cargo run --release --example serve_longcontext -- --mock [--requests N]
 
@@ -105,6 +108,23 @@ fn fire_batch(
     out.wall = t0.elapsed().as_secs_f64();
     out.e2e.sort_by(f64::total_cmp);
     Ok(out)
+}
+
+/// One line of Prometheus text exposition: a `#` comment, a blank, or
+/// `name{labels} value` where the value parses as f64 (or `+Inf`).
+fn exposition_line_ok(line: &str) -> bool {
+    if line.is_empty() || line.starts_with('#') {
+        return true;
+    }
+    let Some((name_part, value)) = line.rsplit_once(' ') else {
+        return false;
+    };
+    if value != "+Inf" && value.parse::<f64>().is_err() {
+        return false;
+    }
+    let name = name_part.split('{').next().unwrap_or("");
+    !name.is_empty()
+        && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
 }
 
 fn report(tag: &str, n: usize, max_new: usize, r: &BatchResult) {
@@ -251,6 +271,64 @@ fn mock_main(args: &Args) -> anyhow::Result<()> {
         pooled.metrics.counter("requests_shed_pool"),
         pooled.metrics.counter("requests_rejected_too_large"),
     );
+
+    // --- observability: Prometheus exposition + flight recorder ---------
+    // Scrape /metrics from the live pooled coordinator, check every line
+    // is well-formed exposition, and persist the body so CI can gate on
+    // it; then pull /debug/requests and check the flight recorder holds
+    // complete timelines for the requests just served.
+    {
+        let (status, body) = http_request(&addr, "GET", "/metrics", b"")?;
+        assert_eq!(status, 200, "/metrics must serve");
+        let text = String::from_utf8(body)?;
+        let mut lines = 0usize;
+        for line in text.lines() {
+            lines += 1;
+            assert!(exposition_line_ok(line), "malformed exposition line: {line:?}");
+        }
+        for needle in [
+            "# TYPE requests_completed counter",
+            "# TYPE acceptance_rate_pct histogram",
+            "phase_verify_us_bucket",
+            "round_prefill_us",
+            "le=\"+Inf\"",
+        ] {
+            assert!(text.contains(needle), "/metrics missing {needle:?}");
+        }
+        std::fs::create_dir_all("bench_out")?;
+        std::fs::write("bench_out/metrics.prom", &text)?;
+        println!(
+            "\nmetrics         : {lines} exposition lines -> bench_out/metrics.prom"
+        );
+
+        let (status, body) = http_request(&addr, "GET", "/debug/requests", b"")?;
+        assert_eq!(status, 200, "/debug/requests must serve");
+        let j = Json::parse(std::str::from_utf8(&body)?).unwrap();
+        let reqs = j.get("requests").expect("requests array").as_arr().unwrap();
+        assert!(
+            !reqs.is_empty(),
+            "flight recorder must hold the requests just served"
+        );
+        for r in reqs {
+            let events = r.get("events").expect("events").as_arr().unwrap();
+            assert!(!events.is_empty(), "timeline has events");
+            assert_eq!(
+                events.last().unwrap().get("phase").unwrap().as_str(),
+                Some("completed"),
+                "every recorded timeline ends with its completion marker"
+            );
+            let mut last = 0i64;
+            for e in events {
+                let at = e.get("at_us").unwrap().as_i64().unwrap();
+                assert!(at >= last, "event stamps monotone");
+                last = at;
+            }
+        }
+        println!(
+            "flight recorder : {} complete request timelines in /debug/requests",
+            reqs.len()
+        );
+    }
 
     // --- pooled output must match the unpooled seed path ----------------
     let ur = fire_batch(&srv_plain.addr.to_string(), n_requests, prompt_len, 16, max_new, rate, true)?;

@@ -139,6 +139,17 @@ pub struct ServeConfig {
     /// `pool.pages == 0` disables pooling: sessions keep private,
     /// unaccounted cache state as in the original single-session path.
     pub pool: PoolConfig,
+    /// Request-scoped tracing: per-request phase timelines feeding the
+    /// flight recorder (`GET /debug/requests`) and the per-phase
+    /// histograms on `GET /metrics`. Cheap enough to leave on (overhead
+    /// is gated ≤1.05× in `pool_pressure` and zero-alloc in
+    /// `alloc_hotpath`).
+    pub trace_enabled: bool,
+    /// Event slots preallocated per traced request; events past this are
+    /// dropped (and counted) rather than allocated.
+    pub trace_buffer_events: usize,
+    /// Completed request timelines the flight recorder ring retains.
+    pub flight_recorder_requests: usize,
 }
 
 impl Default for ServeConfig {
@@ -160,6 +171,9 @@ impl Default for ServeConfig {
             step_workers: 1,
             batcher_slots: 4,
             pool: PoolConfig { pages: 0, ..PoolConfig::default() },
+            trace_enabled: true,
+            trace_buffer_events: 4096,
+            flight_recorder_requests: 64,
         }
     }
 }
@@ -224,6 +238,15 @@ impl ServeConfig {
         }
         if let Some(v) = j.get("batcher_slots").and_then(Json::as_usize) {
             c.batcher_slots = v.max(1);
+        }
+        if let Some(v) = j.get("trace_enabled").and_then(Json::as_bool) {
+            c.trace_enabled = v;
+        }
+        if let Some(v) = j.get("trace_buffer_events").and_then(Json::as_usize) {
+            c.trace_buffer_events = v;
+        }
+        if let Some(v) = j.get("flight_recorder_requests").and_then(Json::as_usize) {
+            c.flight_recorder_requests = v;
         }
         if let Some(p) = j.get("pool") {
             if let Some(v) = p.get("pages").and_then(Json::as_usize) {
@@ -352,6 +375,23 @@ mod tests {
         // 0 step workers propagates so the coordinator rejects it loudly
         let j = Json::parse(r#"{"step_workers":0}"#).unwrap();
         assert_eq!(ServeConfig::from_json(&j).unwrap().step_workers, 0);
+    }
+
+    #[test]
+    fn trace_knobs_from_json() {
+        let d = ServeConfig::default();
+        assert!(d.trace_enabled, "tracing is on by default");
+        assert_eq!(d.trace_buffer_events, 4096);
+        assert_eq!(d.flight_recorder_requests, 64);
+        let j = Json::parse(
+            r#"{"trace_enabled":false,"trace_buffer_events":128,
+                "flight_recorder_requests":8}"#,
+        )
+        .unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert!(!c.trace_enabled);
+        assert_eq!(c.trace_buffer_events, 128);
+        assert_eq!(c.flight_recorder_requests, 8);
     }
 
     #[test]

@@ -68,9 +68,10 @@ use anyhow::{ensure, Context, Result};
 
 use crate::config::Method;
 use crate::model::Decoder;
-use crate::pool::SharedSessionManager;
+use crate::pool::{RoundPhases, SharedSessionManager};
 use crate::spec::gamma::{CycleFeedback, FixedGamma, GammaController};
 use crate::spec::{Sampler, VerifyOutcome};
+use crate::trace::{self, PhaseEvent, TraceBuf};
 use crate::util::threadpool::{PoolHandle, ThreadPool, WaitGroup};
 
 /// Where a session is in its lifecycle.
@@ -102,6 +103,11 @@ pub struct ActiveSession {
     drafted_buf: Vec<i32>,
     draft_logits_buf: Vec<Vec<f32>>,
     vtokens_buf: Vec<i32>,
+    // Request-scoped tracing (None = untraced). The buffer is fully
+    // preallocated at admission; `step` binds it as the thread's span
+    // scope so pool-level events (QuantFlush, EvictLru) attribute here
+    // without plumbing through the Decoder signatures.
+    trace: Option<Arc<TraceBuf>>,
 }
 
 impl ActiveSession {
@@ -176,12 +182,26 @@ impl ActiveSession {
             drafted_buf: Vec::with_capacity(gcap),
             draft_logits_buf: Vec::with_capacity(gcap),
             vtokens_buf: Vec::with_capacity(gcap + 1),
+            trace: None,
         }
     }
 
     pub fn with_controller(mut self, ctl: Box<dyn GammaController>) -> Self {
         self.gamma_ctl = ctl;
         self
+    }
+
+    /// Attach a preallocated trace buffer: every subsequent step records
+    /// its phase events (prefill chunks, draft cycles, verify spans, and —
+    /// via the thread-local span scope — pool-level flush/evict events)
+    /// into it.
+    pub fn with_trace(mut self, buf: Arc<TraceBuf>) -> Self {
+        self.trace = Some(buf);
+        self
+    }
+
+    pub fn trace(&self) -> Option<&Arc<TraceBuf>> {
+        self.trace.as_ref()
     }
 
     /// True while prompt chunks remain to be fed.
@@ -220,6 +240,11 @@ impl ActiveSession {
     /// Run ONE unit of work: a prefill chunk while `Prefilling`, else one
     /// speculation cycle (or one AR step); returns tokens added.
     pub fn step(&mut self) -> Result<usize> {
+        // Bind this request's trace for the whole step so deep layers
+        // (paged-cache flush, LRU eviction) attribute their events here.
+        // Arc clone + TLS swap: no allocation on the untraced or traced
+        // path (pinned by alloc_hotpath).
+        let _scope = self.trace.as_ref().map(|t| trace::SpanScope::enter(Arc::clone(t)));
         if self.is_prefilling() {
             return self.step_prefill();
         }
@@ -228,9 +253,15 @@ impl ActiveSession {
         }
         let before = self.tokens.len();
         if self.decoder.method() == Method::Autoregressive {
+            // AR has no draft phase; the target-model step lands in the
+            // Verify series so the timeline still covers the step.
+            let t0 = self.trace.is_some().then(Instant::now);
             let logits = self.decoder.ar_step(self.last)?;
             self.last = self.sampler.sample(&logits);
             self.tokens.push(self.last);
+            if let Some(t0) = t0 {
+                trace::emit(PhaseEvent::Verify { us: t0.elapsed().as_micros() as u64 });
+            }
         } else {
             // Clamp γ to the remaining budget (see `SpecEngine::generate`):
             // a cycle reports at most γ + 1 tokens, so γ = remaining − 1
@@ -245,6 +276,7 @@ impl ActiveSession {
                 .min(self.decoder.gamma_max())
                 .max(1)
                 .min(remaining - 1);
+            let t_draft = self.trace.is_some().then(Instant::now);
             self.decoder.begin_cycle();
             let mut feed = self.last;
             self.drafted_buf.clear();
@@ -259,6 +291,8 @@ impl ActiveSession {
             self.vtokens_buf.clear();
             self.vtokens_buf.push(self.last);
             self.vtokens_buf.extend_from_slice(&self.drafted_buf);
+            let draft_us = t_draft.map(|t| t.elapsed().as_micros() as u64);
+            let t_verify = self.trace.is_some().then(Instant::now);
             let target = self.decoder.verify(&self.vtokens_buf)?;
             let VerifyOutcome { accepted, next_token } =
                 self.sampler
@@ -274,6 +308,15 @@ impl ActiveSession {
             if gamma > 0 {
                 self.gamma_ctl.observe(CycleFeedback { gamma, accepted });
             }
+            // Emitted only after verify resolves `accepted`, so the draft
+            // event carries the cycle's outcome. Any QuantFlush the commit
+            // triggered was recorded mid-span; at_us stays monotone.
+            if let Some(us) = draft_us {
+                trace::emit(PhaseEvent::DraftCycle { gamma, accepted, us });
+                trace::emit(PhaseEvent::Verify {
+                    us: t_verify.map_or(0, |t| t.elapsed().as_micros() as u64),
+                });
+            }
         }
         // No truncate: γ-clamping lands exactly on the budget, so reported
         // tokens and committed KV stay in lockstep
@@ -285,16 +328,27 @@ impl ActiveSession {
     /// Feed the next prompt chunk; on the final chunk, complete the
     /// prefill and sample the first token (1 token added).
     fn step_prefill(&mut self) -> Result<usize> {
-        let (logits, finished) = {
+        let t0 = self.trace.is_some().then(Instant::now);
+        let (logits, finished, chunk_n, fed) = {
             let Phase::Prefilling { prompt, cursor, chunk } = &mut self.phase else {
                 unreachable!("step_prefill outside Prefilling");
             };
             let end = (*cursor + *chunk).min(prompt.len());
             let is_last = end >= prompt.len();
+            // chunk index: every chunk before this one was full-size
+            let n = *cursor / *chunk;
             let logits = self.decoder.prefill_chunk(&prompt[*cursor..end], is_last)?;
+            let fed = end - *cursor;
             *cursor = end;
-            (logits, is_last)
+            (logits, is_last, n, fed)
         };
+        if let Some(t0) = t0 {
+            trace::emit(PhaseEvent::PrefillChunk {
+                n: chunk_n,
+                tokens: fed,
+                us: t0.elapsed().as_micros() as u64,
+            });
+        }
         if !finished {
             return Ok(0);
         }
@@ -376,12 +430,19 @@ struct StepOutcome {
     id: u64,
     session: Option<ActiveSession>,
     result: Result<usize>,
+    /// The step was a prefill chunk (vs a decode cycle) — splits the
+    /// round's wall time into the `/stats` phase aggregates.
+    was_prefill: bool,
+    step_us: f64,
 }
 
 fn step_one(mut s: ActiveSession) -> StepOutcome {
     let id = s.id;
+    let was_prefill = s.is_prefilling();
+    let t0 = Instant::now();
     let result = s.step();
-    StepOutcome { id, session: Some(s), result }
+    let step_us = t0.elapsed().as_secs_f64() * 1e6;
+    StepOutcome { id, session: Some(s), result, was_prefill, step_us }
 }
 
 /// Per-session result slots for one parallel round (indexed by round-robin
@@ -412,6 +473,8 @@ fn step_parallel(pool: &PoolHandle, sessions: Vec<ActiveSession>) -> Vec<StepOut
                         result: Err(anyhow::anyhow!(
                             "session {id}: step panicked; session state dropped"
                         )),
+                        was_prefill: false,
+                        step_us: 0.0,
                     },
                 };
             *slots[i].lock().unwrap_or_else(|p| p.into_inner()) = Some(outcome);
@@ -446,6 +509,7 @@ pub struct StepBatcher {
     stats_sink: Option<SharedSessionManager>,
     last_round_span_us: f64,
     last_busy: usize,
+    last_phases: RoundPhases,
 }
 
 impl StepBatcher {
@@ -463,6 +527,7 @@ impl StepBatcher {
             stats_sink: None,
             last_round_span_us: 0.0,
             last_busy: 0,
+            last_phases: RoundPhases::default(),
         }
     }
 
@@ -527,6 +592,13 @@ impl StepBatcher {
         self.last_busy
     }
 
+    /// Per-phase split of the last round: µs spent inside prefill-chunk
+    /// steps, decode steps, and (deferred sessions × round span) quant
+    /// wait.
+    pub fn last_round_phases(&self) -> RoundPhases {
+        self.last_phases
+    }
+
     /// Admit a session into the round-robin. Errors (instead of aborting
     /// the process) on over-capacity admission: the batcher is embedded in
     /// router/server contexts where a caller bug must surface as a clean
@@ -576,7 +648,14 @@ impl StepBatcher {
         };
         let span_us = t0.elapsed().as_secs_f64() * 1e6;
         let mut produced = 0usize;
+        let mut prefill_us = 0.0f64;
+        let mut decode_us = 0.0f64;
         for o in outcomes {
+            if o.was_prefill {
+                prefill_us += o.step_us;
+            } else {
+                decode_us += o.step_us;
+            }
             match (o.session, o.result) {
                 (Some(s), Ok(n)) => {
                     produced += n;
@@ -594,6 +673,13 @@ impl StepBatcher {
         }
         self.last_round_span_us = span_us;
         self.last_busy = stepped.min(self.step_workers);
+        // Deferred prefill sessions sat out the whole round waiting on
+        // quant-pool capacity — that is their quant-wait contribution.
+        self.last_phases = RoundPhases {
+            prefill_us,
+            decode_us,
+            quant_wait_us: deferred as f64 * span_us,
+        };
         if deferred > 0 {
             self.prefill_deferrals += deferred;
             if let Some(bp) = &self.backpressure {
@@ -603,7 +689,7 @@ impl StepBatcher {
         if let Some(mgr) = &self.stats_sink {
             mgr.lock()
                 .unwrap_or_else(|p| p.into_inner())
-                .note_round(span_us, self.last_busy, self.step_workers);
+                .note_round(span_us, self.last_busy, self.step_workers, self.last_phases);
         }
         Ok(produced)
     }
@@ -1005,6 +1091,76 @@ mod tests {
         for s in &b.finished {
             assert_eq!(s.tokens.len(), s.max_new);
         }
+    }
+
+    /// Tracing: a traced chunked session emits every prefill chunk and
+    /// every decode cycle (with γ and accepted) in timeline order, one
+    /// verify per cycle — and tracing is output-invisible.
+    #[test]
+    fn traced_session_emits_ordered_phase_events() {
+        let prompt: Vec<i32> = (0..40).map(|t| t % 64).collect();
+        let mut plain = StepBatcher::new(1);
+        plain.admit(chunked_session(5, &prompt, 20, 3, 16)).unwrap();
+        plain.drain().unwrap();
+        let want = plain.finished.pop().unwrap().tokens;
+
+        let buf = TraceBuf::new(256);
+        let mut b = StepBatcher::new(1);
+        b.admit(chunked_session(5, &prompt, 20, 3, 16).with_trace(Arc::clone(&buf)))
+            .unwrap();
+        b.drain().unwrap();
+        let s = b.finished.pop().unwrap();
+        assert_eq!(s.tokens, want, "tracing must not change output");
+
+        let events = buf.snapshot();
+        let chunks: Vec<_> = events
+            .iter()
+            .filter_map(|(_, e)| match e {
+                PhaseEvent::PrefillChunk { n, tokens, .. } => Some((*n, *tokens)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(chunks, vec![(0, 16), (1, 16), (2, 8)], "every chunk traced");
+        let cycles: Vec<_> = events
+            .iter()
+            .filter_map(|(_, e)| match e {
+                PhaseEvent::DraftCycle { gamma, accepted, .. } => Some((*gamma, *accepted)),
+                _ => None,
+            })
+            .collect();
+        assert!(!cycles.is_empty());
+        assert!(cycles.iter().all(|&(g, a)| a <= g), "accepted <= gamma");
+        let verifies = events
+            .iter()
+            .filter(|(_, e)| matches!(e, PhaseEvent::Verify { .. }))
+            .count();
+        assert_eq!(verifies, cycles.len(), "one verify per cycle");
+        let last_chunk = events
+            .iter()
+            .rposition(|(_, e)| matches!(e, PhaseEvent::PrefillChunk { .. }))
+            .unwrap();
+        let first_cycle = events
+            .iter()
+            .position(|(_, e)| matches!(e, PhaseEvent::DraftCycle { .. }))
+            .unwrap();
+        assert!(last_chunk < first_cycle, "prefill precedes decode in the timeline");
+        assert!(events.windows(2).all(|w| w[0].0 <= w[1].0), "monotone timestamps");
+        assert_eq!(buf.dropped(), 0);
+    }
+
+    /// Round phase aggregates: a mixed round splits its wall time into
+    /// prefill vs decode step spans; no deferrals → zero quant wait.
+    #[test]
+    fn round_phases_split_prefill_and_decode() {
+        let prompt: Vec<i32> = (0..64).collect();
+        let mut b = StepBatcher::new(4);
+        b.admit(chunked_session(1, &prompt, 8, 2, 16)).unwrap();
+        b.admit(mock_session(2, 10, 0.0, 4)).unwrap();
+        b.round().unwrap();
+        let p = b.last_round_phases();
+        assert!(p.prefill_us > 0.0, "prefill stepped this round");
+        assert!(p.decode_us > 0.0, "decode stepped this round");
+        assert_eq!(p.quant_wait_us, 0.0, "no deferrals this round");
     }
 
     #[test]

@@ -35,6 +35,7 @@ use crate::pool::{self, AdmitOutcome, SharedSessionManager};
 use crate::runtime::{Runtime, WeightSet, Weights};
 use crate::spec::gamma::AimdGamma;
 use crate::spec::Sampler;
+use crate::trace::{self, PhaseEvent, TraceBuf, Tracer};
 use crate::util::now_secs;
 
 /// Marker prefix for admission rejections that are the *client's* size
@@ -100,6 +101,10 @@ pub struct Coordinator {
     shared: Arc<Shared>,
     workers: Vec<thread::JoinHandle<()>>,
     pub metrics: Arc<Registry>,
+    /// Request tracing: per-request span buffers + the flight recorder
+    /// behind `/debug/requests`. A disabled tracer hands out no buffers
+    /// and the serving path stays untraced.
+    pub tracer: Arc<Tracer>,
     next_id: AtomicU64,
     backend: Arc<EngineBackend>,
     /// Shared paged KV pool; None when `cfg.pool.pages == 0`.
@@ -128,6 +133,11 @@ impl Coordinator {
             stop: AtomicBool::new(false),
         });
         let metrics = Arc::new(Registry::new());
+        let tracer = Arc::new(Tracer::new(
+            cfg.trace_enabled,
+            cfg.trace_buffer_events,
+            cfg.flight_recorder_requests,
+        ));
         let backend = Arc::new(backend);
         // The pool currently backs the mock decoder only; the XLA session
         // manages its own device cache, so booking phantom pages for it
@@ -153,13 +163,16 @@ impl Coordinator {
         for wid in 0..cfg.engines.max(1) {
             let shared = Arc::clone(&shared);
             let metrics = Arc::clone(&metrics);
+            let tracer = Arc::clone(&tracer);
             let backend = Arc::clone(&backend);
             let pool = pool.clone();
             let cfg2 = cfg.clone();
             workers.push(
                 thread::Builder::new()
                     .name(format!("qs-engine-{wid}"))
-                    .spawn(move || engine_loop(wid, cfg2, shared, metrics, backend, pool))?,
+                    .spawn(move || {
+                        engine_loop(wid, cfg2, shared, metrics, tracer, backend, pool)
+                    })?,
             );
         }
         Ok(Coordinator {
@@ -167,6 +180,7 @@ impl Coordinator {
             shared,
             workers,
             metrics,
+            tracer,
             next_id: AtomicU64::new(1),
             backend,
             pool,
@@ -303,6 +317,11 @@ fn sync_pool_gauges(mgr: &SharedSessionManager, metrics: &Registry) {
     metrics.set_gauge(names::STEP_WORKERS_BUSY, busy as f64);
     metrics.set_gauge(names::ROUND_SPAN_US, span_us);
     metrics.set_gauge(names::BATCHER_ROUNDS, rounds as f64);
+    // cumulative per-phase round time (prefill vs decode vs quant-wait)
+    let phases = m.round_phase_totals();
+    metrics.set_gauge(names::ROUND_PREFILL_US, phases.prefill_us);
+    metrics.set_gauge(names::ROUND_DECODE_US, phases.decode_us);
+    metrics.set_gauge(names::ROUND_QUANT_WAIT_US, phases.quant_wait_us);
 }
 
 /// Pool geometry plan for one mock request. Reservation (admission) and
@@ -339,6 +358,9 @@ struct Inflight {
     /// Set the first time the session is observed past its prefill phase.
     prefill_done_at: Option<Instant>,
     bucket: usize,
+    /// This request's span buffer (None when tracing is disabled); finished
+    /// into the flight recorder at retirement.
+    trace: Option<Arc<TraceBuf>>,
 }
 
 /// One engine worker: a step batcher multiplexing up to
@@ -353,6 +375,7 @@ fn engine_loop(
     cfg: ServeConfig,
     shared: Arc<Shared>,
     metrics: Arc<Registry>,
+    tracer: Arc<Tracer>,
     backend: Arc<EngineBackend>,
     pool: Option<SharedSessionManager>,
 ) {
@@ -367,11 +390,23 @@ fn engine_loop(
             .with_stats_sink(mgr.clone());
     }
     let mut inflight: HashMap<u64, Inflight> = HashMap::new();
-    let depth_gauge = names::engine_batcher_depth(wid);
+    // Hot-loop gauges are pre-resolved to atomic handles once: round
+    // updates bump the atomics directly, never the registry's name map.
+    let depth_gauge = metrics.gauge_handle(&names::engine_batcher_depth(wid));
+    let round_gauges = pool.is_none().then(|| {
+        (
+            metrics.gauge_handle(names::STEP_WORKERS),
+            metrics.gauge_handle(names::STEP_WORKERS_BUSY),
+            metrics.gauge_handle(names::ROUND_SPAN_US),
+        )
+    });
+    // Head-of-line admission wait: set when the head request first sees
+    // `Saturated`, drained into its trace when it finally pops.
+    let mut admission_wait: Option<(u64, Instant)> = None;
     loop {
         let stopping = shared.stop.load(Ordering::Relaxed);
         // ---- admission: pull admissible head jobs into free slots -------
-        let mut popped: Vec<Queued> = Vec::new();
+        let mut popped: Vec<(Queued, u64)> = Vec::new();
         let mut rejected: Vec<(Queued, String)> = Vec::new();
         if !stopping {
             let mut q = shared.queue.lock().unwrap();
@@ -409,6 +444,9 @@ fn engine_loop(
                                 ))
                             }
                             Ok(AdmitOutcome::Saturated) => {
+                                if admission_wait.map_or(true, |(aid, _)| aid != id) {
+                                    admission_wait = Some((id, Instant::now()));
+                                }
                                 if batcher.active_len() + popped.len() == 0 {
                                     // Nothing to step: wait (bounded) for a
                                     // release. Counter counts 5 ms polls.
@@ -429,8 +467,16 @@ fn engine_loop(
                     }
                 };
                 let job = q.pop_front().expect("peeked head");
+                // If this head waited out a saturated pool, charge the wait.
+                let admission_us = match admission_wait {
+                    Some((aid, t0)) if aid == id => {
+                        admission_wait = None;
+                        t0.elapsed().as_micros() as u64
+                    }
+                    _ => 0,
+                };
                 match decision {
-                    Admission::Run => popped.push(job),
+                    Admission::Run => popped.push((job, admission_us)),
                     Admission::Reject(msg) => rejected.push((job, msg)),
                 }
             }
@@ -443,11 +489,24 @@ fn engine_loop(
             let _ = job.done.send(Err(msg));
         }
         // ---- build sessions (outside the queue lock) --------------------
-        for job in popped {
+        for (job, admission_us) in popped {
             let queue_secs = now_secs() - job.enqueued_at;
             metrics.histogram("queue_wait").record_secs(queue_secs);
+            // Open the request's timeline: total queue time split into the
+            // plain FIFO wait and the saturated-pool admission wait (the
+            // two sum to `queue_secs`, so the timeline never double-counts).
+            let buf = tracer.new_request();
+            if let Some(b) = &buf {
+                let queue_us = ((queue_secs * 1e6) as u64).saturating_sub(admission_us);
+                b.record(PhaseEvent::QueueWait { us: queue_us });
+                b.record(PhaseEvent::AdmissionWait { us: admission_us });
+            }
             match build_session(&cfg, &backend, &job.spec, pool.as_ref()) {
                 Ok((sess, bucket)) => {
+                    let sess = match &buf {
+                        Some(b) => sess.with_trace(Arc::clone(b)),
+                        None => sess,
+                    };
                     let id = sess.id;
                     batcher.admit(sess).expect("slot was counted during admission");
                     inflight.insert(
@@ -458,6 +517,7 @@ fn engine_loop(
                             admitted_at: Instant::now(),
                             prefill_done_at: None,
                             bucket,
+                            trace: buf,
                         },
                     );
                 }
@@ -486,19 +546,16 @@ fn engine_loop(
         // only unpooled coordinators write them directly here. The
         // per-engine depth gauge has no manager mirror, so it is always
         // written directly.
-        if pool.is_none() {
-            metrics.set_gauge(names::STEP_WORKERS, batcher.step_workers() as f64);
-            metrics.set_gauge(
-                names::STEP_WORKERS_BUSY,
-                batcher.last_step_workers_busy() as f64,
-            );
-            metrics.set_gauge(names::ROUND_SPAN_US, batcher.last_round_span_us());
+        if let Some((g_workers, g_busy, g_span)) = &round_gauges {
+            g_workers.set(batcher.step_workers() as f64);
+            g_busy.set(batcher.last_step_workers_busy() as f64);
+            g_span.set(batcher.last_round_span_us());
         }
-        metrics.set_gauge(&depth_gauge, batcher.active_len() as f64);
+        depth_gauge.set(batcher.active_len() as f64);
         // ---- retire ------------------------------------------------------
         for s in batcher.finished.drain(..) {
             let Some(inf) = inflight.remove(&s.id) else { continue };
-            respond_finished(s, inf, &metrics, pool.as_ref(), &shared);
+            respond_finished(s, inf, &metrics, &tracer, pool.as_ref(), &shared);
         }
         for f in batcher.failed.drain(..) {
             let Some(inf) = inflight.remove(&f.id) else { continue };
@@ -532,6 +589,7 @@ fn respond_finished(
     mut s: ActiveSession,
     inf: Inflight,
     metrics: &Registry,
+    tracer: &Tracer,
     pool: Option<&SharedSessionManager>,
     shared: &Shared,
 ) {
@@ -560,6 +618,16 @@ fn respond_finished(
     let decode_tokens = tokens.len().saturating_sub(1);
     drop(s); // decoder resources go before the pool release
     release_pool_session(pool, shared, metrics, id);
+    // Close the timeline: total = queue (incl. admission wait) + residency.
+    // Finishing BEFORE the response is sent makes the flight recorder and
+    // the phase histograms visible the moment `generate` returns.
+    if let Some(buf) = &inf.trace {
+        let total_us = (inf.queue_secs * 1e6) as u64
+            + now.duration_since(inf.admitted_at).as_micros() as u64;
+        let timeline = tracer.finish(id, buf, total_us);
+        trace::record_phase_histograms(&timeline, metrics);
+        tracer.push(timeline);
+    }
     let _ = inf.done.send(Ok(ResponseOut {
         id,
         tokens,
@@ -978,6 +1046,46 @@ mod tests {
             "4 requests x 4 prefill groups, all through the one shared pool"
         );
         assert_eq!(c.metrics.gauge(names::QUANT_POOL_QUEUE_DEPTH), 0.0);
+    }
+
+    /// A completed request shows up in the flight recorder (before the
+    /// response is delivered — no retirement race) and its completion
+    /// feeds the acceptance/phase histograms.
+    #[test]
+    fn completed_request_lands_in_flight_recorder() {
+        let c = mock_coordinator(1, 8); // tracing on by default
+        assert!(c.tracer.enabled());
+        let r = c.generate(req(1, 8)).unwrap();
+        assert_eq!(r.tokens.len(), 24);
+        assert_eq!(c.tracer.recorder().len(), 1);
+        let js = c.tracer.to_json().to_string();
+        assert!(js.contains("\"events\""), "timeline serialized: {js}");
+        assert!(
+            c.metrics.histogram(names::ACCEPTANCE_RATE_PCT).count() == 1,
+            "per-request acceptance rate recorded at completion"
+        );
+        assert!(c.metrics.histogram(names::PHASE_VERIFY_US).count() > 0);
+    }
+
+    /// `trace_enabled: false` turns the whole subsystem off: no buffers,
+    /// an empty recorder, identical decode output.
+    #[test]
+    fn disabled_tracing_serves_identically_with_empty_recorder() {
+        let cfg = ServeConfig {
+            engines: 1,
+            queue_capacity: 8,
+            max_new_tokens: 24,
+            trace_enabled: false,
+            ..ServeConfig::default()
+        };
+        let c = Coordinator::with_mock(cfg, 0.2).unwrap();
+        let base = mock_coordinator(1, 8);
+        let a = c.generate(req(4, 8)).unwrap();
+        let b = base.generate(req(4, 8)).unwrap();
+        assert_eq!(a.tokens, b.tokens, "tracing must not perturb decode");
+        assert!(!c.tracer.enabled());
+        assert!(c.tracer.recorder().is_empty());
+        assert_eq!(c.metrics.histogram(names::ACCEPTANCE_RATE_PCT).count(), 0);
     }
 
     /// Property: with random request sizes and queue capacities, every

@@ -6,6 +6,11 @@
 //!   GET  /stats     metrics snapshot (+ "pool": paged KV pool state —
 //!                   pages in use/peak/committed, pressure, watermarks,
 //!                   evictions, logical vs host cache bytes)
+//!   GET  /metrics   the whole registry in Prometheus text exposition
+//!                   (counters, gauges, phase/acceptance histograms)
+//!   GET  /debug/requests  flight recorder: the last N completed request
+//!                   timelines (queue → admission → prefill chunks →
+//!                   draft/verify cycles → completion) as JSON
 //!   GET  /healthz   liveness
 
 use std::sync::Arc;
@@ -35,6 +40,11 @@ fn handle(coord: &Coordinator, req: &Request) -> Response {
             }
             Response::json(200, snap.to_string())
         }
+        ("GET", "/metrics") => {
+            coord.sync_pool_gauges();
+            Response::text(200, coord.metrics.render_prometheus())
+        }
+        ("GET", "/debug/requests") => Response::json(200, coord.tracer.to_json().to_string()),
         ("POST", "/generate") => generate(coord, &req.body),
         _ => Response::json(404, r#"{"error":"not found"}"#),
     }
@@ -235,6 +245,206 @@ mod tests {
             gauges.get(&names::engine_batcher_depth(0)).is_some(),
             "per-engine batcher depth gauge missing"
         );
+    }
+
+    /// One Prometheus exposition line: `# TYPE/HELP ...` comment, blank, or
+    /// `name{labels} value` with a parseable float value.
+    fn exposition_line_ok(line: &str) -> bool {
+        if line.is_empty() || line.starts_with("# ") {
+            return true;
+        }
+        let Some((name_part, value)) = line.rsplit_once(' ') else {
+            return false;
+        };
+        if value.parse::<f64>().is_err() && value != "+Inf" {
+            return false;
+        }
+        let name_end = name_part.find('{').unwrap_or(name_part.len());
+        let (name, labels) = name_part.split_at(name_end);
+        !name.is_empty()
+            && name
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+            && !name.starts_with(|c: char| c.is_ascii_digit())
+            && (labels.is_empty() || (labels.starts_with('{') && labels.ends_with('}')))
+    }
+
+    /// `GET /metrics` serves valid Prometheus text exposition carrying the
+    /// acceptance-rate and per-phase histograms.
+    #[test]
+    fn metrics_endpoint_serves_valid_exposition() {
+        use crate::metrics::names;
+        let (srv, _c) = start_mock_server();
+        let addr = srv.addr.to_string();
+        let (st, body) =
+            http_request(&addr, "POST", "/generate", br#"{"prompt":"hello world"}"#).unwrap();
+        assert_eq!(st, 200, "{}", String::from_utf8_lossy(&body));
+        let (st, body) = http_request(&addr, "GET", "/metrics", b"").unwrap();
+        assert_eq!(st, 200);
+        let text = String::from_utf8(body).unwrap();
+        for line in text.lines() {
+            assert!(exposition_line_ok(line), "malformed exposition line: {line:?}");
+        }
+        for needle in [
+            "# TYPE requests_completed counter",
+            "requests_completed 1",
+            &format!("# TYPE {} histogram", names::ACCEPTANCE_RATE_PCT),
+            &format!("{}_count", names::ACCEPTANCE_RATE_PCT),
+            &format!("{}_bucket", names::PHASE_VERIFY_US),
+            &format!("{}_sum", names::PHASE_DRAFT_US),
+            "le=\"+Inf\"",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+    }
+
+    /// Acceptance (tentpole): a pooled HTTP request appears in
+    /// `/debug/requests` with a complete ordered timeline — queue wait,
+    /// admission, every prefill chunk, each draft cycle with γ/accepted, a
+    /// verify per cycle, completion last — and the phase durations account
+    /// for the request's wall time within 10%. Heavy pool geometry makes
+    /// the traced spans dominate scheduling overhead.
+    #[test]
+    fn debug_requests_timeline_is_complete_and_covers_wall_time() {
+        let cfg = ServeConfig {
+            engines: 1,
+            max_new_tokens: 48,
+            prefill_chunk_tokens: 32,
+            pool: crate::pool::PoolConfig {
+                pages: 64,
+                page_tokens: 32,
+                kv_dim: 256,
+                high_watermark: 0.9,
+                low_watermark: 0.7,
+                ..crate::pool::PoolConfig::default()
+            },
+            ..ServeConfig::default()
+        };
+        let coord = Arc::new(Coordinator::with_mock(cfg, 0.15).unwrap());
+        let srv = serve(Arc::clone(&coord), "127.0.0.1:0").unwrap();
+        let addr = srv.addr.to_string();
+        let prompt: String = "x".repeat(96); // 3 chunks of 32
+        let body = format!(r#"{{"prompt":"{prompt}","max_new_tokens":48}}"#);
+        let (st, resp) = http_request(&addr, "POST", "/generate", body.as_bytes()).unwrap();
+        assert_eq!(st, 200, "{}", String::from_utf8_lossy(&resp));
+
+        let (st, body) = http_request(&addr, "GET", "/debug/requests", b"").unwrap();
+        assert_eq!(st, 200);
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        let reqs = j.get("requests").unwrap().as_arr().unwrap();
+        assert_eq!(reqs.len(), 1, "one completed request in the recorder");
+        let t = &reqs[0];
+        assert_eq!(t.get("dropped").unwrap().as_usize(), Some(0));
+        let events = t.get("events").unwrap().as_arr().unwrap();
+        let phase = |e: &Json| e.get("phase").unwrap().as_str().unwrap().to_string();
+
+        // ordered: queue → admission → prefill chunks → cycles → completed
+        assert_eq!(phase(&events[0]), "queue_wait");
+        assert_eq!(phase(&events[1]), "admission_wait");
+        assert_eq!(phase(events.last().unwrap()), "completed");
+        let chunks: Vec<usize> = events
+            .iter()
+            .filter(|e| phase(e) == "prefill_chunk")
+            .map(|e| e.get("n").unwrap().as_usize().unwrap())
+            .collect();
+        assert_eq!(chunks, vec![0, 1, 2], "every prefill chunk traced in order");
+        let cycles: Vec<&Json> =
+            events.iter().filter(|e| phase(e) == "draft_cycle").collect();
+        assert!(!cycles.is_empty(), "decode cycles traced");
+        for c in &cycles {
+            let gamma = c.get("gamma").unwrap().as_usize().unwrap();
+            let accepted = c.get("accepted").unwrap().as_usize().unwrap();
+            assert!(accepted <= gamma, "cycle accepted {accepted} > gamma {gamma}");
+        }
+        let verifies = events.iter().filter(|e| phase(e) == "verify").count();
+        assert_eq!(verifies, cycles.len(), "one verify span per cycle");
+        let last_chunk = events.iter().rposition(|e| phase(e) == "prefill_chunk").unwrap();
+        let first_cycle = events.iter().position(|e| phase(e) == "draft_cycle").unwrap();
+        assert!(last_chunk < first_cycle, "prefill precedes decode");
+        let stamps: Vec<usize> = events
+            .iter()
+            .map(|e| e.get("at_us").unwrap().as_usize().unwrap())
+            .collect();
+        assert!(stamps.windows(2).all(|w| w[0] <= w[1]), "monotone timestamps");
+
+        // coverage: phase durations account for the wall time within 10%
+        let total = t.get("total_us").unwrap().as_usize().unwrap() as f64;
+        let sum = t.get("phase_sum_us").unwrap().as_usize().unwrap() as f64;
+        assert!(total > 0.0);
+        let ratio = sum / total;
+        assert!(
+            (0.9..=1.1).contains(&ratio),
+            "phase sum {sum}µs vs wall {total}µs (ratio {ratio:.3})"
+        );
+    }
+
+    /// Satellite: `/stats` and `/metrics` stay parseable and monotone while
+    /// requests hammer the coordinator from other threads.
+    #[test]
+    fn stats_and_metrics_scrape_cleanly_under_concurrent_load() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let (srv, coord) = start_mock_server();
+        let addr = srv.addr.to_string();
+        let done = Arc::new(AtomicBool::new(false));
+        let mut submitters = Vec::new();
+        for t in 0..2u64 {
+            let addr = addr.clone();
+            submitters.push(std::thread::spawn(move || {
+                for i in 0..8 {
+                    let body = format!(
+                        r#"{{"prompt":"load {t} {i}","max_new_tokens":16}}"#
+                    );
+                    let (st, resp) =
+                        http_request(&addr, "POST", "/generate", body.as_bytes()).unwrap();
+                    assert_eq!(st, 200, "{}", String::from_utf8_lossy(&resp));
+                }
+            }));
+        }
+        let scraper = {
+            let addr = addr.clone();
+            let done = Arc::clone(&done);
+            std::thread::spawn(move || {
+                let mut last_completed = 0u64;
+                let mut last_tokens = 0u64;
+                let mut scrapes = 0usize;
+                while !done.load(Ordering::Relaxed) || scrapes == 0 {
+                    let (st, body) = http_request(&addr, "GET", "/stats", b"").unwrap();
+                    assert_eq!(st, 200);
+                    let j = Json::parse(std::str::from_utf8(&body).unwrap())
+                        .expect("mid-load /stats snapshot parses");
+                    let counter = |name: &str| {
+                        j.get("counters")
+                            .and_then(|c| c.get(name))
+                            .and_then(Json::as_usize)
+                            .unwrap_or(0) as u64
+                    };
+                    let completed = counter("requests_completed");
+                    let tokens = counter("tokens_generated");
+                    assert!(completed >= last_completed, "completed went backwards");
+                    assert!(tokens >= last_tokens, "tokens_generated went backwards");
+                    last_completed = completed;
+                    last_tokens = tokens;
+                    let (st, body) = http_request(&addr, "GET", "/metrics", b"").unwrap();
+                    assert_eq!(st, 200);
+                    for line in std::str::from_utf8(&body).unwrap().lines() {
+                        assert!(
+                            exposition_line_ok(line),
+                            "malformed mid-load exposition line: {line:?}"
+                        );
+                    }
+                    scrapes += 1;
+                }
+                (last_completed, scrapes)
+            })
+        };
+        for s in submitters {
+            s.join().unwrap();
+        }
+        done.store(true, Ordering::Relaxed);
+        let (completed, scrapes) = scraper.join().unwrap();
+        assert!(scrapes > 0);
+        assert!(completed <= 16);
+        assert_eq!(coord.metrics.counter("requests_completed"), 16);
     }
 
     #[test]

@@ -33,5 +33,6 @@ pub mod spec;
 pub mod baselines;
 pub mod coordinator;
 pub mod metrics;
+pub mod trace;
 pub mod workload;
 pub mod bench;

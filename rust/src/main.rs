@@ -66,6 +66,12 @@ fn config_from_args(args: &Args) -> Result<ServeConfig> {
     // not clamped: 0 is rejected with a clear error at coordinator startup
     cfg.step_workers = args.get_usize("step-workers", cfg.step_workers);
     cfg.batcher_slots = args.get_usize("batcher-slots", cfg.batcher_slots).max(1);
+    // request tracing: --trace-enabled 0 turns the subsystem off entirely
+    cfg.trace_enabled = args.get_usize("trace-enabled", cfg.trace_enabled as usize) != 0;
+    cfg.trace_buffer_events =
+        args.get_usize("trace-buffer-events", cfg.trace_buffer_events);
+    cfg.flight_recorder_requests =
+        args.get_usize("flight-recorder-requests", cfg.flight_recorder_requests);
     Ok(cfg)
 }
 
@@ -120,6 +126,15 @@ OPTIONS (shared):
                        0 errors at startup)
   --batcher-slots N    sessions one engine batcher multiplexes at once
                        (round-robin capacity; default 4)
+  --trace-enabled 0|1  request-scoped phase tracing feeding /debug/requests
+                       and the /metrics phase histograms (default 1; the
+                       traced hot path stays allocation-free)
+  --trace-buffer-events N
+                       preallocated trace slots per request; events past
+                       the cap are counted as dropped (default 4096)
+  --flight-recorder-requests N
+                       completed request timelines the flight recorder
+                       retains for /debug/requests (default 64)
 
 run-only:
   --prompt TEXT | --prompt-len N --profile pg19|lexsum|infbench --seed S"
@@ -145,7 +160,10 @@ fn serve_cmd(args: &Args) -> Result<()> {
     let srv = server::serve(Arc::clone(&coord), &bind)
         .with_context(|| format!("binding {bind}"))?;
     println!("quantspec serving on http://{}", srv.addr);
-    println!("  POST /generate   GET /stats   GET /healthz");
+    println!(
+        "  POST /generate   GET /stats   GET /metrics   \
+         GET /debug/requests   GET /healthz"
+    );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }

@@ -2,11 +2,21 @@
 //!
 //! Log-bucketed histograms (HdrHistogram-style, base-1.25 geometric buckets
 //! from 1µs to ~2000s) give p50/p95/p99 without storing samples. A global
-//! registry snapshot backs the coordinator's `/stats` endpoint.
+//! registry snapshot backs the coordinator's `/stats` endpoint, and
+//! [`Registry::render_prometheus`] serves the same registry as Prometheus
+//! text exposition on `GET /metrics`.
+//!
+//! Hot paths (batcher rounds, pool gauge sync) should resolve a
+//! [`Registry::counter_handle`] / [`Registry::gauge_handle`] once and bump
+//! the returned atomic; `incr`/`set_gauge` take the whole-map mutex per call
+//! and are meant for request-rate call sites only.
+//!
+//! Every metric name, its unit, the layer that emits it, and what a
+//! regression in it means is catalogued in `docs/METRICS.md`.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::util::json::Json;
 
@@ -46,6 +56,30 @@ pub mod names {
     pub const ROUND_SPAN_US: &str = "round_span_us";
     /// Batcher rounds recorded through the session manager.
     pub const BATCHER_ROUNDS: &str = "batcher_rounds";
+    /// Cumulative µs batcher rounds spent inside prefill-chunk steps.
+    pub const ROUND_PREFILL_US: &str = "round_prefill_us";
+    /// Cumulative µs batcher rounds spent inside decode (draft+verify)
+    /// steps.
+    pub const ROUND_DECODE_US: &str = "round_decode_us";
+    /// Cumulative µs sessions spent parked behind quant backpressure
+    /// (deferred prefill sessions × the round span they sat out).
+    pub const ROUND_QUANT_WAIT_US: &str = "round_quant_wait_us";
+    /// Histogram: per-request queue wait (µs, excludes admission polling).
+    pub const PHASE_QUEUE_US: &str = "phase_queue_us";
+    /// Histogram: per-request pool-admission wait (µs, saturated polling).
+    pub const PHASE_ADMISSION_US: &str = "phase_admission_us";
+    /// Histogram: per-chunk prefill step latency (µs).
+    pub const PHASE_PREFILL_CHUNK_US: &str = "phase_prefill_chunk_us";
+    /// Histogram: per-cycle draft-phase latency (µs).
+    pub const PHASE_DRAFT_US: &str = "phase_draft_us";
+    /// Histogram: per-cycle verify+commit latency (µs).
+    pub const PHASE_VERIFY_US: &str = "phase_verify_us";
+    /// Histogram: per-flush FP→INT4/8 quantization latency (µs).
+    pub const PHASE_QUANT_FLUSH_US: &str = "phase_quant_flush_us";
+    /// Histogram: per-request acceptance rate in percent (0–100).
+    pub const ACCEPTANCE_RATE_PCT: &str = "acceptance_rate_pct";
+    /// Histogram: accepted draft tokens per speculation cycle.
+    pub const ACCEPTED_LEN: &str = "accepted_len";
 
     /// Gauge name for one engine's batcher depth on the serving path
     /// (active sessions multiplexed by that engine's step batcher).
@@ -115,21 +149,29 @@ impl Histogram {
         }
     }
 
-    /// Approximate quantile (upper bucket edge), q in [0,1].
+    pub fn max_us(&self) -> f64 {
+        self.max_us.load(Ordering::Relaxed) as f64
+    }
+
+    /// Approximate quantile, q in [0,1]. Reports the geometric bucket's
+    /// upper edge, clamped to the observed maximum so a quantile can never
+    /// exceed `max_us` (a single 500µs sample has p50 == p99 == 500µs, not
+    /// the 517µs bucket edge).
     pub fn quantile_us(&self, q: f64) -> f64 {
         let n = self.count();
         if n == 0 {
             return 0.0;
         }
+        let max = self.max_us.load(Ordering::Relaxed) as f64;
         let target = ((n as f64) * q).ceil().max(1.0) as u64;
         let mut seen = 0u64;
         for (i, c) in self.counts.iter().enumerate() {
             seen += c.load(Ordering::Relaxed);
             if seen >= target {
-                return MIN_US * GROWTH.powi(i as i32 + 1);
+                return (MIN_US * GROWTH.powi(i as i32 + 1)).min(max);
             }
         }
-        self.max_us.load(Ordering::Relaxed) as f64
+        max
     }
 
     pub fn to_json(&self) -> Json {
@@ -144,12 +186,36 @@ impl Histogram {
     }
 }
 
+/// Lock-free f64 gauge (bit-cast into an atomic). Handed out by
+/// [`Registry::gauge_handle`] so hot call sites skip the name map.
+pub struct Gauge(AtomicU64);
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Gauge(AtomicU64::new(0.0f64.to_bits()))
+    }
+}
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
 /// Named counters + gauges + histograms for one engine / the coordinator.
+///
+/// Values live behind `Arc`ed atomics: the name→value maps are locked only
+/// to resolve a name, never to bump a value, so snapshots taken mid-burst
+/// see monotone counters.
 #[derive(Default)]
 pub struct Registry {
-    counters: Mutex<BTreeMap<String, u64>>,
-    gauges: Mutex<BTreeMap<String, f64>>,
-    histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
+    counters: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
 }
 
 impl Registry {
@@ -158,28 +224,54 @@ impl Registry {
     }
 
     pub fn incr(&self, name: &str, by: u64) {
-        *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += by;
+        self.counter_handle(name).fetch_add(by, Ordering::Relaxed);
     }
 
     pub fn counter(&self, name: &str) -> u64 {
-        *self.counters.lock().unwrap().get(name).unwrap_or(&0)
+        self.counters
+            .lock()
+            .unwrap()
+            .get(name)
+            .map_or(0, |c| c.load(Ordering::Relaxed))
+    }
+
+    /// Resolve (creating if absent) the atomic behind a counter. Hot paths
+    /// resolve once and `fetch_add` on the handle; `snapshot()` reads the
+    /// same atomic, so handle bumps are never lost.
+    pub fn counter_handle(&self, name: &str) -> Arc<AtomicU64> {
+        self.counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
     }
 
     /// Set an instantaneous value (pool pages in use, queue depth, ...).
     pub fn set_gauge(&self, name: &str, value: f64) {
-        self.gauges.lock().unwrap().insert(name.to_string(), value);
+        self.gauge_handle(name).set(value);
     }
 
     pub fn gauge(&self, name: &str) -> f64 {
-        *self.gauges.lock().unwrap().get(name).unwrap_or(&0.0)
+        self.gauges.lock().unwrap().get(name).map_or(0.0, |g| g.get())
     }
 
-    pub fn histogram(&self, name: &str) -> std::sync::Arc<Histogram> {
+    /// Gauge equivalent of [`Registry::counter_handle`].
+    pub fn gauge_handle(&self, name: &str) -> Arc<Gauge> {
+        self.gauges
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
         self.histograms
             .lock()
             .unwrap()
             .entry(name.to_string())
-            .or_insert_with(|| std::sync::Arc::new(Histogram::new()))
+            .or_insert_with(|| Arc::new(Histogram::new()))
             .clone()
     }
 
@@ -193,7 +285,9 @@ impl Registry {
                 Json::Obj(
                     counters
                         .iter()
-                        .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+                        .map(|(k, v)| {
+                            (k.clone(), Json::num(v.load(Ordering::Relaxed) as f64))
+                        })
                         .collect(),
                 ),
             ),
@@ -202,7 +296,7 @@ impl Registry {
                 Json::Obj(
                     gauges
                         .iter()
-                        .map(|(k, v)| (k.clone(), Json::num(*v)))
+                        .map(|(k, g)| (k.clone(), Json::num(g.get())))
                         .collect(),
                 ),
             ),
@@ -211,6 +305,55 @@ impl Registry {
                 Json::Obj(hists.iter().map(|(k, h)| (k.clone(), h.to_json())).collect()),
             ),
         ])
+    }
+
+    /// Render the whole registry in Prometheus text exposition format:
+    /// `# TYPE` comment lines plus `name value` / `name{labels} value`
+    /// samples. Histograms follow the cumulative `_bucket{le="..."}` /
+    /// `_sum` / `_count` convention (µs units); only occupied geometric
+    /// buckets are emitted, which is valid because `le` buckets are
+    /// cumulative at each threshold.
+    pub fn render_prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        for (name, v) in self.counters.lock().unwrap().iter() {
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {}", v.load(Ordering::Relaxed));
+        }
+        for (name, g) in self.gauges.lock().unwrap().iter() {
+            let _ = writeln!(out, "# TYPE {name} gauge");
+            let _ = writeln!(out, "{name} {}", fmt_sample(g.get()));
+        }
+        for (name, h) in self.histograms.lock().unwrap().iter() {
+            let _ = writeln!(out, "# TYPE {name} histogram");
+            let mut cum = 0u64;
+            for (i, c) in h.counts.iter().enumerate() {
+                let c = c.load(Ordering::Relaxed);
+                if c == 0 {
+                    continue;
+                }
+                cum += c;
+                let le = MIN_US * GROWTH.powi(i as i32 + 1);
+                let _ = writeln!(out, "{name}_bucket{{le=\"{}\"}} {cum}", fmt_sample(le));
+            }
+            // Read total after the bucket sweep: concurrent records keep
+            // the +Inf line >= the last cumulative bucket.
+            let total = h.count().max(cum);
+            let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {total}");
+            let _ = writeln!(out, "{name}_sum {}", h.sum_us.load(Ordering::Relaxed));
+            let _ = writeln!(out, "{name}_count {total}");
+        }
+        out
+    }
+}
+
+/// Prometheus sample formatting: integral values print without a trailing
+/// `.0` (Rust's `{}` already does this), everything else as plain decimal.
+fn fmt_sample(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
     }
 }
 
@@ -238,6 +381,35 @@ mod tests {
         let h = Histogram::new();
         assert_eq!(h.quantile_us(0.99), 0.0);
         assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn single_sample_quantiles_equal_max() {
+        // Regression: quantiles used to report the geometric bucket's
+        // upper edge uncapped, so p99 of one 500µs sample read ~517µs —
+        // larger than the observed max. All quantiles must clamp to max.
+        let h = Histogram::new();
+        h.record_us(500.0);
+        assert_eq!(h.quantile_us(0.50), 500.0);
+        assert_eq!(h.quantile_us(0.99), 500.0);
+        assert_eq!(h.max_us(), 500.0);
+        assert!(h.quantile_us(0.99) <= h.max_us());
+    }
+
+    #[test]
+    fn quantiles_never_exceed_max() {
+        let h = Histogram::new();
+        for v in [3.0, 17.0, 250.0, 99999.0] {
+            h.record_us(v);
+        }
+        for q in [0.5, 0.9, 0.95, 0.99, 1.0] {
+            assert!(
+                h.quantile_us(q) <= h.max_us(),
+                "q{q}: {} > max {}",
+                h.quantile_us(q),
+                h.max_us()
+            );
+        }
     }
 
     #[test]
@@ -280,5 +452,100 @@ mod tests {
         h.record_us(1e12);
         assert_eq!(h.count(), 2);
         assert!(h.quantile_us(1.0) > 0.0);
+    }
+
+    #[test]
+    fn contended_counter_handles_are_exact() {
+        // N threads x M increments through cloned handles: the final
+        // counter and the snapshot must both read exactly N*M — handle
+        // bumps bypass the map lock but can never be lost.
+        let r = Arc::new(Registry::new());
+        let threads = 8u64;
+        let per_thread = 10_000u64;
+        let mut joins = Vec::new();
+        for _ in 0..threads {
+            let h = r.counter_handle("contended");
+            joins.push(std::thread::spawn(move || {
+                for _ in 0..per_thread {
+                    h.fetch_add(1, Ordering::Relaxed);
+                }
+            }));
+        }
+        // Interleave map-locking reads with the handle bumps.
+        for _ in 0..50 {
+            let _ = r.counter("contended");
+            let _ = r.snapshot();
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(r.counter("contended"), threads * per_thread);
+        let snap = r.snapshot();
+        let v = snap
+            .get("counters")
+            .and_then(|c| c.get("contended"))
+            .and_then(Json::as_i64)
+            .unwrap();
+        assert_eq!(v as u64, threads * per_thread);
+    }
+
+    #[test]
+    fn gauge_handle_roundtrips_floats() {
+        let r = Registry::new();
+        let g = r.gauge_handle("depth");
+        g.set(2.5);
+        assert_eq!(r.gauge("depth"), 2.5);
+        r.set_gauge("depth", -1.0);
+        assert_eq!(g.get(), -1.0);
+    }
+
+    #[test]
+    fn prometheus_exposition_well_formed() {
+        let r = Registry::new();
+        r.incr("requests_completed", 3);
+        r.set_gauge("pool_pages_in_use", 4.5);
+        let h = r.histogram(names::PHASE_DRAFT_US);
+        for v in [2.0, 40.0, 40.0, 900.0] {
+            h.record_us(v);
+        }
+        let text = r.render_prometheus();
+        let mut bucket_lines = 0;
+        let mut last_cum = 0u64;
+        for line in text.lines() {
+            assert!(
+                line.starts_with("# TYPE") || sample_line_ok(line),
+                "bad exposition line: {line:?}"
+            );
+            if line.starts_with(&format!("{}_bucket", names::PHASE_DRAFT_US)) {
+                bucket_lines += 1;
+                let cum: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+                assert!(cum >= last_cum, "buckets must be cumulative: {line}");
+                last_cum = cum;
+            }
+        }
+        assert!(bucket_lines >= 4, "occupied buckets + +Inf expected");
+        assert!(text.contains(&format!("{}_sum", names::PHASE_DRAFT_US)));
+        assert!(text.contains(&format!("{}_count 4", names::PHASE_DRAFT_US)));
+        assert!(text.contains("requests_completed 3"));
+        assert!(text.contains("pool_pages_in_use 4.5"));
+    }
+
+    fn sample_line_ok(line: &str) -> bool {
+        // name{labels} value | name value
+        let Some((name, value)) = line.rsplit_once(' ') else {
+            return false;
+        };
+        let name_ok = match name.split_once('{') {
+            Some((base, labels)) => {
+                labels.ends_with('}')
+                    && base
+                        .chars()
+                        .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+            }
+            None => name
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+        };
+        name_ok && value.parse::<f64>().is_ok()
     }
 }

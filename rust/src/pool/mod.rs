@@ -73,4 +73,4 @@ pub use page::{
     CacheTraffic, PageHandle, PageKind, PagePool, PoolConfig, SessionId, SessionShard,
 };
 pub use paged::{mock_kv, mock_kv_into, BlockTable, PagedKvCache};
-pub use session::{shared, AdmitOutcome, SessionManager, SharedSessionManager};
+pub use session::{shared, AdmitOutcome, RoundPhases, SessionManager, SharedSessionManager};

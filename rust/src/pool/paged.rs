@@ -388,6 +388,15 @@ impl PagedKvCache {
 
     /// Quantize C_F1 into a newly allocated page and shift C_F2 → C_F1.
     fn flush(&mut self) -> Result<()> {
+        let t0 = std::time::Instant::now();
+        let out = self.flush_inner();
+        crate::trace::emit(crate::trace::PhaseEvent::QuantFlush {
+            us: t0.elapsed().as_micros() as u64,
+        });
+        out
+    }
+
+    fn flush_inner(&mut self) -> Result<()> {
         let n_f = self.tracker()?.n_f;
         ensure!(n_f >= 2 * self.g, "flush without a full C_F2");
         ensure!(

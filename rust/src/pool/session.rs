@@ -48,6 +48,22 @@ use super::page::{PageHandle, PageKind, PagePool, PoolConfig, SessionId, Session
 
 pub use super::page::CacheTraffic;
 
+/// Per-round wall-time split reported by an embedded step batcher: how much
+/// of the round went to prefill chunks vs decode cycles, plus the time
+/// sessions sat deferred behind quant-pool backpressure (sessions × round
+/// span). Accumulated by [`SessionManager::note_round`] and surfaced in
+/// `/stats` as `round_prefill_us` / `round_decode_us` / `round_quant_wait_us`.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RoundPhases {
+    /// Wall time spent inside prefill steps this round (µs, summed over
+    /// sessions — can exceed the round span when workers run in parallel).
+    pub prefill_us: f64,
+    /// Wall time spent inside decode (draft/verify) steps this round (µs).
+    pub decode_us: f64,
+    /// Deferred-session wait attributed to quant-pool backpressure (µs).
+    pub quant_wait_us: f64,
+}
+
 /// Outcome of an admission attempt.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AdmitOutcome {
@@ -90,6 +106,10 @@ pub struct SessionManager {
     round_span_us: f64,
     step_workers: usize,
     step_workers_busy: usize,
+    /// Cumulative per-phase round time (see [`RoundPhases`]).
+    round_prefill_us: f64,
+    round_decode_us: f64,
+    round_quant_wait_us: f64,
 }
 
 /// The coordinator and paged caches share the manager behind one mutex.
@@ -118,6 +138,9 @@ impl SessionManager {
             round_span_us: 0.0,
             step_workers: 0,
             step_workers_busy: 0,
+            round_prefill_us: 0.0,
+            round_decode_us: 0.0,
+            round_quant_wait_us: 0.0,
         })
     }
 
@@ -157,14 +180,34 @@ impl SessionManager {
 
     /// Once-per-round telemetry from an embedded [`crate::coordinator::
     /// batcher::StepBatcher`]: the round's wall span, how many step
-    /// workers ran sessions concurrently, and the configured worker count.
+    /// workers ran sessions concurrently, the configured worker count,
+    /// and the round's phase split (accumulated as cumulative totals).
     /// One manager-lock acquisition per ROUND (control plane) — the steps
     /// themselves never touch this lock.
-    pub fn note_round(&mut self, span_us: f64, busy: usize, workers: usize) {
+    pub fn note_round(
+        &mut self,
+        span_us: f64,
+        busy: usize,
+        workers: usize,
+        phases: RoundPhases,
+    ) {
         self.rounds += 1;
         self.round_span_us = span_us;
         self.step_workers_busy = busy;
         self.step_workers = workers;
+        self.round_prefill_us += phases.prefill_us;
+        self.round_decode_us += phases.decode_us;
+        self.round_quant_wait_us += phases.quant_wait_us;
+    }
+
+    /// Cumulative round phase totals accumulated by
+    /// [`SessionManager::note_round`].
+    pub fn round_phase_totals(&self) -> RoundPhases {
+        RoundPhases {
+            prefill_us: self.round_prefill_us,
+            decode_us: self.round_decode_us,
+            quant_wait_us: self.round_quant_wait_us,
+        }
     }
 
     /// Batcher rounds recorded via [`SessionManager::note_round`].
@@ -301,6 +344,7 @@ impl SessionManager {
         entry.reserved = 0;
         entry.evicted = true;
         self.evictions += 1;
+        crate::trace::emit(crate::trace::PhaseEvent::EvictLru { victim });
         Some(victim)
     }
 
@@ -413,6 +457,18 @@ impl SessionManager {
             (
                 crate::metrics::names::BATCHER_ROUNDS,
                 Json::num(self.rounds as f64),
+            ),
+            (
+                crate::metrics::names::ROUND_PREFILL_US,
+                Json::num(self.round_prefill_us),
+            ),
+            (
+                crate::metrics::names::ROUND_DECODE_US,
+                Json::num(self.round_decode_us),
+            ),
+            (
+                crate::metrics::names::ROUND_QUANT_WAIT_US,
+                Json::num(self.round_quant_wait_us),
             ),
         ])
     }
@@ -564,16 +620,59 @@ mod tests {
     #[test]
     fn round_telemetry_surfaces_in_stats() {
         let mut m = mgr(8);
-        m.note_round(123.5, 2, 4);
-        m.note_round(80.0, 3, 4);
+        m.note_round(
+            123.5,
+            2,
+            4,
+            RoundPhases { prefill_us: 100.0, decode_us: 20.0, quant_wait_us: 3.5 },
+        );
+        m.note_round(
+            80.0,
+            3,
+            4,
+            RoundPhases { prefill_us: 0.0, decode_us: 75.0, quant_wait_us: 0.0 },
+        );
         assert_eq!(m.rounds(), 2);
         let (workers, busy, span, rounds) = m.round_stats();
         assert_eq!((workers, busy, rounds), (4, 3, 2));
         assert!((span - 80.0).abs() < 1e-9);
+        // phase totals accumulate across rounds (cumulative counters)
+        let totals = m.round_phase_totals();
+        assert!((totals.prefill_us - 100.0).abs() < 1e-9);
+        assert!((totals.decode_us - 95.0).abs() < 1e-9);
+        assert!((totals.quant_wait_us - 3.5).abs() < 1e-9);
         let js = m.stats_json().to_string();
-        for key in ["step_workers", "step_workers_busy", "round_span_us", "batcher_rounds"] {
+        for key in [
+            "step_workers",
+            "step_workers_busy",
+            "round_span_us",
+            "batcher_rounds",
+            "round_prefill_us",
+            "round_decode_us",
+            "round_quant_wait_us",
+        ] {
             assert!(js.contains(key), "missing {key} in {js}");
         }
+    }
+
+    #[test]
+    fn eviction_emits_trace_event_under_scope() {
+        use crate::trace::{PhaseEvent, SpanScope, TraceBuf};
+        let mut m = mgr(8);
+        m.admit(1, 2, true).unwrap();
+        m.alloc(1, PageKind::Quant).unwrap();
+        let buf = TraceBuf::new(16);
+        {
+            let _scope = SpanScope::enter(Arc::clone(&buf));
+            assert_eq!(m.evict_lru(None), Some(1));
+        }
+        let events = buf.snapshot();
+        assert!(
+            events
+                .iter()
+                .any(|(_, e)| matches!(e, PhaseEvent::EvictLru { victim: 1 })),
+            "EvictLru not recorded: {events:?}"
+        );
     }
 
     /// Property: random admit/alloc/free/touch/evict/release traffic keeps

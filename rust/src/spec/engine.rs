@@ -5,6 +5,7 @@
 //! prefix plus the corrected/bonus token, flush the FP buffer as it fills.
 //! With `Method::Autoregressive` it degenerates to the plain AR loop.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -12,6 +13,7 @@ use anyhow::Result;
 use super::sampler::Sampler;
 use crate::config::Method;
 use crate::model::Decoder;
+use crate::trace::{self, PhaseEvent, TraceBuf};
 
 /// Outcome of one generation call.
 #[derive(Debug, Clone, Default)]
@@ -55,11 +57,20 @@ impl GenResult {
 pub struct SpecEngine {
     pub gamma: usize,
     pub sampler: Sampler,
+    /// Request-scoped trace buffer; phase events from this engine's whole
+    /// call stack (including the decoder's cache flushes) land here.
+    trace: Option<Arc<TraceBuf>>,
 }
 
 impl SpecEngine {
     pub fn new(gamma: usize, sampler: Sampler) -> SpecEngine {
-        SpecEngine { gamma, sampler }
+        SpecEngine { gamma, sampler, trace: None }
+    }
+
+    /// Attach a request-scoped trace buffer (builder style).
+    pub fn with_trace(mut self, buf: Arc<TraceBuf>) -> SpecEngine {
+        self.trace = Some(buf);
+        self
     }
 
     /// Generate up to `max_new` tokens after `prompt`.
@@ -69,10 +80,23 @@ impl SpecEngine {
         prompt: &[i32],
         max_new: usize,
     ) -> Result<GenResult> {
+        let _scope = self
+            .trace
+            .as_ref()
+            .map(|t| trace::SpanScope::enter(Arc::clone(t)));
+        let traced = self.trace.is_some();
         let mut res = GenResult::default();
         let t0 = Instant::now();
         let logits = dec.prefill(prompt)?;
         res.prefill_secs = t0.elapsed().as_secs_f64();
+        if traced {
+            // One monolithic prefill: a single chunk event covering it all.
+            trace::emit(PhaseEvent::PrefillChunk {
+                n: 0,
+                tokens: prompt.len(),
+                us: (res.prefill_secs * 1e6) as u64,
+            });
+        }
 
         let t1 = Instant::now();
         if max_new == 0 {
@@ -87,9 +111,15 @@ impl SpecEngine {
 
         if dec.method() == Method::Autoregressive {
             while res.tokens.len() < max_new {
+                let ts = traced.then(Instant::now);
                 let logits = dec.ar_step(last)?;
                 last = self.sampler.sample(&logits);
                 res.tokens.push(last);
+                if let Some(ts) = ts {
+                    trace::emit(PhaseEvent::Verify {
+                        us: ts.elapsed().as_micros() as u64,
+                    });
+                }
             }
             res.decode_secs = t1.elapsed().as_secs_f64();
             return Ok(res);
@@ -115,6 +145,7 @@ impl SpecEngine {
             // through the verify path, valid on every backend.
             let gamma = gamma_cfg.min(max_new - res.tokens.len() - 1);
             // ---- draft phase (Alg. 1 lines 6-9) ----
+            let t_draft = traced.then(Instant::now);
             dec.begin_cycle();
             let mut feed = last;
             drafted.clear();
@@ -135,6 +166,8 @@ impl SpecEngine {
             vtokens.clear();
             vtokens.push(last);
             vtokens.extend_from_slice(&drafted);
+            let draft_us = t_draft.map(|t| t.elapsed().as_micros() as u64);
+            let t_verify = traced.then(Instant::now);
             let target_logits = dec.verify(&vtokens)?;
             let out = self.sampler.verify(&drafted, &draft_logits, &target_logits);
             res.drafted += gamma as u64;
@@ -143,6 +176,16 @@ impl SpecEngine {
 
             // commit accepted prefix + the corrected/bonus token
             dec.commit(out.accepted, vtokens.len())?;
+            if let Some(us) = draft_us {
+                trace::emit(PhaseEvent::DraftCycle {
+                    gamma,
+                    accepted: out.accepted,
+                    us,
+                });
+                trace::emit(PhaseEvent::Verify {
+                    us: t_verify.map_or(0, |t| t.elapsed().as_micros() as u64),
+                });
+            }
             for &g in drafted.iter().take(out.accepted) {
                 res.tokens.push(g);
             }
@@ -312,5 +355,46 @@ mod tests {
         fn set_method(&mut self, m: Method) {
             self.force_method(m);
         }
+    }
+
+    /// Tracing is an observer: a traced engine emits one prefill event and
+    /// one (DraftCycle, Verify) pair per cycle, with timestamps monotone —
+    /// and produces exactly the tokens an untraced engine does.
+    #[test]
+    fn traced_generate_emits_phase_events_without_changing_output() {
+        let prompt = vec![10, 20, 30];
+        let mut plain = MockDecoder::new(64, 7, 0.2);
+        let base = greedy_engine(4).generate(&mut plain, &prompt, 24).unwrap();
+
+        let buf = TraceBuf::new(256);
+        let mut traced_dec = MockDecoder::new(64, 7, 0.2);
+        let mut eng = greedy_engine(4).with_trace(Arc::clone(&buf));
+        let out = eng.generate(&mut traced_dec, &prompt, 24).unwrap();
+        assert_eq!(out.tokens, base.tokens, "tracing must not perturb decode");
+
+        let events = buf.snapshot();
+        assert_eq!(buf.dropped(), 0);
+        let prefills = events
+            .iter()
+            .filter(|(_, e)| matches!(e, PhaseEvent::PrefillChunk { .. }))
+            .count();
+        assert_eq!(prefills, 1, "monolithic prefill = one chunk event");
+        let cycles = events
+            .iter()
+            .filter(|(_, e)| matches!(e, PhaseEvent::DraftCycle { .. }))
+            .count();
+        let verifies = events
+            .iter()
+            .filter(|(_, e)| matches!(e, PhaseEvent::Verify { .. }))
+            .count();
+        assert_eq!(cycles as u64, out.cycles);
+        assert_eq!(verifies, cycles, "one verify span per cycle");
+        for (i, (_, e)) in events.iter().enumerate() {
+            if let PhaseEvent::DraftCycle { gamma, accepted, .. } = e {
+                assert!(accepted <= gamma, "event {i}: accepted > gamma");
+            }
+        }
+        let times: Vec<u64> = events.iter().map(|(t, _)| *t).collect();
+        assert!(times.windows(2).all(|w| w[0] <= w[1]), "timestamps monotone");
     }
 }

@@ -1,0 +1,569 @@
+//! Request-scoped tracing for the serving path.
+//!
+//! Three pieces, sized so the decode hot path stays allocation-free
+//! (pinned by `tests/alloc_hotpath.rs`):
+//!
+//! * [`TraceBuf`] — a per-request event buffer, fully preallocated at
+//!   admission (`trace_buffer_events` slots). Recording an event is a
+//!   `fetch_add` on the write cursor plus plain atomic stores into the
+//!   claimed slot: no locks, no allocation, monotonic µs timestamps
+//!   anchored to the buffer's creation `Instant`. Events past capacity are
+//!   counted in `dropped` rather than grown into.
+//! * [`SpanScope`] — a thread-local RAII guard binding the current
+//!   request's `TraceBuf` for the duration of a step, so deep layers
+//!   (`PagedKvCache::flush`, `SessionManager::evict_lru`) can attribute
+//!   events via [`emit`] without threading a handle through every
+//!   signature. Entering a scope clones an `Arc` (refcount bump only).
+//! * [`FlightRecorder`] — a fixed-capacity ring of the last N *completed*
+//!   request timelines, mutexed because it is touched once per request at
+//!   completion (control plane), never per step. Served by
+//!   `GET /debug/requests`.
+//!
+//! The phase vocabulary ([`PhaseEvent`]) follows the request's life:
+//! queue wait → pool admission → prefill chunks → speculation cycles
+//! (draft span with γ/accepted, verify span) → completion, with
+//! `QuantFlush`/`EvictLru` interleaved wherever the paged cache flushes a
+//! full FP group or the pool evicts an LRU victim mid-step.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::metrics::{names, Registry};
+use crate::util::json::Json;
+
+/// One typed phase event on a request's timeline. Durations are µs of
+/// wall clock spent *inside* the phase; marker events (`EvictLru`,
+/// `Completed`) carry no duration and do not count toward the phase sum.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PhaseEvent {
+    /// Time from enqueue to dispatch, minus any admission polling.
+    QueueWait { us: u64 },
+    /// Time the request's head-of-queue slot spent polling a saturated
+    /// pool before `admit` returned `Run`.
+    AdmissionWait { us: u64 },
+    /// One chunked-prefill step: chunk index `n`, tokens fed, span.
+    PrefillChunk { n: usize, tokens: usize, us: u64 },
+    /// One speculation cycle's draft phase: γ requested, tokens accepted
+    /// by the subsequent verify, and the draft-loop span.
+    DraftCycle { gamma: usize, accepted: usize, us: u64 },
+    /// One speculation cycle's verify+commit span.
+    Verify { us: u64 },
+    /// A paged-cache FP-buffer flush (quantize C_F1 into a fresh page).
+    QuantFlush { us: u64 },
+    /// The pool evicted LRU session `victim` while this request held the
+    /// span scope (slow-path page allocation under pressure).
+    EvictLru { victim: u64 },
+    /// Terminal marker: total wall µs from enqueue to retirement.
+    Completed { total_us: u64 },
+}
+
+impl PhaseEvent {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PhaseEvent::QueueWait { .. } => "queue_wait",
+            PhaseEvent::AdmissionWait { .. } => "admission_wait",
+            PhaseEvent::PrefillChunk { .. } => "prefill_chunk",
+            PhaseEvent::DraftCycle { .. } => "draft_cycle",
+            PhaseEvent::Verify { .. } => "verify",
+            PhaseEvent::QuantFlush { .. } => "quant_flush",
+            PhaseEvent::EvictLru { .. } => "evict_lru",
+            PhaseEvent::Completed { .. } => "completed",
+        }
+    }
+
+    /// Wall-clock contribution of this event to the per-phase breakdown.
+    pub fn duration_us(&self) -> u64 {
+        match *self {
+            PhaseEvent::QueueWait { us }
+            | PhaseEvent::AdmissionWait { us }
+            | PhaseEvent::PrefillChunk { us, .. }
+            | PhaseEvent::DraftCycle { us, .. }
+            | PhaseEvent::Verify { us }
+            | PhaseEvent::QuantFlush { us } => us,
+            PhaseEvent::EvictLru { .. } | PhaseEvent::Completed { .. } => 0,
+        }
+    }
+
+    fn encode(&self) -> (u64, u64, u64, u64) {
+        match *self {
+            PhaseEvent::QueueWait { us } => (0, us, 0, 0),
+            PhaseEvent::AdmissionWait { us } => (1, us, 0, 0),
+            PhaseEvent::PrefillChunk { n, tokens, us } => (2, n as u64, tokens as u64, us),
+            PhaseEvent::DraftCycle { gamma, accepted, us } => {
+                (3, gamma as u64, accepted as u64, us)
+            }
+            PhaseEvent::Verify { us } => (4, us, 0, 0),
+            PhaseEvent::QuantFlush { us } => (5, us, 0, 0),
+            PhaseEvent::EvictLru { victim } => (6, victim, 0, 0),
+            PhaseEvent::Completed { total_us } => (7, total_us, 0, 0),
+        }
+    }
+
+    fn decode(kind: u64, a: u64, b: u64, c: u64) -> Option<PhaseEvent> {
+        Some(match kind {
+            0 => PhaseEvent::QueueWait { us: a },
+            1 => PhaseEvent::AdmissionWait { us: a },
+            2 => PhaseEvent::PrefillChunk { n: a as usize, tokens: b as usize, us: c },
+            3 => PhaseEvent::DraftCycle { gamma: a as usize, accepted: b as usize, us: c },
+            4 => PhaseEvent::Verify { us: a },
+            5 => PhaseEvent::QuantFlush { us: a },
+            6 => PhaseEvent::EvictLru { victim: a },
+            7 => PhaseEvent::Completed { total_us: a },
+            _ => return None,
+        })
+    }
+
+    pub fn to_json(&self, at_us: u64) -> Json {
+        let mut pairs = vec![
+            ("at_us", Json::num(at_us as f64)),
+            ("phase", Json::str(self.name())),
+        ];
+        match *self {
+            PhaseEvent::PrefillChunk { n, tokens, us } => {
+                pairs.push(("n", Json::num(n as f64)));
+                pairs.push(("tokens", Json::num(tokens as f64)));
+                pairs.push(("us", Json::num(us as f64)));
+            }
+            PhaseEvent::DraftCycle { gamma, accepted, us } => {
+                pairs.push(("gamma", Json::num(gamma as f64)));
+                pairs.push(("accepted", Json::num(accepted as f64)));
+                pairs.push(("us", Json::num(us as f64)));
+            }
+            PhaseEvent::EvictLru { victim } => {
+                pairs.push(("victim", Json::num(victim as f64)));
+            }
+            PhaseEvent::Completed { total_us } => {
+                pairs.push(("total_us", Json::num(total_us as f64)));
+            }
+            _ => pairs.push(("us", Json::num(self.duration_us() as f64))),
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// One preallocated event slot: the kind discriminant plus up to three
+/// payload words and the µs offset from trace start. Plain relaxed atomics
+/// — a slot is written by exactly one thread (the session is stepped by
+/// one worker at a time) and only read after the request retires.
+#[derive(Default)]
+struct Slot {
+    at_us: AtomicU64,
+    kind: AtomicU64,
+    a: AtomicU64,
+    b: AtomicU64,
+    c: AtomicU64,
+}
+
+/// Per-request span buffer. See module docs for the recording contract.
+pub struct TraceBuf {
+    start: Instant,
+    slots: Vec<Slot>,
+    len: AtomicUsize,
+    dropped: AtomicU64,
+}
+
+impl TraceBuf {
+    /// Preallocate `capacity` event slots (the only allocation this buffer
+    /// ever performs).
+    pub fn new(capacity: usize) -> Arc<TraceBuf> {
+        Arc::new(TraceBuf {
+            start: Instant::now(),
+            slots: (0..capacity).map(|_| Slot::default()).collect(),
+            len: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+        })
+    }
+
+    /// Record an event at the current monotonic offset. Lock-free and
+    /// allocation-free; events past capacity bump `dropped` instead.
+    pub fn record(&self, ev: PhaseEvent) {
+        let at = self.start.elapsed().as_micros() as u64;
+        let i = self.len.fetch_add(1, Ordering::Relaxed);
+        match self.slots.get(i) {
+            Some(slot) => {
+                let (kind, a, b, c) = ev.encode();
+                slot.at_us.store(at, Ordering::Relaxed);
+                slot.a.store(a, Ordering::Relaxed);
+                slot.b.store(b, Ordering::Relaxed);
+                slot.c.store(c, Ordering::Relaxed);
+                // kind last: a snapshot racing a write sees kind+1 == 0
+                // (unwritten) rather than a half-initialized payload.
+                slot.kind.store(kind + 1, Ordering::Release);
+            }
+            None => {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    pub fn recorded(&self) -> usize {
+        self.len.load(Ordering::Relaxed).min(self.slots.len())
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Copy out the recorded events in order. Called once at retirement.
+    pub fn snapshot(&self) -> Vec<(u64, PhaseEvent)> {
+        let n = self.recorded();
+        let mut out = Vec::with_capacity(n);
+        for slot in &self.slots[..n] {
+            let kind = slot.kind.load(Ordering::Acquire);
+            if kind == 0 {
+                continue; // claimed but not yet written
+            }
+            let ev = PhaseEvent::decode(
+                kind - 1,
+                slot.a.load(Ordering::Relaxed),
+                slot.b.load(Ordering::Relaxed),
+                slot.c.load(Ordering::Relaxed),
+            );
+            if let Some(ev) = ev {
+                out.push((slot.at_us.load(Ordering::Relaxed), ev));
+            }
+        }
+        out
+    }
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<Arc<TraceBuf>>> = const { RefCell::new(None) };
+}
+
+/// RAII guard binding a request's `TraceBuf` to the current thread so
+/// nested layers can [`emit`] without plumbing. Scopes nest: dropping
+/// restores the previous binding.
+pub struct SpanScope {
+    prev: Option<Arc<TraceBuf>>,
+}
+
+impl SpanScope {
+    pub fn enter(buf: Arc<TraceBuf>) -> SpanScope {
+        let prev = CURRENT.with(|c| c.borrow_mut().replace(buf));
+        SpanScope { prev }
+    }
+}
+
+impl Drop for SpanScope {
+    fn drop(&mut self) {
+        CURRENT.with(|c| *c.borrow_mut() = self.prev.take());
+    }
+}
+
+/// Record `ev` against the thread's current span scope; a no-op (one TLS
+/// read and a branch) when no request is being traced on this thread.
+pub fn emit(ev: PhaseEvent) {
+    CURRENT.with(|c| {
+        if let Some(buf) = c.borrow().as_ref() {
+            buf.record(ev);
+        }
+    });
+}
+
+/// A completed request's timeline, as held by the flight recorder.
+#[derive(Debug, Clone)]
+pub struct RequestTimeline {
+    pub id: u64,
+    pub total_us: u64,
+    pub dropped: u64,
+    pub events: Vec<(u64, PhaseEvent)>,
+}
+
+impl RequestTimeline {
+    /// Sum of all phase durations — the coverage check against `total_us`.
+    pub fn phase_sum_us(&self) -> u64 {
+        self.events.iter().map(|(_, e)| e.duration_us()).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::num(self.id as f64)),
+            ("total_us", Json::num(self.total_us as f64)),
+            ("phase_sum_us", Json::num(self.phase_sum_us() as f64)),
+            ("dropped", Json::num(self.dropped as f64)),
+            (
+                "events",
+                Json::arr(self.events.iter().map(|(at, e)| e.to_json(*at))),
+            ),
+        ])
+    }
+}
+
+/// Fixed-capacity ring of the last N completed request timelines.
+pub struct FlightRecorder {
+    cap: usize,
+    ring: Mutex<VecDeque<RequestTimeline>>,
+}
+
+impl FlightRecorder {
+    pub fn new(cap: usize) -> FlightRecorder {
+        FlightRecorder { cap, ring: Mutex::new(VecDeque::with_capacity(cap)) }
+    }
+
+    pub fn push(&self, t: RequestTimeline) {
+        if self.cap == 0 {
+            return;
+        }
+        let mut ring = self.ring.lock().unwrap();
+        if ring.len() == self.cap {
+            ring.pop_front();
+        }
+        ring.push_back(t);
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Oldest-first JSON view, the `GET /debug/requests` payload.
+    pub fn to_json(&self) -> Json {
+        let ring = self.ring.lock().unwrap();
+        Json::obj(vec![
+            ("capacity", Json::num(self.cap as f64)),
+            ("requests", Json::arr(ring.iter().map(|t| t.to_json()))),
+        ])
+    }
+}
+
+/// Per-coordinator tracing config + flight recorder.
+pub struct Tracer {
+    enabled: bool,
+    buffer_events: usize,
+    recorder: FlightRecorder,
+}
+
+impl Tracer {
+    pub fn new(enabled: bool, buffer_events: usize, recorder_cap: usize) -> Tracer {
+        Tracer {
+            enabled,
+            buffer_events,
+            recorder: FlightRecorder::new(recorder_cap),
+        }
+    }
+
+    /// Disabled tracer for paths that don't serve `/debug/requests`.
+    pub fn disabled() -> Tracer {
+        Tracer::new(false, 0, 0)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Allocate a fresh request buffer, or `None` when tracing is off.
+    pub fn new_request(&self) -> Option<Arc<TraceBuf>> {
+        self.enabled.then(|| TraceBuf::new(self.buffer_events))
+    }
+
+    /// Seal a request's buffer into a timeline: stamps the `Completed`
+    /// marker, snapshots the events, and hands the timeline back so the
+    /// caller can mine it (phase histograms) before [`Tracer::push`].
+    pub fn finish(&self, id: u64, buf: &TraceBuf, total_us: u64) -> RequestTimeline {
+        buf.record(PhaseEvent::Completed { total_us });
+        RequestTimeline {
+            id,
+            total_us,
+            dropped: buf.dropped(),
+            events: buf.snapshot(),
+        }
+    }
+
+    pub fn push(&self, t: RequestTimeline) {
+        self.recorder.push(t);
+    }
+
+    pub fn recorder(&self) -> &FlightRecorder {
+        &self.recorder
+    }
+
+    pub fn to_json(&self) -> Json {
+        self.recorder.to_json()
+    }
+}
+
+/// Fold a completed timeline into the registry's per-phase, acceptance,
+/// and accepted-length histograms (the `GET /metrics` view of tracing).
+/// Completion-time work — never on the step path.
+pub fn record_phase_histograms(t: &RequestTimeline, metrics: &Registry) {
+    let queue = metrics.histogram(names::PHASE_QUEUE_US);
+    let admission = metrics.histogram(names::PHASE_ADMISSION_US);
+    let prefill = metrics.histogram(names::PHASE_PREFILL_CHUNK_US);
+    let draft = metrics.histogram(names::PHASE_DRAFT_US);
+    let verify = metrics.histogram(names::PHASE_VERIFY_US);
+    let flush = metrics.histogram(names::PHASE_QUANT_FLUSH_US);
+    let accepted_len = metrics.histogram(names::ACCEPTED_LEN);
+    let mut drafted_total = 0u64;
+    let mut accepted_total = 0u64;
+    for (_, ev) in &t.events {
+        match *ev {
+            PhaseEvent::QueueWait { us } => queue.record_us(us as f64),
+            PhaseEvent::AdmissionWait { us } => admission.record_us(us as f64),
+            PhaseEvent::PrefillChunk { us, .. } => prefill.record_us(us as f64),
+            PhaseEvent::DraftCycle { gamma, accepted, us } => {
+                draft.record_us(us as f64);
+                accepted_len.record_us(accepted as f64);
+                drafted_total += gamma as u64;
+                accepted_total += accepted as u64;
+            }
+            PhaseEvent::Verify { us } => verify.record_us(us as f64),
+            PhaseEvent::QuantFlush { us } => flush.record_us(us as f64),
+            PhaseEvent::EvictLru { .. } | PhaseEvent::Completed { .. } => {}
+        }
+    }
+    if drafted_total > 0 {
+        metrics
+            .histogram(names::ACCEPTANCE_RATE_PCT)
+            .record_us(100.0 * accepted_total as f64 / drafted_total as f64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_roundtrip_through_slots() {
+        let buf = TraceBuf::new(16);
+        let evs = [
+            PhaseEvent::QueueWait { us: 12 },
+            PhaseEvent::AdmissionWait { us: 0 },
+            PhaseEvent::PrefillChunk { n: 3, tokens: 128, us: 455 },
+            PhaseEvent::DraftCycle { gamma: 4, accepted: 3, us: 88 },
+            PhaseEvent::Verify { us: 31 },
+            PhaseEvent::QuantFlush { us: 9 },
+            PhaseEvent::EvictLru { victim: 7 },
+            PhaseEvent::Completed { total_us: 600 },
+        ];
+        for ev in evs {
+            buf.record(ev);
+        }
+        let snap = buf.snapshot();
+        assert_eq!(snap.len(), evs.len());
+        for ((_, got), want) in snap.iter().zip(evs) {
+            assert_eq!(*got, want);
+        }
+        // timestamps are monotone
+        assert!(snap.windows(2).all(|w| w[0].0 <= w[1].0));
+        assert_eq!(buf.dropped(), 0);
+    }
+
+    #[test]
+    fn capacity_overflow_drops_without_growing() {
+        let buf = TraceBuf::new(4);
+        for i in 0..10 {
+            buf.record(PhaseEvent::Verify { us: i });
+        }
+        assert_eq!(buf.recorded(), 4);
+        assert_eq!(buf.dropped(), 6);
+        let snap = buf.snapshot();
+        assert_eq!(snap.len(), 4);
+        assert_eq!(snap[3].1, PhaseEvent::Verify { us: 3 });
+    }
+
+    #[test]
+    fn emit_without_scope_is_a_noop() {
+        emit(PhaseEvent::Verify { us: 1 }); // must not panic or record anywhere
+        let buf = TraceBuf::new(8);
+        {
+            let _scope = SpanScope::enter(Arc::clone(&buf));
+            emit(PhaseEvent::QuantFlush { us: 5 });
+        }
+        emit(PhaseEvent::QuantFlush { us: 6 }); // scope dropped: not recorded
+        let snap = buf.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].1, PhaseEvent::QuantFlush { us: 5 });
+    }
+
+    #[test]
+    fn scopes_nest_and_restore() {
+        let outer = TraceBuf::new(8);
+        let inner = TraceBuf::new(8);
+        let _o = SpanScope::enter(Arc::clone(&outer));
+        {
+            let _i = SpanScope::enter(Arc::clone(&inner));
+            emit(PhaseEvent::Verify { us: 1 });
+        }
+        emit(PhaseEvent::Verify { us: 2 });
+        assert_eq!(inner.snapshot().len(), 1);
+        assert_eq!(outer.snapshot().len(), 1);
+        assert_eq!(outer.snapshot()[0].1, PhaseEvent::Verify { us: 2 });
+    }
+
+    #[test]
+    fn flight_recorder_keeps_last_n() {
+        let rec = FlightRecorder::new(3);
+        for id in 0..5 {
+            rec.push(RequestTimeline { id, total_us: id * 10, dropped: 0, events: vec![] });
+        }
+        assert_eq!(rec.len(), 3);
+        let j = rec.to_json();
+        let reqs = j.get("requests").unwrap().as_arr().unwrap();
+        let ids: Vec<_> = reqs
+            .iter()
+            .map(|r| r.get("id").unwrap().as_usize().unwrap())
+            .collect();
+        assert_eq!(ids, vec![2, 3, 4], "oldest-first, last 3 kept");
+    }
+
+    #[test]
+    fn tracer_finish_builds_timeline_and_histograms() {
+        let tracer = Tracer::new(true, 64, 4);
+        let buf = tracer.new_request().unwrap();
+        buf.record(PhaseEvent::QueueWait { us: 10 });
+        buf.record(PhaseEvent::PrefillChunk { n: 0, tokens: 32, us: 100 });
+        buf.record(PhaseEvent::DraftCycle { gamma: 4, accepted: 2, us: 50 });
+        buf.record(PhaseEvent::Verify { us: 40 });
+        let t = tracer.finish(9, &buf, 210);
+        assert_eq!(t.id, 9);
+        assert_eq!(t.phase_sum_us(), 200);
+        assert!(matches!(t.events.last().unwrap().1, PhaseEvent::Completed { total_us: 210 }));
+        let metrics = Registry::new();
+        record_phase_histograms(&t, &metrics);
+        assert_eq!(metrics.histogram(names::PHASE_DRAFT_US).count(), 1);
+        assert_eq!(metrics.histogram(names::ACCEPTED_LEN).count(), 1);
+        // 2 of 4 drafted accepted -> 50%
+        assert_eq!(metrics.histogram(names::ACCEPTANCE_RATE_PCT).max_us(), 50.0);
+        tracer.push(t);
+        assert_eq!(tracer.recorder().len(), 1);
+        let json = tracer.to_json().to_string();
+        assert!(json.contains("\"phase\":\"draft_cycle\""));
+        assert!(json.contains("\"gamma\":4"));
+    }
+
+    #[test]
+    fn disabled_tracer_hands_out_nothing() {
+        let tracer = Tracer::disabled();
+        assert!(tracer.new_request().is_none());
+        assert!(!tracer.enabled());
+        tracer.push(RequestTimeline { id: 1, total_us: 1, dropped: 0, events: vec![] });
+        assert!(tracer.recorder().is_empty(), "cap-0 ring stays empty");
+    }
+
+    #[test]
+    fn timeline_json_shape() {
+        let t = RequestTimeline {
+            id: 3,
+            total_us: 500,
+            dropped: 1,
+            events: vec![
+                (0, PhaseEvent::QueueWait { us: 20 }),
+                (25, PhaseEvent::EvictLru { victim: 11 }),
+            ],
+        };
+        let j = t.to_json();
+        assert_eq!(j.get("id").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("phase_sum_us").unwrap().as_usize(), Some(20));
+        assert_eq!(j.get("dropped").unwrap().as_usize(), Some(1));
+        let evs = j.get("events").unwrap().as_arr().unwrap();
+        assert_eq!(evs[0].get("phase").unwrap().as_str(), Some("queue_wait"));
+        assert_eq!(evs[1].get("victim").unwrap().as_usize(), Some(11));
+    }
+}

@@ -24,7 +24,11 @@
 //! * parallel rounds (ISSUE 5): dispatching a `StepBatcher` round over
 //!   step workers leaves per-STEP allocations unchanged — the measured
 //!   overhead vs serial rounds is bounded by the per-round dispatch
-//!   scaffolding (result slots, wait group, job boxes).
+//!   scaffolding (result slots, wait group, job boxes);
+//! * request tracing (ISSUE 6): a traced `ActiveSession::step` meets the
+//!   SAME per-cycle bound as an untraced one — span recording is
+//!   preallocated slots, relaxed atomic stores, and a TLS Arc swap, so
+//!   `trace_enabled` adds zero steady-state allocations per decode cycle.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -189,6 +193,44 @@ fn steady_state_hot_path_does_not_allocate() {
          must be cycle-persistent)",
         cycles * per_cycle + 4
     );
+
+    // ---- traced step: tracing adds ZERO steady-state allocations -------
+    // The trace path is preallocated slots + relaxed atomic stores + a TLS
+    // Arc swap, so a traced ActiveSession::step must satisfy the EXACT
+    // same bound as the untraced one. The buffer is sized to hold the
+    // whole window so no event is dropped mid-measurement.
+    use quantspec::trace::TraceBuf;
+    let tgamma = 4usize;
+    let tbuf = TraceBuf::new(8192);
+    let mut traced_sess = ActiveSession::admit(
+        2,
+        Box::new(MockDecoder::new(MOCK_VOCAB, MOCK_GAMMA_MAX, 0.0)),
+        Sampler::new(0.0, 1),
+        tgamma,
+        &[3, 1, 4, 1, 5],
+        2000,
+    )
+    .unwrap()
+    .with_trace(std::sync::Arc::clone(&tbuf));
+    for _ in 0..60 {
+        traced_sess.step().unwrap(); // warmup
+    }
+    let tcycles = 50u64;
+    let t_per_cycle = 2 * tgamma as u64 + 3;
+    let before = allocs();
+    for _ in 0..tcycles {
+        traced_sess.step().unwrap();
+    }
+    let traced_delta = allocs() - before;
+    assert!(
+        traced_delta <= tcycles * t_per_cycle + 4,
+        "traced ActiveSession::step allocated {traced_delta} over {tcycles} \
+         cycles (expected <= {} — tracing must add zero steady-state \
+         allocations per decode cycle)",
+        tcycles * t_per_cycle + 4
+    );
+    assert_eq!(tbuf.dropped(), 0, "trace buffer sized for the whole window");
+    assert!(tbuf.recorded() > 0, "the traced session actually emitted events");
 
     // ---- parallel rounds: per-step allocs unchanged vs serial ----------
     // Dispatching a round over step workers must not change what a STEP
