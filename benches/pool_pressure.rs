@@ -5,10 +5,14 @@
 //! bounded by the chunk size, never the prompt size), and PARALLEL decode
 //! rounds over the sharded pool (4 sessions stepped on 2+ workers must
 //! beat serial rounds ≥ 1.5x, bit-identically; 1 worker must not regress
-//! serial), plus the request-tracing overhead gate (a traced drain must
-//! stay within 1.05x of untraced, bit-identically) — reported alongside
-//! the Figure 6 KV-memory numbers the pool exists to manage. Emits
-//! `BENCH_pool_pressure.json` (checked by CI's `bench-smoke` jq gate).
+//! serial), the request-tracing overhead gate (a traced drain must
+//! stay within 1.05x of untraced, bit-identically), and the
+//! oversubscription phase (engines × step_workers = 2× cores on an
+//! imbalanced fleet: ONE shared work-stealing pool must beat per-engine
+//! pools ≥ 1.2x on aggregate round throughput, bit-identically) —
+//! reported alongside the Figure 6 KV-memory numbers the pool exists to
+//! manage. Emits `BENCH_pool_pressure.json` (checked by CI's
+//! `bench-smoke` jq gate).
 //!
 //!     cargo bench --bench pool_pressure
 
@@ -556,6 +560,170 @@ fn main() {
     tt.print("tracing overhead — traced vs untraced decode drain");
     let _ = tt.write_csv("bench_out/pool_pressure_trace.csv");
 
+    // --- phase 6: oversubscription — shared stealing pool vs per-engine --
+    // The unified scheduler's claim, isolated: engines × step_workers =
+    // 2× cores threads step an IMBALANCED fleet (engine 0 owns every
+    // heavy session, the other engines one short decoder each). The
+    // per-engine baseline drives one batcher per engine on its own
+    // `with_step_workers` pool from its own thread — exactly the old
+    // architecture — so engines 1–3's workers go idle the moment their
+    // short session drains. The shared arrangement runs ONE batcher on
+    // one work-stealing pool of the same total thread count, keeping
+    // every thread on the heavy backlog. Heavy count scales with the
+    // host (2× cores) so the imbalance survives any core count. Token
+    // streams must be bit-identical; with 2+ cores the shared pool must
+    // win ≥ 1.2× on aggregate round throughput.
+    use quantspec::util::threadpool::StealPool;
+    const OV_ENGINES: usize = 4;
+    const OV_SHORT_BASE: u64 = 601;
+    let ov_workers = ((2 * cores) / OV_ENGINES).max(1);
+    let ov_pool_threads = OV_ENGINES * ov_workers;
+    let ov_heavy = (2 * cores).max(2) as u64;
+    let ov_short_new = 16usize;
+    let ov_short_prompt = 2 * PG;
+    let run_oversub = |shared_pool: bool| -> (f64, Vec<(u64, Vec<i32>)>, usize) {
+        let mgr = pool::shared(PoolConfig {
+            pages: (ov_heavy as usize + OV_ENGINES)
+                * memory::pool_pages_for_request(par_prompt, par_new, PG, fbp),
+            page_tokens: PG,
+            kv_dim: PD,
+            high_watermark: 1.0,
+            low_watermark: 1.0,
+            ..PoolConfig::default()
+        })
+        .expect("pool config valid");
+        let mk = |id: u64, prompt_len: usize, budget: usize| -> ActiveSession {
+            let pages = memory::pool_pages_for_request(prompt_len, budget, PG, fbp);
+            let cap = (pages - fbp.div_ceil(PG)) * PG;
+            assert_eq!(
+                mgr.lock().unwrap().admit(id, pages, false).unwrap(),
+                AdmitOutcome::Admitted
+            );
+            let dec =
+                MockDecoder::with_pool(MOCK_VOCAB, MOCK_GAMMA_MAX, 0.15, mgr.clone(), id, cap)
+                    .unwrap();
+            let prompt = workload::prompt(id, prompt_len, Profile::Pg19);
+            ActiveSession::admit(id, Box::new(dec), Sampler::new(0.0, id), 4, &prompt, budget)
+                .unwrap()
+        };
+        let all_ids: Vec<u64> = (1..=ov_heavy)
+            .chain(OV_SHORT_BASE..OV_SHORT_BASE + (OV_ENGINES as u64 - 1))
+            .collect();
+        let shape = |id: u64| -> (usize, usize) {
+            if id < OV_SHORT_BASE {
+                (par_prompt, par_new)
+            } else {
+                (ov_short_prompt, ov_short_new)
+            }
+        };
+        let (secs, mut toks, steals) = if shared_pool {
+            let sp = StealPool::named(ov_pool_threads, "qs-bench");
+            let mut b = StepBatcher::new(all_ids.len()).with_shared_step_pool(sp.handle());
+            for &id in &all_ids {
+                let (plen, budget) = shape(id);
+                b.admit(mk(id, plen, budget)).unwrap();
+            }
+            let t = Instant::now();
+            b.drain().unwrap();
+            let secs = t.elapsed().as_secs_f64();
+            assert!(b.failed.is_empty(), "no step may fail in the bench");
+            let toks: Vec<(u64, Vec<i32>)> =
+                b.finished.iter().map(|s| (s.id, s.tokens.clone())).collect();
+            (secs, toks, sp.steals())
+        } else {
+            let mut engines: Vec<StepBatcher> = (0..OV_ENGINES)
+                .map(|_| {
+                    StepBatcher::new(ov_heavy as usize).with_step_workers(ov_workers)
+                })
+                .collect();
+            for &id in &all_ids {
+                let e = if id < OV_SHORT_BASE {
+                    0
+                } else {
+                    (id - OV_SHORT_BASE) as usize + 1
+                };
+                let (plen, budget) = shape(id);
+                engines[e].admit(mk(id, plen, budget)).unwrap();
+            }
+            let t = Instant::now();
+            std::thread::scope(|s| {
+                for b in engines.iter_mut() {
+                    s.spawn(move || b.drain().unwrap());
+                }
+            });
+            let secs = t.elapsed().as_secs_f64();
+            let mut toks = Vec::new();
+            for b in &engines {
+                assert!(b.failed.is_empty(), "no step may fail in the bench");
+                toks.extend(b.finished.iter().map(|s| (s.id, s.tokens.clone())));
+            }
+            (secs, toks, 0)
+        };
+        toks.sort_by_key(|(id, _)| *id);
+        for &id in &all_ids {
+            mgr.lock().unwrap().release(id);
+        }
+        (secs, toks, steals)
+    };
+    let ov_reps = 3;
+    let best_oversub = |shared: bool| -> (f64, Vec<(u64, Vec<i32>)>, usize) {
+        let mut best_secs = f64::INFINITY;
+        let mut toks = Vec::new();
+        let mut steals = 0usize;
+        for _ in 0..ov_reps {
+            let (secs, t, st) = run_oversub(shared);
+            if toks.is_empty() {
+                toks = t;
+            } else {
+                assert_eq!(toks, t, "token streams diverged across repetitions");
+            }
+            if secs < best_secs {
+                best_secs = secs;
+                steals = st;
+            }
+        }
+        (best_secs, toks, steals)
+    };
+    let (base_secs, base_toks, _) = best_oversub(false);
+    let (shared_secs, shared_toks, ov_steals) = best_oversub(true);
+    assert_eq!(base_toks, shared_toks, "shared stealing pool changed outputs");
+    let oversub_speedup = base_secs / shared_secs.max(1e-9);
+    if gate_enforced {
+        assert!(
+            oversub_speedup >= 1.2,
+            "shared stealing pool only {oversub_speedup:.2}x over per-engine pools \
+             ({ov_heavy} heavy sessions on engine 0, {ov_pool_threads} threads; \
+             gate: 1.2x)"
+        );
+    } else {
+        println!(
+            "single-core host: oversubscription gate skipped \
+             (measured {oversub_speedup:.2}x)"
+        );
+    }
+    let mut to = Table::new(&[
+        "engines",
+        "workers_per_engine",
+        "heavy_sessions",
+        "per_engine_ms",
+        "shared_ms",
+        "speedup",
+        "steals",
+        "gate",
+    ]);
+    to.row(&[
+        OV_ENGINES.to_string(),
+        ov_workers.to_string(),
+        ov_heavy.to_string(),
+        fmt_f(base_secs * 1e3, 3),
+        fmt_f(shared_secs * 1e3, 3),
+        format!("{oversub_speedup:.2}x"),
+        ov_steals.to_string(),
+        if gate_enforced { ">=1.2x".into() } else { "skipped (1 core)".to_string() },
+    ]);
+    to.print("oversubscription — one stealing pool vs per-engine step pools");
+    let _ = to.write_csv("bench_out/pool_pressure_oversub.csv");
+
     let json = Json::obj(vec![
         (
             "pool",
@@ -587,6 +755,21 @@ fn main() {
                 ("untraced_secs", Json::num(untraced_secs)),
                 ("traced_secs", Json::num(traced_secs)),
                 ("trace_round_ratio", Json::num(trace_round_ratio)),
+            ]),
+        ),
+        (
+            "oversubscription",
+            Json::obj(vec![
+                ("engines", Json::num(OV_ENGINES as f64)),
+                ("workers_per_engine", Json::num(ov_workers as f64)),
+                ("pool_threads", Json::num(ov_pool_threads as f64)),
+                ("heavy_sessions", Json::num(ov_heavy as f64)),
+                ("short_sessions", Json::num((OV_ENGINES - 1) as f64)),
+                ("per_engine_secs", Json::num(base_secs)),
+                ("shared_secs", Json::num(shared_secs)),
+                ("speedup", Json::num(oversub_speedup)),
+                ("steals", Json::num(ov_steals as f64)),
+                ("gate_enforced", Json::Bool(gate_enforced)),
             ]),
         ),
         (

@@ -233,9 +233,10 @@ fn mock_main(args: &Args) -> anyhow::Result<()> {
         pool_stats.get("prefill_deferrals").is_some(),
         "/stats pool block surfaces the backpressure counter"
     );
-    // round-parallelism telemetry on the SERVING path: the engines'
-    // embedded batchers report their rounds through the session manager,
-    // and the gauges mirror the keys (plus a per-engine depth gauge)
+    // round-parallelism telemetry on the SERVING path: the unified
+    // scheduler's global batcher reports its rounds through the session
+    // manager, and the gauges mirror the keys (plus the scheduler's
+    // global depth/queue gauges)
     for key in ["step_workers", "round_span_us", "step_workers_busy", "batcher_rounds"] {
         assert!(
             pool_stats.get(key).is_some(),
@@ -244,8 +245,8 @@ fn mock_main(args: &Args) -> anyhow::Result<()> {
     }
     assert_eq!(
         pool_stats.get("step_workers").unwrap().as_usize(),
-        Some(step_workers),
-        "configured step_workers surfaced"
+        Some(engines * step_workers),
+        "fleet-wide stealing-pool size surfaced (engines x step-workers)"
     );
     let rounds = pool_stats.get("batcher_rounds").unwrap().as_usize().unwrap();
     assert!(rounds > 0, "serving ran through batcher rounds");
@@ -253,8 +254,12 @@ fn mock_main(args: &Args) -> anyhow::Result<()> {
     assert!(gauges.get("step_workers").is_some(), "step_workers gauge");
     assert!(gauges.get("round_span_us").is_some(), "round_span_us gauge");
     assert!(
-        gauges.get("batcher_depth_engine_0").is_some(),
-        "per-engine batcher depth gauge"
+        gauges.get("sched_batcher_depth").is_some(),
+        "unified scheduler batcher depth gauge"
+    );
+    assert!(
+        gauges.get("sched_pool_workers").is_some(),
+        "unified scheduler pool-size gauge"
     );
     println!(
         "round telemetry : {rounds} rounds, step_workers {step_workers}, \

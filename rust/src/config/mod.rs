@@ -133,8 +133,25 @@ pub struct ServeConfig {
     pub step_workers: usize,
     /// Sessions one engine's step batcher multiplexes at once (its
     /// round-robin capacity). More slots = more interleaving per engine;
-    /// admission control still bounds total KV pages.
+    /// admission control still bounds total KV pages. Under the unified
+    /// scheduler the global batcher multiplexes `engines × batcher_slots`.
     pub batcher_slots: usize,
+    /// Max distinct tenants the fair-queue admission tracks concurrently
+    /// (per-tenant DRR queues; requests beyond this many live tenants are
+    /// shed). 0 is rejected at coordinator startup with an error — never
+    /// silently clamped (mirrors `step_workers`).
+    pub sched_tenants: usize,
+    /// Default per-request deadline in milliseconds: a request still queued
+    /// (or still running) past its deadline is rejected / timed out cleanly
+    /// and its pool pages released. 0 = no deadline.
+    pub request_deadline_ms: u64,
+    /// Per-tenant admission rate limit in requests/second (token bucket,
+    /// burst = one second's worth). 0 = unlimited.
+    pub tenant_rate_limit: usize,
+    /// Per-tenant weighted-fair-queueing weights (DRR quantum per round).
+    /// Unlisted tenants get weight 1. A listed weight of 0 is rejected at
+    /// coordinator startup — it would starve that tenant by construction.
+    pub fair_weights: Vec<(String, u64)>,
     /// Paged KV-cache pool (admission control + shared arena).
     /// `pool.pages == 0` disables pooling: sessions keep private,
     /// unaccounted cache state as in the original single-session path.
@@ -170,6 +187,10 @@ impl Default for ServeConfig {
             quant_queue_soft_limit: 32,
             step_workers: 1,
             batcher_slots: 4,
+            sched_tenants: 8,
+            request_deadline_ms: 0,
+            tenant_rate_limit: 0,
+            fair_weights: Vec::new(),
             pool: PoolConfig { pages: 0, ..PoolConfig::default() },
             trace_enabled: true,
             trace_buffer_events: 4096,
@@ -238,6 +259,25 @@ impl ServeConfig {
         }
         if let Some(v) = j.get("batcher_slots").and_then(Json::as_usize) {
             c.batcher_slots = v.max(1);
+        }
+        if let Some(v) = j.get("sched_tenants").and_then(Json::as_usize) {
+            // Deliberately NOT clamped: 0 must surface as a startup error
+            // from the coordinator (mirrors step_workers).
+            c.sched_tenants = v;
+        }
+        if let Some(v) = j.get("request_deadline_ms").and_then(Json::as_usize) {
+            c.request_deadline_ms = v as u64;
+        }
+        if let Some(v) = j.get("tenant_rate_limit").and_then(Json::as_usize) {
+            c.tenant_rate_limit = v;
+        }
+        if let Some(m) = j.get("fair_weights").and_then(Json::as_obj) {
+            // Weight 0 propagates so the coordinator rejects it loudly —
+            // a zero-weight tenant would be starved by construction.
+            c.fair_weights = m
+                .iter()
+                .filter_map(|(k, v)| v.as_usize().map(|w| (k.clone(), w as u64)))
+                .collect();
         }
         if let Some(v) = j.get("trace_enabled").and_then(Json::as_bool) {
             c.trace_enabled = v;
@@ -375,6 +415,35 @@ mod tests {
         // 0 step workers propagates so the coordinator rejects it loudly
         let j = Json::parse(r#"{"step_workers":0}"#).unwrap();
         assert_eq!(ServeConfig::from_json(&j).unwrap().step_workers, 0);
+    }
+
+    #[test]
+    fn scheduler_knobs_from_json() {
+        let d = ServeConfig::default();
+        assert_eq!(d.sched_tenants, 8);
+        assert_eq!(d.request_deadline_ms, 0, "no deadline by default");
+        assert_eq!(d.tenant_rate_limit, 0, "unlimited by default");
+        assert!(d.fair_weights.is_empty());
+        let j = Json::parse(
+            r#"{"sched_tenants":4,"request_deadline_ms":1500,"tenant_rate_limit":20,
+                "fair_weights":{"gold":3,"free":1}}"#,
+        )
+        .unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.sched_tenants, 4);
+        assert_eq!(c.request_deadline_ms, 1500);
+        assert_eq!(c.tenant_rate_limit, 20);
+        assert_eq!(
+            c.fair_weights,
+            vec![("free".to_string(), 1), ("gold".to_string(), 3)],
+            "BTreeMap order: sorted by tenant name"
+        );
+        // nonsense values propagate so the coordinator rejects them loudly
+        // at startup (mirrors step_workers / quant_workers — no clamping)
+        let j = Json::parse(r#"{"sched_tenants":0,"fair_weights":{"bad":0}}"#).unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.sched_tenants, 0);
+        assert_eq!(c.fair_weights, vec![("bad".to_string(), 0)]);
     }
 
     #[test]

@@ -72,7 +72,7 @@ use crate::pool::{RoundPhases, SharedSessionManager};
 use crate::spec::gamma::{CycleFeedback, FixedGamma, GammaController};
 use crate::spec::{Sampler, VerifyOutcome};
 use crate::trace::{self, PhaseEvent, TraceBuf};
-use crate::util::threadpool::{PoolHandle, ThreadPool, WaitGroup};
+use crate::util::threadpool::{ScopedSpawn, StealHandle, ThreadPool, WaitGroup};
 
 /// Where a session is in its lifecycle.
 enum Phase {
@@ -449,36 +449,41 @@ fn step_one(mut s: ActiveSession) -> StepOutcome {
 /// position).
 type StepSlots = Arc<Vec<Mutex<Option<StepOutcome>>>>;
 
-/// Fan the round's steps over the step pool; results land in fixed
-/// per-session slots so reassembly order is the round-robin order, not
-/// completion order — a precondition for serial-parity determinism (and
+/// Fan the round's steps over the step pool (any [`ScopedSpawn`] — the
+/// batcher's own FIFO pool or the process-wide stealing pool); results land
+/// in fixed per-session slots so reassembly order is the round-robin order,
+/// not completion order — a precondition for serial-parity determinism (and
 /// for tests that compare `active` queues across configurations).
-fn step_parallel(pool: &PoolHandle, sessions: Vec<ActiveSession>) -> Vec<StepOutcome> {
+fn step_parallel(pool: &dyn ScopedSpawn, sessions: Vec<ActiveSession>) -> Vec<StepOutcome> {
     let slots: StepSlots = Arc::new(sessions.iter().map(|_| Mutex::new(None)).collect());
     let wg = WaitGroup::new();
     for (i, s) in sessions.into_iter().enumerate() {
         let slots = Arc::clone(&slots);
         let id = s.id;
-        pool.scoped_submit(&wg, move || {
-            // A panicking step must not kill the worker thread or hang the
-            // wait group; the session is lost but the round completes.
-            let outcome =
-                match std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
-                    step_one(s)
-                })) {
-                    Ok(o) => o,
-                    Err(_) => StepOutcome {
-                        id,
-                        session: None,
-                        result: Err(anyhow::anyhow!(
-                            "session {id}: step panicked; session state dropped"
-                        )),
-                        was_prefill: false,
-                        step_us: 0.0,
-                    },
-                };
-            *slots[i].lock().unwrap_or_else(|p| p.into_inner()) = Some(outcome);
-        });
+        pool.spawn_scoped(
+            &wg,
+            Box::new(move || {
+                // A panicking step must not kill the worker thread or hang
+                // the wait group; the session is lost but the round
+                // completes.
+                let outcome =
+                    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+                        step_one(s)
+                    })) {
+                        Ok(o) => o,
+                        Err(_) => StepOutcome {
+                            id,
+                            session: None,
+                            result: Err(anyhow::anyhow!(
+                                "session {id}: step panicked; session state dropped"
+                            )),
+                            was_prefill: false,
+                            step_us: 0.0,
+                        },
+                    };
+                *slots[i].lock().unwrap_or_else(|p| p.into_inner()) = Some(outcome);
+            }),
+        );
     }
     wg.wait();
     Arc::try_unwrap(slots)
@@ -504,6 +509,10 @@ pub struct StepBatcher {
     prefill_deferrals: u64,
     /// Step pool for parallel rounds; None = serial (`step_workers == 1`).
     step_pool: Option<ThreadPool>,
+    /// Handle onto the process-wide stealing step pool (the cross-engine
+    /// scheduler's). Takes precedence over `step_pool`: the batcher fans
+    /// its rounds over shared workers instead of owning a pool.
+    shared_pool: Option<StealHandle>,
     step_workers: usize,
     /// Once-per-round telemetry sink (→ `/stats` via the session manager).
     stats_sink: Option<SharedSessionManager>,
@@ -523,6 +532,7 @@ impl StepBatcher {
             backpressure: None,
             prefill_deferrals: 0,
             step_pool: None,
+            shared_pool: None,
             step_workers: 1,
             stats_sink: None,
             last_round_span_us: 0.0,
@@ -547,6 +557,18 @@ impl StepBatcher {
         assert!(workers >= 1, "step_workers must be >= 1 (1 = serial rounds)");
         self.step_workers = workers;
         self.step_pool = (workers >= 2).then(|| ThreadPool::named(workers, "qs-step"));
+        self
+    }
+
+    /// Fan rounds over a SHARED work-stealing pool instead of an owned
+    /// per-batcher pool (the cross-engine scheduler wires every session
+    /// through one process-wide `qs-sched-*` pool). Takes precedence over
+    /// [`StepBatcher::with_step_workers`]; reported `step_workers` becomes
+    /// the shared pool's size.
+    pub fn with_shared_step_pool(mut self, handle: StealHandle) -> StepBatcher {
+        self.step_workers = handle.size();
+        self.shared_pool = Some(handle);
+        self.step_pool = None;
         self
     }
 
@@ -599,6 +621,14 @@ impl StepBatcher {
         self.last_phases
     }
 
+    /// Evict an active session mid-flight (cancellation, deadline expiry).
+    /// Returns the session so the embedder can drop it and release its
+    /// pool pages; round-robin order of the survivors is preserved.
+    pub fn remove(&mut self, id: u64) -> Option<ActiveSession> {
+        let pos = self.active.iter().position(|s| s.id == id)?;
+        self.active.remove(pos)
+    }
+
     /// Admit a session into the round-robin. Errors (instead of aborting
     /// the process) on over-capacity admission: the batcher is embedded in
     /// router/server contexts where a caller bug must surface as a clean
@@ -642,8 +672,11 @@ impl StepBatcher {
         }
         let stepped = to_step.len();
         let t0 = Instant::now();
-        let outcomes = match &self.step_pool {
-            Some(pool) if stepped >= 2 => step_parallel(&pool.handle(), to_step),
+        let outcomes = match (&self.shared_pool, &self.step_pool) {
+            (Some(shared), _) if stepped >= 2 && shared.size() >= 2 => {
+                step_parallel(shared, to_step)
+            }
+            (None, Some(pool)) if stepped >= 2 => step_parallel(&pool.handle(), to_step),
             _ => to_step.into_iter().map(step_one).collect(),
         };
         let span_us = t0.elapsed().as_secs_f64() * 1e6;
@@ -1091,6 +1124,55 @@ mod tests {
         for s in &b.finished {
             assert_eq!(s.tokens.len(), s.max_new);
         }
+    }
+
+    /// Rounds fanned over a SHARED stealing pool produce exactly the
+    /// serial token streams (the scheduler's dispatch path), and the
+    /// batcher reports the shared pool's size as its step workers.
+    #[test]
+    fn shared_steal_pool_rounds_match_serial() {
+        let run_serial = |ids: &[u64]| -> Vec<(u64, Vec<i32>)> {
+            let mut b = StepBatcher::new(8);
+            for &i in ids {
+                b.admit(mock_session(i, 10 + i as usize, 0.3, 3)).unwrap();
+            }
+            b.drain().unwrap();
+            let mut t: Vec<_> = b.finished.iter().map(|s| (s.id, s.tokens.clone())).collect();
+            t.sort_by_key(|(id, _)| *id);
+            t
+        };
+        let ids: Vec<u64> = (0..6).collect();
+        let want = run_serial(&ids);
+        let pool = crate::util::threadpool::StealPool::named(3, "qs-sched");
+        let mut b = StepBatcher::new(8).with_shared_step_pool(pool.handle());
+        assert_eq!(b.step_workers(), 3);
+        for &i in &ids {
+            b.admit(mock_session(i, 10 + i as usize, 0.3, 3)).unwrap();
+        }
+        b.drain().unwrap();
+        let mut got: Vec<_> = b.finished.iter().map(|s| (s.id, s.tokens.clone())).collect();
+        got.sort_by_key(|(id, _)| *id);
+        assert_eq!(got, want, "shared-pool rounds must be bit-identical to serial");
+    }
+
+    /// `remove` evicts exactly the target session mid-flight; the others
+    /// keep their round-robin order and complete untouched.
+    #[test]
+    fn remove_evicts_only_the_target_session() {
+        let mut b = StepBatcher::new(4);
+        b.admit(mock_session(1, 40, 0.0, 3)).unwrap();
+        b.admit(mock_session(2, 8, 0.0, 3)).unwrap();
+        b.admit(mock_session(3, 8, 0.0, 3)).unwrap();
+        b.round().unwrap();
+        let evicted = b.remove(1).expect("session 1 is active");
+        assert_eq!(evicted.id, 1);
+        assert!(!evicted.tokens.is_empty(), "partial progress travels with it");
+        assert!(b.remove(1).is_none(), "second remove finds nothing");
+        assert!(b.remove(99).is_none());
+        b.drain().unwrap();
+        assert_eq!(b.finished.len(), 2);
+        assert!(b.finished.iter().all(|s| s.id != 1));
+        assert!(b.failed.is_empty());
     }
 
     /// Tracing: a traced chunked session emits every prefill chunk and

@@ -1,15 +1,18 @@
-//! The serving coordinator: request router, continuous batcher, HTTP API.
+//! The serving coordinator: request router, unified scheduler, HTTP API.
 //!
-//! vLLM-router-shaped: an admission queue feeds a pool of decode engines;
-//! each engine worker embeds a [`batcher::StepBatcher`] multiplexing up to
-//! `batcher_slots` sessions (chunked prefill admission, quant-pool
-//! backpressure, and `step_workers`-way parallel rounds over the sharded
-//! KV pool). The router picks the context bucket, pads the prompt, and
-//! sheds load when the queue is full. Python never runs here — engines
-//! call the AOT artifacts via `runtime`.
+//! vLLM-router-shaped intake, one global brain: submissions land in a
+//! per-tenant weighted fair queue ([`sched::FairQueue`]) and a single
+//! scheduler driver ([`sched`]) forms continuous-batching rounds across
+//! ALL engines' sessions on one process-wide work-stealing step pool
+//! (`qs-sched-*` threads) — chunked prefill admission, quant-pool
+//! backpressure, SLO deadlines, cancellation, and work stealing all
+//! operate fleet-wide over the sharded KV pool. The router picks the
+//! context bucket, pads the prompt, and sheds load at submit. Python
+//! never runs here — engines call the AOT artifacts via `runtime`.
 
 pub mod batcher;
 pub mod router;
+pub mod sched;
 pub mod server;
 
 pub use router::{Coordinator, RequestSpec, ResponseOut};

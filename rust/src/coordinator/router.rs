@@ -1,41 +1,48 @@
-//! Router + continuous batcher.
+//! Router: request intake, fair admission, and the coordinator facade.
 //!
-//! Each engine worker embeds a [`StepBatcher`]: instead of running whole
-//! requests back to back, an engine multiplexes up to `batcher_slots`
-//! sessions, advancing each one unit of work per scheduling round —
-//! chunked prefill admission (`prefill_chunk_tokens`), quant-pool
-//! backpressure, and parallel stepping (`step_workers`) therefore all
-//! apply to real HTTP requests, not just the examples. Outputs are
-//! bit-identical to the old run-to-completion path: an `ActiveSession`
-//! with a fixed γ produces exactly what `SpecEngine` produces, chunked
-//! prefill is output-invisible, and parallel rounds are property-tested
-//! equal to serial rounds.
+//! Serving runs on the unified cross-engine scheduler
+//! ([`super::sched`]): ONE driver thread forms global continuous-batching
+//! rounds across all engines' sessions over ONE process-wide
+//! work-stealing step pool — chunked prefill admission
+//! (`prefill_chunk_tokens`), quant-pool backpressure, and parallel
+//! stepping (`step_workers`) therefore all apply to real HTTP requests,
+//! not just the examples. Outputs are bit-identical to the old
+//! run-to-completion path: an `ActiveSession` with a fixed γ produces
+//! exactly what `SpecEngine` produces, chunked prefill is
+//! output-invisible, and stolen/parallel rounds are property-tested equal
+//! to serial rounds.
 //!
-//! When the paged KV pool is enabled (`cfg.pool.pages > 0`) the router runs
-//! admission control against it: every request gets a cost-model page
+//! The router owns the intake side: requests enter a per-tenant weighted
+//! fair queue (deficit round robin, `fair_weights`), are shed at submit
+//! on queue overflow / tenant rate limits (`tenant_rate_limit`) / pool
+//! saturation, carry optional deadlines (`request_deadline_ms` or
+//! per-request `deadline_ms`), and can be cancelled mid-queue or
+//! mid-flight via [`Coordinator::cancel`].
+//!
+//! When the paged KV pool is enabled (`cfg.pool.pages > 0`) the scheduler
+//! runs admission control against it: every request gets a cost-model page
 //! reservation; a reservation that can never fit is failed cleanly, one
 //! that does not fit *right now* waits in the queue until a release (or an
 //! LRU eviction of a preemptable session) frees pages — the pool never
 //! overcommits, so concurrent long-context sessions cannot OOM each other.
 
-use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread;
-use std::time::{Duration, Instant};
 
 use anyhow::{ensure, Result};
 
 use crate::config::{Method, ServeConfig};
-use crate::coordinator::batcher::{ActiveSession, QuantBackpressure, StepBatcher};
+use crate::coordinator::batcher::{ActiveSession, QuantBackpressure};
+use crate::coordinator::sched::{scheduler_loop, FairQueue, Queued, CANCELLED_PREFIX};
 use crate::costmodel::memory::pool_pages_for_request;
 use crate::metrics::{names, Registry};
 use crate::model::{mock_fb, Decoder, MockDecoder, MOCK_GAMMA_MAX, MOCK_VOCAB};
-use crate::pool::{self, AdmitOutcome, SharedSessionManager};
+use crate::pool::{self, SharedSessionManager};
 use crate::runtime::{Runtime, WeightSet, Weights};
 use crate::spec::gamma::AimdGamma;
 use crate::spec::Sampler;
-use crate::trace::{self, PhaseEvent, TraceBuf, Tracer};
+use crate::trace::Tracer;
 use crate::util::now_secs;
 
 /// Marker prefix for admission rejections that are the *client's* size
@@ -51,6 +58,12 @@ pub struct RequestSpec {
     /// Per-request overrides (None = coordinator defaults).
     pub method: Option<Method>,
     pub gamma: Option<usize>,
+    /// Fair-queue lane (None = the "default" tenant). Weight comes from
+    /// `cfg.fair_weights` (1 when unlisted).
+    pub tenant: Option<String>,
+    /// SLO deadline override in milliseconds: None = `request_deadline_ms`
+    /// from config, Some(0) = explicitly no deadline.
+    pub deadline_ms: Option<u64>,
 }
 
 /// Completed generation.
@@ -76,16 +89,13 @@ pub struct ResponseOut {
     pub queue_secs: f64,
 }
 
-struct Queued {
-    spec: RequestSpec,
-    enqueued_at: f64,
-    done: mpsc::Sender<Result<ResponseOut, String>>,
-}
-
-struct Shared {
-    queue: Mutex<VecDeque<Queued>>,
-    cv: Condvar,
-    stop: AtomicBool,
+/// State shared between the intake side (submit/cancel) and the scheduler
+/// driver thread: the fair queue, its wake-up condvar (also pulsed by pool
+/// releases so Saturated admission waits unblock), and the stop flag.
+pub(crate) struct Shared {
+    pub(crate) queue: Mutex<FairQueue>,
+    pub(crate) cv: Condvar,
+    pub(crate) stop: AtomicBool,
 }
 
 /// How engines are backed.
@@ -127,8 +137,19 @@ impl Coordinator {
             cfg.step_workers >= 1,
             "step_workers must be >= 1 (use 1 for serial batcher rounds)"
         );
+        ensure!(
+            cfg.sched_tenants >= 1,
+            "sched_tenants must be >= 1 (tenant lanes the fair queue can track)"
+        );
+        for (t, w) in &cfg.fair_weights {
+            ensure!(
+                *w >= 1,
+                "fair_weights: tenant '{t}' has weight 0 (weights must be >= 1; \
+                 omit the tenant to give it the default weight of 1)"
+            );
+        }
         let shared = Arc::new(Shared {
-            queue: Mutex::new(VecDeque::new()),
+            queue: Mutex::new(FairQueue::new(&cfg)),
             cv: Condvar::new(),
             stop: AtomicBool::new(false),
         });
@@ -159,22 +180,20 @@ impl Coordinator {
         } else {
             None
         };
-        let mut workers = Vec::new();
-        for wid in 0..cfg.engines.max(1) {
+        // ONE driver thread replaces the per-engine workers: it owns the
+        // global batcher (engines × batcher_slots sessions) and the shared
+        // work-stealing step pool (engines × step_workers threads).
+        let workers = {
             let shared = Arc::clone(&shared);
             let metrics = Arc::clone(&metrics);
             let tracer = Arc::clone(&tracer);
             let backend = Arc::clone(&backend);
             let pool = pool.clone();
             let cfg2 = cfg.clone();
-            workers.push(
-                thread::Builder::new()
-                    .name(format!("qs-engine-{wid}"))
-                    .spawn(move || {
-                        engine_loop(wid, cfg2, shared, metrics, tracer, backend, pool)
-                    })?,
-            );
-        }
+            vec![thread::Builder::new().name("qs-sched-drive".into()).spawn(
+                move || scheduler_loop(cfg2, shared, metrics, tracer, backend, pool),
+            )?]
+        };
         Ok(Coordinator {
             cfg,
             shared,
@@ -191,10 +210,12 @@ impl Coordinator {
         self.next_id.fetch_add(1, Ordering::Relaxed)
     }
 
-    /// Enqueue a request; Err (with the spec and a reason) when shedding
-    /// load: queue full, or — with the paged pool enabled — pool pressure
-    /// already at the high watermark with a backlog (admitting more
-    /// arrivals could only grow the queue).
+    /// Enqueue a request into its tenant's fair-queue lane; Err (with the
+    /// spec and a reason) when shedding load: queue full, tenant over its
+    /// rate limit, the lane table full of backlogged tenants, or — with
+    /// the paged pool enabled — pool pressure already at the high
+    /// watermark with a backlog (admitting more arrivals could only grow
+    /// the queue).
     pub fn submit(
         &self,
         spec: RequestSpec,
@@ -216,11 +237,39 @@ impl Coordinator {
                     return Err((spec, "KV pool saturated"));
                 }
             }
-            q.push_back(Queued { spec, enqueued_at: now_secs(), done: tx });
+            let tenant = spec.tenant.clone().unwrap_or_else(|| "default".to_string());
+            let deadline_ms = spec.deadline_ms.unwrap_or(self.cfg.request_deadline_ms);
+            let deadline = (deadline_ms > 0)
+                .then(|| std::time::Instant::now() + std::time::Duration::from_millis(deadline_ms));
+            let job = Queued { spec, tenant, enqueued_at: now_secs(), deadline, done: tx };
+            if let Err((job, why)) = q.push(job) {
+                self.metrics.incr("requests_shed", 1);
+                if why == "rate limited" {
+                    self.metrics.incr("requests_rate_limited", 1);
+                }
+                return Err((job.spec, why));
+            }
             self.metrics.incr("requests_enqueued", 1);
         }
         self.shared.cv.notify_one();
         Ok(rx)
+    }
+
+    /// Cancel a request by id (client disconnect, user abort). A
+    /// still-queued request is removed and answered immediately; an active
+    /// one is marked and evicted by the scheduler at the next round
+    /// boundary — either way its pool pages are released and admission
+    /// waiters are woken. Cancelling an unknown or completed id is a
+    /// no-op.
+    pub fn cancel(&self, id: u64) {
+        let queued = self.shared.queue.lock().unwrap().cancel(id);
+        if let Some(job) = queued {
+            self.metrics.incr("requests_cancelled", 1);
+            let _ = job
+                .done
+                .send(Err(format!("{CANCELLED_PREFIX}request {id} cancelled while queued")));
+        }
+        self.shared.cv.notify_all();
     }
 
     /// Convenience: submit and block for the result.
@@ -290,7 +339,7 @@ impl Drop for Coordinator {
     }
 }
 
-fn sync_pool_gauges(mgr: &SharedSessionManager, metrics: &Registry) {
+pub(crate) fn sync_pool_gauges(mgr: &SharedSessionManager, metrics: &Registry) {
     let m = mgr.lock().unwrap();
     metrics.set_gauge("pool_pages_capacity", m.pool().capacity() as f64);
     metrics.set_gauge("pool_pages_in_use", m.pool().pages_in_use() as f64);
@@ -329,14 +378,14 @@ fn sync_pool_gauges(mgr: &SharedSessionManager, metrics: &Registry) {
 /// never disagree: a request admission accepts always has the cache
 /// capacity its decode can reach.
 #[derive(Debug, Clone, Copy)]
-struct PoolPlan {
+pub(crate) struct PoolPlan {
     /// Pages booked at admission.
-    pages: usize,
+    pub(crate) pages: usize,
     /// Quantized-region token cap handed to the paged decoder.
     cap_tokens: usize,
 }
 
-fn pool_plan(cfg: &ServeConfig, prompt_len: usize, max_new: usize) -> PoolPlan {
+pub(crate) fn pool_plan(cfg: &ServeConfig, prompt_len: usize, max_new: usize) -> PoolPlan {
     let g = cfg.pool.page_tokens.max(1);
     let fb = mock_fb(g, MOCK_GAMMA_MAX);
     let fp_pages = (fb + g - 1) / g;
@@ -344,304 +393,8 @@ fn pool_plan(cfg: &ServeConfig, prompt_len: usize, max_new: usize) -> PoolPlan {
     PoolPlan { pages, cap_tokens: pages.saturating_sub(fp_pages) * g }
 }
 
-/// Outcome of head-of-line admission, decided while holding the queue lock.
-enum Admission {
-    Run,
-    Reject(String),
-}
-
-/// Per-session serving metadata while the session lives in a batcher.
-struct Inflight {
-    done: mpsc::Sender<Result<ResponseOut, String>>,
-    queue_secs: f64,
-    admitted_at: Instant,
-    /// Set the first time the session is observed past its prefill phase.
-    prefill_done_at: Option<Instant>,
-    bucket: usize,
-    /// This request's span buffer (None when tracing is disabled); finished
-    /// into the flight recorder at retirement.
-    trace: Option<Arc<TraceBuf>>,
-}
-
-/// One engine worker: a step batcher multiplexing up to
-/// `cfg.batcher_slots` sessions, admitting from the shared queue between
-/// rounds. Admission is strictly FIFO: a large-but-admissible request at
-/// the head waits for releases while already-admitted sessions keep
-/// decoding, so a stream of small arrivals can never starve it. Peek,
-/// pool-admit and pop happen under the queue lock (queue → pool lock
-/// order, same as submit), so two workers cannot race for one job.
-fn engine_loop(
-    wid: usize,
-    cfg: ServeConfig,
-    shared: Arc<Shared>,
-    metrics: Arc<Registry>,
-    tracer: Arc<Tracer>,
-    backend: Arc<EngineBackend>,
-    pool: Option<SharedSessionManager>,
-) {
-    let mut batcher =
-        StepBatcher::new(cfg.batcher_slots.max(1)).with_step_workers(cfg.step_workers);
-    if let Some(mgr) = &pool {
-        batcher = batcher
-            .with_backpressure(QuantBackpressure::for_pool(
-                mgr.clone(),
-                cfg.quant_queue_soft_limit,
-            ))
-            .with_stats_sink(mgr.clone());
-    }
-    let mut inflight: HashMap<u64, Inflight> = HashMap::new();
-    // Hot-loop gauges are pre-resolved to atomic handles once: round
-    // updates bump the atomics directly, never the registry's name map.
-    let depth_gauge = metrics.gauge_handle(&names::engine_batcher_depth(wid));
-    let round_gauges = pool.is_none().then(|| {
-        (
-            metrics.gauge_handle(names::STEP_WORKERS),
-            metrics.gauge_handle(names::STEP_WORKERS_BUSY),
-            metrics.gauge_handle(names::ROUND_SPAN_US),
-        )
-    });
-    // Head-of-line admission wait: set when the head request first sees
-    // `Saturated`, drained into its trace when it finally pops.
-    let mut admission_wait: Option<(u64, Instant)> = None;
-    loop {
-        let stopping = shared.stop.load(Ordering::Relaxed);
-        // ---- admission: pull admissible head jobs into free slots -------
-        let mut popped: Vec<(Queued, u64)> = Vec::new();
-        let mut rejected: Vec<(Queued, String)> = Vec::new();
-        if !stopping {
-            let mut q = shared.queue.lock().unwrap();
-            loop {
-                if shared.stop.load(Ordering::Relaxed) {
-                    break;
-                }
-                if batcher.active_len() + popped.len() >= batcher.max_active {
-                    break;
-                }
-                let head = q
-                    .front()
-                    .map(|j| (j.spec.id, j.spec.prompt.len(), j.spec.max_new_tokens));
-                let Some((id, prompt_len, max_new)) = head else {
-                    if batcher.active_len() + popped.len() == 0 {
-                        // fully idle: park until work (or stop) arrives
-                        q = shared.cv.wait(q).unwrap();
-                        continue;
-                    }
-                    break; // keep stepping the sessions we already have
-                };
-                let decision = match &pool {
-                    None => Admission::Run,
-                    Some(mgr) => {
-                        let plan = pool_plan(&cfg, prompt_len, max_new);
-                        match mgr.lock().unwrap().admit(id, plan.pages, false) {
-                            Ok(AdmitOutcome::Admitted) => Admission::Run,
-                            Ok(AdmitOutcome::TooLarge) => {
-                                metrics.incr("requests_rejected_too_large", 1);
-                                Admission::Reject(format!(
-                                    "{TOO_LARGE_PREFIX}request needs {} KV \
-                                     pages, over the pool's admission ceiling \
-                                     (no OOM: rejected up front)",
-                                    plan.pages
-                                ))
-                            }
-                            Ok(AdmitOutcome::Saturated) => {
-                                if admission_wait.map_or(true, |(aid, _)| aid != id) {
-                                    admission_wait = Some((id, Instant::now()));
-                                }
-                                if batcher.active_len() + popped.len() == 0 {
-                                    // Nothing to step: wait (bounded) for a
-                                    // release. Counter counts 5 ms polls.
-                                    metrics.incr("pool_admission_wait_polls", 1);
-                                    q = shared
-                                        .cv
-                                        .wait_timeout(q, Duration::from_millis(5))
-                                        .unwrap()
-                                        .0;
-                                    continue;
-                                }
-                                // Active sessions exist: keep decoding;
-                                // their releases will free pages.
-                                break;
-                            }
-                            Err(e) => Admission::Reject(format!("{e:#}")),
-                        }
-                    }
-                };
-                let job = q.pop_front().expect("peeked head");
-                // If this head waited out a saturated pool, charge the wait.
-                let admission_us = match admission_wait {
-                    Some((aid, t0)) if aid == id => {
-                        admission_wait = None;
-                        t0.elapsed().as_micros() as u64
-                    }
-                    _ => 0,
-                };
-                match decision {
-                    Admission::Run => popped.push((job, admission_us)),
-                    Admission::Reject(msg) => rejected.push((job, msg)),
-                }
-            }
-        }
-        if stopping && batcher.active_len() == 0 {
-            return; // in-flight work drained; still-queued jobs fail at drop
-        }
-        for (job, msg) in rejected {
-            metrics.incr("requests_failed", 1);
-            let _ = job.done.send(Err(msg));
-        }
-        // ---- build sessions (outside the queue lock) --------------------
-        for (job, admission_us) in popped {
-            let queue_secs = now_secs() - job.enqueued_at;
-            metrics.histogram("queue_wait").record_secs(queue_secs);
-            // Open the request's timeline: total queue time split into the
-            // plain FIFO wait and the saturated-pool admission wait (the
-            // two sum to `queue_secs`, so the timeline never double-counts).
-            let buf = tracer.new_request();
-            if let Some(b) = &buf {
-                let queue_us = ((queue_secs * 1e6) as u64).saturating_sub(admission_us);
-                b.record(PhaseEvent::QueueWait { us: queue_us });
-                b.record(PhaseEvent::AdmissionWait { us: admission_us });
-            }
-            match build_session(&cfg, &backend, &job.spec, pool.as_ref()) {
-                Ok((sess, bucket)) => {
-                    let sess = match &buf {
-                        Some(b) => sess.with_trace(Arc::clone(b)),
-                        None => sess,
-                    };
-                    let id = sess.id;
-                    batcher.admit(sess).expect("slot was counted during admission");
-                    inflight.insert(
-                        id,
-                        Inflight {
-                            done: job.done,
-                            queue_secs,
-                            admitted_at: Instant::now(),
-                            prefill_done_at: None,
-                            bucket,
-                            trace: buf,
-                        },
-                    );
-                }
-                Err(e) => {
-                    release_pool_session(pool.as_ref(), &shared, &metrics, job.spec.id);
-                    metrics.incr("requests_failed", 1);
-                    let _ = job.done.send(Err(format!("{e:#}")));
-                }
-            }
-        }
-        // ---- one scheduling round ---------------------------------------
-        if batcher.active_len() == 0 {
-            continue;
-        }
-        batcher.round().expect("round parks failures; it does not error");
-        let now = Instant::now();
-        for s in batcher.active_sessions() {
-            if !s.is_prefilling() {
-                if let Some(inf) = inflight.get_mut(&s.id) {
-                    inf.prefill_done_at.get_or_insert(now);
-                }
-            }
-        }
-        // Round telemetry: with a pool, the manager snapshot (note_round →
-        // sync_pool_gauges) is the ONE writer of the step/round gauges;
-        // only unpooled coordinators write them directly here. The
-        // per-engine depth gauge has no manager mirror, so it is always
-        // written directly.
-        if let Some((g_workers, g_busy, g_span)) = &round_gauges {
-            g_workers.set(batcher.step_workers() as f64);
-            g_busy.set(batcher.last_step_workers_busy() as f64);
-            g_span.set(batcher.last_round_span_us());
-        }
-        depth_gauge.set(batcher.active_len() as f64);
-        // ---- retire ------------------------------------------------------
-        for s in batcher.finished.drain(..) {
-            let Some(inf) = inflight.remove(&s.id) else { continue };
-            respond_finished(s, inf, &metrics, &tracer, pool.as_ref(), &shared);
-        }
-        for f in batcher.failed.drain(..) {
-            let Some(inf) = inflight.remove(&f.id) else { continue };
-            drop(f.session); // decoder resources go before the pool release
-            release_pool_session(pool.as_ref(), &shared, &metrics, f.id);
-            metrics.incr("requests_failed", 1);
-            let _ = inf.done.send(Err(format!("{:#}", f.error)));
-        }
-    }
-}
-
-/// Release one request's pool reservation (no-op when pooling is off),
-/// refresh the gauges, and wake workers parked on Saturated admissions —
-/// the ONE release sequence shared by the finished, failed, and
-/// build-error paths.
-fn release_pool_session(
-    pool: Option<&SharedSessionManager>,
-    shared: &Shared,
-    metrics: &Registry,
-    id: u64,
-) {
-    if let Some(mgr) = pool {
-        mgr.lock().unwrap().release(id);
-        sync_pool_gauges(mgr, metrics);
-        shared.cv.notify_all();
-    }
-}
-
-/// Build the response for a finished session and release its resources.
-fn respond_finished(
-    mut s: ActiveSession,
-    inf: Inflight,
-    metrics: &Registry,
-    tracer: &Tracer,
-    pool: Option<&SharedSessionManager>,
-    shared: &Shared,
-) {
-    let now = Instant::now();
-    let prefill_done = inf.prefill_done_at.unwrap_or(now);
-    let prefill_secs = prefill_done.duration_since(inf.admitted_at).as_secs_f64();
-    let decode_secs = now.duration_since(prefill_done).as_secs_f64();
-    let acceptance_rate = if s.drafted == 0 {
-        0.0
-    } else {
-        s.accepted as f64 / s.drafted as f64
-    };
-    metrics.incr("drafted", s.drafted);
-    metrics.incr("accepted", s.accepted);
-    metrics.incr("requests_completed", 1);
-    metrics.incr("tokens_generated", s.tokens.len() as u64);
-    metrics.histogram("prefill").record_secs(prefill_secs);
-    metrics.histogram("decode").record_secs(decode_secs);
-    metrics
-        .histogram("e2e")
-        .record_secs(prefill_secs + decode_secs + inf.queue_secs);
-    let id = s.id;
-    let tokens = std::mem::take(&mut s.tokens);
-    // decode-phase tokens only: the first reported token is sampled from
-    // the prefill logits (see `GenResult::decode_tokens`)
-    let decode_tokens = tokens.len().saturating_sub(1);
-    drop(s); // decoder resources go before the pool release
-    release_pool_session(pool, shared, metrics, id);
-    // Close the timeline: total = queue (incl. admission wait) + residency.
-    // Finishing BEFORE the response is sent makes the flight recorder and
-    // the phase histograms visible the moment `generate` returns.
-    if let Some(buf) = &inf.trace {
-        let total_us = (inf.queue_secs * 1e6) as u64
-            + now.duration_since(inf.admitted_at).as_micros() as u64;
-        let timeline = tracer.finish(id, buf, total_us);
-        trace::record_phase_histograms(&timeline, metrics);
-        tracer.push(timeline);
-    }
-    let _ = inf.done.send(Ok(ResponseOut {
-        id,
-        tokens,
-        bucket: inf.bucket,
-        acceptance_rate,
-        prefill_secs,
-        decode_secs,
-        decode_tokens_per_sec: decode_tokens as f64 / decode_secs.max(1e-9),
-        queue_secs: inf.queue_secs,
-    }));
-}
-
 /// Construct the request's decoder (XLA session or pooled/plain mock) and
-/// pick its context bucket. Shared by every engine worker.
+/// pick its context bucket.
 fn build_decoder(
     cfg: &ServeConfig,
     backend: &EngineBackend,
@@ -699,7 +452,7 @@ fn build_decoder(
 /// `prefill_chunk_tokens` is set, otherwise the whole prompt as one
 /// first-round chunk) so prefill work runs inside scheduling rounds.
 /// With `adaptive_gamma`, γ is AIMD-controlled as before.
-fn build_session(
+pub(crate) fn build_session(
     cfg: &ServeConfig,
     backend: &EngineBackend,
     spec: &RequestSpec,
@@ -746,6 +499,7 @@ pub fn pad_prompt(prompt: &[i32], bucket: usize, pad: bool) -> Vec<i32> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::Duration;
 
     fn mock_coordinator(engines: usize, queue: usize) -> Coordinator {
         let cfg = ServeConfig {
@@ -764,6 +518,8 @@ mod tests {
             max_new_tokens: 24,
             method: None,
             gamma: None,
+            tenant: None,
+            deadline_ms: None,
         }
     }
 
@@ -817,16 +573,18 @@ mod tests {
             assert_eq!(a.tokens, b.tokens, "request {i}");
             assert_eq!(a.acceptance_rate, b.acceptance_rate, "request {i}");
         }
-        // the serving path surfaced its round telemetry
+        // the serving path surfaced its round telemetry: the shared
+        // stealing pool is sized engines × step_workers = 3
         assert_eq!(parallel.metrics.gauge(names::STEP_WORKERS), 3.0);
+        assert_eq!(parallel.metrics.gauge(names::SCHED_POOL_WORKERS), 3.0);
         assert!(parallel.metrics.gauge(names::ROUND_SPAN_US) > 0.0);
         assert!(
             parallel
                 .metrics
                 .snapshot()
                 .to_string()
-                .contains(&names::engine_batcher_depth(0)),
-            "per-engine batcher depth gauge exported"
+                .contains(names::SCHED_BATCHER_DEPTH),
+            "global batcher depth gauge exported"
         );
     }
 

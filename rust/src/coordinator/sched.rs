@@ -1,0 +1,1077 @@
+//! Unified cross-engine scheduler: ONE work-stealing step pool, global
+//! continuous batching, fair SLO-aware admission.
+//!
+//! Replaces the per-engine serving threads (`qs-engine-{N}`, each with its
+//! own FIFO `ThreadPool` and private `StepBatcher`) with a single driver
+//! thread (`qs-sched-drive`) owning ONE global [`StepBatcher`] sized
+//! `engines × batcher_slots`, fanned over ONE process-wide work-stealing
+//! pool (`qs-sched-{i}`, `engines × step_workers` threads). Every round is
+//! formed across *all* engines' sessions: any free step worker takes any
+//! runnable session, chunked-prefill and decode steps interleave
+//! fleet-wide, and idle workers steal queued steps off loaded peers'
+//! deques (`sched_steals` counts the thefts). Per-request outputs stay
+//! bit-identical to the serial path — stealing reorders *execution*, never
+//! results (each outcome lands in its slot; see `StepBatcher::round`).
+//!
+//! Admission stops being pure FIFO. The [`FairQueue`] runs per-tenant
+//! deficit-round-robin (weights from `cfg.fair_weights`, default 1): a
+//! tenant with weight `w` is offered `w` pops per cursor visit, so between
+//! two consecutive requests of a backlogged tenant at most
+//! `Σ other tenants' weights` foreign requests are served — no tenant
+//! starves under adversarial bursts (property-tested below). Per-tenant
+//! token-bucket rate limits (`tenant_rate_limit` req/s, burst = one
+//! second's worth) shed excess arrivals at submit. Within a tenant, order
+//! stays FIFO, and the WFQ-chosen head keeps the head-of-line pool
+//! admission semantics of the old engine loop: a large-but-admissible head
+//! waits for page releases while already-admitted sessions keep decoding.
+//!
+//! SLO enforcement: a request may carry a deadline (per-request
+//! `deadline_ms` or the `request_deadline_ms` default). Expiry is enforced
+//! at the two scheduling points — when the request surfaces as the
+//! WFQ-chosen head (rejected before any pool pages are booked) and after
+//! every round for active sessions (evicted mid-flight). Cancellation
+//! ([`super::router::Coordinator::cancel`]) removes queued requests
+//! immediately and marks active ones for eviction at the next round
+//! boundary. Both paths run the ONE release sequence (drop session →
+//! release pages → refresh gauges → `notify_all`), so admission waiters
+//! parked on a saturated pool wake the moment a cancelled or expired
+//! session frees its pages.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use crate::config::ServeConfig;
+use crate::coordinator::batcher::{ActiveSession, QuantBackpressure, StepBatcher};
+use crate::coordinator::router::{
+    build_session, pool_plan, sync_pool_gauges, RequestSpec, ResponseOut, Shared,
+    TOO_LARGE_PREFIX,
+};
+use crate::metrics::{names, Registry};
+use crate::pool::{AdmitOutcome, SharedSessionManager};
+use crate::trace::{self, PhaseEvent, Tracer};
+use crate::util::now_secs;
+use crate::util::threadpool::StealPool;
+
+use super::router::EngineBackend;
+
+/// Marker prefix for a request terminated by client cancellation; the HTTP
+/// layer maps it to 499 (client closed request).
+pub const CANCELLED_PREFIX: &str = "cancelled: ";
+
+/// Marker prefix for a request that blew its deadline (queued or
+/// mid-flight); the HTTP layer maps it to 504.
+pub const DEADLINE_PREFIX: &str = "deadline: ";
+
+/// One queued generation request, tagged with its tenant and deadline.
+#[derive(Debug)]
+pub(crate) struct Queued {
+    pub(crate) spec: RequestSpec,
+    pub(crate) tenant: String,
+    pub(crate) enqueued_at: f64,
+    /// Absolute expiry; None = no deadline.
+    pub(crate) deadline: Option<Instant>,
+    pub(crate) done: mpsc::Sender<Result<ResponseOut, String>>,
+}
+
+/// One tenant's FIFO lane inside the fair queue.
+struct Lane {
+    tenant: String,
+    weight: u64,
+    queue: VecDeque<Queued>,
+    /// Token bucket (only consulted when a rate limit is configured).
+    tokens: f64,
+    refilled_at: Instant,
+}
+
+/// Per-tenant weighted fair queue (deficit round robin) with token-bucket
+/// rate limits and cancellation marks.
+///
+/// DRR with unit request cost: the cursor visits non-empty lanes in
+/// round-robin order; arriving at a lane grants it `weight` pops before
+/// the cursor moves on. `peek`/`pop` both route through the same
+/// deterministic `select`, so the engine-loop pattern of "peek head,
+/// decide admission under the lock, then pop the same head" carries over
+/// unchanged from the FIFO queue.
+pub(crate) struct FairQueue {
+    lanes: Vec<Lane>,
+    max_tenants: usize,
+    /// Requests/second/tenant; 0 = unlimited.
+    rate_limit: usize,
+    weights: Vec<(String, u64)>,
+    /// Lane holding the current DRR grant (None on a cold queue).
+    current: Option<usize>,
+    quantum_left: u64,
+    len: usize,
+    /// Cancel marks for ids not found queued (presumed active); drained by
+    /// the scheduler each iteration and applied against live sessions.
+    marks: HashSet<u64>,
+}
+
+impl FairQueue {
+    pub(crate) fn new(cfg: &ServeConfig) -> FairQueue {
+        Self::with_params(cfg.sched_tenants, cfg.tenant_rate_limit, cfg.fair_weights.clone())
+    }
+
+    pub(crate) fn with_params(
+        max_tenants: usize,
+        rate_limit: usize,
+        weights: Vec<(String, u64)>,
+    ) -> FairQueue {
+        FairQueue {
+            lanes: Vec::new(),
+            max_tenants: max_tenants.max(1),
+            rate_limit,
+            weights,
+            current: None,
+            quantum_left: 0,
+            len: 0,
+            marks: HashSet::new(),
+        }
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.len
+    }
+
+    pub(crate) fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn burst(&self) -> f64 {
+        self.rate_limit.max(1) as f64
+    }
+
+    /// Enqueue under the tenant's lane. Sheds (returning the job and a
+    /// reason) when the tenant's token bucket is dry or when the lane
+    /// table is full of *backlogged* tenants (idle lanes are reclaimed
+    /// first, so `max_tenants` caps concurrent tenants, not lifetime ones).
+    pub(crate) fn push(&mut self, job: Queued) -> Result<(), (Queued, &'static str)> {
+        let idx = match self.lanes.iter().position(|l| l.tenant == job.tenant) {
+            Some(i) => i,
+            None => {
+                if self.lanes.len() >= self.max_tenants {
+                    match self.lanes.iter().position(|l| l.queue.is_empty()) {
+                        Some(i) => self.remove_lane(i),
+                        None => return Err((job, "tenant limit")),
+                    }
+                }
+                let weight = self
+                    .weights
+                    .iter()
+                    .find(|(t, _)| *t == job.tenant)
+                    .map_or(1, |(_, w)| *w)
+                    .max(1);
+                self.lanes.push(Lane {
+                    tenant: job.tenant.clone(),
+                    weight,
+                    queue: VecDeque::new(),
+                    tokens: self.burst(),
+                    refilled_at: Instant::now(),
+                });
+                self.lanes.len() - 1
+            }
+        };
+        if self.rate_limit > 0 {
+            let burst = self.burst();
+            let lane = &mut self.lanes[idx];
+            let now = Instant::now();
+            let dt = now.duration_since(lane.refilled_at).as_secs_f64();
+            lane.refilled_at = now;
+            lane.tokens = (lane.tokens + dt * self.rate_limit as f64).min(burst);
+            if lane.tokens < 1.0 {
+                return Err((job, "rate limited"));
+            }
+            lane.tokens -= 1.0;
+        }
+        self.lanes[idx].queue.push_back(job);
+        self.len += 1;
+        Ok(())
+    }
+
+    /// Remove an (empty) lane, keeping the DRR grant pointing at the same
+    /// logical lane. Only ever called on idle lanes, so forfeiting a stale
+    /// grant's quantum cannot perturb a backlogged tenant's share.
+    fn remove_lane(&mut self, i: usize) {
+        self.lanes.remove(i);
+        match self.current {
+            Some(c) if c == i => {
+                self.current = i.checked_sub(1);
+                self.quantum_left = 0;
+            }
+            Some(c) if c > i => self.current = Some(c - 1),
+            _ => {}
+        }
+    }
+
+    /// DRR head selection. Deterministic between mutations: consecutive
+    /// calls pick the same lane until a pop exhausts its quantum (or the
+    /// lane drains, forfeiting the rest of the quantum). A new grant goes
+    /// to the first non-empty lane after the last granted one — lane 0
+    /// first on a cold queue.
+    fn select(&mut self) -> Option<usize> {
+        if self.len == 0 {
+            return None;
+        }
+        if let Some(i) = self.current {
+            if self.quantum_left > 0 && !self.lanes[i].queue.is_empty() {
+                return Some(i);
+            }
+        }
+        let n = self.lanes.len();
+        let start = self.current.map_or(0, |i| i + 1);
+        for k in 0..n {
+            let i = (start + k) % n;
+            if !self.lanes[i].queue.is_empty() {
+                self.current = Some(i);
+                self.quantum_left = self.lanes[i].weight;
+                return Some(i);
+            }
+        }
+        None
+    }
+
+    /// The WFQ-chosen head (the request `pop` would return).
+    pub(crate) fn peek(&mut self) -> Option<&Queued> {
+        let i = self.select()?;
+        self.lanes[i].queue.front()
+    }
+
+    pub(crate) fn pop(&mut self) -> Option<Queued> {
+        let i = self.select()?;
+        let job = self.lanes[i].queue.pop_front()?;
+        self.quantum_left -= 1;
+        self.len -= 1;
+        Some(job)
+    }
+
+    /// Cancel by id: a queued request is removed and returned (the caller
+    /// responds to it); an unknown id is marked for the scheduler's active
+    /// sweep. Marks for already-completed ids are dropped at the next
+    /// drain, so the set cannot grow unbounded.
+    pub(crate) fn cancel(&mut self, id: u64) -> Option<Queued> {
+        for lane in &mut self.lanes {
+            if let Some(pos) = lane.queue.iter().position(|j| j.spec.id == id) {
+                self.len -= 1;
+                return lane.queue.remove(pos);
+            }
+        }
+        self.marks.insert(id);
+        None
+    }
+
+    fn drain_marks(&mut self) -> Vec<u64> {
+        self.marks.drain().collect()
+    }
+
+    /// (tenant, queued requests) per lane, for the per-tenant depth gauges.
+    pub(crate) fn tenant_depths(&self) -> Vec<(String, usize)> {
+        self.lanes.iter().map(|l| (l.tenant.clone(), l.queue.len())).collect()
+    }
+}
+
+/// Outcome of head-of-line admission, decided while holding the queue lock.
+enum Admission {
+    Run,
+    Reject(String),
+}
+
+/// Per-session serving metadata while the session lives in the batcher.
+struct Inflight {
+    done: mpsc::Sender<Result<ResponseOut, String>>,
+    queue_secs: f64,
+    admitted_at: Instant,
+    /// Set the first time the session is observed past its prefill phase.
+    prefill_done_at: Option<Instant>,
+    bucket: usize,
+    /// Absolute expiry checked after every round; None = no deadline.
+    deadline: Option<Instant>,
+    /// This request's span buffer (None when tracing is disabled); finished
+    /// into the flight recorder at retirement.
+    trace: Option<Arc<crate::trace::TraceBuf>>,
+}
+
+/// The unified scheduler driver: one thread forming global rounds across
+/// all engines' sessions. See the module docs for the full picture; the
+/// loop structure is the old engine loop's (admission under the queue lock
+/// → build sessions outside it → one round → retire), with three
+/// additions: WFQ head selection, the cancellation sweep, and the deadline
+/// sweep.
+pub(crate) fn scheduler_loop(
+    cfg: ServeConfig,
+    shared: Arc<Shared>,
+    metrics: Arc<Registry>,
+    tracer: Arc<Tracer>,
+    backend: Arc<EngineBackend>,
+    pool: Option<SharedSessionManager>,
+) {
+    let engines = cfg.engines.max(1);
+    let pool_threads = engines * cfg.step_workers;
+    // One process-wide stealing pool, sized to the fleet's configured step
+    // budget (a pool of 1 would only add hand-off latency: serial rounds
+    // step inline instead).
+    let step_pool = (pool_threads >= 2).then(|| StealPool::named(pool_threads, "qs-sched"));
+    let mut batcher = StepBatcher::new(engines * cfg.batcher_slots.max(1));
+    if let Some(p) = &step_pool {
+        batcher = batcher.with_shared_step_pool(p.handle());
+    }
+    if let Some(mgr) = &pool {
+        batcher = batcher
+            .with_backpressure(QuantBackpressure::for_pool(
+                mgr.clone(),
+                cfg.quant_queue_soft_limit,
+            ))
+            .with_stats_sink(mgr.clone());
+    }
+    let mut inflight: HashMap<u64, Inflight> = HashMap::new();
+    // Hot-loop gauges are pre-resolved to atomic handles once; the dynamic
+    // per-tenant depth gauges are resolved lazily and cached.
+    let depth_gauge = metrics.gauge_handle(names::SCHED_BATCHER_DEPTH);
+    let queue_gauge = metrics.gauge_handle(names::SCHED_QUEUE_DEPTH);
+    let steals_gauge = metrics.gauge_handle(names::SCHED_STEALS);
+    let mut tenant_gauges: HashMap<String, Arc<crate::metrics::Gauge>> = HashMap::new();
+    metrics.set_gauge(
+        names::SCHED_POOL_WORKERS,
+        step_pool.as_ref().map_or(1, |p| p.size()) as f64,
+    );
+    let round_gauges = pool.is_none().then(|| {
+        (
+            metrics.gauge_handle(names::STEP_WORKERS),
+            metrics.gauge_handle(names::STEP_WORKERS_BUSY),
+            metrics.gauge_handle(names::ROUND_SPAN_US),
+        )
+    });
+    // Head-of-line admission wait: set when the WFQ head first sees
+    // `Saturated`, drained into its trace when it finally pops.
+    let mut admission_wait: Option<(u64, Instant)> = None;
+    loop {
+        let stopping = shared.stop.load(Ordering::Relaxed);
+        // ---- admission: pull admissible WFQ heads into free slots -------
+        let mut popped: Vec<(Queued, u64)> = Vec::new();
+        let mut rejected: Vec<(Queued, String)> = Vec::new();
+        let mut expired: Vec<Queued> = Vec::new();
+        if !stopping {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if shared.stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                if batcher.active_len() + popped.len() >= batcher.max_active {
+                    break;
+                }
+                let head = q.peek().map(|j| {
+                    (j.spec.id, j.spec.prompt.len(), j.spec.max_new_tokens, j.deadline)
+                });
+                let Some((id, prompt_len, max_new, deadline)) = head else {
+                    if batcher.active_len() + popped.len() == 0 {
+                        // fully idle: park until work (or stop) arrives
+                        q = shared.cv.wait(q).unwrap();
+                        continue;
+                    }
+                    break; // keep stepping the sessions we already have
+                };
+                // Deadline expired while queued: reject before any pool
+                // pages are booked (also unblocks a saturated-head wait).
+                if deadline.is_some_and(|d| Instant::now() >= d) {
+                    if admission_wait.is_some_and(|(aid, _)| aid == id) {
+                        admission_wait = None;
+                    }
+                    expired.push(q.pop().expect("peeked head"));
+                    continue;
+                }
+                let decision = match &pool {
+                    None => Admission::Run,
+                    Some(mgr) => {
+                        let plan = pool_plan(&cfg, prompt_len, max_new);
+                        match mgr.lock().unwrap().admit(id, plan.pages, false) {
+                            Ok(AdmitOutcome::Admitted) => Admission::Run,
+                            Ok(AdmitOutcome::TooLarge) => {
+                                metrics.incr("requests_rejected_too_large", 1);
+                                Admission::Reject(format!(
+                                    "{TOO_LARGE_PREFIX}request needs {} KV \
+                                     pages, over the pool's admission ceiling \
+                                     (no OOM: rejected up front)",
+                                    plan.pages
+                                ))
+                            }
+                            Ok(AdmitOutcome::Saturated) => {
+                                if admission_wait.map_or(true, |(aid, _)| aid != id) {
+                                    admission_wait = Some((id, Instant::now()));
+                                }
+                                if batcher.active_len() + popped.len() == 0 {
+                                    // Nothing to step: wait (bounded) for a
+                                    // release. Counter counts 5 ms polls.
+                                    metrics.incr("pool_admission_wait_polls", 1);
+                                    q = shared
+                                        .cv
+                                        .wait_timeout(q, Duration::from_millis(5))
+                                        .unwrap()
+                                        .0;
+                                    continue;
+                                }
+                                // Active sessions exist: keep decoding;
+                                // their releases will free pages.
+                                break;
+                            }
+                            Err(e) => Admission::Reject(format!("{e:#}")),
+                        }
+                    }
+                };
+                let job = q.pop().expect("peeked head");
+                // If this head waited out a saturated pool, charge the wait.
+                let admission_us = match admission_wait {
+                    Some((aid, t0)) if aid == id => {
+                        admission_wait = None;
+                        t0.elapsed().as_micros() as u64
+                    }
+                    _ => 0,
+                };
+                match decision {
+                    Admission::Run => popped.push((job, admission_us)),
+                    Admission::Reject(msg) => rejected.push((job, msg)),
+                }
+            }
+        }
+        if stopping && batcher.active_len() == 0 {
+            return; // in-flight work drained; still-queued jobs fail at drop
+        }
+        for (job, msg) in rejected {
+            metrics.incr("requests_failed", 1);
+            let _ = job.done.send(Err(msg));
+        }
+        for job in expired {
+            metrics.incr("requests_deadline_rejected", 1);
+            let waited_ms = ((now_secs() - job.enqueued_at) * 1e3) as u64;
+            let _ = job.done.send(Err(format!(
+                "{DEADLINE_PREFIX}request {} expired after {waited_ms}ms in queue",
+                job.spec.id
+            )));
+        }
+        // ---- build sessions (outside the queue lock) --------------------
+        for (job, admission_us) in popped {
+            let queue_secs = now_secs() - job.enqueued_at;
+            metrics.histogram("queue_wait").record_secs(queue_secs);
+            // Open the request's timeline: total queue time split into the
+            // fair-queue wait and the saturated-pool admission wait (the
+            // two sum to `queue_secs`, so the timeline never double-counts).
+            let buf = tracer.new_request();
+            if let Some(b) = &buf {
+                let queue_us = ((queue_secs * 1e6) as u64).saturating_sub(admission_us);
+                b.record(PhaseEvent::QueueWait { us: queue_us });
+                b.record(PhaseEvent::AdmissionWait { us: admission_us });
+            }
+            match build_session(&cfg, &backend, &job.spec, pool.as_ref()) {
+                Ok((sess, bucket)) => {
+                    let sess = match &buf {
+                        Some(b) => sess.with_trace(Arc::clone(b)),
+                        None => sess,
+                    };
+                    let id = sess.id;
+                    batcher.admit(sess).expect("slot was counted during admission");
+                    inflight.insert(
+                        id,
+                        Inflight {
+                            done: job.done,
+                            queue_secs,
+                            admitted_at: Instant::now(),
+                            prefill_done_at: None,
+                            bucket,
+                            deadline: job.deadline,
+                            trace: buf,
+                        },
+                    );
+                }
+                Err(e) => {
+                    release_pool_session(pool.as_ref(), &shared, &metrics, job.spec.id);
+                    metrics.incr("requests_failed", 1);
+                    let _ = job.done.send(Err(format!("{e:#}")));
+                }
+            }
+        }
+        // ---- cancellation sweep -----------------------------------------
+        // Drained AFTER session build: a mark set while a request is being
+        // admitted lands here on the next iteration, when the session is
+        // already active — no cancel can fall through the pop→admit window.
+        let marks = shared.queue.lock().unwrap().drain_marks();
+        for id in marks {
+            let Some(sess) = batcher.remove(id) else { continue };
+            let inf = inflight.remove(&id).expect("active sessions are tracked");
+            drop(sess); // decoder resources go before the pool release
+            if let Some(mgr) = &pool {
+                mgr.lock().unwrap().note_cancellation();
+            }
+            release_pool_session(pool.as_ref(), &shared, &metrics, id);
+            metrics.incr("requests_cancelled", 1);
+            finish_aborted(&inf, &tracer, &metrics, id, true);
+            let _ = inf
+                .done
+                .send(Err(format!("{CANCELLED_PREFIX}request {id} cancelled by client")));
+        }
+        // ---- one scheduling round ---------------------------------------
+        if batcher.active_len() == 0 {
+            depth_gauge.set(0.0);
+            queue_gauge.set(shared.queue.lock().unwrap().len() as f64);
+            continue;
+        }
+        batcher.round().expect("round parks failures; it does not error");
+        let now = Instant::now();
+        for s in batcher.active_sessions() {
+            if !s.is_prefilling() {
+                if let Some(inf) = inflight.get_mut(&s.id) {
+                    inf.prefill_done_at.get_or_insert(now);
+                }
+            }
+        }
+        // ---- deadline sweep ---------------------------------------------
+        // A session that finished THIS round is delivered normally (it beat
+        // the sweep); only still-active expired sessions are evicted.
+        let over: Vec<u64> = inflight
+            .iter()
+            .filter(|(_, inf)| inf.deadline.is_some_and(|d| now >= d))
+            .map(|(&id, _)| id)
+            .collect();
+        for id in over {
+            let Some(sess) = batcher.remove(id) else { continue };
+            let inf = inflight.remove(&id).expect("active sessions are tracked");
+            drop(sess); // decoder resources go before the pool release
+            if let Some(mgr) = &pool {
+                mgr.lock().unwrap().note_cancellation();
+            }
+            release_pool_session(pool.as_ref(), &shared, &metrics, id);
+            metrics.incr("requests_deadline_rejected", 1);
+            finish_aborted(&inf, &tracer, &metrics, id, false);
+            let _ = inf.done.send(Err(format!(
+                "{DEADLINE_PREFIX}request {id} exceeded its deadline mid-flight"
+            )));
+        }
+        // ---- round telemetry --------------------------------------------
+        // With a pool, the manager snapshot (note_round → sync_pool_gauges)
+        // is the ONE writer of the step/round gauges; only unpooled
+        // coordinators write them directly here. Scheduler gauges have no
+        // manager mirror, so they are always written directly.
+        if let Some((g_workers, g_busy, g_span)) = &round_gauges {
+            g_workers.set(batcher.step_workers() as f64);
+            g_busy.set(batcher.last_step_workers_busy() as f64);
+            g_span.set(batcher.last_round_span_us());
+        }
+        depth_gauge.set(batcher.active_len() as f64);
+        if let Some(p) = &step_pool {
+            steals_gauge.set(p.steals() as f64);
+        }
+        {
+            let q = shared.queue.lock().unwrap();
+            queue_gauge.set(q.len() as f64);
+            for (_, g) in tenant_gauges.iter() {
+                g.set(0.0);
+            }
+            for (tenant, depth) in q.tenant_depths() {
+                tenant_gauges
+                    .entry(tenant.clone())
+                    .or_insert_with(|| metrics.gauge_handle(&names::sched_tenant_depth(&tenant)))
+                    .set(depth as f64);
+            }
+        }
+        // ---- retire ------------------------------------------------------
+        for s in batcher.finished.drain(..) {
+            let Some(inf) = inflight.remove(&s.id) else { continue };
+            respond_finished(s, inf, &metrics, &tracer, pool.as_ref(), &shared);
+        }
+        for f in batcher.failed.drain(..) {
+            // Release pages FIRST, inflight entry or not: a failed session
+            // whose metadata was already reaped must never park its pool
+            // reservation (that would leak pages and wedge admission
+            // waiters forever).
+            drop(f.session); // decoder resources go before the pool release
+            release_pool_session(pool.as_ref(), &shared, &metrics, f.id);
+            let Some(inf) = inflight.remove(&f.id) else { continue };
+            metrics.incr("requests_failed", 1);
+            let _ = inf.done.send(Err(format!("{:#}", f.error)));
+        }
+    }
+}
+
+/// Release one request's pool reservation (no-op when pooling is off),
+/// refresh the gauges, and wake workers parked on Saturated admissions —
+/// the ONE release sequence shared by the finished, failed, build-error,
+/// cancelled, and deadline-expired paths.
+fn release_pool_session(
+    pool: Option<&SharedSessionManager>,
+    shared: &Shared,
+    metrics: &Registry,
+    id: u64,
+) {
+    if let Some(mgr) = pool {
+        mgr.lock().unwrap().release(id);
+        sync_pool_gauges(mgr, metrics);
+        shared.cv.notify_all();
+    }
+}
+
+/// Close the timeline of a cancelled / deadline-expired session with its
+/// terminal marker and push it to the flight recorder, so aborted requests
+/// are debuggable at `/debug/requests` like completed ones.
+fn finish_aborted(inf: &Inflight, tracer: &Tracer, metrics: &Registry, id: u64, cancelled: bool) {
+    if let Some(buf) = &inf.trace {
+        let total_us = (inf.queue_secs * 1e6) as u64
+            + inf.admitted_at.elapsed().as_micros() as u64;
+        buf.record(if cancelled {
+            PhaseEvent::Cancelled { total_us }
+        } else {
+            PhaseEvent::DeadlineExpired { total_us }
+        });
+        let timeline = tracer.finish(id, buf, total_us);
+        trace::record_phase_histograms(&timeline, metrics);
+        tracer.push(timeline);
+    }
+}
+
+/// Build the response for a finished session and release its resources.
+fn respond_finished(
+    mut s: ActiveSession,
+    inf: Inflight,
+    metrics: &Registry,
+    tracer: &Tracer,
+    pool: Option<&SharedSessionManager>,
+    shared: &Shared,
+) {
+    let now = Instant::now();
+    let prefill_done = inf.prefill_done_at.unwrap_or(now);
+    let prefill_secs = prefill_done.duration_since(inf.admitted_at).as_secs_f64();
+    let decode_secs = now.duration_since(prefill_done).as_secs_f64();
+    let acceptance_rate = if s.drafted == 0 {
+        0.0
+    } else {
+        s.accepted as f64 / s.drafted as f64
+    };
+    metrics.incr("drafted", s.drafted);
+    metrics.incr("accepted", s.accepted);
+    metrics.incr("requests_completed", 1);
+    metrics.incr("tokens_generated", s.tokens.len() as u64);
+    metrics.histogram("prefill").record_secs(prefill_secs);
+    metrics.histogram("decode").record_secs(decode_secs);
+    metrics
+        .histogram("e2e")
+        .record_secs(prefill_secs + decode_secs + inf.queue_secs);
+    let id = s.id;
+    let tokens = std::mem::take(&mut s.tokens);
+    // decode-phase tokens only: the first reported token is sampled from
+    // the prefill logits (see `GenResult::decode_tokens`)
+    let decode_tokens = tokens.len().saturating_sub(1);
+    drop(s); // decoder resources go before the pool release
+    release_pool_session(pool, shared, metrics, id);
+    // Close the timeline: total = queue (incl. admission wait) + residency.
+    // Finishing BEFORE the response is sent makes the flight recorder and
+    // the phase histograms visible the moment `generate` returns.
+    if let Some(buf) = &inf.trace {
+        let total_us = (inf.queue_secs * 1e6) as u64
+            + now.duration_since(inf.admitted_at).as_micros() as u64;
+        let timeline = tracer.finish(id, buf, total_us);
+        trace::record_phase_histograms(&timeline, metrics);
+        tracer.push(timeline);
+    }
+    let _ = inf.done.send(Ok(ResponseOut {
+        id,
+        tokens,
+        bucket: inf.bucket,
+        acceptance_rate,
+        prefill_secs,
+        decode_secs,
+        decode_tokens_per_sec: decode_tokens as f64 / decode_secs.max(1e-9),
+        queue_secs: inf.queue_secs,
+    }));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::router::Coordinator;
+    use crate::pool::PoolConfig;
+    use crate::util::prop;
+    use std::sync::Mutex;
+
+    fn job(id: u64, tenant: &str) -> Queued {
+        // queue-only tests never send on `done`; a dropped receiver is fine
+        let (tx, _rx) = mpsc::channel();
+        Queued {
+            spec: RequestSpec {
+                id,
+                prompt: vec![1, 2, 3],
+                max_new_tokens: 8,
+                method: None,
+                gamma: None,
+                tenant: Some(tenant.to_string()),
+                deadline_ms: None,
+            },
+            tenant: tenant.to_string(),
+            enqueued_at: now_secs(),
+            deadline: None,
+            done: tx,
+        }
+    }
+
+    #[test]
+    fn drr_respects_weights_per_cursor_visit() {
+        let mut q =
+            FairQueue::with_params(8, 0, vec![("gold".into(), 3), ("free".into(), 1)]);
+        for i in 0..6 {
+            q.push(job(i, "gold")).unwrap();
+        }
+        for i in 10..16 {
+            q.push(job(i, "free")).unwrap();
+        }
+        let mut order = Vec::new();
+        while let Some(j) = q.pop() {
+            order.push(j.tenant.clone());
+        }
+        assert_eq!(order.len(), 12);
+        // Per full cursor cycle: 3 gold then 1 free, until gold drains.
+        assert_eq!(
+            order,
+            vec![
+                "gold", "gold", "gold", "free", "gold", "gold", "gold", "free", "free",
+                "free", "free", "free"
+            ]
+        );
+    }
+
+    #[test]
+    fn peek_and_pop_agree_on_the_wfq_head() {
+        let mut q = FairQueue::with_params(8, 0, vec![("b".into(), 2)]);
+        q.push(job(1, "a")).unwrap();
+        q.push(job(2, "b")).unwrap();
+        q.push(job(3, "b")).unwrap();
+        for _ in 0..3 {
+            let want = q.peek().map(|j| j.spec.id).unwrap();
+            // repeated peeks are stable between pops
+            assert_eq!(q.peek().map(|j| j.spec.id), Some(want));
+            assert_eq!(q.pop().map(|j| j.spec.id), Some(want));
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn rate_limit_sheds_a_burst_but_spares_other_tenants() {
+        let mut q = FairQueue::with_params(8, 2, vec![]);
+        let mut ok = 0;
+        let mut shed = 0;
+        for i in 0..5 {
+            match q.push(job(i, "spammer")) {
+                Ok(()) => ok += 1,
+                Err((_, why)) => {
+                    assert_eq!(why, "rate limited");
+                    shed += 1;
+                }
+            }
+        }
+        // burst = one second's worth = 2 tokens (± a refill sliver)
+        assert!((2..=3).contains(&ok), "accepted {ok} of a 5-burst at 2 req/s");
+        assert!(shed >= 2);
+        // a fresh tenant has its own full bucket
+        assert!(q.push(job(100, "quiet")).is_ok());
+    }
+
+    #[test]
+    fn tenant_limit_reclaims_idle_lanes_before_shedding() {
+        let mut q = FairQueue::with_params(2, 0, vec![]);
+        q.push(job(1, "a")).unwrap();
+        q.push(job(2, "b")).unwrap();
+        q.push(job(25, "b")).unwrap();
+        // both lanes backlogged: a third tenant is shed
+        let (_, why) = q.push(job(3, "c")).unwrap_err();
+        assert_eq!(why, "tenant limit");
+        // drain lane "a"; its idle lane is reclaimed for "c"
+        while q.pop().map(|j| j.tenant == "a").unwrap_or(false) {}
+        let before = q.len();
+        q.push(job(4, "c")).unwrap();
+        assert_eq!(q.len(), before + 1);
+    }
+
+    #[test]
+    fn cancel_removes_queued_and_marks_unknown() {
+        let mut q = FairQueue::with_params(4, 0, vec![]);
+        q.push(job(1, "a")).unwrap();
+        q.push(job(2, "a")).unwrap();
+        assert_eq!(q.cancel(2).map(|j| j.spec.id), Some(2));
+        assert_eq!(q.len(), 1);
+        assert!(q.cancel(77).is_none());
+        assert_eq!(q.drain_marks(), vec![77]);
+        assert!(q.drain_marks().is_empty());
+    }
+
+    fn req(id: u64, len: usize, tenant: Option<&str>) -> RequestSpec {
+        RequestSpec {
+            id,
+            prompt: (0..len as i32).collect(),
+            max_new_tokens: 24,
+            method: None,
+            gamma: None,
+            tenant: tenant.map(str::to_string),
+            deadline_ms: None,
+        }
+    }
+
+    /// Acceptance: serial-vs-scheduled token streams are bit-identical.
+    /// A 1-engine serial coordinator and a 2-engine scheduled one (shared
+    /// stealing pool, concurrent multiplexed rounds) produce the same
+    /// tokens request for request — stealing reorders execution, never
+    /// results.
+    #[test]
+    fn scheduled_concurrent_output_identical_to_serial() {
+        let mk = |engines: usize, workers: usize| ServeConfig {
+            engines,
+            step_workers: workers,
+            queue_capacity: 64,
+            max_new_tokens: 24,
+            batcher_slots: 4,
+            ..ServeConfig::default()
+        };
+        let serial = Coordinator::with_mock(mk(1, 1), 0.2).unwrap();
+        let sched = Coordinator::with_mock(mk(2, 2), 0.2).unwrap();
+        // serial reference, one request at a time
+        let want: Vec<Vec<i32>> = (0..8u64)
+            .map(|i| serial.generate(req(i, 4 + (i as usize % 5), None)).unwrap().tokens)
+            .collect();
+        // scheduled: all 8 in flight at once, multiplexed across rounds
+        let rxs: Vec<_> = (0..8u64)
+            .map(|i| sched.submit(req(i, 4 + (i as usize % 5), None)).unwrap())
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let out = rx.recv().unwrap().unwrap();
+            assert_eq!(out.tokens, want[i], "request {i}");
+        }
+    }
+
+    /// A weighted tenant's small batch overtakes a bulk tenant's earlier
+    /// backlog: with one batcher slot, completion order IS admission
+    /// order, and DRR grants "gold" (weight 8) the lane before "bulk"
+    /// drains. Under FIFO both gold requests would finish last.
+    #[test]
+    fn weighted_tenant_overtakes_a_bulk_backlog() {
+        let cfg = ServeConfig {
+            engines: 1,
+            batcher_slots: 1,
+            queue_capacity: 64,
+            max_new_tokens: 24,
+            fair_weights: vec![("gold".to_string(), 8)],
+            ..ServeConfig::default()
+        };
+        let c = Coordinator::with_mock(cfg, 0.2).unwrap();
+        let mut rxs = Vec::new();
+        for i in 0..6u64 {
+            rxs.push(("bulk", c.submit(req(i, 8, Some("bulk"))).unwrap()));
+        }
+        for i in 10..12u64 {
+            rxs.push(("gold", c.submit(req(i, 8, Some("gold"))).unwrap()));
+        }
+        let order = std::sync::Arc::new(Mutex::new(Vec::new()));
+        let joins: Vec<_> = rxs
+            .into_iter()
+            .map(|(tenant, rx)| {
+                let order = std::sync::Arc::clone(&order);
+                std::thread::spawn(move || {
+                    rx.recv().unwrap().unwrap();
+                    order.lock().unwrap().push(tenant);
+                })
+            })
+            .collect();
+        for j in joins {
+            j.join().unwrap();
+        }
+        let order = order.lock().unwrap();
+        let last_gold = order.iter().rposition(|t| *t == "gold").unwrap();
+        let last_bulk = order.iter().rposition(|t| *t == "bulk").unwrap();
+        assert!(
+            last_gold < last_bulk,
+            "gold (weight 8) must finish before the bulk backlog drains: {order:?}"
+        );
+    }
+
+    /// Per-tenant token bucket: at 1 req/s, the second instant submit from
+    /// one tenant is shed as rate limited (burst = one second's worth).
+    #[test]
+    fn tenant_rate_limit_sheds_at_submit() {
+        let cfg = ServeConfig {
+            engines: 1,
+            queue_capacity: 64,
+            max_new_tokens: 24,
+            tenant_rate_limit: 1,
+            ..ServeConfig::default()
+        };
+        let c = Coordinator::with_mock(cfg, 0.2).unwrap();
+        let rx = c.submit(req(1, 6, Some("spammer"))).unwrap();
+        let (_, why) = c.submit(req(2, 6, Some("spammer"))).unwrap_err();
+        assert_eq!(why, "rate limited");
+        assert_eq!(c.metrics.counter("requests_rate_limited"), 1);
+        assert_eq!(c.metrics.counter("requests_shed"), 1);
+        rx.recv().unwrap().unwrap();
+    }
+
+    /// Pooled config where one long-prefill request saturates the pool:
+    /// `pages` fits one plan (ceiling 0.9 × 1.5 × plan) but not two.
+    fn saturating_pool_cfg(prompt_len: usize) -> ServeConfig {
+        let mut cfg = ServeConfig {
+            engines: 1,
+            queue_capacity: 64,
+            max_new_tokens: 24,
+            prefill_chunk_tokens: 8,
+            pool: PoolConfig {
+                pages: 1, // placeholder, sized below
+                page_tokens: 8,
+                kv_dim: 2,
+                high_watermark: 0.9,
+                low_watermark: 0.7,
+                ..PoolConfig::default()
+            },
+            ..ServeConfig::default()
+        };
+        let plan = pool_plan(&cfg, prompt_len, cfg.max_new_tokens).pages;
+        cfg.pool.pages = plan + plan / 2;
+        cfg
+    }
+
+    /// Cancellation mid-flight releases the session's pool pages and wakes
+    /// the admission waiter parked on the saturated pool: r2 (same size as
+    /// r1, does not fit alongside it) completes only because cancelling r1
+    /// freed its reservation.
+    #[test]
+    fn cancelled_request_releases_pages_and_wakes_admission_waiters() {
+        const PROMPT: usize = 3000; // 375 prefill chunks: a wide cancel window
+        let c = Coordinator::with_mock(saturating_pool_cfg(PROMPT), 0.2).unwrap();
+        let rx1 = c.submit(req(1, PROMPT, None)).unwrap();
+        // wait until r1 is admitted and holds pages
+        let mgr = c.pool().expect("pooled").clone();
+        let t0 = std::time::Instant::now();
+        while mgr.lock().unwrap().pool().pages_in_use() == 0 {
+            assert!(t0.elapsed().as_secs() < 10, "r1 never admitted");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let rx2 = c.submit(req(2, PROMPT, None)).unwrap();
+        c.cancel(1);
+        let e = rx1.recv().unwrap().unwrap_err();
+        assert!(e.contains("cancelled"), "got: {e}");
+        // r2 was parked on the saturated pool; r1's release admitted it
+        let out = rx2.recv().unwrap().unwrap();
+        assert_eq!(out.tokens.len(), 24);
+        assert_eq!(c.metrics.counter("requests_cancelled"), 1);
+        let m = mgr.lock().unwrap();
+        assert_eq!(m.pool().pages_in_use(), 0, "cancelled pages released");
+        assert_eq!(m.cancellations(), 1);
+        m.check_integrity().unwrap();
+    }
+
+    /// A queued request whose deadline lapses while a long request holds
+    /// the only slot is rejected cleanly at pop — before any pool pages
+    /// are booked — and the long request is unaffected.
+    #[test]
+    fn queued_deadline_expiry_rejects_cleanly() {
+        let cfg = ServeConfig {
+            engines: 1,
+            batcher_slots: 1,
+            queue_capacity: 64,
+            max_new_tokens: 24,
+            prefill_chunk_tokens: 8,
+            ..ServeConfig::default()
+        };
+        let c = Coordinator::with_mock(cfg, 0.2).unwrap();
+        // 1500 chunked prefill rounds + a 20k-token decode: r1 holds the
+        // only slot far longer than r2's 1 ms deadline on any host
+        let mut r1 = req(1, 12_000, None);
+        r1.max_new_tokens = 20_000;
+        let rx1 = c.submit(r1).unwrap();
+        let mut r2 = req(2, 6, None);
+        r2.deadline_ms = Some(1);
+        let rx2 = c.submit(r2).unwrap();
+        let e = rx2.recv().unwrap().unwrap_err();
+        assert!(e.contains("deadline"), "got: {e}");
+        assert!(e.contains("in queue"), "queued-expiry path: {e}");
+        assert_eq!(c.metrics.counter("requests_deadline_rejected"), 1);
+        assert_eq!(rx1.recv().unwrap().unwrap().tokens.len(), 20_000);
+        assert_eq!(c.metrics.counter("requests_completed"), 1);
+    }
+
+    /// An active session that blows its deadline mid-prefill is evicted at
+    /// the round boundary, its pages released, and the scheduler keeps
+    /// serving.
+    #[test]
+    fn midflight_deadline_expiry_evicts_and_releases() {
+        // 2000 pooled prefill chunks + a 200k-token pooled decode: total
+        // residency far exceeds the 50 ms deadline on any host (the
+        // eviction itself caps the test's runtime at ~the deadline), while
+        // the deadline dwarfs scheduler wake-up latency — the expiry
+        // deterministically lands mid-flight, not in the queue.
+        const PROMPT: usize = 16_000;
+        const BUDGET: usize = 200_000;
+        let mut cfg = saturating_pool_cfg(PROMPT);
+        let plan = pool_plan(&cfg, PROMPT, BUDGET).pages;
+        cfg.pool.pages = plan + plan / 2;
+        let c = Coordinator::with_mock(cfg, 0.2).unwrap();
+        let mut r1 = req(1, PROMPT, None);
+        r1.max_new_tokens = BUDGET;
+        r1.deadline_ms = Some(50);
+        let rx1 = c.submit(r1).unwrap();
+        let e = rx1.recv().unwrap().unwrap_err();
+        assert!(e.contains("deadline"), "got: {e}");
+        assert!(e.contains("mid-flight"), "active-eviction path: {e}");
+        assert_eq!(c.metrics.counter("requests_deadline_rejected"), 1);
+        // pages released; a small follow-up request is served normally
+        assert_eq!(c.generate(req(2, 6, None)).unwrap().tokens.len(), 24);
+        let m = c.pool().unwrap().lock().unwrap();
+        assert_eq!(m.pool().pages_in_use(), 0);
+        assert_eq!(m.cancellations(), 1);
+        m.check_integrity().unwrap();
+    }
+
+    /// DRR starvation bound, property-tested under adversarial bursty
+    /// arrivals: while a tenant stays backlogged, at most
+    /// `Σ other tenants' weights` foreign pops occur between two of its
+    /// consecutive pops — every tenant keeps making progress no matter how
+    /// the others burst. Each generated case is a schedule of
+    /// (burst, pops) ops; shrinking finds a minimal starving schedule.
+    #[test]
+    fn prop_no_tenant_starves_under_bursty_arrivals() {
+        const TENANTS: [&str; 4] = ["a", "b", "c", "d"];
+        const WEIGHTS: [u64; 4] = [3, 2, 1, 1];
+        let bound: u64 = WEIGHTS.iter().sum();
+        prop::check(
+            prop::Config { cases: 120, size: 48, ..Default::default() },
+            |ops: &Vec<(usize, usize)>| {
+                let weights: Vec<(String, u64)> = TENANTS
+                    .iter()
+                    .zip(WEIGHTS)
+                    .map(|(t, w)| (t.to_string(), w))
+                    .collect();
+                let mut q = FairQueue::with_params(TENANTS.len(), 0, weights);
+                let mut id = 0u64;
+                let mut gap: HashMap<&str, u64> = HashMap::new();
+                for &(burst, pops) in ops {
+                    let tenant = TENANTS[burst % TENANTS.len()];
+                    for _ in 0..(burst / TENANTS.len()) % 12 {
+                        id += 1;
+                        q.push(job(id, tenant)).unwrap();
+                    }
+                    for _ in 0..pops % 8 {
+                        let Some(popped) = q.pop() else { break };
+                        // every OTHER backlogged tenant ate one pop of delay
+                        let depths: HashMap<String, usize> =
+                            q.tenant_depths().into_iter().collect();
+                        for (t, w_t) in TENANTS.iter().zip(WEIGHTS) {
+                            if *t == popped.tenant {
+                                gap.insert(t, 0);
+                            } else if depths.get(*t).copied().unwrap_or(0) > 0 {
+                                let g = gap.entry(t).or_insert(0);
+                                *g += 1;
+                                // a backlogged tenant of weight w waits at
+                                // most (bound - w) foreign pops for its turn
+                                if *g > bound - w_t {
+                                    return false;
+                                }
+                            }
+                        }
+                    }
+                }
+                true
+            },
+        );
+    }
+}

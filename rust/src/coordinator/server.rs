@@ -2,7 +2,13 @@
 //!
 //! Endpoints:
 //!   POST /generate  {"prompt": "text" | "tokens": [..], "max_new_tokens",
-//!                    "method", "gamma"} -> tokens + text + stats
+//!                    "method", "gamma", "tenant", "deadline_ms"}
+//!                   -> tokens + text + stats. A missed deadline maps to
+//!                   504, a cancellation to 499, an oversized request to
+//!                   413.
+//!   POST /cancel    {"id": N} -> {"ok":true}; queued requests are
+//!                   removed immediately, in-flight ones are evicted at
+//!                   the next scheduler round and their pool pages freed
 //!   GET  /stats     metrics snapshot (+ "pool": paged KV pool state —
 //!                   pages in use/peak/committed, pressure, watermarks,
 //!                   evictions, logical vs host cache bytes)
@@ -46,8 +52,21 @@ fn handle(coord: &Coordinator, req: &Request) -> Response {
         }
         ("GET", "/debug/requests") => Response::json(200, coord.tracer.to_json().to_string()),
         ("POST", "/generate") => generate(coord, &req.body),
+        ("POST", "/cancel") => cancel(coord, &req.body),
         _ => Response::json(404, r#"{"error":"not found"}"#),
     }
+}
+
+fn cancel(coord: &Coordinator, body: &[u8]) -> Response {
+    let id = std::str::from_utf8(body)
+        .ok()
+        .and_then(|t| Json::parse(t).ok())
+        .and_then(|j| j.get("id").and_then(Json::as_usize));
+    let Some(id) = id else {
+        return Response::json(400, r#"{"error":"need {\"id\": N}"}"#);
+    };
+    coord.cancel(id as u64);
+    Response::json(200, r#"{"ok":true}"#)
 }
 
 fn generate(coord: &Coordinator, body: &[u8]) -> Response {
@@ -86,6 +105,8 @@ fn generate(coord: &Coordinator, body: &[u8]) -> Response {
             .unwrap_or(coord.cfg.max_new_tokens),
         method,
         gamma: j.get("gamma").and_then(Json::as_usize),
+        tenant: j.get("tenant").and_then(Json::as_str).map(str::to_string),
+        deadline_ms: j.get("deadline_ms").and_then(Json::as_usize).map(|v| v as u64),
     };
     let rx = match coord.submit(spec) {
         Ok(rx) => rx,
@@ -128,8 +149,18 @@ fn generate(coord: &Coordinator, body: &[u8]) -> Response {
         }
         Ok(Err(e)) => {
             // A pool-admission size rejection is the client's problem
-            // (shrink the request), not a server fault.
-            let status = if e.starts_with(super::router::TOO_LARGE_PREFIX) { 413 } else { 500 };
+            // (shrink the request), not a server fault; cancellations and
+            // missed SLO deadlines get their own statuses so clients can
+            // tell them apart from engine faults.
+            let status = if e.starts_with(super::router::TOO_LARGE_PREFIX) {
+                413
+            } else if e.starts_with(super::sched::CANCELLED_PREFIX) {
+                499
+            } else if e.starts_with(super::sched::DEADLINE_PREFIX) {
+                504
+            } else {
+                500
+            };
             Response::json(status, Json::obj(vec![("error", Json::str(e))]).to_string())
         }
         Err(_) => Response::json(500, r#"{"error":"engine dropped"}"#),
@@ -229,7 +260,8 @@ mod tests {
         );
         // round-parallelism telemetry (serving path): the pool block and
         // the gauges both carry the step-worker and round-span keys, and
-        // the per-engine batcher depth gauge exists for engine 0
+        // the unified scheduler publishes its global batcher depth gauge
+        // (the old per-engine batcher_depth_engine_{N} gauges are gone)
         assert_eq!(calls(names::STEP_WORKERS), 1, "default = serial rounds");
         assert!(pool.get(names::ROUND_SPAN_US).is_some());
         assert!(pool.get(names::STEP_WORKERS_BUSY).is_some());
@@ -242,8 +274,12 @@ mod tests {
             assert!(gauges.get(key).is_some(), "gauge {key} missing");
         }
         assert!(
-            gauges.get(&names::engine_batcher_depth(0)).is_some(),
-            "per-engine batcher depth gauge missing"
+            gauges.get(names::SCHED_BATCHER_DEPTH).is_some(),
+            "unified scheduler batcher depth gauge missing"
+        );
+        assert!(
+            gauges.get(names::SCHED_QUEUE_DEPTH).is_some(),
+            "unified scheduler queue depth gauge missing"
         );
     }
 
@@ -445,6 +481,61 @@ mod tests {
         assert!(scrapes > 0);
         assert!(completed <= 16);
         assert_eq!(coord.metrics.counter("requests_completed"), 16);
+    }
+
+    /// `/cancel` aborts an in-flight request with 499 and a missed SLO
+    /// deadline maps to 504, both end-to-end over HTTP.
+    #[test]
+    fn http_cancel_maps_to_499_and_deadline_to_504() {
+        use crate::metrics::names;
+        let cfg = ServeConfig {
+            engines: 1,
+            prefill_chunk_tokens: 8,
+            ..ServeConfig::default()
+        };
+        let coord = Arc::new(Coordinator::with_mock(cfg, 0.1).unwrap());
+        let srv = serve(Arc::clone(&coord), "127.0.0.1:0").unwrap();
+        let addr = srv.addr.to_string();
+
+        // id 1: 500 prefill chunks + a 20k-token decode, cancelled mid-run
+        let gen = {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let body = format!(
+                    r#"{{"prompt":"{}","max_new_tokens":20000,"tenant":"alice"}}"#,
+                    "x".repeat(4000)
+                );
+                http_request(&addr, "POST", "/generate", body.as_bytes()).unwrap()
+            })
+        };
+        // wait until it is active so the cancel mark cannot go stale
+        let t0 = std::time::Instant::now();
+        while coord.metrics.gauge(names::SCHED_BATCHER_DEPTH) < 1.0 {
+            assert!(t0.elapsed().as_secs() < 10, "request never became active");
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let (st, body) = http_request(&addr, "POST", "/cancel", br#"{"id":1}"#).unwrap();
+        assert_eq!(st, 200, "{}", String::from_utf8_lossy(&body));
+        let (st, body) = gen.join().unwrap();
+        assert_eq!(st, 499, "{}", String::from_utf8_lossy(&body));
+        assert!(String::from_utf8_lossy(&body).contains("cancelled"));
+
+        // id 2: a 1 ms deadline on heavy work expires whichever sweep
+        // catches it (queued or mid-flight) — either way the client
+        // sees 504
+        let body = format!(
+            r#"{{"prompt":"{}","max_new_tokens":20000,"deadline_ms":1}}"#,
+            "x".repeat(4000)
+        );
+        let (st, body) = http_request(&addr, "POST", "/generate", body.as_bytes()).unwrap();
+        assert_eq!(st, 504, "{}", String::from_utf8_lossy(&body));
+        assert!(String::from_utf8_lossy(&body).contains("deadline"));
+        assert_eq!(coord.metrics.counter("requests_cancelled"), 1);
+        assert_eq!(coord.metrics.counter("requests_deadline_rejected"), 1);
+
+        // a cancel body without an id is a 400
+        let (st, _) = http_request(&addr, "POST", "/cancel", b"{}").unwrap();
+        assert_eq!(st, 400);
     }
 
     #[test]

@@ -72,7 +72,33 @@ fn config_from_args(args: &Args) -> Result<ServeConfig> {
         args.get_usize("trace-buffer-events", cfg.trace_buffer_events);
     cfg.flight_recorder_requests =
         args.get_usize("flight-recorder-requests", cfg.flight_recorder_requests);
+    // unified-scheduler admission knobs; nonsense values (0 tenants, a
+    // zero fair weight) are rejected with clear errors at startup
+    cfg.sched_tenants = args.get_usize("sched-tenants", cfg.sched_tenants);
+    cfg.request_deadline_ms =
+        args.get_usize("request-deadline-ms", cfg.request_deadline_ms as usize) as u64;
+    cfg.tenant_rate_limit = args.get_usize("tenant-rate-limit", cfg.tenant_rate_limit);
+    if let Some(spec) = args.get("fair-weights") {
+        cfg.fair_weights = parse_fair_weights(spec)?;
+    }
     Ok(cfg)
+}
+
+/// `--fair-weights gold=8,free=1` -> [("gold", 8), ("free", 1)]. Weight 0
+/// parses here but is rejected by coordinator startup validation.
+fn parse_fair_weights(spec: &str) -> Result<Vec<(String, u64)>> {
+    spec.split(',')
+        .filter(|s| !s.trim().is_empty())
+        .map(|pair| {
+            let (t, w) = pair.split_once('=').with_context(|| {
+                format!("--fair-weights entry '{pair}' is not tenant=weight")
+            })?;
+            let w: u64 = w.trim().parse().with_context(|| {
+                format!("--fair-weights weight in '{pair}' is not an integer")
+            })?;
+            Ok((t.trim().to_string(), w))
+        })
+        .collect()
 }
 
 fn dispatch(args: &Args) -> Result<()> {
@@ -135,6 +161,21 @@ OPTIONS (shared):
   --flight-recorder-requests N
                        completed request timelines the flight recorder
                        retains for /debug/requests (default 64)
+  --sched-tenants N    concurrent tenant lanes in the unified scheduler's
+                       weighted fair queue; idle lanes are reclaimed before
+                       new tenants are shed (default 8; 0 errors at startup)
+  --request-deadline-ms N
+                       default per-request SLO deadline: requests that
+                       exceed it are rejected in queue or evicted mid-flight
+                       with their pool pages freed (default 0 = none; a
+                       request's own deadline_ms overrides this)
+  --tenant-rate-limit N
+                       per-tenant admission rate in requests/second with a
+                       one-second burst (token bucket; default 0 = unlimited)
+  --fair-weights SPEC  deficit-round-robin weights per tenant, e.g.
+                       gold=8,free=1 (unlisted tenants weigh 1; weight 0
+                       errors at startup; a backlogged tenant waits at most
+                       the sum of the other tenants' weights in grants)
 
 run-only:
   --prompt TEXT | --prompt-len N --profile pg19|lexsum|infbench --seed S"
@@ -161,7 +202,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
         .with_context(|| format!("binding {bind}"))?;
     println!("quantspec serving on http://{}", srv.addr);
     println!(
-        "  POST /generate   GET /stats   GET /metrics   \
+        "  POST /generate   POST /cancel   GET /stats   GET /metrics   \
          GET /debug/requests   GET /healthz"
     );
     loop {
@@ -194,6 +235,8 @@ fn run_cmd(args: &Args) -> Result<()> {
         max_new_tokens: cfg.max_new_tokens,
         method: None,
         gamma: None,
+        tenant: None,
+        deadline_ms: None,
     })?;
     let text: String = out
         .tokens

@@ -80,11 +80,33 @@ pub mod names {
     pub const ACCEPTANCE_RATE_PCT: &str = "acceptance_rate_pct";
     /// Histogram: accepted draft tokens per speculation cycle.
     pub const ACCEPTED_LEN: &str = "accepted_len";
+    /// Requests queued across all tenants, waiting for a batcher slot
+    /// (the unified scheduler's global admission queue depth).
+    pub const SCHED_QUEUE_DEPTH: &str = "sched_queue_depth";
+    /// Active sessions multiplexed by the unified scheduler's global step
+    /// batcher — replaces the per-engine `batcher_depth_engine_{N}` gauges
+    /// on the scheduled path (one batcher serves every engine's sessions).
+    pub const SCHED_BATCHER_DEPTH: &str = "sched_batcher_depth";
+    /// Steps one `qs-sched-*` worker took from another worker's deque
+    /// (lifetime count; nonzero under imbalance is the pool working).
+    pub const SCHED_STEALS: &str = "sched_steals";
+    /// Worker threads in the process-wide work-stealing step pool
+    /// (`engines × step_workers`, matching the thread budget the old
+    /// per-engine pools added up to; 1 = rounds step inline/serially).
+    pub const SCHED_POOL_WORKERS: &str = "sched_pool_workers";
 
     /// Gauge name for one engine's batcher depth on the serving path
     /// (active sessions multiplexed by that engine's step batcher).
+    /// Legacy per-engine layout only — the unified scheduler exports
+    /// [`SCHED_BATCHER_DEPTH`] instead.
     pub fn engine_batcher_depth(wid: usize) -> String {
         format!("batcher_depth_engine_{wid}")
+    }
+
+    /// Gauge name for one tenant's queued-request depth under the fair
+    /// queue (`sched_tenant_depth_{tenant}`).
+    pub fn sched_tenant_depth(tenant: &str) -> String {
+        format!("sched_tenant_depth_{tenant}")
     }
 }
 

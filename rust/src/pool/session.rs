@@ -101,6 +101,9 @@ pub struct SessionManager {
     /// Prefill chunks deferred by quant-pool backpressure (recorded by
     /// `coordinator::batcher::QuantBackpressure`, surfaced in `/stats`).
     prefill_deferrals: u64,
+    /// Requests evicted mid-flight (client cancellation or deadline
+    /// expiry) whose pages were released back to the pool.
+    cancellations: u64,
     // ---- round-parallelism telemetry (embedded step batchers) ----------
     rounds: u64,
     round_span_us: f64,
@@ -134,6 +137,7 @@ impl SessionManager {
             clock: 0,
             evictions: 0,
             prefill_deferrals: 0,
+            cancellations: 0,
             rounds: 0,
             round_span_us: 0.0,
             step_workers: 0,
@@ -176,6 +180,18 @@ impl SessionManager {
     /// Prefill chunks deferred by quant-pool backpressure so far.
     pub fn prefill_deferrals(&self) -> u64 {
         self.prefill_deferrals
+    }
+
+    /// Record one mid-flight eviction (cancellation / deadline expiry).
+    /// The caller releases the pages via [`SessionManager::release`]; this
+    /// only keeps the `/stats` count.
+    pub fn note_cancellation(&mut self) {
+        self.cancellations += 1;
+    }
+
+    /// Requests evicted mid-flight so far (cancel + deadline).
+    pub fn cancellations(&self) -> u64 {
+        self.cancellations
     }
 
     /// Once-per-round telemetry from an embedded [`crate::coordinator::
@@ -408,6 +424,7 @@ impl SessionManager {
             ("low_watermark", Json::num(self.arena.cfg().low_watermark)),
             ("sessions_active", Json::num(self.active_sessions() as f64)),
             ("evictions", Json::num(self.evictions as f64)),
+            ("cancellations", Json::num(self.cancellations as f64)),
             ("cache_bytes_host", Json::num(self.arena.host_bytes() as f64)),
             (
                 "cache_bytes_logical",
@@ -653,6 +670,24 @@ mod tests {
         ] {
             assert!(js.contains(key), "missing {key} in {js}");
         }
+    }
+
+    /// A mid-flight eviction (cancel / deadline) counts in `/stats` and
+    /// the released pages go back to the pool.
+    #[test]
+    fn cancellation_count_and_release_surface_in_stats() {
+        let mut m = mgr(8);
+        m.admit(1, 3, true).unwrap();
+        m.alloc(1, PageKind::Quant).unwrap();
+        assert_eq!(m.cancellations(), 0);
+        m.note_cancellation();
+        let freed = m.release(1);
+        assert_eq!(freed, 1, "the allocated page came back");
+        assert_eq!(m.pool().pages_in_use(), 0);
+        assert_eq!(m.cancellations(), 1);
+        let js = m.stats_json().to_string();
+        assert!(js.contains("\"cancellations\":1"), "{js}");
+        m.check_integrity().unwrap();
     }
 
     #[test]

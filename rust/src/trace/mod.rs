@@ -58,6 +58,12 @@ pub enum PhaseEvent {
     EvictLru { victim: u64 },
     /// Terminal marker: total wall µs from enqueue to retirement.
     Completed { total_us: u64 },
+    /// Terminal marker: the client cancelled the request; wall µs from
+    /// enqueue to eviction (pages released, admission waiters notified).
+    Cancelled { total_us: u64 },
+    /// Terminal marker: the request's deadline expired while queued or
+    /// mid-flight; wall µs from enqueue to eviction.
+    DeadlineExpired { total_us: u64 },
 }
 
 impl PhaseEvent {
@@ -71,6 +77,8 @@ impl PhaseEvent {
             PhaseEvent::QuantFlush { .. } => "quant_flush",
             PhaseEvent::EvictLru { .. } => "evict_lru",
             PhaseEvent::Completed { .. } => "completed",
+            PhaseEvent::Cancelled { .. } => "cancelled",
+            PhaseEvent::DeadlineExpired { .. } => "deadline_expired",
         }
     }
 
@@ -83,7 +91,10 @@ impl PhaseEvent {
             | PhaseEvent::DraftCycle { us, .. }
             | PhaseEvent::Verify { us }
             | PhaseEvent::QuantFlush { us } => us,
-            PhaseEvent::EvictLru { .. } | PhaseEvent::Completed { .. } => 0,
+            PhaseEvent::EvictLru { .. }
+            | PhaseEvent::Completed { .. }
+            | PhaseEvent::Cancelled { .. }
+            | PhaseEvent::DeadlineExpired { .. } => 0,
         }
     }
 
@@ -99,6 +110,8 @@ impl PhaseEvent {
             PhaseEvent::QuantFlush { us } => (5, us, 0, 0),
             PhaseEvent::EvictLru { victim } => (6, victim, 0, 0),
             PhaseEvent::Completed { total_us } => (7, total_us, 0, 0),
+            PhaseEvent::Cancelled { total_us } => (8, total_us, 0, 0),
+            PhaseEvent::DeadlineExpired { total_us } => (9, total_us, 0, 0),
         }
     }
 
@@ -112,6 +125,8 @@ impl PhaseEvent {
             5 => PhaseEvent::QuantFlush { us: a },
             6 => PhaseEvent::EvictLru { victim: a },
             7 => PhaseEvent::Completed { total_us: a },
+            8 => PhaseEvent::Cancelled { total_us: a },
+            9 => PhaseEvent::DeadlineExpired { total_us: a },
             _ => return None,
         })
     }
@@ -135,7 +150,9 @@ impl PhaseEvent {
             PhaseEvent::EvictLru { victim } => {
                 pairs.push(("victim", Json::num(victim as f64)));
             }
-            PhaseEvent::Completed { total_us } => {
+            PhaseEvent::Completed { total_us }
+            | PhaseEvent::Cancelled { total_us }
+            | PhaseEvent::DeadlineExpired { total_us } => {
                 pairs.push(("total_us", Json::num(total_us as f64)));
             }
             _ => pairs.push(("us", Json::num(self.duration_us() as f64))),
@@ -415,7 +432,10 @@ pub fn record_phase_histograms(t: &RequestTimeline, metrics: &Registry) {
             }
             PhaseEvent::Verify { us } => verify.record_us(us as f64),
             PhaseEvent::QuantFlush { us } => flush.record_us(us as f64),
-            PhaseEvent::EvictLru { .. } | PhaseEvent::Completed { .. } => {}
+            PhaseEvent::EvictLru { .. }
+            | PhaseEvent::Completed { .. }
+            | PhaseEvent::Cancelled { .. }
+            | PhaseEvent::DeadlineExpired { .. } => {}
         }
     }
     if drafted_total > 0 {
@@ -440,6 +460,8 @@ mod tests {
             PhaseEvent::Verify { us: 31 },
             PhaseEvent::QuantFlush { us: 9 },
             PhaseEvent::EvictLru { victim: 7 },
+            PhaseEvent::Cancelled { total_us: 550 },
+            PhaseEvent::DeadlineExpired { total_us: 580 },
             PhaseEvent::Completed { total_us: 600 },
         ];
         for ev in evs {

@@ -2,7 +2,9 @@
 //!
 //! Serves the coordinator's JSON API: one thread per connection with
 //! keep-alive, enough of RFC 7230 for `curl` and the bundled client:
-//! request line + headers, Content-Length bodies, no chunked encoding.
+//! request line + headers, Content-Length bodies, and chunked
+//! Transfer-Encoding responses for handlers that stream ([`Response::
+//! chunked`] writes the head up front, then `write_chunk`/`finish`).
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Read, Write};
@@ -19,20 +21,85 @@ pub struct Request {
     pub body: Vec<u8>,
 }
 
-#[derive(Debug)]
+/// Streaming body writer handed to [`Response::chunked`] handlers. Each
+/// `write_chunk` goes on the wire immediately as one HTTP/1.1 chunk;
+/// `finish` sends the zero-length terminator (idempotent — the server
+/// also finishes on the handler's behalf if it forgot).
+pub struct ChunkWriter<'a> {
+    out: &'a mut dyn Write,
+    finished: bool,
+}
+
+impl ChunkWriter<'_> {
+    pub fn write_chunk(&mut self, data: &[u8]) -> std::io::Result<()> {
+        // an empty chunk IS the terminator on the wire, so skip it here
+        if data.is_empty() || self.finished {
+            return Ok(());
+        }
+        write!(self.out, "{:x}\r\n", data.len())?;
+        self.out.write_all(data)?;
+        self.out.write_all(b"\r\n")?;
+        self.out.flush()
+    }
+
+    pub fn finish(&mut self) -> std::io::Result<()> {
+        if self.finished {
+            return Ok(());
+        }
+        self.finished = true;
+        self.out.write_all(b"0\r\n\r\n")?;
+        self.out.flush()
+    }
+}
+
+type StreamFn = Box<dyn FnOnce(&mut ChunkWriter<'_>) -> std::io::Result<()> + Send>;
+
 pub struct Response {
     pub status: u16,
     pub content_type: &'static str,
     pub body: Vec<u8>,
+    stream: Option<StreamFn>,
+}
+
+impl std::fmt::Debug for Response {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Response")
+            .field("status", &self.status)
+            .field("content_type", &self.content_type)
+            .field("body", &self.body)
+            .field("chunked", &self.stream.is_some())
+            .finish()
+    }
 }
 
 impl Response {
     pub fn json(status: u16, body: impl Into<String>) -> Response {
-        Response { status, content_type: "application/json", body: body.into().into_bytes() }
+        Response {
+            status,
+            content_type: "application/json",
+            body: body.into().into_bytes(),
+            stream: None,
+        }
     }
 
     pub fn text(status: u16, body: impl Into<String>) -> Response {
-        Response { status, content_type: "text/plain", body: body.into().into_bytes() }
+        Response {
+            status,
+            content_type: "text/plain",
+            body: body.into().into_bytes(),
+            stream: None,
+        }
+    }
+
+    /// A `Transfer-Encoding: chunked` response: the head is written as
+    /// soon as the handler returns, then `f` streams the body through a
+    /// [`ChunkWriter`] on the connection thread.
+    pub fn chunked(
+        status: u16,
+        content_type: &'static str,
+        f: impl FnOnce(&mut ChunkWriter<'_>) -> std::io::Result<()> + Send + 'static,
+    ) -> Response {
+        Response { status, content_type, body: Vec::new(), stream: Some(Box::new(f)) }
     }
 
     fn status_text(status: u16) -> &'static str {
@@ -40,9 +107,12 @@ impl Response {
             200 => "OK",
             400 => "Bad Request",
             404 => "Not Found",
+            413 => "Payload Too Large",
             429 => "Too Many Requests",
+            499 => "Client Closed Request",
             500 => "Internal Server Error",
             503 => "Service Unavailable",
+            504 => "Gateway Timeout",
             _ => "Unknown",
         }
     }
@@ -114,16 +184,31 @@ fn serve_conn(stream: TcpStream, handler: Handler) -> std::io::Result<()> {
             .get("connection")
             .map_or(true, |v| !v.eq_ignore_ascii_case("close"));
         let resp = handler(&req);
-        let head = format!(
-            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
-            resp.status,
-            Response::status_text(resp.status),
-            resp.content_type,
-            resp.body.len(),
-            if keep_alive { "keep-alive" } else { "close" },
-        );
-        stream.write_all(head.as_bytes())?;
-        stream.write_all(&resp.body)?;
+        let conn = if keep_alive { "keep-alive" } else { "close" };
+        if let Some(stream_fn) = resp.stream {
+            let head = format!(
+                "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nTransfer-Encoding: chunked\r\nConnection: {}\r\n\r\n",
+                resp.status,
+                Response::status_text(resp.status),
+                resp.content_type,
+                conn,
+            );
+            stream.write_all(head.as_bytes())?;
+            let mut w = ChunkWriter { out: &mut stream, finished: false };
+            stream_fn(&mut w)?;
+            w.finish()?;
+        } else {
+            let head = format!(
+                "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+                resp.status,
+                Response::status_text(resp.status),
+                resp.content_type,
+                resp.body.len(),
+                conn,
+            );
+            stream.write_all(head.as_bytes())?;
+            stream.write_all(&resp.body)?;
+        }
         if !keep_alive {
             return Ok(());
         }
@@ -186,16 +271,45 @@ pub fn http_request(
         .and_then(|s| s.parse().ok())
         .unwrap_or(0);
     let mut len = 0usize;
+    let mut chunked = false;
     loop {
         let mut h = String::new();
         reader.read_line(&mut h)?;
-        let h = h.trim_end();
+        let h = h.trim_end().to_ascii_lowercase();
         if h.is_empty() {
             break;
         }
-        if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
+        if let Some(v) = h.strip_prefix("content-length:") {
             len = v.trim().parse().unwrap_or(0);
         }
+        if let Some(v) = h.strip_prefix("transfer-encoding:") {
+            chunked = v.trim() == "chunked";
+        }
+    }
+    if chunked {
+        let mut body = Vec::new();
+        loop {
+            let mut sz = String::new();
+            reader.read_line(&mut sz)?;
+            // a chunk-size line may carry ";ext" extensions — ignore them
+            let n = sz
+                .trim()
+                .split(';')
+                .next()
+                .and_then(|s| usize::from_str_radix(s.trim(), 16).ok())
+                .unwrap_or(0);
+            if n == 0 {
+                // consume the CRLF after the zero-length terminator
+                let mut crlf = String::new();
+                reader.read_line(&mut crlf)?;
+                break;
+            }
+            let mut chunk = vec![0u8; n + 2]; // data + trailing CRLF
+            reader.read_exact(&mut chunk)?;
+            chunk.truncate(n);
+            body.extend_from_slice(&chunk);
+        }
+        return Ok((status, body));
     }
     let mut body = vec![0u8; len];
     reader.read_exact(&mut body)?;
@@ -222,5 +336,62 @@ mod tests {
         assert_eq!(body, b"{\"x\":1}");
         let (st, _) = http_request(&addr, "GET", "/missing", b"").unwrap();
         assert_eq!(st, 404);
+    }
+
+    /// A chunked response round-trips through the blocking client: chunks
+    /// concatenate in order, empty chunks are skipped (never mistaken for
+    /// the terminator), and a double `finish` stays harmless.
+    #[test]
+    fn chunked_response_round_trips_through_the_client() {
+        let handler: Handler = Arc::new(|req: &Request| {
+            if req.path == "/stream" {
+                Response::chunked(200, "text/plain", |w| {
+                    w.write_chunk(b"hello ")?;
+                    w.write_chunk(b"")?; // skipped, not a terminator
+                    w.write_chunk(b"chunked ")?;
+                    w.write_chunk("world \u{1F980}".as_bytes())?;
+                    w.finish()?;
+                    w.finish()?; // idempotent
+                    w.write_chunk(b"ignored after finish")
+                })
+            } else {
+                Response::text(404, "nope")
+            }
+        });
+        let server = Server::start("127.0.0.1:0", handler).unwrap();
+        let addr = server.addr.to_string();
+        let (st, body) = http_request(&addr, "GET", "/stream", b"").unwrap();
+        assert_eq!(st, 200);
+        assert_eq!(String::from_utf8(body).unwrap(), "hello chunked world \u{1F980}");
+        // plain Content-Length responses still work on the same server
+        let (st, body) = http_request(&addr, "GET", "/other", b"").unwrap();
+        assert_eq!(st, 404);
+        assert_eq!(body, b"nope");
+    }
+
+    /// Large chunked bodies (bigger than any buffer boundary) survive the
+    /// hex-size framing intact.
+    #[test]
+    fn chunked_large_body_is_reassembled() {
+        let handler: Handler = Arc::new(|_req: &Request| {
+            Response::chunked(200, "application/octet-stream", |w| {
+                for i in 0..64u32 {
+                    let block = vec![i as u8; 1024 + i as usize];
+                    w.write_chunk(&block)?;
+                }
+                w.finish()
+            })
+        });
+        let server = Server::start("127.0.0.1:0", handler).unwrap();
+        let (st, body) = http_request(&server.addr.to_string(), "GET", "/", b"").unwrap();
+        assert_eq!(st, 200);
+        let want: usize = (0..64usize).map(|i| 1024 + i).sum();
+        assert_eq!(body.len(), want);
+        let mut off = 0usize;
+        for i in 0..64usize {
+            let n = 1024 + i;
+            assert!(body[off..off + n].iter().all(|&b| b == i as u8), "chunk {i} corrupt");
+            off += n;
+        }
     }
 }

@@ -14,6 +14,18 @@
 //! * [`WaitGroup`] + [`PoolHandle::scoped_submit`] — caller-scoped: each
 //!   producer waits for exactly the jobs it submitted, so concurrent
 //!   sessions never block on each other's work.
+//!
+//! Two pool shapes share those scopes:
+//! * [`ThreadPool`] — one FIFO queue, workers race to pop (the shared
+//!   quantization pool, per-batcher step pools);
+//! * [`StealPool`] — per-worker deques with work stealing: submissions
+//!   round-robin across workers, an idle worker drains its own deque front
+//!   first and then steals from the *back* of a victim's, so the
+//!   process-wide scheduler pool (threads `qs-sched-*`) keeps every core
+//!   busy even when one engine's sessions dominate the queue.
+//!
+//! [`ScopedSpawn`] abstracts over both handles so the step batcher can fan
+//! a round over whichever pool the coordinator wired in.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -102,6 +114,26 @@ impl PoolHandle {
     /// Jobs queued but not yet picked up (instantaneous gauge).
     pub fn queue_depth(&self) -> usize {
         self.inner.queue_depth()
+    }
+}
+
+/// Common scoped-submission surface over [`PoolHandle`] (one FIFO queue)
+/// and [`StealHandle`] (stealing deques), so round dispatch is written once
+/// against `&dyn ScopedSpawn`.
+pub trait ScopedSpawn: Send + Sync {
+    /// Submit a boxed job tracked by `wg` (see [`PoolHandle::scoped_submit`]).
+    fn spawn_scoped(&self, wg: &WaitGroup, job: Box<dyn FnOnce() + Send + 'static>);
+    /// Worker threads behind this handle.
+    fn workers(&self) -> usize;
+}
+
+impl ScopedSpawn for PoolHandle {
+    fn spawn_scoped(&self, wg: &WaitGroup, job: Box<dyn FnOnce() + Send + 'static>) {
+        self.scoped_submit(wg, job);
+    }
+
+    fn workers(&self) -> usize {
+        self.size()
     }
 }
 
@@ -232,6 +264,221 @@ impl Drop for ThreadPool {
     }
 }
 
+struct StealState {
+    /// One deque per worker. Submissions round-robin across them; worker
+    /// `i` pops its own front (FIFO for its share) and steals from the
+    /// *back* of a victim's deque, so a thief takes the coldest job.
+    queues: Vec<VecDeque<Job>>,
+    rr: usize,
+    pending: usize,
+    closed: bool,
+}
+
+struct StealInner {
+    state: Mutex<StealState>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+    executed: AtomicUsize,
+    steals: AtomicUsize,
+    size: usize,
+}
+
+impl StealInner {
+    fn submit(&self, job: Job) {
+        {
+            let mut s = self.state.lock().unwrap();
+            assert!(!s.closed, "pool shut down");
+            s.pending += 1;
+            let slot = s.rr;
+            s.rr = (s.rr + 1) % self.size;
+            s.queues[slot].push_back(job);
+        }
+        // Any worker may take it (own pop or steal), so one wake suffices.
+        self.work_cv.notify_one();
+    }
+
+    fn queue_depth(&self) -> usize {
+        self.state.lock().unwrap().queues.iter().map(VecDeque::len).sum()
+    }
+}
+
+/// A `Sync`, cloneable submission handle onto a [`StealPool`]. Same
+/// contract as [`PoolHandle`]: cheap to clone, panics if used after the
+/// owning pool dropped.
+#[derive(Clone)]
+pub struct StealHandle {
+    inner: Arc<StealInner>,
+}
+
+impl StealHandle {
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.inner.submit(Box::new(f));
+    }
+
+    /// Submit a job tracked by `wg` — caller-scoped completion, exactly as
+    /// [`PoolHandle::scoped_submit`].
+    pub fn scoped_submit<F: FnOnce() + Send + 'static>(&self, wg: &WaitGroup, f: F) {
+        *wg.inner.0.lock().unwrap() += 1;
+        let wg = Arc::clone(&wg.inner);
+        self.inner.submit(Box::new(move || {
+            f();
+            let (lock, cv) = &*wg;
+            let mut n = lock.lock().unwrap();
+            *n -= 1;
+            if *n == 0 {
+                cv.notify_all();
+            }
+        }));
+    }
+
+    pub fn size(&self) -> usize {
+        self.inner.size
+    }
+
+    pub fn jobs_executed(&self) -> usize {
+        self.inner.executed.load(Ordering::Relaxed)
+    }
+
+    /// Jobs a worker took from another worker's deque (lifetime counter).
+    /// Nonzero under imbalanced load is the pool doing its job.
+    pub fn steals(&self) -> usize {
+        self.inner.steals.load(Ordering::Relaxed)
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.inner.queue_depth()
+    }
+}
+
+impl ScopedSpawn for StealHandle {
+    fn spawn_scoped(&self, wg: &WaitGroup, job: Box<dyn FnOnce() + Send + 'static>) {
+        self.scoped_submit(wg, job);
+    }
+
+    fn workers(&self) -> usize {
+        self.size()
+    }
+}
+
+/// Work-stealing worker pool: the process-wide step pool behind the
+/// cross-engine scheduler. Deques live under one mutex (critical sections
+/// are O(1) pops/pushes; this codebase is std-only, no lock-free deques),
+/// which keeps the stealing logic auditable while still removing the
+/// head-of-line blocking a single FIFO queue imposes on uneven producers.
+pub struct StealPool {
+    inner: Arc<StealInner>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl StealPool {
+    /// A stealing pool whose worker threads are named `{name}-{i}` (the
+    /// scheduler names its pool `qs-sched`).
+    pub fn named(threads: usize, name: &str) -> Self {
+        let threads = threads.max(1);
+        let inner = Arc::new(StealInner {
+            state: Mutex::new(StealState {
+                queues: (0..threads).map(|_| VecDeque::new()).collect(),
+                rr: 0,
+                pending: 0,
+                closed: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            executed: AtomicUsize::new(0),
+            steals: AtomicUsize::new(0),
+            size: threads,
+        });
+        let workers = (0..threads)
+            .map(|i| {
+                let inner = Arc::clone(&inner);
+                thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || steal_worker_loop(&inner, i))
+                    .expect("spawn steal worker")
+            })
+            .collect();
+        StealPool { inner, workers }
+    }
+
+    pub fn handle(&self) -> StealHandle {
+        StealHandle { inner: Arc::clone(&self.inner) }
+    }
+
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.inner.submit(Box::new(f));
+    }
+
+    /// Block until every submitted job (from every producer) has completed.
+    pub fn join(&self) {
+        let mut s = self.inner.state.lock().unwrap();
+        while s.pending > 0 {
+            s = self.inner.done_cv.wait(s).unwrap();
+        }
+    }
+
+    pub fn jobs_executed(&self) -> usize {
+        self.inner.executed.load(Ordering::Relaxed)
+    }
+
+    pub fn steals(&self) -> usize {
+        self.inner.steals.load(Ordering::Relaxed)
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.inner.queue_depth()
+    }
+
+    pub fn size(&self) -> usize {
+        self.inner.size
+    }
+}
+
+fn steal_worker_loop(inner: &StealInner, me: usize) {
+    loop {
+        let job = {
+            let mut s = inner.state.lock().unwrap();
+            loop {
+                // Own deque first (front: FIFO for this worker's share)...
+                if let Some(j) = s.queues[me].pop_front() {
+                    break Some(j);
+                }
+                // ...then steal the coldest job off a victim's back.
+                let n = inner.size;
+                let stolen = (1..n)
+                    .map(|d| (me + d) % n)
+                    .find_map(|v| s.queues[v].pop_back());
+                if let Some(j) = stolen {
+                    inner.steals.fetch_add(1, Ordering::Relaxed);
+                    break Some(j);
+                }
+                // Drain everything queued before honoring shutdown.
+                if s.closed {
+                    break None;
+                }
+                s = inner.work_cv.wait(s).unwrap();
+            }
+        };
+        let Some(job) = job else { break };
+        job();
+        inner.executed.fetch_add(1, Ordering::Relaxed);
+        let mut s = inner.state.lock().unwrap();
+        s.pending -= 1;
+        if s.pending == 0 {
+            inner.done_cv.notify_all();
+        }
+    }
+}
+
+impl Drop for StealPool {
+    fn drop(&mut self) {
+        self.inner.state.lock().unwrap().closed = true;
+        self.inner.work_cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -351,5 +598,90 @@ mod tests {
         assert_eq!(pool.jobs_executed(), 100, "one shared executed counter");
         assert_eq!(pool.size(), 3, "no extra pools spawned");
         assert_eq!(pool.queue_depth(), 0);
+    }
+
+    #[test]
+    fn steal_pool_runs_all_jobs() {
+        let pool = StealPool::named(4, "qs-sched");
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+        assert_eq!(pool.jobs_executed(), 100);
+        assert_eq!(pool.queue_depth(), 0);
+        assert_eq!(pool.size(), 4);
+    }
+
+    /// Imbalanced load forces stealing: one worker's deque is pinned behind
+    /// a gated job while the rest of its round-robin share sits queued, so
+    /// idle workers must steal those jobs for the fast group to drain.
+    #[test]
+    fn idle_steal_workers_drain_a_blocked_peers_deque() {
+        let pool = StealPool::named(2, "qs-sched");
+        let h = pool.handle();
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let wg_slow = WaitGroup::new();
+        {
+            let gate = Arc::clone(&gate);
+            h.scoped_submit(&wg_slow, move || {
+                let (lock, cv) = &*gate;
+                let mut open = lock.lock().unwrap();
+                while !*open {
+                    open = cv.wait(open).unwrap();
+                }
+            });
+        }
+        // Round-robin puts half of these behind the gated job's deque; the
+        // free worker must steal them or wg_fast.wait() deadlocks.
+        let wg_fast = WaitGroup::new();
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..16 {
+            let c = Arc::clone(&counter);
+            h.scoped_submit(&wg_fast, move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        wg_fast.wait();
+        assert_eq!(counter.load(Ordering::SeqCst), 16);
+        assert!(h.steals() > 0, "blocked peer's jobs were stolen");
+        {
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        wg_slow.wait();
+        pool.join();
+        assert_eq!(pool.jobs_executed(), 17);
+    }
+
+    /// Both handle types drive the same generic dispatch path.
+    #[test]
+    fn scoped_spawn_is_object_safe_over_both_pools() {
+        let fifo = ThreadPool::new(2);
+        let steal = StealPool::named(2, "qs-sched");
+        let fifo_h = fifo.handle();
+        let steal_h = steal.handle();
+        let handles: Vec<&dyn ScopedSpawn> = vec![&fifo_h, &steal_h];
+        let counter = Arc::new(AtomicUsize::new(0));
+        for h in handles {
+            assert_eq!(h.workers(), 2);
+            let wg = WaitGroup::new();
+            for _ in 0..10 {
+                let c = Arc::clone(&counter);
+                h.spawn_scoped(
+                    &wg,
+                    Box::new(move || {
+                        c.fetch_add(1, Ordering::SeqCst);
+                    }),
+                );
+            }
+            wg.wait();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 20);
     }
 }
