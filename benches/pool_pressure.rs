@@ -9,7 +9,10 @@
 //! stay within 1.05x of untraced, bit-identically), and the
 //! oversubscription phase (engines × step_workers = 2× cores on an
 //! imbalanced fleet: ONE shared work-stealing pool must beat per-engine
-//! pools ≥ 1.2x on aggregate round throughput, bit-identically) —
+//! pools ≥ 1.2x on aggregate round throughput, bit-identically), and the
+//! tiering phase (equal arena budget, identical pressure: the cold-tier
+//! path must retain ≥ 2× the KV the evicting baseline keeps, readable
+//! bit-identically through fault-back, with decode token parity) —
 //! reported alongside the Figure 6 KV-memory numbers the pool exists to
 //! manage. Emits `BENCH_pool_pressure.json` (checked by CI's
 //! `bench-smoke` jq gate).
@@ -724,6 +727,153 @@ fn main() {
     to.print("oversubscription — one stealing pool vs per-engine step pools");
     let _ = to.write_csv("bench_out/pool_pressure_oversub.csv");
 
+    // --- phase 7: tiering — retained KV under pressure, spill vs evict ---
+    // Equal arena budget, identical workload: idle prefix caches + decode
+    // sessions whose admissions overflow the watermarks. Without a cold
+    // tier, reclaim can only EVICT the idle caches — their KV is destroyed
+    // and a resume would re-prefill. With tiering, reclaim spills them
+    // page-granularly and hibernates the stragglers: every idle cache's
+    // KV survives, readable bit-identically through fault-back, and the
+    // decoders' token streams are unchanged. Gates (deterministic, always
+    // enforced): retention ratio ≥ 2× and token parity.
+    let run_tiering = |spill: bool| -> (usize, u64, Vec<(u64, Vec<i32>)>) {
+        let spill_dir = std::env::temp_dir()
+            .join(format!("qs-bench-tiering-{}-{spill}", std::process::id()));
+        let mgr = pool::shared(PoolConfig {
+            pages: pool_pages,
+            page_tokens: G,
+            kv_dim: D,
+            high_watermark: 0.9,
+            low_watermark: 0.7,
+            spill_pages: if spill { 4 * pool_pages } else { 0 },
+            spill_dir: spill_dir.to_string_lossy().into_owned(),
+            ..PoolConfig::default()
+        })
+        .expect("pool config valid");
+        // idle preemptable prefix caches — handles kept for read-back
+        let mut idles: Vec<(u64, PagedKvCache, Vec<Vec<f32>>)> = Vec::new();
+        for i in 0..IDLE_SESSIONS {
+            let id = 2000 + i;
+            assert_eq!(
+                mgr.lock().unwrap().admit(id, 8, true).unwrap(),
+                AdmitOutcome::Admitted
+            );
+            let mut cache = PagedKvCache::new(mgr.clone(), id, G, D, fb, 5 * G).unwrap();
+            cache.prefill(4 * G, &|p| pool::mock_kv(p, id as i32, D)).unwrap();
+            let want: Vec<Vec<f32>> =
+                (0..4 * G).map(|p| cache.read_token(p, true).unwrap()).collect();
+            idles.push((id, cache, want));
+        }
+        // decode sessions competing for the remainder (phase-2 shape)
+        let mut pending: Vec<u64> = (1..=DECODE_SESSIONS).collect();
+        let mut b = StepBatcher::new(4);
+        let mut toks: Vec<(u64, Vec<i32>)> = Vec::new();
+        while !pending.is_empty() || b.active_len() > 0 {
+            let mut i = 0;
+            while b.has_capacity() && i < pending.len() {
+                let id = pending[i];
+                match mgr.lock().unwrap().admit(id, pages_per_req, false).unwrap() {
+                    AdmitOutcome::Admitted => {
+                        pending.remove(i);
+                        let dec = MockDecoder::with_pool(
+                            MOCK_VOCAB,
+                            MOCK_GAMMA_MAX,
+                            0.15,
+                            mgr.clone(),
+                            id,
+                            cap_tokens,
+                        )
+                        .unwrap();
+                        let prompt = workload::prompt(id, PROMPT, Profile::Pg19);
+                        let sess = ActiveSession::admit(
+                            id,
+                            Box::new(dec),
+                            Sampler::new(0.0, id),
+                            4,
+                            &prompt,
+                            MAX_NEW,
+                        )
+                        .unwrap();
+                        b.admit(sess).unwrap();
+                    }
+                    AdmitOutcome::Saturated => i += 1,
+                    AdmitOutcome::TooLarge => unreachable!("sized within the plan"),
+                }
+            }
+            if b.active_len() == 0 {
+                continue;
+            }
+            b.round().unwrap();
+            for s in b.finished.drain(..) {
+                toks.push((s.id, s.tokens.clone()));
+                mgr.lock().unwrap().release(s.id);
+            }
+        }
+        toks.sort_by_key(|(id, _)| *id);
+        // retained KV: prefix tokens still readable bit-identically —
+        // spilled pages fault back transparently, evicted shards error
+        let mut retained = 0usize;
+        for (_, cache, want) in &idles {
+            for (p, w) in want.iter().enumerate() {
+                if cache.read_token(p, true).ok().as_ref() == Some(w) {
+                    retained += 1;
+                }
+            }
+        }
+        let (evictions, spilled_now) = {
+            let m = mgr.lock().unwrap();
+            m.check_integrity().unwrap();
+            (m.evictions(), m.tier_stats().spilled_pages)
+        };
+        if spill {
+            let faults = mgr.lock().unwrap().tier_stats().restore_faults;
+            assert!(faults > 0, "tiered read-back must fault pages in from the cold tier");
+        } else {
+            assert_eq!(spilled_now, 0, "no cold tier in the baseline run");
+        }
+        for (id, _, _) in &idles {
+            mgr.lock().unwrap().release(*id);
+        }
+        (retained, evictions, toks)
+    };
+    let (base_retained, base_evictions, base_decode_toks) = run_tiering(false);
+    let (tier_retained, tier_evictions, tier_decode_toks) = run_tiering(true);
+    assert!(
+        base_evictions >= 1,
+        "baseline pressure never evicted — the phase is not exercising reclaim"
+    );
+    assert_eq!(tier_evictions, 0, "tiering must reclaim by spilling, not evicting");
+    let tokens_identical = base_decode_toks == tier_decode_toks;
+    assert!(tokens_identical, "tiering changed decode outputs");
+    let retention_ratio = tier_retained as f64 / (base_retained.max(1)) as f64;
+    assert!(
+        retention_ratio >= 2.0,
+        "tiered path retained only {retention_ratio:.2}x the baseline's KV \
+         ({tier_retained} vs {base_retained} tokens; gate: 2x)"
+    );
+    let mut tr = Table::new(&[
+        "arena_pages",
+        "idle_caches",
+        "baseline_retained",
+        "tiered_retained",
+        "retention_ratio",
+        "baseline_evictions",
+        "tiered_evictions",
+        "gate",
+    ]);
+    tr.row(&[
+        pool_pages.to_string(),
+        IDLE_SESSIONS.to_string(),
+        base_retained.to_string(),
+        tier_retained.to_string(),
+        format!("{retention_ratio:.2}x"),
+        base_evictions.to_string(),
+        tier_evictions.to_string(),
+        ">=2x".to_string(),
+    ]);
+    tr.print("tiering — KV retained under pressure: cold-tier spill vs eviction");
+    let _ = tr.write_csv("bench_out/pool_pressure_tiering.csv");
+
     let json = Json::obj(vec![
         (
             "pool",
@@ -770,6 +920,21 @@ fn main() {
                 ("speedup", Json::num(oversub_speedup)),
                 ("steals", Json::num(ov_steals as f64)),
                 ("gate_enforced", Json::Bool(gate_enforced)),
+            ]),
+        ),
+        (
+            "tiering",
+            Json::obj(vec![
+                ("arena_pages", Json::num(pool_pages as f64)),
+                ("idle_sessions", Json::num(IDLE_SESSIONS as f64)),
+                ("decode_sessions", Json::num(DECODE_SESSIONS as f64)),
+                ("baseline_retained_tokens", Json::num(base_retained as f64)),
+                ("tiered_retained_tokens", Json::num(tier_retained as f64)),
+                ("retention_ratio", Json::num(retention_ratio)),
+                ("baseline_evictions", Json::num(base_evictions as f64)),
+                ("tiered_evictions", Json::num(tier_evictions as f64)),
+                ("tokens_identical", Json::Bool(tokens_identical)),
+                ("gate_enforced", Json::Bool(true)),
             ]),
         ),
         (

@@ -167,6 +167,11 @@ pub struct ServeConfig {
     pub trace_buffer_events: usize,
     /// Completed request timelines the flight recorder ring retains.
     pub flight_recorder_requests: usize,
+    /// Hibernate sessions idle longer than this many milliseconds: their
+    /// pages move to the cold tier (spill store) and fault back
+    /// bit-identically on the next touch — no re-prefill. 0 disables the
+    /// sweep. Requires `pool.spill_pages > 0` to have any effect.
+    pub hibernate_idle_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -195,6 +200,7 @@ impl Default for ServeConfig {
             trace_enabled: true,
             trace_buffer_events: 4096,
             flight_recorder_requests: 64,
+            hibernate_idle_ms: 0,
         }
     }
 }
@@ -288,6 +294,9 @@ impl ServeConfig {
         if let Some(v) = j.get("flight_recorder_requests").and_then(Json::as_usize) {
             c.flight_recorder_requests = v;
         }
+        if let Some(v) = j.get("hibernate_idle_ms").and_then(Json::as_usize) {
+            c.hibernate_idle_ms = v as u64;
+        }
         if let Some(p) = j.get("pool") {
             if let Some(v) = p.get("pages").and_then(Json::as_usize) {
                 c.pool.pages = v;
@@ -311,6 +320,17 @@ impl ServeConfig {
                 // 0 must surface as a startup error from the session
                 // manager, not be silently bumped.
                 c.pool.quant_workers = v;
+            }
+            if let Some(v) = p.get("spill_pages").and_then(Json::as_usize) {
+                // Cold-tier capacity in pages; 0 (the default) disables
+                // tiering entirely — no spill store is created.
+                c.pool.spill_pages = v;
+            }
+            if let Some(v) = p.get("spill_dir").and_then(Json::as_str) {
+                c.pool.spill_dir = v.to_string();
+            }
+            if let Some(v) = p.get("fetch_ahead").and_then(Json::as_bool) {
+                c.pool.fetch_ahead = v;
             }
             if c.pool.low_watermark > c.pool.high_watermark {
                 c.pool.low_watermark = c.pool.high_watermark;
@@ -480,6 +500,26 @@ mod tests {
         assert_eq!(c.pool.quant_workers, 6);
         // default is serial quantization
         assert_eq!(ServeConfig::default().pool.quant_workers, 1);
+    }
+
+    #[test]
+    fn tier_knobs_from_json() {
+        let d = ServeConfig::default();
+        assert_eq!(d.pool.spill_pages, 0, "tiering off by default");
+        assert_eq!(d.pool.spill_dir, "");
+        assert!(d.pool.fetch_ahead, "fetch-ahead on once tiering is enabled");
+        assert_eq!(d.hibernate_idle_ms, 0, "no idle sweep by default");
+        let j = Json::parse(
+            r#"{"hibernate_idle_ms":2500,
+                "pool":{"pages":64,"spill_pages":512,"spill_dir":"/tmp/qs",
+                        "fetch_ahead":false}}"#,
+        )
+        .unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.hibernate_idle_ms, 2500);
+        assert_eq!(c.pool.spill_pages, 512);
+        assert_eq!(c.pool.spill_dir, "/tmp/qs");
+        assert!(!c.pool.fetch_ahead);
     }
 
     #[test]

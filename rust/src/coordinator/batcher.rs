@@ -929,9 +929,9 @@ mod tests {
         assert_eq!(b.last_step_workers_busy(), 2);
         assert!(b.last_round_span_us() > 0.0);
         let m = mgr.lock().unwrap();
-        let (workers, busy, span, rounds) = m.round_stats();
-        assert_eq!((workers, busy, rounds), (2, 2, 1));
-        assert!(span > 0.0);
+        let s = m.snapshot();
+        assert_eq!((s.step_workers, s.step_workers_busy, s.rounds), (2, 2, 1));
+        assert!(s.round_span_us > 0.0);
         let js = m.stats_json().to_string();
         assert!(js.contains("\"round_span_us\""), "{js}");
         assert!(js.contains("\"step_workers\""), "{js}");
@@ -1295,6 +1295,7 @@ mod tests {
                 high_watermark: 1.0,
                 low_watermark: 1.0,
                 quant_workers: 2,
+                ..PoolConfig::default()
             })
             .unwrap();
             // deterministic backpressure: pressure on 2 of every 5 probes,

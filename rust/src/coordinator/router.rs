@@ -340,37 +340,45 @@ impl Drop for Coordinator {
 }
 
 pub(crate) fn sync_pool_gauges(mgr: &SharedSessionManager, metrics: &Registry) {
-    let m = mgr.lock().unwrap();
-    metrics.set_gauge("pool_pages_capacity", m.pool().capacity() as f64);
-    metrics.set_gauge("pool_pages_in_use", m.pool().pages_in_use() as f64);
-    metrics.set_gauge("pool_pages_peak", m.pool().peak_pages_in_use() as f64);
-    metrics.set_gauge("pool_pressure", m.pool().pressure());
-    metrics.set_gauge("pool_sessions_active", m.active_sessions() as f64);
-    metrics.set_gauge("pool_evictions", m.evictions() as f64);
+    // ONE manager lock per scrape: everything below reads the snapshot.
+    let s = mgr.lock().unwrap().snapshot();
+    metrics.set_gauge("pool_pages_capacity", s.pages_capacity as f64);
+    metrics.set_gauge("pool_pages_in_use", s.pages_in_use as f64);
+    metrics.set_gauge("pool_pages_peak", s.pages_peak as f64);
+    metrics.set_gauge("pool_pressure", s.pressure);
+    metrics.set_gauge("pool_sessions_active", s.sessions_active as f64);
+    metrics.set_gauge("pool_evictions", s.evictions as f64);
     // quantized-cache read traffic, split draft (INT4) vs target (INT8)
-    let t = m.traffic();
+    let t = s.traffic;
     metrics.set_gauge(names::DEQUANT_CALLS_DRAFT, t.dequant_calls_draft as f64);
     metrics.set_gauge(names::DEQUANT_CALLS_TARGET, t.dequant_calls_target as f64);
     metrics.set_gauge(names::QUANT_BYTES_READ_DRAFT, t.bytes_read_draft as f64);
     metrics.set_gauge(names::QUANT_BYTES_READ_TARGET, t.bytes_read_target as f64);
     // the process-wide shared quantization pool (one per coordinator)
-    let (q_workers, q_jobs, q_depth) = m.quant_pool_stats();
-    metrics.set_gauge(names::QUANT_POOL_WORKERS, q_workers as f64);
-    metrics.set_gauge(names::QUANT_POOL_JOBS, q_jobs as f64);
-    metrics.set_gauge(names::QUANT_POOL_QUEUE_DEPTH, q_depth as f64);
+    metrics.set_gauge(names::QUANT_POOL_WORKERS, s.quant_workers as f64);
+    metrics.set_gauge(names::QUANT_POOL_JOBS, s.quant_jobs as f64);
+    metrics.set_gauge(names::QUANT_POOL_QUEUE_DEPTH, s.quant_queue_depth as f64);
     // prefill chunks deferred under quant-pool backpressure
-    metrics.set_gauge(names::PREFILL_DEFERRALS, m.prefill_deferrals() as f64);
+    metrics.set_gauge(names::PREFILL_DEFERRALS, s.prefill_deferrals as f64);
     // round-parallelism telemetry recorded by the engines' batchers
-    let (workers, busy, span_us, rounds) = m.round_stats();
-    metrics.set_gauge(names::STEP_WORKERS, workers as f64);
-    metrics.set_gauge(names::STEP_WORKERS_BUSY, busy as f64);
-    metrics.set_gauge(names::ROUND_SPAN_US, span_us);
-    metrics.set_gauge(names::BATCHER_ROUNDS, rounds as f64);
+    metrics.set_gauge(names::STEP_WORKERS, s.step_workers as f64);
+    metrics.set_gauge(names::STEP_WORKERS_BUSY, s.step_workers_busy as f64);
+    metrics.set_gauge(names::ROUND_SPAN_US, s.round_span_us);
+    metrics.set_gauge(names::BATCHER_ROUNDS, s.rounds as f64);
     // cumulative per-phase round time (prefill vs decode vs quant-wait)
-    let phases = m.round_phase_totals();
-    metrics.set_gauge(names::ROUND_PREFILL_US, phases.prefill_us);
-    metrics.set_gauge(names::ROUND_DECODE_US, phases.decode_us);
-    metrics.set_gauge(names::ROUND_QUANT_WAIT_US, phases.quant_wait_us);
+    metrics.set_gauge(names::ROUND_PREFILL_US, s.round_phases.prefill_us);
+    metrics.set_gauge(names::ROUND_DECODE_US, s.round_phases.decode_us);
+    metrics.set_gauge(names::ROUND_QUANT_WAIT_US, s.round_phases.quant_wait_us);
+    // the tier hierarchy: hot/warm residency, cold-tier traffic,
+    // hibernation (gauges are harmless zeros when tiering is off)
+    metrics.set_gauge(names::TIER_HOT_PAGES, s.tier_hot_pages as f64);
+    metrics.set_gauge(names::TIER_WARM_PAGES, s.tier_warm_pages as f64);
+    metrics.set_gauge(names::TIER_SPILLED_PAGES, s.tier.spilled_pages as f64);
+    metrics.set_gauge(names::SPILL_BYTES_WRITTEN, s.tier.spill_bytes_written as f64);
+    metrics.set_gauge(names::RESTORE_FAULTS, s.tier.restore_faults as f64);
+    metrics.set_gauge(names::FETCH_AHEAD_HITS, s.tier.fetch_ahead_hits as f64);
+    metrics.set_gauge(names::HIBERNATED_SESSIONS, s.hibernated_sessions as f64);
+    metrics.set_gauge(names::SESSIONS_HIBERNATED_TOTAL, s.tier.hibernations as f64);
 }
 
 /// Pool geometry plan for one mock request. Reservation (admission) and
@@ -787,6 +795,7 @@ mod tests {
                 high_watermark: 1.0,
                 low_watermark: 1.0,
                 quant_workers: 2,
+                ..crate::pool::PoolConfig::default()
             },
             ..ServeConfig::default()
         };

@@ -545,6 +545,30 @@ pub(crate) fn scheduler_loop(
                 "{DEADLINE_PREFIX}request {id} exceeded its deadline mid-flight"
             )));
         }
+        // ---- idle-hibernation sweep -------------------------------------
+        // Sessions the batcher is actively driving are touched every round,
+        // so only sessions the scheduler is NOT stepping (admitted to the
+        // pool but stalled, e.g. parked by an embedder or starved behind
+        // sustained backpressure) age past the idle knob and move to the
+        // cold tier. Hibernation is lossless: the shard faults back
+        // bit-identically on its next touch, no re-prefill.
+        if cfg.hibernate_idle_ms > 0 {
+            if let Some(mgr) = &pool {
+                let hibernated = {
+                    let mut m = mgr.lock().unwrap();
+                    for s in batcher.active_sessions() {
+                        m.touch(s.id);
+                    }
+                    m.hibernate_idle(Duration::from_millis(cfg.hibernate_idle_ms))
+                };
+                if hibernated > 0 {
+                    // Spilled shards freed arena pages: refresh the gauges
+                    // and wake any admission waiter parked on Saturated.
+                    sync_pool_gauges(mgr, &metrics);
+                    shared.cv.notify_all();
+                }
+            }
+        }
         // ---- round telemetry --------------------------------------------
         // With a pool, the manager snapshot (note_round → sync_pool_gauges)
         // is the ONE writer of the step/round gauges; only unpooled
@@ -1020,6 +1044,76 @@ mod tests {
         assert_eq!(m.pool().pages_in_use(), 0);
         assert_eq!(m.cancellations(), 1);
         m.check_integrity().unwrap();
+    }
+
+    /// The scheduler's idle sweep (`hibernate_idle_ms`) moves a pool
+    /// session the batcher is NOT driving to the cold tier, while the
+    /// actively-decoding request — touched every round — is spared. The
+    /// cold session's KV then faults back bit-identically on its next
+    /// read: hibernate/resume with no re-prefill and no eviction.
+    #[test]
+    fn idle_sweep_hibernates_stalled_sessions_but_spares_active_ones() {
+        use crate::pool::{mock_kv, AdmitOutcome, PagedKvCache};
+        let dir = std::env::temp_dir()
+            .join(format!("qs-idle-sweep-{}", std::process::id()));
+        let cfg = ServeConfig {
+            engines: 1,
+            queue_capacity: 64,
+            max_new_tokens: 64,
+            prefill_chunk_tokens: 8,
+            hibernate_idle_ms: 1,
+            pool: PoolConfig {
+                pages: 1024,
+                page_tokens: 8,
+                kv_dim: 2,
+                high_watermark: 0.9,
+                low_watermark: 0.7,
+                spill_pages: 256,
+                spill_dir: dir.to_string_lossy().into_owned(),
+                ..PoolConfig::default()
+            },
+            ..ServeConfig::default()
+        };
+        let c = Coordinator::with_mock(cfg, 0.2).unwrap();
+        let mgr = c.pool().expect("pooled").clone();
+        // A "stalled" session the scheduler never steps: admitted into the
+        // pool with real KV but never entering the batcher.
+        const IDLE: u64 = 9001;
+        assert!(matches!(
+            mgr.lock().unwrap().admit(IDLE, 8, false).unwrap(),
+            AdmitOutcome::Admitted
+        ));
+        let mut idle = PagedKvCache::new(mgr.clone(), IDLE, 8, 2, 16, 32).unwrap();
+        idle.prefill(16, &|p| mock_kv(p, 7, 2)).unwrap();
+        let want: Vec<Vec<f32>> =
+            (0..16).map(|p| idle.read_token(p, true).unwrap()).collect();
+        // Real requests keep scheduler rounds (and the sweep) ticking well
+        // past the 1 ms knob; bounded retries absorb a fast host.
+        let mut hibernations = 0;
+        for i in 0..50 {
+            let out = c.generate(req(100 + i, 3000, None)).unwrap();
+            assert_eq!(out.tokens.len(), 24);
+            hibernations = mgr.lock().unwrap().tier_stats().hibernations;
+            if hibernations >= 1 {
+                break;
+            }
+        }
+        assert!(hibernations >= 1, "idle session never swept to the cold tier");
+        {
+            let m = mgr.lock().unwrap();
+            assert_eq!(m.hibernated_sessions(), 1, "only the stalled session");
+            assert_eq!(m.snapshot().evictions, 0, "hibernation, not eviction");
+        }
+        // Fault-back on read: bit-identical KV, counted as restore faults.
+        for (p, w) in want.iter().enumerate() {
+            assert_eq!(&idle.read_token(p, true).unwrap(), w, "token {p}");
+        }
+        let m = mgr.lock().unwrap();
+        assert!(m.tier_stats().restore_faults > 0, "resume faulted pages back");
+        assert_eq!(m.hibernated_sessions(), 0, "session is warm again");
+        drop(m);
+        idle.release();
+        mgr.lock().unwrap().check_integrity().unwrap();
     }
 
     /// DRR starvation bound, property-tested under adversarial bursty

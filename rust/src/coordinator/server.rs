@@ -538,6 +538,114 @@ mod tests {
         assert_eq!(st, 400);
     }
 
+    /// Acceptance (tentpole): a session hibernated under admission
+    /// pressure resumes bit-identically WITHOUT re-prefill, end-to-end
+    /// over HTTP. Request A prefills, then B arrives needing pages the
+    /// pool cannot hold alongside A: admission reclaims A page-granularly
+    /// and escalates to whole-shard hibernation (low watermark sized so
+    /// spilling quant pages alone cannot satisfy it). A faults its KV
+    /// back from the cold tier mid-decode and its token stream matches a
+    /// pressure-free baseline run exactly — zero evictions, so the
+    /// recovery was spill/restore, never a destructive re-prefill.
+    #[test]
+    fn hibernated_session_resumes_bit_identically_over_http() {
+        use super::super::router::pool_plan;
+        use crate::metrics::names;
+        const PROMPT_A: usize = 3000;
+        const DECODE_A: usize = 256;
+        let base = ServeConfig {
+            engines: 1,
+            queue_capacity: 64,
+            max_new_tokens: DECODE_A,
+            prefill_chunk_tokens: 8,
+            pool: crate::pool::PoolConfig {
+                pages: 1, // sized below
+                page_tokens: 8,
+                kv_dim: 2,
+                high_watermark: 0.9,
+                low_watermark: 0.1,
+                ..crate::pool::PoolConfig::default()
+            },
+            ..ServeConfig::default()
+        };
+        let plan = pool_plan(&base, PROMPT_A, DECODE_A).pages;
+        let prompt_a = "a".repeat(PROMPT_A);
+        let body_a =
+            format!(r#"{{"prompt":"{prompt_a}","max_new_tokens":{DECODE_A}}}"#);
+
+        // Baseline: same geometry, no pressure (pool holds A four times
+        // over, tiering off) — the reference token stream.
+        let mut cfg = base.clone();
+        cfg.pool.pages = plan * 4;
+        let coord = Arc::new(Coordinator::with_mock(cfg, 0.2).unwrap());
+        let srv = serve(Arc::clone(&coord), "127.0.0.1:0").unwrap();
+        let (st, body) =
+            http_request(&srv.addr.to_string(), "POST", "/generate", body_a.as_bytes())
+                .unwrap();
+        assert_eq!(st, 200, "{}", String::from_utf8_lossy(&body));
+        let want = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        let want_tokens = want.get("tokens").unwrap().to_string();
+        drop(srv);
+
+        // Pressure run: pool holds 1.5× A's plan, cold tier enabled.
+        let mut cfg = base.clone();
+        cfg.pool.pages = plan + plan / 2;
+        cfg.pool.spill_pages = 4 * plan;
+        cfg.pool.spill_dir = std::env::temp_dir()
+            .join(format!("qs-http-hibernate-{}", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        let coord = Arc::new(Coordinator::with_mock(cfg, 0.2).unwrap());
+        let srv = serve(Arc::clone(&coord), "127.0.0.1:0").unwrap();
+        let addr = srv.addr.to_string();
+        let gen_a = {
+            let addr = addr.clone();
+            let body_a = body_a.clone();
+            std::thread::spawn(move || {
+                http_request(&addr, "POST", "/generate", body_a.as_bytes()).unwrap()
+            })
+        };
+        // Wait until A's prefill has landed in the pool, then submit B —
+        // big enough that admitting it must reclaim A's pages.
+        let mgr = coord.pool().expect("pooled").clone();
+        let t0 = std::time::Instant::now();
+        while mgr.lock().unwrap().snapshot().pages_in_use < PROMPT_A / 8 {
+            assert!(t0.elapsed().as_secs() < 30, "request A never prefilled");
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let body_b = format!(r#"{{"prompt":"{}","max_new_tokens":16}}"#, "b".repeat(2400));
+        let (st, body) =
+            http_request(&addr, "POST", "/generate", body_b.as_bytes()).unwrap();
+        assert_eq!(st, 200, "B admitted via reclaim: {}", String::from_utf8_lossy(&body));
+        let (st, body) = gen_a.join().unwrap();
+        assert_eq!(st, 200, "{}", String::from_utf8_lossy(&body));
+        let got = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(
+            got.get("tokens").unwrap().to_string(),
+            want_tokens,
+            "hibernated session's tokens diverged from the pressure-free baseline"
+        );
+
+        // /stats pins the mechanism: pages moved through the cold tier and
+        // faulted back; nothing was evicted, so nothing re-prefilled.
+        let (st, body) = http_request(&addr, "GET", "/stats", b"").unwrap();
+        assert_eq!(st, 200);
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        let pool = j.get("pool").expect("pool block");
+        assert_eq!(pool.get("evictions").unwrap().as_usize(), Some(0));
+        let tier = pool.get("tier").expect("tier block in /stats");
+        assert_eq!(tier.get("enabled"), Some(&Json::Bool(true)));
+        let stat = |name: &str| tier.get(name).unwrap().as_usize().unwrap();
+        assert!(stat(names::SPILL_BYTES_WRITTEN) > 0, "A spilled to disk");
+        assert!(stat(names::RESTORE_FAULTS) > 0, "A faulted back from disk");
+        assert!(
+            stat(names::SESSIONS_HIBERNATED_TOTAL) >= 1,
+            "reclaim escalated to whole-shard hibernation"
+        );
+        assert_eq!(stat(names::HIBERNATED_SESSIONS), 0, "everyone resumed");
+        mgr.lock().unwrap().check_integrity().unwrap();
+    }
+
     #[test]
     fn bad_requests_rejected() {
         let (srv, _c) = start_mock_server();

@@ -192,6 +192,50 @@ mod packing_tests {
     }
 }
 
+/// Serialized payload bytes of one spilled *quantized* page of `elems`
+/// codes: a 12-byte frame (`len`, `scale8` bits, `zero` bits, u32 LE each)
+/// plus the two bit-packed nibble planes. Must match
+/// `quant::PackedGroup::serialized_bytes`; `pool::tier` sizes its slots
+/// from this, so the cost model stays the single source of byte formulas.
+pub fn spilled_quant_page_bytes(elems: usize) -> usize {
+    12 + 2 * elems.div_ceil(2)
+}
+
+/// Serialized payload bytes of one spilled *FP* page of `elems` f32
+/// values: a u32 length frame plus raw IEEE-754 bits.
+pub fn spilled_fp_page_bytes(elems: usize) -> usize {
+    4 + 4 * elems
+}
+
+/// One cold-tier slot, page-aligned: the 32-byte slot header (magic,
+/// generation, kind, payload length, checksum) plus the larger of the two
+/// page payloads, rounded up to `SPILL_SLOT_ALIGN`. Every page of a given
+/// pool geometry fits in one slot, so the spill file is a flat array of
+/// fixed-size slots addressable by index.
+pub const SPILL_SLOT_ALIGN: usize = 4096;
+
+pub fn spill_slot_bytes(elems: usize) -> usize {
+    let payload = spilled_quant_page_bytes(elems).max(spilled_fp_page_bytes(elems));
+    (32 + payload).div_ceil(SPILL_SLOT_ALIGN) * SPILL_SLOT_ALIGN
+}
+
+#[cfg(test)]
+mod spill_tests {
+    use super::*;
+
+    #[test]
+    fn spill_slots_are_page_aligned_and_cover_both_kinds() {
+        for elems in [7usize, 512, 64 * 64, 128 * 128] {
+            let slot = spill_slot_bytes(elems);
+            assert_eq!(slot % SPILL_SLOT_ALIGN, 0, "elems {elems}");
+            assert!(slot >= 32 + spilled_quant_page_bytes(elems));
+            assert!(slot >= 32 + spilled_fp_page_bytes(elems));
+        }
+        // FP pages dominate (4 bytes/elem vs ~1): the slot tracks them
+        assert_eq!(spill_slot_bytes(512), (32 + 4 + 2048 + 4095) / 4096 * 4096);
+    }
+}
+
 /// Prompt length padded up to a G-bucket, minimum 2G (the prefill
 /// invariant needs one full quant group plus a full C_F1). The single
 /// source of the bucketing rule: the paged decoder's prefill and the

@@ -59,6 +59,15 @@ fn config_from_args(args: &Args) -> Result<ServeConfig> {
     cfg.pool.page_tokens = args.get_usize("pool-page-tokens", cfg.pool.page_tokens).max(1);
     // not clamped: 0 is rejected with a clear error at coordinator startup
     cfg.pool.quant_workers = args.get_usize("quant-workers", cfg.pool.quant_workers);
+    // cold-tier knobs: spill capacity in pages, spill-file directory, and
+    // speculative fetch-ahead of the next verify window
+    cfg.pool.spill_pages = args.get_usize("spill-pages", cfg.pool.spill_pages);
+    if let Some(d) = args.get("spill-dir") {
+        cfg.pool.spill_dir = d.to_string();
+    }
+    cfg.pool.fetch_ahead = args.get_usize("fetch-ahead", cfg.pool.fetch_ahead as usize) != 0;
+    cfg.hibernate_idle_ms =
+        args.get_usize("hibernate-idle-ms", cfg.hibernate_idle_ms as usize) as u64;
     cfg.prefill_chunk_tokens =
         args.get_usize("prefill-chunk-tokens", cfg.prefill_chunk_tokens);
     cfg.quant_queue_soft_limit =
@@ -138,6 +147,19 @@ OPTIONS (shared):
   --pool-page-tokens G tokens per pool page (default 64)
   --quant-workers N    size of the ONE process-wide quantization pool shared
                        by all sessions' prefills (default 1 = serial; 0 errors)
+  --spill-pages N      cold-tier capacity in pages: page-granular spill to
+                       disk replaces eviction as the first reclaim resort,
+                       and idle sessions hibernate losslessly
+                       (default 0 = tiering off)
+  --spill-dir DIR      directory for the spill file (default: the OS temp
+                       dir; the file is unlinked on shutdown)
+  --fetch-ahead 0|1    speculatively restore the next verify window's cold
+                       pages at cycle start (default 1)
+  --hibernate-idle-ms N
+                       scheduler idle sweep: sessions untouched for N ms
+                       move wholly to the cold tier and fault back
+                       bit-identically on next use (default 0 = off;
+                       requires --spill-pages > 0)
   --prefill-chunk-tokens N
                        schedulable prefill: feed prompts in N-token chunks so
                        a batcher round costs O(chunk), not O(prompt)

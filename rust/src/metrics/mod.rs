@@ -76,6 +76,35 @@ pub mod names {
     pub const PHASE_VERIFY_US: &str = "phase_verify_us";
     /// Histogram: per-flush FP→INT4/8 quantization latency (µs).
     pub const PHASE_QUANT_FLUSH_US: &str = "phase_quant_flush_us";
+    /// Histogram: per-transition warm→cold spill latency (µs; one sample
+    /// per `Spill` trace event, covering every page the transition moved).
+    pub const PHASE_SPILL_US: &str = "phase_spill_us";
+    /// Histogram: per-fault cold→warm restore latency (µs, on-demand).
+    pub const PHASE_RESTORE_US: &str = "phase_restore_us";
+    /// Histogram: per-prefetch fetch-ahead latency (µs, speculative
+    /// restore of the next verify window's cold pages).
+    pub const PHASE_FETCH_AHEAD_US: &str = "phase_fetch_ahead_us";
+    /// Pages resident in the arena (hot FP + warm quantized tiers).
+    pub const TIER_HOT_PAGES: &str = "tier_hot_pages";
+    /// Resident pages whose FP window already flushed to the packed
+    /// quantized planes (the demotion candidates for the next spill pass).
+    pub const TIER_WARM_PAGES: &str = "tier_warm_pages";
+    /// Pages currently parked in the cold spill tier.
+    pub const TIER_SPILLED_PAGES: &str = "tier_spilled_pages";
+    /// Lifetime bytes written to the spill file (warm→cold transitions).
+    pub const SPILL_BYTES_WRITTEN: &str = "spill_bytes_written";
+    /// Cold pages restored on demand by a blocking read (a fault means
+    /// fetch-ahead missed or was disabled).
+    pub const RESTORE_FAULTS: &str = "restore_faults";
+    /// Cold pages restored speculatively by the fetch-ahead hook before a
+    /// read blocked on them.
+    pub const FETCH_AHEAD_HITS: &str = "fetch_ahead_hits";
+    /// Sessions whose entire shard is parked in the cold tier, waiting to
+    /// be restored bit-identically on their next request.
+    pub const HIBERNATED_SESSIONS: &str = "hibernated_sessions";
+    /// Lifetime count of sessions the tier policy hibernated (monotone;
+    /// the gauge above is the instantaneous view).
+    pub const SESSIONS_HIBERNATED_TOTAL: &str = "sessions_hibernated_total";
     /// Histogram: per-request acceptance rate in percent (0–100).
     pub const ACCEPTANCE_RATE_PCT: &str = "acceptance_rate_pct";
     /// Histogram: accepted draft tokens per speculation cycle.

@@ -51,10 +51,24 @@
 //! (`costmodel::memory::pool_pages_for_request`) and the manager counts
 //! *committed* pages = Σ max(reserved, allocated). Admission holds
 //! committed pages at or below the **high watermark**; crossing it first
-//! LRU-evicts *preemptable* sessions (idle prefix caches) down to the
-//! **low watermark**, and only then reports `Saturated` (the router then
-//! queues or sheds — never OOM). A reservation larger than the watermarked
-//! pool is rejected outright as `TooLarge`.
+//! reclaims memory down to the **low watermark**, and only then reports
+//! `Saturated` (the router then queues or sheds — never OOM). A
+//! reservation larger than the watermarked pool is rejected outright as
+//! `TooLarge`.
+//!
+//! # The tier hierarchy (hot / warm / cold)
+//!
+//! With tiering enabled (`PoolConfig::spill_pages > 0`), pages move
+//! through three tiers — hot FP pages, warm quantized pages (both in the
+//! arena), and cold pages spilled to a file-backed [`tier::SpillStore`].
+//! Reclamation under pressure is **page-granular first**: the manager's
+//! `reclaim` spills a victim's written quantized pages (their KV survives
+//! and faults back bit-identically), escalates to whole-shard hibernation
+//! ([`page::SessionShard::spill_all`]), and only as a last resort falls
+//! back to destructive whole-session eviction. The typed
+//! [`tier::ReclaimOutcome`] replaces the old `evict_lru -> Option<SessionId>`
+//! surface. Lock order extends to manager → shard data → spill slots; see
+//! `tier` module docs for the spill-file format.
 //!
 //! # Accounting convention
 //!
@@ -68,9 +82,16 @@
 pub mod page;
 pub mod paged;
 pub mod session;
+pub mod tier;
 
 pub use page::{
-    CacheTraffic, PageHandle, PageKind, PagePool, PoolConfig, SessionId, SessionShard,
+    CacheTraffic, FaultOutcome, PageHandle, PageKind, PagePool, PoolConfig, SessionId,
+    SessionShard,
 };
 pub use paged::{mock_kv, mock_kv_into, BlockTable, PagedKvCache};
-pub use session::{shared, AdmitOutcome, RoundPhases, SessionManager, SharedSessionManager};
+pub use session::{
+    shared, AdmitOutcome, PoolSnapshot, RoundPhases, SessionManager, SharedSessionManager,
+};
+pub use tier::{
+    ReclaimOutcome, SpillHandle, SpillStore, TierPolicy, TierStats, TierTransition,
+};

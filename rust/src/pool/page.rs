@@ -43,6 +43,17 @@
 //! are deterministic per session regardless of how other sessions
 //! interleave, which is what makes parallel batcher rounds bit-identical
 //! to serial ones.
+//!
+//! # The cold tier
+//!
+//! When the pool runs with a [`super::tier::SpillStore`], a slot can hold
+//! a third state: *spilled* — the page's bytes live in a cold-tier slot
+//! and the arena budget it occupied has been handed back. Spilling does
+//! NOT bump the slot generation: the page handle stays valid, and
+//! [`SessionShard::fault_page`] transparently restores the bytes
+//! (bit-identical) when the data plane next touches them. Only `free`
+//! bumps generations. Spilled pages are excluded from `live` (they hold
+//! no arena budget) and tracked in the `spilled` mirror instead.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
@@ -50,6 +61,8 @@ use std::sync::{Arc, Mutex, MutexGuard};
 use anyhow::{bail, ensure, Result};
 
 use crate::quant::PackedGroup;
+
+use super::tier::{decode_fp_page, encode_fp_page, SpillHandle, SpillStore};
 
 /// Owner tag for pages; the coordinator uses the request id.
 pub type SessionId = u64;
@@ -98,6 +111,17 @@ pub struct PoolConfig {
     /// serially; 0 is rejected with an error at startup — never silently
     /// clamped. Output bits are identical at any worker count.
     pub quant_workers: usize,
+    /// Cold-tier capacity in pages: 0 disables tiering entirely (the
+    /// pre-tier behavior — reclamation is whole-session LRU eviction);
+    /// any other value creates a `SpillStore` holding at most this many
+    /// spilled pages, making page-granular spill the first resort.
+    pub spill_pages: usize,
+    /// Directory for the spill file (empty = the system temp dir). The
+    /// file is unlinked when the pool shuts down.
+    pub spill_dir: String,
+    /// Speculatively restore cold pages at cycle start (see
+    /// `tier::TierPolicy::fetch_ahead`); only meaningful with tiering on.
+    pub fetch_ahead: bool,
 }
 
 impl Default for PoolConfig {
@@ -109,12 +133,17 @@ impl Default for PoolConfig {
             high_watermark: 0.90,
             low_watermark: 0.70,
             quant_workers: 1,
+            spill_pages: 0,
+            spill_dir: String::new(),
+            fetch_ahead: true,
         }
     }
 }
 
 impl PoolConfig {
-    fn elems(&self) -> usize {
+    /// Values per page (`page_tokens × kv_dim`) — the payload size every
+    /// page layout and spill slot is derived from.
+    pub fn elems(&self) -> usize {
         self.page_tokens * self.kv_dim
     }
 
@@ -208,6 +237,16 @@ impl PagePool {
 
     pub fn peak_pages_in_use(&self) -> usize {
         self.peak_in_use.load(Ordering::Relaxed)
+    }
+
+    /// Resident quantized pages — the **warm** tier occupancy.
+    pub fn pages_quant(&self) -> usize {
+        self.n_quant.load(Ordering::Relaxed)
+    }
+
+    /// Resident full-precision pages — the **hot** tier occupancy.
+    pub fn pages_fp(&self) -> usize {
+        self.n_fp.load(Ordering::Relaxed)
     }
 
     /// Fill fraction in [0, 1].
@@ -308,6 +347,23 @@ enum PageData {
     /// None until the group is written (alloc-then-quantize window).
     Quant(Option<PackedGroup>),
     Fp(Vec<f32>),
+    /// A written quant page parked in the cold tier; no arena budget held.
+    SpilledQuant(SpillHandle),
+    /// An FP page parked in the cold tier (hibernated shard).
+    SpilledFp(SpillHandle),
+}
+
+impl PageData {
+    fn kind(&self) -> PageKind {
+        match self {
+            PageData::Quant(_) | PageData::SpilledQuant(_) => PageKind::Quant,
+            PageData::Fp(_) | PageData::SpilledFp(_) => PageKind::Fp,
+        }
+    }
+
+    fn is_spilled(&self) -> bool {
+        matches!(self, PageData::SpilledQuant(_) | PageData::SpilledFp(_))
+    }
 }
 
 struct Slot {
@@ -367,6 +423,9 @@ impl ShardData {
             Some(PageData::Quant(None)) => {
                 bail!("quant page {} allocated but never written", h.id)
             }
+            Some(PageData::SpilledQuant(_)) => {
+                bail!("quant page {} is spilled: fault it back before reading", h.id)
+            }
             _ => bail!("page {} is not a quant page", h.id),
         }
     }
@@ -375,6 +434,9 @@ impl ShardData {
         self.check(h)?;
         match &self.slots[h.id as usize].state {
             Some(PageData::Fp(v)) => Ok(v),
+            Some(PageData::SpilledFp(_)) => {
+                bail!("fp page {} is spilled: fault it back before reading", h.id)
+            }
             _ => bail!("page {} is not an fp page", h.id),
         }
     }
@@ -383,19 +445,44 @@ impl ShardData {
         self.check(h)?;
         match &mut self.slots[h.id as usize].state {
             Some(PageData::Fp(v)) => Ok(v),
+            Some(PageData::SpilledFp(_)) => {
+                bail!("fp page {} is spilled: fault it back before writing", h.id)
+            }
             _ => bail!("page {} is not an fp page", h.id),
         }
     }
 
+    /// Whether the page behind a (valid) handle is parked in the cold
+    /// tier. The windowed readers use this to decide between the
+    /// zero-allocation resident fast path and a fault-back.
+    pub fn is_spilled(&self, h: PageHandle) -> Result<bool> {
+        self.check(h)?;
+        Ok(self.slots[h.id as usize]
+            .state
+            .as_ref()
+            .is_some_and(PageData::is_spilled))
+    }
+
     fn live_slots(&self) -> usize {
-        self.slots.iter().filter(|s| s.state.is_some()).count()
+        self.slots
+            .iter()
+            .filter(|s| s.state.as_ref().is_some_and(|d| !d.is_spilled()))
+            .count()
+    }
+
+    fn spilled_slots(&self) -> usize {
+        self.slots
+            .iter()
+            .filter(|s| s.state.as_ref().is_some_and(PageData::is_spilled))
+            .count()
     }
 
     fn check_integrity_inner(&self) -> Result<()> {
         ensure!(
-            self.live_slots() + self.free.len() == self.slots.len(),
-            "shard accounting broken: {} live + {} free != {} slots",
+            self.live_slots() + self.spilled_slots() + self.free.len() == self.slots.len(),
+            "shard accounting broken: {} live + {} spilled + {} free != {} slots",
             self.live_slots(),
+            self.spilled_slots(),
             self.free.len(),
             self.slots.len()
         );
@@ -428,11 +515,55 @@ pub struct SessionShard {
     /// Admission reservation: the lock-free allocation fast path is
     /// limited to this many pages (see [`SessionShard::try_alloc`]).
     reserved: AtomicUsize,
+    /// Pages of this shard parked in the cold tier (no arena budget).
+    spilled: AtomicUsize,
+    /// Set while a spill or fault-back is moving this shard's pages
+    /// between tiers. Victim selection (reclaim/evict) skips shards with
+    /// this flag up, so a mid-restore shard is never torn down under the
+    /// transition (the generation-check race the tier tests pin).
+    in_transition: AtomicBool,
+    /// The cold tier, when tiering is enabled for this pool.
+    spill: Option<Arc<SpillStore>>,
     data: Mutex<ShardData>,
+}
+
+/// RAII marker for a tier transition in flight on one shard.
+struct TransitionGuard<'a> {
+    shard: &'a SessionShard,
+}
+
+impl Drop for TransitionGuard<'_> {
+    fn drop(&mut self) {
+        self.shard.in_transition.store(false, Ordering::Release);
+    }
+}
+
+/// Result of one [`SessionShard::fault_page`] attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultOutcome {
+    /// The page was cold and is now resident again (bit-identical).
+    Restored,
+    /// The page was already resident; nothing to do.
+    Resident,
+    /// The arena has no free page: the caller must reclaim (via the
+    /// session manager) and retry — never while holding this shard's
+    /// data lock.
+    ArenaFull,
 }
 
 impl SessionShard {
     pub fn new(id: SessionId, arena: Arc<PagePool>, reserved: usize) -> SessionShard {
+        SessionShard::with_spill(id, arena, reserved, None)
+    }
+
+    /// A shard wired to the cold tier: pages of this session may spill
+    /// into `spill` and fault back transparently.
+    pub fn with_spill(
+        id: SessionId,
+        arena: Arc<PagePool>,
+        reserved: usize,
+        spill: Option<Arc<SpillStore>>,
+    ) -> SessionShard {
         let elems = arena.cfg().elems();
         SessionShard {
             id,
@@ -440,6 +571,9 @@ impl SessionShard {
             evicted: AtomicBool::new(false),
             live: AtomicUsize::new(0),
             reserved: AtomicUsize::new(reserved),
+            spilled: AtomicUsize::new(0),
+            in_transition: AtomicBool::new(false),
+            spill,
             data: Mutex::new(ShardData {
                 elems,
                 slots: Vec::new(),
@@ -469,6 +603,200 @@ impl SessionShard {
     /// The admission reservation bounding the lock-free allocation path.
     pub fn reserved_pages(&self) -> usize {
         self.reserved.load(Ordering::Acquire)
+    }
+
+    /// Pages of this shard parked in the cold tier (lock-free mirror).
+    pub fn spilled_pages(&self) -> usize {
+        self.spilled.load(Ordering::Acquire)
+    }
+
+    /// The cold tier this shard spills into, when tiering is enabled.
+    pub fn spill_store(&self) -> Option<&Arc<SpillStore>> {
+        self.spill.as_ref()
+    }
+
+    /// Whether a spill or fault-back is currently moving this shard's
+    /// pages between tiers (victim selection must skip such shards).
+    pub fn in_transition(&self) -> bool {
+        self.in_transition.load(Ordering::Acquire)
+    }
+
+    fn begin_transition(&self) -> TransitionGuard<'_> {
+        self.in_transition.store(true, Ordering::Release);
+        TransitionGuard { shard: self }
+    }
+
+    /// Page-granular reclaim: park up to `max` written quantized pages in
+    /// the cold tier (0 = no cap), releasing their arena budget. Handles
+    /// stay valid — the pages fault back bit-identically on the next
+    /// touch. Stops early (no error) when the cold tier fills; the caller
+    /// escalates. Returns the number of pages moved.
+    pub fn spill_quant_pages(&self, max: usize) -> Result<usize> {
+        let Some(store) = self.spill.clone() else { return Ok(0) };
+        let _t = self.begin_transition();
+        let cap = if max == 0 { usize::MAX } else { max };
+        let mut moved = 0usize;
+        // An I/O error mid-batch must not skip the accounting for pages
+        // already converted, so it is deferred past the counter updates.
+        let mut io_err = None;
+        let mut d = self.lock();
+        for id in 0..d.slots.len() {
+            if moved >= cap {
+                break;
+            }
+            let Some(PageData::Quant(Some(g))) = &d.slots[id].state else { continue };
+            let payload = g.to_bytes();
+            match store.write_page(PageKind::Quant, &payload) {
+                Ok(Some(sh)) => {
+                    d.slots[id].state = Some(PageData::SpilledQuant(sh));
+                    moved += 1;
+                }
+                Ok(None) => break, // cold tier at capacity
+                Err(e) => {
+                    io_err = Some(e);
+                    break;
+                }
+            }
+        }
+        drop(d);
+        if moved > 0 {
+            self.spilled.fetch_add(moved, Ordering::AcqRel);
+            self.live.fetch_sub(moved, Ordering::AcqRel);
+            for _ in 0..moved {
+                self.arena.release_page(PageKind::Quant);
+            }
+        }
+        match io_err {
+            Some(e) => Err(e),
+            None => Ok(moved),
+        }
+    }
+
+    /// Hibernate: park EVERY resident page — FP buffers included — in the
+    /// cold tier. The shard keeps its handles and resumes bit-identically
+    /// when the pages fault back, so a hibernated session never
+    /// re-prefills. Returns the number of pages moved.
+    pub fn spill_all(&self) -> Result<usize> {
+        let Some(store) = self.spill.clone() else { return Ok(0) };
+        let _t = self.begin_transition();
+        let mut moved_quant = 0usize;
+        let mut moved_fp = 0usize;
+        let mut io_err = None; // deferred, as in `spill_quant_pages`
+        let mut d = self.lock();
+        for id in 0..d.slots.len() {
+            let (kind, payload) = match &d.slots[id].state {
+                Some(PageData::Quant(Some(g))) => (PageKind::Quant, g.to_bytes()),
+                // alloc-then-quantize window: an unwritten quant page has
+                // no bytes yet; an empty payload restores the same state
+                Some(PageData::Quant(None)) => (PageKind::Quant, Vec::new()),
+                Some(PageData::Fp(v)) => (PageKind::Fp, encode_fp_page(v)),
+                _ => continue,
+            };
+            match store.write_page(kind, &payload) {
+                Ok(Some(sh)) => {
+                    d.slots[id].state = Some(match kind {
+                        PageKind::Quant => PageData::SpilledQuant(sh),
+                        PageKind::Fp => PageData::SpilledFp(sh),
+                    });
+                    match kind {
+                        PageKind::Quant => moved_quant += 1,
+                        PageKind::Fp => moved_fp += 1,
+                    }
+                }
+                Ok(None) => break, // cold tier at capacity — partial hibernate
+                Err(e) => {
+                    io_err = Some(e);
+                    break;
+                }
+            }
+        }
+        drop(d);
+        let moved = moved_quant + moved_fp;
+        if moved > 0 {
+            self.spilled.fetch_add(moved, Ordering::AcqRel);
+            self.live.fetch_sub(moved, Ordering::AcqRel);
+            for _ in 0..moved_quant {
+                self.arena.release_page(PageKind::Quant);
+            }
+            for _ in 0..moved_fp {
+                self.arena.release_page(PageKind::Fp);
+            }
+        }
+        match io_err {
+            Some(e) => Err(e),
+            None => Ok(moved),
+        }
+    }
+
+    /// Fault one cold page back into the arena (bit-identical restore).
+    /// Ordering mirrors `alloc_impl`: reserve arena budget first, do file
+    /// I/O without the shard lock, then install under the lock with an
+    /// eviction re-check. `ArenaFull` means the caller must reclaim via
+    /// the session manager — NEVER while holding this shard's lock — and
+    /// retry.
+    pub fn fault_page(&self, h: PageHandle) -> Result<FaultOutcome> {
+        let store = match &self.spill {
+            Some(s) => Arc::clone(s),
+            None => return Ok(FaultOutcome::Resident),
+        };
+        let (sh, kind) = {
+            let d = self.lock();
+            d.check(h)?;
+            match &d.slots[h.id as usize].state {
+                Some(PageData::SpilledQuant(sh)) => (*sh, PageKind::Quant),
+                Some(PageData::SpilledFp(sh)) => (*sh, PageKind::Fp),
+                _ => return Ok(FaultOutcome::Resident),
+            }
+        };
+        let _t = self.begin_transition();
+        ensure!(!self.is_evicted(), "session {} was evicted", self.id);
+        if !self.arena.try_reserve(kind) {
+            return Ok(FaultOutcome::ArenaFull);
+        }
+        // `take_page` consumes the cold slot; deserialize outside the lock.
+        let restored = store.take_page(sh).and_then(|(k, payload)| {
+            ensure!(k == kind, "spill slot kind changed under fault");
+            Ok(match kind {
+                PageKind::Quant if payload.is_empty() => PageData::Quant(None),
+                PageKind::Quant => {
+                    PageData::Quant(Some(PackedGroup::from_bytes(&payload)?))
+                }
+                PageKind::Fp => PageData::Fp(decode_fp_page(&payload)?),
+            })
+        });
+        let data = match restored {
+            Ok(data) => data,
+            Err(e) => {
+                self.arena.release_page(kind);
+                return Err(e);
+            }
+        };
+        let mut d = self.lock();
+        // Re-check under the lock (mirrors alloc_impl): retire may have
+        // run between the peek and here — its `free_all` bumped the slot
+        // generation and handed the cold slot back — so return the arena
+        // budget and bail instead of resurrecting a freed page.
+        if self.is_evicted() || d.check(h).is_err() {
+            drop(d);
+            self.arena.release_page(kind);
+            bail!("session {} was evicted mid-restore", self.id);
+        }
+        match &d.slots[h.id as usize].state {
+            Some(s) if s.is_spilled() => {}
+            _ => {
+                // Unreachable while `take_page` generation-checks (a
+                // competing restore would have consumed the slot first),
+                // but cheap to tolerate: hand the budget back.
+                drop(d);
+                self.arena.release_page(kind);
+                return Ok(FaultOutcome::Resident);
+            }
+        }
+        d.slots[h.id as usize].state = Some(data);
+        drop(d);
+        self.spilled.fetch_sub(1, Ordering::AcqRel);
+        self.live.fetch_add(1, Ordering::AcqRel);
+        Ok(FaultOutcome::Restored)
     }
 
     /// Lock this session's page data for a batch of reads/writes — the
@@ -543,30 +871,53 @@ impl SessionShard {
         let mut d = self.lock();
         d.check(h)?;
         let slot = &mut d.slots[h.id as usize];
-        let kind = match slot.state.take() {
-            Some(PageData::Quant(_)) => PageKind::Quant,
-            Some(PageData::Fp(_)) => PageKind::Fp,
+        let (kind, cold) = match slot.state.take() {
+            Some(PageData::Quant(_)) => (PageKind::Quant, None),
+            Some(PageData::Fp(_)) => (PageKind::Fp, None),
+            Some(PageData::SpilledQuant(sh)) => (PageKind::Quant, Some(sh)),
+            Some(PageData::SpilledFp(sh)) => (PageKind::Fp, Some(sh)),
             None => unreachable!("check() verified the slot is in use"),
         };
         slot.gen = slot.gen.wrapping_add(1);
         d.free.push(h.id);
         drop(d);
-        self.live.fetch_sub(1, Ordering::AcqRel);
-        self.arena.release_page(kind);
+        match cold {
+            // A spilled page holds a cold slot but no arena budget.
+            Some(sh) => {
+                self.spilled.fetch_sub(1, Ordering::AcqRel);
+                if let Some(store) = &self.spill {
+                    // Best-effort: a concurrent fault's `take_page` may
+                    // have consumed the slot already (its install re-check
+                    // will see our generation bump and back out), so a
+                    // stale handle here is that race resolving — not a
+                    // leak.
+                    let _ = store.free_page(sh);
+                }
+            }
+            None => {
+                self.live.fetch_sub(1, Ordering::AcqRel);
+                self.arena.release_page(kind);
+            }
+        }
         Ok(kind)
     }
 
-    /// Free every live page (session release / eviction). Generation bumps
-    /// make any handle a stale `PagedKvCache` still holds error cleanly.
+    /// Free every page — resident AND spilled (session release /
+    /// eviction). Generation bumps make any handle a stale `PagedKvCache`
+    /// still holds error cleanly; cold-tier slots are handed back too.
     pub fn free_all(&self) -> usize {
         let mut guard = self.lock();
         let d = &mut *guard; // split-borrow slots and the free list
         let mut freed_quant = 0usize;
         let mut freed_fp = 0usize;
+        let mut cold: Vec<SpillHandle> = Vec::new();
         for (id, slot) in d.slots.iter_mut().enumerate() {
             match slot.state.take() {
                 Some(PageData::Quant(_)) => freed_quant += 1,
                 Some(PageData::Fp(_)) => freed_fp += 1,
+                Some(PageData::SpilledQuant(sh)) | Some(PageData::SpilledFp(sh)) => {
+                    cold.push(sh)
+                }
                 None => continue,
             }
             slot.gen = slot.gen.wrapping_add(1);
@@ -577,26 +928,46 @@ impl SessionShard {
         if freed > 0 {
             self.live.fetch_sub(freed, Ordering::AcqRel);
         }
+        if !cold.is_empty() {
+            self.spilled.fetch_sub(cold.len(), Ordering::AcqRel);
+            if let Some(store) = &self.spill {
+                for sh in &cold {
+                    // Best-effort for the same reason as in `free`.
+                    let _ = store.free_page(*sh);
+                }
+            }
+        }
         for _ in 0..freed_quant {
             self.arena.release_page(PageKind::Quant);
         }
         for _ in 0..freed_fp {
             self.arena.release_page(PageKind::Fp);
         }
+        freed + cold.len()
+    }
+
+    /// Evict: reject future allocations and reclaim every page, resident
+    /// and spilled. Called on the unified release path — `PagedKvCache`
+    /// release and manager eviction both land here — so it is
+    /// **idempotent**: the second call is a no-op. The flag is stored
+    /// before `free_all` takes the data lock (see the re-check in
+    /// `alloc_impl`).
+    pub fn retire(&self) -> usize {
+        let already = self.evicted.swap(true, Ordering::AcqRel);
+        let freed = self.free_all();
+        if already {
+            debug_assert_eq!(
+                freed, 0,
+                "double retire of session {} freed pages: something allocated \
+                 after eviction",
+                self.id
+            );
+        }
         freed
     }
 
-    /// Evict: reject future allocations and reclaim every page. Called by
-    /// the session manager (LRU eviction and release) — the session's own
-    /// data plane never calls this. The flag is stored before `free_all`
-    /// takes the data lock (see the re-check in `alloc_impl`).
-    pub fn retire(&self) -> usize {
-        self.evicted.store(true, Ordering::Release);
-        self.free_all()
-    }
-
     /// Structural invariants of this shard (free-list consistency and the
-    /// lock-free `live` mirror matching the slot states).
+    /// lock-free `live`/`spilled` mirrors matching the slot states).
     pub fn check_integrity(&self) -> Result<()> {
         let d = self.lock();
         d.check_integrity_inner()?;
@@ -606,6 +977,13 @@ impl SessionShard {
             self.id,
             self.live_pages(),
             d.live_slots()
+        );
+        ensure!(
+            d.spilled_slots() == self.spilled_pages(),
+            "shard {}: spilled mirror {} != {} spilled slots",
+            self.id,
+            self.spilled_pages(),
+            d.spilled_slots()
         );
         Ok(())
     }
@@ -810,5 +1188,134 @@ mod tests {
                 a.pages_in_use() == 0
             },
         );
+    }
+
+    // ---- cold tier (spill / fault / hibernate) ----
+
+    use crate::pool::tier::{SpillStore, TierPolicy};
+
+    fn tiered(pages: usize, spill_cap: usize) -> (Arc<PagePool>, SessionShard) {
+        let a = arena(pages);
+        let store =
+            SpillStore::new("", a.cfg().elems(), spill_cap, TierPolicy::default()).unwrap();
+        let s = SessionShard::with_spill(1, a.clone(), 16, Some(store));
+        (a, s)
+    }
+
+    #[test]
+    fn spill_and_fault_roundtrip_is_bit_identical() {
+        let (a, s) = tiered(4, 0);
+        let h = alloc(&s, PageKind::Quant).unwrap();
+        let g = group(&a, -2.5);
+        s.lock().write_quant(h, g.clone()).unwrap();
+        assert_eq!(s.spill_quant_pages(0).unwrap(), 1);
+        assert_eq!(a.pages_in_use(), 0, "spilled page released its budget");
+        assert_eq!(s.live_pages(), 0);
+        assert_eq!(s.spilled_pages(), 1);
+        assert!(s.lock().is_spilled(h).unwrap());
+        let err = s.lock().read_quant(h).unwrap_err().to_string();
+        assert!(err.contains("spilled"), "{err}");
+        s.check_integrity().unwrap();
+        assert_eq!(s.fault_page(h).unwrap(), FaultOutcome::Restored);
+        assert_eq!(a.pages_in_use(), 1, "restore re-reserved the budget");
+        assert_eq!(s.spilled_pages(), 0);
+        assert_eq!(*s.lock().read_quant(h).unwrap(), g, "bit-identical restore");
+        assert_eq!(s.fault_page(h).unwrap(), FaultOutcome::Resident);
+        s.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn hibernate_spills_fp_and_unwritten_pages() {
+        let (a, s) = tiered(4, 0);
+        let hf = alloc(&s, PageKind::Fp).unwrap();
+        for (i, v) in s.lock().fp_mut(hf).unwrap().iter_mut().enumerate() {
+            *v = i as f32 * 0.5 - 1.0;
+        }
+        let want: Vec<f32> = s.lock().fp(hf).unwrap().to_vec();
+        let hq = alloc(&s, PageKind::Quant).unwrap(); // never written
+        assert_eq!(s.spill_all().unwrap(), 2);
+        assert_eq!(a.pages_in_use(), 0, "hibernation released every page");
+        assert_eq!(s.spilled_pages(), 2);
+        s.check_integrity().unwrap();
+        assert_eq!(s.fault_page(hf).unwrap(), FaultOutcome::Restored);
+        assert_eq!(s.fault_page(hq).unwrap(), FaultOutcome::Restored);
+        let got = s.lock().fp(hf).unwrap().to_vec();
+        assert_eq!(want.len(), got.len());
+        for (w, g) in want.iter().zip(&got) {
+            assert_eq!(w.to_bits(), g.to_bits(), "fp restore is bit-exact");
+        }
+        let err = s.lock().read_quant(hq).unwrap_err().to_string();
+        assert!(err.contains("never written"), "unwritten state survives: {err}");
+        s.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn fault_reports_arena_full_without_losing_the_page() {
+        let (a, s) = tiered(1, 0);
+        let h = alloc(&s, PageKind::Quant).unwrap();
+        s.lock().write_quant(h, group(&a, 1.0)).unwrap();
+        assert_eq!(s.spill_quant_pages(0).unwrap(), 1);
+        // another session takes the only arena page
+        let other = SessionShard::new(2, a.clone(), 16);
+        let oh = alloc(&other, PageKind::Fp).unwrap();
+        assert_eq!(s.fault_page(h).unwrap(), FaultOutcome::ArenaFull);
+        assert_eq!(s.spilled_pages(), 1, "page still safe in the cold tier");
+        other.free(oh).unwrap();
+        assert_eq!(s.fault_page(h).unwrap(), FaultOutcome::Restored);
+        s.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn spill_stops_cleanly_when_cold_tier_full() {
+        let (a, s) = tiered(4, 1);
+        for seed in 0..2 {
+            let h = alloc(&s, PageKind::Quant).unwrap();
+            s.lock().write_quant(h, group(&a, seed as f32)).unwrap();
+        }
+        assert_eq!(s.spill_quant_pages(0).unwrap(), 1, "cap stops the batch");
+        assert_eq!(s.live_pages(), 1);
+        assert_eq!(s.spilled_pages(), 1);
+        assert_eq!(a.pages_in_use(), 1);
+        s.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn retire_is_idempotent_and_frees_cold_slots() {
+        let (a, s) = tiered(4, 0);
+        let h = alloc(&s, PageKind::Quant).unwrap();
+        s.lock().write_quant(h, group(&a, 0.0)).unwrap();
+        let _hf = alloc(&s, PageKind::Fp).unwrap();
+        assert_eq!(s.spill_quant_pages(0).unwrap(), 1);
+        let store = s.spill_store().unwrap().clone();
+        assert_eq!(store.spilled_pages(), 1);
+        assert_eq!(s.retire(), 2, "resident and spilled pages reclaimed");
+        assert_eq!(a.pages_in_use(), 0);
+        assert_eq!(store.spilled_pages(), 0, "cold slot handed back");
+        assert_eq!(s.retire(), 0, "second retire is a no-op");
+        assert!(s.fault_page(h).is_err(), "gen bump invalidates the handle");
+        s.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn free_spilled_page_releases_cold_slot() {
+        let (a, s) = tiered(4, 0);
+        let h = alloc(&s, PageKind::Quant).unwrap();
+        s.lock().write_quant(h, group(&a, 3.0)).unwrap();
+        assert_eq!(s.spill_quant_pages(0).unwrap(), 1);
+        assert_eq!(s.free(h).unwrap(), PageKind::Quant);
+        assert_eq!(s.spilled_pages(), 0);
+        assert_eq!(s.spill_store().unwrap().spilled_pages(), 0);
+        assert_eq!(a.pages_in_use(), 0, "no arena budget was double-released");
+        s.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn transition_flag_raised_during_spill() {
+        let (a, s) = tiered(4, 0);
+        let h = alloc(&s, PageKind::Quant).unwrap();
+        s.lock().write_quant(h, group(&a, 0.5)).unwrap();
+        assert!(!s.in_transition());
+        s.spill_quant_pages(0).unwrap();
+        assert!(!s.in_transition(), "guard cleared after the batch");
     }
 }

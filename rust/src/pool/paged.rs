@@ -50,15 +50,20 @@
 
 use std::sync::Arc;
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::cache::CacheTracker;
 use crate::quant::{quant_group, quant_groups_parallel};
 use crate::util::rng::Pcg32;
 use crate::util::threadpool::PoolHandle;
 
-use super::page::{PageHandle, PageKind, SessionId, SessionShard};
+use super::page::{FaultOutcome, PageHandle, PageKind, SessionId, SessionShard};
 use super::session::SharedSessionManager;
+
+/// Bound on fault-back retries when a concurrent reclaim keeps spilling
+/// an operation's pages out from under it (each retry restores them
+/// first, so forward progress needs adversarial timing to be this slow).
+const FAULT_RETRIES: usize = 64;
 
 /// Map from a session's logical cache to arena pages.
 #[derive(Debug, Default, Clone)]
@@ -169,7 +174,7 @@ impl PagedKvCache {
 
     /// Allocate one page: the lock-free shard/arena fast path (bounded by
     /// the admission reservation), falling back to the manager-locked
-    /// slow path (LRU eviction, over-reservation growth) when the arena
+    /// slow path (tier reclaim, over-reservation growth) when the arena
     /// is full or the reservation is exhausted. A reservation covers the
     /// whole decode (`pool_pages_for_request` sizes prompt + budget), so
     /// steady-state flushes take no global lock.
@@ -180,6 +185,107 @@ impl PagedKvCache {
         lock(&self.mgr).alloc(self.session, kind)
     }
 
+    // ---- cold-tier fault-back --------------------------------------------
+
+    /// Restore any of `pages` parked in the cold tier. On `ArenaFull` the
+    /// manager reclaims (page-granular spill first, eviction last — never
+    /// while a shard lock is held) and the fault retries. Emits one
+    /// `Restore` (on-demand) or `FetchAhead` (speculative) trace event
+    /// covering the batch and splits the tier counters into
+    /// `restore_faults` vs `fetch_ahead_hits` accordingly.
+    fn fault_pages(&self, pages: &[PageHandle], speculative: bool) -> Result<usize> {
+        let t0 = std::time::Instant::now();
+        let mut restored = 0usize;
+        for &h in pages {
+            loop {
+                match self.shard.fault_page(h)? {
+                    FaultOutcome::Resident => break,
+                    FaultOutcome::Restored => {
+                        restored += 1;
+                        break;
+                    }
+                    FaultOutcome::ArenaFull => {
+                        let outcome = lock(&self.mgr).reclaim(Some(self.session));
+                        if !outcome.progressed() {
+                            bail!(
+                                "arena exhausted faulting session {} back from the cold tier",
+                                self.session
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        if restored > 0 {
+            if let Some(store) = self.shard.spill_store() {
+                store.note_restore(restored, speculative);
+            }
+            let us = t0.elapsed().as_micros() as u64;
+            crate::trace::emit(if speculative {
+                crate::trace::PhaseEvent::FetchAhead { pages: restored, us }
+            } else {
+                crate::trace::PhaseEvent::Restore { pages: restored, us }
+            });
+        }
+        Ok(restored)
+    }
+
+    /// Fault the FP buffer back in (hibernation spills it wholesale).
+    /// Allocation-free no-op when the shard has nothing spilled.
+    fn ensure_fp_resident(&self) -> Result<()> {
+        if self.shard.spilled_pages() == 0 {
+            return Ok(());
+        }
+        self.fault_pages(&self.table.fp, false).map(|_| ())
+    }
+
+    /// Fault back any cold pages the committed window `range` touches.
+    /// The resident fast path is one atomic load — no lock, no allocation.
+    fn ensure_window_resident(&self, range: &std::ops::Range<usize>) -> Result<()> {
+        if self.shard.spilled_pages() == 0 {
+            return Ok(());
+        }
+        let tr = self.tracker()?;
+        let mut pages: Vec<PageHandle> = Vec::new();
+        let mut pos = range.start;
+        while pos < range.end.min(tr.n_q) {
+            let gi = pos / self.g;
+            pages.push(self.table.groups[gi]);
+            pos = (gi + 1) * self.g;
+        }
+        if range.end > tr.n_q {
+            let first = range.start.max(tr.n_q) - tr.n_q;
+            let n = range.end - range.start.max(tr.n_q);
+            for (pi, _, _, _) in fp_spans(self.g, self.d, first, n) {
+                pages.push(self.table.fp[pi]);
+            }
+        }
+        self.fault_pages(&pages, false).map(|_| ())
+    }
+
+    /// Run `body`, faulting cold pages back (via `ensure`) and retrying
+    /// when a concurrent reclaim spills them mid-operation. Resident
+    /// pages never hit the retry arm, so the fast path costs nothing.
+    fn with_resident<T>(
+        &self,
+        ensure: impl Fn(&Self) -> Result<()>,
+        mut body: impl FnMut() -> Result<T>,
+    ) -> Result<T> {
+        let mut attempts = 0usize;
+        loop {
+            ensure(self)?;
+            match body() {
+                Err(e)
+                    if attempts < FAULT_RETRIES
+                        && e.to_string().contains("is spilled") =>
+                {
+                    attempts += 1;
+                }
+                other => return other,
+            }
+        }
+    }
+
     // ---- FP buffer slots -------------------------------------------------
 
     fn write_fp_slot(&mut self, slot: usize, vals: &[f32]) -> Result<()> {
@@ -187,9 +293,14 @@ impl PagedKvCache {
         ensure!(slot < self.fb, "fp slot {slot} out of buffer (FB={})", self.fb);
         let off = (slot % self.g) * self.d;
         let page = self.table.fp[slot / self.g];
-        let mut s = self.shard.lock();
-        s.fp_mut(page)?[off..off + self.d].copy_from_slice(vals);
-        Ok(())
+        self.with_resident(
+            |c| c.ensure_fp_resident(),
+            || {
+                let mut s = self.shard.lock();
+                s.fp_mut(page)?[off..off + self.d].copy_from_slice(vals);
+                Ok(())
+            },
+        )
     }
 
     /// Zero-allocation FP read; the single home of the slot → (page,
@@ -198,9 +309,14 @@ impl PagedKvCache {
         ensure!(slot < self.fb, "fp slot {slot} out of buffer (FB={})", self.fb);
         let off = (slot % self.g) * self.d;
         let page = self.table.fp[slot / self.g];
-        let s = self.shard.lock();
-        out.copy_from_slice(&s.fp(page)?[off..off + self.d]);
-        Ok(())
+        self.with_resident(
+            |c| c.ensure_fp_resident(),
+            || {
+                let s = self.shard.lock();
+                out.copy_from_slice(&s.fp(page)?[off..off + self.d]);
+                Ok(())
+            },
+        )
     }
 
     fn read_fp_slot(&self, slot: usize) -> Result<Vec<f32>> {
@@ -326,10 +442,35 @@ impl PagedKvCache {
         Ok(())
     }
 
-    /// Begin a speculation cycle (records the O(1) rollback point).
+    /// Begin a speculation cycle (records the O(1) rollback point). With
+    /// tiering enabled this is also the fetch-ahead point: cold pages the
+    /// cycle is about to touch are restored speculatively, before any
+    /// read blocks on them.
     pub fn begin_cycle(&mut self) -> Result<()> {
         self.tracker_mut()?.begin_cycle();
-        Ok(())
+        self.fetch_ahead()
+    }
+
+    /// Speculatively restore the pages the coming cycle will touch — the
+    /// FP buffer (draft writes and verify rewrites land there) and the
+    /// newest quant group (the verify window's usual left edge) — so a
+    /// hibernated session resumes without stalling its first reads on
+    /// on-demand faults. Gated on `TierPolicy::fetch_ahead`;
+    /// allocation-free when nothing is spilled.
+    fn fetch_ahead(&self) -> Result<()> {
+        if self.shard.spilled_pages() == 0 {
+            return Ok(());
+        }
+        let speculate = match self.shard.spill_store() {
+            Some(store) => store.policy().fetch_ahead,
+            None => false,
+        };
+        if !speculate {
+            return Ok(());
+        }
+        let mut pages = self.table.fp.clone();
+        pages.extend(self.table.groups.last().copied());
+        self.fault_pages(&pages, true).map(|_| ())
     }
 
     /// Write the i-th cycle slot (draft KV on the way out, target KV on the
@@ -356,12 +497,17 @@ impl PagedKvCache {
         let s0 = tr.draft_slot(first)?;
         // the last slot's check bounds the whole window (slots are base+i)
         tr.draft_slot(first + t - 1)?;
-        let mut s = self.shard.lock();
-        for (pi, po, off, len) in fp_spans(self.g, self.d, s0, t) {
-            s.fp_mut(self.table.fp[pi])?[po..po + len]
-                .copy_from_slice(&vals[off..off + len]);
-        }
-        Ok(())
+        self.with_resident(
+            |c| c.ensure_fp_resident(),
+            || {
+                let mut s = self.shard.lock();
+                for (pi, po, off, len) in fp_spans(self.g, self.d, s0, t) {
+                    s.fp_mut(self.table.fp[pi])?[po..po + len]
+                        .copy_from_slice(&vals[off..off + len]);
+                }
+                Ok(())
+            },
+        )
     }
 
     /// Commit a cycle; flush C_F1 into a fresh quant page if the double
@@ -387,9 +533,17 @@ impl PagedKvCache {
     }
 
     /// Quantize C_F1 into a newly allocated page and shift C_F2 → C_F1.
+    /// This is the hot → warm tier demotion: a page's worth of FP KV
+    /// becomes a quantized group, counted on the tier stats when a spill
+    /// store is attached.
     fn flush(&mut self) -> Result<()> {
         let t0 = std::time::Instant::now();
         let out = self.flush_inner();
+        if out.is_ok() {
+            if let Some(store) = self.shard.spill_store() {
+                store.note_demotion();
+            }
+        }
         crate::trace::emit(crate::trace::PhaseEvent::QuantFlush {
             us: t0.elapsed().as_micros() as u64,
         });
@@ -477,6 +631,22 @@ impl PagedKvCache {
             "window {range:?} beyond context ({} tokens)",
             tr.n_q + tr.n_f
         );
+        self.with_resident(
+            |c| c.ensure_window_resident(&range),
+            || self.read_window_resident(range.clone(), draft, out),
+        )
+    }
+
+    /// The resident body of [`PagedKvCache::read_tokens_into`]: errors
+    /// (instead of faulting) if the window touches a cold page, so the
+    /// wrapper can restore and retry without this path ever allocating.
+    fn read_window_resident(
+        &self,
+        range: std::ops::Range<usize>,
+        draft: bool,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let tr = self.tracker()?;
         let s = self.shard.lock();
         let mut pos = range.start;
         let mut off = 0usize;
@@ -531,22 +701,38 @@ impl PagedKvCache {
         let s0 = tr.draft_slot(first)?;
         // the last slot's check bounds the whole window (slots are base+i)
         tr.draft_slot(first + t - 1)?;
-        let s = self.shard.lock();
-        for (pi, po, off, len) in fp_spans(self.g, self.d, s0, t) {
-            out[off..off + len]
-                .copy_from_slice(&s.fp(self.table.fp[pi])?[po..po + len]);
-        }
-        Ok(())
+        self.with_resident(
+            |c| c.ensure_fp_resident(),
+            || {
+                let s = self.shard.lock();
+                for (pi, po, off, len) in fp_spans(self.g, self.d, s0, t) {
+                    out[off..off + len]
+                        .copy_from_slice(&s.fp(self.table.fp[pi])?[po..po + len]);
+                }
+                Ok(())
+            },
+        )
     }
 
     /// Reconstruction-error bound of group `gi` for the chosen plane
     /// (paper §4.2): used by the mock decoder's read-back validation.
     pub fn group_error_bound(&self, gi: usize, draft: bool) -> Result<f32> {
         ensure!(gi < self.table.groups.len(), "group {gi} out of range");
-        let s = self.shard.lock();
-        let group = s.read_quant(self.table.groups[gi])?;
-        let (e8, e4) = crate::quant::error_bounds(group);
-        Ok(if draft { e4 } else { e8 })
+        let h = self.table.groups[gi];
+        self.with_resident(
+            |c| {
+                if c.shard.spilled_pages() > 0 {
+                    c.fault_pages(&[h], false)?;
+                }
+                Ok(())
+            },
+            || {
+                let s = self.shard.lock();
+                let group = s.read_quant(h)?;
+                let (e8, e4) = crate::quant::error_bounds(group);
+                Ok(if draft { e4 } else { e8 })
+            },
+        )
     }
 
     /// Move group `gi` to a freshly allocated page (defragmentation /
@@ -555,6 +741,9 @@ impl PagedKvCache {
     pub fn relocate_group(&mut self, gi: usize) -> Result<()> {
         ensure!(gi < self.table.groups.len(), "group {gi} out of range");
         let old = self.table.groups[gi];
+        if self.shard.spilled_pages() > 0 {
+            self.fault_pages(&[old], false)?;
+        }
         let data = self.shard.lock().read_quant(old)?.clone();
         let new = self.alloc_page(PageKind::Quant)?;
         self.shard.lock().write_quant(new, data)?;
@@ -564,7 +753,9 @@ impl PagedKvCache {
     }
 
     /// Return every page to the pool and forget the session (one manager
-    /// lock — the session leaves the admission books here).
+    /// lock — the session leaves the admission books here). Routes
+    /// through the shard's idempotent `retire()`, which also frees any
+    /// cold-tier slots the session still holds.
     pub fn release(&mut self) {
         lock(&self.mgr).release(self.session);
         self.table = BlockTable::default();
@@ -648,6 +839,23 @@ mod tests {
             high_watermark: 1.0,
             low_watermark: 1.0,
             quant_workers,
+            ..PoolConfig::default()
+        })
+        .unwrap()
+    }
+
+    /// Manager with the cold tier enabled (spill store backed by a temp
+    /// file, unbounded slots).
+    fn tiered_mgr(pages: usize, spill_pages: usize) -> SharedSessionManager {
+        shared(PoolConfig {
+            pages,
+            page_tokens: G,
+            kv_dim: D,
+            high_watermark: 1.0,
+            low_watermark: 1.0,
+            quant_workers: 1,
+            spill_pages,
+            ..PoolConfig::default()
         })
         .unwrap()
     }
@@ -1158,5 +1366,134 @@ mod tests {
                 lock(&mgr).pool().pages_in_use() == 0
             },
         );
+    }
+
+    /// Property (tier round-trip, the spill/restore acceptance): over
+    /// randomized prefill sizes, decode traffic, and spill shapes
+    /// (whole-session hibernation vs partial page-granular spills),
+    /// every committed position reads back bit-identically through the
+    /// transparent fault-back on both planes, and the arena's page and
+    /// logical/host byte accounting returns exactly to its pre-spill
+    /// value once the session is resident again.
+    #[test]
+    fn prop_spill_restore_roundtrip_bit_identical() {
+        use crate::util::prop::{check, Config};
+        check::<Vec<u64>, _>(
+            Config { cases: 10, size: 5, ..Config::default() },
+            |seeds| {
+                for &seed in seeds {
+                    let buckets = 2 + (seed % 4) as usize;
+                    let mgr = tiered_mgr(64, 64);
+                    let mut c = cache(&mgr, 1, buckets + 4);
+                    c.prefill(buckets * G, &|p| mock_kv(p, (p as i32) ^ seed as i32, D))
+                        .unwrap();
+                    let mut pos = buckets * G;
+                    for _ in 0..(seed % 7) as usize {
+                        c.commit_ar(&mock_kv(pos, pos as i32, D)).unwrap();
+                        pos += 1;
+                    }
+                    let ctx = {
+                        let tr = c.tracker().unwrap();
+                        tr.n_q + tr.n_f
+                    };
+                    let mut want = vec![0.0f32; ctx * D];
+                    let mut want_draft = vec![0.0f32; ctx * D];
+                    c.read_tokens_into(0..ctx, false, &mut want).unwrap();
+                    c.read_tokens_into(0..ctx, true, &mut want_draft).unwrap();
+                    let (resident0, logical0, host0) = {
+                        let m = lock(&mgr);
+                        let p = m.pool();
+                        (p.pages_in_use(), p.logical_bytes(), p.host_bytes())
+                    };
+                    // spill: whole-session hibernation or a partial
+                    // page-granular demotion, alternating by seed
+                    let moved = if seed % 2 == 0 {
+                        lock(&mgr).hibernate(1).unwrap()
+                    } else {
+                        c.shard.spill_quant_pages(1 + (seed % 3) as usize).unwrap()
+                    };
+                    if moved == 0 || c.shard.spilled_pages() != moved {
+                        return false;
+                    }
+                    // transparent fault-back: same bits on both planes
+                    let mut got = vec![0.0f32; ctx * D];
+                    c.read_tokens_into(0..ctx, false, &mut got).unwrap();
+                    if got != want {
+                        return false;
+                    }
+                    c.read_tokens_into(0..ctx, true, &mut got).unwrap();
+                    if got != want_draft {
+                        return false;
+                    }
+                    // pull the rest of the FP buffer back; the books must
+                    // close exactly
+                    let mut tmp = vec![0.0f32; D];
+                    c.read_fp_slot_into(0, &mut tmp).unwrap();
+                    {
+                        let m = lock(&mgr);
+                        let p = m.pool();
+                        if c.shard.spilled_pages() != 0
+                            || (p.pages_in_use(), p.logical_bytes(), p.host_bytes())
+                                != (resident0, logical0, host0)
+                            || m.tier_stats().restore_faults == 0
+                        {
+                            return false;
+                        }
+                    }
+                    c.release();
+                    if lock(&mgr).pool().pages_in_use() != 0 {
+                        return false;
+                    }
+                }
+                true
+            },
+        );
+    }
+
+    /// Fetch-ahead vs on-demand accounting: `begin_cycle` speculatively
+    /// restores the FP buffer and the newest quant group (fetch-ahead
+    /// hits); touching an older cold group afterwards is an on-demand
+    /// restore fault. The two land on separate tier counters, and the
+    /// faulted bits match the pre-hibernation read exactly.
+    #[test]
+    fn fetch_ahead_hits_and_restore_faults_are_split() {
+        let mgr = tiered_mgr(32, 32);
+        let mut c = cache(&mgr, 1, 8);
+        c.prefill(4 * G, &|p| mock_kv(p, p as i32, D)).unwrap(); // 3 groups + C_F1
+        let want = c.read_token(0, true).unwrap();
+        let fp_pages = c.table().fp.len();
+        let moved = lock(&mgr).hibernate(1).unwrap();
+        assert_eq!(moved, 3 + fp_pages, "hibernate parked the whole shard");
+        c.begin_cycle().unwrap();
+        let st = lock(&mgr).tier_stats();
+        assert_eq!(
+            st.fetch_ahead_hits as usize,
+            fp_pages + 1,
+            "FP buffer + newest group restored speculatively"
+        );
+        assert_eq!(st.restore_faults, 0);
+        let mut out = vec![0.0f32; D];
+        c.read_token_into(0, true, &mut out).unwrap();
+        assert_eq!(out, want, "fault-back is bit-identical");
+        let st = lock(&mgr).tier_stats();
+        assert_eq!(st.fetch_ahead_hits as usize, fp_pages + 1);
+        assert_eq!(st.restore_faults, 1, "oldest group faulted on demand");
+        c.release();
+        assert_eq!(lock(&mgr).pool().pages_in_use(), 0);
+    }
+
+    /// Every flush is a hot → warm demotion on the tier books when a
+    /// spill store is attached.
+    #[test]
+    fn flush_counts_demotions_when_tiering_enabled() {
+        let mgr = tiered_mgr(32, 32);
+        let mut c = cache(&mgr, 1, 8);
+        c.prefill(2 * G, &|p| mock_kv(p, p as i32, D)).unwrap();
+        for i in 0..2 * G {
+            let pos = 2 * G + i;
+            c.commit_ar(&mock_kv(pos, pos as i32, D)).unwrap();
+        }
+        assert_eq!(lock(&mgr).tier_stats().demotions, 2, "two buffer flushes");
+        c.release();
     }
 }

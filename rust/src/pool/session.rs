@@ -1,5 +1,25 @@
 //! Session lifecycle over the sharded page arena: admission reservations,
-//! LRU eviction of preemptable sessions, and pool-pressure accounting.
+//! tiered page reclamation (spill → hibernate → evict), and pool-pressure
+//! accounting.
+//!
+//! # Reclamation (the tier escalation)
+//!
+//! Under pressure the manager's [`SessionManager::reclaim`] frees pages in
+//! escalating severity, returning a typed
+//! [`ReclaimOutcome`](super::tier::ReclaimOutcome):
+//!
+//! 1. **Spill** — park the LRU victim's written quantized pages in the
+//!    cold tier (page-granular; the victim's KV survives and faults back
+//!    bit-identically on its next touch);
+//! 2. **Hibernate** — move the LRU victim's entire shard cold (FP buffers
+//!    included); the session resumes without re-prefill;
+//! 3. **Evict** — the destructive pre-tier fallback: retire the LRU
+//!    *preemptable* session outright.
+//!
+//! Victim selection always skips shards mid-spill/restore
+//! (`SessionShard::in_transition`) and the session the reclaim is on
+//! behalf of. With tiering disabled (`PoolConfig::spill_pages == 0`) the
+//! first two rungs vanish and behavior is exactly the old LRU eviction.
 //!
 //! # The sharded-locking contract
 //!
@@ -37,6 +57,7 @@
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Result};
 
@@ -45,6 +66,7 @@ use crate::util::json::Json;
 use crate::util::threadpool::{PoolHandle, ThreadPool};
 
 use super::page::{PageHandle, PageKind, PagePool, PoolConfig, SessionId, SessionShard};
+use super::tier::{ReclaimOutcome, SpillStore, TierPolicy, TierStats};
 
 pub use super::page::CacheTraffic;
 
@@ -77,11 +99,59 @@ pub enum AdmitOutcome {
     TooLarge,
 }
 
+/// One coherent snapshot of every pool statistic, taken under a single
+/// manager-lock acquisition by [`SessionManager::snapshot`]. The router's
+/// gauge sync, the `/stats` handler, and the benches consume this struct
+/// instead of calling a dozen one-off getters (one lock per scrape).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PoolSnapshot {
+    pub pages_capacity: usize,
+    pub pages_in_use: usize,
+    pub pages_peak: usize,
+    pub pages_committed: usize,
+    pub pressure: f64,
+    pub high_watermark: f64,
+    pub low_watermark: f64,
+    /// Admission ceiling in pages (capacity × high_watermark).
+    pub high_pages: usize,
+    pub sessions_active: usize,
+    pub evictions: u64,
+    pub cancellations: u64,
+    pub prefill_deferrals: u64,
+    pub cache_bytes_host: usize,
+    pub cache_bytes_logical: usize,
+    pub traffic: CacheTraffic,
+    /// (workers, jobs executed, queue depth) of the shared quant pool.
+    pub quant_workers: usize,
+    pub quant_jobs: u64,
+    pub quant_queue_depth: usize,
+    pub step_workers: usize,
+    pub step_workers_busy: usize,
+    pub round_span_us: f64,
+    pub rounds: u64,
+    pub round_phases: RoundPhases,
+    // ---- tier block -----------------------------------------------------
+    /// Resident full-precision pages (hot tier).
+    pub tier_hot_pages: usize,
+    /// Resident quantized pages (warm tier).
+    pub tier_warm_pages: usize,
+    /// Cold-tier counters (all zero when tiering is off).
+    pub tier: TierStats,
+    /// Sessions whose every page is cold right now.
+    pub hibernated_sessions: usize,
+    /// Whether a `SpillStore` is attached (`PoolConfig::spill_pages > 0`).
+    pub tiering_enabled: bool,
+}
+
 struct SessionEntry {
     reserved: usize,
     preemptable: bool,
     evicted: bool,
     last_touch: u64,
+    /// Wall-clock of the last touch, for the idle-hibernation sweep (the
+    /// logical `last_touch` clock orders LRU decisions; this one answers
+    /// "idle for how long?").
+    touched_at: Instant,
     shard: Arc<SessionShard>,
 }
 
@@ -93,6 +163,9 @@ struct SessionEntry {
 /// manager mutex.
 pub struct SessionManager {
     arena: Arc<PagePool>,
+    /// The cold tier (None when `PoolConfig::spill_pages == 0`): every
+    /// shard admitted by this manager spills into / faults from it.
+    spill: Option<Arc<SpillStore>>,
     /// The shared quantization pool; handles are cloned out per session.
     quant: ThreadPool,
     sessions: BTreeMap<SessionId, SessionEntry>,
@@ -130,8 +203,23 @@ impl SessionManager {
              needs at least one worker; use 1 for serial quantization)"
         );
         let quant = ThreadPool::named(cfg.quant_workers, "qs-quant");
+        let spill = if cfg.spill_pages > 0 {
+            let policy = TierPolicy {
+                fetch_ahead: cfg.fetch_ahead,
+                ..TierPolicy::default()
+            };
+            Some(SpillStore::new(
+                &cfg.spill_dir,
+                cfg.elems(),
+                cfg.spill_pages,
+                policy,
+            )?)
+        } else {
+            None
+        };
         Ok(SessionManager {
             arena: Arc::new(PagePool::new(cfg)),
+            spill,
             quant,
             sessions: BTreeMap::new(),
             clock: 0,
@@ -274,12 +362,13 @@ impl SessionManager {
         if pages > high {
             return Ok(AdmitOutcome::TooLarge);
         }
-        // Over the ceiling: evict LRU preemptable sessions down toward the
-        // low watermark (hysteresis) to make room.
+        // Over the ceiling: reclaim down toward the low watermark
+        // (hysteresis) to make room — page-granular spilling first,
+        // destructive eviction only as the last rung.
         if self.committed_pages() + pages > high {
             let low = self.watermark_pages(self.arena.cfg().low_watermark);
             while self.committed_pages() + pages > low {
-                if self.evict_lru(None).is_none() {
+                if !self.reclaim(None).progressed() {
                     break;
                 }
             }
@@ -288,7 +377,12 @@ impl SessionManager {
             return Ok(AdmitOutcome::Saturated);
         }
         self.clock += 1;
-        let shard = Arc::new(SessionShard::new(id, Arc::clone(&self.arena), pages));
+        let shard = Arc::new(SessionShard::with_spill(
+            id,
+            Arc::clone(&self.arena),
+            pages,
+            self.spill.clone(),
+        ));
         self.sessions.insert(
             id,
             SessionEntry {
@@ -296,6 +390,7 @@ impl SessionManager {
                 preemptable,
                 evicted: false,
                 last_touch: self.clock,
+                touched_at: Instant::now(),
                 shard,
             },
         );
@@ -322,12 +417,13 @@ impl SessionManager {
         }
     }
 
-    /// LRU-touch: marks the session recently used (eviction order).
+    /// LRU-touch: marks the session recently used (reclaim order).
     pub fn touch(&mut self, id: SessionId) {
         self.clock += 1;
         let clock = self.clock;
         if let Some(s) = self.sessions.get_mut(&id) {
             s.last_touch = clock;
+            s.touched_at = Instant::now();
         }
     }
 
@@ -341,27 +437,177 @@ impl SessionManager {
         self.sessions.get(&id).map(|s| s.evicted).unwrap_or(false)
     }
 
-    /// Evict the least-recently-touched preemptable session (drop its
-    /// pages; the session must re-prefill if resumed). Returns the victim.
-    pub fn evict_lru(&mut self, exclude: Option<SessionId>) -> Option<SessionId> {
-        let victim = self
+    /// LRU victim candidates for one reclaim rung, least recent first.
+    /// Mid-spill/restore shards are skipped everywhere: tearing one down
+    /// (or spilling under it) would race the transition's install step.
+    fn lru_victims(
+        &self,
+        exclude: Option<SessionId>,
+        preemptable_only: bool,
+    ) -> Vec<SessionId> {
+        let mut v: Vec<(u64, SessionId)> = self
             .sessions
             .iter()
             .filter(|(id, s)| {
-                s.preemptable
+                (!preemptable_only || s.preemptable)
                     && !s.evicted
+                    && !s.shard.in_transition()
                     && s.shard.live_pages() > 0
                     && Some(**id) != exclude
             })
-            .min_by_key(|(_, s)| s.last_touch)
-            .map(|(id, _)| *id)?;
+            .map(|(id, s)| (s.last_touch, *id))
+            .collect();
+        v.sort_unstable();
+        v.into_iter().map(|(_, id)| id).collect()
+    }
+
+    /// Evict the least-recently-touched preemptable session (drop its
+    /// pages; the session must re-prefill if resumed). Returns the victim.
+    /// Destructive — callers go through [`SessionManager::reclaim`], which
+    /// only lands here after the spill and hibernate rungs free nothing.
+    fn evict_lru(&mut self, exclude: Option<SessionId>) -> Option<(SessionId, usize)> {
+        let victim = self.lru_victims(exclude, true).into_iter().next()?;
         let entry = self.sessions.get_mut(&victim).expect("victim exists");
-        entry.shard.retire();
+        let pages = entry.shard.retire();
         entry.reserved = 0;
         entry.evicted = true;
         self.evictions += 1;
         crate::trace::emit(crate::trace::PhaseEvent::EvictLru { victim });
-        Some(victim)
+        Some((victim, pages))
+    }
+
+    /// Free arena pages under pressure, least destructively first. One
+    /// call works one rung on one victim; callers loop while
+    /// [`ReclaimOutcome::progressed`] and the shortage persists. This is
+    /// the typed replacement for the old `evict_lru(exclude) ->
+    /// Option<SessionId>` first-resort surface: with tiering enabled,
+    /// eviction is the *fallback*, not the policy.
+    pub fn reclaim(&mut self, exclude: Option<SessionId>) -> ReclaimOutcome {
+        if let Some(store) = self.spill.clone() {
+            let batch = store.policy().max_spill_batch;
+            // Rung 1 — page-granular spill of written quantized pages.
+            // Any session qualifies (the move is lossless); LRU order
+            // keeps actively-decoding sessions at the back of the line.
+            for victim in self.lru_victims(exclude, false) {
+                let shard = Arc::clone(&self.sessions[&victim].shard);
+                let t0 = Instant::now();
+                match shard.spill_quant_pages(batch) {
+                    Ok(pages) if pages > 0 => {
+                        self.note_spilled(victim, pages, t0);
+                        return ReclaimOutcome::Spilled { victim, pages };
+                    }
+                    Ok(_) => continue,
+                    // An I/O error on one victim must not wedge reclaim;
+                    // try the next rung / victim instead.
+                    Err(_) => continue,
+                }
+            }
+            // Rung 2 — hibernate the LRU victim's whole shard (FP buffers
+            // included). Still lossless: the session resumes without
+            // re-prefill.
+            if store.policy().hibernate_on_pressure {
+                for victim in self.lru_victims(exclude, false) {
+                    let shard = Arc::clone(&self.sessions[&victim].shard);
+                    let t0 = Instant::now();
+                    match shard.spill_all() {
+                        Ok(pages) if pages > 0 => {
+                            store.note_hibernation();
+                            self.note_spilled(victim, pages, t0);
+                            return ReclaimOutcome::Hibernated { victim, pages };
+                        }
+                        Ok(_) => continue,
+                        Err(_) => continue,
+                    }
+                }
+            }
+        }
+        // Rung 3 — destructive fallback.
+        match self.evict_lru(exclude) {
+            Some((victim, pages)) => ReclaimOutcome::Evicted { victim, pages },
+            None => ReclaimOutcome::Exhausted,
+        }
+    }
+
+    /// Shared bookkeeping for the two lossless rungs: shrink the victim's
+    /// reservation to its post-spill residency so `committed_pages` drops
+    /// (spilled pages must stop counting against admission), and leave a
+    /// `spill` trace event.
+    fn note_spilled(&mut self, victim: SessionId, pages: usize, t0: Instant) {
+        let entry = self.sessions.get_mut(&victim).expect("victim exists");
+        entry.reserved = entry.reserved.min(entry.shard.live_pages());
+        crate::trace::emit(crate::trace::PhaseEvent::Spill {
+            session: victim,
+            pages,
+            us: t0.elapsed().as_micros() as u64,
+        });
+    }
+
+    /// Hibernate one session explicitly: move its entire shard to the
+    /// cold tier. Used by the scheduler's idle sweep; a no-op (Ok(0))
+    /// when tiering is off, the session is unknown/evicted/mid-transition,
+    /// or it holds no resident pages.
+    pub fn hibernate(&mut self, id: SessionId) -> Result<usize> {
+        let Some(store) = self.spill.clone() else { return Ok(0) };
+        let shard = match self.sessions.get(&id) {
+            Some(s) if !s.evicted && !s.shard.in_transition() => Arc::clone(&s.shard),
+            _ => return Ok(0),
+        };
+        let t0 = Instant::now();
+        let pages = shard.spill_all()?;
+        if pages > 0 {
+            store.note_hibernation();
+            self.note_spilled(id, pages, t0);
+        }
+        Ok(pages)
+    }
+
+    /// Idle sweep: hibernate every session untouched for at least
+    /// `max_idle` (the scheduler calls this once per loop tick when
+    /// `hibernate_idle_ms` > 0). Returns sessions hibernated.
+    pub fn hibernate_idle(&mut self, max_idle: Duration) -> usize {
+        if self.spill.is_none() {
+            return 0;
+        }
+        let idle: Vec<SessionId> = self
+            .sessions
+            .iter()
+            .filter(|(_, s)| {
+                !s.evicted
+                    && !s.shard.in_transition()
+                    && s.shard.live_pages() > 0
+                    && s.touched_at.elapsed() >= max_idle
+            })
+            .map(|(id, _)| *id)
+            .collect();
+        let mut hibernated = 0usize;
+        for id in idle {
+            if matches!(self.hibernate(id), Ok(n) if n > 0) {
+                hibernated += 1;
+            }
+        }
+        hibernated
+    }
+
+    /// Sessions currently fully cold (every page spilled, none resident) —
+    /// the `hibernated_sessions` gauge. Self-clearing: a fault-back makes
+    /// the session warm again without manager involvement.
+    pub fn hibernated_sessions(&self) -> usize {
+        self.sessions
+            .values()
+            .filter(|s| {
+                !s.evicted && s.shard.live_pages() == 0 && s.shard.spilled_pages() > 0
+            })
+            .count()
+    }
+
+    /// The cold tier, when tiering is enabled.
+    pub fn spill_store(&self) -> Option<&Arc<SpillStore>> {
+        self.spill.as_ref()
+    }
+
+    /// Cold-tier counters (zeros when tiering is off).
+    pub fn tier_stats(&self) -> TierStats {
+        self.spill.as_ref().map(|s| s.stats()).unwrap_or_default()
     }
 
     /// Allocate one page for a session, evicting preemptable sessions if
@@ -382,9 +628,9 @@ impl SessionManager {
             if let Some(h) = shard.alloc_locked(kind)? {
                 return Ok(h);
             }
-            if self.evict_lru(Some(id)).is_none() {
+            if !self.reclaim(Some(id)).progressed() {
                 bail!(
-                    "pool exhausted and nothing preemptable \
+                    "pool exhausted and nothing reclaimable \
                      ({} pages, session {id})",
                     self.arena.capacity()
                 );
@@ -410,95 +656,160 @@ impl SessionManager {
         }
     }
 
+    /// Every pool statistic in one pass — THE read surface for the
+    /// router's gauge sync, `/stats`, and the benches (one manager-lock
+    /// acquisition per scrape instead of a dozen getter calls).
+    pub fn snapshot(&self) -> PoolSnapshot {
+        let (quant_workers, quant_jobs, quant_queue_depth) = self.quant_pool_stats();
+        PoolSnapshot {
+            pages_capacity: self.arena.capacity(),
+            pages_in_use: self.arena.pages_in_use(),
+            pages_peak: self.arena.peak_pages_in_use(),
+            pages_committed: self.committed_pages(),
+            pressure: self.arena.pressure(),
+            high_watermark: self.arena.cfg().high_watermark,
+            low_watermark: self.arena.cfg().low_watermark,
+            high_pages: self.high_pages(),
+            sessions_active: self.active_sessions(),
+            evictions: self.evictions,
+            cancellations: self.cancellations,
+            prefill_deferrals: self.prefill_deferrals,
+            cache_bytes_host: self.arena.host_bytes(),
+            cache_bytes_logical: self.arena.logical_bytes(),
+            traffic: self.traffic(),
+            quant_workers,
+            quant_jobs,
+            quant_queue_depth,
+            step_workers: self.step_workers,
+            step_workers_busy: self.step_workers_busy,
+            round_span_us: self.round_span_us,
+            rounds: self.rounds,
+            round_phases: self.round_phase_totals(),
+            tier_hot_pages: self.arena.pages_fp(),
+            tier_warm_pages: self.arena.pages_quant(),
+            tier: self.tier_stats(),
+            hibernated_sessions: self.hibernated_sessions(),
+            tiering_enabled: self.spill.is_some(),
+        }
+    }
+
     /// Snapshot for `/stats` and the benches.
     pub fn stats_json(&self) -> Json {
-        let (q_workers, q_jobs, q_depth) = self.quant_pool_stats();
-        let traffic = self.traffic();
+        let s = self.snapshot();
         Json::obj(vec![
-            ("pages_capacity", Json::num(self.arena.capacity() as f64)),
-            ("pages_in_use", Json::num(self.arena.pages_in_use() as f64)),
-            ("pages_peak", Json::num(self.arena.peak_pages_in_use() as f64)),
-            ("pages_committed", Json::num(self.committed_pages() as f64)),
-            ("pressure", Json::num(self.arena.pressure())),
-            ("high_watermark", Json::num(self.arena.cfg().high_watermark)),
-            ("low_watermark", Json::num(self.arena.cfg().low_watermark)),
-            ("sessions_active", Json::num(self.active_sessions() as f64)),
-            ("evictions", Json::num(self.evictions as f64)),
-            ("cancellations", Json::num(self.cancellations as f64)),
-            ("cache_bytes_host", Json::num(self.arena.host_bytes() as f64)),
+            ("pages_capacity", Json::num(s.pages_capacity as f64)),
+            ("pages_in_use", Json::num(s.pages_in_use as f64)),
+            ("pages_peak", Json::num(s.pages_peak as f64)),
+            ("pages_committed", Json::num(s.pages_committed as f64)),
+            ("pressure", Json::num(s.pressure)),
+            ("high_watermark", Json::num(s.high_watermark)),
+            ("low_watermark", Json::num(s.low_watermark)),
+            ("sessions_active", Json::num(s.sessions_active as f64)),
+            ("evictions", Json::num(s.evictions as f64)),
+            ("cancellations", Json::num(s.cancellations as f64)),
+            ("cache_bytes_host", Json::num(s.cache_bytes_host as f64)),
             (
                 "cache_bytes_logical",
-                Json::num(self.arena.logical_bytes() as f64),
+                Json::num(s.cache_bytes_logical as f64),
             ),
             (
                 crate::metrics::names::DEQUANT_CALLS_DRAFT,
-                Json::num(traffic.dequant_calls_draft as f64),
+                Json::num(s.traffic.dequant_calls_draft as f64),
             ),
             (
                 crate::metrics::names::DEQUANT_CALLS_TARGET,
-                Json::num(traffic.dequant_calls_target as f64),
+                Json::num(s.traffic.dequant_calls_target as f64),
             ),
             (
                 crate::metrics::names::QUANT_BYTES_READ_DRAFT,
-                Json::num(traffic.bytes_read_draft as f64),
+                Json::num(s.traffic.bytes_read_draft as f64),
             ),
             (
                 crate::metrics::names::QUANT_BYTES_READ_TARGET,
-                Json::num(traffic.bytes_read_target as f64),
+                Json::num(s.traffic.bytes_read_target as f64),
             ),
             (
                 crate::metrics::names::QUANT_POOL_WORKERS,
-                Json::num(q_workers as f64),
+                Json::num(s.quant_workers as f64),
             ),
-            (crate::metrics::names::QUANT_POOL_JOBS, Json::num(q_jobs as f64)),
+            (
+                crate::metrics::names::QUANT_POOL_JOBS,
+                Json::num(s.quant_jobs as f64),
+            ),
             (
                 crate::metrics::names::QUANT_POOL_QUEUE_DEPTH,
-                Json::num(q_depth as f64),
+                Json::num(s.quant_queue_depth as f64),
             ),
             (
                 crate::metrics::names::PREFILL_DEFERRALS,
-                Json::num(self.prefill_deferrals as f64),
+                Json::num(s.prefill_deferrals as f64),
             ),
             (
                 crate::metrics::names::STEP_WORKERS,
-                Json::num(self.step_workers as f64),
+                Json::num(s.step_workers as f64),
             ),
             (
                 crate::metrics::names::STEP_WORKERS_BUSY,
-                Json::num(self.step_workers_busy as f64),
+                Json::num(s.step_workers_busy as f64),
             ),
-            (
-                crate::metrics::names::ROUND_SPAN_US,
-                Json::num(self.round_span_us),
-            ),
+            (crate::metrics::names::ROUND_SPAN_US, Json::num(s.round_span_us)),
             (
                 crate::metrics::names::BATCHER_ROUNDS,
-                Json::num(self.rounds as f64),
+                Json::num(s.rounds as f64),
             ),
             (
                 crate::metrics::names::ROUND_PREFILL_US,
-                Json::num(self.round_prefill_us),
+                Json::num(s.round_phases.prefill_us),
             ),
             (
                 crate::metrics::names::ROUND_DECODE_US,
-                Json::num(self.round_decode_us),
+                Json::num(s.round_phases.decode_us),
             ),
             (
                 crate::metrics::names::ROUND_QUANT_WAIT_US,
-                Json::num(self.round_quant_wait_us),
+                Json::num(s.round_phases.quant_wait_us),
+            ),
+            (
+                "tier",
+                Json::obj(vec![
+                    ("enabled", Json::Bool(s.tiering_enabled)),
+                    (
+                        crate::metrics::names::TIER_HOT_PAGES,
+                        Json::num(s.tier_hot_pages as f64),
+                    ),
+                    (
+                        crate::metrics::names::TIER_WARM_PAGES,
+                        Json::num(s.tier_warm_pages as f64),
+                    ),
+                    (
+                        crate::metrics::names::TIER_SPILLED_PAGES,
+                        Json::num(s.tier.spilled_pages as f64),
+                    ),
+                    (
+                        crate::metrics::names::SPILL_BYTES_WRITTEN,
+                        Json::num(s.tier.spill_bytes_written as f64),
+                    ),
+                    ("spill_bytes_read", Json::num(s.tier.spill_bytes_read as f64)),
+                    (
+                        crate::metrics::names::RESTORE_FAULTS,
+                        Json::num(s.tier.restore_faults as f64),
+                    ),
+                    (
+                        crate::metrics::names::FETCH_AHEAD_HITS,
+                        Json::num(s.tier.fetch_ahead_hits as f64),
+                    ),
+                    ("demotions", Json::num(s.tier.demotions as f64)),
+                    (
+                        crate::metrics::names::SESSIONS_HIBERNATED_TOTAL,
+                        Json::num(s.tier.hibernations as f64),
+                    ),
+                    (
+                        crate::metrics::names::HIBERNATED_SESSIONS,
+                        Json::num(s.hibernated_sessions as f64),
+                    ),
+                ]),
             ),
         ])
-    }
-
-    /// Round-parallelism snapshot for the gauge sync:
-    /// (step_workers, step_workers_busy, round_span_us, rounds).
-    pub fn round_stats(&self) -> (usize, usize, f64, u64) {
-        (
-            self.step_workers,
-            self.step_workers_busy,
-            self.round_span_us,
-            self.rounds,
-        )
     }
 
     /// Cross-check session accounting against the arena.
@@ -650,9 +961,9 @@ mod tests {
             RoundPhases { prefill_us: 0.0, decode_us: 75.0, quant_wait_us: 0.0 },
         );
         assert_eq!(m.rounds(), 2);
-        let (workers, busy, span, rounds) = m.round_stats();
-        assert_eq!((workers, busy, rounds), (4, 3, 2));
-        assert!((span - 80.0).abs() < 1e-9);
+        let s = m.snapshot();
+        assert_eq!((s.step_workers, s.step_workers_busy, s.rounds), (4, 3, 2));
+        assert!((s.round_span_us - 80.0).abs() < 1e-9);
         // phase totals accumulate across rounds (cumulative counters)
         let totals = m.round_phase_totals();
         assert!((totals.prefill_us - 100.0).abs() < 1e-9);
@@ -699,7 +1010,7 @@ mod tests {
         let buf = TraceBuf::new(16);
         {
             let _scope = SpanScope::enter(Arc::clone(&buf));
-            assert_eq!(m.evict_lru(None), Some(1));
+            assert_eq!(m.evict_lru(None), Some((1, 1)));
         }
         let events = buf.snapshot();
         assert!(
@@ -872,5 +1183,222 @@ mod tests {
         }
         assert_eq!(mm.pool().pages_in_use(), 0, "pages leaked under stress");
         mm.check_integrity().unwrap();
+    }
+
+    // ---- tiered reclamation ---------------------------------------------
+
+    fn tiered_mgr(pages: usize, spill_pages: usize) -> SessionManager {
+        SessionManager::new(PoolConfig {
+            pages,
+            page_tokens: 4,
+            kv_dim: 2,
+            high_watermark: 0.9,
+            low_watermark: 0.6,
+            spill_pages,
+            ..PoolConfig::default()
+        })
+        .unwrap()
+    }
+
+    fn write_group(m: &SessionManager, id: SessionId, h: PageHandle, seed: f32) {
+        let elems = m.pool().cfg().elems();
+        let xs: Vec<f32> = (0..elems).map(|i| seed + i as f32 * 0.25).collect();
+        let g = crate::quant::quant_group(&xs).unwrap();
+        m.shard(id).unwrap().lock().write_quant(h, g).unwrap();
+    }
+
+    #[test]
+    fn reclaim_spills_before_evicting() {
+        let mut m = tiered_mgr(10, 64); // high 9, low 6
+        m.admit(1, 4, true).unwrap();
+        let handles: Vec<PageHandle> =
+            (0..4).map(|_| m.alloc(1, PageKind::Quant).unwrap()).collect();
+        for (i, &h) in handles.iter().enumerate() {
+            write_group(&m, 1, h, i as f32);
+        }
+        m.admit(2, 4, false).unwrap();
+        // committed 8; admitting 2 more crosses the ceiling — the first
+        // resort must be spilling session 1's pages, not evicting it
+        assert_eq!(m.admit(3, 2, false).unwrap(), AdmitOutcome::Admitted);
+        assert!(!m.is_evicted(1), "victim survived reclamation");
+        assert_eq!(m.evictions(), 0, "no destructive eviction happened");
+        assert_eq!(m.tier_stats().spilled_pages, 4);
+        assert_eq!(m.hibernated_sessions(), 1, "session 1 is fully cold");
+        m.check_integrity().unwrap();
+        // the spilled KV faults back bit-identically — no re-prefill
+        let shard = m.shard(1).unwrap();
+        for &h in &handles {
+            assert_eq!(
+                shard.fault_page(h).unwrap(),
+                crate::pool::FaultOutcome::Restored
+            );
+        }
+        assert_eq!(m.hibernated_sessions(), 0, "gauge self-clears on resume");
+        let elems = m.pool().cfg().elems();
+        let want: Vec<f32> = (0..elems).map(|i| 2.0 + i as f32 * 0.25).collect();
+        let g = crate::quant::quant_group(&want).unwrap();
+        assert_eq!(*shard.lock().read_quant(handles[2]).unwrap(), g);
+        for id in [1, 2, 3] {
+            m.release(id);
+        }
+        assert_eq!(m.pool().pages_in_use(), 0);
+        assert_eq!(m.tier_stats().spilled_pages, 0, "cold slots handed back");
+    }
+
+    #[test]
+    fn reclaim_escalates_to_hibernation_for_fp_only_shards() {
+        let mut m = tiered_mgr(10, 64);
+        m.admit(1, 4, true).unwrap();
+        for _ in 0..4 {
+            m.alloc(1, PageKind::Fp).unwrap(); // no written quant pages
+        }
+        let out = m.reclaim(None);
+        assert!(
+            matches!(out, ReclaimOutcome::Hibernated { victim: 1, pages: 4 }),
+            "fp-only shard hibernates, got {out:?}"
+        );
+        assert!(!m.is_evicted(1));
+        assert_eq!(m.tier_stats().hibernations, 1);
+        assert_eq!(m.hibernated_sessions(), 1);
+        // everything is cold now: nothing left to spill OR evict
+        assert_eq!(m.reclaim(None), ReclaimOutcome::Exhausted);
+        m.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn reclaim_without_tiering_is_plain_lru_eviction() {
+        let mut m = mgr(10); // spill_pages = 0
+        m.admit(1, 2, true).unwrap();
+        m.alloc(1, PageKind::Quant).unwrap();
+        let out = m.reclaim(None);
+        assert!(
+            matches!(out, ReclaimOutcome::Evicted { victim: 1, pages: 1 }),
+            "got {out:?}"
+        );
+        assert!(m.is_evicted(1));
+        assert_eq!(m.evictions(), 1);
+    }
+
+    #[test]
+    fn hibernate_idle_sweeps_untouched_sessions() {
+        let mut m = tiered_mgr(10, 64);
+        m.admit(1, 2, true).unwrap();
+        let h = m.alloc(1, PageKind::Quant).unwrap();
+        write_group(&m, 1, h, 0.0);
+        m.admit(2, 2, false).unwrap(); // no pages: nothing to hibernate
+        std::thread::sleep(Duration::from_millis(5));
+        assert_eq!(m.hibernate_idle(Duration::from_millis(1)), 1);
+        assert_eq!(m.hibernated_sessions(), 1);
+        assert_eq!(m.tier_stats().hibernations, 1);
+        // a freshly touched session is not swept
+        let h2 = m.alloc(2, PageKind::Fp).unwrap();
+        m.touch(2);
+        assert_eq!(m.hibernate_idle(Duration::from_secs(3600)), 0);
+        let _ = h2;
+        m.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn snapshot_and_stats_carry_the_tier_block() {
+        let mut m = tiered_mgr(10, 64);
+        m.admit(1, 2, true).unwrap();
+        let h = m.alloc(1, PageKind::Quant).unwrap();
+        write_group(&m, 1, h, 1.0);
+        m.alloc(1, PageKind::Fp).unwrap();
+        let s = m.snapshot();
+        assert!(s.tiering_enabled);
+        assert_eq!(s.tier_hot_pages, 1);
+        assert_eq!(s.tier_warm_pages, 1);
+        assert_eq!(s.tier.spilled_pages, 0);
+        m.hibernate(1).unwrap();
+        let s = m.snapshot();
+        assert_eq!((s.tier_hot_pages, s.tier_warm_pages), (0, 0));
+        assert_eq!(s.tier.spilled_pages, 2);
+        assert_eq!(s.hibernated_sessions, 1);
+        assert!(s.tier.spill_bytes_written > 0);
+        let js = m.stats_json().to_string();
+        for key in [
+            "\"tier\"",
+            "tier_hot_pages",
+            "tier_spilled_pages",
+            "spill_bytes_written",
+            "restore_faults",
+            "fetch_ahead_hits",
+            "hibernated_sessions",
+            "sessions_hibernated_total",
+        ] {
+            assert!(js.contains(key), "missing {key} in {js}");
+        }
+    }
+
+    /// Satellite bugfix pin: victim selection skips shards mid-transition,
+    /// and concurrent reclaim + fault-back traffic never panics on a
+    /// generation check or leaks a page or cold slot.
+    #[test]
+    fn stress_concurrent_reclaim_and_restore_no_leaks() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::thread;
+        let m = Arc::new(Mutex::new(tiered_mgr(16, 64)));
+        let ids: Vec<SessionId> = (1..=3).collect();
+        let mut setups: Vec<(Arc<SessionShard>, Vec<PageHandle>)> = Vec::new();
+        {
+            let mut mm = m.lock().unwrap();
+            for &id in &ids {
+                mm.admit(id, 4, true).unwrap();
+                let handles: Vec<PageHandle> = (0..4)
+                    .map(|k| {
+                        let h = mm.alloc(id, PageKind::Quant).unwrap();
+                        write_group(&mm, id, h, (id * 10 + k) as f32);
+                        h
+                    })
+                    .collect();
+                setups.push((mm.shard(id).unwrap(), handles));
+            }
+        }
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut workers = Vec::new();
+        // data planes: fault cold pages back, then spill them again —
+        // constant tier churn without the manager lock. Errors (stale
+        // handles after an eviction, ArenaFull) are designed outcomes;
+        // a panic is the bug this test pins.
+        for (shard, handles) in setups {
+            let stop = Arc::clone(&stop);
+            workers.push(thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    for &h in &handles {
+                        let _ = shard.fault_page(h);
+                    }
+                    let _ = shard.spill_quant_pages(0);
+                    thread::yield_now();
+                }
+            }));
+        }
+        // control plane: reclaim pressure racing the spills above
+        {
+            let m = Arc::clone(&m);
+            let stop = Arc::clone(&stop);
+            workers.push(thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    m.lock().unwrap().reclaim(None);
+                    thread::yield_now();
+                }
+            }));
+        }
+        thread::sleep(std::time::Duration::from_millis(150));
+        stop.store(true, Ordering::Relaxed);
+        for w in workers {
+            w.join().unwrap();
+        }
+        let mut mm = m.lock().unwrap();
+        mm.check_integrity().unwrap();
+        for &id in &ids {
+            mm.release(id);
+        }
+        assert_eq!(mm.pool().pages_in_use(), 0, "arena pages leaked");
+        assert_eq!(
+            mm.tier_stats().spilled_pages,
+            0,
+            "cold-tier slots leaked"
+        );
     }
 }

@@ -1,0 +1,610 @@
+//! The pool's tier-transition surface: policy, typed reclaim outcomes,
+//! and the file-backed cold tier ([`SpillStore`]).
+//!
+//! The page hierarchy has three tiers:
+//!
+//! * **hot** — full-precision pages (the double FP buffer) in the arena;
+//! * **warm** — bit-packed quantized pages in the arena;
+//! * **cold** — pages serialized into page-aligned, checksummed slots of
+//!   an on-disk spill file, no longer counted against the arena budget.
+//!
+//! [`TierTransition`] names the moves between them: `Demote` is the
+//! in-arena hot→warm quantization flush the paged cache already performs,
+//! `Spill` parks a warm (or, during hibernation, hot) page in the cold
+//! store, and `Restore` faults it back. Every transition is lossless —
+//! spilled payloads carry raw plane bytes and IEEE-754 float bits, so a
+//! spill/restore round trip is bit-identical (pinned by property tests in
+//! `pool/paged.rs`).
+//!
+//! [`ReclaimOutcome`] is the typed result of the session manager's
+//! `reclaim`, replacing the old ad-hoc `evict_lru(exclude) ->
+//! Option<SessionId>` surface: page-granular spilling is the first
+//! resort, whole-shard hibernation the second, and destructive
+//! whole-session eviction only the fallback.
+//!
+//! # Lock order
+//!
+//! The store keeps its own slot-map mutex, acquired strictly *after* any
+//! shard data lock and never while holding the manager lock's guard
+//! across a transition that re-enters the manager. The full order is
+//! manager → shard data → spill slots; file I/O (`read_at`/`write_at`)
+//! happens outside the slot-map lock.
+//!
+//! # Spill-file format
+//!
+//! A flat array of fixed-size slots (`costmodel::memory::spill_slot_bytes`,
+//! 4 KiB-aligned). Each occupied slot holds a 32-byte header —
+//! magic `"QSPL"`, the slot generation, the page kind, the payload
+//! length, and an FNV-1a-64 payload checksum — followed by the payload.
+//! Slot generations mirror the arena's handle generations: freeing a slot
+//! bumps its generation, so a stale [`SpillHandle`] can never read
+//! another page's bytes, and a torn or corrupted slot fails its checksum
+//! instead of faulting garbage back into the arena.
+
+use std::fs::{File, OpenOptions};
+use std::os::unix::fs::FileExt;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::costmodel::memory::spill_slot_bytes;
+
+use super::page::PageKind;
+
+/// One move in the page hierarchy. `Demote` (hot→warm) is recorded by the
+/// paged cache's quantization flush; `Spill` (warm→cold) and `Restore`
+/// (cold→warm) are executed against the [`SpillStore`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TierTransition {
+    /// Hot FP page quantized into a warm in-arena page (the flush).
+    Demote,
+    /// Warm (or hibernating hot) page serialized into the cold store.
+    Spill,
+    /// Cold page faulted back into the arena.
+    Restore,
+}
+
+impl TierTransition {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TierTransition::Demote => "demote",
+            TierTransition::Spill => "spill",
+            TierTransition::Restore => "restore",
+        }
+    }
+}
+
+/// Knobs governing when pages move between tiers. Carried by the
+/// [`SpillStore`] so every layer (manager reclaim, paged-cache
+/// fetch-ahead) reads one policy without extra plumbing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TierPolicy {
+    /// Escalate page-granular reclaim to whole-shard hibernation when
+    /// spilling written quantized pages alone frees nothing.
+    pub hibernate_on_pressure: bool,
+    /// Speculatively restore the next verify window's cold pages at cycle
+    /// start, overlapping the transfer with the decode round.
+    pub fetch_ahead: bool,
+    /// Max pages one reclaim pass spills from a single victim
+    /// (0 = no cap — take everything spillable).
+    pub max_spill_batch: usize,
+}
+
+impl Default for TierPolicy {
+    fn default() -> Self {
+        TierPolicy { hibernate_on_pressure: true, fetch_ahead: true, max_spill_batch: 0 }
+    }
+}
+
+/// Typed result of one `SessionManager::reclaim` pass — the redesigned
+/// replacement for the ad-hoc `evict_lru(exclude) -> Option<SessionId>`
+/// surface. Ordered by preference: spilling preserves the victim's KV
+/// (it faults back transparently), eviction destroys it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReclaimOutcome {
+    /// Page-granular first resort: `pages` of the victim's written
+    /// quantized pages moved to the cold tier.
+    Spilled { victim: super::page::SessionId, pages: usize },
+    /// The victim's entire resident shard moved cold; it resumes
+    /// bit-identically on its next touch instead of being recomputed.
+    Hibernated { victim: super::page::SessionId, pages: usize },
+    /// Destructive fallback: the victim was evicted whole-session (its
+    /// pages are gone, a subsequent touch errors).
+    Evicted { victim: super::page::SessionId, pages: usize },
+    /// Nothing left to spill, hibernate, or evict.
+    Exhausted,
+}
+
+impl ReclaimOutcome {
+    /// Arena pages the pass freed.
+    pub fn pages(&self) -> usize {
+        match *self {
+            ReclaimOutcome::Spilled { pages, .. }
+            | ReclaimOutcome::Hibernated { pages, .. }
+            | ReclaimOutcome::Evicted { pages, .. } => pages,
+            ReclaimOutcome::Exhausted => 0,
+        }
+    }
+
+    pub fn victim(&self) -> Option<super::page::SessionId> {
+        match *self {
+            ReclaimOutcome::Spilled { victim, .. }
+            | ReclaimOutcome::Hibernated { victim, .. }
+            | ReclaimOutcome::Evicted { victim, .. } => Some(victim),
+            ReclaimOutcome::Exhausted => None,
+        }
+    }
+
+    /// Whether the caller's retry loop should attempt another allocation.
+    pub fn progressed(&self) -> bool {
+        self.pages() > 0
+    }
+}
+
+/// Generation-checked reference to one occupied cold-tier slot, mirroring
+/// the arena's `PageHandle` discipline: freeing a slot bumps its
+/// generation, so stale handles fail validation instead of aliasing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpillHandle {
+    slot: u32,
+    gen: u32,
+}
+
+impl SpillHandle {
+    /// Slot index (for logs/assertions; cannot forge a valid handle).
+    pub fn slot(&self) -> u32 {
+        self.slot
+    }
+}
+
+const SLOT_MAGIC: u32 = 0x5153_504C; // "QSPL"
+const SLOT_HEADER_BYTES: usize = 32;
+
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1_0000_0000_01b3);
+    }
+    h
+}
+
+fn kind_code(kind: PageKind) -> u32 {
+    match kind {
+        PageKind::Quant => 0,
+        PageKind::Fp => 1,
+    }
+}
+
+fn kind_from_code(code: u32) -> Result<PageKind> {
+    match code {
+        0 => Ok(PageKind::Quant),
+        1 => Ok(PageKind::Fp),
+        _ => anyhow::bail!("spill slot holds unknown page kind {code}"),
+    }
+}
+
+/// Serialize one FP page for the cold tier: `[len u32 LE]` then raw
+/// IEEE-754 bits per value — bit-identical on the way back.
+pub fn encode_fp_page(vals: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + 4 * vals.len());
+    out.extend_from_slice(&(vals.len() as u32).to_le_bytes());
+    for v in vals {
+        out.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    out
+}
+
+/// Inverse of [`encode_fp_page`]; rejects malformed framing.
+pub fn decode_fp_page(buf: &[u8]) -> Result<Vec<f32>> {
+    ensure!(buf.len() >= 4, "fp page header truncated ({} bytes)", buf.len());
+    let n = u32::from_le_bytes(buf[0..4].try_into().unwrap()) as usize;
+    ensure!(
+        buf.len() == 4 + 4 * n,
+        "fp page payload is {} bytes, expected {}",
+        buf.len(),
+        4 + 4 * n
+    );
+    Ok(buf[4..]
+        .chunks_exact(4)
+        .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+        .collect())
+}
+
+struct SlotMap {
+    gens: Vec<u32>,
+    free: Vec<u32>,
+}
+
+/// Counters the manager's `PoolSnapshot` and `/stats` tier block read in
+/// one pass. All fields are lifetime totals except `spilled_pages`
+/// (instantaneous cold-tier occupancy).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TierStats {
+    pub spilled_pages: usize,
+    pub spill_bytes_written: u64,
+    pub spill_bytes_read: u64,
+    pub restore_faults: u64,
+    pub fetch_ahead_hits: u64,
+    pub demotions: u64,
+    pub hibernations: u64,
+}
+
+/// The file-backed cold tier. Thread-safe: slot bookkeeping sits behind
+/// one mutex, file I/O uses positioned reads/writes (`FileExt`) so
+/// concurrent spills and restores never seek over each other, and all
+/// accounting is lock-free atomics.
+pub struct SpillStore {
+    file: File,
+    path: PathBuf,
+    slot_bytes: usize,
+    capacity_slots: usize,
+    policy: TierPolicy,
+    slots: Mutex<SlotMap>,
+    spilled_pages: AtomicUsize,
+    bytes_written: AtomicU64,
+    bytes_read: AtomicU64,
+    restore_faults: AtomicU64,
+    fetch_ahead_hits: AtomicU64,
+    demotions: AtomicU64,
+    hibernations: AtomicU64,
+}
+
+impl SpillStore {
+    /// Create a spill file under `dir` (empty ⇒ the system temp dir),
+    /// sized for pages of `elems` values. `capacity_pages` caps cold-tier
+    /// occupancy (0 = unbounded); when the cap is hit,
+    /// [`SpillStore::write_page`] reports `None` and the reclaimer falls
+    /// back to eviction. The file is unlinked when the store drops.
+    pub fn new(
+        dir: &str,
+        elems: usize,
+        capacity_pages: usize,
+        policy: TierPolicy,
+    ) -> Result<Arc<SpillStore>> {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let dir = if dir.is_empty() {
+            std::env::temp_dir()
+        } else {
+            PathBuf::from(dir)
+        };
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating spill dir {}", dir.display()))?;
+        let name = format!(
+            "qs-spill-{}-{}.bin",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        );
+        let path = dir.join(name);
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create_new(true)
+            .open(&path)
+            .with_context(|| format!("creating spill file {}", path.display()))?;
+        Ok(Arc::new(SpillStore {
+            file,
+            path,
+            slot_bytes: spill_slot_bytes(elems),
+            capacity_slots: if capacity_pages == 0 { usize::MAX } else { capacity_pages },
+            policy,
+            slots: Mutex::new(SlotMap { gens: Vec::new(), free: Vec::new() }),
+            spilled_pages: AtomicUsize::new(0),
+            bytes_written: AtomicU64::new(0),
+            bytes_read: AtomicU64::new(0),
+            restore_faults: AtomicU64::new(0),
+            fetch_ahead_hits: AtomicU64::new(0),
+            demotions: AtomicU64::new(0),
+            hibernations: AtomicU64::new(0),
+        }))
+    }
+
+    pub fn policy(&self) -> TierPolicy {
+        self.policy
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Fixed slot size (page-aligned; see `costmodel::spill_slot_bytes`).
+    pub fn slot_bytes(&self) -> usize {
+        self.slot_bytes
+    }
+
+    /// Pages currently parked in the cold tier.
+    pub fn spilled_pages(&self) -> usize {
+        self.spilled_pages.load(Ordering::Acquire)
+    }
+
+    pub fn stats(&self) -> TierStats {
+        TierStats {
+            spilled_pages: self.spilled_pages.load(Ordering::Acquire),
+            spill_bytes_written: self.bytes_written.load(Ordering::Relaxed),
+            spill_bytes_read: self.bytes_read.load(Ordering::Relaxed),
+            restore_faults: self.restore_faults.load(Ordering::Relaxed),
+            fetch_ahead_hits: self.fetch_ahead_hits.load(Ordering::Relaxed),
+            demotions: self.demotions.load(Ordering::Relaxed),
+            hibernations: self.hibernations.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Account a hot→warm demotion (the paged cache's quantization flush).
+    pub fn note_demotion(&self) {
+        self.demotions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Account `pages` cold→warm restores: speculative ones (fetch-ahead,
+    /// before any read blocked) count as hits, on-demand ones as faults.
+    pub fn note_restore(&self, pages: usize, speculative: bool) {
+        let ctr = if speculative { &self.fetch_ahead_hits } else { &self.restore_faults };
+        ctr.fetch_add(pages as u64, Ordering::Relaxed);
+    }
+
+    /// Account one whole-shard hibernation (monotone total).
+    pub fn note_hibernation(&self) {
+        self.hibernations.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Park one serialized page in the cold tier. `Ok(None)` means the
+    /// tier is at capacity — the caller escalates (eviction) rather than
+    /// blocking. The payload must fit the fixed slot.
+    pub fn write_page(&self, kind: PageKind, payload: &[u8]) -> Result<Option<SpillHandle>> {
+        ensure!(
+            SLOT_HEADER_BYTES + payload.len() <= self.slot_bytes,
+            "spill payload of {} bytes exceeds the {}-byte slot",
+            payload.len(),
+            self.slot_bytes
+        );
+        let (slot, gen) = {
+            let mut m = self.slots.lock().unwrap();
+            match m.free.pop() {
+                Some(slot) => (slot, m.gens[slot as usize]),
+                None => {
+                    if m.gens.len() >= self.capacity_slots {
+                        return Ok(None);
+                    }
+                    let slot = m.gens.len() as u32;
+                    m.gens.push(0);
+                    (slot, 0)
+                }
+            }
+        };
+        let mut buf = Vec::with_capacity(SLOT_HEADER_BYTES + payload.len());
+        buf.extend_from_slice(&SLOT_MAGIC.to_le_bytes());
+        buf.extend_from_slice(&gen.to_le_bytes());
+        buf.extend_from_slice(&kind_code(kind).to_le_bytes());
+        buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&fnv1a64(payload).to_le_bytes());
+        buf.extend_from_slice(&[0u8; 8]);
+        buf.extend_from_slice(payload);
+        let off = slot as u64 * self.slot_bytes as u64;
+        if let Err(e) = self.file.write_all_at(&buf, off) {
+            // hand the slot back so an I/O error doesn't leak it
+            let mut m = self.slots.lock().unwrap();
+            m.gens[slot as usize] = m.gens[slot as usize].wrapping_add(1);
+            m.free.push(slot);
+            return Err(e).with_context(|| format!("writing spill slot {slot}"));
+        }
+        self.bytes_written.fetch_add(buf.len() as u64, Ordering::Relaxed);
+        self.spilled_pages.fetch_add(1, Ordering::Release);
+        Ok(Some(SpillHandle { slot, gen }))
+    }
+
+    fn check(&self, h: SpillHandle, m: &SlotMap) -> Result<()> {
+        ensure!(
+            (h.slot as usize) < m.gens.len(),
+            "spill handle slot {} out of range ({} slots)",
+            h.slot,
+            m.gens.len()
+        );
+        ensure!(
+            m.gens[h.slot as usize] == h.gen,
+            "stale spill handle for slot {} (gen {} != {})",
+            h.slot,
+            h.gen,
+            m.gens[h.slot as usize]
+        );
+        Ok(())
+    }
+
+    /// Read one cold page without freeing its slot (fetch-ahead peeks and
+    /// tests). Verifies generation, magic, framing, and checksum.
+    pub fn read_page(&self, h: SpillHandle) -> Result<(PageKind, Vec<u8>)> {
+        {
+            let m = self.slots.lock().unwrap();
+            self.check(h, &m)?;
+        }
+        let off = h.slot as u64 * self.slot_bytes as u64;
+        let mut header = [0u8; SLOT_HEADER_BYTES];
+        self.file
+            .read_exact_at(&mut header, off)
+            .with_context(|| format!("reading spill slot {} header", h.slot))?;
+        let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
+        ensure!(magic == SLOT_MAGIC, "spill slot {} bad magic {magic:#x}", h.slot);
+        let gen = u32::from_le_bytes(header[4..8].try_into().unwrap());
+        ensure!(gen == h.gen, "spill slot {} holds gen {gen}, handle has {}", h.slot, h.gen);
+        let kind = kind_from_code(u32::from_le_bytes(header[8..12].try_into().unwrap()))?;
+        let len = u32::from_le_bytes(header[12..16].try_into().unwrap()) as usize;
+        ensure!(
+            SLOT_HEADER_BYTES + len <= self.slot_bytes,
+            "spill slot {} claims {len}-byte payload beyond the slot",
+            h.slot
+        );
+        let want_sum = u64::from_le_bytes(header[16..24].try_into().unwrap());
+        let mut payload = vec![0u8; len];
+        self.file
+            .read_exact_at(&mut payload, off + SLOT_HEADER_BYTES as u64)
+            .with_context(|| format!("reading spill slot {} payload", h.slot))?;
+        let got_sum = fnv1a64(&payload);
+        ensure!(
+            got_sum == want_sum,
+            "spill slot {} checksum mismatch ({got_sum:#x} != {want_sum:#x}): \
+             refusing to restore corrupt page",
+            h.slot
+        );
+        self.bytes_read.fetch_add((SLOT_HEADER_BYTES + len) as u64, Ordering::Relaxed);
+        Ok((kind, payload))
+    }
+
+    /// Restore semantics: read the page, then free its slot (generation
+    /// bumped so the handle dies). The cold tier never holds a page that
+    /// is also resident.
+    pub fn take_page(&self, h: SpillHandle) -> Result<(PageKind, Vec<u8>)> {
+        let out = self.read_page(h)?;
+        self.free_page(h)?;
+        Ok(out)
+    }
+
+    /// Release a cold slot without reading it (page freed while spilled —
+    /// session retire). Stale handles error; a slot can't double-free.
+    pub fn free_page(&self, h: SpillHandle) -> Result<()> {
+        let mut m = self.slots.lock().unwrap();
+        self.check(h, &m)?;
+        m.gens[h.slot as usize] = m.gens[h.slot as usize].wrapping_add(1);
+        m.free.push(h.slot);
+        drop(m);
+        self.spilled_pages.fetch_sub(1, Ordering::Release);
+        Ok(())
+    }
+}
+
+impl Drop for SpillStore {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store(capacity: usize) -> Arc<SpillStore> {
+        SpillStore::new("", 16, capacity, TierPolicy::default()).unwrap()
+    }
+
+    #[test]
+    fn page_roundtrip_and_accounting() {
+        let s = store(0);
+        assert_eq!(s.slot_bytes() % 4096, 0, "slots are page-aligned");
+        let payload: Vec<u8> = (0..100u8).collect();
+        let h = s.write_page(PageKind::Quant, &payload).unwrap().unwrap();
+        assert_eq!(s.spilled_pages(), 1);
+        let (kind, back) = s.read_page(h).unwrap();
+        assert_eq!(kind, PageKind::Quant);
+        assert_eq!(back, payload);
+        assert_eq!(s.spilled_pages(), 1, "read_page leaves the slot occupied");
+        let (kind, back) = s.take_page(h).unwrap();
+        assert_eq!((kind, back), (PageKind::Quant, payload));
+        assert_eq!(s.spilled_pages(), 0, "take_page frees the slot");
+        let st = s.stats();
+        assert!(st.spill_bytes_written >= 132, "header + payload accounted");
+        assert!(st.spill_bytes_read >= 2 * 132, "two reads accounted");
+    }
+
+    #[test]
+    fn stale_and_double_frees_rejected() {
+        let s = store(0);
+        let h = s.write_page(PageKind::Fp, &[1, 2, 3]).unwrap().unwrap();
+        s.free_page(h).unwrap();
+        let err = s.free_page(h).unwrap_err().to_string();
+        assert!(err.contains("stale"), "{err}");
+        assert!(s.read_page(h).is_err(), "stale read rejected");
+        // the freed slot is reused under a new generation; the old handle
+        // still cannot see the new occupant
+        let h2 = s.write_page(PageKind::Quant, &[9]).unwrap().unwrap();
+        assert_eq!(h2.slot(), h.slot(), "slot reused");
+        assert!(s.read_page(h).is_err());
+        assert_eq!(s.read_page(h2).unwrap().1, vec![9]);
+    }
+
+    #[test]
+    fn capacity_cap_reports_full_not_error() {
+        let s = store(2);
+        let a = s.write_page(PageKind::Quant, &[1]).unwrap().unwrap();
+        let _b = s.write_page(PageKind::Quant, &[2]).unwrap().unwrap();
+        assert!(s.write_page(PageKind::Quant, &[3]).unwrap().is_none(), "full");
+        s.free_page(a).unwrap();
+        assert!(s.write_page(PageKind::Quant, &[4]).unwrap().is_some(), "slot reusable");
+    }
+
+    #[test]
+    fn corrupted_payload_fails_checksum() {
+        let s = store(0);
+        let h = s.write_page(PageKind::Quant, &[7u8; 64]).unwrap().unwrap();
+        // flip one payload byte on disk, behind the store's back
+        let f = OpenOptions::new().write(true).open(s.path()).unwrap();
+        f.write_all_at(&[0xFF], SLOT_HEADER_BYTES as u64 + 5).unwrap();
+        let err = s.read_page(h).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn oversized_payload_rejected() {
+        let s = store(0);
+        let huge = vec![0u8; s.slot_bytes()];
+        let err = s.write_page(PageKind::Fp, &huge).unwrap_err().to_string();
+        assert!(err.contains("exceeds"), "{err}");
+        assert_eq!(s.spilled_pages(), 0, "failed write leaks no slot");
+    }
+
+    #[test]
+    fn fp_page_encoding_is_bit_exact() {
+        let vals: Vec<f32> = vec![0.0, -0.0, 1.5, f32::MIN_POSITIVE, -3.25e-7, 1e30];
+        let bytes = encode_fp_page(&vals);
+        let back = decode_fp_page(&bytes).unwrap();
+        assert_eq!(vals.len(), back.len());
+        for (a, b) in vals.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(decode_fp_page(&bytes[..bytes.len() - 1]).is_err());
+        assert!(decode_fp_page(&[1, 0]).is_err());
+    }
+
+    #[test]
+    fn concurrent_spill_restore_is_safe() {
+        let s = store(0);
+        let threads: Vec<_> = (0..4u8)
+            .map(|t| {
+                let s = Arc::clone(&s);
+                std::thread::spawn(move || {
+                    for i in 0..50u8 {
+                        let payload = vec![t ^ i; 32];
+                        let h = s.write_page(PageKind::Quant, &payload).unwrap().unwrap();
+                        let (_, back) = s.take_page(h).unwrap();
+                        assert_eq!(back, payload);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(s.spilled_pages(), 0);
+    }
+
+    #[test]
+    fn reclaim_outcome_accessors() {
+        let spilled = ReclaimOutcome::Spilled { victim: 4, pages: 3 };
+        assert_eq!(spilled.pages(), 3);
+        assert_eq!(spilled.victim(), Some(4));
+        assert!(spilled.progressed());
+        assert!(!ReclaimOutcome::Exhausted.progressed());
+        assert_eq!(ReclaimOutcome::Exhausted.victim(), None);
+        assert_eq!(TierTransition::Spill.name(), "spill");
+        assert_eq!(TierTransition::Demote.name(), "demote");
+        assert_eq!(TierTransition::Restore.name(), "restore");
+    }
+
+    #[test]
+    fn spill_file_is_unlinked_on_drop() {
+        let s = store(0);
+        let path = s.path().to_path_buf();
+        s.write_page(PageKind::Quant, &[1, 2]).unwrap().unwrap();
+        assert!(path.exists());
+        drop(s);
+        assert!(!path.exists());
+    }
+}

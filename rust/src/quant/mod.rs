@@ -198,6 +198,56 @@ impl PackedGroup {
         }
     }
 
+    /// Exact number of bytes [`PackedGroup::write_bytes`] appends.
+    pub fn serialized_bytes(&self) -> usize {
+        12 + self.upper.len() + self.lower.len()
+    }
+
+    /// Serialize the group for the spill tier: `[len u32 LE]
+    /// [scale8 f32-bits u32 LE] [zero f32-bits u32 LE] [upper plane]
+    /// [lower plane]`. Floats travel as raw IEEE bits (`to_bits`), so a
+    /// round trip through [`PackedGroup::from_bytes`] is bit-identical —
+    /// the invariant every spill/restore path in the pool relies on.
+    pub fn write_bytes(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&(self.len as u32).to_le_bytes());
+        out.extend_from_slice(&self.scale8.to_bits().to_le_bytes());
+        out.extend_from_slice(&self.zero.to_bits().to_le_bytes());
+        out.extend_from_slice(&self.upper);
+        out.extend_from_slice(&self.lower);
+    }
+
+    /// Allocating convenience wrapper over [`PackedGroup::write_bytes`].
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.serialized_bytes());
+        self.write_bytes(&mut out);
+        out
+    }
+
+    /// Reconstruct a group serialized by [`PackedGroup::write_bytes`].
+    /// Validates the framing exactly: a truncated or oversized buffer is
+    /// an error, never a silently short group.
+    pub fn from_bytes(buf: &[u8]) -> Result<PackedGroup> {
+        ensure!(buf.len() >= 12, "packed group header truncated ({} bytes)", buf.len());
+        let len = u32::from_le_bytes(buf[0..4].try_into().unwrap()) as usize;
+        let scale8 = f32::from_bits(u32::from_le_bytes(buf[4..8].try_into().unwrap()));
+        let zero = f32::from_bits(u32::from_le_bytes(buf[8..12].try_into().unwrap()));
+        ensure!(len > 0, "packed group with zero codes");
+        let plane = len.div_ceil(2);
+        ensure!(
+            buf.len() == 12 + 2 * plane,
+            "packed group payload is {} bytes, expected {}",
+            buf.len(),
+            12 + 2 * plane
+        );
+        Ok(PackedGroup {
+            upper: buf[12..12 + plane].to_vec(),
+            lower: buf[12 + plane..].to_vec(),
+            len,
+            scale8,
+            zero,
+        })
+    }
+
     /// Lane-wise target (both-planes) unpack; same structure as
     /// [`PackedGroup::unpack_draft_span`], arithmetic exactly the scalar
     /// `target_value` expression.
@@ -534,6 +584,55 @@ mod tests {
         let mut bad = inputs;
         bad[4][0] = f32::NAN;
         assert!(quant_groups_parallel(bad, &shared_pool.handle()).is_err());
+    }
+
+    /// Property: spill-tier serialization round-trips bit-identically for
+    /// random (odd and even) group lengths — codes, scale/zero bits, and
+    /// every dequantized value through both planes.
+    #[test]
+    fn prop_serialization_roundtrips_bit_identical() {
+        use crate::util::prop::{check, Config};
+        check::<Vec<u64>, _>(
+            Config { cases: 40, size: 16, ..Config::default() },
+            |seeds| {
+                for &seed in seeds {
+                    let n = 1 + (seed % 133) as usize;
+                    let xs = random_group(seed, n, -5.0, 3.0);
+                    let g = quant_group(&xs).unwrap();
+                    let bytes = g.to_bytes();
+                    if bytes.len() != g.serialized_bytes() {
+                        return false;
+                    }
+                    let back = match PackedGroup::from_bytes(&bytes) {
+                        Ok(b) => b,
+                        Err(_) => return false,
+                    };
+                    if back != g
+                        || back.scale8.to_bits() != g.scale8.to_bits()
+                        || back.zero.to_bits() != g.zero.to_bits()
+                    {
+                        return false;
+                    }
+                    for i in 0..n {
+                        if back.draft_value(i).to_bits() != g.draft_value(i).to_bits()
+                            || back.target_value(i).to_bits() != g.target_value(i).to_bits()
+                        {
+                            return false;
+                        }
+                    }
+                    // truncated and padded buffers are rejected, not misread
+                    if PackedGroup::from_bytes(&bytes[..bytes.len() - 1]).is_ok() {
+                        return false;
+                    }
+                    let mut padded = bytes.clone();
+                    padded.push(0);
+                    if PackedGroup::from_bytes(&padded).is_ok() {
+                        return false;
+                    }
+                }
+                true
+            },
+        );
     }
 
     /// Property (lane-wise unpack parity): for random group lengths (odd

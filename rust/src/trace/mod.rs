@@ -64,6 +64,15 @@ pub enum PhaseEvent {
     /// Terminal marker: the request's deadline expired while queued or
     /// mid-flight; wall µs from enqueue to eviction.
     DeadlineExpired { total_us: u64 },
+    /// The tier policy spilled `pages` pages of session `session` to the
+    /// cold store (page-granular reclaim or hibernate) while this request
+    /// held the span scope.
+    Spill { session: u64, pages: usize, us: u64 },
+    /// A read faulted `pages` cold pages back into the arena on demand.
+    Restore { pages: usize, us: u64 },
+    /// The speculative fetch-ahead hook restored `pages` cold pages ahead
+    /// of the next verify window (overlapped with the decode round).
+    FetchAhead { pages: usize, us: u64 },
 }
 
 impl PhaseEvent {
@@ -79,6 +88,9 @@ impl PhaseEvent {
             PhaseEvent::Completed { .. } => "completed",
             PhaseEvent::Cancelled { .. } => "cancelled",
             PhaseEvent::DeadlineExpired { .. } => "deadline_expired",
+            PhaseEvent::Spill { .. } => "spill",
+            PhaseEvent::Restore { .. } => "restore",
+            PhaseEvent::FetchAhead { .. } => "fetch_ahead",
         }
     }
 
@@ -90,7 +102,10 @@ impl PhaseEvent {
             | PhaseEvent::PrefillChunk { us, .. }
             | PhaseEvent::DraftCycle { us, .. }
             | PhaseEvent::Verify { us }
-            | PhaseEvent::QuantFlush { us } => us,
+            | PhaseEvent::QuantFlush { us }
+            | PhaseEvent::Spill { us, .. }
+            | PhaseEvent::Restore { us, .. }
+            | PhaseEvent::FetchAhead { us, .. } => us,
             PhaseEvent::EvictLru { .. }
             | PhaseEvent::Completed { .. }
             | PhaseEvent::Cancelled { .. }
@@ -112,6 +127,9 @@ impl PhaseEvent {
             PhaseEvent::Completed { total_us } => (7, total_us, 0, 0),
             PhaseEvent::Cancelled { total_us } => (8, total_us, 0, 0),
             PhaseEvent::DeadlineExpired { total_us } => (9, total_us, 0, 0),
+            PhaseEvent::Spill { session, pages, us } => (10, session, pages as u64, us),
+            PhaseEvent::Restore { pages, us } => (11, pages as u64, us, 0),
+            PhaseEvent::FetchAhead { pages, us } => (12, pages as u64, us, 0),
         }
     }
 
@@ -127,6 +145,9 @@ impl PhaseEvent {
             7 => PhaseEvent::Completed { total_us: a },
             8 => PhaseEvent::Cancelled { total_us: a },
             9 => PhaseEvent::DeadlineExpired { total_us: a },
+            10 => PhaseEvent::Spill { session: a, pages: b as usize, us: c },
+            11 => PhaseEvent::Restore { pages: a as usize, us: b },
+            12 => PhaseEvent::FetchAhead { pages: a as usize, us: b },
             _ => return None,
         })
     }
@@ -149,6 +170,15 @@ impl PhaseEvent {
             }
             PhaseEvent::EvictLru { victim } => {
                 pairs.push(("victim", Json::num(victim as f64)));
+            }
+            PhaseEvent::Spill { session, pages, us } => {
+                pairs.push(("session", Json::num(session as f64)));
+                pairs.push(("pages", Json::num(pages as f64)));
+                pairs.push(("us", Json::num(us as f64)));
+            }
+            PhaseEvent::Restore { pages, us } | PhaseEvent::FetchAhead { pages, us } => {
+                pairs.push(("pages", Json::num(pages as f64)));
+                pairs.push(("us", Json::num(us as f64)));
             }
             PhaseEvent::Completed { total_us }
             | PhaseEvent::Cancelled { total_us }
@@ -416,6 +446,9 @@ pub fn record_phase_histograms(t: &RequestTimeline, metrics: &Registry) {
     let draft = metrics.histogram(names::PHASE_DRAFT_US);
     let verify = metrics.histogram(names::PHASE_VERIFY_US);
     let flush = metrics.histogram(names::PHASE_QUANT_FLUSH_US);
+    let spill = metrics.histogram(names::PHASE_SPILL_US);
+    let restore = metrics.histogram(names::PHASE_RESTORE_US);
+    let fetch_ahead = metrics.histogram(names::PHASE_FETCH_AHEAD_US);
     let accepted_len = metrics.histogram(names::ACCEPTED_LEN);
     let mut drafted_total = 0u64;
     let mut accepted_total = 0u64;
@@ -432,6 +465,9 @@ pub fn record_phase_histograms(t: &RequestTimeline, metrics: &Registry) {
             }
             PhaseEvent::Verify { us } => verify.record_us(us as f64),
             PhaseEvent::QuantFlush { us } => flush.record_us(us as f64),
+            PhaseEvent::Spill { us, .. } => spill.record_us(us as f64),
+            PhaseEvent::Restore { us, .. } => restore.record_us(us as f64),
+            PhaseEvent::FetchAhead { us, .. } => fetch_ahead.record_us(us as f64),
             PhaseEvent::EvictLru { .. }
             | PhaseEvent::Completed { .. }
             | PhaseEvent::Cancelled { .. }
@@ -460,6 +496,9 @@ mod tests {
             PhaseEvent::Verify { us: 31 },
             PhaseEvent::QuantFlush { us: 9 },
             PhaseEvent::EvictLru { victim: 7 },
+            PhaseEvent::Spill { session: 3, pages: 5, us: 120 },
+            PhaseEvent::Restore { pages: 2, us: 60 },
+            PhaseEvent::FetchAhead { pages: 4, us: 45 },
             PhaseEvent::Cancelled { total_us: 550 },
             PhaseEvent::DeadlineExpired { total_us: 580 },
             PhaseEvent::Completed { total_us: 600 },
