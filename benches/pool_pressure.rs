@@ -12,22 +12,29 @@
 //! pools ≥ 1.2x on aggregate round throughput, bit-identically), and the
 //! tiering phase (equal arena budget, identical pressure: the cold-tier
 //! path must retain ≥ 2× the KV the evicting baseline keeps, readable
-//! bit-identically through fault-back, with decode token parity) —
-//! reported alongside the Figure 6 KV-memory numbers the pool exists to
-//! manage. Emits `BENCH_pool_pressure.json` (checked by CI's
-//! `bench-smoke` jq gate).
+//! bit-identically through fault-back, with decode token parity), and the
+//! streaming phase (`"stream": true` over live HTTP: the first token's
+//! SSE chunk must land well before the generation completes — TTFT ≤ 0.5×
+//! the full streamed wall, measured within ONE request so the ratio is
+//! structural — and the concatenated chunks must equal the buffered
+//! response bit-for-bit) — reported alongside the Figure 6 KV-memory
+//! numbers the pool exists to manage. Emits `BENCH_pool_pressure.json`
+//! (checked by CI's `bench-smoke` jq gate).
 //!
 //!     cargo bench --bench pool_pressure
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use quantspec::bench::{fmt_f, fmt_gb, Table};
+use quantspec::config::{Method, ServeConfig};
 use quantspec::coordinator::batcher::{ActiveSession, QuantBackpressure, StepBatcher};
-use quantspec::config::Method;
+use quantspec::coordinator::{server, Coordinator};
 use quantspec::costmodel::{memory, PaperModel};
 use quantspec::model::{mock_fb, MockDecoder, MOCK_GAMMA_MAX, MOCK_VOCAB};
 use quantspec::pool::{self, AdmitOutcome, PagedKvCache, PoolConfig};
 use quantspec::spec::Sampler;
+use quantspec::util::httpd::{http_open_stream, http_request};
 use quantspec::util::json::Json;
 use quantspec::workload::{self, Profile};
 
@@ -874,6 +881,136 @@ fn main() {
     tr.print("tiering — KV retained under pressure: cold-tier spill vs eviction");
     let _ = tr.write_csv("bench_out/pool_pressure_tiering.csv");
 
+    // --- phase 8: streaming — TTFT vs full generation over live HTTP -----
+    // One coordinator, a long-decode request with `"stream": true`. Both
+    // gate numbers come from the SAME streamed request — time to its
+    // first `token` chunk vs time to its terminal chunk — so the ratio is
+    // structural (a fraction of the request's own decode), not cross-run
+    // noise. Parity: the concatenation of every streamed run must equal
+    // the buffered response for the identical prompt bit-for-bit.
+    let stream_prompt = 512usize;
+    let stream_new = if quick { 96 } else { 256 };
+    let coord = Arc::new(
+        Coordinator::with_mock(
+            ServeConfig {
+                engines: 1,
+                max_new_tokens: stream_new,
+                prefill_chunk_tokens: 64,
+                ..ServeConfig::default()
+            },
+            0.15,
+        )
+        .expect("mock coordinator"),
+    );
+    let srv = server::serve(Arc::clone(&coord), "127.0.0.1:0").expect("bind");
+    let addr = srv.addr.to_string();
+    let stream_toks = workload::prompt(4242, stream_prompt, Profile::Pg19);
+    let mk_body = |stream: bool| {
+        let mut fields = vec![
+            ("tokens", Json::arr(stream_toks.iter().map(|&t| Json::num(t as f64)))),
+            ("max_new_tokens", Json::num(stream_new as f64)),
+        ];
+        if stream {
+            fields.push(("stream", Json::Bool(true)));
+        }
+        Json::obj(fields).to_string()
+    };
+    let (st, body) = http_request(&addr, "POST", "/generate", mk_body(false).as_bytes())
+        .expect("buffered generate");
+    assert_eq!(st, 200, "{}", String::from_utf8_lossy(&body));
+    let want_tokens = Json::parse(std::str::from_utf8(&body).unwrap())
+        .unwrap()
+        .get("tokens")
+        .unwrap()
+        .to_string();
+    let stream_reps = 3;
+    let mut ttft_secs = f64::INFINITY;
+    let mut full_secs = f64::INFINITY;
+    let mut ttft_ratio = f64::INFINITY;
+    let mut token_frames = 0usize;
+    for _ in 0..stream_reps {
+        let t = Instant::now();
+        let (st, mut chunks) =
+            http_open_stream(&addr, "POST", "/generate", mk_body(true).as_bytes())
+                .expect("streamed generate");
+        assert_eq!(st, 200, "streamed generate must commit a chunked 200 head");
+        let mut first: Option<f64> = None;
+        let mut frames = 0usize;
+        let mut got: Vec<Json> = Vec::new();
+        while let Some(chunk) = chunks.next_chunk().expect("read stream chunk") {
+            let text = String::from_utf8_lossy(&chunk).into_owned();
+            if !text.starts_with("event: token") {
+                continue;
+            }
+            first.get_or_insert(t.elapsed().as_secs_f64());
+            frames += 1;
+            let data = text
+                .lines()
+                .find_map(|l| l.strip_prefix("data: "))
+                .expect("token frame carries a data line");
+            got.extend(
+                Json::parse(data)
+                    .unwrap()
+                    .get("tokens")
+                    .unwrap()
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .cloned(),
+            );
+        }
+        let full = t.elapsed().as_secs_f64();
+        assert_eq!(
+            Json::arr(got.into_iter()).to_string(),
+            want_tokens,
+            "concatenated streamed chunks diverged from the buffered response"
+        );
+        assert!(
+            frames >= 2,
+            "generation arrived in {frames} token chunk(s) — not incremental"
+        );
+        let first = first.expect("stream never produced a token frame");
+        let total = chunks
+            .trailers()
+            .iter()
+            .find(|(k, _)| k == "x-total-tokens")
+            .map(|(_, v)| v.clone())
+            .expect("terminal chunk carries the x-total-tokens trailer");
+        assert_eq!(total, stream_new.to_string(), "trailer counts the streamed tokens");
+        if first / full.max(1e-9) < ttft_ratio {
+            ttft_ratio = first / full.max(1e-9);
+            ttft_secs = first;
+            full_secs = full;
+            token_frames = frames;
+        }
+    }
+    assert!(
+        ttft_ratio <= 0.5,
+        "TTFT {ttft_secs:.6}s is {ttft_ratio:.2} of the {full_secs:.6}s full streamed \
+         generation (gate: <=0.5x) — the first chunk must land well before completion"
+    );
+    drop(srv);
+    let mut tstr = Table::new(&[
+        "prompt_tokens",
+        "max_new",
+        "token_frames",
+        "ttft_ms",
+        "full_ms",
+        "ttft_ratio",
+        "gate",
+    ]);
+    tstr.row(&[
+        stream_prompt.to_string(),
+        stream_new.to_string(),
+        token_frames.to_string(),
+        fmt_f(ttft_secs * 1e3, 3),
+        fmt_f(full_secs * 1e3, 3),
+        format!("{ttft_ratio:.3}"),
+        "<=0.5".to_string(),
+    ]);
+    tstr.print("streaming — TTFT vs full generation over SSE-chunked HTTP");
+    let _ = tstr.write_csv("bench_out/pool_pressure_streaming.csv");
+
     let json = Json::obj(vec![
         (
             "pool",
@@ -934,6 +1071,19 @@ fn main() {
                 ("baseline_evictions", Json::num(base_evictions as f64)),
                 ("tiered_evictions", Json::num(tier_evictions as f64)),
                 ("tokens_identical", Json::Bool(tokens_identical)),
+                ("gate_enforced", Json::Bool(true)),
+            ]),
+        ),
+        (
+            "streaming",
+            Json::obj(vec![
+                ("prompt_tokens", Json::num(stream_prompt as f64)),
+                ("max_new_tokens", Json::num(stream_new as f64)),
+                ("token_frames", Json::num(token_frames as f64)),
+                ("ttft_secs", Json::num(ttft_secs)),
+                ("full_secs", Json::num(full_secs)),
+                ("ttft_ratio", Json::num(ttft_ratio)),
+                ("parity", Json::Bool(true)),
                 ("gate_enforced", Json::Bool(true)),
             ]),
         ),

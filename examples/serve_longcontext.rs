@@ -15,7 +15,10 @@
 //!   acceptance/output match the unpooled path exactly. It also scrapes
 //!   the observability surface: `GET /metrics` (Prometheus exposition,
 //!   written to `bench_out/metrics.prom` for CI to format-check) and
-//!   `GET /debug/requests` (the flight recorder's request timelines).
+//!   `GET /debug/requests` (the flight recorder's request timelines), and
+//!   fires a `"stream": true` request — validating the SSE frame sequence
+//!   (`prefill` → `token`* → `done`), chunk-concat parity against the
+//!   buffered body, and the `x-total-tokens` trailer.
 //!
 //!     cargo run --release --example serve_longcontext -- --mock [--requests N]
 
@@ -332,6 +335,85 @@ fn mock_main(args: &Args) -> anyhow::Result<()> {
         println!(
             "flight recorder : {} complete request timelines in /debug/requests",
             reqs.len()
+        );
+    }
+
+    // --- streaming: SSE-chunked response off the same engine path -------
+    // `"stream": true` turns the response into one HTTP chunk per frame
+    // (`prefill`, then a `token` frame per verify cycle, then `done`);
+    // validate the frame sequence, the chunk-concat == buffered parity,
+    // and the `x-total-tokens` trailer, and report the client-observed
+    // TTFT.
+    {
+        use quantspec::util::httpd::http_open_stream;
+        let prompt_toks = workload::prompt(777, prompt_len, Profile::Pg19);
+        let mk_body = |stream: bool| {
+            let mut fields = vec![
+                ("tokens", Json::arr(prompt_toks.iter().map(|&t| Json::num(t as f64)))),
+                ("max_new_tokens", Json::num(max_new as f64)),
+            ];
+            if stream {
+                fields.push(("stream", Json::Bool(true)));
+            }
+            Json::obj(fields).to_string()
+        };
+        let (st, body) = http_request(&addr, "POST", "/generate", mk_body(false).as_bytes())?;
+        assert_eq!(st, 200, "{}", String::from_utf8_lossy(&body));
+        let want: Vec<i64> = Json::parse(std::str::from_utf8(&body)?)
+            .unwrap()
+            .get("tokens")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter_map(Json::as_i64)
+            .collect();
+        let t = std::time::Instant::now();
+        let (st, mut chunks) =
+            http_open_stream(&addr, "POST", "/generate", mk_body(true).as_bytes())?;
+        assert_eq!(st, 200, "streamed generate must commit a chunked 200 head");
+        let mut ttft = None;
+        let mut frames = 0usize;
+        let mut streamed: Vec<i64> = Vec::new();
+        let mut done_seen = false;
+        while let Some(chunk) = chunks.next_chunk()? {
+            let text = String::from_utf8_lossy(&chunk).into_owned();
+            assert!(!done_seen, "no frame may follow the terminal `done`");
+            if text.starts_with("event: token") {
+                ttft.get_or_insert(t.elapsed().as_secs_f64());
+                frames += 1;
+                let data = text
+                    .lines()
+                    .find_map(|l| l.strip_prefix("data: "))
+                    .expect("token frame carries a data line");
+                streamed.extend(
+                    Json::parse(data)
+                        .unwrap()
+                        .get("tokens")
+                        .unwrap()
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .filter_map(Json::as_i64),
+                );
+            } else if text.starts_with("event: done") {
+                done_seen = true;
+            }
+        }
+        assert!(done_seen, "stream must end with a `done` frame");
+        assert_eq!(streamed, want, "streamed chunks diverged from the buffered body");
+        let trailer = chunks
+            .trailers()
+            .iter()
+            .find(|(k, _)| k == "x-total-tokens")
+            .map(|(_, v)| v.clone())
+            .expect("terminal chunk carries x-total-tokens");
+        assert_eq!(trailer, streamed.len().to_string());
+        println!(
+            "streaming       : {} tokens over {frames} SSE chunks, \
+             TTFT {:.1}ms (trailer x-total-tokens={trailer}) ✓",
+            streamed.len(),
+            ttft.unwrap_or(0.0) * 1e3,
         );
     }
 

@@ -332,6 +332,11 @@ impl ServeConfig {
             if let Some(v) = p.get("fetch_ahead").and_then(Json::as_bool) {
                 c.pool.fetch_ahead = v;
             }
+            if let Some(v) = p.get("fetch_ahead_max").and_then(Json::as_usize) {
+                // Cap on the adaptive fetch-ahead depth (quant groups);
+                // the live depth is fault-rate-driven between 1 and this.
+                c.pool.fetch_ahead_max = v;
+            }
             if c.pool.low_watermark > c.pool.high_watermark {
                 c.pool.low_watermark = c.pool.high_watermark;
             }
@@ -508,11 +513,12 @@ mod tests {
         assert_eq!(d.pool.spill_pages, 0, "tiering off by default");
         assert_eq!(d.pool.spill_dir, "");
         assert!(d.pool.fetch_ahead, "fetch-ahead on once tiering is enabled");
+        assert_eq!(d.pool.fetch_ahead_max, 8, "adaptive depth capped at 8 by default");
         assert_eq!(d.hibernate_idle_ms, 0, "no idle sweep by default");
         let j = Json::parse(
             r#"{"hibernate_idle_ms":2500,
                 "pool":{"pages":64,"spill_pages":512,"spill_dir":"/tmp/qs",
-                        "fetch_ahead":false}}"#,
+                        "fetch_ahead":false,"fetch_ahead_max":3}}"#,
         )
         .unwrap();
         let c = ServeConfig::from_json(&j).unwrap();
@@ -520,6 +526,7 @@ mod tests {
         assert_eq!(c.pool.spill_pages, 512);
         assert_eq!(c.pool.spill_dir, "/tmp/qs");
         assert!(!c.pool.fetch_ahead);
+        assert_eq!(c.pool.fetch_ahead_max, 3);
     }
 
     #[test]

@@ -42,6 +42,7 @@ use crate::pool::{self, SharedSessionManager};
 use crate::runtime::{Runtime, WeightSet, Weights};
 use crate::spec::gamma::AimdGamma;
 use crate::spec::Sampler;
+use crate::stream::{StreamEvent, TokenSink};
 use crate::trace::Tracer;
 use crate::util::now_secs;
 
@@ -64,6 +65,13 @@ pub struct RequestSpec {
     /// SLO deadline override in milliseconds: None = `request_deadline_ms`
     /// from config, Some(0) = explicitly no deadline.
     pub deadline_ms: Option<u64>,
+    /// Incremental response stream: when set, the scheduler flushes each
+    /// round's newly committed tokens (plus prefill-done and a terminal
+    /// `Done`/`Error`) into this sink in commit order. The buffered `done`
+    /// channel still delivers the final `ResponseOut` either way; a send
+    /// failure on the sink (receiver dropped) is treated as a client
+    /// disconnect and cancels the request at the next round boundary.
+    pub sink: Option<TokenSink>,
 }
 
 /// Completed generation.
@@ -265,9 +273,11 @@ impl Coordinator {
         let queued = self.shared.queue.lock().unwrap().cancel(id);
         if let Some(job) = queued {
             self.metrics.incr("requests_cancelled", 1);
-            let _ = job
-                .done
-                .send(Err(format!("{CANCELLED_PREFIX}request {id} cancelled while queued")));
+            let msg = format!("{CANCELLED_PREFIX}request {id} cancelled while queued");
+            if let Some(sink) = &job.spec.sink {
+                let _ = sink.send(StreamEvent::Error { message: msg.clone() });
+            }
+            let _ = job.done.send(Err(msg));
         }
         self.shared.cv.notify_all();
     }
@@ -528,6 +538,7 @@ mod tests {
             gamma: None,
             tenant: None,
             deadline_ms: None,
+            sink: None,
         }
     }
 

@@ -48,8 +48,9 @@ use crate::coordinator::router::{
     build_session, pool_plan, sync_pool_gauges, RequestSpec, ResponseOut, Shared,
     TOO_LARGE_PREFIX,
 };
-use crate::metrics::{names, Registry};
+use crate::metrics::{names, Histogram, Registry};
 use crate::pool::{AdmitOutcome, SharedSessionManager};
+use crate::stream::{SinkClosed, StreamEvent, TokenSink};
 use crate::trace::{self, PhaseEvent, Tracer};
 use crate::util::now_secs;
 use crate::util::threadpool::StealPool;
@@ -290,6 +291,40 @@ struct Inflight {
     /// This request's span buffer (None when tracing is disabled); finished
     /// into the flight recorder at retirement.
     trace: Option<Arc<crate::trace::TraceBuf>>,
+    /// Incremental response stream (None = buffered-only request).
+    stream: Option<StreamState>,
+}
+
+/// Flush cursor for one streaming session: how much of the session's
+/// committed `tokens` has already been pushed into the sink, the next
+/// flush cycle index, and the timing state behind the `ttft_us` /
+/// `inter_token_gap_us` histograms. One batcher round advances a session
+/// by at most one unit (prefill chunk or verify cycle), so a round-boundary
+/// flush of `tokens[flushed..]` emits exactly one `Token` event per cycle.
+struct StreamState {
+    sink: TokenSink,
+    /// Prompt length reported in the one-shot `Prefilled` event.
+    prompt_tokens: usize,
+    flushed: usize,
+    cycle: usize,
+    last_flush: Option<Instant>,
+    prefilled_sent: bool,
+}
+
+impl StreamState {
+    /// Mirror a terminal failure onto the stream so a streaming consumer
+    /// never blocks on a request the buffered channel already failed.
+    fn send_error(&self, msg: &str) {
+        let _ = self.sink.send(StreamEvent::Error { message: msg.to_string() });
+    }
+}
+
+/// `StreamState::send_error` for requests that never became inflight
+/// (rejected, expired, or failed at session build).
+fn send_sink_error(sink: &Option<TokenSink>, msg: &str) {
+    if let Some(s) = sink {
+        let _ = s.send(StreamEvent::Error { message: msg.to_string() });
+    }
 }
 
 /// The unified scheduler driver: one thread forming global rounds across
@@ -330,6 +365,10 @@ pub(crate) fn scheduler_loop(
     let depth_gauge = metrics.gauge_handle(names::SCHED_BATCHER_DEPTH);
     let queue_gauge = metrics.gauge_handle(names::SCHED_QUEUE_DEPTH);
     let steals_gauge = metrics.gauge_handle(names::SCHED_STEALS);
+    // Streaming latency histograms are recorded live at flush time (they
+    // must exist even with tracing disabled), resolved once for the loop.
+    let ttft_hist = metrics.histogram(names::TTFT_US);
+    let gap_hist = metrics.histogram(names::INTER_TOKEN_GAP_US);
     let mut tenant_gauges: HashMap<String, Arc<crate::metrics::Gauge>> = HashMap::new();
     metrics.set_gauge(
         names::SCHED_POOL_WORKERS,
@@ -438,18 +477,25 @@ pub(crate) fn scheduler_loop(
         }
         for (job, msg) in rejected {
             metrics.incr("requests_failed", 1);
+            send_sink_error(&job.spec.sink, &msg);
             let _ = job.done.send(Err(msg));
         }
         for job in expired {
             metrics.incr("requests_deadline_rejected", 1);
             let waited_ms = ((now_secs() - job.enqueued_at) * 1e3) as u64;
-            let _ = job.done.send(Err(format!(
+            let msg = format!(
                 "{DEADLINE_PREFIX}request {} expired after {waited_ms}ms in queue",
                 job.spec.id
-            )));
+            );
+            send_sink_error(&job.spec.sink, &msg);
+            let _ = job.done.send(Err(msg));
         }
         // ---- build sessions (outside the queue lock) --------------------
-        for (job, admission_us) in popped {
+        for (mut job, admission_us) in popped {
+            // The sink leaves the spec before the session is built: the
+            // scheduler owns flushing from here on (as part of `Inflight`),
+            // and a build failure must still reach a streaming consumer.
+            let sink = job.spec.sink.take();
             let queue_secs = now_secs() - job.enqueued_at;
             metrics.histogram("queue_wait").record_secs(queue_secs);
             // Open the request's timeline: total queue time split into the
@@ -479,13 +525,23 @@ pub(crate) fn scheduler_loop(
                             bucket,
                             deadline: job.deadline,
                             trace: buf,
+                            stream: sink.map(|sink| StreamState {
+                                sink,
+                                prompt_tokens: job.spec.prompt.len(),
+                                flushed: 0,
+                                cycle: 0,
+                                last_flush: None,
+                                prefilled_sent: false,
+                            }),
                         },
                     );
                 }
                 Err(e) => {
                     release_pool_session(pool.as_ref(), &shared, &metrics, job.spec.id);
                     metrics.incr("requests_failed", 1);
-                    let _ = job.done.send(Err(format!("{e:#}")));
+                    let msg = format!("{e:#}");
+                    send_sink_error(&sink, &msg);
+                    let _ = job.done.send(Err(msg));
                 }
             }
         }
@@ -504,9 +560,11 @@ pub(crate) fn scheduler_loop(
             release_pool_session(pool.as_ref(), &shared, &metrics, id);
             metrics.incr("requests_cancelled", 1);
             finish_aborted(&inf, &tracer, &metrics, id, true);
-            let _ = inf
-                .done
-                .send(Err(format!("{CANCELLED_PREFIX}request {id} cancelled by client")));
+            let msg = format!("{CANCELLED_PREFIX}request {id} cancelled by client");
+            if let Some(st) = &inf.stream {
+                st.send_error(&msg);
+            }
+            let _ = inf.done.send(Err(msg));
         }
         // ---- one scheduling round ---------------------------------------
         if batcher.active_len() == 0 {
@@ -516,11 +574,29 @@ pub(crate) fn scheduler_loop(
         }
         batcher.round().expect("round parks failures; it does not error");
         let now = Instant::now();
+        // ---- stream flush (commit order, one Token event per cycle) -----
+        // A send failing means the receiver is gone — the client
+        // disconnected mid-stream. Mark the request in the fair queue so
+        // the NEXT iteration's cancellation sweep (which runs before the
+        // round) evicts the session at the round boundary, running the ONE
+        // release sequence: pages freed, gauges synced, waiters woken,
+        // `requests_cancelled` bumped.
+        let mut disconnected: Vec<u64> = Vec::new();
         for s in batcher.active_sessions() {
+            let Some(inf) = inflight.get_mut(&s.id) else { continue };
             if !s.is_prefilling() {
-                if let Some(inf) = inflight.get_mut(&s.id) {
-                    inf.prefill_done_at.get_or_insert(now);
-                }
+                inf.prefill_done_at.get_or_insert(now);
+            }
+            if flush_stream(&s.tokens, s.is_prefilling(), inf, &ttft_hist, &gap_hist, now)
+                .is_err()
+            {
+                disconnected.push(s.id);
+            }
+        }
+        if !disconnected.is_empty() {
+            let mut q = shared.queue.lock().unwrap();
+            for id in disconnected {
+                q.cancel(id); // active, not queued: inserts an eviction mark
             }
         }
         // ---- deadline sweep ---------------------------------------------
@@ -541,9 +617,12 @@ pub(crate) fn scheduler_loop(
             release_pool_session(pool.as_ref(), &shared, &metrics, id);
             metrics.incr("requests_deadline_rejected", 1);
             finish_aborted(&inf, &tracer, &metrics, id, false);
-            let _ = inf.done.send(Err(format!(
-                "{DEADLINE_PREFIX}request {id} exceeded its deadline mid-flight"
-            )));
+            let msg =
+                format!("{DEADLINE_PREFIX}request {id} exceeded its deadline mid-flight");
+            if let Some(st) = &inf.stream {
+                st.send_error(&msg);
+            }
+            let _ = inf.done.send(Err(msg));
         }
         // ---- idle-hibernation sweep -------------------------------------
         // Sessions the batcher is actively driving are touched every round,
@@ -610,7 +689,11 @@ pub(crate) fn scheduler_loop(
             release_pool_session(pool.as_ref(), &shared, &metrics, f.id);
             let Some(inf) = inflight.remove(&f.id) else { continue };
             metrics.incr("requests_failed", 1);
-            let _ = inf.done.send(Err(format!("{:#}", f.error)));
+            let msg = format!("{:#}", f.error);
+            if let Some(st) = &inf.stream {
+                st.send_error(&msg);
+            }
+            let _ = inf.done.send(Err(msg));
         }
     }
 }
@@ -650,16 +733,78 @@ fn finish_aborted(inf: &Inflight, tracer: &Tracer, metrics: &Registry, id: u64, 
     }
 }
 
+/// Push one session's newly committed tokens into its stream at a round
+/// boundary. Emits `Prefilled` once when the session leaves its prefill
+/// phase, then one `Token` event carrying the run committed since the
+/// previous flush; records `ttft_us` on the first run (measured from
+/// enqueue: queue wait + residency so far) and `inter_token_gap_us`
+/// between subsequent runs, plus the matching `first_token` / `stream`
+/// trace markers. `Err(SinkClosed)` = the receiver is gone (client
+/// disconnected); no-op for buffered-only requests.
+fn flush_stream(
+    tokens: &[i32],
+    prefilling: bool,
+    inf: &mut Inflight,
+    ttft_hist: &Histogram,
+    gap_hist: &Histogram,
+    now: Instant,
+) -> Result<(), SinkClosed> {
+    let Some(st) = inf.stream.as_mut() else { return Ok(()) };
+    if !st.prefilled_sent && !prefilling {
+        st.prefilled_sent = true;
+        st.sink.send(StreamEvent::Prefilled { prompt_tokens: st.prompt_tokens })?;
+    }
+    if tokens.len() <= st.flushed {
+        return Ok(());
+    }
+    let run = tokens[st.flushed..].to_vec();
+    let total = tokens.len();
+    let gap_us = st.last_flush.map(|t| now.duration_since(t).as_micros() as u64);
+    match gap_us {
+        None => {
+            let ttft_us = (inf.queue_secs * 1e6) as u64
+                + now.duration_since(inf.admitted_at).as_micros() as u64;
+            ttft_hist.record_us(ttft_us as f64);
+            if let Some(buf) = &inf.trace {
+                buf.record(PhaseEvent::FirstToken { cycle: st.cycle, us: ttft_us });
+            }
+        }
+        Some(us) => gap_hist.record_us(us as f64),
+    }
+    if let Some(buf) = &inf.trace {
+        buf.record(PhaseEvent::StreamFlush {
+            cycle: st.cycle,
+            tokens: run.len(),
+            us: gap_us.unwrap_or(0),
+        });
+    }
+    st.sink.send(StreamEvent::Token { cycle: st.cycle, tokens: run, total })?;
+    st.flushed = total;
+    st.cycle += 1;
+    st.last_flush = Some(now);
+    Ok(())
+}
+
 /// Build the response for a finished session and release its resources.
 fn respond_finished(
     mut s: ActiveSession,
-    inf: Inflight,
+    mut inf: Inflight,
     metrics: &Registry,
     tracer: &Tracer,
     pool: Option<&SharedSessionManager>,
     shared: &Shared,
 ) {
     let now = Instant::now();
+    // Final stream flush: a session finishing mid-round leaves the active
+    // set before the round-boundary flush sees it, so the last committed
+    // run (and the `Prefilled` event of a one-round request) streams here,
+    // before `s.tokens` is taken for the buffered response. A dead receiver
+    // is ignored — the request already retired.
+    if inf.stream.is_some() {
+        let ttft = metrics.histogram(names::TTFT_US);
+        let gap = metrics.histogram(names::INTER_TOKEN_GAP_US);
+        let _ = flush_stream(&s.tokens, false, &mut inf, &ttft, &gap, now);
+    }
     let prefill_done = inf.prefill_done_at.unwrap_or(now);
     let prefill_secs = prefill_done.duration_since(inf.admitted_at).as_secs_f64();
     let decode_secs = now.duration_since(prefill_done).as_secs_f64();
@@ -694,6 +839,7 @@ fn respond_finished(
         trace::record_phase_histograms(&timeline, metrics);
         tracer.push(timeline);
     }
+    let total = tokens.len();
     let _ = inf.done.send(Ok(ResponseOut {
         id,
         tokens,
@@ -704,6 +850,11 @@ fn respond_finished(
         decode_tokens_per_sec: decode_tokens as f64 / decode_secs.max(1e-9),
         queue_secs: inf.queue_secs,
     }));
+    // Terminal AFTER the buffered result: a streaming consumer that sees
+    // `Done` can immediately `recv` the done channel for the final stats.
+    if let Some(st) = &inf.stream {
+        let _ = st.sink.send(StreamEvent::Done { total });
+    }
 }
 
 #[cfg(test)]
@@ -726,6 +877,7 @@ mod tests {
                 gamma: None,
                 tenant: Some(tenant.to_string()),
                 deadline_ms: None,
+                sink: None,
             },
             tenant: tenant.to_string(),
             enqueued_at: now_secs(),
@@ -832,6 +984,7 @@ mod tests {
             gamma: None,
             tenant: tenant.map(str::to_string),
             deadline_ms: None,
+            sink: None,
         }
     }
 
@@ -1167,5 +1320,149 @@ mod tests {
                 true
             },
         );
+    }
+
+    /// Streaming parity, property-tested: concatenated streamed chunks are
+    /// bit-identical to the buffered response across randomized
+    /// chunked-prefill / decode / hibernate-resume mixes. Each case derives
+    /// a prefill chunking, request shape, and (on pooled cases) a
+    /// spill-enabled pool with a stalled occupant the idle sweep hibernates
+    /// mid-serving; the same deterministic mock request is served buffered
+    /// first, then streamed, and the stream must be well-formed (one
+    /// `Prefilled`, dense cycle indices, cumulative totals) with its
+    /// concatenation equal to the buffered tokens.
+    #[test]
+    fn prop_streamed_chunks_match_buffered_response() {
+        use crate::pool::{mock_kv, PagedKvCache};
+        use crate::stream::{StreamEvent, TokenSink};
+        let dir = std::env::temp_dir()
+            .join(format!("qs-stream-parity-{}", std::process::id()));
+        let check = |rx: &mpsc::Receiver<StreamEvent>, want: &[i32], prompt_len: usize| {
+            let mut got: Vec<i32> = Vec::new();
+            let mut cycle = 0usize;
+            let mut saw_prefilled = false;
+            loop {
+                let Ok(ev) = rx.recv() else { return false };
+                match ev {
+                    StreamEvent::Prefilled { prompt_tokens } => {
+                        if saw_prefilled || !got.is_empty() || prompt_tokens != prompt_len {
+                            return false;
+                        }
+                        saw_prefilled = true;
+                    }
+                    StreamEvent::Token { cycle: cy, tokens, total } => {
+                        if !saw_prefilled || cy != cycle || tokens.is_empty() {
+                            return false;
+                        }
+                        cycle += 1;
+                        got.extend_from_slice(&tokens);
+                        if got.len() != total {
+                            return false;
+                        }
+                    }
+                    StreamEvent::Done { total } => {
+                        return total == want.len() && got == want;
+                    }
+                    StreamEvent::Error { .. } => return false,
+                }
+            }
+        };
+        prop::check(
+            prop::Config { cases: 6, size: 64, ..Default::default() },
+            |case: &(usize, usize)| {
+                let &(a, b) = case;
+                let chunk = [0, 1, 7, 16][a % 4];
+                let prompt_len = 4 + (b * 7) % 200;
+                let max_new = 1 + (a * 3 + b) % 40;
+                let pooled = (a + b) % 2 == 0;
+                let mut cfg = ServeConfig {
+                    engines: 1,
+                    queue_capacity: 64,
+                    max_new_tokens: max_new,
+                    prefill_chunk_tokens: chunk,
+                    ..ServeConfig::default()
+                };
+                if pooled {
+                    cfg.hibernate_idle_ms = 1;
+                    cfg.pool = PoolConfig {
+                        pages: 1, // sized below
+                        page_tokens: 8,
+                        kv_dim: 2,
+                        spill_pages: 4096,
+                        spill_dir: dir.to_string_lossy().into_owned(),
+                        ..PoolConfig::default()
+                    };
+                    let plan = pool_plan(&cfg, prompt_len, max_new).pages;
+                    // the request plus the 8-page occupant always co-fit
+                    cfg.pool.pages = plan + plan / 2 + 8;
+                }
+                let c = Coordinator::with_mock(cfg, 0.3).unwrap();
+                // On pooled cases, park a stalled occupant the scheduler's
+                // idle sweep hibernates while the streamed request decodes;
+                // it must fault back bit-identically afterwards.
+                let occupant = pooled.then(|| {
+                    let mgr = c.pool().expect("pooled").clone();
+                    mgr.lock().unwrap().admit(9001, 8, false).unwrap();
+                    let mut kv = PagedKvCache::new(mgr, 9001, 8, 2, 16, 32).unwrap();
+                    kv.prefill(16, &|p| mock_kv(p, 7, 2)).unwrap();
+                    let want: Vec<Vec<f32>> =
+                        (0..16).map(|p| kv.read_token(p, true).unwrap()).collect();
+                    std::thread::sleep(Duration::from_millis(2)); // age past the knob
+                    (kv, want)
+                });
+                let mut r = req(1, prompt_len, None);
+                r.max_new_tokens = max_new;
+                let want = c.generate(r.clone()).unwrap().tokens;
+                let (sink, rx) = TokenSink::channel();
+                r.sink = Some(sink);
+                let done = c.submit(r).unwrap();
+                let ok = check(&rx, &want, prompt_len);
+                let out = done.recv().unwrap().unwrap();
+                if let Some((mut kv, want_kv)) = occupant {
+                    for (p, w) in want_kv.iter().enumerate() {
+                        if &kv.read_token(p, true).unwrap() != w {
+                            return false;
+                        }
+                    }
+                    kv.release();
+                }
+                ok && out.tokens == want
+            },
+        );
+    }
+
+    /// Client disconnect mid-stream: dropping the stream receiver is
+    /// detected at the next round-boundary flush and feeds the cancellation
+    /// machinery — the session is evicted, its pool pages released,
+    /// `requests_cancelled` bumped, and the buffered channel reports the
+    /// same cancellation an explicit `cancel()` would.
+    #[test]
+    fn dropped_stream_receiver_cancels_and_releases_pages() {
+        use crate::stream::{StreamEvent, TokenSink};
+        const PROMPT: usize = 3000;
+        const BUDGET: usize = 200_000; // far more than the test ever decodes
+        let mut cfg = saturating_pool_cfg(PROMPT);
+        let plan = pool_plan(&cfg, PROMPT, BUDGET).pages;
+        cfg.pool.pages = plan + plan / 2;
+        let c = Coordinator::with_mock(cfg, 0.2).unwrap();
+        let (sink, rx) = TokenSink::channel();
+        let mut r = req(1, PROMPT, None);
+        r.max_new_tokens = BUDGET;
+        r.sink = Some(sink);
+        let done = c.submit(r).unwrap();
+        // first committed run arrives long before the generation could end
+        while !matches!(
+            rx.recv().expect("stream died before first token"),
+            StreamEvent::Token { .. }
+        ) {}
+        assert!(c.metrics.histogram(names::TTFT_US).count() >= 1);
+        drop(rx); // client disconnects mid-stream
+        let e = done.recv().unwrap().unwrap_err();
+        assert!(e.contains("cancelled"), "disconnect maps to cancellation: {e}");
+        assert_eq!(c.metrics.counter("requests_cancelled"), 1);
+        let m = c.pool().unwrap().lock().unwrap();
+        assert_eq!(m.pool().pages_in_use(), 0, "no leaked pages");
+        assert_eq!(m.cancellations(), 1);
+        m.check_integrity().unwrap();
     }
 }

@@ -2,10 +2,17 @@
 //!
 //! Endpoints:
 //!   POST /generate  {"prompt": "text" | "tokens": [..], "max_new_tokens",
-//!                    "method", "gamma", "tenant", "deadline_ms"}
+//!                    "method", "gamma", "tenant", "deadline_ms", "stream"}
 //!                   -> tokens + text + stats. A missed deadline maps to
 //!                   504, a cancellation to 499, an oversized request to
-//!                   413.
+//!                   413. With "stream": true the response is SSE-style
+//!                   chunked frames (`prefill`/`token`/`done`/`error`
+//!                   events, one per verify cycle; see docs/STREAMING.md),
+//!                   delivered as each cycle commits; both paths drain the
+//!                   same TokenSink, so the concatenated stream is
+//!                   bit-identical to the buffered body. Dropping the
+//!                   connection mid-stream cancels the request and frees
+//!                   its pool pages.
 //!   POST /cancel    {"id": N} -> {"ok":true}; queued requests are
 //!                   removed immediately, in-flight ones are evicted at
 //!                   the next scheduler round and their pool pages freed
@@ -19,13 +26,14 @@
 //!                   draft/verify cycles → completion) as JSON
 //!   GET  /healthz   liveness
 
-use std::sync::Arc;
+use std::sync::{mpsc, Arc};
 
 use crate::config::Method;
-use crate::util::httpd::{Handler, Request, Response, Server};
+use crate::stream::{drain_tokens, StreamEvent, TokenSink};
+use crate::util::httpd::{ChunkWriter, Handler, Request, Response, Server};
 use crate::util::json::Json;
 
-use super::router::{Coordinator, RequestSpec};
+use super::router::{Coordinator, RequestSpec, ResponseOut};
 
 pub fn make_handler(coord: Arc<Coordinator>) -> Handler {
     Arc::new(move |req: &Request| handle(&coord, req))
@@ -35,7 +43,7 @@ pub fn serve(coord: Arc<Coordinator>, bind: &str) -> std::io::Result<Server> {
     Server::start(bind, make_handler(coord))
 }
 
-fn handle(coord: &Coordinator, req: &Request) -> Response {
+fn handle(coord: &Arc<Coordinator>, req: &Request) -> Response {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => Response::json(200, r#"{"ok":true}"#),
         ("GET", "/stats") => {
@@ -69,7 +77,38 @@ fn cancel(coord: &Coordinator, body: &[u8]) -> Response {
     Response::json(200, r#"{"ok":true}"#)
 }
 
-fn generate(coord: &Coordinator, body: &[u8]) -> Response {
+/// The lossy byte→char rendering both response paths share.
+fn token_text(tokens: &[i32]) -> String {
+    tokens
+        .iter()
+        .map(|&t| {
+            let b = (t as u32).min(255) as u8;
+            if b.is_ascii() && !b.is_ascii_control() || b == b'\n' {
+                b as char
+            } else {
+                '\u{fffd}'
+            }
+        })
+        .collect()
+}
+
+/// Map an engine error string to its HTTP status: pool-admission size
+/// rejections are the client's problem (shrink the request), not a server
+/// fault; cancellations and missed SLO deadlines get their own statuses so
+/// clients can tell them apart from engine faults.
+fn error_status(e: &str) -> u16 {
+    if e.starts_with(super::router::TOO_LARGE_PREFIX) {
+        413
+    } else if e.starts_with(super::sched::CANCELLED_PREFIX) {
+        499
+    } else if e.starts_with(super::sched::DEADLINE_PREFIX) {
+        504
+    } else {
+        500
+    }
+}
+
+fn generate(coord: &Arc<Coordinator>, body: &[u8]) -> Response {
     let text = match std::str::from_utf8(body) {
         Ok(t) => t,
         Err(_) => return Response::json(400, r#"{"error":"body not utf-8"}"#),
@@ -96,6 +135,11 @@ fn generate(coord: &Coordinator, body: &[u8]) -> Response {
         },
         None => None,
     };
+    let streaming = j.get("stream").and_then(Json::as_bool).unwrap_or(false);
+    // ONE response path: every request carries a TokenSink. Streaming
+    // drains it onto the wire as chunked frames; buffered drains it in
+    // place — the concatenation is the response body either way.
+    let (sink, events) = TokenSink::channel();
     let spec = RequestSpec {
         id: coord.next_id(),
         prompt,
@@ -107,7 +151,9 @@ fn generate(coord: &Coordinator, body: &[u8]) -> Response {
         gamma: j.get("gamma").and_then(Json::as_usize),
         tenant: j.get("tenant").and_then(Json::as_str).map(str::to_string),
         deadline_ms: j.get("deadline_ms").and_then(Json::as_usize).map(|v| v as u64),
+        sink: Some(sink),
     };
+    let id = spec.id;
     let rx = match coord.submit(spec) {
         Ok(rx) => rx,
         Err((_, why)) => {
@@ -117,54 +163,127 @@ fn generate(coord: &Coordinator, body: &[u8]) -> Response {
             )
         }
     };
-    match rx.recv() {
-        Ok(Ok(out)) => {
-            let text: String = out
-                .tokens
-                .iter()
-                .map(|&t| {
-                    let b = (t as u32).min(255) as u8;
-                    if b.is_ascii() && !b.is_ascii_control() || b == b'\n' {
-                        b as char
-                    } else {
-                        '\u{fffd}'
-                    }
-                })
-                .collect();
+    if streaming {
+        // The 200 head goes out before generation runs; failures surface
+        // in-band as an `error` event carrying the would-be status.
+        let coord = Arc::clone(coord);
+        return Response::chunked(200, "text/event-stream", move |w| {
+            stream_events(&coord, id, &events, &rx, w)
+        });
+    }
+    let (tokens, terminal) = drain_tokens(&events);
+    match terminal {
+        Some(StreamEvent::Done { .. }) => match rx.recv() {
+            // final stats are sent on the done channel BEFORE the sink's
+            // terminal event, so this recv never blocks on the engine
+            Ok(Ok(out)) => {
+                debug_assert_eq!(out.tokens, tokens, "streamed/buffered divergence");
+                Response::json(200, finished_json(&out, &tokens).to_string())
+            }
+            Ok(Err(e)) => Response::json(
+                error_status(&e),
+                Json::obj(vec![("error", Json::str(e))]).to_string(),
+            ),
+            Err(_) => Response::json(500, r#"{"error":"engine dropped"}"#),
+        },
+        Some(StreamEvent::Error { message }) => {
+            let e = match rx.recv() {
+                Ok(Err(e)) => e,
+                _ => message,
+            };
             Response::json(
-                200,
-                Json::obj(vec![
-                    ("id", Json::num(out.id as f64)),
-                    ("tokens", Json::arr(out.tokens.iter().map(|&t| Json::num(t as f64)))),
-                    ("text", Json::str(text)),
-                    ("bucket", Json::num(out.bucket as f64)),
-                    ("acceptance_rate", Json::num(out.acceptance_rate)),
-                    ("prefill_secs", Json::num(out.prefill_secs)),
-                    ("decode_secs", Json::num(out.decode_secs)),
-                    ("decode_tokens_per_sec", Json::num(out.decode_tokens_per_sec)),
-                    ("queue_secs", Json::num(out.queue_secs)),
-                ])
-                .to_string(),
+                error_status(&e),
+                Json::obj(vec![("error", Json::str(e))]).to_string(),
             )
         }
-        Ok(Err(e)) => {
-            // A pool-admission size rejection is the client's problem
-            // (shrink the request), not a server fault; cancellations and
-            // missed SLO deadlines get their own statuses so clients can
-            // tell them apart from engine faults.
-            let status = if e.starts_with(super::router::TOO_LARGE_PREFIX) {
-                413
-            } else if e.starts_with(super::sched::CANCELLED_PREFIX) {
-                499
-            } else if e.starts_with(super::sched::DEADLINE_PREFIX) {
-                504
-            } else {
-                500
-            };
-            Response::json(status, Json::obj(vec![("error", Json::str(e))]).to_string())
-        }
-        Err(_) => Response::json(500, r#"{"error":"engine dropped"}"#),
+        _ => Response::json(500, r#"{"error":"engine dropped"}"#),
     }
+}
+
+/// The buffered 200 body (also the `stats` payload of a streamed `done`
+/// frame): tokens + text from the drained stream, timing from the
+/// scheduler's `ResponseOut`.
+fn finished_json(out: &ResponseOut, tokens: &[i32]) -> Json {
+    Json::obj(vec![
+        ("id", Json::num(out.id as f64)),
+        ("tokens", Json::arr(tokens.iter().map(|&t| Json::num(t as f64)))),
+        ("text", Json::str(token_text(tokens))),
+        ("bucket", Json::num(out.bucket as f64)),
+        ("acceptance_rate", Json::num(out.acceptance_rate)),
+        ("prefill_secs", Json::num(out.prefill_secs)),
+        ("decode_secs", Json::num(out.decode_secs)),
+        ("decode_tokens_per_sec", Json::num(out.decode_tokens_per_sec)),
+        ("queue_secs", Json::num(out.queue_secs)),
+    ])
+}
+
+/// Drain one request's stream onto the wire as SSE-style frames, one HTTP
+/// chunk per event: `event: <kind>\ndata: <json>\n\n`. Token frames carry
+/// the cycle index, the accepted run, and cumulative counts; the `done`
+/// frame carries the final stats; the terminal chunk's trailer reports the
+/// total streamed token count. A chunk write failing means the client went
+/// away — cancel the request so the scheduler evicts the session and
+/// releases its pages at the next round boundary (the scheduler also
+/// notices on its own once this closure's receiver drops).
+fn stream_events(
+    coord: &Coordinator,
+    id: u64,
+    events: &mpsc::Receiver<StreamEvent>,
+    done: &mpsc::Receiver<Result<ResponseOut, String>>,
+    w: &mut ChunkWriter<'_>,
+) -> std::io::Result<()> {
+    let mut sent = 0usize;
+    loop {
+        let Ok(ev) = events.recv() else {
+            // producer vanished without a terminal event
+            let frame = Json::obj(vec![
+                ("status", Json::num(500.0)),
+                ("error", Json::str("engine dropped")),
+            ]);
+            return write_frame(w, "error", &frame).and_then(|()| w.finish());
+        };
+        let frame = match &ev {
+            StreamEvent::Prefilled { prompt_tokens } => Json::obj(vec![
+                ("id", Json::num(id as f64)),
+                ("prompt_tokens", Json::num(*prompt_tokens as f64)),
+            ]),
+            StreamEvent::Token { cycle, tokens, total } => {
+                sent = *total;
+                Json::obj(vec![
+                    ("cycle", Json::num(*cycle as f64)),
+                    ("accepted", Json::num(tokens.len() as f64)),
+                    ("tokens", Json::arr(tokens.iter().map(|&t| Json::num(t as f64)))),
+                    ("text", Json::str(token_text(tokens))),
+                    ("total", Json::num(*total as f64)),
+                ])
+            }
+            StreamEvent::Done { total } => {
+                // sent on the done channel before the sink terminal, so
+                // this recv returns immediately
+                let stats = match done.recv() {
+                    Ok(Ok(out)) => finished_json(&out, &[]),
+                    _ => Json::Null,
+                };
+                Json::obj(vec![("total", Json::num(*total as f64)), ("stats", stats)])
+            }
+            StreamEvent::Error { message } => Json::obj(vec![
+                ("status", Json::num(error_status(message) as f64)),
+                ("error", Json::str(message.clone())),
+            ]),
+        };
+        if let Err(e) = write_frame(w, ev.kind(), &frame) {
+            coord.cancel(id);
+            return Err(e);
+        }
+        if ev.is_terminal() {
+            let total = sent.to_string();
+            return w.finish_with_trailers(&[("x-total-tokens", &total)]);
+        }
+    }
+}
+
+fn write_frame(w: &mut ChunkWriter<'_>, kind: &str, data: &Json) -> std::io::Result<()> {
+    w.write_chunk(format!("event: {kind}\ndata: {data}\n\n").as_bytes())
 }
 
 #[cfg(test)]
@@ -643,6 +762,157 @@ mod tests {
             "reclaim escalated to whole-shard hibernation"
         );
         assert_eq!(stat(names::HIBERNATED_SESSIONS), 0, "everyone resumed");
+        mgr.lock().unwrap().check_integrity().unwrap();
+    }
+
+    /// Split one SSE frame chunk into (event kind, data JSON).
+    fn parse_frame(chunk: &[u8]) -> (String, Json) {
+        let text = std::str::from_utf8(chunk).unwrap();
+        let mut kind = String::new();
+        let mut data = String::new();
+        for line in text.lines() {
+            if let Some(v) = line.strip_prefix("event: ") {
+                kind = v.to_string();
+            } else if let Some(v) = line.strip_prefix("data: ") {
+                data = v.to_string();
+            }
+        }
+        (kind, Json::parse(&data).unwrap())
+    }
+
+    /// Tentpole acceptance: `"stream": true` returns SSE-style chunked
+    /// frames — `prefill`, one `token` frame per verify cycle with cycle
+    /// index / accepted run / cumulative total, then `done` carrying the
+    /// final stats and a trailer with the streamed token count — and the
+    /// concatenated streamed tokens are bit-identical to the buffered
+    /// response for the same prompt.
+    #[test]
+    fn streamed_generate_matches_buffered_response() {
+        use crate::util::httpd::http_open_stream;
+        let cfg = ServeConfig {
+            engines: 1,
+            max_new_tokens: 48,
+            prefill_chunk_tokens: 16,
+            ..ServeConfig::default()
+        };
+        let coord = Arc::new(Coordinator::with_mock(cfg, 0.15).unwrap());
+        let srv = serve(Arc::clone(&coord), "127.0.0.1:0").unwrap();
+        let addr = srv.addr.to_string();
+        let prompt = "s".repeat(64);
+        let body = format!(r#"{{"prompt":"{prompt}","max_new_tokens":48}}"#);
+        let (st, buf) = http_request(&addr, "POST", "/generate", body.as_bytes()).unwrap();
+        assert_eq!(st, 200, "{}", String::from_utf8_lossy(&buf));
+        let want = Json::parse(std::str::from_utf8(&buf).unwrap()).unwrap();
+        let want_tokens = want.get("tokens").unwrap().to_string();
+
+        let body = format!(r#"{{"prompt":"{prompt}","max_new_tokens":48,"stream":true}}"#);
+        let (st, mut chunks) =
+            http_open_stream(&addr, "POST", "/generate", body.as_bytes()).unwrap();
+        assert_eq!(st, 200);
+        let mut kinds: Vec<String> = Vec::new();
+        let mut tokens: Vec<Json> = Vec::new();
+        let mut cycle = 0usize;
+        while let Some(chunk) = chunks.next_chunk().unwrap() {
+            let (kind, data) = parse_frame(&chunk);
+            match kind.as_str() {
+                "token" => {
+                    assert_eq!(data.get("cycle").unwrap().as_usize(), Some(cycle));
+                    cycle += 1;
+                    let run = data.get("tokens").unwrap().as_arr().unwrap();
+                    assert_eq!(data.get("accepted").unwrap().as_usize(), Some(run.len()));
+                    tokens.extend(run.iter().cloned());
+                    assert_eq!(data.get("total").unwrap().as_usize(), Some(tokens.len()));
+                }
+                "done" => {
+                    assert_eq!(data.get("total").unwrap().as_usize(), Some(tokens.len()));
+                    assert!(
+                        data.get("stats").unwrap().get("decode_secs").is_some(),
+                        "done frame carries final stats"
+                    );
+                }
+                _ => {}
+            }
+            kinds.push(kind);
+        }
+        assert_eq!(kinds.first().map(String::as_str), Some("prefill"));
+        assert_eq!(kinds.last().map(String::as_str), Some("done"));
+        assert!(
+            kinds.iter().filter(|k| *k == "token").count() >= 2,
+            "token runs streamed per cycle, not buffered into one frame: {kinds:?}"
+        );
+        assert_eq!(Json::arr(tokens.into_iter()).to_string(), want_tokens);
+        assert_eq!(
+            chunks
+                .trailers()
+                .iter()
+                .find(|(k, _)| k == "x-total-tokens")
+                .map(|(_, v)| v.as_str()),
+            Some("48")
+        );
+        // both latency histograms went live at flush time
+        use crate::metrics::names;
+        assert!(coord.metrics.histogram(names::TTFT_US).count() >= 1);
+        assert!(coord.metrics.histogram(names::INTER_TOKEN_GAP_US).count() >= 1);
+    }
+
+    /// Satellite + tentpole acceptance: the first token chunk reaches the
+    /// client while the 200k-token generation is still running, and
+    /// dropping the connection mid-stream cancels the request — session
+    /// evicted at the round boundary, zero leaked pool pages,
+    /// `requests_cancelled` bumped.
+    #[test]
+    fn mid_stream_disconnect_cancels_and_releases_pages() {
+        use super::super::router::pool_plan;
+        use crate::util::httpd::http_open_stream;
+        const PROMPT: usize = 2000;
+        const BUDGET: usize = 200_000;
+        let mut cfg = ServeConfig {
+            engines: 1,
+            queue_capacity: 64,
+            max_new_tokens: BUDGET,
+            prefill_chunk_tokens: 8,
+            pool: crate::pool::PoolConfig {
+                pages: 1, // sized below
+                page_tokens: 8,
+                kv_dim: 2,
+                high_watermark: 0.9,
+                low_watermark: 0.7,
+                ..crate::pool::PoolConfig::default()
+            },
+            ..ServeConfig::default()
+        };
+        let plan = pool_plan(&cfg, PROMPT, BUDGET).pages;
+        cfg.pool.pages = plan + plan / 2;
+        let coord = Arc::new(Coordinator::with_mock(cfg, 0.2).unwrap());
+        let srv = serve(Arc::clone(&coord), "127.0.0.1:0").unwrap();
+        let addr = srv.addr.to_string();
+        let body = format!(
+            r#"{{"prompt":"{}","max_new_tokens":{BUDGET},"stream":true}}"#,
+            "x".repeat(PROMPT)
+        );
+        let (st, mut chunks) =
+            http_open_stream(&addr, "POST", "/generate", body.as_bytes()).unwrap();
+        assert_eq!(st, 200);
+        loop {
+            let chunk = chunks.next_chunk().unwrap().expect("stream ended early");
+            if parse_frame(&chunk).0 == "token" {
+                break;
+            }
+        }
+        // the first chunk arrived long before the generation could finish
+        assert_eq!(coord.metrics.counter("requests_completed"), 0);
+        drop(chunks); // client disconnects mid-stream
+        let t0 = std::time::Instant::now();
+        while coord.metrics.counter("requests_cancelled") < 1 {
+            assert!(t0.elapsed().as_secs() < 30, "disconnect never cancelled");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let mgr = coord.pool().expect("pooled").clone();
+        let t0 = std::time::Instant::now();
+        while mgr.lock().unwrap().pool().pages_in_use() != 0 {
+            assert!(t0.elapsed().as_secs() < 30, "pages leaked after disconnect");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
         mgr.lock().unwrap().check_integrity().unwrap();
     }
 

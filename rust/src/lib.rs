@@ -30,6 +30,7 @@ pub mod pool;
 pub mod runtime;
 pub mod model;
 pub mod spec;
+pub mod stream;
 pub mod baselines;
 pub mod coordinator;
 pub mod metrics;

@@ -66,6 +66,8 @@ fn config_from_args(args: &Args) -> Result<ServeConfig> {
         cfg.pool.spill_dir = d.to_string();
     }
     cfg.pool.fetch_ahead = args.get_usize("fetch-ahead", cfg.pool.fetch_ahead as usize) != 0;
+    cfg.pool.fetch_ahead_max =
+        args.get_usize("fetch-ahead-max", cfg.pool.fetch_ahead_max);
     cfg.hibernate_idle_ms =
         args.get_usize("hibernate-idle-ms", cfg.hibernate_idle_ms as usize) as u64;
     cfg.prefill_chunk_tokens =
@@ -155,6 +157,9 @@ OPTIONS (shared):
                        dir; the file is unlinked on shutdown)
   --fetch-ahead 0|1    speculatively restore the next verify window's cold
                        pages at cycle start (default 1)
+  --fetch-ahead-max N  cap on the adaptive fetch-ahead depth in quant groups:
+                       the live depth starts at 1 and rises toward N while
+                       reads keep faulting on cold pages (default 8)
   --hibernate-idle-ms N
                        scheduler idle sweep: sessions untouched for N ms
                        move wholly to the cold tier and fault back
@@ -259,6 +264,7 @@ fn run_cmd(args: &Args) -> Result<()> {
         gamma: None,
         tenant: None,
         deadline_ms: None,
+        sink: None,
     })?;
     let text: String = out
         .tokens

@@ -105,6 +105,15 @@ pub mod names {
     /// Lifetime count of sessions the tier policy hibernated (monotone;
     /// the gauge above is the instantaneous view).
     pub const SESSIONS_HIBERNATED_TOTAL: &str = "sessions_hibernated_total";
+    /// Histogram: per-request time-to-first-token (µs) — enqueue to the
+    /// round-boundary flush that pushed the first committed token toward
+    /// the client. Recorded by the scheduler at flush time, so it exists
+    /// with tracing off (unlike the `phase_*` series).
+    pub const TTFT_US: &str = "ttft_us";
+    /// Histogram: gap (µs) between consecutive round-boundary stream
+    /// flushes of one request — the inter-token cadence clients observe
+    /// (one sample per flush after the first).
+    pub const INTER_TOKEN_GAP_US: &str = "inter_token_gap_us";
     /// Histogram: per-request acceptance rate in percent (0–100).
     pub const ACCEPTANCE_RATE_PCT: &str = "acceptance_rate_pct";
     /// Histogram: accepted draft tokens per speculation cycle.

@@ -122,6 +122,11 @@ pub struct PoolConfig {
     /// Speculatively restore cold pages at cycle start (see
     /// `tier::TierPolicy::fetch_ahead`); only meaningful with tiering on.
     pub fetch_ahead: bool,
+    /// Cap on the adaptive fetch-ahead depth in quant groups (see
+    /// `tier::TierPolicy::fetch_ahead_max`). The live depth starts at 1
+    /// and is steered up to this bound by the observed cold-page fault
+    /// rate; 0 is treated as 1.
+    pub fetch_ahead_max: usize,
 }
 
 impl Default for PoolConfig {
@@ -136,6 +141,7 @@ impl Default for PoolConfig {
             spill_pages: 0,
             spill_dir: String::new(),
             fetch_ahead: true,
+            fetch_ahead_max: 8,
         }
     }
 }

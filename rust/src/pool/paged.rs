@@ -452,24 +452,25 @@ impl PagedKvCache {
     }
 
     /// Speculatively restore the pages the coming cycle will touch — the
-    /// FP buffer (draft writes and verify rewrites land there) and the
-    /// newest quant group (the verify window's usual left edge) — so a
-    /// hibernated session resumes without stalling its first reads on
-    /// on-demand faults. Gated on `TierPolicy::fetch_ahead`;
+    /// FP buffer (draft writes and verify rewrites land there) plus the
+    /// newest N quant groups, where N is the store's adaptive fetch-ahead
+    /// depth: it starts at 1 (the verify window's usual left edge) and is
+    /// steered between 1 and `TierPolicy::fetch_ahead_max` by an EWMA of
+    /// the observed on-demand fault rate, so a session whose reads keep
+    /// blocking on cold pages prefetches deeper while a warm-resident one
+    /// stays minimal. Gated on `TierPolicy::fetch_ahead`;
     /// allocation-free when nothing is spilled.
     fn fetch_ahead(&self) -> Result<()> {
         if self.shard.spilled_pages() == 0 {
             return Ok(());
         }
-        let speculate = match self.shard.spill_store() {
-            Some(store) => store.policy().fetch_ahead,
-            None => false,
+        let depth = match self.shard.spill_store() {
+            Some(store) if store.policy().fetch_ahead => store.fetch_ahead_depth(),
+            _ => return Ok(()),
         };
-        if !speculate {
-            return Ok(());
-        }
         let mut pages = self.table.fp.clone();
-        pages.extend(self.table.groups.last().copied());
+        let depth = depth.min(self.table.groups.len());
+        pages.extend(self.table.groups.iter().rev().take(depth).copied());
         self.fault_pages(&pages, true).map(|_| ())
     }
 
@@ -1478,6 +1479,40 @@ mod tests {
         let st = lock(&mgr).tier_stats();
         assert_eq!(st.fetch_ahead_hits as usize, fp_pages + 1);
         assert_eq!(st.restore_faults, 1, "oldest group faulted on demand");
+        c.release();
+        assert_eq!(lock(&mgr).pool().pages_in_use(), 0);
+    }
+
+    /// Driving the adaptive controller up with a synthetic fault stream
+    /// makes `begin_cycle` prefetch deeper: the FP buffer plus the newest
+    /// THREE quant groups come back speculatively in one fetch-ahead
+    /// (bounded by how many groups exist), leaving no on-demand faults
+    /// for the cycle's reads.
+    #[test]
+    fn fetch_ahead_depth_scales_restored_groups() {
+        let mgr = tiered_mgr(32, 32);
+        let mut c = cache(&mgr, 1, 8);
+        c.prefill(4 * G, &|p| mock_kv(p, p as i32, D)).unwrap(); // 3 groups + C_F1
+        let fp_pages = c.table().fp.len();
+        let store = Arc::clone(c.shard.spill_store().unwrap());
+        for _ in 0..16 {
+            store.note_restore(1, false); // synthetic sustained faults
+        }
+        assert!(store.fetch_ahead_depth() >= 3, "controller deepened under faults");
+        lock(&mgr).hibernate(1).unwrap();
+        let faults_before = lock(&mgr).tier_stats().restore_faults;
+        c.begin_cycle().unwrap();
+        let st = lock(&mgr).tier_stats();
+        assert_eq!(
+            st.fetch_ahead_hits as usize,
+            fp_pages + 3,
+            "FP buffer + all three quant groups restored speculatively"
+        );
+        assert_eq!(st.restore_faults, faults_before, "nothing left to fault on demand");
+        let mut out = vec![0.0f32; D];
+        c.read_token_into(0, true, &mut out).unwrap();
+        let st = lock(&mgr).tier_stats();
+        assert_eq!(st.restore_faults, faults_before, "reads hit resident pages");
         c.release();
         assert_eq!(lock(&mgr).pool().pages_in_use(), 0);
     }

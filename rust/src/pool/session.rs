@@ -206,6 +206,7 @@ impl SessionManager {
         let spill = if cfg.spill_pages > 0 {
             let policy = TierPolicy {
                 fetch_ahead: cfg.fetch_ahead,
+                fetch_ahead_max: cfg.fetch_ahead_max,
                 ..TierPolicy::default()
             };
             Some(SpillStore::new(

@@ -90,11 +90,22 @@ pub struct TierPolicy {
     /// Max pages one reclaim pass spills from a single victim
     /// (0 = no cap — take everything spillable).
     pub max_spill_batch: usize,
+    /// Ceiling on the *adaptive* fetch-ahead depth: how many of the
+    /// newest quant groups `begin_cycle` may restore speculatively on top
+    /// of the FP buffer. The live depth starts at 1 and is steered
+    /// between 1 and this cap by an EWMA of the observed on-demand fault
+    /// rate (see [`SpillStore::note_restore`]); treated as 1 when 0.
+    pub fetch_ahead_max: usize,
 }
 
 impl Default for TierPolicy {
     fn default() -> Self {
-        TierPolicy { hibernate_on_pressure: true, fetch_ahead: true, max_spill_batch: 0 }
+        TierPolicy {
+            hibernate_on_pressure: true,
+            fetch_ahead: true,
+            max_spill_batch: 0,
+            fetch_ahead_max: 8,
+        }
     }
 }
 
@@ -250,6 +261,12 @@ pub struct SpillStore {
     fetch_ahead_hits: AtomicU64,
     demotions: AtomicU64,
     hibernations: AtomicU64,
+    /// EWMA of the on-demand fault share of recent restores, in ‰
+    /// (0 = every restore was speculative, 1000 = every one blocked a
+    /// read). Drives `fetch_depth`.
+    fault_ewma_milli: AtomicU64,
+    /// Live adaptive fetch-ahead depth in quant groups, 1..=policy max.
+    fetch_depth: AtomicUsize,
 }
 
 impl SpillStore {
@@ -298,6 +315,8 @@ impl SpillStore {
             fetch_ahead_hits: AtomicU64::new(0),
             demotions: AtomicU64::new(0),
             hibernations: AtomicU64::new(0),
+            fault_ewma_milli: AtomicU64::new(0),
+            fetch_depth: AtomicUsize::new(1),
         }))
     }
 
@@ -338,9 +357,43 @@ impl SpillStore {
 
     /// Account `pages` cold→warm restores: speculative ones (fetch-ahead,
     /// before any read blocked) count as hits, on-demand ones as faults.
+    ///
+    /// Each call is also one sample for the adaptive fetch-ahead
+    /// controller: an EWMA (α = 1/8) of the fault share steers the depth
+    /// `begin_cycle` prefetches. Sustained on-demand faults (EWMA above
+    /// 50%) grow the depth one group per sample up to
+    /// `policy.fetch_ahead_max`; once faults stop (EWMA decays below
+    /// 12.5%) it shrinks back one per sample toward 1, so an idle or
+    /// warm-resident session never over-restores.
     pub fn note_restore(&self, pages: usize, speculative: bool) {
         let ctr = if speculative { &self.fetch_ahead_hits } else { &self.restore_faults };
         ctr.fetch_add(pages as u64, Ordering::Relaxed);
+        let sample: u64 = if speculative { 0 } else { 1000 };
+        let prev = self.fault_ewma_milli.load(Ordering::Relaxed);
+        // α = 1/8: ewma += (sample - ewma) / 8, in integer ‰. A racing
+        // writer loses at most one sample's worth of smoothing — fine for
+        // a heuristic.
+        let ewma = (7 * prev + sample) / 8;
+        self.fault_ewma_milli.store(ewma, Ordering::Relaxed);
+        let depth = self.fetch_depth.load(Ordering::Relaxed);
+        let max = self.policy.fetch_ahead_max.max(1);
+        let next = if ewma > 500 {
+            (depth + 1).min(max)
+        } else if ewma < 125 {
+            depth.saturating_sub(1).max(1)
+        } else {
+            depth.min(max)
+        };
+        if next != depth {
+            self.fetch_depth.store(next, Ordering::Relaxed);
+        }
+    }
+
+    /// Current adaptive fetch-ahead depth: how many of the newest quant
+    /// groups `begin_cycle` restores speculatively (the FP buffer is
+    /// always included on top).
+    pub fn fetch_ahead_depth(&self) -> usize {
+        self.fetch_depth.load(Ordering::Relaxed)
     }
 
     /// Account one whole-shard hibernation (monotone total).
@@ -583,6 +636,51 @@ mod tests {
             t.join().unwrap();
         }
         assert_eq!(s.spilled_pages(), 0);
+    }
+
+    /// Satellite acceptance: the adaptive fetch-ahead controller starts
+    /// conservative (depth 1), converges up to the configured max under a
+    /// sustained on-demand fault stream, and decays back to 1 once every
+    /// restore is speculative again.
+    #[test]
+    fn adaptive_fetch_depth_converges_up_under_faults_and_decays() {
+        let s = store(0);
+        assert_eq!(s.fetch_ahead_depth(), 1, "starts at the minimum depth");
+        let max = TierPolicy::default().fetch_ahead_max;
+        let mut grew_monotonically = true;
+        let mut last = 1;
+        for _ in 0..32 {
+            s.note_restore(1, false);
+            let d = s.fetch_ahead_depth();
+            grew_monotonically &= d >= last;
+            last = d;
+        }
+        assert!(grew_monotonically, "depth never steps down mid-fault-burst");
+        assert_eq!(s.fetch_ahead_depth(), max, "sustained faults reach the cap");
+        assert_eq!(s.stats().restore_faults, 32, "accounting unchanged");
+        for _ in 0..64 {
+            s.note_restore(1, true);
+        }
+        assert_eq!(s.fetch_ahead_depth(), 1, "depth decays once faults stop");
+        assert_eq!(s.stats().fetch_ahead_hits, 64);
+    }
+
+    /// The depth cap comes from the policy, and a zero cap degrades to 1
+    /// rather than disabling the speculative FP-buffer restore.
+    #[test]
+    fn fetch_depth_respects_configured_max() {
+        let policy = TierPolicy { fetch_ahead_max: 3, ..TierPolicy::default() };
+        let s = SpillStore::new("", 16, 0, policy).unwrap();
+        for _ in 0..32 {
+            s.note_restore(2, false);
+        }
+        assert_eq!(s.fetch_ahead_depth(), 3, "clamped at the policy cap");
+        let policy = TierPolicy { fetch_ahead_max: 0, ..TierPolicy::default() };
+        let s = SpillStore::new("", 16, 0, policy).unwrap();
+        for _ in 0..32 {
+            s.note_restore(1, false);
+        }
+        assert_eq!(s.fetch_ahead_depth(), 1, "cap of 0 is treated as 1");
     }
 
     #[test]

@@ -8,11 +8,12 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use super::sampler::Sampler;
 use crate::config::Method;
 use crate::model::Decoder;
+use crate::stream::{StreamEvent, TokenSink};
 use crate::trace::{self, PhaseEvent, TraceBuf};
 
 /// Outcome of one generation call.
@@ -60,17 +61,68 @@ pub struct SpecEngine {
     /// Request-scoped trace buffer; phase events from this engine's whole
     /// call stack (including the decoder's cache flushes) land here.
     trace: Option<Arc<TraceBuf>>,
+    /// Incremental response sink: each cycle's committed run is pushed
+    /// the moment it commits. A send observing a dropped receiver aborts
+    /// the generation (the consumer disconnected).
+    sink: Option<TokenSink>,
 }
 
 impl SpecEngine {
     pub fn new(gamma: usize, sampler: Sampler) -> SpecEngine {
-        SpecEngine { gamma, sampler, trace: None }
+        SpecEngine { gamma, sampler, trace: None, sink: None }
     }
 
     /// Attach a request-scoped trace buffer (builder style).
     pub fn with_trace(mut self, buf: Arc<TraceBuf>) -> SpecEngine {
         self.trace = Some(buf);
         self
+    }
+
+    /// Attach an incremental token sink (builder style): committed runs
+    /// stream out per verify cycle instead of only landing in the final
+    /// [`GenResult`]. The buffered result is still returned — the sink's
+    /// concatenated `Token` events are bit-identical to it.
+    pub fn with_sink(mut self, sink: TokenSink) -> SpecEngine {
+        self.sink = Some(sink);
+        self
+    }
+
+    /// Flush tokens committed since the last flush (`flushed`) into the
+    /// sink as one `Token` run. `Err` means the consumer disconnected.
+    fn emit_run(
+        &self,
+        tokens: &[i32],
+        flushed: &mut usize,
+        cycle: &mut usize,
+    ) -> Result<()> {
+        let Some(sink) = &self.sink else { return Ok(()) };
+        if tokens.len() > *flushed {
+            let run = tokens[*flushed..].to_vec();
+            if sink
+                .send(StreamEvent::Token {
+                    cycle: *cycle,
+                    tokens: run,
+                    total: tokens.len(),
+                })
+                .is_err()
+            {
+                bail!(
+                    "cancelled: stream receiver dropped after {} tokens",
+                    *flushed
+                );
+            }
+            *flushed = tokens.len();
+            *cycle += 1;
+        }
+        Ok(())
+    }
+
+    fn emit_done(&self, total: usize) {
+        if let Some(sink) = &self.sink {
+            // The consumer may drop its receiver right after the last
+            // token; a failed terminal send is not an error.
+            let _ = sink.send(StreamEvent::Done { total });
+        }
     }
 
     /// Generate up to `max_new` tokens after `prompt`.
@@ -97,6 +149,9 @@ impl SpecEngine {
                 us: (res.prefill_secs * 1e6) as u64,
             });
         }
+        if let Some(sink) = &self.sink {
+            let _ = sink.send(StreamEvent::Prefilled { prompt_tokens: prompt.len() });
+        }
 
         let t1 = Instant::now();
         if max_new == 0 {
@@ -104,10 +159,14 @@ impl SpecEngine {
             // first token is never sampled and nothing is committed (the
             // pre-fix code sampled it and truncated it away afterwards).
             res.decode_secs = t1.elapsed().as_secs_f64();
+            self.emit_done(0);
             return Ok(res);
         }
         let mut last = self.sampler.sample(&logits);
         res.tokens.push(last);
+        let mut flushed = 0usize;
+        let mut stream_cycle = 0usize;
+        self.emit_run(&res.tokens, &mut flushed, &mut stream_cycle)?;
 
         if dec.method() == Method::Autoregressive {
             while res.tokens.len() < max_new {
@@ -120,8 +179,10 @@ impl SpecEngine {
                         us: ts.elapsed().as_micros() as u64,
                     });
                 }
+                self.emit_run(&res.tokens, &mut flushed, &mut stream_cycle)?;
             }
             res.decode_secs = t1.elapsed().as_secs_f64();
+            self.emit_done(res.tokens.len());
             return Ok(res);
         }
 
@@ -191,11 +252,13 @@ impl SpecEngine {
             }
             res.tokens.push(out.next_token);
             last = out.next_token;
+            self.emit_run(&res.tokens, &mut flushed, &mut stream_cycle)?;
         }
         // No trailing truncate: γ-clamping makes the loop land exactly on
         // the budget, so every token the decoder committed is reported.
         debug_assert_eq!(res.tokens.len(), max_new);
         res.decode_secs = t1.elapsed().as_secs_f64();
+        self.emit_done(res.tokens.len());
         Ok(res)
     }
 }
@@ -355,6 +418,73 @@ mod tests {
         fn set_method(&mut self, m: Method) {
             self.force_method(m);
         }
+    }
+
+    /// Streaming is an observer: the sink's concatenated `Token` runs are
+    /// bit-identical to the buffered result, cycle indices are dense, and
+    /// the stream ends with `Prefilled … Token* Done` in commit order.
+    #[test]
+    fn streamed_chunks_concat_to_the_buffered_tokens() {
+        use crate::stream::{drain_tokens, StreamEvent, TokenSink};
+        for (gamma, err, max_new) in [(4, 0.2, 24), (1, 0.0, 1), (7, 0.5, 17)] {
+            let prompt = vec![10, 20, 30];
+            let mut plain = MockDecoder::new(64, 7, err);
+            let base = greedy_engine(gamma).generate(&mut plain, &prompt, max_new).unwrap();
+
+            let (sink, rx) = TokenSink::channel();
+            let mut dec = MockDecoder::new(64, 7, err);
+            let out = greedy_engine(gamma)
+                .with_sink(sink)
+                .generate(&mut dec, &prompt, max_new)
+                .unwrap();
+            assert_eq!(out.tokens, base.tokens, "streaming must not perturb decode");
+
+            let events: Vec<StreamEvent> = rx.try_iter().collect();
+            assert!(
+                matches!(events.first(), Some(StreamEvent::Prefilled { prompt_tokens: 3 })),
+                "stream opens with prefill-done"
+            );
+            assert!(
+                matches!(events.last(), Some(StreamEvent::Done { total }) if *total == max_new),
+                "stream closes with done"
+            );
+            let mut concat = Vec::new();
+            for (i, ev) in events[1..events.len() - 1].iter().enumerate() {
+                match ev {
+                    StreamEvent::Token { cycle, tokens, total } => {
+                        assert_eq!(*cycle, i, "cycle indices are dense");
+                        assert!(!tokens.is_empty());
+                        concat.extend_from_slice(tokens);
+                        assert_eq!(*total, concat.len(), "cumulative count tracks concat");
+                    }
+                    other => panic!("unexpected mid-stream event {other:?}"),
+                }
+            }
+            assert_eq!(concat, base.tokens, "gamma={gamma} err={err}");
+
+            // drain_tokens is the buffered consumer: same reassembly.
+            let (sink2, rx2) = TokenSink::channel();
+            let mut dec2 = MockDecoder::new(64, 7, err);
+            greedy_engine(gamma).with_sink(sink2).generate(&mut dec2, &prompt, max_new).unwrap();
+            let (tokens, terminal) = drain_tokens(&rx2);
+            assert_eq!(tokens, base.tokens);
+            assert_eq!(terminal, Some(StreamEvent::Done { total: max_new }));
+        }
+    }
+
+    /// A dropped stream receiver is a disconnect: generation aborts with a
+    /// `cancelled:` error instead of running the budget to completion.
+    #[test]
+    fn dropped_sink_receiver_aborts_generation() {
+        use crate::stream::TokenSink;
+        let (sink, rx) = TokenSink::channel();
+        drop(rx);
+        let mut dec = MockDecoder::new(64, 7, 0.0);
+        let err = greedy_engine(4)
+            .with_sink(sink)
+            .generate(&mut dec, &[1, 2, 3], 40)
+            .unwrap_err();
+        assert!(err.to_string().starts_with("cancelled:"), "{err}");
     }
 
     /// Tracing is an observer: a traced engine emits one prefill event and

@@ -1,0 +1,165 @@
+//! Incremental token streaming: the `TokenSink` response contract.
+//!
+//! QuantSpec commits tokens in accepted bursts — one run of
+//! `accepted + 1` tokens per verify cycle — so the natural streaming
+//! granularity is the commit: every layer that produces committed tokens
+//! (the spec engine's generate loop, the step batcher's round boundary in
+//! the unified scheduler) pushes each newly committed run into a
+//! [`TokenSink`] the moment the sampler accepts it, instead of only
+//! accumulating it for an end-of-request response.
+//!
+//! A sink is the sending half of an unbounded channel of [`StreamEvent`]s:
+//! sends never block the decode path, and a send observing a dropped
+//! receiver ([`SinkClosed`]) is the *disconnect signal* — the consumer
+//! (an HTTP connection thread, a test harness) went away, and the
+//! producer side feeds that into the cancellation machinery (the
+//! scheduler marks the request and evicts it at the next round boundary,
+//! releasing its pool pages).
+//!
+//! The buffered (non-streaming) response path is the same code path with
+//! a draining consumer: [`drain_tokens`] concatenates every `Token`
+//! event, and the concatenation is bit-identical to the tokens a buffered
+//! `GenResult`/`ResponseOut` reports — pinned by parity tests at the
+//! engine, scheduler, and HTTP layers.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+/// One event on a request's response stream, in commit order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StreamEvent {
+    /// Prompt processing finished; committed tokens follow. `prompt_tokens`
+    /// is the (padded) prompt length the prefill consumed.
+    Prefilled { prompt_tokens: usize },
+    /// One committed run: `tokens` newly accepted in flush `cycle`
+    /// (cycle 0 carries the prefill-sampled first token), `total` the
+    /// cumulative committed count including this run.
+    Token { cycle: usize, tokens: Vec<i32>, total: usize },
+    /// Terminal: the request retired normally after `total` tokens.
+    Done { total: usize },
+    /// Terminal: the request aborted (engine failure, cancellation,
+    /// deadline); `message` is the error string the buffered path reports.
+    Error { message: String },
+}
+
+impl StreamEvent {
+    /// Wire name of this event kind (the SSE `event:` field).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            StreamEvent::Prefilled { .. } => "prefill",
+            StreamEvent::Token { .. } => "token",
+            StreamEvent::Done { .. } => "done",
+            StreamEvent::Error { .. } => "error",
+        }
+    }
+
+    /// True for `Done`/`Error` — nothing follows a terminal event.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, StreamEvent::Done { .. } | StreamEvent::Error { .. })
+    }
+}
+
+/// The consumer of a stream went away: its receiver was dropped before
+/// the producer finished. Producers treat this as a client disconnect.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SinkClosed;
+
+impl std::fmt::Display for SinkClosed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "stream receiver dropped (client disconnected)")
+    }
+}
+
+impl std::error::Error for SinkClosed {}
+
+/// Sending half of a response stream. Cheap to clone; sends are
+/// non-blocking (unbounded channel) and allocation is bounded by the
+/// events actually produced — nothing on the decode step path.
+#[derive(Debug, Clone)]
+pub struct TokenSink {
+    tx: Sender<StreamEvent>,
+}
+
+impl TokenSink {
+    /// A fresh (sink, receiver) pair. The receiver is the response
+    /// consumer; dropping it turns every later send into [`SinkClosed`].
+    pub fn channel() -> (TokenSink, Receiver<StreamEvent>) {
+        let (tx, rx) = channel();
+        (TokenSink { tx }, rx)
+    }
+
+    /// Push one event toward the consumer. `Err(SinkClosed)` means the
+    /// consumer disconnected; the producer should stop and cancel.
+    pub fn send(&self, ev: StreamEvent) -> Result<(), SinkClosed> {
+        self.tx.send(ev).map_err(|_| SinkClosed)
+    }
+}
+
+/// Drain a stream to completion, concatenating every `Token` run — the
+/// buffered response path, and the parity check's reference reassembly.
+/// Returns the concatenated tokens and the terminal event (`None` if the
+/// producer dropped the sink without sending one).
+pub fn drain_tokens(rx: &Receiver<StreamEvent>) -> (Vec<i32>, Option<StreamEvent>) {
+    let mut tokens = Vec::new();
+    while let Ok(ev) = rx.recv() {
+        match ev {
+            StreamEvent::Token { tokens: ref run, .. } => tokens.extend_from_slice(run),
+            StreamEvent::Prefilled { .. } => {}
+            terminal => return (tokens, Some(terminal)),
+        }
+    }
+    (tokens, None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_flow_in_order_and_drain_concatenates() {
+        let (sink, rx) = TokenSink::channel();
+        sink.send(StreamEvent::Prefilled { prompt_tokens: 8 }).unwrap();
+        sink.send(StreamEvent::Token { cycle: 0, tokens: vec![1], total: 1 }).unwrap();
+        sink.send(StreamEvent::Token { cycle: 1, tokens: vec![2, 3, 4], total: 4 }).unwrap();
+        sink.send(StreamEvent::Done { total: 4 }).unwrap();
+        let (tokens, terminal) = drain_tokens(&rx);
+        assert_eq!(tokens, vec![1, 2, 3, 4]);
+        assert_eq!(terminal, Some(StreamEvent::Done { total: 4 }));
+    }
+
+    #[test]
+    fn dropped_receiver_reports_sink_closed() {
+        let (sink, rx) = TokenSink::channel();
+        sink.send(StreamEvent::Prefilled { prompt_tokens: 1 }).unwrap();
+        drop(rx);
+        let err = sink
+            .send(StreamEvent::Token { cycle: 0, tokens: vec![1], total: 1 })
+            .unwrap_err();
+        assert_eq!(err, SinkClosed);
+        assert!(err.to_string().contains("disconnected"));
+    }
+
+    #[test]
+    fn error_terminal_carries_the_buffered_message() {
+        let (sink, rx) = TokenSink::channel();
+        sink.send(StreamEvent::Token { cycle: 0, tokens: vec![9], total: 1 }).unwrap();
+        sink.send(StreamEvent::Error { message: "cancelled: request 3".into() }).unwrap();
+        let (tokens, terminal) = drain_tokens(&rx);
+        assert_eq!(tokens, vec![9]);
+        match terminal {
+            Some(StreamEvent::Error { message }) => assert!(message.starts_with("cancelled:")),
+            other => panic!("expected Error terminal, got {other:?}"),
+        }
+        assert!(StreamEvent::Done { total: 0 }.is_terminal());
+        assert_eq!(StreamEvent::Prefilled { prompt_tokens: 0 }.kind(), "prefill");
+    }
+
+    #[test]
+    fn producer_drop_without_terminal_yields_none() {
+        let (sink, rx) = TokenSink::channel();
+        sink.send(StreamEvent::Token { cycle: 0, tokens: vec![5, 6], total: 2 }).unwrap();
+        drop(sink);
+        let (tokens, terminal) = drain_tokens(&rx);
+        assert_eq!(tokens, vec![5, 6]);
+        assert_eq!(terminal, None);
+    }
+}

@@ -73,6 +73,16 @@ pub enum PhaseEvent {
     /// The speculative fetch-ahead hook restored `pages` cold pages ahead
     /// of the next verify window (overlapped with the decode round).
     FetchAhead { pages: usize, us: u64 },
+    /// Marker: the first committed token left the scheduler toward the
+    /// client, `us` µs after the trace began (the request's TTFT as seen
+    /// at the round boundary). Carries no duration — the wall it covers is
+    /// already accounted to queue/prefill/draft phases.
+    FirstToken { cycle: usize, us: u64 },
+    /// Marker: one round-boundary stream flush pushed `tokens` committed
+    /// tokens of cycle `cycle` into the response sink, `us` µs after the
+    /// previous flush (the observed inter-chunk gap). No duration — the
+    /// gap wall belongs to the decode phases that produced the tokens.
+    StreamFlush { cycle: usize, tokens: usize, us: u64 },
 }
 
 impl PhaseEvent {
@@ -91,6 +101,8 @@ impl PhaseEvent {
             PhaseEvent::Spill { .. } => "spill",
             PhaseEvent::Restore { .. } => "restore",
             PhaseEvent::FetchAhead { .. } => "fetch_ahead",
+            PhaseEvent::FirstToken { .. } => "first_token",
+            PhaseEvent::StreamFlush { .. } => "stream",
         }
     }
 
@@ -109,7 +121,9 @@ impl PhaseEvent {
             PhaseEvent::EvictLru { .. }
             | PhaseEvent::Completed { .. }
             | PhaseEvent::Cancelled { .. }
-            | PhaseEvent::DeadlineExpired { .. } => 0,
+            | PhaseEvent::DeadlineExpired { .. }
+            | PhaseEvent::FirstToken { .. }
+            | PhaseEvent::StreamFlush { .. } => 0,
         }
     }
 
@@ -130,6 +144,10 @@ impl PhaseEvent {
             PhaseEvent::Spill { session, pages, us } => (10, session, pages as u64, us),
             PhaseEvent::Restore { pages, us } => (11, pages as u64, us, 0),
             PhaseEvent::FetchAhead { pages, us } => (12, pages as u64, us, 0),
+            PhaseEvent::FirstToken { cycle, us } => (13, cycle as u64, us, 0),
+            PhaseEvent::StreamFlush { cycle, tokens, us } => {
+                (14, cycle as u64, tokens as u64, us)
+            }
         }
     }
 
@@ -148,6 +166,8 @@ impl PhaseEvent {
             10 => PhaseEvent::Spill { session: a, pages: b as usize, us: c },
             11 => PhaseEvent::Restore { pages: a as usize, us: b },
             12 => PhaseEvent::FetchAhead { pages: a as usize, us: b },
+            13 => PhaseEvent::FirstToken { cycle: a as usize, us: b },
+            14 => PhaseEvent::StreamFlush { cycle: a as usize, tokens: b as usize, us: c },
             _ => return None,
         })
     }
@@ -178,6 +198,15 @@ impl PhaseEvent {
             }
             PhaseEvent::Restore { pages, us } | PhaseEvent::FetchAhead { pages, us } => {
                 pairs.push(("pages", Json::num(pages as f64)));
+                pairs.push(("us", Json::num(us as f64)));
+            }
+            PhaseEvent::FirstToken { cycle, us } => {
+                pairs.push(("cycle", Json::num(cycle as f64)));
+                pairs.push(("us", Json::num(us as f64)));
+            }
+            PhaseEvent::StreamFlush { cycle, tokens, us } => {
+                pairs.push(("cycle", Json::num(cycle as f64)));
+                pairs.push(("tokens", Json::num(tokens as f64)));
                 pairs.push(("us", Json::num(us as f64)));
             }
             PhaseEvent::Completed { total_us }
@@ -468,10 +497,15 @@ pub fn record_phase_histograms(t: &RequestTimeline, metrics: &Registry) {
             PhaseEvent::Spill { us, .. } => spill.record_us(us as f64),
             PhaseEvent::Restore { us, .. } => restore.record_us(us as f64),
             PhaseEvent::FetchAhead { us, .. } => fetch_ahead.record_us(us as f64),
+            // ttft_us / inter_token_gap_us are recorded live at flush time
+            // by the scheduler (they must exist with tracing off), so the
+            // stream markers fold into nothing here.
             PhaseEvent::EvictLru { .. }
             | PhaseEvent::Completed { .. }
             | PhaseEvent::Cancelled { .. }
-            | PhaseEvent::DeadlineExpired { .. } => {}
+            | PhaseEvent::DeadlineExpired { .. }
+            | PhaseEvent::FirstToken { .. }
+            | PhaseEvent::StreamFlush { .. } => {}
         }
     }
     if drafted_total > 0 {
@@ -499,6 +533,8 @@ mod tests {
             PhaseEvent::Spill { session: 3, pages: 5, us: 120 },
             PhaseEvent::Restore { pages: 2, us: 60 },
             PhaseEvent::FetchAhead { pages: 4, us: 45 },
+            PhaseEvent::FirstToken { cycle: 0, us: 140 },
+            PhaseEvent::StreamFlush { cycle: 2, tokens: 5, us: 77 },
             PhaseEvent::Cancelled { total_us: 550 },
             PhaseEvent::DeadlineExpired { total_us: 580 },
             PhaseEvent::Completed { total_us: 600 },

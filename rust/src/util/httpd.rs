@@ -31,23 +31,59 @@ pub struct ChunkWriter<'a> {
 }
 
 impl ChunkWriter<'_> {
+    /// Explicit partial-write loop: retries `Interrupted`, turns a
+    /// zero-byte write into `WriteZero` instead of a silent short frame. A
+    /// streaming response lives on this loop for a whole generation, so
+    /// the failure surface (the disconnect signal) is pinned right here.
+    fn write_raw(&mut self, mut buf: &[u8]) -> std::io::Result<()> {
+        while !buf.is_empty() {
+            match self.out.write(buf) {
+                Ok(0) => {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::WriteZero,
+                        "connection accepted zero bytes mid-chunk",
+                    ))
+                }
+                Ok(n) => buf = &buf[n..],
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(())
+    }
+
     pub fn write_chunk(&mut self, data: &[u8]) -> std::io::Result<()> {
         // an empty chunk IS the terminator on the wire, so skip it here
         if data.is_empty() || self.finished {
             return Ok(());
         }
-        write!(self.out, "{:x}\r\n", data.len())?;
-        self.out.write_all(data)?;
-        self.out.write_all(b"\r\n")?;
+        // one frame (size line + data + CRLF) through one write loop, so a
+        // partial write can never interleave with another chunk's frame
+        let mut frame = Vec::with_capacity(data.len() + 16);
+        frame.extend_from_slice(format!("{:x}\r\n", data.len()).as_bytes());
+        frame.extend_from_slice(data);
+        frame.extend_from_slice(b"\r\n");
+        self.write_raw(&frame)?;
         self.out.flush()
     }
 
     pub fn finish(&mut self) -> std::io::Result<()> {
+        self.finish_with_trailers(&[])
+    }
+
+    /// Terminal chunk plus optional trailer fields (`0\r\n` + `name: value`
+    /// lines + blank line). Idempotent like `finish`.
+    pub fn finish_with_trailers(&mut self, trailers: &[(&str, &str)]) -> std::io::Result<()> {
         if self.finished {
             return Ok(());
         }
         self.finished = true;
-        self.out.write_all(b"0\r\n\r\n")?;
+        let mut frame = Vec::from(&b"0\r\n"[..]);
+        for (k, v) in trailers {
+            frame.extend_from_slice(format!("{k}: {v}\r\n").as_bytes());
+        }
+        frame.extend_from_slice(b"\r\n");
+        self.write_raw(&frame)?;
         self.out.flush()
     }
 }
@@ -247,6 +283,177 @@ fn read_request(reader: &mut BufReader<TcpStream>) -> std::io::Result<Option<Req
     Ok(Some(Request { method, path, headers, body }))
 }
 
+/// Client-side incremental decoder for a `Transfer-Encoding: chunked`
+/// body: one `next_chunk` call per wire chunk, preserving the server's
+/// chunk boundaries (unlike [`http_request`], which concatenates). Frames
+/// split across arbitrary `read` boundaries reassemble correctly — the
+/// reader buffers internally and never over-reads past what it needs next.
+/// Dropping the reader mid-body closes the connection: the server's next
+/// `write_chunk` fails, which is the disconnect signal streaming handlers
+/// feed into cancellation.
+pub struct ChunkReader<R: Read> {
+    src: R,
+    buf: Vec<u8>,
+    pos: usize,
+    done: bool,
+    trailers: Vec<(String, String)>,
+}
+
+impl<R: Read> ChunkReader<R> {
+    pub fn new(src: R) -> ChunkReader<R> {
+        ChunkReader { src, buf: Vec::new(), pos: 0, done: false, trailers: Vec::new() }
+    }
+
+    /// Blocking read of the next chunk's data. `Ok(None)` after the
+    /// terminal chunk — its trailer fields (if any) have been consumed and
+    /// are available via [`ChunkReader::trailers`]. Idempotent once done.
+    pub fn next_chunk(&mut self) -> std::io::Result<Option<Vec<u8>>> {
+        if self.done {
+            return Ok(None);
+        }
+        let line = self.read_line()?;
+        // a chunk-size line may carry ";ext" extensions — ignore them
+        let n = line
+            .trim()
+            .split(';')
+            .next()
+            .and_then(|s| usize::from_str_radix(s.trim(), 16).ok())
+            .ok_or_else(|| {
+                std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("bad chunk-size line: {line:?}"),
+                )
+            })?;
+        if n == 0 {
+            // trailer section: header lines up to the blank terminator
+            loop {
+                let t = self.read_line()?;
+                let t = t.trim_end();
+                if t.is_empty() {
+                    break;
+                }
+                if let Some((k, v)) = t.split_once(':') {
+                    self.trailers
+                        .push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+                }
+            }
+            self.done = true;
+            return Ok(None);
+        }
+        let mut data = self.read_exact_vec(n + 2)?; // data + trailing CRLF
+        data.truncate(n);
+        Ok(Some(data))
+    }
+
+    /// Trailer fields from the terminal chunk (empty until `next_chunk`
+    /// has returned `None`). Names are lowercased.
+    pub fn trailers(&self) -> &[(String, String)] {
+        &self.trailers
+    }
+
+    fn fill(&mut self) -> std::io::Result<usize> {
+        if self.pos > 0 && self.pos == self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+        }
+        let mut tmp = [0u8; 4096];
+        loop {
+            match self.src.read(&mut tmp) {
+                Ok(n) => {
+                    self.buf.extend_from_slice(&tmp[..n]);
+                    return Ok(n);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    fn read_line(&mut self) -> std::io::Result<String> {
+        loop {
+            if let Some(i) = self.buf[self.pos..].iter().position(|&b| b == b'\n') {
+                let line =
+                    String::from_utf8_lossy(&self.buf[self.pos..self.pos + i]).into_owned();
+                self.pos += i + 1;
+                return Ok(line);
+            }
+            if self.fill()? == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "eof mid chunk-size line",
+                ));
+            }
+        }
+    }
+
+    fn read_exact_vec(&mut self, n: usize) -> std::io::Result<Vec<u8>> {
+        while self.buf.len() - self.pos < n {
+            if self.fill()? == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "eof mid chunk data",
+                ));
+            }
+        }
+        let out = self.buf[self.pos..self.pos + n].to_vec();
+        self.pos += n;
+        Ok(out)
+    }
+}
+
+/// Open a streaming request and return the response status plus an
+/// incremental [`ChunkReader`] over the live connection — the client side
+/// of [`Response::chunked`], for callers that must observe chunk arrival
+/// times (TTFT) or disconnect mid-body (drop the reader). Errors with
+/// `InvalidData` when the response is not chunked (use [`http_request`]
+/// for buffered responses).
+pub fn http_open_stream(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: &[u8],
+) -> std::io::Result<(u16, ChunkReader<TcpStream>)> {
+    let mut stream = TcpStream::connect(addr)?;
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    // Byte-wise head read: not a single body byte is buffered away from
+    // the ChunkReader that takes over the socket.
+    let mut head_bytes = Vec::new();
+    let mut one = [0u8; 1];
+    while !head_bytes.ends_with(b"\r\n\r\n") {
+        if stream.read(&mut one)? == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "eof in response head",
+            ));
+        }
+        head_bytes.push(one[0]);
+    }
+    let head_text = String::from_utf8_lossy(&head_bytes);
+    let mut lines = head_text.lines();
+    let status: u16 = lines
+        .next()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    let chunked = lines.any(|l| {
+        l.to_ascii_lowercase()
+            .strip_prefix("transfer-encoding:")
+            .is_some_and(|v| v.trim() == "chunked")
+    });
+    if !chunked {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("response (status {status}) is not chunked"),
+        ));
+    }
+    Ok((status, ChunkReader::new(stream)))
+}
+
 /// Tiny blocking HTTP client for tests/benches (same dialect the server
 /// speaks; one request per call, Connection: close).
 pub fn http_request(
@@ -287,26 +494,11 @@ pub fn http_request(
         }
     }
     if chunked {
+        // decode through the same incremental reader streaming clients use
+        // (terminal chunk + trailers consumed; boundaries concatenated)
+        let mut chunks = ChunkReader::new(reader);
         let mut body = Vec::new();
-        loop {
-            let mut sz = String::new();
-            reader.read_line(&mut sz)?;
-            // a chunk-size line may carry ";ext" extensions — ignore them
-            let n = sz
-                .trim()
-                .split(';')
-                .next()
-                .and_then(|s| usize::from_str_radix(s.trim(), 16).ok())
-                .unwrap_or(0);
-            if n == 0 {
-                // consume the CRLF after the zero-length terminator
-                let mut crlf = String::new();
-                reader.read_line(&mut crlf)?;
-                break;
-            }
-            let mut chunk = vec![0u8; n + 2]; // data + trailing CRLF
-            reader.read_exact(&mut chunk)?;
-            chunk.truncate(n);
+        while let Some(chunk) = chunks.next_chunk()? {
             body.extend_from_slice(&chunk);
         }
         return Ok((status, body));
@@ -393,5 +585,72 @@ mod tests {
             assert!(body[off..off + n].iter().all(|&b| b == i as u8), "chunk {i} corrupt");
             off += n;
         }
+    }
+
+    /// A `Read` source that hands out at most `stride` bytes per call,
+    /// slicing chunk frames across arbitrary read boundaries.
+    struct Dribble {
+        data: Vec<u8>,
+        pos: usize,
+        stride: usize,
+    }
+
+    impl Read for Dribble {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            let n = self.stride.min(self.data.len() - self.pos).min(buf.len());
+            buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    /// Satellite: every split of the wire bytes across read boundaries —
+    /// size line, data, CRLF, terminator, trailers — reassembles the same
+    /// chunks, and the reader is idempotent after the terminal chunk.
+    #[test]
+    fn chunk_reader_handles_boundaries_split_across_reads() {
+        let wire = b"6\r\nhello \r\n7;ext=1\r\nchunked\r\n0\r\nx-total: 13\r\n\r\n".to_vec();
+        for stride in 1..=wire.len() {
+            let mut r = ChunkReader::new(Dribble { data: wire.clone(), pos: 0, stride });
+            assert_eq!(r.next_chunk().unwrap().as_deref(), Some(&b"hello "[..]), "stride {stride}");
+            assert_eq!(r.next_chunk().unwrap().as_deref(), Some(&b"chunked"[..]));
+            assert_eq!(r.next_chunk().unwrap(), None);
+            assert_eq!(r.trailers(), [("x-total".to_string(), "13".to_string())]);
+            assert_eq!(r.next_chunk().unwrap(), None, "idempotent after terminal");
+        }
+    }
+
+    #[test]
+    fn chunk_reader_reports_truncated_and_malformed_streams() {
+        let mut r = ChunkReader::new(Dribble { data: b"6\r\nhel".to_vec(), pos: 0, stride: 2 });
+        let e = r.next_chunk().unwrap_err();
+        assert_eq!(e.kind(), std::io::ErrorKind::UnexpectedEof);
+        let mut r =
+            ChunkReader::new(Dribble { data: b"zz\r\nboom\r\n".to_vec(), pos: 0, stride: 3 });
+        let e = r.next_chunk().unwrap_err();
+        assert_eq!(e.kind(), std::io::ErrorKind::InvalidData);
+    }
+
+    /// Trailers written by `finish_with_trailers` survive both clients: the
+    /// buffered `http_request` consumes them silently, and the incremental
+    /// `http_open_stream` reader exposes them after the terminal chunk.
+    #[test]
+    fn trailers_round_trip_end_to_end() {
+        let handler: Handler = Arc::new(|_req: &Request| {
+            Response::chunked(200, "text/plain", |w| {
+                w.write_chunk(b"abc")?;
+                w.finish_with_trailers(&[("x-chunks", "1")])
+            })
+        });
+        let server = Server::start("127.0.0.1:0", handler).unwrap();
+        let addr = server.addr.to_string();
+        let (st, body) = http_request(&addr, "GET", "/", b"").unwrap();
+        assert_eq!(st, 200);
+        assert_eq!(body, b"abc");
+        let (st, mut chunks) = http_open_stream(&addr, "GET", "/", b"").unwrap();
+        assert_eq!(st, 200);
+        assert_eq!(chunks.next_chunk().unwrap().as_deref(), Some(&b"abc"[..]));
+        assert_eq!(chunks.next_chunk().unwrap(), None);
+        assert_eq!(chunks.trailers(), [("x-chunks".to_string(), "1".to_string())]);
     }
 }
