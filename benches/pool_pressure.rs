@@ -1011,6 +1011,216 @@ fn main() {
     tstr.print("streaming — TTFT vs full generation over SSE-chunked HTTP");
     let _ = tstr.write_csv("bench_out/pool_pressure_streaming.csv");
 
+    // --- phase 9: chaos soak — deterministic fault schedules -------------
+    // Three fixed fault seeds drive the full coordinator (paged pool +
+    // cold tier + bounded streams + fault injection) over a mixed
+    // workload: chunked prefills, short decoders, drained streams, and
+    // stalled consumers the scheduler must shed. Each seed's schedule is
+    // a pure function of (fault_seed, fault_spec) — see docs/ROBUSTNESS.md
+    // — so a CI failure replays locally with the same two knobs. Gates
+    // (deterministic, always enforced): zero leaked pages after every
+    // schedule, pool integrity, monotone completion counters, and token
+    // parity — every request that SUCCEEDS under faults must return
+    // bit-identical tokens to the fault-free reference run (failed and
+    // shed requests are the fault's intended blast radius).
+    use quantspec::coordinator::RequestSpec;
+    use quantspec::metrics::names;
+    use quantspec::stream::{drain_tokens, StreamEvent, StreamReceiver, TokenSink};
+    use std::collections::BTreeMap;
+    const CHAOS_SPEC: &str = "spill_write:60,spill_read:30,spill_corrupt:15,\
+                              step_panic:15:2,decode_error:30:4,quant_stall:150";
+    let chaos_seeds: [u64; 3] = [11, 23, 47];
+    let chaos_requests: u64 = if quick { 10 } else { 18 };
+    let chaos_new = 24usize;
+    struct ChaosRun {
+        ok_tokens: BTreeMap<u64, Vec<i32>>,
+        failed: u64,
+        sheds: u64,
+        leaked: usize,
+        faults: u64,
+        io_errors: u64,
+    }
+    let run_chaos = |fault_seed: u64, spec: &str| -> ChaosRun {
+        let spill_dir = std::env::temp_dir().join(format!(
+            "qs-bench-chaos-{}-{fault_seed}-{}",
+            std::process::id(),
+            u8::from(spec.is_empty()),
+        ));
+        let cfg = ServeConfig {
+            engines: 1,
+            queue_capacity: 64,
+            max_new_tokens: chaos_new,
+            prefill_chunk_tokens: 16,
+            batcher_slots: 3,
+            fault_seed,
+            fault_spec: spec.to_string(),
+            pool: PoolConfig {
+                pages: 96,
+                page_tokens: G,
+                kv_dim: D,
+                high_watermark: 0.9,
+                low_watermark: 0.7,
+                spill_pages: 256,
+                spill_dir: spill_dir.to_string_lossy().into_owned(),
+                ..PoolConfig::default()
+            },
+            ..ServeConfig::default()
+        };
+        let c = Coordinator::with_mock(cfg, 0.15).expect("chaos coordinator");
+        let mut dones = Vec::new();
+        // (id, receiver, drained?) — receivers stay alive for the whole
+        // run so a dropped stream never masquerades as a disconnect
+        let mut streams: Vec<(u64, StreamReceiver, bool)> = Vec::new();
+        for i in 0..chaos_requests {
+            let plen = match i % 4 {
+                0 => 160,
+                1 => 24,
+                2 => 48,
+                _ => 80,
+            };
+            let id = c.next_id();
+            let sink = if i % 7 == 3 {
+                // a stalled consumer: tiny buffer, never drained — the
+                // scheduler must shed it at a round boundary
+                let (s, rx) = TokenSink::bounded(2);
+                streams.push((id, rx, false));
+                Some(s)
+            } else if i % 3 == 0 {
+                // a healthy streaming consumer, drained after completion
+                let (s, rx) = TokenSink::bounded(4096);
+                streams.push((id, rx, true));
+                Some(s)
+            } else {
+                None
+            };
+            let spec = RequestSpec {
+                id,
+                prompt: workload::prompt(id, plen, Profile::Pg19),
+                max_new_tokens: chaos_new,
+                method: None,
+                gamma: None,
+                tenant: None,
+                deadline_ms: None,
+                sink,
+            };
+            let rx = c
+                .submit(spec)
+                .map_err(|(_, why)| why)
+                .expect("queue sized for the soak");
+            dones.push((id, rx));
+        }
+        let mut ok_tokens = BTreeMap::new();
+        let mut failed = 0u64;
+        let mid_completed = c.metrics.counter("requests_completed");
+        for (id, rx) in dones {
+            match rx.recv().expect("scheduler dropped a done channel") {
+                Ok(out) => {
+                    ok_tokens.insert(id, out.tokens);
+                }
+                Err(_) => failed += 1,
+            }
+        }
+        assert!(
+            c.metrics.counter("requests_completed") >= mid_completed,
+            "completion counter went backwards during the soak"
+        );
+        // drained streams must agree with their buffered response
+        for (id, rx, drained) in streams {
+            if !drained {
+                continue;
+            }
+            let (toks, terminal) = drain_tokens(&rx);
+            if let (Some(want), Some(StreamEvent::Done { .. })) =
+                (ok_tokens.get(&id), terminal)
+            {
+                assert_eq!(&toks, want, "request {id}: stream diverged from buffered");
+            }
+        }
+        // every retire path converges on release: the pool must drain
+        let mgr = c.pool().expect("pooled").clone();
+        let t0 = Instant::now();
+        let leaked = loop {
+            let n = mgr.lock().unwrap().pool().pages_in_use();
+            if n == 0 || t0.elapsed().as_secs() > 30 {
+                break n;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        };
+        mgr.lock()
+            .unwrap()
+            .check_integrity()
+            .expect("pool integrity after the soak");
+        c.sync_pool_gauges();
+        let sheds = c.metrics.counter(names::STREAM_BACKPRESSURE_SHEDS);
+        let io_errors = c.metrics.gauge(names::SPILL_IO_ERRORS) as u64;
+        let faults = c.fault_injector().map_or(0, |f| f.total_fires());
+        let _ = std::fs::remove_dir_all(&spill_dir);
+        ChaosRun { ok_tokens, failed, sheds, leaked, faults, io_errors }
+    };
+    let mut chaos_leaked = 0usize;
+    let mut chaos_parity = true;
+    let mut chaos_faults = 0u64;
+    let mut chaos_sheds = 0u64;
+    let mut chaos_failed = 0u64;
+    let mut chaos_io_errors = 0u64;
+    let mut tch = Table::new(&[
+        "fault_seed",
+        "ok",
+        "failed",
+        "sheds",
+        "faults_fired",
+        "spill_io_errors",
+        "leaked_pages",
+        "parity",
+    ]);
+    for &seed in &chaos_seeds {
+        let reference = run_chaos(seed, "");
+        assert_eq!(
+            reference.failed, reference.sheds,
+            "fault-free reference may only fail by shedding stalled consumers"
+        );
+        assert!(reference.sheds >= 1, "the stalled consumer was never shed");
+        assert_eq!(reference.leaked, 0, "reference run leaked pages");
+        let chaos = run_chaos(seed, CHAOS_SPEC);
+        let mut common = 0usize;
+        let mut seed_parity = true;
+        for (id, toks) in &chaos.ok_tokens {
+            if let Some(want) = reference.ok_tokens.get(id) {
+                common += 1;
+                seed_parity &= toks == want;
+            }
+        }
+        assert!(common >= 1, "seed {seed}: no request survived the schedule");
+        assert!(
+            seed_parity,
+            "seed {seed}: a surviving request's tokens diverged from the \
+             fault-free reference"
+        );
+        assert_eq!(chaos.leaked, 0, "seed {seed}: leaked {} pages", chaos.leaked);
+        chaos_leaked += chaos.leaked;
+        chaos_parity &= seed_parity;
+        chaos_faults += chaos.faults;
+        chaos_sheds += chaos.sheds;
+        chaos_failed += chaos.failed;
+        chaos_io_errors += chaos.io_errors;
+        tch.row(&[
+            seed.to_string(),
+            chaos.ok_tokens.len().to_string(),
+            chaos.failed.to_string(),
+            chaos.sheds.to_string(),
+            chaos.faults.to_string(),
+            chaos.io_errors.to_string(),
+            chaos.leaked.to_string(),
+            seed_parity.to_string(),
+        ]);
+    }
+    assert!(
+        chaos_faults > 0,
+        "no fault fired across any seed — the soak exercised nothing"
+    );
+    tch.print("chaos soak — deterministic fault schedules over the full coordinator");
+    let _ = tch.write_csv("bench_out/pool_pressure_chaos.csv");
+
     let json = Json::obj(vec![
         (
             "pool",
@@ -1084,6 +1294,24 @@ fn main() {
                 ("full_secs", Json::num(full_secs)),
                 ("ttft_ratio", Json::num(ttft_ratio)),
                 ("parity", Json::Bool(true)),
+                ("gate_enforced", Json::Bool(true)),
+            ]),
+        ),
+        (
+            "chaos",
+            Json::obj(vec![
+                (
+                    "seeds",
+                    Json::arr(chaos_seeds.iter().map(|&s| Json::num(s as f64))),
+                ),
+                ("requests_per_seed", Json::num(chaos_requests as f64)),
+                ("fault_spec", Json::str(CHAOS_SPEC)),
+                ("leaked_pages", Json::num(chaos_leaked as f64)),
+                ("parity", Json::Bool(chaos_parity)),
+                ("faults_fired", Json::num(chaos_faults as f64)),
+                ("spill_io_errors", Json::num(chaos_io_errors as f64)),
+                ("sheds", Json::num(chaos_sheds as f64)),
+                ("failed_requests", Json::num(chaos_failed as f64)),
                 ("gate_enforced", Json::Bool(true)),
             ]),
         ),

@@ -172,6 +172,19 @@ pub struct ServeConfig {
     /// bit-identically on the next touch — no re-prefill. 0 disables the
     /// sweep. Requires `pool.spill_pages > 0` to have any effect.
     pub hibernate_idle_ms: u64,
+    /// Per-request stream buffer capacity in events: when a consumer falls
+    /// more than this many undrained events behind, the scheduler sheds the
+    /// session at the round boundary (in-band 503 error frame) instead of
+    /// buffering unboundedly. 0 = unbounded (the pre-backpressure behavior).
+    pub stream_buffer_events: usize,
+    /// Seed for the deterministic fault injector (`util::fault`). Only
+    /// meaningful when `fault_spec` arms at least one site.
+    pub fault_seed: u64,
+    /// Fault-injection spec, `site:rate_permille[:max_fires]` comma-joined
+    /// (grammar in docs/ROBUSTNESS.md). Empty (the default) disables
+    /// injection entirely; a malformed spec is a startup error — never
+    /// silently ignored (mirrors `step_workers`).
+    pub fault_spec: String,
 }
 
 impl Default for ServeConfig {
@@ -201,6 +214,9 @@ impl Default for ServeConfig {
             trace_buffer_events: 4096,
             flight_recorder_requests: 64,
             hibernate_idle_ms: 0,
+            stream_buffer_events: 4096,
+            fault_seed: 0,
+            fault_spec: String::new(),
         }
     }
 }
@@ -296,6 +312,18 @@ impl ServeConfig {
         }
         if let Some(v) = j.get("hibernate_idle_ms").and_then(Json::as_usize) {
             c.hibernate_idle_ms = v as u64;
+        }
+        if let Some(v) = j.get("stream_buffer_events").and_then(Json::as_usize) {
+            c.stream_buffer_events = v;
+        }
+        if let Some(v) = j.get("fault_seed").and_then(Json::as_i64) {
+            c.fault_seed = v as u64;
+        }
+        if let Some(v) = j.get("fault_spec").and_then(Json::as_str) {
+            // Deliberately NOT validated here: the coordinator parses the
+            // spec at startup and rejects a malformed one loudly, matching
+            // the no-silent-clamp convention of the other knobs.
+            c.fault_spec = v.to_string();
         }
         if let Some(p) = j.get("pool") {
             if let Some(v) = p.get("pages").and_then(Json::as_usize) {
@@ -527,6 +555,27 @@ mod tests {
         assert_eq!(c.pool.spill_dir, "/tmp/qs");
         assert!(!c.pool.fetch_ahead);
         assert_eq!(c.pool.fetch_ahead_max, 3);
+    }
+
+    #[test]
+    fn robustness_knobs_from_json() {
+        let d = ServeConfig::default();
+        assert_eq!(d.stream_buffer_events, 4096);
+        assert_eq!(d.fault_seed, 0);
+        assert_eq!(d.fault_spec, "", "injection off by default");
+        let j = Json::parse(
+            r#"{"stream_buffer_events":16,"fault_seed":42,
+                "fault_spec":"spill_write:200:3,step_panic:50"}"#,
+        )
+        .unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.stream_buffer_events, 16);
+        assert_eq!(c.fault_seed, 42);
+        assert_eq!(c.fault_spec, "spill_write:200:3,step_panic:50");
+        // a malformed spec propagates so the coordinator rejects it loudly
+        // at startup (mirrors step_workers — config never validates it)
+        let j = Json::parse(r#"{"fault_spec":"bogus:1"}"#).unwrap();
+        assert_eq!(ServeConfig::from_json(&j).unwrap().fault_spec, "bogus:1");
     }
 
     #[test]

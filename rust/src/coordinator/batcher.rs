@@ -72,6 +72,7 @@ use crate::pool::{RoundPhases, SharedSessionManager};
 use crate::spec::gamma::{CycleFeedback, FixedGamma, GammaController};
 use crate::spec::{Sampler, VerifyOutcome};
 use crate::trace::{self, PhaseEvent, TraceBuf};
+use crate::util::fault::{FaultInjector, FaultSite};
 use crate::util::threadpool::{ScopedSpawn, StealHandle, ThreadPool, WaitGroup};
 
 /// Where a session is in its lifecycle.
@@ -419,10 +420,24 @@ impl QuantBackpressure {
 pub struct FailedSession {
     pub id: u64,
     pub error: anyhow::Error,
-    /// The parked session. `None` only when the step *panicked* — the
-    /// session state is gone, but the error is still reported and the
-    /// step worker survived.
+    /// The step *panicked* (vs returning an error): the unwind was
+    /// contained and the worker survived — the scheduler counts these in
+    /// `step_panics_contained`.
+    pub panicked: bool,
+    /// The parked session. `None` only when the step panicked — the
+    /// session state is gone, but the error is still reported.
     pub session: Option<ActiveSession>,
+}
+
+/// A fault the round driver decided to inject into one session's step
+/// (decided on the driver thread, BEFORE dispatch, so the schedule is
+/// deterministic regardless of worker interleaving).
+#[derive(Clone, Copy)]
+enum StepFault {
+    /// Panic inside the step (exercises worker containment).
+    Panic,
+    /// Synthesize a decoder step error (exercises the failed-session path).
+    Error,
 }
 
 /// Result of one dispatched step, reassembled in round-robin order.
@@ -434,15 +449,44 @@ struct StepOutcome {
     /// round's wall time into the `/stats` phase aggregates.
     was_prefill: bool,
     step_us: f64,
+    /// The step panicked (unwind contained by `step_one_contained`).
+    panicked: bool,
 }
 
-fn step_one(mut s: ActiveSession) -> StepOutcome {
+fn step_one(mut s: ActiveSession, fault: Option<StepFault>) -> StepOutcome {
     let id = s.id;
     let was_prefill = s.is_prefilling();
     let t0 = Instant::now();
-    let result = s.step();
+    let result = match fault {
+        Some(StepFault::Panic) => panic!("injected: step worker panic (session {id})"),
+        Some(StepFault::Error) => {
+            Err(anyhow::anyhow!("injected: decoder step error (session {id})"))
+        }
+        None => s.step(),
+    };
     let step_us = t0.elapsed().as_secs_f64() * 1e6;
-    StepOutcome { id, session: Some(s), result, was_prefill, step_us }
+    StepOutcome { id, session: Some(s), result, was_prefill, step_us, panicked: false }
+}
+
+/// Run one step with panic containment: a panicking step — organic or
+/// injected — reports a failed outcome instead of unwinding the round.
+/// Both the serial and the parallel dispatch paths go through here, so
+/// containment does not depend on the worker count.
+fn step_one_contained(s: ActiveSession, fault: Option<StepFault>) -> StepOutcome {
+    let id = s.id;
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || step_one(s, fault))) {
+        Ok(o) => o,
+        Err(_) => StepOutcome {
+            id,
+            session: None,
+            result: Err(anyhow::anyhow!(
+                "session {id}: step panicked; session state dropped"
+            )),
+            was_prefill: false,
+            step_us: 0.0,
+            panicked: true,
+        },
+    }
 }
 
 /// Per-session result slots for one parallel round (indexed by round-robin
@@ -454,34 +498,19 @@ type StepSlots = Arc<Vec<Mutex<Option<StepOutcome>>>>;
 /// in fixed per-session slots so reassembly order is the round-robin order,
 /// not completion order — a precondition for serial-parity determinism (and
 /// for tests that compare `active` queues across configurations).
-fn step_parallel(pool: &dyn ScopedSpawn, sessions: Vec<ActiveSession>) -> Vec<StepOutcome> {
+fn step_parallel(
+    pool: &dyn ScopedSpawn,
+    sessions: Vec<(ActiveSession, Option<StepFault>)>,
+) -> Vec<StepOutcome> {
     let slots: StepSlots = Arc::new(sessions.iter().map(|_| Mutex::new(None)).collect());
     let wg = WaitGroup::new();
-    for (i, s) in sessions.into_iter().enumerate() {
+    for (i, (s, fault)) in sessions.into_iter().enumerate() {
         let slots = Arc::clone(&slots);
-        let id = s.id;
         pool.spawn_scoped(
             &wg,
             Box::new(move || {
-                // A panicking step must not kill the worker thread or hang
-                // the wait group; the session is lost but the round
-                // completes.
-                let outcome =
-                    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
-                        step_one(s)
-                    })) {
-                        Ok(o) => o,
-                        Err(_) => StepOutcome {
-                            id,
-                            session: None,
-                            result: Err(anyhow::anyhow!(
-                                "session {id}: step panicked; session state dropped"
-                            )),
-                            was_prefill: false,
-                            step_us: 0.0,
-                        },
-                    };
-                *slots[i].lock().unwrap_or_else(|p| p.into_inner()) = Some(outcome);
+                *slots[i].lock().unwrap_or_else(|p| p.into_inner()) =
+                    Some(step_one_contained(s, fault));
             }),
         );
     }
@@ -516,6 +545,10 @@ pub struct StepBatcher {
     step_workers: usize,
     /// Once-per-round telemetry sink (→ `/stats` via the session manager).
     stats_sink: Option<SharedSessionManager>,
+    /// Deterministic fault injector (None unless faults are configured).
+    /// Fault decisions are made on the driver thread before dispatch so
+    /// the schedule is reproducible for a given seed/spec.
+    fault: Option<Arc<FaultInjector>>,
     last_round_span_us: f64,
     last_busy: usize,
     last_phases: RoundPhases,
@@ -535,6 +568,7 @@ impl StepBatcher {
             shared_pool: None,
             step_workers: 1,
             stats_sink: None,
+            fault: None,
             last_round_span_us: 0.0,
             last_busy: 0,
             last_phases: RoundPhases::default(),
@@ -576,6 +610,14 @@ impl StepBatcher {
     /// `step_workers_busy`) into the session manager → `/stats`.
     pub fn with_stats_sink(mut self, mgr: SharedSessionManager) -> StepBatcher {
         self.stats_sink = Some(mgr);
+        self
+    }
+
+    /// Drive step-path fault sites (`step_panic`, `decode_error`,
+    /// `quant_stall`) from a seeded injector. A disabled injector is
+    /// dropped so the hot path stays free of per-step queries.
+    pub fn with_fault_injector(mut self, inj: Arc<FaultInjector>) -> StepBatcher {
+        self.fault = inj.enabled().then_some(inj);
         self
     }
 
@@ -657,10 +699,16 @@ impl StepBatcher {
         // has decode work — if every active session is prefilling, chunks
         // proceed regardless, so the batcher always makes progress.
         let has_decode = self.active.iter().any(|s| !s.is_prefilling());
-        let defer_prefill =
-            has_decode && self.backpressure.as_ref().is_some_and(|bp| bp.over_limit());
+        // An injected quant stall behaves exactly like a backpressure
+        // probe tripping: prefill chunks sit out the round while decode
+        // work exists (and count as quant-wait in the phase split).
+        let injected_stall = has_decode
+            && self.fault.as_ref().is_some_and(|f| f.should_fire(FaultSite::QuantStall));
+        let defer_prefill = injected_stall
+            || (has_decode && self.backpressure.as_ref().is_some_and(|bp| bp.over_limit()));
         let mut deferred = 0u64;
-        let mut to_step: Vec<ActiveSession> = Vec::with_capacity(self.active.len());
+        let mut to_step: Vec<(ActiveSession, Option<StepFault>)> =
+            Vec::with_capacity(self.active.len());
         for _ in 0..self.active.len() {
             let s = self.active.pop_front().expect("non-empty");
             if defer_prefill && s.is_prefilling() {
@@ -668,7 +716,15 @@ impl StepBatcher {
                 self.active.push_back(s);
                 continue;
             }
-            to_step.push(s);
+            // Decide per-session step faults here, on the driver thread,
+            // in round-robin order — never inside the workers — so a given
+            // seed/spec produces the same schedule under any worker count.
+            let fault = match &self.fault {
+                Some(f) if f.should_fire(FaultSite::StepPanic) => Some(StepFault::Panic),
+                Some(f) if f.should_fire(FaultSite::DecodeError) => Some(StepFault::Error),
+                _ => None,
+            };
+            to_step.push((s, fault));
         }
         let stepped = to_step.len();
         let t0 = Instant::now();
@@ -677,7 +733,7 @@ impl StepBatcher {
                 step_parallel(shared, to_step)
             }
             (None, Some(pool)) if stepped >= 2 => step_parallel(&pool.handle(), to_step),
-            _ => to_step.into_iter().map(step_one).collect(),
+            _ => to_step.into_iter().map(|(s, f)| step_one_contained(s, f)).collect(),
         };
         let span_us = t0.elapsed().as_secs_f64() * 1e6;
         let mut produced = 0usize;
@@ -699,7 +755,12 @@ impl StepBatcher {
                     }
                 }
                 (session, Err(error)) => {
-                    self.failed.push(FailedSession { id: o.id, error, session });
+                    self.failed.push(FailedSession {
+                        id: o.id,
+                        error,
+                        panicked: o.panicked,
+                        session,
+                    });
                 }
                 (None, Ok(_)) => unreachable!("a panicked step reports an error"),
             }
@@ -1037,6 +1098,67 @@ mod tests {
         b.admit(mock_session(3, 8, 0.0, 2)).unwrap();
         b.drain().unwrap();
         assert_eq!(b.finished.len(), 3);
+    }
+
+    /// Injected step faults (panic + decoder error) park exactly the
+    /// targeted sessions while co-scheduled healthy sessions finish their
+    /// full budgets — on the serial path AND the parallel path (the panic
+    /// is contained either way).
+    #[test]
+    fn injected_step_faults_park_sessions_and_spare_the_rest() {
+        for workers in [1usize, 2] {
+            let inj = Arc::new(
+                FaultInjector::parse(5, "step_panic:1000:1,decode_error:1000:1").unwrap(),
+            );
+            let mut b = StepBatcher::new(4)
+                .with_step_workers(workers)
+                .with_fault_injector(Arc::clone(&inj));
+            b.admit(mock_session(1, 12, 0.1, 3)).unwrap();
+            b.admit(mock_session(2, 12, 0.1, 3)).unwrap();
+            b.admit(mock_session(3, 12, 0.1, 3)).unwrap();
+            b.drain().unwrap();
+            assert_eq!(b.failed.len(), 2, "workers={workers}");
+            // Faults are decided in round-robin order on the driver
+            // thread: session 1 draws the panic, session 2 the error.
+            let parked = b.failed.iter().find(|f| f.id == 1).unwrap();
+            assert!(parked.panicked, "workers={workers}");
+            assert!(parked.session.is_none(), "panicked session state is dropped");
+            assert!(parked.error.to_string().contains("panicked"));
+            let errored = b.failed.iter().find(|f| f.id == 2).unwrap();
+            assert!(!errored.panicked);
+            assert!(errored.error.to_string().contains("injected"));
+            assert!(errored.session.is_some(), "errored session parked intact");
+            // the healthy session is unaffected and finishes its budget
+            assert_eq!(b.finished.len(), 1, "workers={workers}");
+            assert_eq!(b.finished[0].id, 3);
+            assert_eq!(b.finished[0].tokens.len(), 12);
+            assert_eq!(inj.total_fires(), 2);
+        }
+    }
+
+    /// An injected quant stall behaves like a tripped backpressure probe
+    /// (prefill defers, decode proceeds) without any probe being wired,
+    /// and stops exactly when its fire budget is spent.
+    #[test]
+    fn injected_quant_stall_defers_prefill_without_a_probe() {
+        let inj = Arc::new(FaultInjector::parse(9, "quant_stall:1000:2").unwrap());
+        let prompt: Vec<i32> = (0..32).map(|t| t % 64).collect();
+        let mut b = StepBatcher::new(4).with_fault_injector(inj);
+        b.admit(chunked_session(1, &prompt, 6, 2, 16)).unwrap();
+        b.admit(mock_session(2, 30, 0.0, 4)).unwrap();
+        // rounds 1-2: the stall fires; prefill sits out while decode runs
+        b.round().unwrap();
+        b.round().unwrap();
+        assert_eq!(b.prefill_deferrals(), 2);
+        let s = b.active_sessions().find(|s| s.id == 1).unwrap();
+        assert_eq!(s.prefill_progress().unwrap(), (0, 32), "no chunk fed while stalled");
+        // budget exhausted: round 3 feeds the first chunk
+        b.round().unwrap();
+        let s = b.active_sessions().find(|s| s.id == 1).unwrap();
+        assert_eq!(s.prefill_progress().unwrap(), (16, 32));
+        b.drain().unwrap();
+        assert_eq!(b.finished.len(), 2);
+        assert_eq!(b.prefill_deferrals(), 2, "no deferrals after the budget is spent");
     }
 
     /// Regression (budget over-commit, batcher loop): committed KV tracks

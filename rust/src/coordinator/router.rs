@@ -34,7 +34,7 @@ use anyhow::{ensure, Result};
 
 use crate::config::{Method, ServeConfig};
 use crate::coordinator::batcher::{ActiveSession, QuantBackpressure};
-use crate::coordinator::sched::{scheduler_loop, FairQueue, Queued, CANCELLED_PREFIX};
+use crate::coordinator::sched::{lock_ok, scheduler_loop, FairQueue, Queued, CANCELLED_PREFIX};
 use crate::costmodel::memory::pool_pages_for_request;
 use crate::metrics::{names, Registry};
 use crate::model::{mock_fb, Decoder, MockDecoder, MOCK_GAMMA_MAX, MOCK_VOCAB};
@@ -44,6 +44,7 @@ use crate::spec::gamma::AimdGamma;
 use crate::spec::Sampler;
 use crate::stream::{StreamEvent, TokenSink};
 use crate::trace::Tracer;
+use crate::util::fault::FaultInjector;
 use crate::util::now_secs;
 
 /// Marker prefix for admission rejections that are the *client's* size
@@ -127,6 +128,10 @@ pub struct Coordinator {
     backend: Arc<EngineBackend>,
     /// Shared paged KV pool; None when `cfg.pool.pages == 0`.
     pool: Option<SharedSessionManager>,
+    /// Deterministic fault injector, parsed from `fault_spec` at startup
+    /// and threaded through the pool, scheduler, and HTTP layers. None =
+    /// faults disabled (the production default).
+    fault: Option<Arc<FaultInjector>>,
 }
 
 impl Coordinator {
@@ -174,6 +179,23 @@ impl Coordinator {
         // Creating the manager also spins up the ONE process-wide
         // quantization pool (sized by `pool.quant_workers`; 0 is a
         // startup error, not a silent clamp).
+        // Fault injection is validated here, not at config parse: a
+        // malformed spec is a loud startup error, and an armed injector
+        // announces itself so a production config can never inject
+        // silently.
+        let fault = if cfg.fault_spec.trim().is_empty() {
+            None
+        } else {
+            let inj = FaultInjector::parse(cfg.fault_seed, &cfg.fault_spec).map_err(|e| {
+                anyhow::anyhow!("invalid fault_spec {:?}: {e:#}", cfg.fault_spec)
+            })?;
+            eprintln!(
+                "warning: fault injection ARMED (fault_seed {}, fault_spec {:?}); \
+                 this process will synthesize deterministic failures",
+                cfg.fault_seed, cfg.fault_spec
+            );
+            inj.enabled().then(|| Arc::new(inj))
+        };
         let pool = if cfg.pool.pages > 0 {
             if matches!(&*backend, EngineBackend::Mock { .. }) {
                 Some(pool::shared(cfg.pool.clone())?)
@@ -188,6 +210,12 @@ impl Coordinator {
         } else {
             None
         };
+        // The spill store consults the injector on slot I/O; installing it
+        // before the first request means even the first reclaim is under
+        // the configured schedule.
+        if let (Some(mgr), Some(inj)) = (&pool, &fault) {
+            lock_ok(mgr).set_fault_injector(Arc::clone(inj));
+        }
         // ONE driver thread replaces the per-engine workers: it owns the
         // global batcher (engines × batcher_slots sessions) and the shared
         // work-stealing step pool (engines × step_workers threads).
@@ -197,9 +225,10 @@ impl Coordinator {
             let tracer = Arc::clone(&tracer);
             let backend = Arc::clone(&backend);
             let pool = pool.clone();
+            let fault = fault.clone();
             let cfg2 = cfg.clone();
             vec![thread::Builder::new().name("qs-sched-drive".into()).spawn(
-                move || scheduler_loop(cfg2, shared, metrics, tracer, backend, pool),
+                move || scheduler_loop(cfg2, shared, metrics, tracer, backend, pool, fault),
             )?]
         };
         Ok(Coordinator {
@@ -211,6 +240,7 @@ impl Coordinator {
             next_id: AtomicU64::new(1),
             backend,
             pool,
+            fault,
         })
     }
 
@@ -230,13 +260,13 @@ impl Coordinator {
     ) -> Result<mpsc::Receiver<Result<ResponseOut, String>>, (RequestSpec, &'static str)> {
         let (tx, rx) = mpsc::channel();
         {
-            let mut q = self.shared.queue.lock().unwrap();
+            let mut q = lock_ok(&self.shared.queue);
             if q.len() >= self.cfg.queue_capacity {
                 self.metrics.incr("requests_shed", 1);
                 return Err((spec, "queue full"));
             }
             if let Some(mgr) = &self.pool {
-                let m = mgr.lock().unwrap();
+                let m = lock_ok(mgr);
                 let saturated = m.committed_pages() >= m.high_pages();
                 if saturated && !q.is_empty() {
                     drop(m);
@@ -270,7 +300,7 @@ impl Coordinator {
     /// waiters are woken. Cancelling an unknown or completed id is a
     /// no-op.
     pub fn cancel(&self, id: u64) {
-        let queued = self.shared.queue.lock().unwrap().cancel(id);
+        let queued = lock_ok(&self.shared.queue).cancel(id);
         if let Some(job) = queued {
             self.metrics.incr("requests_cancelled", 1);
             let msg = format!("{CANCELLED_PREFIX}request {id} cancelled while queued");
@@ -293,13 +323,20 @@ impl Coordinator {
     }
 
     pub fn queue_len(&self) -> usize {
-        self.shared.queue.lock().unwrap().len()
+        lock_ok(&self.shared.queue).len()
     }
 
     /// The shared paged KV pool (None when disabled). Exposed so benches
     /// and examples can seed preemptable sessions or read pool state.
     pub fn pool(&self) -> Option<&SharedSessionManager> {
         self.pool.as_ref()
+    }
+
+    /// The armed fault injector (None when `fault_spec` is empty).
+    /// Exposed so the HTTP layer threads the same schedule through its
+    /// socket-write fault point and so benches can read fire counts.
+    pub fn fault_injector(&self) -> Option<&Arc<FaultInjector>> {
+        self.fault.as_ref()
     }
 
     /// Backpressure policy for an embedded `StepBatcher`, built from this
@@ -325,7 +362,7 @@ impl Coordinator {
     pub fn pool_json(&self) -> crate::util::json::Json {
         match &self.pool {
             None => crate::util::json::Json::Null,
-            Some(mgr) => mgr.lock().unwrap().stats_json(),
+            Some(mgr) => lock_ok(mgr).stats_json(),
         }
     }
 
@@ -351,7 +388,7 @@ impl Drop for Coordinator {
 
 pub(crate) fn sync_pool_gauges(mgr: &SharedSessionManager, metrics: &Registry) {
     // ONE manager lock per scrape: everything below reads the snapshot.
-    let s = mgr.lock().unwrap().snapshot();
+    let s = lock_ok(mgr).snapshot();
     metrics.set_gauge("pool_pages_capacity", s.pages_capacity as f64);
     metrics.set_gauge("pool_pages_in_use", s.pages_in_use as f64);
     metrics.set_gauge("pool_pages_peak", s.pages_peak as f64);
@@ -389,6 +426,11 @@ pub(crate) fn sync_pool_gauges(mgr: &SharedSessionManager, metrics: &Registry) {
     metrics.set_gauge(names::FETCH_AHEAD_HITS, s.tier.fetch_ahead_hits as f64);
     metrics.set_gauge(names::HIBERNATED_SESSIONS, s.hibernated_sessions as f64);
     metrics.set_gauge(names::SESSIONS_HIBERNATED_TOTAL, s.tier.hibernations as f64);
+    // robustness: cold-tier write retries / hard I/O errors, and the
+    // tiering circuit breaker (1 = degraded to evict-only reclaim)
+    metrics.set_gauge(names::SPILL_RETRIES, s.tier.spill_retries as f64);
+    metrics.set_gauge(names::SPILL_IO_ERRORS, s.tier.spill_io_errors as f64);
+    metrics.set_gauge(names::TIER_DEGRADED, if s.tier_degraded { 1.0 } else { 0.0 });
 }
 
 /// Pool geometry plan for one mock request. Reservation (admission) and
@@ -864,6 +906,32 @@ mod tests {
         assert!(!c.tracer.enabled());
         assert!(c.tracer.recorder().is_empty());
         assert_eq!(c.metrics.histogram(names::ACCEPTANCE_RATE_PCT).count(), 0);
+    }
+
+    /// A malformed `fault_spec` is a loud startup error; a valid spec arms
+    /// the injector (exposed through the coordinator) and a zero-rate site
+    /// never perturbs serving.
+    #[test]
+    fn fault_spec_validated_at_startup() {
+        let bad = ServeConfig {
+            engines: 1,
+            fault_spec: "warp_core_breach:10".to_string(),
+            ..ServeConfig::default()
+        };
+        let err = Coordinator::with_mock(bad, 0.1).unwrap_err().to_string();
+        assert!(err.contains("fault_spec"), "got: {err}");
+        let cfg = ServeConfig {
+            engines: 1,
+            queue_capacity: 8,
+            max_new_tokens: 24,
+            fault_seed: 42,
+            fault_spec: "decode_error:0".to_string(),
+            ..ServeConfig::default()
+        };
+        let c = Coordinator::with_mock(cfg, 0.1).unwrap();
+        let inj = c.fault_injector().expect("spec armed the injector").clone();
+        assert_eq!(c.generate(req(1, 8)).unwrap().tokens.len(), 24);
+        assert_eq!(inj.total_fires(), 0, "a 0-permille site never fires");
     }
 
     /// Property: with random request sizes and queue capacities, every

@@ -29,7 +29,7 @@
 use std::sync::{mpsc, Arc};
 
 use crate::config::Method;
-use crate::stream::{drain_tokens, StreamEvent, TokenSink};
+use crate::stream::{drain_tokens, StreamEvent, StreamReceiver, TokenSink};
 use crate::util::httpd::{ChunkWriter, Handler, Request, Response, Server};
 use crate::util::json::Json;
 
@@ -40,7 +40,10 @@ pub fn make_handler(coord: Arc<Coordinator>) -> Handler {
 }
 
 pub fn serve(coord: Arc<Coordinator>, bind: &str) -> std::io::Result<Server> {
-    Server::start(bind, make_handler(coord))
+    // When fault injection is armed, the HTTP layer shares the same
+    // injector so `socket_write` faults exercise the disconnect path.
+    let fault = coord.fault_injector().cloned();
+    Server::start_with_fault(bind, make_handler(coord), fault)
 }
 
 fn handle(coord: &Arc<Coordinator>, req: &Request) -> Response {
@@ -95,7 +98,9 @@ fn token_text(tokens: &[i32]) -> String {
 /// Map an engine error string to its HTTP status: pool-admission size
 /// rejections are the client's problem (shrink the request), not a server
 /// fault; cancellations and missed SLO deadlines get their own statuses so
-/// clients can tell them apart from engine faults.
+/// clients can tell them apart from engine faults; a backpressure shed
+/// (the stream consumer fell behind the bounded sink) is 503 — the server
+/// gave up on this consumer, retry with a faster one.
 fn error_status(e: &str) -> u16 {
     if e.starts_with(super::router::TOO_LARGE_PREFIX) {
         413
@@ -103,6 +108,8 @@ fn error_status(e: &str) -> u16 {
         499
     } else if e.starts_with(super::sched::DEADLINE_PREFIX) {
         504
+    } else if e.starts_with(super::sched::SHED_PREFIX) {
+        503
     } else {
         500
     }
@@ -138,8 +145,11 @@ fn generate(coord: &Arc<Coordinator>, body: &[u8]) -> Response {
     let streaming = j.get("stream").and_then(Json::as_bool).unwrap_or(false);
     // ONE response path: every request carries a TokenSink. Streaming
     // drains it onto the wire as chunked frames; buffered drains it in
-    // place — the concatenation is the response body either way.
-    let (sink, events) = TokenSink::channel();
+    // place — the concatenation is the response body either way. The sink
+    // is bounded: a consumer that falls more than `stream_buffer_events`
+    // behind is shed by the scheduler (503 in-band error frame) instead of
+    // buffering the whole generation in memory.
+    let (sink, events) = TokenSink::bounded(coord.cfg.stream_buffer_events);
     let spec = RequestSpec {
         id: coord.next_id(),
         prompt,
@@ -228,7 +238,7 @@ fn finished_json(out: &ResponseOut, tokens: &[i32]) -> Json {
 fn stream_events(
     coord: &Coordinator,
     id: u64,
-    events: &mpsc::Receiver<StreamEvent>,
+    events: &StreamReceiver,
     done: &mpsc::Receiver<Result<ResponseOut, String>>,
     w: &mut ChunkWriter<'_>,
 ) -> std::io::Result<()> {
@@ -914,6 +924,52 @@ mod tests {
             std::thread::sleep(std::time::Duration::from_millis(2));
         }
         mgr.lock().unwrap().check_integrity().unwrap();
+    }
+
+    /// Satellite: the robustness counters ride the existing observability
+    /// surfaces — `spill_retries`, `spill_io_errors`, and `tier_degraded`
+    /// show up in the `/stats` pool tier block AND the metrics gauges, and
+    /// a scheduler shed error maps to HTTP 503 (between the client-fault
+    /// and server-fault families).
+    #[test]
+    fn robustness_gauges_surface_and_shed_maps_to_503() {
+        use crate::metrics::names;
+        assert_eq!(error_status(&format!("{}x", super::super::sched::SHED_PREFIX)), 503);
+        assert_eq!(error_status("anything else"), 500);
+        let cfg = ServeConfig {
+            engines: 1,
+            max_new_tokens: 12,
+            pool: crate::pool::PoolConfig {
+                pages: 32,
+                page_tokens: 8,
+                kv_dim: 2,
+                ..crate::pool::PoolConfig::default()
+            },
+            ..ServeConfig::default()
+        };
+        let coord = Arc::new(Coordinator::with_mock(cfg, 0.1).unwrap());
+        let srv = serve(Arc::clone(&coord), "127.0.0.1:0").unwrap();
+        let addr = srv.addr.to_string();
+        let (st, body) =
+            http_request(&addr, "POST", "/generate", br#"{"prompt":"hello"}"#).unwrap();
+        assert_eq!(st, 200, "{}", String::from_utf8_lossy(&body));
+        let (st, body) = http_request(&addr, "GET", "/stats", b"").unwrap();
+        assert_eq!(st, 200);
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        let tier = j.get("pool").unwrap().get("tier").expect("tier block");
+        assert_eq!(tier.get(names::SPILL_RETRIES).and_then(Json::as_usize), Some(0));
+        assert_eq!(tier.get(names::SPILL_IO_ERRORS).and_then(Json::as_usize), Some(0));
+        assert_eq!(tier.get(names::TIER_DEGRADED), Some(&Json::Bool(false)));
+        let gauges = j.get("gauges").unwrap();
+        for key in [names::SPILL_RETRIES, names::SPILL_IO_ERRORS, names::TIER_DEGRADED] {
+            assert!(gauges.get(key).is_some(), "gauge {key} missing from /stats");
+        }
+        let (st, body) = http_request(&addr, "GET", "/metrics", b"").unwrap();
+        assert_eq!(st, 200);
+        let text = String::from_utf8(body).unwrap();
+        for key in [names::SPILL_RETRIES, names::SPILL_IO_ERRORS, names::TIER_DEGRADED] {
+            assert!(text.contains(key), "{key} missing from /metrics exposition");
+        }
     }
 
     #[test]

@@ -105,6 +105,24 @@ pub mod names {
     /// Lifetime count of sessions the tier policy hibernated (monotone;
     /// the gauge above is the instantaneous view).
     pub const SESSIONS_HIBERNATED_TOTAL: &str = "sessions_hibernated_total";
+    /// Spill slot I/O attempts retried after a transient failure (the
+    /// bounded retry-with-backoff policy in docs/ROBUSTNESS.md; a retry
+    /// that eventually succeeds costs latency, not correctness).
+    pub const SPILL_RETRIES: &str = "spill_retries";
+    /// Spill slot I/O operations that failed after exhausting retries
+    /// (or non-retryably: checksum/generation mismatch on read). These
+    /// feed the tiering circuit breaker.
+    pub const SPILL_IO_ERRORS: &str = "spill_io_errors";
+    /// 1 while the tiering circuit breaker is open (reclaim degraded to
+    /// evict-only after consecutive spill failures), 0 when healthy.
+    pub const TIER_DEGRADED: &str = "tier_degraded";
+    /// Streaming sessions shed at a round boundary because their consumer
+    /// fell more than `stream_buffer_events` undrained events behind.
+    pub const STREAM_BACKPRESSURE_SHEDS: &str = "stream_backpressure_sheds";
+    /// Step-worker panics contained to their own session (the session is
+    /// parked as failed; the round, pool, and co-scheduled sessions all
+    /// survive).
+    pub const STEP_PANICS_CONTAINED: &str = "step_panics_contained";
     /// Histogram: per-request time-to-first-token (µs) — enqueue to the
     /// round-boundary flush that pushed the first committed token toward
     /// the client. Recorded by the scheduler at flush time, so it exists

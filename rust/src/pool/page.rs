@@ -759,8 +759,11 @@ impl SessionShard {
         if !self.arena.try_reserve(kind) {
             return Ok(FaultOutcome::ArenaFull);
         }
-        // `take_page` consumes the cold slot; deserialize outside the lock.
-        let restored = store.take_page(sh).and_then(|(k, payload)| {
+        // Read WITHOUT consuming the cold slot; deserialize outside the
+        // lock. The slot is handed back only after the restored page is
+        // installed, so a failed read, checksum, decode, or install leaves
+        // the cold page intact and re-faultable — never half-restored.
+        let restored = store.read_page(sh).and_then(|(k, payload)| {
             ensure!(k == kind, "spill slot kind changed under fault");
             Ok(match kind {
                 PageKind::Quant if payload.is_empty() => PageData::Quant(None),
@@ -790,9 +793,8 @@ impl SessionShard {
         match &d.slots[h.id as usize].state {
             Some(s) if s.is_spilled() => {}
             _ => {
-                // Unreachable while `take_page` generation-checks (a
-                // competing restore would have consumed the slot first),
-                // but cheap to tolerate: hand the budget back.
+                // A competing restore installed first; it also freed the
+                // cold slot, so just hand the budget back.
                 drop(d);
                 self.arena.release_page(kind);
                 return Ok(FaultOutcome::Resident);
@@ -800,6 +802,10 @@ impl SessionShard {
         }
         d.slots[h.id as usize].state = Some(data);
         drop(d);
+        // The page is resident: NOW release the cold slot. Best-effort — a
+        // racing retire may have bumped the slot generation and freed it
+        // already (same resolution as in `free`).
+        let _ = store.free_page(sh);
         self.spilled.fetch_sub(1, Ordering::AcqRel);
         self.live.fetch_add(1, Ordering::AcqRel);
         Ok(FaultOutcome::Restored)
@@ -892,11 +898,10 @@ impl SessionShard {
             Some(sh) => {
                 self.spilled.fetch_sub(1, Ordering::AcqRel);
                 if let Some(store) = &self.spill {
-                    // Best-effort: a concurrent fault's `take_page` may
-                    // have consumed the slot already (its install re-check
-                    // will see our generation bump and back out), so a
-                    // stale handle here is that race resolving — not a
-                    // leak.
+                    // Best-effort: a concurrent fault's restore may have
+                    // freed the slot already (its install re-check sees
+                    // our generation bump and backs out), so a stale
+                    // handle here is that race resolving — not a leak.
                     let _ = store.free_page(sh);
                 }
             }
@@ -1313,6 +1318,56 @@ mod tests {
         assert_eq!(s.spill_store().unwrap().spilled_pages(), 0);
         assert_eq!(a.pages_in_use(), 0, "no arena budget was double-released");
         s.check_integrity().unwrap();
+    }
+
+    /// Satellite regression: a restore that fails (here: injected read
+    /// faults exhausting the retry budget) must leave the cold page
+    /// intact — the arena budget it reserved is returned, the spilled
+    /// accounting is unchanged, and a later fault succeeds bit-identically.
+    #[test]
+    fn failed_restore_leaves_cold_page_refaultable() {
+        use crate::util::fault::FaultInjector;
+        let (a, s) = tiered(4, 0);
+        let h = alloc(&s, PageKind::Quant).unwrap();
+        let g = group(&a, -4.0);
+        s.lock().write_quant(h, g.clone()).unwrap();
+        assert_eq!(s.spill_quant_pages(0).unwrap(), 1);
+        // budget 3 = exactly one fault_page's worth of attempts, all failing
+        s.spill_store().unwrap().install_fault_injector(Arc::new(
+            FaultInjector::parse(13, "spill_read:1000:3").unwrap(),
+        ));
+        assert!(s.fault_page(h).is_err(), "injected faults exhaust retries");
+        assert_eq!(a.pages_in_use(), 0, "reserved budget was returned");
+        assert_eq!(s.spilled_pages(), 1, "cold page survived the failure");
+        assert_eq!(s.spill_store().unwrap().spilled_pages(), 1);
+        s.check_integrity().unwrap();
+        // injection budget spent: the same handle faults back cleanly
+        assert_eq!(s.fault_page(h).unwrap(), FaultOutcome::Restored);
+        assert_eq!(*s.lock().read_quant(h).unwrap(), g, "bit-identical");
+        s.check_integrity().unwrap();
+    }
+
+    /// Same contract for non-retryable corruption: a checksum mismatch on
+    /// restore refuses the page but does not consume the slot, so once the
+    /// (injected, budgeted) corruption stops the page is recoverable.
+    #[test]
+    fn corrupt_restore_refused_without_consuming_the_slot() {
+        use crate::util::fault::FaultInjector;
+        let (a, s) = tiered(4, 0);
+        let h = alloc(&s, PageKind::Quant).unwrap();
+        let g = group(&a, 2.0);
+        s.lock().write_quant(h, g.clone()).unwrap();
+        assert_eq!(s.spill_quant_pages(0).unwrap(), 1);
+        s.spill_store().unwrap().install_fault_injector(Arc::new(
+            FaultInjector::parse(29, "spill_corrupt:1000:1").unwrap(),
+        ));
+        let err = s.fault_page(h).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+        assert_eq!(s.spilled_pages(), 1, "slot not consumed by the refusal");
+        assert_eq!(a.pages_in_use(), 0);
+        s.check_integrity().unwrap();
+        assert_eq!(s.fault_page(h).unwrap(), FaultOutcome::Restored);
+        assert_eq!(*s.lock().read_quant(h).unwrap(), g);
     }
 
     #[test]

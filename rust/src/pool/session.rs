@@ -62,6 +62,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, ensure, Result};
 
 use crate::cache::MemoryReport;
+use crate::util::fault::FaultInjector;
 use crate::util::json::Json;
 use crate::util::threadpool::{PoolHandle, ThreadPool};
 
@@ -69,6 +70,17 @@ use super::page::{PageHandle, PageKind, PagePool, PoolConfig, SessionId, Session
 use super::tier::{ReclaimOutcome, SpillStore, TierPolicy, TierStats};
 
 pub use super::page::CacheTraffic;
+
+/// Consecutive spill-rung I/O failures that open the tiering circuit
+/// breaker: past this streak the reclaim ladder stops attempting cold-tier
+/// writes (each of which burns its full retry budget against a dead disk)
+/// and degrades straight to LRU eviction.
+const SPILL_FAIL_STREAK_LIMIT: u32 = 3;
+
+/// While degraded, every Nth reclaim pass lets one spill attempt through
+/// as a recovery probe; a probe that spills successfully closes the
+/// breaker and restores the full ladder.
+const DEGRADED_PROBE_PERIOD: u64 = 16;
 
 /// Per-round wall-time split reported by an embedded step batcher: how much
 /// of the round went to prefill chunks vs decode cycles, plus the time
@@ -141,6 +153,9 @@ pub struct PoolSnapshot {
     pub hibernated_sessions: usize,
     /// Whether a `SpillStore` is attached (`PoolConfig::spill_pages > 0`).
     pub tiering_enabled: bool,
+    /// Whether the tiering circuit breaker is open (reclaim degraded to
+    /// evict-only after repeated cold-tier I/O failures).
+    pub tier_degraded: bool,
 }
 
 struct SessionEntry {
@@ -177,6 +192,15 @@ pub struct SessionManager {
     /// Requests evicted mid-flight (client cancellation or deadline
     /// expiry) whose pages were released back to the pool.
     cancellations: u64,
+    // ---- tiering circuit breaker ---------------------------------------
+    /// Consecutive spill-rung I/O failures (reset by any successful spill).
+    spill_fail_streak: u32,
+    /// Breaker state: when open, `reclaim` skips the lossless spill rungs
+    /// and degrades straight to eviction (admissions keep succeeding).
+    degraded: bool,
+    /// Reclaim passes taken while degraded, for the periodic recovery
+    /// probe (every [`DEGRADED_PROBE_PERIOD`]th pass retries one spill).
+    degraded_probes: u64,
     // ---- round-parallelism telemetry (embedded step batchers) ----------
     rounds: u64,
     round_span_us: f64,
@@ -227,6 +251,9 @@ impl SessionManager {
             evictions: 0,
             prefill_deferrals: 0,
             cancellations: 0,
+            spill_fail_streak: 0,
+            degraded: false,
+            degraded_probes: 0,
             rounds: 0,
             round_span_us: 0.0,
             step_workers: 0,
@@ -484,7 +511,8 @@ impl SessionManager {
     /// Option<SessionId>` first-resort surface: with tiering enabled,
     /// eviction is the *fallback*, not the policy.
     pub fn reclaim(&mut self, exclude: Option<SessionId>) -> ReclaimOutcome {
-        if let Some(store) = self.spill.clone() {
+        if self.spill.is_some() && self.spill_rungs_open() {
+            let store = self.spill.clone().expect("checked above");
             let batch = store.policy().max_spill_batch;
             // Rung 1 — page-granular spill of written quantized pages.
             // Any session qualifies (the move is lossless); LRU order
@@ -494,13 +522,18 @@ impl SessionManager {
                 let t0 = Instant::now();
                 match shard.spill_quant_pages(batch) {
                     Ok(pages) if pages > 0 => {
+                        self.note_spill_ok();
                         self.note_spilled(victim, pages, t0);
                         return ReclaimOutcome::Spilled { victim, pages };
                     }
                     Ok(_) => continue,
                     // An I/O error on one victim must not wedge reclaim;
-                    // try the next rung / victim instead.
-                    Err(_) => continue,
+                    // count it toward the circuit breaker and try the
+                    // next rung / victim instead.
+                    Err(_) => {
+                        self.note_spill_failure();
+                        continue;
+                    }
                 }
             }
             // Rung 2 — hibernate the LRU victim's whole shard (FP buffers
@@ -513,19 +546,71 @@ impl SessionManager {
                     match shard.spill_all() {
                         Ok(pages) if pages > 0 => {
                             store.note_hibernation();
+                            self.note_spill_ok();
                             self.note_spilled(victim, pages, t0);
                             return ReclaimOutcome::Hibernated { victim, pages };
                         }
                         Ok(_) => continue,
-                        Err(_) => continue,
+                        Err(_) => {
+                            self.note_spill_failure();
+                            continue;
+                        }
                     }
                 }
             }
         }
-        // Rung 3 — destructive fallback.
+        // Rung 3 — destructive fallback (and the whole ladder while the
+        // circuit breaker is open).
         match self.evict_lru(exclude) {
             Some((victim, pages)) => ReclaimOutcome::Evicted { victim, pages },
             None => ReclaimOutcome::Exhausted,
+        }
+    }
+
+    /// Whether this reclaim pass may attempt the lossless spill rungs.
+    /// Healthy: always. Degraded: only every [`DEGRADED_PROBE_PERIOD`]th
+    /// pass, as a recovery probe — if the probe's spill succeeds,
+    /// [`SessionManager::note_spill_ok`] closes the breaker.
+    fn spill_rungs_open(&mut self) -> bool {
+        if !self.degraded {
+            return true;
+        }
+        self.degraded_probes += 1;
+        self.degraded_probes % DEGRADED_PROBE_PERIOD == 0
+    }
+
+    /// A spill rung moved pages: the cold tier is healthy. Reset the
+    /// failure streak and close the breaker if it was open.
+    fn note_spill_ok(&mut self) {
+        self.spill_fail_streak = 0;
+        if self.degraded {
+            self.degraded = false;
+            self.degraded_probes = 0;
+        }
+    }
+
+    /// A spill rung failed with an I/O error (after the store's own
+    /// bounded retries). Enough consecutive failures open the breaker.
+    fn note_spill_failure(&mut self) {
+        self.spill_fail_streak = self.spill_fail_streak.saturating_add(1);
+        if self.spill_fail_streak >= SPILL_FAIL_STREAK_LIMIT && !self.degraded {
+            self.degraded = true;
+            self.degraded_probes = 0;
+        }
+    }
+
+    /// Whether the tiering circuit breaker is currently open (reclaim
+    /// degraded to evict-only). The `tier_degraded` gauge.
+    pub fn tier_degraded(&self) -> bool {
+        self.degraded
+    }
+
+    /// Arm the cold tier's deterministic fault hooks (no-op when tiering
+    /// is off). Chaos tests and the bench soak route their injector
+    /// through here so spill I/O faults fire on schedule.
+    pub fn set_fault_injector(&self, inj: Arc<FaultInjector>) {
+        if let Some(store) = &self.spill {
+            store.install_fault_injector(inj);
         }
     }
 
@@ -691,6 +776,7 @@ impl SessionManager {
             tier: self.tier_stats(),
             hibernated_sessions: self.hibernated_sessions(),
             tiering_enabled: self.spill.is_some(),
+            tier_degraded: self.degraded,
         }
     }
 
@@ -800,6 +886,18 @@ impl SessionManager {
                         Json::num(s.tier.fetch_ahead_hits as f64),
                     ),
                     ("demotions", Json::num(s.tier.demotions as f64)),
+                    (
+                        crate::metrics::names::SPILL_RETRIES,
+                        Json::num(s.tier.spill_retries as f64),
+                    ),
+                    (
+                        crate::metrics::names::SPILL_IO_ERRORS,
+                        Json::num(s.tier.spill_io_errors as f64),
+                    ),
+                    (
+                        crate::metrics::names::TIER_DEGRADED,
+                        Json::Bool(s.tier_degraded),
+                    ),
                     (
                         crate::metrics::names::SESSIONS_HIBERNATED_TOTAL,
                         Json::num(s.tier.hibernations as f64),
@@ -1401,5 +1499,92 @@ mod tests {
             0,
             "cold-tier slots leaked"
         );
+    }
+
+    // ---- tiering circuit breaker ----------------------------------------
+
+    /// With the cold tier persistently failing, the reclaim ladder opens
+    /// the circuit breaker and degrades to eviction — but admissions keep
+    /// succeeding and nothing leaks.
+    #[test]
+    fn persistent_spill_faults_open_the_breaker_but_admissions_survive() {
+        let mut m = tiered_mgr(10, 64); // high 9, low 6
+        m.set_fault_injector(Arc::new(
+            FaultInjector::parse(5, "spill_write:1000").unwrap(),
+        ));
+        m.admit(1, 4, true).unwrap();
+        for k in 0..4 {
+            let h = m.alloc(1, PageKind::Quant).unwrap();
+            write_group(&m, 1, h, k as f32);
+        }
+        m.admit(2, 4, false).unwrap();
+        let h = m.alloc(2, PageKind::Quant).unwrap();
+        write_group(&m, 2, h, 9.0);
+        assert!(!m.tier_degraded());
+        // committed 8; +2 crosses the ceiling. Every spill rung fails with
+        // an injected I/O error, so reclaim falls through to evicting the
+        // preemptable session — the admission itself still succeeds.
+        assert_eq!(m.admit(3, 2, false).unwrap(), AdmitOutcome::Admitted);
+        assert!(m.is_evicted(1), "degraded reclaim fell back to eviction");
+        assert_eq!(m.evictions(), 1);
+        assert_eq!(
+            m.tier_stats().spilled_pages,
+            0,
+            "nothing reached the failing cold tier"
+        );
+        assert!(m.tier_stats().spill_io_errors > 0);
+        assert!(m.tier_stats().spill_retries > 0);
+        assert!(m.tier_degraded(), "breaker open after repeated failures");
+        assert!(m.snapshot().tier_degraded);
+        let js = m.stats_json().to_string();
+        assert!(js.contains("\"tier_degraded\":true"), "{js}");
+        assert!(js.contains("spill_io_errors"), "{js}");
+        assert!(js.contains("spill_retries"), "{js}");
+        m.check_integrity().unwrap();
+    }
+
+    /// Once the faults stop, the degraded breaker's periodic probe spills
+    /// successfully and closes again — spill service resumes without any
+    /// operator intervention.
+    #[test]
+    fn degraded_breaker_probes_and_closes_once_faults_stop() {
+        let mut m = tiered_mgr(10, 64);
+        // Budget 12 fires: exactly the four failed spill calls (3 write
+        // attempts each) it takes to open the breaker; faults then stop.
+        m.set_fault_injector(Arc::new(
+            FaultInjector::parse(11, "spill_write:1000:12").unwrap(),
+        ));
+        for id in [1, 2] {
+            m.admit(id, 2, false).unwrap();
+            for k in 0..2 {
+                let h = m.alloc(id, PageKind::Quant).unwrap();
+                write_group(&m, id, h, (id * 10 + k as u64) as f32);
+            }
+        }
+        // One pass: rung 1 fails on both victims, rung 2 fails on both,
+        // nothing is preemptable — Exhausted, and the breaker opens.
+        assert_eq!(m.reclaim(None), ReclaimOutcome::Exhausted);
+        assert!(m.tier_degraded());
+        // Degraded passes skip the spill rungs (no cold-tier I/O) until
+        // the periodic probe lets one through; with the fault budget
+        // spent, the probe spills successfully and closes the breaker.
+        let mut probe_outcome = ReclaimOutcome::Exhausted;
+        let mut passes = 0;
+        while m.tier_degraded() {
+            probe_outcome = m.reclaim(None);
+            passes += 1;
+            assert!(passes <= 16, "probe never closed the breaker");
+        }
+        assert!(
+            matches!(probe_outcome, ReclaimOutcome::Spilled { victim: 1, pages: 2 }),
+            "probe should spill the LRU victim, got {probe_outcome:?}"
+        );
+        assert_eq!(m.tier_stats().spilled_pages, 2);
+        m.check_integrity().unwrap();
+        for id in [1, 2] {
+            m.release(id);
+        }
+        assert_eq!(m.pool().pages_in_use(), 0);
+        assert_eq!(m.tier_stats().spilled_pages, 0, "cold slots handed back");
     }
 }

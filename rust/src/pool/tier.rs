@@ -45,13 +45,26 @@ use std::fs::{File, OpenOptions};
 use std::os::unix::fs::FileExt;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, PoisonError};
 
 use anyhow::{ensure, Context, Result};
 
 use crate::costmodel::memory::spill_slot_bytes;
+use crate::util::fault::{FaultInjector, FaultSite};
 
 use super::page::PageKind;
+
+/// Slot I/O attempts before a transient error becomes permanent: one
+/// initial try plus two retries (docs/ROBUSTNESS.md).
+const SPILL_IO_ATTEMPTS: u32 = 3;
+
+/// Backoff before retry `n` (1-based): 200µs, 400µs — long enough to ride
+/// out a transient EINTR/ENOSPC blip, short enough that a reclaim pass
+/// under pressure isn't parked behind a dead disk (the circuit breaker
+/// handles the dead-disk case).
+fn retry_backoff(attempt: u32) -> std::time::Duration {
+    std::time::Duration::from_micros(100u64 << attempt.min(4))
+}
 
 /// One move in the page hierarchy. `Demote` (hot→warm) is recorded by the
 /// paged cache's quantization flush; `Spill` (warm→cold) and `Restore`
@@ -229,6 +242,13 @@ struct SlotMap {
     free: Vec<u32>,
 }
 
+/// Why one slot-read attempt failed, for the retry policy: transient I/O
+/// is worth retrying, corrupt bytes at rest are not.
+enum ReadFailure {
+    Transient(std::io::Error),
+    Corrupt(anyhow::Error),
+}
+
 /// Counters the manager's `PoolSnapshot` and `/stats` tier block read in
 /// one pass. All fields are lifetime totals except `spilled_pages`
 /// (instantaneous cold-tier occupancy).
@@ -241,6 +261,12 @@ pub struct TierStats {
     pub fetch_ahead_hits: u64,
     pub demotions: u64,
     pub hibernations: u64,
+    /// Slot I/O attempts retried after a transient failure (each retry
+    /// that eventually succeeds costs latency, never correctness).
+    pub spill_retries: u64,
+    /// Slot I/O operations that failed permanently: retries exhausted, or
+    /// a non-retryable checksum/framing mismatch on read.
+    pub spill_io_errors: u64,
 }
 
 /// The file-backed cold tier. Thread-safe: slot bookkeeping sits behind
@@ -261,6 +287,11 @@ pub struct SpillStore {
     fetch_ahead_hits: AtomicU64,
     demotions: AtomicU64,
     hibernations: AtomicU64,
+    spill_retries: AtomicU64,
+    spill_io_errors: AtomicU64,
+    /// Installed once by the coordinator when `fault_spec` arms spill
+    /// sites; absent (the default) costs one `OnceLock::get` per I/O.
+    fault: OnceLock<Arc<FaultInjector>>,
     /// EWMA of the on-demand fault share of recent restores, in ‰
     /// (0 = every restore was speculative, 1000 = every one blocked a
     /// read). Drives `fetch_depth`.
@@ -315,9 +346,33 @@ impl SpillStore {
             fetch_ahead_hits: AtomicU64::new(0),
             demotions: AtomicU64::new(0),
             hibernations: AtomicU64::new(0),
+            spill_retries: AtomicU64::new(0),
+            spill_io_errors: AtomicU64::new(0),
+            fault: OnceLock::new(),
             fault_ewma_milli: AtomicU64::new(0),
             fetch_depth: AtomicUsize::new(1),
         }))
+    }
+
+    /// Arm this store's spill I/O sites with the process fault injector
+    /// (coordinator startup only; a second install is ignored).
+    pub fn install_fault_injector(&self, inj: Arc<FaultInjector>) {
+        let _ = self.fault.set(inj);
+    }
+
+    /// An injected error for `site`, if the injector is armed and fires.
+    fn injected(&self, site: FaultSite) -> Option<std::io::Error> {
+        match self.fault.get() {
+            Some(inj) if inj.should_fire(site) => Some(inj.io_error(site)),
+            _ => None,
+        }
+    }
+
+    /// Slot-map lock with poison recovery: the map's invariants hold at
+    /// every await-free unlock point, so a panicking peer (contained
+    /// elsewhere) must not wedge all subsequent spill I/O.
+    fn slots_lock(&self) -> MutexGuard<'_, SlotMap> {
+        self.slots.lock().unwrap_or_else(PoisonError::into_inner)
     }
 
     pub fn policy(&self) -> TierPolicy {
@@ -347,6 +402,8 @@ impl SpillStore {
             fetch_ahead_hits: self.fetch_ahead_hits.load(Ordering::Relaxed),
             demotions: self.demotions.load(Ordering::Relaxed),
             hibernations: self.hibernations.load(Ordering::Relaxed),
+            spill_retries: self.spill_retries.load(Ordering::Relaxed),
+            spill_io_errors: self.spill_io_errors.load(Ordering::Relaxed),
         }
     }
 
@@ -412,7 +469,7 @@ impl SpillStore {
             self.slot_bytes
         );
         let (slot, gen) = {
-            let mut m = self.slots.lock().unwrap();
+            let mut m = self.slots_lock();
             match m.free.pop() {
                 Some(slot) => (slot, m.gens[slot as usize]),
                 None => {
@@ -434,12 +491,34 @@ impl SpillStore {
         buf.extend_from_slice(&[0u8; 8]);
         buf.extend_from_slice(payload);
         let off = slot as u64 * self.slot_bytes as u64;
-        if let Err(e) = self.file.write_all_at(&buf, off) {
-            // hand the slot back so an I/O error doesn't leak it
-            let mut m = self.slots.lock().unwrap();
-            m.gens[slot as usize] = m.gens[slot as usize].wrapping_add(1);
-            m.free.push(slot);
-            return Err(e).with_context(|| format!("writing spill slot {slot}"));
+        // Bounded retry for transient I/O; the write AND its fsync must
+        // both land before the slot is considered live — a page the caller
+        // will drop from the arena cannot be backed by bytes still sitting
+        // in a volatile page cache.
+        let mut attempt = 0u32;
+        loop {
+            let res = match self.injected(FaultSite::SpillWrite) {
+                Some(e) => Err(e),
+                None => self.file.write_all_at(&buf, off).and_then(|()| self.file.sync_data()),
+            };
+            match res {
+                Ok(()) => break,
+                Err(e) => {
+                    attempt += 1;
+                    if attempt >= SPILL_IO_ATTEMPTS {
+                        self.spill_io_errors.fetch_add(1, Ordering::Relaxed);
+                        // hand the slot back so an I/O error doesn't leak it
+                        let mut m = self.slots_lock();
+                        m.gens[slot as usize] = m.gens[slot as usize].wrapping_add(1);
+                        m.free.push(slot);
+                        return Err(e).with_context(|| {
+                            format!("writing spill slot {slot} ({attempt} attempts)")
+                        });
+                    }
+                    self.spill_retries.fetch_add(1, Ordering::Relaxed);
+                    std::thread::sleep(retry_backoff(attempt));
+                }
+            }
         }
         self.bytes_written.fetch_add(buf.len() as u64, Ordering::Relaxed);
         self.spilled_pages.fetch_add(1, Ordering::Release);
@@ -465,39 +544,93 @@ impl SpillStore {
 
     /// Read one cold page without freeing its slot (fetch-ahead peeks and
     /// tests). Verifies generation, magic, framing, and checksum.
+    /// Transient I/O errors are retried (bounded, with backoff); a
+    /// checksum or framing mismatch is NOT retried — the bytes at rest
+    /// are wrong, and re-reading them cannot make them right.
     pub fn read_page(&self, h: SpillHandle) -> Result<(PageKind, Vec<u8>)> {
         {
-            let m = self.slots.lock().unwrap();
+            let m = self.slots_lock();
             self.check(h, &m)?;
+        }
+        let mut attempt = 0u32;
+        loop {
+            match self.try_read_slot(h) {
+                Ok(out) => return Ok(out),
+                Err(ReadFailure::Corrupt(e)) => {
+                    self.spill_io_errors.fetch_add(1, Ordering::Relaxed);
+                    return Err(e);
+                }
+                Err(ReadFailure::Transient(e)) => {
+                    attempt += 1;
+                    if attempt >= SPILL_IO_ATTEMPTS {
+                        self.spill_io_errors.fetch_add(1, Ordering::Relaxed);
+                        return Err(e).with_context(|| {
+                            format!("reading spill slot {} ({attempt} attempts)", h.slot)
+                        });
+                    }
+                    self.spill_retries.fetch_add(1, Ordering::Relaxed);
+                    std::thread::sleep(retry_backoff(attempt));
+                }
+            }
+        }
+    }
+
+    /// One read attempt, classifying failures for the retry policy.
+    fn try_read_slot(
+        &self,
+        h: SpillHandle,
+    ) -> std::result::Result<(PageKind, Vec<u8>), ReadFailure> {
+        let corrupt = |e: anyhow::Error| ReadFailure::Corrupt(e);
+        if let Some(e) = self.injected(FaultSite::SpillRead) {
+            return Err(ReadFailure::Transient(e));
         }
         let off = h.slot as u64 * self.slot_bytes as u64;
         let mut header = [0u8; SLOT_HEADER_BYTES];
-        self.file
-            .read_exact_at(&mut header, off)
-            .with_context(|| format!("reading spill slot {} header", h.slot))?;
+        self.file.read_exact_at(&mut header, off).map_err(ReadFailure::Transient)?;
         let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
-        ensure!(magic == SLOT_MAGIC, "spill slot {} bad magic {magic:#x}", h.slot);
+        if magic != SLOT_MAGIC {
+            return Err(corrupt(anyhow::anyhow!(
+                "spill slot {} bad magic {magic:#x}",
+                h.slot
+            )));
+        }
         let gen = u32::from_le_bytes(header[4..8].try_into().unwrap());
-        ensure!(gen == h.gen, "spill slot {} holds gen {gen}, handle has {}", h.slot, h.gen);
-        let kind = kind_from_code(u32::from_le_bytes(header[8..12].try_into().unwrap()))?;
+        if gen != h.gen {
+            return Err(corrupt(anyhow::anyhow!(
+                "spill slot {} holds gen {gen}, handle has {}",
+                h.slot,
+                h.gen
+            )));
+        }
+        let kind =
+            kind_from_code(u32::from_le_bytes(header[8..12].try_into().unwrap()))
+                .map_err(corrupt)?;
         let len = u32::from_le_bytes(header[12..16].try_into().unwrap()) as usize;
-        ensure!(
-            SLOT_HEADER_BYTES + len <= self.slot_bytes,
-            "spill slot {} claims {len}-byte payload beyond the slot",
-            h.slot
-        );
+        if SLOT_HEADER_BYTES + len > self.slot_bytes {
+            return Err(corrupt(anyhow::anyhow!(
+                "spill slot {} claims {len}-byte payload beyond the slot",
+                h.slot
+            )));
+        }
         let want_sum = u64::from_le_bytes(header[16..24].try_into().unwrap());
         let mut payload = vec![0u8; len];
         self.file
             .read_exact_at(&mut payload, off + SLOT_HEADER_BYTES as u64)
-            .with_context(|| format!("reading spill slot {} payload", h.slot))?;
+            .map_err(ReadFailure::Transient)?;
+        if self.injected(FaultSite::SpillCorrupt).is_some() {
+            // Simulate data-at-rest rot: the checksum below must catch it.
+            if let Some(b) = payload.first_mut() {
+                *b = !*b;
+            }
+        }
         let got_sum = fnv1a64(&payload);
-        ensure!(
-            got_sum == want_sum,
-            "spill slot {} checksum mismatch ({got_sum:#x} != {want_sum:#x}): \
-             refusing to restore corrupt page",
-            h.slot
-        );
+        if got_sum != want_sum {
+            return Err(corrupt(anyhow::anyhow!(
+                "spill slot {} checksum mismatch ({got_sum:#x} != {want_sum:#x}): \
+                 refusing to restore corrupt page",
+                h.slot
+            )));
+        }
         self.bytes_read.fetch_add((SLOT_HEADER_BYTES + len) as u64, Ordering::Relaxed);
         Ok((kind, payload))
     }
@@ -514,7 +647,7 @@ impl SpillStore {
     /// Release a cold slot without reading it (page freed while spilled —
     /// session retire). Stale handles error; a slot can't double-free.
     pub fn free_page(&self, h: SpillHandle) -> Result<()> {
-        let mut m = self.slots.lock().unwrap();
+        let mut m = self.slots_lock();
         self.check(h, &m)?;
         m.gens[h.slot as usize] = m.gens[h.slot as usize].wrapping_add(1);
         m.free.push(h.slot);
@@ -694,6 +827,72 @@ mod tests {
         assert_eq!(TierTransition::Spill.name(), "spill");
         assert_eq!(TierTransition::Demote.name(), "demote");
         assert_eq!(TierTransition::Restore.name(), "restore");
+    }
+
+    /// A fault spec with a 2-fire budget on `spill_write` at 100% rate
+    /// must fail the first two attempts and let the third succeed: the
+    /// retry policy absorbs transient I/O without surfacing an error.
+    #[test]
+    fn transient_write_faults_absorbed_by_retry() {
+        let s = store(0);
+        s.install_fault_injector(Arc::new(
+            FaultInjector::parse(7, "spill_write:1000:2").unwrap(),
+        ));
+        let h = s.write_page(PageKind::Quant, &[5u8; 32]).unwrap().unwrap();
+        assert_eq!(s.read_page(h).unwrap().1, vec![5u8; 32]);
+        let st = s.stats();
+        assert_eq!(st.spill_retries, 2, "two injected failures, two retries");
+        assert_eq!(st.spill_io_errors, 0, "the third attempt landed");
+        assert_eq!(s.spilled_pages(), 1);
+    }
+
+    /// With the budget above the attempt cap, the write fails permanently
+    /// — and the slot it reserved is handed back, not leaked.
+    #[test]
+    fn exhausted_write_retries_fail_without_leaking_the_slot() {
+        let s = store(1);
+        s.install_fault_injector(Arc::new(
+            FaultInjector::parse(7, "spill_write:1000").unwrap(),
+        ));
+        let err = s.write_page(PageKind::Quant, &[1]).unwrap_err().to_string();
+        assert!(err.contains("spill slot"), "{err}");
+        assert_eq!(s.stats().spill_io_errors, 1);
+        assert_eq!(s.stats().spill_retries, (SPILL_IO_ATTEMPTS - 1) as u64);
+        assert_eq!(s.spilled_pages(), 0, "failed write leaks no page");
+    }
+
+    /// Transient read faults retry and succeed; the slot stays occupied
+    /// throughout, so a retried restore is indistinguishable from a clean
+    /// one.
+    #[test]
+    fn transient_read_faults_absorbed_by_retry() {
+        let s = store(0);
+        let h = s.write_page(PageKind::Fp, &[9u8; 16]).unwrap().unwrap();
+        s.install_fault_injector(Arc::new(
+            FaultInjector::parse(3, "spill_read:1000:2").unwrap(),
+        ));
+        assert_eq!(s.read_page(h).unwrap().1, vec![9u8; 16]);
+        assert_eq!(s.stats().spill_retries, 2);
+        assert_eq!(s.stats().spill_io_errors, 0);
+    }
+
+    /// Injected payload corruption must be caught by the checksum and NOT
+    /// retried: the bytes at rest are wrong, so a second read would return
+    /// the same garbage.
+    #[test]
+    fn injected_corruption_fails_checksum_without_retry() {
+        let s = store(0);
+        let h = s.write_page(PageKind::Quant, &[3u8; 64]).unwrap().unwrap();
+        s.install_fault_injector(Arc::new(
+            FaultInjector::parse(5, "spill_corrupt:1000:1").unwrap(),
+        ));
+        let err = s.read_page(h).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+        let st = s.stats();
+        assert_eq!(st.spill_io_errors, 1);
+        assert_eq!(st.spill_retries, 0, "corruption is non-retryable");
+        // budget spent: the page is still intact on disk and re-readable
+        assert_eq!(s.read_page(h).unwrap().1, vec![3u8; 64]);
     }
 
     #[test]

@@ -8,13 +8,23 @@
 //! [`TokenSink`] the moment the sampler accepts it, instead of only
 //! accumulating it for an end-of-request response.
 //!
-//! A sink is the sending half of an unbounded channel of [`StreamEvent`]s:
-//! sends never block the decode path, and a send observing a dropped
-//! receiver ([`SinkClosed`]) is the *disconnect signal* — the consumer
-//! (an HTTP connection thread, a test harness) went away, and the
-//! producer side feeds that into the cancellation machinery (the
-//! scheduler marks the request and evicts it at the next round boundary,
-//! releasing its pool pages).
+//! A sink is the sending half of a channel of [`StreamEvent`]s: sends
+//! never block the decode path, and a send observing a dropped receiver
+//! ([`SinkClosed`]) is the *disconnect signal* — the consumer (an HTTP
+//! connection thread, a test harness) went away, and the producer side
+//! feeds that into the cancellation machinery (the scheduler marks the
+//! request and evicts it at the next round boundary, releasing its pool
+//! pages).
+//!
+//! A sink may also be **bounded** ([`TokenSink::bounded`]): the channel
+//! itself stays unbounded (sends still never block), but the sink tracks
+//! how many events sit unconsumed and exposes
+//! [`TokenSink::over_capacity`]. The producer — the scheduler's
+//! round-boundary flush — polls that flag and *sheds* the request (503
+//! in-band error, pages released) instead of buffering without limit
+//! behind a consumer that reads slower than tokens commit. Depth
+//! accounting is why the receiving half is the [`StreamReceiver`] wrapper
+//! rather than a bare `mpsc::Receiver`.
 //!
 //! The buffered (non-streaming) response path is the same code path with
 //! a draining consumer: [`drain_tokens`] concatenates every `Token`
@@ -22,7 +32,10 @@
 //! `GenResult`/`ResponseOut` reports — pinned by parity tests at the
 //! engine, scheduler, and HTTP layers.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvError, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::Duration;
 
 /// One event on a request's response stream, in commit order.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -72,25 +85,106 @@ impl std::fmt::Display for SinkClosed {
 impl std::error::Error for SinkClosed {}
 
 /// Sending half of a response stream. Cheap to clone; sends are
-/// non-blocking (unbounded channel) and allocation is bounded by the
-/// events actually produced — nothing on the decode step path.
+/// non-blocking (the underlying channel is unbounded even for a bounded
+/// sink — the bound is enforced by the producer shedding on
+/// [`TokenSink::over_capacity`], never by blocking the decode path).
 #[derive(Debug, Clone)]
 pub struct TokenSink {
     tx: Sender<StreamEvent>,
+    /// Events sent but not yet consumed by the [`StreamReceiver`].
+    depth: Arc<AtomicUsize>,
+    /// Shed threshold for `over_capacity` (0 = unbounded).
+    capacity: usize,
 }
 
 impl TokenSink {
-    /// A fresh (sink, receiver) pair. The receiver is the response
-    /// consumer; dropping it turns every later send into [`SinkClosed`].
-    pub fn channel() -> (TokenSink, Receiver<StreamEvent>) {
+    /// A fresh unbounded (sink, receiver) pair. The receiver is the
+    /// response consumer; dropping it turns every later send into
+    /// [`SinkClosed`].
+    pub fn channel() -> (TokenSink, StreamReceiver) {
+        TokenSink::bounded(0)
+    }
+
+    /// A (sink, receiver) pair whose sink reports [`TokenSink::
+    /// over_capacity`] once more than `capacity` events sit unconsumed
+    /// (`capacity == 0` disables the bound). Sends still never block or
+    /// fail on depth — backpressure is the PRODUCER's decision, taken at
+    /// a clean boundary (the scheduler sheds at end of round), not a
+    /// mid-commit stall.
+    pub fn bounded(capacity: usize) -> (TokenSink, StreamReceiver) {
         let (tx, rx) = channel();
-        (TokenSink { tx }, rx)
+        let depth = Arc::new(AtomicUsize::new(0));
+        (
+            TokenSink { tx, depth: Arc::clone(&depth), capacity },
+            StreamReceiver { rx, depth },
+        )
     }
 
     /// Push one event toward the consumer. `Err(SinkClosed)` means the
     /// consumer disconnected; the producer should stop and cancel.
     pub fn send(&self, ev: StreamEvent) -> Result<(), SinkClosed> {
-        self.tx.send(ev).map_err(|_| SinkClosed)
+        // Increment BEFORE the send: the receiver only decrements for an
+        // event it actually pulled, so depth can never underflow.
+        self.depth.fetch_add(1, Ordering::AcqRel);
+        match self.tx.send(ev) {
+            Ok(()) => Ok(()),
+            Err(_) => {
+                self.depth.fetch_sub(1, Ordering::AcqRel);
+                Err(SinkClosed)
+            }
+        }
+    }
+
+    /// Events sent but not yet consumed (instantaneous gauge).
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::Acquire)
+    }
+
+    /// The shed threshold this sink was built with (0 = unbounded).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// True when a bounded sink's consumer has fallen more than
+    /// `capacity` events behind — the producer's signal to shed the
+    /// stream instead of buffering unboundedly.
+    pub fn over_capacity(&self) -> bool {
+        self.capacity > 0 && self.depth.load(Ordering::Acquire) > self.capacity
+    }
+}
+
+/// Receiving half of a response stream: a `mpsc::Receiver` that also
+/// decrements the sink's depth gauge on every consumed event, which is
+/// what makes [`TokenSink::over_capacity`] mean "consumer is behind"
+/// rather than "events were ever sent".
+#[derive(Debug)]
+pub struct StreamReceiver {
+    rx: Receiver<StreamEvent>,
+    depth: Arc<AtomicUsize>,
+}
+
+impl StreamReceiver {
+    pub fn recv(&self) -> Result<StreamEvent, RecvError> {
+        let ev = self.rx.recv()?;
+        self.depth.fetch_sub(1, Ordering::AcqRel);
+        Ok(ev)
+    }
+
+    pub fn try_recv(&self) -> Result<StreamEvent, TryRecvError> {
+        let ev = self.rx.try_recv()?;
+        self.depth.fetch_sub(1, Ordering::AcqRel);
+        Ok(ev)
+    }
+
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<StreamEvent, RecvTimeoutError> {
+        let ev = self.rx.recv_timeout(timeout)?;
+        self.depth.fetch_sub(1, Ordering::AcqRel);
+        Ok(ev)
+    }
+
+    /// Non-blocking drain of everything currently queued.
+    pub fn try_iter(&self) -> impl Iterator<Item = StreamEvent> + '_ {
+        std::iter::from_fn(move || self.try_recv().ok())
     }
 }
 
@@ -98,7 +192,7 @@ impl TokenSink {
 /// buffered response path, and the parity check's reference reassembly.
 /// Returns the concatenated tokens and the terminal event (`None` if the
 /// producer dropped the sink without sending one).
-pub fn drain_tokens(rx: &Receiver<StreamEvent>) -> (Vec<i32>, Option<StreamEvent>) {
+pub fn drain_tokens(rx: &StreamReceiver) -> (Vec<i32>, Option<StreamEvent>) {
     let mut tokens = Vec::new();
     while let Ok(ev) = rx.recv() {
         match ev {
@@ -161,5 +255,49 @@ mod tests {
         let (tokens, terminal) = drain_tokens(&rx);
         assert_eq!(tokens, vec![5, 6]);
         assert_eq!(terminal, None);
+    }
+
+    #[test]
+    fn bounded_sink_reports_over_capacity_and_recovers_on_consumption() {
+        let (sink, rx) = TokenSink::bounded(2);
+        assert_eq!(sink.capacity(), 2);
+        for i in 0..2 {
+            sink.send(StreamEvent::Token { cycle: i, tokens: vec![i as i32], total: i + 1 })
+                .unwrap();
+        }
+        // exactly at capacity: not over
+        assert_eq!(sink.depth(), 2);
+        assert!(!sink.over_capacity());
+        // one past: over — but the send itself still succeeded (shedding
+        // is the producer's call, never a blocked or failed send)
+        sink.send(StreamEvent::Token { cycle: 2, tokens: vec![2], total: 3 }).unwrap();
+        assert!(sink.over_capacity());
+        // a slow consumer catching up clears the flag
+        rx.recv().unwrap();
+        assert_eq!(sink.depth(), 2);
+        assert!(!sink.over_capacity());
+        let rest: Vec<StreamEvent> = rx.try_iter().collect();
+        assert_eq!(rest.len(), 2);
+        assert_eq!(sink.depth(), 0);
+    }
+
+    #[test]
+    fn unbounded_sink_never_reports_over_capacity() {
+        let (sink, _rx) = TokenSink::channel();
+        for i in 0..100 {
+            sink.send(StreamEvent::Token { cycle: i, tokens: vec![1], total: i + 1 })
+                .unwrap();
+        }
+        assert_eq!(sink.depth(), 100);
+        assert!(!sink.over_capacity(), "capacity 0 disables the bound");
+    }
+
+    #[test]
+    fn failed_send_does_not_inflate_depth() {
+        let (sink, rx) = TokenSink::bounded(1);
+        drop(rx);
+        assert!(sink.send(StreamEvent::Done { total: 0 }).is_err());
+        assert_eq!(sink.depth(), 0, "the undone increment left no residue");
+        assert!(!sink.over_capacity());
     }
 }

@@ -1,0 +1,337 @@
+//! Seeded, deterministic fault injection.
+//!
+//! Production robustness claims are only as good as the faults they were
+//! exercised against, so every fallible seam in the serving stack — spill
+//! I/O, checksum validation, step workers, decoder steps, socket writes,
+//! the quant pool — consults ONE process-wide [`FaultInjector`] built at
+//! coordinator startup from the `fault_seed` / `fault_spec` config knobs.
+//! With an empty spec the injector is a no-op: `should_fire` is a single
+//! branch on an empty table and the serving path is exactly the
+//! uninstrumented code (the default for every production config).
+//!
+//! Determinism: each site keeps its own query counter, and the k-th query
+//! of a site fires iff `splitmix64(seed ⊕ site ⊕ k)` maps under the
+//! site's per-mille rate. The decision sequence per site is therefore a
+//! pure function of `(seed, spec)` — thread interleaving changes *which
+//! caller* observes the k-th fault, never how many fire or in what
+//! per-site order — so a chaos run is replayable by seed, and a budgeted
+//! spec (`:max_fires`) can deterministically exercise
+//! "fail twice, then recover" retry paths.
+//!
+//! Spec grammar (documented in docs/ROBUSTNESS.md):
+//!
+//! ```text
+//! fault_spec := point ("," point)*
+//! point      := site ":" rate_permille [":" max_fires]
+//! site       := spill_write | spill_read | spill_corrupt | step_panic
+//!             | decode_error | socket_write | quant_stall
+//! ```
+//!
+//! e.g. `"spill_write:200:3,step_panic:50"` — spill writes fail with
+//! probability 0.2 (at most 3 times total), step workers panic with
+//! probability 0.05, unbounded. Invalid specs are a *startup* error
+//! (mirroring the repo's no-silent-clamp knob convention), never a
+//! silently empty injector.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{bail, Result};
+
+/// Every seam the injector can fail. The discriminant indexes the point
+/// table, so adding a site means extending [`FaultSite::ALL`] too.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Spill-store slot write fails with a synthesized I/O error.
+    SpillWrite = 0,
+    /// Spill-store slot read fails with a synthesized I/O error.
+    SpillRead = 1,
+    /// Spill-store read returns bit-corrupted payload bytes (the checksum
+    /// must catch it; corruption is not retried — the data at rest is bad).
+    SpillCorrupt = 2,
+    /// A step worker panics mid-step (containment: the session is parked
+    /// as failed, the round and every co-scheduled session survive).
+    StepPanic = 3,
+    /// A decoder step returns an error (the graceful sibling of
+    /// `StepPanic`: same containment path, no unwinding).
+    DecodeError = 4,
+    /// A chunked-response socket write fails as if the client vanished.
+    SocketWrite = 5,
+    /// The quant-pool backpressure probe reports a stalled pool, deferring
+    /// prefill chunks this round.
+    QuantStall = 6,
+}
+
+impl FaultSite {
+    pub const ALL: [FaultSite; 7] = [
+        FaultSite::SpillWrite,
+        FaultSite::SpillRead,
+        FaultSite::SpillCorrupt,
+        FaultSite::StepPanic,
+        FaultSite::DecodeError,
+        FaultSite::SocketWrite,
+        FaultSite::QuantStall,
+    ];
+
+    /// The spec-grammar name (also the name used in logs and docs).
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::SpillWrite => "spill_write",
+            FaultSite::SpillRead => "spill_read",
+            FaultSite::SpillCorrupt => "spill_corrupt",
+            FaultSite::StepPanic => "step_panic",
+            FaultSite::DecodeError => "decode_error",
+            FaultSite::SocketWrite => "socket_write",
+            FaultSite::QuantStall => "quant_stall",
+        }
+    }
+
+    fn parse(s: &str) -> Result<FaultSite> {
+        for site in FaultSite::ALL {
+            if site.name() == s {
+                return Ok(site);
+            }
+        }
+        bail!(
+            "fault_spec: unknown site '{s}' (valid: {})",
+            FaultSite::ALL.map(|s| s.name()).join(", ")
+        );
+    }
+}
+
+/// One armed site: fire probability in per-mille, an optional total-fires
+/// budget, and the per-site query counter driving the deterministic hash
+/// sequence.
+#[derive(Debug, Default)]
+struct FaultPoint {
+    rate_permille: u32,
+    /// `u64::MAX` = unbounded.
+    max_fires: u64,
+    queries: AtomicU64,
+    fires: AtomicU64,
+}
+
+/// Deterministic per-site fault decisions; see the module docs. Cheap to
+/// share (`Arc`) across the pool, batcher, scheduler, and HTTP layers.
+#[derive(Debug, Default)]
+pub struct FaultInjector {
+    seed: u64,
+    /// Indexed by `FaultSite as usize`; `None` = site not armed.
+    points: [Option<FaultPoint>; FaultSite::ALL.len()],
+    armed: bool,
+}
+
+/// splitmix64: a full-period 64-bit mixer — every decision is one multiply
+/// chain on the (seed, site, k) triple, no shared RNG state or lock.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+impl FaultInjector {
+    /// The no-op injector: nothing armed, every `should_fire` is false
+    /// after one branch.
+    pub fn disabled() -> FaultInjector {
+        FaultInjector::default()
+    }
+
+    /// Parse a `fault_spec` string (see the module docs for the grammar).
+    /// An empty spec yields the disabled injector; a malformed spec is an
+    /// error the coordinator surfaces at startup.
+    pub fn parse(seed: u64, spec: &str) -> Result<FaultInjector> {
+        let mut inj = FaultInjector { seed, ..FaultInjector::default() };
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let mut fields = part.split(':');
+            let site = FaultSite::parse(fields.next().unwrap_or(""))?;
+            let rate: u32 = match fields.next() {
+                Some(r) => r.parse().map_err(|_| {
+                    anyhow::anyhow!("fault_spec: '{part}': rate '{r}' is not an integer")
+                })?,
+                None => bail!("fault_spec: '{part}' needs site:rate_permille[:max_fires]"),
+            };
+            if rate > 1000 {
+                bail!("fault_spec: '{part}': rate {rate}‰ exceeds 1000");
+            }
+            let max_fires = match fields.next() {
+                Some(m) => m.parse().map_err(|_| {
+                    anyhow::anyhow!("fault_spec: '{part}': max_fires '{m}' is not an integer")
+                })?,
+                None => u64::MAX,
+            };
+            if fields.next().is_some() {
+                bail!("fault_spec: '{part}' has trailing fields");
+            }
+            if inj.points[site as usize].is_some() {
+                bail!("fault_spec: site '{}' listed twice", site.name());
+            }
+            inj.points[site as usize] = Some(FaultPoint {
+                rate_permille: rate,
+                max_fires,
+                queries: AtomicU64::new(0),
+                fires: AtomicU64::new(0),
+            });
+            inj.armed = true;
+        }
+        Ok(inj)
+    }
+
+    /// True when at least one site is armed. A disabled injector makes
+    /// every `should_fire` a single-branch no-op.
+    pub fn enabled(&self) -> bool {
+        self.armed
+    }
+
+    /// Decide the next query at `site`. Deterministic per site: the k-th
+    /// call for a site always returns the same answer for a given
+    /// `(seed, spec)`, regardless of which thread asks.
+    #[inline]
+    pub fn should_fire(&self, site: FaultSite) -> bool {
+        if !self.armed {
+            return false;
+        }
+        let Some(p) = &self.points[site as usize] else { return false };
+        let k = p.queries.fetch_add(1, Ordering::Relaxed);
+        let h = splitmix64(self.seed ^ (site as u64).wrapping_mul(0xa076_1d64_78bd_642f) ^ k);
+        if h % 1000 >= p.rate_permille as u64 {
+            return false;
+        }
+        // Budget check AFTER the hash so the per-site decision sequence is
+        // stable; a budgeted point just stops firing once spent.
+        if p.fires.fetch_add(1, Ordering::Relaxed) >= p.max_fires {
+            p.fires.fetch_sub(1, Ordering::Relaxed);
+            return false;
+        }
+        true
+    }
+
+    /// Total faults fired at `site` so far (chaos-soak accounting).
+    pub fn fires(&self, site: FaultSite) -> u64 {
+        self.points[site as usize]
+            .as_ref()
+            .map_or(0, |p| p.fires.load(Ordering::Relaxed))
+    }
+
+    /// Total faults fired across all sites.
+    pub fn total_fires(&self) -> u64 {
+        FaultSite::ALL.iter().map(|&s| self.fires(s)).sum()
+    }
+
+    /// A synthesized I/O error for `site`, tagged so logs and tests can
+    /// tell injected faults from real ones.
+    pub fn io_error(&self, site: FaultSite) -> std::io::Error {
+        let kind = match site {
+            FaultSite::SocketWrite => std::io::ErrorKind::BrokenPipe,
+            _ => std::io::ErrorKind::Other,
+        };
+        std::io::Error::new(kind, format!("injected fault: {}", site.name()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_spec_is_disabled_and_never_fires() {
+        let inj = FaultInjector::parse(42, "").unwrap();
+        assert!(!inj.enabled());
+        for site in FaultSite::ALL {
+            for _ in 0..100 {
+                assert!(!inj.should_fire(site));
+            }
+            assert_eq!(inj.fires(site), 0);
+        }
+        assert!(!FaultInjector::disabled().enabled());
+    }
+
+    #[test]
+    fn spec_parses_rates_and_budgets() {
+        let inj =
+            FaultInjector::parse(7, "spill_write:200:3, step_panic:50").unwrap();
+        assert!(inj.enabled());
+        // unarmed site never fires even at a hot seed
+        for _ in 0..200 {
+            assert!(!inj.should_fire(FaultSite::SocketWrite));
+        }
+        // armed sites fire at roughly their rate
+        let mut fired = 0;
+        for _ in 0..2000 {
+            if inj.should_fire(FaultSite::StepPanic) {
+                fired += 1;
+            }
+        }
+        assert!((40..=180).contains(&fired), "5% of 2000 ≈ 100, got {fired}");
+    }
+
+    #[test]
+    fn malformed_specs_error_loudly() {
+        for bad in [
+            "bogus_site:10",
+            "spill_write",
+            "spill_write:abc",
+            "spill_write:1500",
+            "spill_write:10:x",
+            "spill_write:10:1:9",
+            "spill_write:10,spill_write:20",
+        ] {
+            assert!(FaultInjector::parse(0, bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn decisions_are_deterministic_per_seed() {
+        let run = |seed: u64| -> Vec<bool> {
+            let inj = FaultInjector::parse(seed, "spill_read:300").unwrap();
+            (0..256).map(|_| inj.should_fire(FaultSite::SpillRead)).collect()
+        };
+        assert_eq!(run(11), run(11), "same seed, same schedule");
+        assert_ne!(run(11), run(12), "different seed, different schedule");
+    }
+
+    #[test]
+    fn determinism_holds_under_thread_interleaving() {
+        use std::sync::Arc;
+        let total = |threads: usize| -> u64 {
+            let inj =
+                Arc::new(FaultInjector::parse(99, "decode_error:250").unwrap());
+            let per = 1200 / threads;
+            let handles: Vec<_> = (0..threads)
+                .map(|_| {
+                    let inj = Arc::clone(&inj);
+                    std::thread::spawn(move || {
+                        for _ in 0..per {
+                            inj.should_fire(FaultSite::DecodeError);
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            inj.fires(FaultSite::DecodeError)
+        };
+        // the number of fires over k queries is interleaving-independent
+        assert_eq!(total(1), total(4));
+    }
+
+    #[test]
+    fn budget_caps_total_fires() {
+        let inj = FaultInjector::parse(3, "spill_write:1000:2").unwrap();
+        let fired: usize =
+            (0..50).filter(|_| inj.should_fire(FaultSite::SpillWrite)).count();
+        assert_eq!(fired, 2, "rate 100% but budget 2");
+        assert_eq!(inj.fires(FaultSite::SpillWrite), 2);
+        assert_eq!(inj.total_fires(), 2);
+    }
+
+    #[test]
+    fn io_errors_are_tagged_as_injected() {
+        let inj = FaultInjector::disabled();
+        let e = inj.io_error(FaultSite::SpillWrite);
+        assert!(e.to_string().contains("injected fault: spill_write"));
+        let e = inj.io_error(FaultSite::SocketWrite);
+        assert_eq!(e.kind(), std::io::ErrorKind::BrokenPipe);
+    }
+}

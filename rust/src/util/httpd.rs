@@ -13,6 +13,8 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread;
 
+use crate::util::fault::{FaultInjector, FaultSite};
+
 #[derive(Debug, Clone)]
 pub struct Request {
     pub method: String,
@@ -28,6 +30,7 @@ pub struct Request {
 pub struct ChunkWriter<'a> {
     out: &'a mut dyn Write,
     finished: bool,
+    fault: Option<Arc<FaultInjector>>,
 }
 
 impl ChunkWriter<'_> {
@@ -36,6 +39,13 @@ impl ChunkWriter<'_> {
     /// streaming response lives on this loop for a whole generation, so
     /// the failure surface (the disconnect signal) is pinned right here.
     fn write_raw(&mut self, mut buf: &[u8]) -> std::io::Result<()> {
+        // Injected socket faults land here — the same spot a real peer
+        // disconnect surfaces — so they drive the identical cancel path.
+        if let Some(f) = &self.fault {
+            if f.should_fire(FaultSite::SocketWrite) {
+                return Err(f.io_error(FaultSite::SocketWrite));
+            }
+        }
         while !buf.is_empty() {
             match self.out.write(buf) {
                 Ok(0) => {
@@ -166,6 +176,19 @@ impl Server {
     /// Bind and serve on a background accept thread. Port 0 picks a free
     /// port; the chosen address is in `self.addr`.
     pub fn start(bind: &str, handler: Handler) -> std::io::Result<Server> {
+        Server::start_with_fault(bind, handler, None)
+    }
+
+    /// Like [`Server::start`], but every connection's [`ChunkWriter`]
+    /// consults the fault injector before raw writes: an armed
+    /// `socket_write` point surfaces as a deterministic `BrokenPipe`
+    /// mid-stream, exercising the disconnect/cancel path without a real
+    /// client drop.
+    pub fn start_with_fault(
+        bind: &str,
+        handler: Handler,
+        fault: Option<Arc<FaultInjector>>,
+    ) -> std::io::Result<Server> {
         let listener = TcpListener::bind(bind)?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -178,8 +201,9 @@ impl Server {
                     match listener.accept() {
                         Ok((stream, _)) => {
                             let h = Arc::clone(&handler);
+                            let f = fault.clone();
                             thread::spawn(move || {
-                                let _ = serve_conn(stream, h);
+                                let _ = serve_conn(stream, h, f);
                             });
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -206,7 +230,11 @@ impl Drop for Server {
     }
 }
 
-fn serve_conn(stream: TcpStream, handler: Handler) -> std::io::Result<()> {
+fn serve_conn(
+    stream: TcpStream,
+    handler: Handler,
+    fault: Option<Arc<FaultInjector>>,
+) -> std::io::Result<()> {
     stream.set_nodelay(true).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut stream = stream;
@@ -230,7 +258,8 @@ fn serve_conn(stream: TcpStream, handler: Handler) -> std::io::Result<()> {
                 conn,
             );
             stream.write_all(head.as_bytes())?;
-            let mut w = ChunkWriter { out: &mut stream, finished: false };
+            let mut w =
+                ChunkWriter { out: &mut stream, finished: false, fault: fault.clone() };
             stream_fn(&mut w)?;
             w.finish()?;
         } else {
@@ -629,6 +658,38 @@ mod tests {
             ChunkReader::new(Dribble { data: b"zz\r\nboom\r\n".to_vec(), pos: 0, stride: 3 });
         let e = r.next_chunk().unwrap_err();
         assert_eq!(e.kind(), std::io::ErrorKind::InvalidData);
+    }
+
+    /// Fault hook: an armed single-shot `socket_write` point kills the
+    /// first streamed body with a deterministic BrokenPipe (the head is
+    /// untouched — it does not go through the ChunkWriter), the client
+    /// observes a truncated chunked stream, and once the fire budget is
+    /// spent the next stream completes normally.
+    #[test]
+    fn injected_socket_write_fault_drops_the_stream_then_clears() {
+        let handler: Handler = Arc::new(|_req: &Request| {
+            Response::chunked(200, "text/plain", |w| {
+                w.write_chunk(b"abc")?;
+                w.finish()
+            })
+        });
+        let inj = FaultInjector::parse(7, "socket_write:1000:1").unwrap();
+        let server =
+            Server::start_with_fault("127.0.0.1:0", handler, Some(Arc::new(inj))).unwrap();
+        let addr = server.addr.to_string();
+        let (st, mut chunks) = http_open_stream(&addr, "GET", "/", b"").unwrap();
+        assert_eq!(st, 200, "the fault hits the body, not the head");
+        let err = loop {
+            match chunks.next_chunk() {
+                Ok(Some(_)) => {}
+                Ok(None) => panic!("stream completed despite the injected fault"),
+                Err(e) => break e,
+            }
+        };
+        assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof);
+        let (st, body) = http_request(&addr, "GET", "/", b"").unwrap();
+        assert_eq!(st, 200, "budget spent: the server recovered");
+        assert_eq!(body, b"abc");
     }
 
     /// Trailers written by `finish_with_trailers` survive both clients: the

@@ -6,6 +6,7 @@
 //! property-testing framework used for coordinator invariants.
 
 pub mod argparse;
+pub mod fault;
 pub mod httpd;
 pub mod json;
 pub mod prop;

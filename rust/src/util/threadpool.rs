@@ -28,11 +28,36 @@
 //! a round over whichever pool the coordinator wired in.
 
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Lock a pool mutex, recovering from poison: the data under these locks
+/// (job deques and counters) is valid at every instruction boundary, and
+/// jobs run OUTSIDE the lock, so a poisoned state mutex only ever means
+/// "some thread panicked elsewhere" — never torn queue state.
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Decrements its wait group on drop — panic-safe completion signaling
+/// for scoped jobs: a panicking job still releases its waiter during
+/// unwind instead of hanging `WaitGroup::wait` forever.
+struct WgGuard(Arc<(Mutex<usize>, Condvar)>);
+
+impl Drop for WgGuard {
+    fn drop(&mut self) {
+        let (lock, cv) = &*self.0;
+        let mut n = lock.lock().unwrap_or_else(PoisonError::into_inner);
+        *n -= 1;
+        if *n == 0 {
+            cv.notify_all();
+        }
+    }
+}
 
 struct QueueState {
     jobs: VecDeque<Job>,
@@ -48,13 +73,15 @@ struct Inner {
     /// `join` callers park here waiting for `pending` to reach zero.
     done_cv: Condvar,
     executed: AtomicUsize,
+    /// Jobs that panicked and were contained (worker survived).
+    panics: AtomicUsize,
     size: usize,
 }
 
 impl Inner {
     fn submit(&self, job: Job) {
         {
-            let mut s = self.state.lock().unwrap();
+            let mut s = lock_recover(&self.state);
             assert!(!s.closed, "pool shut down");
             s.pending += 1;
             s.jobs.push_back(job);
@@ -63,7 +90,7 @@ impl Inner {
     }
 
     fn queue_depth(&self) -> usize {
-        self.state.lock().unwrap().jobs.len()
+        lock_recover(&self.state).jobs.len()
     }
 }
 
@@ -71,8 +98,9 @@ impl Inner {
 ///
 /// Handles are cheap (`Arc` clone) and do not keep the workers alive: the
 /// owning [`ThreadPool`] must outlive every submit (submitting after the
-/// pool dropped panics). A job that panics kills its worker thread; jobs
-/// here return errors through their own channels instead of panicking.
+/// pool dropped panics). A job that panics is CONTAINED: the unwind is
+/// caught, the worker survives, the `panics_contained` counter ticks, and
+/// any wait group the job was scoped to is still released.
 #[derive(Clone)]
 pub struct PoolHandle {
     inner: Arc<Inner>,
@@ -88,16 +116,13 @@ impl PoolHandle {
     /// [`ThreadPool::join`] this is caller-scoped — it does not wait on
     /// jobs other producers pushed onto the same shared pool.
     pub fn scoped_submit<F: FnOnce() + Send + 'static>(&self, wg: &WaitGroup, f: F) {
-        *wg.inner.0.lock().unwrap() += 1;
+        *lock_recover(&wg.inner.0) += 1;
         let wg = Arc::clone(&wg.inner);
         self.inner.submit(Box::new(move || {
+            // Drop-guard, not a trailing decrement: a panic in f() must
+            // still release the waiter or `wg.wait()` hangs forever.
+            let _done = WgGuard(wg);
             f();
-            let (lock, cv) = &*wg;
-            let mut n = lock.lock().unwrap();
-            *n -= 1;
-            if *n == 0 {
-                cv.notify_all();
-            }
         }));
     }
 
@@ -109,6 +134,11 @@ impl PoolHandle {
     /// Jobs completed over the pool's lifetime (all producers).
     pub fn jobs_executed(&self) -> usize {
         self.inner.executed.load(Ordering::Relaxed)
+    }
+
+    /// Jobs that panicked and were contained (lifetime counter).
+    pub fn panics_contained(&self) -> usize {
+        self.inner.panics.load(Ordering::Relaxed)
     }
 
     /// Jobs queued but not yet picked up (instantaneous gauge).
@@ -151,9 +181,9 @@ impl WaitGroup {
     /// Block until every job submitted through this group has completed.
     pub fn wait(&self) {
         let (lock, cv) = &*self.inner;
-        let mut n = lock.lock().unwrap();
+        let mut n = lock.lock().unwrap_or_else(PoisonError::into_inner);
         while *n > 0 {
-            n = cv.wait(n).unwrap();
+            n = cv.wait(n).unwrap_or_else(PoisonError::into_inner);
         }
     }
 }
@@ -183,6 +213,7 @@ impl ThreadPool {
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
             executed: AtomicUsize::new(0),
+            panics: AtomicUsize::new(0),
             size: threads,
         });
         let workers = (0..threads)
@@ -208,14 +239,23 @@ impl ThreadPool {
 
     /// Block until every submitted job (from every producer) has completed.
     pub fn join(&self) {
-        let mut s = self.inner.state.lock().unwrap();
+        let mut s = lock_recover(&self.inner.state);
         while s.pending > 0 {
-            s = self.inner.done_cv.wait(s).unwrap();
+            s = self
+                .inner
+                .done_cv
+                .wait(s)
+                .unwrap_or_else(PoisonError::into_inner);
         }
     }
 
     pub fn jobs_executed(&self) -> usize {
         self.inner.executed.load(Ordering::Relaxed)
+    }
+
+    /// Jobs that panicked and were contained (lifetime counter).
+    pub fn panics_contained(&self) -> usize {
+        self.inner.panics.load(Ordering::Relaxed)
     }
 
     pub fn queue_depth(&self) -> usize {
@@ -230,7 +270,7 @@ impl ThreadPool {
 fn worker_loop(inner: &Inner) {
     loop {
         let job = {
-            let mut s = inner.state.lock().unwrap();
+            let mut s = lock_recover(&inner.state);
             loop {
                 // Drain queued work before honoring shutdown so drop keeps
                 // the old "waits for all submitted jobs" semantics.
@@ -240,13 +280,23 @@ fn worker_loop(inner: &Inner) {
                 if s.closed {
                     break None;
                 }
-                s = inner.work_cv.wait(s).unwrap();
+                s = inner
+                    .work_cv
+                    .wait(s)
+                    .unwrap_or_else(PoisonError::into_inner);
             }
         };
         let Some(job) = job else { break };
-        job();
-        inner.executed.fetch_add(1, Ordering::Relaxed);
-        let mut s = inner.state.lock().unwrap();
+        // Containment: a panicking job must not take the worker (and with
+        // it a slice of pool capacity) down, and must still decrement
+        // `pending` so `join` never hangs. The state lock is NOT held
+        // while the job runs, so the unwind cannot poison queue state.
+        if catch_unwind(AssertUnwindSafe(job)).is_ok() {
+            inner.executed.fetch_add(1, Ordering::Relaxed);
+        } else {
+            inner.panics.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut s = lock_recover(&inner.state);
         s.pending -= 1;
         if s.pending == 0 {
             inner.done_cv.notify_all();
@@ -256,7 +306,7 @@ fn worker_loop(inner: &Inner) {
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        self.inner.state.lock().unwrap().closed = true;
+        lock_recover(&self.inner.state).closed = true;
         self.inner.work_cv.notify_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -280,13 +330,15 @@ struct StealInner {
     done_cv: Condvar,
     executed: AtomicUsize,
     steals: AtomicUsize,
+    /// Jobs that panicked and were contained (worker survived).
+    panics: AtomicUsize,
     size: usize,
 }
 
 impl StealInner {
     fn submit(&self, job: Job) {
         {
-            let mut s = self.state.lock().unwrap();
+            let mut s = lock_recover(&self.state);
             assert!(!s.closed, "pool shut down");
             s.pending += 1;
             let slot = s.rr;
@@ -298,7 +350,7 @@ impl StealInner {
     }
 
     fn queue_depth(&self) -> usize {
-        self.state.lock().unwrap().queues.iter().map(VecDeque::len).sum()
+        lock_recover(&self.state).queues.iter().map(VecDeque::len).sum()
     }
 }
 
@@ -318,16 +370,12 @@ impl StealHandle {
     /// Submit a job tracked by `wg` — caller-scoped completion, exactly as
     /// [`PoolHandle::scoped_submit`].
     pub fn scoped_submit<F: FnOnce() + Send + 'static>(&self, wg: &WaitGroup, f: F) {
-        *wg.inner.0.lock().unwrap() += 1;
+        *lock_recover(&wg.inner.0) += 1;
         let wg = Arc::clone(&wg.inner);
         self.inner.submit(Box::new(move || {
+            // Same panic-safe drop-guard as `PoolHandle::scoped_submit`.
+            let _done = WgGuard(wg);
             f();
-            let (lock, cv) = &*wg;
-            let mut n = lock.lock().unwrap();
-            *n -= 1;
-            if *n == 0 {
-                cv.notify_all();
-            }
         }));
     }
 
@@ -337,6 +385,11 @@ impl StealHandle {
 
     pub fn jobs_executed(&self) -> usize {
         self.inner.executed.load(Ordering::Relaxed)
+    }
+
+    /// Jobs that panicked and were contained (lifetime counter).
+    pub fn panics_contained(&self) -> usize {
+        self.inner.panics.load(Ordering::Relaxed)
     }
 
     /// Jobs a worker took from another worker's deque (lifetime counter).
@@ -386,6 +439,7 @@ impl StealPool {
             done_cv: Condvar::new(),
             executed: AtomicUsize::new(0),
             steals: AtomicUsize::new(0),
+            panics: AtomicUsize::new(0),
             size: threads,
         });
         let workers = (0..threads)
@@ -410,14 +464,23 @@ impl StealPool {
 
     /// Block until every submitted job (from every producer) has completed.
     pub fn join(&self) {
-        let mut s = self.inner.state.lock().unwrap();
+        let mut s = lock_recover(&self.inner.state);
         while s.pending > 0 {
-            s = self.inner.done_cv.wait(s).unwrap();
+            s = self
+                .inner
+                .done_cv
+                .wait(s)
+                .unwrap_or_else(PoisonError::into_inner);
         }
     }
 
     pub fn jobs_executed(&self) -> usize {
         self.inner.executed.load(Ordering::Relaxed)
+    }
+
+    /// Jobs that panicked and were contained (lifetime counter).
+    pub fn panics_contained(&self) -> usize {
+        self.inner.panics.load(Ordering::Relaxed)
     }
 
     pub fn steals(&self) -> usize {
@@ -436,7 +499,7 @@ impl StealPool {
 fn steal_worker_loop(inner: &StealInner, me: usize) {
     loop {
         let job = {
-            let mut s = inner.state.lock().unwrap();
+            let mut s = lock_recover(&inner.state);
             loop {
                 // Own deque first (front: FIFO for this worker's share)...
                 if let Some(j) = s.queues[me].pop_front() {
@@ -455,13 +518,21 @@ fn steal_worker_loop(inner: &StealInner, me: usize) {
                 if s.closed {
                     break None;
                 }
-                s = inner.work_cv.wait(s).unwrap();
+                s = inner
+                    .work_cv
+                    .wait(s)
+                    .unwrap_or_else(PoisonError::into_inner);
             }
         };
         let Some(job) = job else { break };
-        job();
-        inner.executed.fetch_add(1, Ordering::Relaxed);
-        let mut s = inner.state.lock().unwrap();
+        // Same containment contract as `worker_loop`: the step pool must
+        // survive a panicking session step with `pending` still balanced.
+        if catch_unwind(AssertUnwindSafe(job)).is_ok() {
+            inner.executed.fetch_add(1, Ordering::Relaxed);
+        } else {
+            inner.panics.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut s = lock_recover(&inner.state);
         s.pending -= 1;
         if s.pending == 0 {
             inner.done_cv.notify_all();
@@ -471,7 +542,7 @@ fn steal_worker_loop(inner: &StealInner, me: usize) {
 
 impl Drop for StealPool {
     fn drop(&mut self) {
-        self.inner.state.lock().unwrap().closed = true;
+        lock_recover(&self.inner.state).closed = true;
         self.inner.work_cv.notify_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -657,6 +728,67 @@ mod tests {
         wg_slow.wait();
         pool.join();
         assert_eq!(pool.jobs_executed(), 17);
+    }
+
+    /// A panicking job is contained: the worker survives to run later
+    /// jobs, `join` still returns (pending balanced), and the panic is
+    /// counted instead of silently eating a worker.
+    #[test]
+    fn panicking_job_does_not_kill_the_worker_or_hang_join() {
+        let pool = ThreadPool::new(1); // one worker: it MUST survive
+        pool.submit(|| panic!("injected: job panic"));
+        let counter = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&counter);
+        pool.submit(move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 1, "worker survived");
+        assert_eq!(pool.panics_contained(), 1);
+        assert_eq!(pool.jobs_executed(), 1, "panicked job not counted as executed");
+        assert_eq!(pool.queue_depth(), 0);
+    }
+
+    /// A panicking scoped job still releases its wait group — the unwind
+    /// runs the drop-guard, so `wg.wait()` cannot hang.
+    #[test]
+    fn panicking_scoped_job_still_releases_its_wait_group() {
+        let pool = ThreadPool::new(2);
+        let h = pool.handle();
+        let wg = WaitGroup::new();
+        let counter = Arc::new(AtomicUsize::new(0));
+        h.scoped_submit(&wg, || panic!("injected: scoped panic"));
+        let c = Arc::clone(&counter);
+        h.scoped_submit(&wg, move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        wg.wait(); // hangs forever without the drop-guard
+        assert_eq!(counter.load(Ordering::SeqCst), 1);
+        assert_eq!(h.panics_contained(), 1);
+    }
+
+    /// The stealing pool has the same containment contract.
+    #[test]
+    fn steal_pool_contains_panicking_jobs() {
+        let pool = StealPool::named(2, "qs-sched");
+        let h = pool.handle();
+        let wg = WaitGroup::new();
+        for _ in 0..4 {
+            h.scoped_submit(&wg, || panic!("injected: step panic"));
+        }
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..8 {
+            let c = Arc::clone(&counter);
+            h.scoped_submit(&wg, move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        wg.wait();
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 8, "both workers survived");
+        assert_eq!(pool.panics_contained(), 4);
+        assert_eq!(pool.jobs_executed(), 8);
+        assert_eq!(pool.queue_depth(), 0);
     }
 
     /// Both handle types drive the same generic dispatch path.
